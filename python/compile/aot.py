@@ -1,0 +1,329 @@
+"""AOT lowering driver: L2/L1 python -> artifacts/ for the Rust runtime.
+
+Emits, per model in the zoo:
+  artifacts/<model>/<entry>.hlo.txt   HLO *text* (xla_extension 0.5.1
+                                      rejects jax>=0.5 serialized protos;
+                                      the text parser reassigns ids)
+  artifacts/<model>.umw               weight blob (weights are runtime
+                                      arguments, not baked constants)
+plus artifacts/tokenizer.json and artifacts/manifest.json describing
+every entry's argument order/shapes/dtypes so Rust can bind buffers
+positionally.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--models a,b] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import vision as V
+from .configs import EMBED_PREFILL_BUCKETS, MODELS, ModelConfig
+from .tokenizer_train import export as export_tokenizer
+from .weights import build_weights, text_weight_order, vision_weight_order, write_umw
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format).
+
+    return_tuple=False: every artifact returns exactly ONE array so the
+    executed PJRT output buffer is array-shaped and can be threaded
+    directly into the next execute_b call (device-resident KV arenas).
+    Multi-output modules come back as a single tuple buffer that can only
+    be read through a host literal copy — see model.py's logits-mailbox
+    convention.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def weight_specs(weights, order):
+    return [spec(weights[n].shape, weights[n].dtype) for n in order]
+
+
+def arg_desc(name, kind, s):
+    return {
+        "name": name,
+        "kind": kind,  # "input" | "weight"
+        "dtype": str(np.dtype(s.dtype)),
+        "shape": list(s.shape),
+    }
+
+
+class EntryBuilder:
+    """Lowers one model's entries and records manifest metadata."""
+
+    def __init__(self, cfg: ModelConfig, weights, out_dir: str, force: bool):
+        self.cfg = cfg
+        self.weights = weights
+        self.dir = os.path.join(out_dir, cfg.name)
+        os.makedirs(self.dir, exist_ok=True)
+        self.force = force
+        self.entries = {}
+        self.t_order = text_weight_order(cfg)
+        self.t_specs = weight_specs(weights, self.t_order)
+
+    def lower(self, entry: str, fn, input_descs, inputs_specs, weight_order, weight_specs_,
+              donate=()):
+        path = os.path.join(self.dir, f"{entry}.hlo.txt")
+        self.entries[entry] = {
+            "file": f"{self.cfg.name}/{entry}.hlo.txt",
+            "args": input_descs
+            + [arg_desc(n, "weight", s) for n, s in zip(weight_order, weight_specs_)],
+            "donated": list(donate),
+        }
+        if not self.force and os.path.exists(path):
+            return
+        t0 = time.time()
+        # keep_unused=True: parameter lists must match the manifest even
+        # when an entry ignores some weights (e.g. embed_lookup).
+        # donate_argnums: arena-sized inputs are donated so XLA updates
+        # them in place — without this every decode step copies the whole
+        # KV arena and batching scales inversely (EXPERIMENTS.md §Perf).
+        lowered = jax.jit(fn, keep_unused=True, donate_argnums=tuple(donate)).lower(
+            *inputs_specs, *weight_specs_)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {self.cfg.name}/{entry}: {len(text)/1e3:.0f} kB in {time.time()-t0:.1f}s",
+              flush=True)
+
+    # ---- text entries ----------------------------------------------------
+
+    def decode(self, b: int):
+        cfg = self.cfg
+        kv = spec(M.kv_arena_shape(cfg, b), F32)
+        self.lower(
+            f"decode_b{b}",
+            functools.partial(M.decode_fn, cfg),
+            [
+                arg_desc("tokens", "input", spec((b,), I32)),
+                arg_desc("pos", "input", spec((b,), I32)),
+                arg_desc("kv", "input", kv),
+            ],
+            [spec((b,), I32), spec((b,), I32), kv],
+            self.t_order,
+            self.t_specs,
+            donate=(2,),
+        )
+
+    def prefill(self, s: int):
+        cfg = self.cfg
+        self.lower(
+            f"prefill_s{s}",
+            functools.partial(M.prefill_fn, cfg),
+            [
+                arg_desc("tokens", "input", spec((s,), I32)),
+                arg_desc("length", "input", spec((), I32)),
+            ],
+            [spec((s,), I32), spec((), I32)],
+            self.t_order,
+            self.t_specs,
+        )
+
+    def prefill_embeds(self, s: int):
+        cfg = self.cfg
+        self.lower(
+            f"prefill_embeds_s{s}",
+            functools.partial(M.prefill_embeds_fn, cfg),
+            [
+                arg_desc("embeds", "input", spec((s, cfg.d_model), F32)),
+                arg_desc("length", "input", spec((), I32)),
+            ],
+            [spec((s, cfg.d_model), F32), spec((), I32)],
+            self.t_order,
+            self.t_specs,
+        )
+
+    def embed_lookup(self, s: int):
+        cfg = self.cfg
+        self.lower(
+            f"embed_lookup_s{s}",
+            functools.partial(M.embed_lookup_fn, cfg),
+            [arg_desc("tokens", "input", spec((s,), I32))],
+            [spec((s,), I32)],
+            self.t_order,
+            self.t_specs,
+        )
+
+    def read_logits(self, b: int):
+        cfg = self.cfg
+        kv = spec(M.kv_arena_shape(cfg, b), F32)
+        self.lower(
+            f"read_logits_b{b}",
+            functools.partial(M.read_logits_fn, cfg),
+            [arg_desc("kv", "input", kv)],
+            [kv],
+            [],
+            [],
+        )
+
+    def inject(self, b: int):
+        cfg = self.cfg
+        arena = spec(M.kv_arena_shape(cfg, b), F32)
+        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
+        self.lower(
+            f"inject_b{b}",
+            functools.partial(M.inject_fn, cfg),
+            [
+                arg_desc("arena", "input", arena),
+                arg_desc("kv_one", "input", kv_one),
+                arg_desc("slot", "input", spec((), I32)),
+            ],
+            [arena, kv_one, spec((), I32)],
+            [],
+            [],
+            donate=(0,),
+        )
+
+    def extract(self, b: int):
+        cfg = self.cfg
+        arena = spec(M.kv_arena_shape(cfg, b), F32)
+        self.lower(
+            f"extract_b{b}",
+            functools.partial(M.extract_fn, cfg),
+            [
+                arg_desc("arena", "input", arena),
+                arg_desc("slot", "input", spec((), I32)),
+            ],
+            [arena, spec((), I32)],
+            [],
+            [],
+        )
+
+    def vision(self, resolution: int):
+        cfg = self.cfg
+        vc = cfg.vision
+        p = vc.n_patches(resolution)
+        v_order = vision_weight_order(cfg)
+        v_specs = weight_specs(self.weights, v_order)
+        self.lower(
+            f"vision_r{resolution}",
+            functools.partial(V.vision_encode_fn, cfg),
+            [arg_desc("patches", "input", spec((p, vc.patch_dim), F32))],
+            [spec((p, vc.patch_dim), F32)],
+            v_order,
+            v_specs,
+        )
+
+
+def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
+    print(f"model {cfg.name} ({cfg.paper_name}, ~{cfg.n_params()/1e6:.2f}M sim params)",
+          flush=True)
+    weights = build_weights(cfg)
+    umw_path = os.path.join(out_dir, f"{cfg.name}.umw")
+    if force or not os.path.exists(umw_path):
+        nbytes = write_umw(umw_path, weights)
+        print(f"  weights: {nbytes/1e6:.1f} MB -> {cfg.name}.umw", flush=True)
+
+    eb = EntryBuilder(cfg, weights, out_dir, force)
+    for b in cfg.decode_buckets:
+        eb.decode(b)
+        eb.inject(b)
+        eb.extract(b)
+        eb.read_logits(b)
+    for s in cfg.prefill_buckets:
+        eb.prefill(s)
+    if cfg.vision:
+        for s in EMBED_PREFILL_BUCKETS:
+            eb.prefill_embeds(s)
+            eb.embed_lookup(s)
+        for r in cfg.vision.resolutions:
+            eb.vision(r)
+
+    meta = {
+        "paper_name": cfg.paper_name,
+        "weights_file": f"{cfg.name}.umw",
+        "n_params": cfg.n_params(),
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_q_heads": cfg.n_q_heads,
+        "n_kv_heads": cfg.n_kv_heads,
+        "d_head": cfg.d_head,
+        "d_ffn": cfg.d_ffn,
+        "vocab": cfg.vocab,
+        "s_max": cfg.s_max,
+        "act": cfg.act,
+        "moe": (
+            {"n_experts": cfg.moe.n_experts, "top_k": cfg.moe.top_k,
+             "d_expert": cfg.moe.d_expert}
+            if cfg.moe else None
+        ),
+        "decode_buckets": list(cfg.decode_buckets),
+        "prefill_buckets": list(cfg.prefill_buckets),
+        "embed_prefill_buckets": list(EMBED_PREFILL_BUCKETS) if cfg.vision else [],
+        "vision": (
+            {
+                "d_model": cfg.vision.d_model,
+                "n_layers": cfg.vision.n_layers,
+                "patch": cfg.vision.patch,
+                "merge": cfg.vision.merge,
+                "resolutions": list(cfg.vision.resolutions),
+                "n_patches": {str(r): cfg.vision.n_patches(r) for r in cfg.vision.resolutions},
+                "n_visual_tokens": {
+                    str(r): cfg.vision.n_visual_tokens(r) for r in cfg.vision.resolutions
+                },
+                "patch_dim": cfg.vision.patch_dim,
+            }
+            if cfg.vision else None
+        ),
+        "entries": eb.entries,
+    }
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="", help="comma-separated subset")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    names = [n for n in args.models.split(",") if n] or list(MODELS)
+
+    tok_path = os.path.join(out_dir, "tokenizer.json")
+    tok = export_tokenizer(tok_path, vocab_size=2048)
+    print(f"tokenizer: {len(tok['merges'])} merges -> tokenizer.json", flush=True)
+
+    # Merge into any existing manifest so `--models subset` re-lowers
+    # don't drop the other models' entries.
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"format": 1, "tokenizer": "tokenizer.json", "models": {}}
+    if os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+        except Exception:
+            pass
+    t0 = time.time()
+    for name in names:
+        manifest["models"][name] = build_model(MODELS[name], out_dir, args.force)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest.json written; total {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

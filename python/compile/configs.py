@@ -1,0 +1,159 @@
+"""Sim model zoo configuration (DESIGN.md §4).
+
+Each entry is a scaled-down architectural analog of one of the paper's
+evaluated checkpoints.  Dimensions are multiples of 32 so every large
+GEMM can run through the 4-bit quantized Pallas kernel (group size 32,
+nibble packing needs even K).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+S_MAX = 640          # KV arena length: 512 prompt + 128 generation
+VOCAB = 2048
+Q4_GROUP = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionConfig:
+    d_model: int
+    n_layers: int
+    n_heads: int
+    patch: int = 32          # pixels per patch side
+    merge: int = 2           # spatial merge factor -> visual tokens
+    # Supported input resolutions (square), must map to integer grids.
+    resolutions: Tuple[int, ...] = (224, 448, 768, 1024)
+
+    def grid(self, resolution: int) -> int:
+        return resolution // self.patch
+
+    def n_patches(self, resolution: int) -> int:
+        return self.grid(resolution) ** 2
+
+    def n_visual_tokens(self, resolution: int) -> int:
+        g = self.grid(resolution)
+        gm = (g + self.merge - 1) // self.merge
+        return gm * gm
+
+    @property
+    def patch_dim(self) -> int:
+        return 3 * self.patch * self.patch
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    paper_name: str
+    d_model: int
+    n_layers: int
+    n_q_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ffn: int
+    act: str = "silu"              # "silu" (gated) | "gelu" (gated)
+    moe: Optional[MoeConfig] = None
+    vision: Optional[VisionConfig] = None
+    vocab: int = VOCAB
+    s_max: int = S_MAX
+    rope_theta: float = 10000.0
+    # Decode batch buckets lowered for this model.
+    decode_buckets: Tuple[int, ...] = (1, 8)
+    # Prefill sequence buckets lowered for this model.
+    prefill_buckets: Tuple[int, ...] = (32, 128, 512)
+
+    @property
+    def d_q(self) -> int:
+        return self.n_q_heads * self.d_head
+
+    @property
+    def d_kv(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    def n_params(self) -> int:
+        """Approximate parameter count (for logs / DESIGN cross-check)."""
+        d, f, v = self.d_model, self.d_ffn, self.vocab
+        per_layer = d * self.d_q + 2 * d * self.d_kv + self.d_q * d + 2 * d
+        if self.moe:
+            per_layer += d * self.moe.n_experts + 3 * d * self.moe.d_expert * self.moe.n_experts
+        else:
+            per_layer += 3 * d * f
+        total = self.n_layers * per_layer + 2 * v * d + d
+        if self.vision:
+            vc = self.vision
+            total += vc.patch_dim * vc.d_model + vc.n_layers * (4 * vc.d_model**2 + 8 * vc.d_model**2)
+        return total
+
+
+FULL_BUCKETS = (1, 2, 4, 8, 16)
+
+MODELS = {
+    m.name: m
+    for m in [
+        ModelConfig(
+            name="qwen3-0.6b", paper_name="Qwen3-0.6B",
+            d_model=64, n_layers=2, n_q_heads=4, n_kv_heads=2, d_head=16,
+            d_ffn=256, decode_buckets=FULL_BUCKETS,
+        ),
+        ModelConfig(
+            name="qwen3-4b", paper_name="Qwen3-4B",
+            d_model=128, n_layers=4, n_q_heads=4, n_kv_heads=2, d_head=32,
+            d_ffn=512, decode_buckets=FULL_BUCKETS,
+        ),
+        ModelConfig(
+            name="qwen3-8b", paper_name="Qwen3-8B",
+            d_model=192, n_layers=6, n_q_heads=6, n_kv_heads=3, d_head=32,
+            d_ffn=768, decode_buckets=FULL_BUCKETS,
+        ),
+        ModelConfig(
+            name="qwen3-30b-a3b", paper_name="Qwen3-30B-A3B",
+            d_model=128, n_layers=4, n_q_heads=4, n_kv_heads=2, d_head=32,
+            d_ffn=512, moe=MoeConfig(n_experts=8, top_k=2, d_expert=256),
+        ),
+        ModelConfig(
+            name="llama-3.2-1b", paper_name="Llama-3.2-1B",
+            d_model=96, n_layers=3, n_q_heads=4, n_kv_heads=4, d_head=24,
+            d_ffn=384,
+        ),
+        ModelConfig(
+            name="llama-3.2-3b", paper_name="Llama-3.2-3B",
+            d_model=128, n_layers=4, n_q_heads=4, n_kv_heads=4, d_head=32,
+            d_ffn=448,
+        ),
+        ModelConfig(
+            name="gemma3-4b", paper_name="Gemma 3-4B",
+            d_model=160, n_layers=4, n_q_heads=4, n_kv_heads=1, d_head=40,
+            d_ffn=640, act="gelu",
+        ),
+        ModelConfig(
+            name="nemotron-30b-a3b", paper_name="Nemotron-30B-A3B",
+            d_model=160, n_layers=4, n_q_heads=4, n_kv_heads=2, d_head=40,
+            d_ffn=576, moe=MoeConfig(n_experts=8, top_k=2, d_expert=288),
+        ),
+        ModelConfig(
+            name="qwen3-vl-4b", paper_name="Qwen3-VL-4B",
+            d_model=128, n_layers=4, n_q_heads=4, n_kv_heads=2, d_head=32,
+            d_ffn=512, decode_buckets=(1, 2, 4, 8),
+            vision=VisionConfig(d_model=128, n_layers=6, n_heads=4),
+            prefill_buckets=(32, 128, 512),
+        ),
+        ModelConfig(
+            name="qwen3-vl-8b", paper_name="Qwen3-VL-8B",
+            d_model=192, n_layers=6, n_q_heads=6, n_kv_heads=3, d_head=32,
+            d_ffn=768, decode_buckets=(1, 2, 4, 8),
+            vision=VisionConfig(d_model=160, n_layers=8, n_heads=4),
+            prefill_buckets=(32, 128, 512),
+        ),
+    ]
+}
+
+# VL prefill-with-embeddings buckets: visual tokens (<=256) + text.
+EMBED_PREFILL_BUCKETS = (64, 192, 384, 640)

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: fused single-step (decode) attention with GQA.
+
+This is the serving hot-spot: every generated token, for every active
+sequence in the batch, attends over its padded KV arena slot.  The MLX
+original gets this fusion from lazy evaluation; here it is written
+explicitly as a Pallas kernel so the HBM->VMEM schedule is under our
+control on a real TPU, and lowers (``interpret=True``) into plain HLO
+for the CPU PJRT runtime used in this reproduction.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+
+* grid = (Hq,): one program instance per query head, processing the
+  WHOLE batch tile for that head.  VMEM per instance: K + V rows for
+  all slots = 2 x B x S_max x Dh x 4B (B=16, S=640, Dh<=48 -> ~3.9 MiB)
+  plus the [B, Dh] query tile — inside the ~16 MiB VMEM budget.  For
+  longer arenas the natural extension is a second grid axis over KV
+  blocks with an online softmax accumulator.
+* Batching across slots inside one program keeps the grid size
+  independent of B.  This matters twice: on TPU it turns the per-slot
+  matvecs into [B,Dh]x[B,S,Dh] batched contractions the MXU can tile;
+  under interpret-mode CPU lowering it keeps the emulation loop at Hq
+  iterations instead of B*Hq (the B-proportional grid made interpreted
+  decode quadratic in batch size — EXPERIMENTS.md §Perf).
+* Masking and softmax are VPU element-wise ops on the [B, S] tile;
+  f32 accumulation throughout (paper models are 4-bit quantized for
+  weights; attention state stays f32).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, scale, s_max):
+    """One query-head tile over the whole batch:
+    q [B, Dh], K/V [B, S, Dh] -> out [B, Dh]."""
+    q = q_ref[:, 0, :].astype(jnp.float32)      # [B, Dh]
+    k = k_ref[:, 0].astype(jnp.float32)         # [B, S, Dh]
+    v = v_ref[:, 0].astype(jnp.float32)         # [B, S, Dh]
+    lengths = len_ref[...]                      # [B]
+
+    # [B, S] logits: batched matvec (MXU-tileable on TPU).
+    logits = jnp.einsum("bd,bsd->bs", q, k) * scale
+    mask = jax.lax.iota(jnp.int32, s_max)[None, :] < lengths[:, None]
+    logits = jnp.where(mask, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bs,bsd->bd", p / denom, v)          # [B, Dh]
+    o_ref[:, 0, :] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, interpret=True):
+    """Fused decode attention.  Same contract as ``ref.decode_attention_ref``.
+
+    Args:
+      q:        [B, Hq, Dh] current-token queries.
+      k_cache:  [B, Hkv, S, Dh] padded key arena.
+      v_cache:  [B, Hkv, S, Dh] padded value arena.
+      lengths:  [B] int32 valid lengths.
+      interpret: lower to plain HLO (required for CPU PJRT; see module doc).
+
+    Returns:
+      [B, Hq, Dh] attention output, dtype of ``q``.
+    """
+    b, hq, dh = q.shape
+    _, hkv, s, _ = k_cache.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(_decode_attn_kernel, scale=scale, s_max=s)
+    return pl.pallas_call(
+        kernel,
+        grid=(hq,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda h: (0,)),                     # lengths
+            pl.BlockSpec((b, 1, dh), lambda h: (0, h, 0)),          # q head tile
+            pl.BlockSpec((b, 1, s, dh), lambda h: (0, h // group, 0, 0)),  # K
+            pl.BlockSpec((b, 1, s, dh), lambda h: (0, h // group, 0, 0)),  # V
+        ],
+        out_specs=pl.BlockSpec((b, 1, dh), lambda h: (0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, dh), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: ViT patch embedding (patchify GEMM + bias).
+
+The vision encoder's first layer projects flattened pixel patches into
+the transformer width.  On the paper's workloads this runs once per
+*distinct* image (the whole point of content-based caching is to skip
+it on repeats), over up to 1024 patches at 1024x1024 input - the
+largest single GEMM in the vision tower, so it gets the Pallas
+treatment alongside attention and the quantized GEMMs.
+
+TPU mapping: grid over patch tiles; each instance loads a [TP, C] pixel
+tile (C = 3*32*32 = 3072 floats = 12 KiB/patch-row) and the shared
+[C, D] projection into VMEM and issues one MXU contraction plus a VPU
+bias add.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _patch_embed_kernel(p_ref, w_ref, b_ref, o_ref):
+    p = p_ref[...].astype(jnp.float32)   # [TP, C]
+    w = w_ref[...]                        # [C, D]
+    b = b_ref[...]                        # [D]
+    o_ref[...] = jnp.dot(p, w, preferred_element_type=jnp.float32) + b[None, :]
+
+
+def patch_embed(patches, w, b, *, block_p=None, interpret=True):
+    """Patch embedding.  Same contract as ``ref.patch_embed_ref``.
+
+    Args:
+      patches: [P, C] flattened patches.
+      w:       [C, D] projection.
+      b:       [D] bias.
+      block_p: patch-tile size (default min(P, 64); must divide P).
+      interpret: lower to plain HLO for CPU PJRT.
+
+    Returns:
+      [P, D] f32 embeddings.
+    """
+    p, c = patches.shape
+    d = w.shape[1]
+    bp = block_p or min(p, 64)
+    assert p % bp == 0, (p, bp)
+
+    return pl.pallas_call(
+        _patch_embed_kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((bp, c), lambda i: (i, 0)),
+            pl.BlockSpec((c, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, d), jnp.float32),
+        interpret=interpret,
+    )(patches, w, b)

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: 4-bit (nibble-packed) dequant matmul.
+
+The paper runs every model in 4-bit quantization (Q4_K_M for llama.cpp,
+4-bit for MLX); the corresponding hot-spot on the MLX side is the fused
+dequantize-then-GEMM kernel.  This kernel reproduces it: weights are
+stored packed two-per-byte along K with per-group (group=32) f32 scales,
+and dequantization happens in-register immediately before the MXU
+contraction, so the full-precision weight matrix never materialises in
+HBM.
+
+TPU mapping: grid tiles over (M, N); each instance loads an [K/2, TN]
+packed tile + [K/32, TN] scales into VMEM, expands nibbles with VPU
+bit-ops, scales, and issues a [TM, K] x [K, TN] MXU contraction with f32
+accumulation.  VMEM per instance at our sizes (K<=1152, TN=128):
+packed 1152/2*128 = 72 KiB + x tile + f32 accumulator - well under
+budget, so K is not tiled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_matmul_kernel(x_ref, w_ref, s_ref, o_ref, *, group_size):
+    x = x_ref[...].astype(jnp.float32)            # [TM, K]
+    packed = w_ref[...]                           # [K//2, TN] uint8
+    scales = s_ref[...].astype(jnp.float32)       # [K//group, TN]
+
+    k2, tn = packed.shape
+    k = k2 * 2
+    low = (packed & 0xF).astype(jnp.int32) - 8    # even k
+    high = (packed >> 4).astype(jnp.int32) - 8    # odd k
+    # Interleave: w[2i] = low[i], w[2i+1] = high[i].
+    w = jnp.stack([low, high], axis=1).reshape(k, tn).astype(jnp.float32)
+    w = w * jnp.repeat(scales, group_size, axis=0)
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def quant_matmul(x, w_packed, scales, group_size=32, *, block_m=None, block_n=None,
+                 interpret=True):
+    """4-bit dequant matmul.  Same contract as ``ref.quant_matmul_ref``.
+
+    Args:
+      x:        [M, K] f32 activations.
+      w_packed: [K//2, N] uint8 nibble-packed weights (low nibble = even k).
+      scales:   [K//group_size, N] f32 per-group scales.
+      group_size: K-elements per scale group (weights packed with 32).
+      block_m/block_n: grid tile sizes (default: whole M, N tiled by 128).
+      interpret: lower to plain HLO for CPU PJRT.
+
+    Returns:
+      [M, N] f32.
+    """
+    m, k = x.shape
+    k2, n = w_packed.shape
+    assert k2 * 2 == k, (k, k2)
+    assert k % group_size == 0
+    bm = block_m or m
+    if block_n is None:
+        # Largest tile <= 128 that divides N.
+        bn = next(t for t in range(min(n, 128), 0, -1) if n % t == 0)
+    else:
+        bn = block_n
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+
+    kernel = functools.partial(_quant_matmul_kernel, group_size=group_size)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k // 2, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((k // group_size, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w_packed, scales)

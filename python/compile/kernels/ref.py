@@ -1,0 +1,103 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1).
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` ops only.  The pytest suite asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-generated
+shape/dtype sweeps; the kernels are only trusted through that gate.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Single-step (decode) attention against a padded KV cache.
+
+    Args:
+      q:        [B, Hq, Dh]   query for the current token.
+      k_cache:  [B, Hkv, S, Dh] padded key cache.
+      v_cache:  [B, Hkv, S, Dh] padded value cache.
+      lengths:  [B] int32, number of valid positions per sequence
+                (entries at >= length are padding and must not attend).
+
+    Returns:
+      [B, Hq, Dh] attention output.  Grouped-query attention: query head
+      h reads KV head ``h // (Hq // Hkv)``.
+    """
+    b, hq, dh = q.shape
+    hkv = k_cache.shape[1]
+    s = k_cache.shape[2]
+    group = hq // hkv
+    # Expand KV heads to query heads.
+    k = jnp.repeat(k_cache, group, axis=1)  # [B, Hq, S, Dh]
+    v = jnp.repeat(v_cache, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs * mask
+    probs = probs / jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhs,bhsd->bhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def quant_matmul_ref(x, w_packed, scales, group_size):
+    """4-bit (nibble-packed) dequant matmul reference.
+
+    Args:
+      x:        [M, K] activations (f32).
+      w_packed: [K // 2, N] uint8; each byte holds two 4-bit weights
+                along K: low nibble = even k, high nibble = odd k.
+      scales:   [K // group_size, N] f32 per-group scales.
+      group_size: ints of K per scale group.
+
+    Weights decode as ``(nibble - 8) * scale`` (symmetric 4-bit).
+
+    Returns:
+      [M, N] f32 = x @ dequant(w).
+    """
+    kk2, n = w_packed.shape
+    k = kk2 * 2
+    low = (w_packed & 0xF).astype(jnp.int32) - 8   # even k
+    high = (w_packed >> 4).astype(jnp.int32) - 8   # odd k
+    w = jnp.zeros((k, n), jnp.int32)
+    w = w.at[0::2].set(low)
+    w = w.at[1::2].set(high)
+    groups = jnp.repeat(scales, group_size, axis=0)  # [K, N]
+    w_deq = w.astype(jnp.float32) * groups
+    return x @ w_deq
+
+
+def patch_embed_ref(patches, w, b):
+    """ViT patch-embedding reference: flat patches → embeddings.
+
+    Args:
+      patches: [P, C] flattened pixel patches (C = 3 * patch * patch).
+      w:       [C, D] projection.
+      b:       [D] bias.
+    Returns:
+      [P, D] embeddings.
+    """
+    return patches.astype(jnp.float32) @ w + b
+
+
+def pack_weights_q4(w):
+    """Quantize an f32 [K, N] matrix to the nibble-packed q4 format.
+
+    Returns (w_packed [K//2, N] uint8, scales [K//group, N] f32, group).
+    Group size is fixed at 32 (K must be a multiple of 64).
+    """
+    import numpy as np
+
+    k, n = w.shape
+    group = 32
+    assert k % (2 * group) == 0 or k % group == 0 and k % 2 == 0, (k, n)
+    wg = np.asarray(w, np.float32).reshape(k // group, group, n)
+    scales = np.abs(wg).max(axis=1) / 7.0  # [K//group, N]
+    scales = np.maximum(scales, 1e-8)
+    q = np.clip(np.round(wg / scales[:, None, :]), -8, 7).astype(np.int32) + 8
+    q = q.reshape(k, n)
+    packed = (q[0::2] | (q[1::2] << 4)).astype(np.uint8)  # [K//2, N]
+    return jnp.asarray(packed), jnp.asarray(scales, jnp.float32), group

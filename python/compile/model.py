@@ -1,0 +1,348 @@
+"""L2: the decoder-only transformer compute graph (text path).
+
+Every function here is pure jax, calls the L1 Pallas kernels for its
+GEMM/attention hot-spots, and is AOT-lowered by ``aot.py`` into one HLO
+artifact per (function, bucket).  Weights arrive as a flat tuple in
+``weights.text_weight_order`` order so the Rust runtime can bind device
+buffers positionally.
+
+Architectural knobs reproduced from the paper's zoo (configs.py):
+GQA/MQA/MHA head layouts, gated SiLU vs gated GELU FFNs, and top-2 MoE
+FFNs for the *-A3B analogs.  All large GEMMs run through the 4-bit
+quantized Pallas kernel; attention state stays f32.
+
+KV arena layout (shared with the Rust KV manager):
+    kv[plane, 0=k|1=v, slot, kv_head, position, d_head]  f32
+    plane 0           : logits mailbox (see below)
+    plane 1 .. L      : layer l-1's K/V
+
+Single-output convention: the PJRT execute wrapper returns multi-output
+modules as ONE tuple-shaped device buffer whose elements can only be
+read back through a full host literal copy — which would force the KV
+arena through the host every step and destroy the zero-copy design.  So
+every artifact returns exactly one array.  Decode/prefill write their
+logits into arena plane 0 ("logits mailbox"): slot b's logits occupy
+the first ceil(V/Dh)*Dh elements of plane[0, k=0, b, head=0], a
+contiguous f32 range the Rust runtime reads back with a raw offset copy
+(O(V) bytes) while the arena itself stays on device.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, Q4_GROUP
+from .kernels.attention import decode_attention
+from .kernels.quant_matmul import quant_matmul
+from .weights import text_weight_order
+
+
+class W:
+    """Positional weight binder: yields arrays in declaration order."""
+
+    def __init__(self, names: Sequence[str], arrays: Sequence[jnp.ndarray]):
+        assert len(names) == len(arrays), (len(names), len(arrays))
+        self._map = dict(zip(names, arrays))
+
+    def __getitem__(self, name: str) -> jnp.ndarray:
+        return self._map[name]
+
+
+def rmsnorm(x, g, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * g).astype(jnp.float32)
+
+
+def rope(x, pos, theta):
+    """Rotary position embedding.
+
+    x:   [..., H, Dh] with Dh even; pos broadcastable to x[..., 0, 0].
+    pos: integer positions, shape x.shape[:-2].
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)  # [half]
+    ang = pos.astype(jnp.float32)[..., None, None] * freqs          # [..., 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def qmm(x, w: W, name: str):
+    """Quantized matmul through the Pallas kernel."""
+    return quant_matmul(x, w[name + ".q4"], w[name + ".scales"], Q4_GROUP)
+
+
+def _ffn(cfg: ModelConfig, w: W, prefix: str, h):
+    """Gated FFN (dense) or top-2 MoE FFN, on h [N, d]."""
+    if cfg.moe is None:
+        a = qmm(h, w, prefix + "w1")
+        g = qmm(h, w, prefix + "w3")
+        act = jax.nn.silu(a) if cfg.act == "silu" else jax.nn.gelu(a)
+        return qmm(act * g, w, prefix + "w2")
+    m = cfg.moe
+    gate_logits = h @ w[prefix + "gate"]                      # [N, E]
+    # Top-k via iterated argmax (NOT lax.top_k: jax>=0.5 lowers top_k to a
+    # sort/topk form whose "largest" attribute the xla_extension 0.5.1
+    # HLO-text parser rejects).  k is small and static, so this is cheap.
+    remaining = gate_logits
+    top_idx, top_vals = [], []
+    for _ in range(m.top_k):
+        idx = jnp.argmax(remaining, axis=-1)                  # [N]
+        val = jnp.take_along_axis(remaining, idx[:, None], axis=-1)[:, 0]
+        top_idx.append(idx)
+        top_vals.append(val)
+        remaining = remaining - jax.nn.one_hot(idx, m.n_experts) * 1e30
+    top_w = jax.nn.softmax(jnp.stack(top_vals, axis=-1), axis=-1)  # [N, K]
+    # Dense routing weights [N, E]: zero except the top-k entries.
+    route = jnp.zeros_like(gate_logits)
+    for k in range(m.top_k):
+        route = route + jax.nn.one_hot(top_idx[k], m.n_experts) * top_w[:, k : k + 1]
+    # Compute all experts densely (tiny sims) and mix: the semantics of
+    # sparse top-2 routing with the arithmetic of a dense einsum.
+    a = jnp.einsum("nd,edf->enf", h, w[prefix + "moe_w1"])
+    g = jnp.einsum("nd,edf->enf", h, w[prefix + "moe_w3"])
+    act = jax.nn.silu(a) if cfg.act == "silu" else jax.nn.gelu(a)
+    y = jnp.einsum("enf,efd->end", act * g, w[prefix + "moe_w2"])  # [E, N, d]
+    return jnp.einsum("end,ne->nd", y, route)
+
+
+def kv_arena_shape(cfg: ModelConfig, batch: int):
+    """Extended arena: plane 0 = logits mailbox, planes 1..L = layers."""
+    return (cfg.n_layers + 1, 2, batch, cfg.n_kv_heads, cfg.s_max, cfg.d_head)
+
+
+def logits_rows(cfg: ModelConfig) -> int:
+    """Rows of the logits mailbox: ceil(vocab / d_head)."""
+    return -(-cfg.vocab // cfg.d_head)
+
+
+
+
+# ----------------------------------------------------------------- decode
+
+def decode_fn(cfg: ModelConfig, tokens, pos, kv, *weights):
+    """One generation step for a full batch slot arena.
+
+    Args:
+      tokens: [B] i32 current token per slot (pad slots feed token 0).
+      pos:    [B] i32 position the new token occupies (== current length).
+      kv:     arena [L, 2, B, Hkv, S_max, Dh] f32.
+      weights: flat tuple per text_weight_order.
+
+    Returns:
+      Updated arena (single output; logits land in the plane-0 mailbox).
+
+    Empty slots run garbage-in/garbage-out compute; the Rust scheduler
+    masks them out.  Attention length is pos+1 (the new token's KV is
+    written before attending).
+    """
+    w = W(text_weight_order(cfg), weights)
+    b = tokens.shape[0]
+    x = jnp.take(w["emb"], tokens, axis=0)                    # [B, d]
+    lens = pos + 1
+
+    # The output arena is assembled ONCE from per-layer planes at the
+    # end (a single jnp.stack).  Updating `kv` in place with
+    # kv.at[l].set(...) per layer makes XLA 0.5.1's CPU pipeline copy
+    # the whole arena 2L times per step, which made decode superlinear
+    # in batch size (EXPERIMENTS.md §Perf).
+    planes = [None] * (cfg.n_layers + 1)
+
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        h = rmsnorm(x, w[p + "norm1"])
+        q = qmm(h, w, p + "wq").reshape(b, cfg.n_q_heads, cfg.d_head)
+        k = qmm(h, w, p + "wk").reshape(b, cfg.n_kv_heads, cfg.d_head)
+        v = qmm(h, w, p + "wv").reshape(b, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+
+        # Write the new token's K/V at `pos` in each slot's row.
+        def write(cache, kk, p_):
+            # cache [Hkv, S, Dh], kk [Hkv, Dh]
+            return jax.lax.dynamic_update_slice(cache, kk[:, None, :], (0, p_, 0))
+
+        k_cache = jax.vmap(write)(kv[l + 1, 0], k, pos)       # [B, Hkv, S, Dh]
+        v_cache = jax.vmap(write)(kv[l + 1, 1], v, pos)
+        planes[l + 1] = jnp.stack([k_cache, v_cache])         # [2, B, Hkv, S, Dh]
+
+        attn = decode_attention(q, k_cache, v_cache, lens)    # [B, Hq, Dh]
+        x = x + qmm(attn.reshape(b, cfg.d_q), w, p + "wo")
+        h2 = rmsnorm(x, w[p + "norm2"])
+        x = x + _ffn(cfg, w, p, h2)
+
+    x = rmsnorm(x, w["norm_f"])
+    logits = qmm(x, w, "unembed")                             # [B, vocab]
+
+    # Plane 0: logits mailbox (layout in module docs).
+    rows = logits_rows(cfg)
+    pad = rows * cfg.d_head - cfg.vocab
+    r = jnp.pad(logits, ((0, 0), (0, pad))).reshape(b, rows, cfg.d_head)
+    mailbox = jnp.zeros((2, b, cfg.n_kv_heads, cfg.s_max, cfg.d_head), jnp.float32)
+    mailbox = mailbox.at[0, :, 0, :rows, :].set(r)
+    planes[0] = mailbox
+    return jnp.stack(planes)                                  # [L+1, 2, B, ...]
+
+
+# ---------------------------------------------------------------- prefill
+
+def _prefill_body(cfg: ModelConfig, w: W, x, length):
+    """Shared prefill trunk over embeddings x [S, d]; returns
+    (x, plane list) — planes assembled into kv_one by the callers (one
+    jnp.stack; see decode_fn for why not repeated in-place updates)."""
+    s = x.shape[0]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    valid = positions < length                                 # [S]
+    causal = positions[None, :] <= positions[:, None]          # [S, S]
+    mask = causal & valid[None, :]
+    planes = [None] * (cfg.n_layers + 1)
+
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        h = rmsnorm(x, w[p + "norm1"])
+        q = qmm(h, w, p + "wq").reshape(s, cfg.n_q_heads, cfg.d_head)
+        k = qmm(h, w, p + "wk").reshape(s, cfg.n_kv_heads, cfg.d_head)
+        v = qmm(h, w, p + "wv").reshape(s, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+        # Pad K/V to the S_max arena row (positions >= length hold
+        # garbage; decode masks by length so it never reads them).
+        k_pad = jnp.pad(jnp.transpose(k, (1, 0, 2)),
+                        ((0, 0), (0, cfg.s_max - s), (0, 0)))  # [Hkv, Smax, Dh]
+        v_pad = jnp.pad(jnp.transpose(v, (1, 0, 2)),
+                        ((0, 0), (0, cfg.s_max - s), (0, 0)))
+        planes[l + 1] = jnp.stack([k_pad[None], v_pad[None]])  # [2,1,Hkv,Smax,Dh]
+
+        group = cfg.n_q_heads // cfg.n_kv_heads
+        k_full = jnp.repeat(k, group, axis=1)                  # [S, Hq, Dh]
+        v_full = jnp.repeat(v, group, axis=1)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+        logits_a = jnp.einsum("qhd,khd->hqk", q, k_full) * scale
+        logits_a = jnp.where(mask[None], logits_a, -1e30)
+        probs = jax.nn.softmax(logits_a, axis=-1)
+        attn = jnp.einsum("hqk,khd->qhd", probs, v_full)       # [S, Hq, Dh]
+        x = x + qmm(attn.reshape(s, cfg.d_q), w, p + "wo")
+        h2 = rmsnorm(x, w[p + "norm2"])
+        x = x + _ffn(cfg, w, p, h2)
+
+    x = rmsnorm(x, w["norm_f"])
+    return x, planes
+
+
+def _assemble_kv_one(cfg: ModelConfig, planes, logits):
+    """Stack prefill planes + the plane-0 logits mailbox into kv_one."""
+    rows = logits_rows(cfg)
+    pad = rows * cfg.d_head - cfg.vocab
+    r = jnp.pad(logits, ((0, 0), (0, pad))).reshape(1, rows, cfg.d_head)
+    mailbox = jnp.zeros((2, 1, cfg.n_kv_heads, cfg.s_max, cfg.d_head), jnp.float32)
+    mailbox = mailbox.at[0, :, 0, :rows, :].set(r)
+    planes[0] = mailbox
+    return jnp.stack(planes)
+
+
+def prefill_fn(cfg: ModelConfig, tokens, length, *weights):
+    """Prompt processing for one sequence.
+
+    Args:
+      tokens: [S_bucket] i32, padded with 0 beyond `length`.
+      length: scalar i32 number of valid tokens.
+
+    Returns:
+      kv_one [L+1, 2, 1, Hkv, S_max, Dh] ready for arena injection, with
+      the last valid position's logits in the plane-0 mailbox.
+    """
+    w = W(text_weight_order(cfg), weights)
+    x = jnp.take(w["emb"], tokens, axis=0)                    # [S, d]
+    x, planes = _prefill_body(cfg, w, x, length)
+    last = jax.lax.dynamic_slice(x, (length - 1, 0), (1, cfg.d_model))  # [1, d]
+    logits = qmm(last, w, "unembed")                          # [1, vocab]
+    return _assemble_kv_one(cfg, planes, logits)
+
+
+def prefill_embeds_fn(cfg: ModelConfig, embeds, length, *weights):
+    """Prompt processing from raw embeddings (multimodal path).
+
+    Identical to ``prefill_fn`` but the input is a pre-composed embedding
+    sequence (vision embeddings ++ text-token embeddings) of shape
+    [S_bucket, d].
+    """
+    w = W(text_weight_order(cfg), weights)
+    x, planes = _prefill_body(cfg, w, embeds.astype(jnp.float32), length)
+    last = jax.lax.dynamic_slice(x, (length - 1, 0), (1, cfg.d_model))
+    logits = qmm(last, w, "unembed")                          # [1, vocab]
+    return _assemble_kv_one(cfg, planes, logits)
+
+
+def embed_lookup_fn(cfg: ModelConfig, tokens, *weights):
+    """Token-id -> embedding rows (host composes multimodal sequences)."""
+    w = W(text_weight_order(cfg), weights)
+    return jnp.take(w["emb"], tokens, axis=0)
+
+
+# ------------------------------------------------------- arena management
+
+def inject_fn(cfg: ModelConfig, arena, kv_one, slot):
+    """Insert a prefilled single-sequence KV row into arena slot `slot`."""
+    return jax.lax.dynamic_update_slice(arena, kv_one, (0, 0, slot, 0, 0, 0))
+
+
+def extract_fn(cfg: ModelConfig, arena, slot):
+    """Extract arena slot `slot` as a single-sequence KV row (all planes,
+    including the logits mailbox — its content is stale but harmless)."""
+    l1, two, _, hkv, s, dh = arena.shape
+    return jax.lax.dynamic_slice(arena, (0, 0, slot, 0, 0, 0), (l1, two, 1, hkv, s, dh))
+
+
+# ----------------------------------------------------- python-side oracle
+
+def read_logits_fn(cfg: ModelConfig, kv):
+    """Extract the plane-0 logits mailbox for every slot: kv -> [B, vocab].
+
+    Lowered as its own tiny artifact (`read_logits_b{B}`): the TFRT CPU
+    PJRT client does not implement raw-offset host reads, so the runtime
+    executes this extractor and copies back only the [B, vocab] literal
+    (~8 kB/slot/step) while the arena stays on device.
+    """
+    rows = logits_rows(cfg)
+    b = kv.shape[2]
+    r = kv[0, 0, :, 0, :rows, :]                  # [B, rows, Dh]
+    return r.reshape(b, rows * cfg.d_head)[:, : cfg.vocab]
+
+
+def read_logits_mailbox(cfg: ModelConfig, kv, slot: int):
+    """Host-side mirror of the Rust raw-offset logits readback."""
+    rows = logits_rows(cfg)
+    flat = kv[0, 0, slot, 0, :rows, :].reshape(-1)
+    return flat[: cfg.vocab]
+
+
+def reference_generate(cfg: ModelConfig, weights: Dict, prompt: List[int],
+                       n_new: int) -> List[int]:
+    """Greedy generation oracle (numpy-level, used by tests and to verify
+    the Rust engine token-for-token)."""
+    order = text_weight_order(cfg)
+    arrs = [jnp.asarray(weights[n]) for n in order]
+    s_bucket = next(b for b in cfg.prefill_buckets if b >= len(prompt))
+    toks = jnp.zeros(s_bucket, jnp.int32).at[: len(prompt)].set(jnp.asarray(prompt))
+    kv_one = prefill_fn(cfg, toks, jnp.asarray(len(prompt), jnp.int32), *arrs)
+    arena = inject_fn(cfg, jnp.zeros(kv_arena_shape(cfg, 1), jnp.float32), kv_one,
+                      jnp.asarray(0, jnp.int32))
+    out = [int(jnp.argmax(read_logits_mailbox(cfg, arena, 0)))]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        arena = decode_fn(
+            cfg,
+            jnp.asarray([out[-1]], jnp.int32),
+            jnp.asarray([pos], jnp.int32),
+            arena,
+            *arrs,
+        )
+        out.append(int(jnp.argmax(read_logits_mailbox(cfg, arena, 0))))
+        pos += 1
+    return out

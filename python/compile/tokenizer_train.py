@@ -1,0 +1,162 @@
+"""Build-time byte-level BPE tokenizer training.
+
+The Rust engine needs a real tokenizer (the paper streams multi-byte
+UTF-8 cleanly, which only matters if tokens can split codepoints — byte
+level BPE does exactly that).  We train a small merge table over an
+embedded corpus at artifact-build time and export it as JSON; the Rust
+side implements encode (rank-greedy merging, GPT-2 style) and
+incremental UTF-8-safe decode.
+
+Vocabulary layout:
+    0..3     specials: <pad>=0 <bos>=1 <eos>=2 <img>=3
+    4..259   the 256 raw bytes
+    260..    merge tokens, id = 260 + merge_rank
+"""
+
+from __future__ import annotations
+
+import json
+from collections import Counter
+from typing import Dict, List, Tuple
+
+PAD, BOS, EOS, IMG = 0, 1, 2, 3
+N_SPECIAL = 4
+
+CORPUS = """
+Apple Silicon has rapidly become a significant platform for machine
+learning development and deployment. With unified memory architectures
+offering shared CPU and GPU memory, recent devices provide compelling
+capabilities for running large language models locally. Continuous
+batching dynamically groups requests to maximize throughput, allowing
+new requests to join mid-generation and completed requests to exit
+without blocking others. Vision-language models must process images
+through a vision encoder on every request, even when the same image
+appears across multiple conversation turns. Content-based prefix
+caching eliminates redundant vision encoding by identifying identical
+images through content hashing, regardless of input format.
+The quick brown fox jumps over the lazy dog. Pack my box with five
+dozen liquor jugs. How vexingly quick daft zebras jump! The five boxing
+wizards jump quickly. Sphinx of black quartz, judge my vow.
+def generate(prompt, max_tokens=128): return engine.run(prompt)
+for request in queue: batch.add(request) if len(batch) < max_batch
+print("hello world"); assert response.status_code == 200
+{"model": "qwen3-0.6b", "messages": [{"role": "user", "content": "hi"}]}
+0123456789 !@#$%^&*()_+-=[]{}|;:',.<>?/~`
+El rapido zorro marron salta sobre el perro perezoso. La inferencia
+multimodal eficiente requiere almacenamiento en cache de prefijos.
+Die schnelle Entwicklung effizienter Inferenz auf Verbraucher-Hardware
+ermoglicht datenschutzfreundliche Anwendungen ohne Cloud-Dienste.
+tok/s latency TTFT throughput KV-cache prefill decode batch scheduler
+llama qwen gemma nemotron vision encoder embedding resolution frames
+"""
+
+
+def train_bpe(corpus: str, vocab_size: int) -> List[Tuple[int, int]]:
+    """Train byte-level BPE; returns the ordered merge list.
+
+    Each merge is a pair of token ids (byte ids are 4..259; merge ids
+    start at 260).  Classic greedy highest-frequency pair algorithm over
+    whitespace-split words.
+    """
+    words = Counter(corpus.split())
+    # Each word as a tuple of byte token ids.
+    seqs: Dict[Tuple[int, ...], int] = {
+        tuple(b + N_SPECIAL for b in w.encode("utf-8")): c for w, c in words.items()
+    }
+    merges: List[Tuple[int, int]] = []
+    next_id = N_SPECIAL + 256
+    while next_id < vocab_size:
+        pairs: Counter = Counter()
+        for seq, cnt in seqs.items():
+            for a, b in zip(seq, seq[1:]):
+                pairs[(a, b)] += cnt
+        if not pairs:
+            break
+        (a, b), freq = pairs.most_common(1)[0]
+        if freq < 2:
+            break
+        merges.append((a, b))
+        new_seqs: Dict[Tuple[int, ...], int] = {}
+        for seq, cnt in seqs.items():
+            out: List[int] = []
+            i = 0
+            while i < len(seq):
+                if i + 1 < len(seq) and seq[i] == a and seq[i + 1] == b:
+                    out.append(next_id)
+                    i += 2
+                else:
+                    out.append(seq[i])
+                    i += 1
+            new_seqs[tuple(out)] = new_seqs.get(tuple(out), 0) + cnt
+        seqs = new_seqs
+        next_id += 1
+    return merges
+
+
+def encode(text: str, merges: List[Tuple[int, int]]) -> List[int]:
+    """Reference encoder (rank-greedy, mirrors the Rust implementation)."""
+    rank = {pair: i for i, pair in enumerate(merges)}
+    out: List[int] = []
+    for word in _split_keep_spaces(text):
+        seq = [b + N_SPECIAL for b in word.encode("utf-8")]
+        while len(seq) > 1:
+            best, best_rank = None, None
+            for i, pair in enumerate(zip(seq, seq[1:])):
+                r = rank.get(pair)
+                if r is not None and (best_rank is None or r < best_rank):
+                    best, best_rank = i, r
+            if best is None:
+                break
+            seq[best : best + 2] = [260 + best_rank]
+        out.extend(seq)
+    return out
+
+
+def decode_bytes(ids: List[int], merges: List[Tuple[int, int]]) -> bytes:
+    """Reference decoder: expand merge tokens back to bytes."""
+    out = bytearray()
+
+    def expand(tok: int):
+        if tok < N_SPECIAL:
+            return
+        if tok < N_SPECIAL + 256:
+            out.append(tok - N_SPECIAL)
+            return
+        a, b = merges[tok - (N_SPECIAL + 256)]
+        expand(a)
+        expand(b)
+
+    for t in ids:
+        expand(t)
+    return bytes(out)
+
+
+def _split_keep_spaces(text: str) -> List[str]:
+    """Split into words, attaching each run of spaces to the following
+    word (GPT-2-ish pre-tokenization, simplified)."""
+    parts: List[str] = []
+    cur = ""
+    for ch in text:
+        if ch.isspace():
+            if cur and not cur[-1].isspace():
+                parts.append(cur)
+                cur = ""
+            cur += ch
+        else:
+            cur += ch
+    if cur:
+        parts.append(cur)
+    return parts
+
+
+def export(path: str, vocab_size: int) -> dict:
+    merges = train_bpe(CORPUS, vocab_size)
+    spec = {
+        "vocab_size": vocab_size,
+        "n_special": N_SPECIAL,
+        "specials": {"pad": PAD, "bos": BOS, "eos": EOS, "img": IMG},
+        "merges": merges,
+    }
+    with open(path, "w") as f:
+        json.dump(spec, f)
+    return spec

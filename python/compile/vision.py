@@ -1,0 +1,83 @@
+"""L2: the ViT-sim vision encoder (multimodal path).
+
+Reproduces the cost structure of the paper's Qwen3-VL vision tower: a
+patch-embedding GEMM (L1 Pallas kernel), full self-attention over the
+patch grid (quadratic in resolution — this is why 1024x1024 encodes are
+expensive and why content-based caching pays), and a 2x2 spatial merge
+that projects into the text model's width.
+
+One artifact is lowered per supported resolution; the Rust multimodal
+pipeline patchifies decoded RGB on the host (a reshape, no compute) and
+feeds [P, 3*patch*patch] f32 patches.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.patch_embed import patch_embed
+from .model import W, rmsnorm
+from .weights import vision_weight_order
+
+
+def vision_encode_fn(cfg: ModelConfig, patches, *weights):
+    """Encode one image's patches into text-space visual embeddings.
+
+    Args:
+      patches: [P, 3*patch*patch] f32 flattened patches, P = grid**2.
+      weights: flat tuple per vision_weight_order.
+
+    Returns:
+      [T, d_text] f32 visual tokens, T = ceil(grid/merge)**2.
+    """
+    vc = cfg.vision
+    assert vc is not None
+    w = W(vision_weight_order(cfg), weights)
+    p = patches.shape[0]
+    g = int(round(p ** 0.5))
+    assert g * g == p, (p, g)
+    dv = vc.d_model
+
+    x = patch_embed(patches, w["vis.patch_w"], w["vis.patch_b"],
+                    block_p=min(p, 64) if p % min(p, 64) == 0 else p)
+    x = x + w["vis.pos_emb"][:p]
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dv // vc.n_heads, jnp.float32))
+    for l in range(vc.n_layers):
+        pre = f"vis.layers.{l}."
+        h = rmsnorm(x, w[pre + "norm1"])
+        qkv = h @ w[pre + "wqkv"]                                # [P, 3dv]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        hd = dv // vc.n_heads
+        q = q.reshape(p, vc.n_heads, hd)
+        k = k.reshape(p, vc.n_heads, hd)
+        v = v.reshape(p, vc.n_heads, hd)
+        logits = jnp.einsum("qhd,khd->hqk", q, k) * scale
+        probs = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("hqk,khd->qhd", probs, v).reshape(p, dv)
+        x = x + attn @ w[pre + "wo"]
+        h2 = rmsnorm(x, w[pre + "norm2"])
+        x = x + jax.nn.gelu(h2 @ w[pre + "w1"]) @ w[pre + "w2"]
+
+    x = rmsnorm(x, w["vis.norm_f"])
+
+    # 2x2 spatial merge (pad odd grids), then project to text width.
+    m = vc.merge
+    gm = (g + m - 1) // m
+    pad = gm * m - g
+    grid = x.reshape(g, g, dv)
+    if pad:
+        grid = jnp.pad(grid, ((0, pad), (0, pad), (0, 0)))
+    merged = grid.reshape(gm, m, gm, m, dv).transpose(0, 2, 1, 3, 4)
+    merged = merged.reshape(gm * gm, m * m * dv)
+    return merged @ w["vis.merge_w"] + w["vis.merge_b"]          # [T, d_text]
+
+
+def vision_encode_ref(cfg: ModelConfig, patches, weights_dict):
+    """Dict-keyed convenience wrapper for tests."""
+    order = vision_weight_order(cfg)
+    return vision_encode_fn(cfg, patches, *[jnp.asarray(weights_dict[n]) for n in order])

@@ -1,0 +1,174 @@
+"""Deterministic weight construction + the .umw export format.
+
+Weights are generated from a seeded PRNG (seed = first 4 bytes of
+SHA-256(model name)), quantized to the q4 nibble format for every large
+GEMM, and exported to ``artifacts/<model>.umw`` for the Rust runtime.
+
+.umw layout (little-endian):
+    magic   4 bytes  b"UMW1"
+    count   u32      number of tensors
+    per tensor:
+      name_len u16, name utf-8 bytes
+      dtype    u8   (0 = f32, 1 = u8, 2 = i32)
+      ndim     u8
+      dims     u32 * ndim
+      nbytes   u64
+      data     raw bytes (row-major)
+"""
+
+from __future__ import annotations
+
+import hashlib
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .configs import ModelConfig, Q4_GROUP
+from .kernels.ref import pack_weights_q4
+
+DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.uint8): 1, np.dtype(np.int32): 2}
+
+
+def model_seed(name: str) -> int:
+    return int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "little")
+
+
+def _init(rng: np.random.Generator, shape, scale=None) -> np.ndarray:
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def build_weights(cfg: ModelConfig) -> Dict[str, np.ndarray]:
+    """Construct the full weight dict for a model (text + vision tower).
+
+    Quantized GEMMs appear as ``<name>.q4`` (uint8 packed) plus
+    ``<name>.scales`` (f32); everything else is f32.
+    """
+    rng = np.random.default_rng(model_seed(cfg.name))
+    w: Dict[str, np.ndarray] = {}
+
+    def quantized(name: str, k: int, n: int, scale=None):
+        dense = _init(rng, (k, n), scale)
+        packed, scales, _ = pack_weights_q4(dense)
+        w[f"{name}.q4"] = np.asarray(packed)
+        w[f"{name}.scales"] = np.asarray(scales)
+
+    d, dh = cfg.d_model, cfg.d_head
+    w["emb"] = _init(rng, (cfg.vocab, d), scale=0.02)
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        w[p + "norm1"] = np.ones(d, np.float32)
+        w[p + "norm2"] = np.ones(d, np.float32)
+        quantized(p + "wq", d, cfg.d_q)
+        quantized(p + "wk", d, cfg.d_kv)
+        quantized(p + "wv", d, cfg.d_kv)
+        quantized(p + "wo", cfg.d_q, d)
+        if cfg.moe:
+            m = cfg.moe
+            w[p + "gate"] = _init(rng, (d, m.n_experts))
+            w[p + "moe_w1"] = _init(rng, (m.n_experts, d, m.d_expert))
+            w[p + "moe_w3"] = _init(rng, (m.n_experts, d, m.d_expert))
+            w[p + "moe_w2"] = _init(rng, (m.n_experts, m.d_expert, d))
+        else:
+            quantized(p + "w1", d, cfg.d_ffn)
+            quantized(p + "w3", d, cfg.d_ffn)
+            quantized(p + "w2", cfg.d_ffn, d)
+    w["norm_f"] = np.ones(d, np.float32)
+    quantized("unembed", d, cfg.vocab)
+
+    if cfg.vision:
+        vc = cfg.vision
+        dv = vc.d_model
+        max_patches = max(vc.n_patches(r) for r in vc.resolutions)
+        w["vis.patch_w"] = _init(rng, (vc.patch_dim, dv))
+        w["vis.patch_b"] = np.zeros(dv, np.float32)
+        w["vis.pos_emb"] = _init(rng, (max_patches, dv), scale=0.02)
+        for l in range(vc.n_layers):
+            p = f"vis.layers.{l}."
+            w[p + "norm1"] = np.ones(dv, np.float32)
+            w[p + "norm2"] = np.ones(dv, np.float32)
+            w[p + "wqkv"] = _init(rng, (dv, 3 * dv))
+            w[p + "wo"] = _init(rng, (dv, dv))
+            w[p + "w1"] = _init(rng, (dv, 4 * dv))
+            w[p + "w2"] = _init(rng, (4 * dv, dv))
+        w["vis.norm_f"] = np.ones(dv, np.float32)
+        w["vis.merge_w"] = _init(rng, (vc.merge * vc.merge * dv, d))
+        w["vis.merge_b"] = np.zeros(d, np.float32)
+
+    return w
+
+
+def text_weight_order(cfg: ModelConfig) -> List[str]:
+    """Deterministic argument order for text-model artifacts."""
+    names = ["emb"]
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        names += [p + "norm1", p + "norm2"]
+        for g in ("wq", "wk", "wv", "wo"):
+            names += [p + g + ".q4", p + g + ".scales"]
+        if cfg.moe:
+            names += [p + "gate", p + "moe_w1", p + "moe_w3", p + "moe_w2"]
+        else:
+            for g in ("w1", "w3", "w2"):
+                names += [p + g + ".q4", p + g + ".scales"]
+    names += ["norm_f", "unembed.q4", "unembed.scales"]
+    return names
+
+
+def vision_weight_order(cfg: ModelConfig) -> List[str]:
+    """Deterministic argument order for vision artifacts."""
+    assert cfg.vision
+    names = ["vis.patch_w", "vis.patch_b", "vis.pos_emb"]
+    for l in range(cfg.vision.n_layers):
+        p = f"vis.layers.{l}."
+        names += [p + "norm1", p + "norm2", p + "wqkv", p + "wo", p + "w1", p + "w2"]
+    names += ["vis.norm_f", "vis.merge_w", "vis.merge_b"]
+    return names
+
+
+def write_umw(path: str, weights: Dict[str, np.ndarray]) -> int:
+    """Serialize a weight dict to the .umw container.  Returns bytes written."""
+    blob = bytearray()
+    blob += b"UMW1"
+    blob += struct.pack("<I", len(weights))
+    for name, arr in weights.items():
+        arr = np.ascontiguousarray(arr)
+        code = DTYPE_CODES[arr.dtype]
+        nb = arr.nbytes
+        name_b = name.encode()
+        blob += struct.pack("<H", len(name_b)) + name_b
+        blob += struct.pack("<BB", code, arr.ndim)
+        blob += struct.pack(f"<{arr.ndim}I", *arr.shape)
+        blob += struct.pack("<Q", nb)
+        blob += arr.tobytes()
+    with open(path, "wb") as f:
+        f.write(blob)
+    return len(blob)
+
+
+def read_umw(path: str) -> Dict[str, np.ndarray]:
+    """Parse a .umw container (python-side round-trip check)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == b"UMW1", "bad magic"
+    (count,) = struct.unpack_from("<I", data, 4)
+    off = 8
+    out: Dict[str, np.ndarray] = {}
+    rev = {v: k for k, v in DTYPE_CODES.items()}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off : off + nlen].decode()
+        off += nlen
+        code, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        (nb,) = struct.unpack_from("<Q", data, off)
+        off += 8
+        arr = np.frombuffer(data[off : off + nb], dtype=rev[code]).reshape(dims)
+        off += nb
+        out[name] = arr
+    return out

@@ -1,0 +1,72 @@
+"""AOT manifest + artifact integrity (requires `make artifacts`)."""
+
+import json
+import os
+
+import pytest
+
+from compile.configs import EMBED_PREFILL_BUCKETS, MODELS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_all_models_present(manifest):
+    assert set(manifest["models"]) == set(MODELS)
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_entry_inventory(manifest, name):
+    cfg = MODELS[name]
+    entries = manifest["models"][name]["entries"]
+    for b in cfg.decode_buckets:
+        for kind in ("decode", "inject", "extract", "read_logits"):
+            assert f"{kind}_b{b}" in entries, f"{name} missing {kind}_b{b}"
+    for s in cfg.prefill_buckets:
+        assert f"prefill_s{s}" in entries
+    if cfg.vision:
+        for r in cfg.vision.resolutions:
+            assert f"vision_r{r}" in entries
+        for s in EMBED_PREFILL_BUCKETS:
+            assert f"prefill_embeds_s{s}" in entries
+            assert f"embed_lookup_s{s}" in entries
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_artifact_files_exist_and_are_hlo(manifest, name):
+    m = manifest["models"][name]
+    assert os.path.exists(os.path.join(ART, m["weights_file"]))
+    for entry, desc in m["entries"].items():
+        path = os.path.join(ART, desc["file"])
+        assert os.path.exists(path), f"{name}/{entry} artifact missing"
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, f"{name}/{entry} is not HLO text"
+
+
+def test_arg_descriptors_sane(manifest):
+    m = manifest["models"]["qwen3-0.6b"]
+    d = m["entries"]["decode_b1"]["args"]
+    kinds = [a["kind"] for a in d]
+    # All inputs precede all weights.
+    first_weight = kinds.index("weight")
+    assert all(k == "weight" for k in kinds[first_weight:])
+    assert [a["name"] for a in d[:3]] == ["tokens", "pos", "kv"]
+    kv = d[2]
+    assert kv["shape"] == [m["n_layers"] + 1, 2, 1, m["n_kv_heads"], m["s_max"], m["d_head"]]
+    # Weight order starts with the embedding table.
+    assert d[3]["name"] == "emb"
+
+
+def test_mailbox_fits_every_model(manifest):
+    for name, m in manifest["models"].items():
+        rows = -(-m["vocab"] // m["d_head"])
+        assert rows <= m["s_max"], f"{name}: logits mailbox would overflow the arena"

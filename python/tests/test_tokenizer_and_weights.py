@@ -1,0 +1,106 @@
+"""Build-time substrate tests: BPE tokenizer training/encode/decode and
+the .umw weight container."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tokenizer_train as T
+from compile.configs import MODELS
+from compile.weights import build_weights, read_umw, text_weight_order, vision_weight_order, write_umw
+
+
+# ------------------------------------------------------------- tokenizer
+
+MERGES = T.train_bpe(T.CORPUS, 2048)
+
+
+def test_training_produces_merges():
+    assert len(MERGES) > 100, "corpus should support >100 merges"
+    # All merge ids valid and self-consistent.
+    for r, (a, b) in enumerate(MERGES):
+        assert a < 260 + r and b < 260 + r
+        assert a >= T.N_SPECIAL and b >= T.N_SPECIAL
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(min_size=0, max_size=200))
+def test_encode_decode_roundtrip(text):
+    ids = T.encode(text, MERGES)
+    got = T.decode_bytes(ids, MERGES).decode("utf-8")
+    assert got == text
+
+
+def test_corpus_words_compress():
+    ids = T.encode("continuous batching throughput scheduler", MERGES)
+    n_bytes = len("continuous batching throughput scheduler".encode())
+    assert len(ids) < n_bytes / 2
+
+
+def test_export_format(tmp_path):
+    path = str(tmp_path / "tok.json")
+    spec = T.export(path, 2048)
+    assert os.path.exists(path)
+    assert spec["vocab_size"] == 2048
+    assert spec["specials"]["img"] == 3
+    import json
+
+    reloaded = json.load(open(path))
+    assert reloaded["merges"] == [list(m) for m in spec["merges"]] or reloaded["merges"] == spec["merges"]
+
+
+# ------------------------------------------------------------- weights
+
+def test_umw_roundtrip(tmp_path):
+    w = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.arange(8, dtype=np.uint8).reshape(2, 2, 2),
+        "c": np.asarray([-1, 2], np.int32),
+    }
+    path = str(tmp_path / "w.umw")
+    write_umw(path, w)
+    back = read_umw(path)
+    assert set(back) == set(w)
+    for k in w:
+        np.testing.assert_array_equal(back[k], w[k])
+        assert back[k].dtype == w[k].dtype
+
+
+def test_weights_are_deterministic():
+    a = build_weights(MODELS["qwen3-0.6b"])
+    b = build_weights(MODELS["qwen3-0.6b"])
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    # Different model name -> different weights.
+    c = build_weights(MODELS["qwen3-4b"])
+    assert a["emb"].shape != c["emb"].shape or not np.array_equal(a["emb"], c["emb"])
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_weight_order_covers_exactly(name):
+    """Every name in the arg order exists; text+vision order is complete
+    and duplicate-free."""
+    cfg = MODELS[name]
+    w = build_weights(cfg)
+    order = text_weight_order(cfg)
+    if cfg.vision:
+        order = order + vision_weight_order(cfg)
+    assert len(order) == len(set(order)), "duplicate weight names"
+    for n in order:
+        assert n in w, f"missing {n}"
+    # Conversely, no orphan tensors.
+    assert set(order) == set(w), set(w) ^ set(order)
+
+
+def test_q4_tensors_have_scale_pairs():
+    w = build_weights(MODELS["qwen3-0.6b"])
+    for k in w:
+        if k.endswith(".q4"):
+            base = k[: -len(".q4")]
+            assert base + ".scales" in w
+            assert w[k].dtype == np.uint8
+            # Packed K is half of scales' group-expanded K.
+            assert w[k].shape[0] * 2 == w[base + ".scales"].shape[0] * 32

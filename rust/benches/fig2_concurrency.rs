@@ -1,0 +1,122 @@
+//! Figure 2: concurrency scaling of continuous batching.
+//!
+//! (a) aggregate tok/s vs concurrent requests (paper: Qwen3-0.6B scales
+//!     441 -> 1642 tok/s, 3.7x at 16; larger models show diminishing
+//!     returns — Qwen3-8B 2.6x);
+//! (b) request throughput (req/s) vs concurrency (paper: 25+ req/s for
+//!     Qwen3-0.6B at 16).
+//!
+//! Closed-loop workload: N unique prompts submitted at once, caches
+//! disabled so every request pays real prefill + decode.
+
+use std::time::Instant;
+
+use umserve::bench_harness::{banner, fmt_f, synth_prompt, Table};
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{EngineConfig, GenRequest, PromptInput};
+use umserve::engine::sampler::SamplingParams;
+
+fn main() -> anyhow::Result<()> {
+    banner("Figure 2 — concurrency scaling (continuous batching)");
+    let quick = std::env::var("UMSERVE_QUICK").is_ok();
+    let n_new = if quick { 32 } else { 96 };
+    let models = ["qwen3-0.6b", "qwen3-4b", "qwen3-8b"];
+    let concurrencies = [1usize, 2, 4, 8, 16];
+
+    let mut agg = Table::new(
+        &format!("Fig. 2a — aggregate throughput (tok/s), {n_new} tokens/request"),
+        &["Model", "c=1", "c=2", "c=4", "c=8", "c=16", "scaling @16"],
+    );
+    let mut reqs = Table::new(
+        "Fig. 2b — request throughput (req/s)",
+        &["Model", "c=1", "c=2", "c=4", "c=8", "c=16"],
+    );
+
+    for model in models {
+        let mut s = Scheduler::new(EngineConfig {
+            model: model.into(),
+            artifacts_dir: "artifacts".into(),
+            text_cache_bytes: 0, // every request must do real work
+            cache_finished: false,
+            warmup: false,
+            // Shrink back between concurrency levels so c=1 after the
+            // c=16 warmup doesn't run on a 16-slot arena.
+            allow_shrink: true,
+            ..Default::default()
+        })?;
+        // Warm all bucket executables once (compile time excluded).
+        for &c in &concurrencies {
+            run_closed_loop(&mut s, c, 2, 2, model)?;
+        }
+
+        let mut tok_rates = Vec::new();
+        let mut req_rates = Vec::new();
+        for &c in &concurrencies {
+            let (tok_s, req_s) = run_closed_loop(&mut s, c, n_new, 16, model)?;
+            eprintln!("  {model} c={c}: {tok_s:.1} tok/s, {req_s:.2} req/s");
+            tok_rates.push(tok_s);
+            req_rates.push(req_s);
+        }
+        let scaling = tok_rates.last().unwrap() / tok_rates[0];
+        agg.row(vec![
+            model.to_string(),
+            fmt_f(tok_rates[0], 1),
+            fmt_f(tok_rates[1], 1),
+            fmt_f(tok_rates[2], 1),
+            fmt_f(tok_rates[3], 1),
+            fmt_f(tok_rates[4], 1),
+            format!("{scaling:.2}x"),
+        ]);
+        reqs.row(vec![
+            model.to_string(),
+            fmt_f(req_rates[0], 2),
+            fmt_f(req_rates[1], 2),
+            fmt_f(req_rates[2], 2),
+            fmt_f(req_rates[3], 2),
+            fmt_f(req_rates[4], 2),
+        ]);
+    }
+    agg.print();
+    reqs.print();
+    println!("paper shape check: sublinear scaling, strongest for the smallest model.");
+    Ok(())
+}
+
+fn run_closed_loop(
+    s: &mut Scheduler,
+    concurrency: usize,
+    n_new: usize,
+    prompt_len: usize,
+    model: &str,
+) -> anyhow::Result<(f64, f64)> {
+    let mut rxs = Vec::new();
+    let t0 = Instant::now();
+    for i in 0..concurrency {
+        let (tx, rx) = std::sync::mpsc::channel();
+        s.submit(GenRequest {
+            id: (t0.elapsed().as_nanos() as u64) ^ (i as u64) << 32 | i as u64,
+            // Unique prompt per request (prompt seed varies).
+            prompt: PromptInput::Tokens(synth_prompt(
+                0xF00D ^ i as u64 ^ (model.len() as u64) << 8 ^ (n_new as u64) << 16,
+                prompt_len,
+                2048,
+            )),
+            params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) },
+            events: tx,
+            enqueued_at: Instant::now(),
+        });
+        rxs.push(rx);
+    }
+    s.run_until_idle();
+    let wall = t0.elapsed().as_secs_f64();
+    let mut tokens = 0usize;
+    for rx in &rxs {
+        for ev in rx.try_iter() {
+            if let umserve::coordinator::Event::Done { usage, .. } = ev {
+                tokens += usage.completion_tokens;
+            }
+        }
+    }
+    assert_eq!(tokens, concurrency * n_new, "closed loop lost tokens");
+    Ok((tokens as f64 / wall, concurrency as f64 / wall))
+}

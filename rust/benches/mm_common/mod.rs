@@ -1,0 +1,37 @@
+//! Shared helpers for the multimodal benches (Tables 2-6).
+
+use std::time::Instant;
+
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{Event, GenRequest, PromptInput, Timing};
+use umserve::engine::sampler::SamplingParams;
+
+static NEXT_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+/// Run one request to completion and return (timing, completion_tokens,
+/// wall_seconds).
+pub fn run_request(
+    s: &mut Scheduler,
+    prompt: PromptInput,
+    max_tokens: usize,
+) -> anyhow::Result<(Timing, usize, f64)> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t0 = Instant::now();
+    s.submit(GenRequest {
+        id: NEXT_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+        prompt,
+        params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(max_tokens) },
+        events: tx,
+        enqueued_at: Instant::now(),
+    });
+    s.run_until_idle();
+    let wall = t0.elapsed().as_secs_f64();
+    for ev in rx.try_iter() {
+        match ev {
+            Event::Done { timing, usage, .. } => return Ok((timing, usage.completion_tokens, wall)),
+            Event::Error { message, .. } => anyhow::bail!("request failed: {message}"),
+            _ => {}
+        }
+    }
+    anyhow::bail!("no Done event")
+}

@@ -1,0 +1,103 @@
+//! Table 3: video benchmark across frame configurations
+//! (Qwen3-VL-4B-sim, 10 s test clip).
+//!
+//! Paper: 2 frames 1.8 s / 83.2 tok/s / 3.2 GB up to 64 frames 18.2 s /
+//! 8.2 tok/s / 12.1 GB — time and memory grow with frames, generation
+//! tok/s falls.  Memory here = vision embeddings + KV arena + weights
+//! resident bytes (our unified "pool" accounting).
+
+mod mm_common;
+
+use mm_common::run_request;
+use umserve::bench_harness::{banner, Table};
+use umserve::cache::kv_one_bytes;
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{EngineConfig, PromptInput};
+use umserve::multimodal::image::ImageSource;
+use umserve::multimodal::video::{generate_video, sample_frames};
+
+fn main() -> anyhow::Result<()> {
+    banner("Table 3 — video benchmark vs frame count");
+    let n_new = 8;
+    // 10-second 224px clip at 8 fps = 80 distinct frames.
+    let video = generate_video(99, 10.0, 8.0, 224);
+    let configs: &[(usize, &str)] = &[
+        (2, "2 @ 0.5fps"),
+        (4, "4 @ 1fps"),
+        (8, "8 @ 2fps"),
+        (16, "16 @ 2fps"),
+        (32, "32 @ 4fps"),
+        (64, "64 @ 8fps"),
+    ];
+
+    let mut s = Scheduler::new(EngineConfig {
+        model: "qwen3-vl-4b".into(),
+        artifacts_dir: "artifacts".into(),
+        // Disable caches: Table 3 is the COLD video path.
+        mm_emb_cache_bytes: 0,
+        mm_kv_cache_bytes: 0,
+        text_cache_bytes: 0,
+        warmup: false,
+        ..Default::default()
+    })?;
+    // Executable warmup: every embed-prefill bucket the configs will
+    // touch must be compiled up front (a DIFFERENT clip so caches — if
+    // any were enabled — would stay cold).  Without this the first use
+    // of each bucket pays 1.5–2.5 s of XLA compile inside the table.
+    let warm_clip = generate_video(1, 10.0, 8.0, 224);
+    for &(n, _) in configs {
+        let _ = run_request(&mut s, frames_prompt(&warm_clip, n, "warmup"), 2)?;
+    }
+
+    let mut table = Table::new(
+        "Table 3 — video processing vs frames (qwen3-vl-4b-sim)",
+        &["Config", "Frames", "Time", "Tok/s", "Memory"],
+    );
+    for &(n, label) in configs {
+        let prompt = frames_prompt(&video, n, "summarize this video");
+        let (timing, toks, wall) = run_request(&mut s, prompt, n_new)?;
+        // Generation rate: tokens after the first (prefill) token.
+        let decode_s = wall - timing.ttft_ms / 1e3;
+        let tok_s = (toks - 1) as f64 / decode_s.max(1e-9);
+        // Resident memory: weights + embeddings for n frames + arena.
+        let info = s.engine.rt.info.clone();
+        let emb_bytes = n * 16 * info.d_model * 4; // 16 visual tokens/frame @224
+        let mem =
+            weights_bytes(&s) + emb_bytes + kv_one_bytes(&info) + info.arena_elements(1) * 4;
+        table.row(vec![
+            label.into(),
+            n.to_string(),
+            format!("{wall:.2}s"),
+            format!("{tok_s:.1}"),
+            format!("{:.1} MB", mem as f64 / 1e6),
+        ]);
+        eprintln!("  {label}: {wall:.2}s total, vision {:.0} ms", timing.vision_ms);
+    }
+    table.print();
+    println!("paper shape check: time/memory grow with frames; tok/s falls.");
+    Ok(())
+}
+
+fn frames_prompt(
+    video: &umserve::multimodal::video::Video,
+    n: usize,
+    text: &str,
+) -> PromptInput {
+    let idx = sample_frames(video, n);
+    PromptInput::Multimodal {
+        images: idx
+            .into_iter()
+            .map(|i| ImageSource::Bytes(video.frames[i].encode_raw()))
+            .collect(),
+        text: text.into(),
+    }
+}
+
+fn weights_bytes(s: &Scheduler) -> usize {
+    s.engine
+        .rt
+        .host_weights
+        .values()
+        .map(|t| t.data.len())
+        .sum()
+}

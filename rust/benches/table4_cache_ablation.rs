@@ -1,0 +1,73 @@
+//! Table 4: cache component ablation (Qwen3-VL-8B-sim, 1024x1024, turn 2).
+//!
+//! Paper: no cache 21.7 s (1.0x) / vision-emb only 2.8 s (7.8x) /
+//! KV only 18.2 s (1.2x) / both 1.15 s (19x).
+//!
+//! Semantics reproduced: "KV only" still runs the vision encoder (the KV
+//! entry is validated against freshly computed embeddings, LMCache-style)
+//! and skips prompt processing only; "emb only" skips the encoder but
+//! re-runs prompt processing.
+
+mod mm_common;
+
+use mm_common::run_request;
+use umserve::bench_harness::{banner, Table};
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{EngineConfig, PromptInput};
+use umserve::multimodal::image::{generate_image, ImageSource};
+
+fn main() -> anyhow::Result<()> {
+    banner("Table 4 — cache component ablation (turn-2 latency)");
+    let n_new = 8;
+    let img = generate_image(4040, 1024);
+    let mk = || PromptInput::Multimodal {
+        images: vec![ImageSource::Bytes(img.encode_raw())],
+        text: "describe the scene in detail".into(),
+    };
+
+    let configs: &[(&str, bool, bool)] = &[
+        ("No caching (baseline)", false, false),
+        ("Vision embeddings only", true, false),
+        ("KV cache only", false, true),
+        ("Both (full cache)", true, true),
+    ];
+
+    let mut table = Table::new(
+        "Table 4 — turn-2 latency by cache configuration (qwen3-vl-8b-sim, 1024x1024)",
+        &["Configuration", "Latency", "Speedup"],
+    );
+    let mut baseline = None;
+    for &(label, emb, kv) in configs {
+        let mut s = Scheduler::new(EngineConfig {
+            model: "qwen3-vl-8b".into(),
+            artifacts_dir: "artifacts".into(),
+            mm_emb_cache_bytes: if emb { 256 << 20 } else { 0 },
+            mm_kv_cache_bytes: if kv { 256 << 20 } else { 0 },
+            text_cache_bytes: 0,
+            warmup: false,
+            ..Default::default()
+        })?;
+        // Warm executables with a different image, then turn 1 (populates
+        // whichever caches are on), then measure turn 2.
+        let warm = PromptInput::Multimodal {
+            images: vec![ImageSource::Bytes(generate_image(1, 1024).encode_raw())],
+            text: "warmup".into(),
+        };
+        let _ = run_request(&mut s, warm, 2)?;
+        let _ = run_request(&mut s, mk(), n_new)?; // turn 1
+        let (timing, _, wall) = run_request(&mut s, mk(), n_new)?; // turn 2
+        let base = *baseline.get_or_insert(wall);
+        table.row(vec![
+            label.into(),
+            format!("{wall:.2}s"),
+            format!("{:.1}x", base / wall),
+        ]);
+        eprintln!(
+            "  {label}: {wall:.2}s (vision_cached={} kv_hit={})",
+            timing.vision_cached, timing.kv_full_hit
+        );
+    }
+    table.print();
+    println!("paper shape check: emb-only >> kv-only; both ~ multiplicative.");
+    Ok(())
+}

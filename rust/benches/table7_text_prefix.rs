@@ -1,0 +1,107 @@
+//! Table 7: text prefix caching TTFT (Qwen3-4B-sim, 512-token shared
+//! prefix).
+//!
+//! Paper: no cache 245 ms TTFT -> prefix hit 42 ms (5.8x).  Workload:
+//! a long shared system prompt warmed once, then requests whose prompt
+//! = shared prefix + short unique user turn.  The hit path replaces a
+//! 512-token prefill with an inject + ~16 catch-up decode steps.
+
+use std::time::Instant;
+
+use umserve::bench_harness::{banner, synth_prompt, Table};
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{EngineConfig, Event, GenRequest, PromptInput};
+use umserve::engine::sampler::SamplingParams;
+
+fn main() -> anyhow::Result<()> {
+    banner("Table 7 — text prefix caching (TTFT)");
+    let prefix_len = 480;
+    let user_len = 16;
+    let reps = 5;
+
+    let mut s = Scheduler::new(EngineConfig {
+        model: "qwen3-4b".into(),
+        artifacts_dir: "artifacts".into(),
+        warmup: false,
+        ..Default::default()
+    })?;
+    let prefix = synth_prompt(7000, prefix_len, 2048);
+
+    // Executable warmup (both prefill bucket + decode + inject paths).
+    run_ttft(&mut s, prefix.clone(), 1)?;
+
+    // Cold TTFTs: unique prompts, no usable prefix in cache.
+    let mut cold = Vec::new();
+    for i in 0..reps {
+        let mut p = synth_prompt(8000 + i, prefix_len, 2048);
+        p.extend(synth_prompt(9000 + i, user_len, 2048));
+        cold.push(run_ttft(&mut s, p, 4)?);
+    }
+
+    // Warm the shared prefix (system-prompt registration).
+    run_ttft(&mut s, prefix.clone(), 1)?;
+
+    // Partial hits: shared prefix + unique user suffix (catch-up
+    // decodes the suffix token-by-token).
+    let mut partial = Vec::new();
+    let mut repeated_prompt = prefix.clone();
+    for i in 0..reps {
+        let mut p = prefix.clone();
+        p.extend(synth_prompt(9500 + i, user_len, 2048));
+        if i == 0 {
+            repeated_prompt = p.clone();
+        }
+        partial.push(run_ttft(&mut s, p, 4)?);
+    }
+
+    // Full hits: the EXACT prompt repeats (the paper's "repeated
+    // prompts" case) — prefill replaced by a single arena inject.
+    let mut full = Vec::new();
+    for _ in 0..reps {
+        full.push(run_ttft(&mut s, repeated_prompt.clone(), 4)?);
+    }
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let (c, p, f) = (mean(&cold), mean(&partial), mean(&full));
+
+    let mut table = Table::new(
+        &format!("Table 7 — TTFT with {prefix_len}-token shared prefix (qwen3-4b-sim)"),
+        &["Configuration", "TTFT", "Speedup"],
+    );
+    table.row(vec!["No caching (baseline)".into(), format!("{c:.1} ms"), "1.0x".into()]);
+    table.row(vec![
+        format!("Partial hit (+{user_len}-token suffix catch-up)"),
+        format!("{p:.1} ms"),
+        format!("{:.1}x", c / p),
+    ]);
+    table.row(vec![
+        "Full hit (repeated prompt)".into(),
+        format!("{f:.1} ms"),
+        format!("{:.1}x", c / f),
+    ]);
+    table.print();
+    println!("paper shape check: full hit cuts TTFT by several-fold; the partial");
+    println!("path's win is bounded by sequential catch-up decodes on this");
+    println!("substrate (per-dispatch floor ~1 ms x suffix length).");
+    Ok(())
+}
+
+/// Returns TTFT in ms for one request.
+fn run_ttft(s: &mut Scheduler, tokens: Vec<i32>, max_tokens: usize) -> anyhow::Result<f64> {
+    static NEXT: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+    let (tx, rx) = std::sync::mpsc::channel();
+    s.submit(GenRequest {
+        id: NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+        prompt: PromptInput::Tokens(tokens),
+        params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(max_tokens) },
+        events: tx,
+        enqueued_at: Instant::now(),
+    });
+    s.run_until_idle();
+    for ev in rx.try_iter() {
+        if let Event::Done { timing, .. } = ev {
+            return Ok(timing.ttft_ms);
+        }
+    }
+    anyhow::bail!("no Done")
+}

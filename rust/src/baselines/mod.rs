@@ -1,0 +1,186 @@
+//! Table 1 comparator engines.
+//!
+//! Each baseline is OUR engine minus one specific optimisation, so every
+//! measured delta is a causal ablation of that optimisation (DESIGN.md
+//! §6).  None of these are the real llama.cpp / mlx-lm / vLLM-metal —
+//! they are *overhead models* of the architectural property the paper
+//! credits for its wins:
+//!
+//! | comparator      | modelled property                      | mechanism here |
+//! |-----------------|----------------------------------------|----------------|
+//! | `llama.cpp-sim` | discrete-memory transfers, sequential  | full KV arena host round-trip per decode step |
+//! | `mlx-lm-sim`    | library-only: no scheduler             | zero-copy KV, but per-step host softmax + full-output re-detokenisation |
+//! | `vllm-metal-sim`| hybrid MLX/PyTorch plugin              | batched, but KV round-trips on every batch-composition change + per-step host softmax |
+//! | ours            | vllm-mlx                               | device-resident arenas + bucketed continuous batching + incremental detok |
+//!
+//! Honest-simulation note (EXPERIMENTS.md §Deviations): the `mlx-lm-sim`
+//! gap at batch 1 under-represents the paper's 1.5x for small models
+//! because MLX-internal fusion differences cannot be reproduced on this
+//! substrate; the llama.cpp gap (memory transfers) is reproduced
+//! directly.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::sampler::argmax;
+use crate::engine::tokenizer::Tokenizer;
+use crate::runtime::ModelRuntime;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Comparator {
+    Ours,
+    MlxLmSim,
+    LlamaCppSim,
+    VllmMetalSim,
+}
+
+impl Comparator {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Comparator::Ours => "ours",
+            Comparator::MlxLmSim => "mlx-lm-sim",
+            Comparator::LlamaCppSim => "llama.cpp-sim",
+            Comparator::VllmMetalSim => "vllm-metal-sim",
+        }
+    }
+
+    pub fn all() -> [Comparator; 4] {
+        [
+            Comparator::Ours,
+            Comparator::VllmMetalSim,
+            Comparator::MlxLmSim,
+            Comparator::LlamaCppSim,
+        ]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SingleStreamReport {
+    pub comparator: &'static str,
+    pub model: String,
+    pub prompt_tokens: usize,
+    pub new_tokens: usize,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub tok_per_s: f64,
+}
+
+/// Greedy single-stream generation under a comparator's overhead model.
+/// Measures decode-phase throughput (the paper's tok/s metric).
+pub fn generate_single_stream(
+    rt: &ModelRuntime,
+    comparator: Comparator,
+    tokenizer: Option<&Tokenizer>,
+    prompt: &[i32],
+    n_new: usize,
+) -> Result<SingleStreamReport> {
+    let t0 = Instant::now();
+    let kv_one = rt.prefill(prompt)?;
+    let mut arena = rt.new_arena(1)?;
+    arena = rt.inject(1, &arena, &kv_one, 0)?;
+    let prefill_s = t0.elapsed().as_secs_f64();
+
+    let arena_dims = rt.info.arena_shape(1);
+    let mut generated: Vec<i32> = Vec::with_capacity(n_new);
+    let mut detok_sink = 0usize; // prevent the detok work being optimised out
+
+    let first = argmax(&rt.read_logits(1, &arena, 0)?);
+    generated.push(first);
+    let t1 = Instant::now();
+    let mut pos = prompt.len() as i32;
+    while generated.len() < n_new {
+        let tok = *generated.last().unwrap();
+        arena = rt.decode(1, &[tok], &[pos], &arena)?;
+        pos += 1;
+
+        match comparator {
+            Comparator::Ours => {
+                let logits = rt.read_logits(1, &arena, 0)?;
+                generated.push(argmax(&logits));
+            }
+            Comparator::MlxLmSim | Comparator::VllmMetalSim => {
+                // Library/hybrid overhead model: full-vocab host softmax
+                // every step + full-output re-detokenisation (no
+                // incremental detok state).
+                let logits = rt.read_logits(1, &arena, 0)?;
+                let m = logits.iter().cloned().fold(f32::MIN, f32::max);
+                let exps: Vec<f32> = logits.iter().map(|l| (l - m).exp()).collect();
+                let sum: f32 = exps.iter().sum();
+                let probs: Vec<f32> = exps.iter().map(|e| e / sum).collect();
+                generated.push(argmax(&probs));
+                if let Some(t) = tokenizer {
+                    detok_sink += t.decode(&generated).len();
+                }
+            }
+            Comparator::LlamaCppSim => {
+                // Discrete-memory model: the KV state crosses the host
+                // boundary every step (to_literal + re-upload), the way a
+                // non-unified-memory backend ships KV between CPU prep
+                // and GPU compute.
+                let host = rt.to_host_f32(&arena)?;
+                arena = rt.upload_f32(&host, &arena_dims)?;
+                let logits = rt.read_logits(1, &arena, 0)?;
+                generated.push(argmax(&logits));
+                if let Some(t) = tokenizer {
+                    detok_sink += t.decode(&generated).len();
+                }
+            }
+        }
+    }
+    let decode_s = t1.elapsed().as_secs_f64();
+    std::hint::black_box(detok_sink);
+
+    Ok(SingleStreamReport {
+        comparator: comparator.name(),
+        model: rt.info.name.clone(),
+        prompt_tokens: prompt.len(),
+        new_tokens: n_new,
+        prefill_s,
+        decode_s,
+        tok_per_s: (n_new - 1) as f64 / decode_s,
+    })
+}
+
+/// vllm-metal-sim batched mode: continuous batching like ours, but the
+/// arena round-trips through the host on every composition change.
+/// Returns aggregate tok/s over `n_requests` closed-loop requests.
+pub fn vllm_metal_batched(
+    rt: &ModelRuntime,
+    n_requests: usize,
+    prompt: &[i32],
+    n_new: usize,
+) -> Result<f64> {
+    let bucket = rt
+        .info
+        .bucket_for(n_requests)
+        .ok_or_else(|| anyhow::anyhow!("no bucket for {n_requests}"))?;
+    let arena_dims = rt.info.arena_shape(bucket);
+    let mut arena = rt.new_arena(bucket)?;
+    let t0 = Instant::now();
+    let mut pos = vec![0i32; bucket];
+    let mut last = vec![0i32; bucket];
+    for slot in 0..n_requests {
+        let kv_one = rt.prefill(prompt)?;
+        arena = rt.inject(bucket, &arena, &kv_one, slot)?;
+        // Composition change -> hybrid host round-trip.
+        let host = rt.to_host_f32(&arena)?;
+        arena = rt.upload_f32(&host, &arena_dims)?;
+        pos[slot] = prompt.len() as i32;
+        last[slot] = argmax(&rt.read_logits(bucket, &arena, slot)?);
+    }
+    let mut produced = n_requests;
+    for _ in 1..n_new {
+        arena = rt.decode(bucket, &last, &pos, &arena)?;
+        for p in pos.iter_mut() {
+            *p += 1;
+        }
+        let all = rt.read_logits_all(bucket, &arena)?;
+        let v = rt.info.vocab;
+        for slot in 0..n_requests {
+            last[slot] = argmax(&all[slot * v..(slot + 1) * v]);
+        }
+        produced += n_requests;
+    }
+    Ok(produced as f64 / t0.elapsed().as_secs_f64())
+}

@@ -1,0 +1,140 @@
+//! Bench harness: timing, stats, workload generators, and the
+//! markdown-table printer that regenerates every paper table/figure.
+//!
+//! criterion is unavailable offline, so `cargo bench` drives these
+//! through `harness = false` bench binaries (`rust/benches/*.rs`), each
+//! of which prints the corresponding paper artifact.
+
+use std::time::Instant;
+
+/// Repeat a closure and report robust timing stats.
+pub fn time_n<F: FnMut() -> anyhow::Result<()>>(
+    iters: usize,
+    mut f: F,
+) -> anyhow::Result<TimingStats> {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f()?;
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(TimingStats::from_samples(samples))
+}
+
+#[derive(Debug, Clone)]
+pub struct TimingStats {
+    pub samples: Vec<f64>,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub p50_s: f64,
+}
+
+impl TimingStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        TimingStats {
+            mean_s: mean,
+            min_s: samples[0],
+            max_s: *samples.last().unwrap(),
+            p50_s: samples[samples.len() / 2],
+            samples,
+        }
+    }
+}
+
+/// Markdown table printer (the benches' output format; EXPERIMENTS.md
+/// embeds these verbatim).
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        println!("\n### {}\n", self.title);
+        println!("| {} |", self.headers.join(" | "));
+        println!("|{}|", self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            println!("| {} |", r.join(" | "));
+        }
+        println!();
+    }
+}
+
+/// Deterministic synthetic prompt of `len` tokens (ids in vocab range,
+/// avoiding specials).
+pub fn synth_prompt(seed: u64, len: usize, vocab: usize) -> Vec<i32> {
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+    let mut out = Vec::with_capacity(len);
+    out.push(1); // BOS
+    while out.len() < len {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        out.push((s % (vocab as u64 - 8) + 4) as i32);
+    }
+    out
+}
+
+pub fn fmt_f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+/// Shared bench environment banner (single-core CPU disclaimers etc.).
+pub fn banner(name: &str) {
+    println!("\n==================================================================");
+    println!("umserve bench: {name}");
+    println!("testbed: PJRT CPU (single-threaded), sim model zoo — ratios are");
+    println!("the comparable quantity, not absolute tok/s (DESIGN.md §2).");
+    println!("==================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = TimingStats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 3.0);
+        assert_eq!(s.p50_s, 2.0);
+        assert!((s.mean_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn synth_prompt_deterministic_and_valid() {
+        let a = synth_prompt(7, 32, 2048);
+        let b = synth_prompt(7, 32, 2048);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 32);
+        assert_eq!(a[0], 1);
+        // First token is BOS(=1); the rest are non-special vocab ids.
+        assert!(a.iter().skip(1).all(|&t| (4..2048).contains(&(t as usize))));
+        assert_ne!(a, synth_prompt(8, 32, 2048));
+    }
+
+    #[test]
+    fn table_shape_enforced() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+}

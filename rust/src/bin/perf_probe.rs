@@ -1,0 +1,39 @@
+//! §Perf profiling probe: per-entry wall times across buckets.
+use std::time::Instant;
+use umserve::runtime::{ArtifactStore, ModelRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "qwen3-0.6b".into());
+    let client = xla::PjRtClient::cpu()?;
+    let store = ArtifactStore::open("artifacts")?;
+    let rt = ModelRuntime::load(&client, &store, &model)?;
+    let buckets = rt.info.decode_buckets.clone();
+    for &b in &buckets {
+        let arena = rt.new_arena(b)?;
+        let tokens = vec![5i32; b];
+        let pos: Vec<i32> = (0..b).map(|i| 10 + i as i32).collect();
+        // warm (compile)
+        let mut a = rt.decode(b, &tokens, &pos, &arena)?;
+        let n = 30;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            a = rt.decode(b, &tokens, &pos, &a)?;
+        }
+        let decode_ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+        let t1 = Instant::now();
+        for _ in 0..n {
+            let _ = rt.read_logits_all(b, &a)?;
+        }
+        let read_ms = t1.elapsed().as_secs_f64() * 1e3 / n as f64;
+        // inject cost
+        let kv1 = rt.new_arena(1)?;
+        let t2 = Instant::now();
+        for _ in 0..n {
+            a = rt.inject(b, &a, &kv1, 0)?;
+        }
+        let inject_ms = t2.elapsed().as_secs_f64() * 1e3 / n as f64;
+        println!("{model} b{b}: decode {decode_ms:.2} ms/step ({:.2} ms/slot), read_logits {read_ms:.2} ms, inject {inject_ms:.2} ms",
+                 decode_ms / b as f64);
+    }
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! The paper's caching contributions.
+//!
+//! * [`text_prefix`] — Algorithm 2: SHA-256-keyed KV reuse for shared
+//!   prompt prefixes (system prompts, multi-turn histories).
+//! * [`mm`] — Algorithm 3: content-based multimodal prefix caching —
+//!   images are keyed by a SHA-256 over *decoded pixels* so the same
+//!   image hits regardless of transport (file, base64 data URL, raw),
+//!   caching both vision embeddings and KV state.
+//!
+//! Both caches sit on the byte-budgeted LRU substrate
+//! (`substrate::lru`), reproducing §3.3 "Memory Management".
+
+pub mod mm;
+pub mod text_prefix;
+
+use std::rc::Rc;
+
+use xla::PjRtBuffer;
+
+/// A cached prefilled KV state: the device-resident kv_one buffer plus
+/// the sequence length it encodes.  The mailbox plane still holds the
+/// last token's logits, so a full hit can sample its first token
+/// without touching the model.
+pub struct CachedKv {
+    pub kv_one: Rc<PjRtBuffer>,
+    pub len: usize,
+}
+
+impl CachedKv {
+    pub fn new(kv_one: PjRtBuffer, len: usize) -> Rc<Self> {
+        Rc::new(CachedKv { kv_one: Rc::new(kv_one), len })
+    }
+}
+
+/// Bytes held by one kv_one buffer for budget accounting.
+pub fn kv_one_bytes(info: &crate::runtime::ModelInfo) -> usize {
+    (info.n_layers + 1) * 2 * info.n_kv_heads * info.s_max * info.d_head * 4
+}

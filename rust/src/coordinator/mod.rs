@@ -1,0 +1,131 @@
+//! The serving coordinator: request/event types, engine configuration,
+//! and the continuous-batching scheduler (Algorithm 1).
+//!
+//! Threading model: the [`scheduler::Scheduler`] owns every PJRT object
+//! (client, weights, arenas) on a single thread; the HTTP handlers and
+//! example drivers talk to it through mpsc channels — `GenRequest` in,
+//! per-request `Event` streams out.  Python never appears anywhere on
+//! this path.
+
+pub mod scheduler;
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::engine::sampler::SamplingParams;
+use crate::multimodal::ImageSource;
+
+/// What the client asked us to generate from.
+#[derive(Debug, Clone)]
+pub enum PromptInput {
+    /// Plain text; tokenized with BOS.
+    Text(String),
+    /// Pre-tokenized ids (benches, tests).
+    Tokens(Vec<i32>),
+    /// Images (any transport) followed by text — the MLLM path.
+    Multimodal { images: Vec<ImageSource>, text: String },
+}
+
+/// One generation request as submitted to the scheduler.
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: PromptInput,
+    pub params: SamplingParams,
+    /// Event stream back to the submitter.
+    pub events: Sender<Event>,
+    pub enqueued_at: Instant,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// EOS sampled.
+    Stop,
+    /// Hit max_tokens.
+    Length,
+    /// Hit the KV arena limit (s_max).
+    ArenaFull,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Stop => "stop",
+            FinishReason::Length => "length",
+            FinishReason::ArenaFull => "length",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Usage {
+    pub prompt_tokens: usize,
+    pub completion_tokens: usize,
+}
+
+/// Request-level timing + cache attribution, reported on Done (the
+/// benches reconstruct every paper table from these).
+#[derive(Debug, Clone, Default)]
+pub struct Timing {
+    pub queue_ms: f64,
+    /// Time to first token (admission + prefill path).
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+    /// Vision encoder calls skipped via the embedding cache / total images.
+    pub vision_cached: usize,
+    pub vision_total: usize,
+    /// Vision-encode wall time actually spent (cold images).
+    pub vision_ms: f64,
+    /// Prompt tokens covered by a prefix-cache hit.
+    pub prefix_hit_tokens: usize,
+    /// Full KV hit (multimodal turn-2+ fast path).
+    pub kv_full_hit: bool,
+}
+
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// One generated token (already detokenized UTF-8-safely; `text` may
+    /// be empty while multi-byte sequences are pending).
+    Token { id: u64, token: i32, text: String },
+    Done { id: u64, finish: FinishReason, usage: Usage, timing: Timing },
+    Error { id: u64, message: String },
+}
+
+/// Scheduler / engine configuration (the config-system surface that the
+/// CLI and server expose).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub model: String,
+    pub artifacts_dir: String,
+    /// Text prefix cache budget (0 disables; paper default 512 MB).
+    pub text_cache_bytes: usize,
+    /// Multimodal embedding / KV cache budgets (0 disables).
+    pub mm_emb_cache_bytes: usize,
+    pub mm_kv_cache_bytes: usize,
+    /// Store finished sequences' KV for future prefix hits.
+    pub cache_finished: bool,
+    /// Allow shrinking the batch bucket when occupancy drops.
+    /// Default OFF: arena migrations cost O(arena) device work per live
+    /// sequence and the `ablation_scheduler` bench shows an aggressive
+    /// shrink policy thrashing under staggered arrivals (grow/shrink
+    /// oscillation).  Enable only for bursty workloads with long idle
+    /// tails where a large arena would otherwise slow single-stream
+    /// decode indefinitely.
+    pub allow_shrink: bool,
+    /// Warm up (pre-compile) common entries at startup.
+    pub warmup: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            model: "qwen3-0.6b".into(),
+            artifacts_dir: "artifacts".into(),
+            text_cache_bytes: 512 << 20,
+            mm_emb_cache_bytes: 256 << 20,
+            mm_kv_cache_bytes: 256 << 20,
+            cache_finished: true,
+            allow_shrink: false,
+            warmup: true,
+        }
+    }
+}

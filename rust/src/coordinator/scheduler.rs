@@ -1,0 +1,708 @@
+//! The continuous-batching scheduler — Algorithm 1, plus the
+//! cache-aware admission paths of Algorithms 2 and 3.
+//!
+//! ```text
+//! loop:
+//!   // Admit new requests at token boundaries
+//!   while |B| < M and Q != {}: B.add(Q.pop())         (admission runs
+//!       the cache-aware prefill pipeline and emits the first token)
+//!   // Generate one token for all active requests
+//!   for r in B: token_r = GenerateToken(r, KVCache[r])
+//!   // Remove completed requests immediately
+//!   for r in B where r.is_complete(): B.remove(r); yield r.output
+//! ```
+//!
+//! The scheduler owns all PJRT state on one thread; use
+//! [`Scheduler::spawn`] to get a channel-based handle, or construct one
+//! in-thread (benches) and call [`Scheduler::run_until_idle`].
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::mm::{mm_prompt_hash, MmCache, VisionEntry};
+use crate::cache::text_prefix::TextPrefixCache;
+use crate::cache::{kv_one_bytes, CachedKv};
+use crate::engine::sampler::{sample, Rng, SamplingParams};
+use crate::engine::tokenizer::{StreamDecoder, Tokenizer, EOS, IMG};
+use crate::engine::TextEngine;
+use crate::multimodal::image::DecodedImage;
+use crate::multimodal::vision::{patchify, snap_resolution};
+use crate::runtime::{ArtifactStore, ModelRuntime};
+use crate::substrate::hash::ContentHash;
+use crate::substrate::metrics::MetricsRegistry;
+
+use super::{EngineConfig, Event, FinishReason, GenRequest, PromptInput, Timing, Usage};
+
+/// Commands accepted by a spawned scheduler thread.
+pub enum Command {
+    Gen(GenRequest),
+    /// Snapshot metrics + cache stats.
+    Stats(Sender<StatsSnapshot>),
+    Shutdown,
+}
+
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub metrics: MetricsRegistry,
+    pub active: usize,
+    pub bucket: usize,
+    pub text_cache: (u64, u64, u64, usize),
+    pub mm_cache: crate::cache::mm::MmCacheStats,
+    pub decode_steps: u64,
+    pub occupancy_mean: f64,
+}
+
+struct ActiveReq {
+    events: Sender<Event>,
+    params: SamplingParams,
+    rng: Rng,
+    decoder: StreamDecoder,
+    /// prompt ++ tokens actually FED into the KV state.  Invariant: the
+    /// kv arena slot (and any kv_one extracted from it) encodes exactly
+    /// this sequence, and its mailbox holds the logits that follow it —
+    /// so this is the correct prefix-cache key on finish.
+    all_tokens: Vec<i32>,
+    prompt_len: usize,
+    /// Tokens emitted to the client (completion count).
+    emitted: usize,
+    /// Tokens fed into the KV state since admission.
+    fed: usize,
+    /// Image content hashes (multimodal requests only) — routes the
+    /// finished-sequence KV into the mm cache instead of the text cache.
+    mm_hashes: Option<Vec<ContentHash>>,
+    /// Sampled token to feed at the next step.
+    next_token: i32,
+    timing: Timing,
+    enqueued_at: Instant,
+}
+
+pub struct Scheduler {
+    pub engine: TextEngine,
+    pub tokenizer: Rc<Tokenizer>,
+    text_cache: TextPrefixCache,
+    mm_cache: MmCache,
+    cfg: EngineConfig,
+    active: HashMap<u64, ActiveReq>,
+    pub metrics: MetricsRegistry,
+}
+
+impl Scheduler {
+    /// Build in the current thread (PJRT objects are thread-bound).
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let store = ArtifactStore::open(&cfg.artifacts_dir)?;
+        let rt = ModelRuntime::load(&client, &store, &cfg.model)?;
+        let tokenizer = Rc::new(Tokenizer::from_file(store.tokenizer_path())?);
+        let kv_bytes = kv_one_bytes(&rt.info);
+        if cfg.warmup {
+            let first = *rt.info.decode_buckets.first().unwrap();
+            let pre = *rt.info.prefill_buckets.first().unwrap();
+            rt.warmup(&[
+                &format!("decode_b{first}"),
+                &format!("read_logits_b{first}"),
+                &format!("inject_b{first}"),
+                &format!("prefill_s{pre}"),
+            ])?;
+        }
+        let mm_cache = MmCache::new(cfg.mm_emb_cache_bytes.max(1), cfg.mm_kv_cache_bytes.max(1), kv_bytes);
+        let mut s = Scheduler {
+            engine: TextEngine::new(rt)?,
+            tokenizer,
+            text_cache: TextPrefixCache::new(cfg.text_cache_bytes.max(1), kv_bytes),
+            mm_cache,
+            cfg: cfg.clone(),
+            active: HashMap::new(),
+            metrics: MetricsRegistry::new(),
+        };
+        s.mm_cache.enable_emb = cfg.mm_emb_cache_bytes > 0;
+        s.mm_cache.enable_kv = cfg.mm_kv_cache_bytes > 0;
+        Ok(s)
+    }
+
+    /// Spawn on a dedicated thread; returns a cloneable handle.
+    pub fn spawn(cfg: EngineConfig) -> Result<SchedulerHandle> {
+        let (tx, rx) = channel::<Command>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("umserve-scheduler".into())
+            .spawn(move || match Scheduler::new(cfg) {
+                Ok(mut s) => {
+                    let _ = ready_tx.send(Ok(()));
+                    s.run(rx);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("scheduler thread died during init"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok(SchedulerHandle {
+            tx,
+            next_id: Arc::new(AtomicU64::new(1)),
+            join: Some(Arc::new(std::sync::Mutex::new(Some(join)))),
+        })
+    }
+
+    // ------------------------------------------------------------ loop
+
+    /// Serve until Shutdown.
+    pub fn run(&mut self, rx: Receiver<Command>) {
+        loop {
+            // Blocking wait only when idle; otherwise drain non-blocking.
+            if self.active.is_empty() {
+                match rx.recv_timeout(Duration::from_millis(200)) {
+                    Ok(Command::Gen(r)) => self.admit(r),
+                    Ok(Command::Stats(tx)) => {
+                        let _ = tx.send(self.snapshot());
+                    }
+                    Ok(Command::Shutdown) => return,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(_) => return,
+                }
+            }
+            // Token-boundary admission: fill the batch from the queue.
+            while self.active.len() < self.engine.max_capacity() {
+                match rx.try_recv() {
+                    Ok(Command::Gen(r)) => self.admit(r),
+                    Ok(Command::Stats(tx)) => {
+                        let _ = tx.send(self.snapshot());
+                    }
+                    Ok(Command::Shutdown) => return,
+                    Err(_) => break,
+                }
+            }
+            self.step_once();
+        }
+    }
+
+    /// Drive the loop until every active request finishes (bench mode).
+    pub fn run_until_idle(&mut self) {
+        while !self.active.is_empty() {
+            self.step_once();
+        }
+    }
+
+    /// Submit directly (in-thread use). Runs admission inline.
+    pub fn submit(&mut self, req: GenRequest) {
+        self.admit(req);
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let es = &self.engine.stats;
+        StatsSnapshot {
+            metrics: self.metrics.clone(),
+            active: self.active.len(),
+            bucket: self.engine.bucket(),
+            text_cache: self.text_cache.stats(),
+            mm_cache: self.mm_cache.stats(),
+            decode_steps: es.decode_steps,
+            occupancy_mean: if es.decode_steps > 0 {
+                es.occupancy_sum / es.decode_steps as f64
+            } else {
+                0.0
+            },
+        }
+    }
+
+    // ------------------------------------------------------- admission
+
+    fn admit(&mut self, req: GenRequest) {
+        let id = req.id;
+        let events = req.events.clone();
+        if let Err(e) = self.try_admit(req) {
+            self.metrics.inc("requests_failed", 1);
+            let _ = events.send(Event::Error { id, message: format!("{e:#}") });
+        }
+    }
+
+    fn try_admit(&mut self, req: GenRequest) -> Result<()> {
+        let t_admit = Instant::now();
+        let mut timing = Timing {
+            queue_ms: ms_since(req.enqueued_at, t_admit),
+            ..Default::default()
+        };
+        self.metrics.inc("requests_total", 1);
+
+        // ---- Resolve the prompt into (tokens, kv_one, first_logits) ----
+        let (tokens, kv, logits, mm_hashes) = match &req.prompt {
+            PromptInput::Text(t) => {
+                let toks = self.tokenizer.encode_prompt(t);
+                let (tk, kv, lg) = self.text_prefill(&toks, &mut timing)?;
+                (tk, kv, lg, None)
+            }
+            PromptInput::Tokens(toks) => {
+                let (tk, kv, lg) = self.text_prefill(toks, &mut timing)?;
+                (tk, kv, lg, None)
+            }
+            PromptInput::Multimodal { images, text } => {
+                let (tk, kv, lg, hashes) = self.mm_prefill(images, text, &mut timing)?;
+                (tk, kv, lg, Some(hashes))
+            }
+        };
+        let prompt_len = kv.len;
+
+        // ---- Sample the first token from the mailbox logits ----
+        let mut rng = Rng::new(req.params.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
+        let first = sample(&logits, &req.params, &mut rng);
+
+        // ---- Join the batch ----
+        self.engine.admit(req.id, &kv.kv_one, prompt_len)?;
+
+        let mut ar = ActiveReq {
+            events: req.events,
+            params: req.params,
+            rng,
+            decoder: StreamDecoder::new(),
+            all_tokens: tokens,
+            prompt_len,
+            emitted: 0,
+            fed: 0,
+            next_token: first,
+            mm_hashes,
+            timing,
+            enqueued_at: req.enqueued_at,
+        };
+        ar.timing.ttft_ms = ms_since(req.enqueued_at, Instant::now());
+        self.metrics.observe_ms("ttft", ar.timing.ttft_ms);
+        self.metrics
+            .observe_ms("queue_wait", ar.timing.queue_ms);
+
+        // Emit (or terminate on) the first token.
+        let id = req.id;
+        if let Some(finish) = self.emit_token(id, &mut ar, first) {
+            // Finished on the very first token: remove from engine.
+            self.active.insert(id, ar);
+            self.finish(id, finish);
+        } else {
+            self.active.insert(id, ar);
+        }
+        self.metrics
+            .set_gauge("active_requests", self.active.len() as f64);
+        Ok(())
+    }
+
+    /// Text path: Algorithm 2 lookup, then full prefill / partial
+    /// catch-up / straight cache reuse.
+    fn text_prefill(
+        &mut self,
+        tokens: &[i32],
+        timing: &mut Timing,
+    ) -> Result<(Vec<i32>, Rc<CachedKv>, Vec<f32>)> {
+        if tokens.is_empty() {
+            return Err(anyhow!("empty prompt"));
+        }
+        let max_prompt = *self
+            .engine
+            .rt
+            .info
+            .prefill_buckets
+            .last()
+            .unwrap_or(&self.engine.rt.info.s_max);
+        if tokens.len() > max_prompt {
+            return Err(anyhow!("prompt of {} tokens exceeds max {max_prompt}", tokens.len()));
+        }
+
+        if self.cfg.text_cache_bytes > 0 {
+            if let Some(hit) = self.text_cache.lookup(tokens) {
+                timing.prefix_hit_tokens = hit.matched;
+                self.metrics.inc("text_prefix_hits", 1);
+                if hit.full {
+                    self.metrics.inc("text_prefix_full_hits", 1);
+                    timing.kv_full_hit = true;
+                    let logits = self.engine.rt.read_logits(1, &hit.kv.kv_one, 0)?;
+                    return Ok((tokens.to_vec(), hit.kv, logits));
+                }
+                // Partial hit: resume from the cached state and catch up
+                // the remaining suffix with single-slot decode steps.
+                let (kv, logits) = self.catch_up(&hit.kv, &tokens[hit.matched..])?;
+                let kv = CachedKv::new_rc(kv, tokens.len());
+                if self.cfg.cache_finished {
+                    self.text_cache.insert(tokens, kv.clone());
+                }
+                return Ok((tokens.to_vec(), kv, logits));
+            }
+            self.metrics.inc("text_prefix_misses", 1);
+        }
+
+        let t0 = Instant::now();
+        let kv_one = self.engine.prefill(tokens)?;
+        self.metrics.observe_ms("prefill", ms_since(t0, Instant::now()));
+        let logits = self.engine.rt.read_logits(1, &kv_one, 0)?;
+        let kv = CachedKv::new_rc(kv_one, tokens.len());
+        if self.cfg.text_cache_bytes > 0 && self.cfg.cache_finished {
+            self.text_cache.insert(tokens, kv.clone());
+        }
+        Ok((tokens.to_vec(), kv, logits))
+    }
+
+    /// Feed `suffix` tokens through bucket-1 decode steps starting from
+    /// a cached state; returns the extended kv_one and the last logits.
+    fn catch_up(
+        &mut self,
+        from: &CachedKv,
+        suffix: &[i32],
+    ) -> Result<(xla::PjRtBuffer, Vec<f32>)> {
+        let rt = &self.engine.rt;
+        let mut arena = rt.new_arena(1)?;
+        arena = rt.inject(1, &arena, &from.kv_one, 0)?;
+        let mut pos = from.len as i32;
+        for &t in suffix {
+            arena = rt.decode(1, &[t], &[pos], &arena)?;
+            pos += 1;
+        }
+        let logits = rt.read_logits(1, &arena, 0)?;
+        let kv_one = rt.extract(1, &arena, 0)?;
+        self.metrics.inc("catch_up_tokens", suffix.len() as u64);
+        Ok((kv_one, logits))
+    }
+
+    /// Multimodal path: Algorithm 3 — per-image content hashing with
+    /// embedding reuse, then KV-state reuse over (images ++ text).
+    fn mm_prefill(
+        &mut self,
+        images: &[crate::multimodal::ImageSource],
+        text: &str,
+        timing: &mut Timing,
+    ) -> Result<(Vec<i32>, Rc<CachedKv>, Vec<f32>, Vec<ContentHash>)> {
+        let info = self.engine.rt.info.clone();
+        let vinfo = info
+            .vision
+            .clone()
+            .ok_or_else(|| anyhow!("model {} is text-only; multimodal request rejected", info.name))?;
+
+        // 1. Decode pixels + content-hash every image (format-independent).
+        let decoded: Vec<DecodedImage> = images
+            .iter()
+            .map(|s| s.decode())
+            .collect::<Result<Vec<_>>>()?;
+        let hashes: Vec<ContentHash> = decoded.iter().map(|d| d.content_hash()).collect();
+        timing.vision_total = decoded.len();
+
+        // Text tokens: <img> placeholder per image, then BOS + text.
+        let mut text_tokens: Vec<i32> = vec![IMG; decoded.len()];
+        text_tokens.push(crate::engine::tokenizer::BOS);
+        text_tokens.extend(self.tokenizer.encode(text));
+
+        // 2. Full-prompt KV hit?  With the embedding cache enabled this
+        // skips encoder AND prompt processing.  With it disabled (Table 4
+        // "KV only"), the KV entry must be validated against freshly
+        // computed embeddings (LMCache-style), so the encoder still runs
+        // and only prompt processing is skipped — falls through below.
+        let kv_key = mm_prompt_hash(&hashes, &text_tokens);
+        let kv_hit = self.mm_cache.get_kv(&kv_key);
+        if let Some(kv) = &kv_hit {
+            self.metrics.inc("mm_kv_hits", 1);
+            timing.kv_full_hit = true;
+            if self.mm_cache.enable_emb {
+                timing.vision_cached = decoded.len();
+                let logits = self.engine.rt.read_logits(1, &kv.kv_one, 0)?;
+                return Ok((text_tokens, kv.clone(), logits, hashes));
+            }
+        } else {
+            self.metrics.inc("mm_kv_misses", 1);
+        }
+
+        // 3. Vision embeddings: cache per image, encode misses.
+        let mut vis_embeds: Vec<f32> = Vec::new();
+        let mut n_vis_tokens = 0usize;
+        for (img, h) in decoded.iter().zip(&hashes) {
+            let entry = match self.mm_cache.get_embeddings(h) {
+                Some(e) => {
+                    timing.vision_cached += 1;
+                    self.metrics.inc("mm_emb_hits", 1);
+                    e
+                }
+                None => {
+                    self.metrics.inc("mm_emb_misses", 1);
+                    let t0 = Instant::now();
+                    let res = snap_resolution(&vinfo, img);
+                    let snapped = img.resize(res, res);
+                    let patches = patchify(&vinfo, &snapped, res)?;
+                    let buf = self.engine.rt.vision_encode(res, patches)?;
+                    let embeds = self.engine.rt.to_host_f32(&buf)?;
+                    let n_tokens = vinfo.n_visual_tokens[&res];
+                    let dt = ms_since(t0, Instant::now());
+                    timing.vision_ms += dt;
+                    self.metrics.observe_ms("vision_encode", dt);
+                    self.mm_cache.put_embeddings(
+                        *h,
+                        VisionEntry { embeds, n_tokens, resolution: res },
+                    )
+                }
+            };
+            vis_embeds.extend_from_slice(&entry.embeds);
+            n_vis_tokens += entry.n_tokens;
+        }
+
+        // 3b. Temporal pooling: if the visual sequence would overflow the
+        // embed-prefill buckets, average-pool adjacent visual tokens 2:1
+        // until it fits (video-frame sequences; Qwen-VL-style merge).
+        let max_embed = *info.embed_prefill_buckets.last().unwrap();
+        let d = info.d_model;
+        while n_vis_tokens + text_tokens.len() > max_embed && n_vis_tokens >= 2 {
+            let half = n_vis_tokens / 2;
+            let mut pooled = vec![0f32; half * d];
+            for i in 0..half {
+                for j in 0..d {
+                    pooled[i * d + j] =
+                        0.5 * (vis_embeds[2 * i * d + j] + vis_embeds[(2 * i + 1) * d + j]);
+                }
+            }
+            vis_embeds = pooled;
+            n_vis_tokens = half;
+            self.metrics.inc("mm_temporal_pools", 1);
+        }
+
+        // 3c. KV-only fast path: embeddings were (re)computed above for
+        // validation; prompt processing is still skipped.
+        if let Some(kv) = kv_hit {
+            let logits = self.engine.rt.read_logits(1, &kv.kv_one, 0)?;
+            return Ok((text_tokens, kv, logits, hashes));
+        }
+
+        // 4. Compose [vision ++ text] embeddings and prefill.
+        let text_rows = self.engine.rt.embed_lookup(&text_tokens)?;
+        let mut embeds = vis_embeds;
+        embeds.extend_from_slice(&text_rows);
+        let total_len = n_vis_tokens + text_tokens.len();
+        let t0 = Instant::now();
+        let kv_one = self.engine.rt.prefill_embeds(&embeds, total_len)?;
+        self.metrics.observe_ms("prefill", ms_since(t0, Instant::now()));
+        let logits = self.engine.rt.read_logits(1, &kv_one, 0)?;
+        let kv = CachedKv::new_rc(kv_one, total_len);
+        self.mm_cache.put_kv(kv_key, kv.clone());
+        Ok((text_tokens, kv, logits, hashes))
+    }
+
+    // ------------------------------------------------------- stepping
+
+    /// One iteration of the Algorithm-1 inner loop.
+    pub fn step_once(&mut self) {
+        if self.active.is_empty() {
+            return;
+        }
+        let next: HashMap<u64, i32> = self
+            .active
+            .iter()
+            .map(|(&id, a)| (id, a.next_token))
+            .collect();
+        let t0 = Instant::now();
+        let results = match self.engine.step(&next) {
+            Ok(r) => r,
+            Err(e) => {
+                // Fatal engine error: fail all active requests.
+                for (id, a) in self.active.drain() {
+                    let _ = a.events.send(Event::Error { id, message: format!("{e:#}") });
+                }
+                return;
+            }
+        };
+        self.metrics.observe_ms("decode_step", ms_since(t0, Instant::now()));
+
+        let mut finished: Vec<(u64, FinishReason)> = Vec::new();
+        for (id, logits) in results {
+            let a = self.active.get_mut(&id).unwrap();
+            let tok = sample(&logits, &a.params, &mut a.rng);
+            // The step FED a.next_token into the KV; record it.
+            a.all_tokens.push(a.next_token);
+            a.fed += 1;
+            a.next_token = tok;
+            let arena_limit =
+                self.engine.seq(id).map(|s| s.pos as usize + 1 >= self.engine.rt.info.s_max - 1);
+            let mut fin: Option<FinishReason> = None;
+            if a.params.stop_on_eos && tok == EOS {
+                fin = Some(FinishReason::Stop);
+            } else if a.emitted + 1 >= a.params.max_tokens {
+                fin = Some(FinishReason::Length);
+            } else if arena_limit == Some(true) {
+                fin = Some(FinishReason::ArenaFull);
+            }
+            if fin != Some(FinishReason::Stop) {
+                // Emit the newly sampled token.  On Length/ArenaFull this
+                // is the final token: emitted but never fed into KV.
+                let text = a.decoder.push(&self.tokenizer, tok);
+                a.emitted += 1;
+                self.metrics.inc("tokens_generated", 1);
+                let _ = a.events.send(Event::Token { id, token: tok, text });
+            }
+            if let Some(f) = fin {
+                finished.push((id, f));
+            }
+        }
+        for (id, f) in finished {
+            self.finish(id, f);
+        }
+        // Shrink with 4x hysteresis: migrations cost O(arena) device work
+        // per live sequence, so only shrink when occupancy is far below
+        // the bucket (the ablation_scheduler bench quantifies the thrash
+        // cost of an aggressive 2x policy — see EXPERIMENTS.md §Perf).
+        if self.cfg.allow_shrink
+            && self.engine.bucket() >= 4
+            && self.active.len() * 4 <= self.engine.bucket()
+        {
+            let _ = self.engine.maybe_shrink();
+        }
+        self.metrics
+            .set_gauge("active_requests", self.active.len() as f64);
+    }
+
+    /// Emit the first token at admission; returns Some(reason) if the
+    /// request is already complete.
+    fn emit_token(&mut self, id: u64, a: &mut ActiveReq, tok: i32) -> Option<FinishReason> {
+        if a.params.stop_on_eos && tok == EOS {
+            return Some(FinishReason::Stop);
+        }
+        let text = a.decoder.push(&self.tokenizer, tok);
+        a.emitted += 1;
+        self.metrics.inc("tokens_generated", 1);
+        let _ = a.events.send(Event::Token { id, token: tok, text });
+        if a.params.max_tokens <= 1 {
+            return Some(FinishReason::Length);
+        }
+        None
+    }
+
+    fn finish(&mut self, id: u64, reason: FinishReason) {
+        let Some(mut a) = self.active.remove(&id) else { return };
+        // Engine removal (it may not be present if first-token finished
+        // before any step — admit() inserted it, so it is).
+        let cache_it = self.cfg.cache_finished && self.cfg.text_cache_bytes > 0;
+        match self.engine.remove(id, cache_it) {
+            Ok(Some(kv_one)) => {
+                // Invariant: the KV encodes exactly the prompt plus every
+                // FED token; a.all_tokens is that sequence (token-id view)
+                // and is therefore the cache key.
+                let kv_len = a.prompt_len + a.fed;
+                match &a.mm_hashes {
+                    // Multimodal: key (image hashes ++ token ids) in the
+                    // mm KV cache — repeated queries over the same images
+                    // become decode-only (Table 2 turn 3+).
+                    Some(hashes) => {
+                        let key = mm_prompt_hash(hashes, &a.all_tokens);
+                        self.mm_cache.put_kv(key, CachedKv::new(kv_one, kv_len));
+                    }
+                    None => {
+                        self.text_cache
+                            .insert(&a.all_tokens, CachedKv::new_rc(kv_one, kv_len));
+                    }
+                }
+            }
+            Ok(None) => {}
+            Err(e) => {
+                let _ = a.events.send(Event::Error { id, message: format!("{e:#}") });
+                return;
+            }
+        }
+        a.timing.total_ms = ms_since(a.enqueued_at, Instant::now());
+        self.metrics.observe_ms("request_total", a.timing.total_ms);
+        self.metrics.inc("requests_completed", 1);
+        // Flush any pending UTF-8 bytes.
+        let tail = a.decoder.flush();
+        if !tail.is_empty() {
+            let _ = a.events.send(Event::Token { id, token: -1, text: tail });
+        }
+        let _ = a.events.send(Event::Done {
+            id,
+            finish: reason,
+            usage: Usage { prompt_tokens: a.prompt_len, completion_tokens: a.emitted },
+            timing: a.timing.clone(),
+        });
+    }
+}
+
+fn ms_since(a: Instant, b: Instant) -> f64 {
+    b.duration_since(a).as_secs_f64() * 1e3
+}
+
+impl CachedKv {
+    fn new_rc(kv_one: xla::PjRtBuffer, len: usize) -> Rc<Self> {
+        CachedKv::new(kv_one, len)
+    }
+}
+
+// ---------------------------------------------------------------- handle
+
+/// Cloneable cross-thread handle to a spawned scheduler.
+#[derive(Clone)]
+pub struct SchedulerHandle {
+    tx: Sender<Command>,
+    next_id: Arc<AtomicU64>,
+    join: Option<Arc<std::sync::Mutex<Option<std::thread::JoinHandle<()>>>>>,
+}
+
+impl SchedulerHandle {
+    pub fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit a generation request; events arrive on the returned channel.
+    pub fn generate(
+        &self,
+        prompt: PromptInput,
+        params: SamplingParams,
+    ) -> Result<(u64, Receiver<Event>)> {
+        let id = self.fresh_id();
+        let (etx, erx) = channel();
+        self.tx
+            .send(Command::Gen(GenRequest {
+                id,
+                prompt,
+                params,
+                events: etx,
+                enqueued_at: Instant::now(),
+            }))
+            .map_err(|_| anyhow!("scheduler is gone"))?;
+        Ok((id, erx))
+    }
+
+    /// Submit with a caller-provided event channel (server streaming).
+    pub fn generate_with(
+        &self,
+        prompt: PromptInput,
+        params: SamplingParams,
+        events: Sender<Event>,
+    ) -> Result<u64> {
+        let id = self.fresh_id();
+        self.tx
+            .send(Command::Gen(GenRequest {
+                id,
+                prompt,
+                params,
+                events,
+                enqueued_at: Instant::now(),
+            }))
+            .map_err(|_| anyhow!("scheduler is gone"))?;
+        Ok(id)
+    }
+
+    pub fn stats(&self) -> Result<StatsSnapshot> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Command::Stats(tx))
+            .map_err(|_| anyhow!("scheduler is gone"))?;
+        rx.recv().map_err(|_| anyhow!("scheduler is gone"))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(j) = &self.join {
+            if let Ok(mut g) = j.lock() {
+                if let Some(h) = g.take() {
+                    let _ = h.join();
+                }
+            }
+        }
+    }
+}

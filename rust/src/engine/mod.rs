@@ -1,0 +1,233 @@
+//! The text inference engine: batched decode over a device-resident KV
+//! slot arena.
+//!
+//! This is the "ours" execution backend (Table 1): device-resident
+//! arenas threaded between executables with `execute_b` (the
+//! unified-memory zero-copy analog), bucketed batch executables, and
+//! slot-level admission/eviction so requests join and leave at token
+//! boundaries (Algorithm 1's mechanics — the *policy* lives in
+//! `coordinator::scheduler`).
+//!
+//! Slot arena lifecycle:
+//!
+//! ```text
+//! prefill(prompt) ──► kv_one ──inject──► arena slot i
+//!                                          │ decode (all slots, 1 token)
+//!                                          ▼
+//!                                   read_logits_all ──► sampler
+//! finished slot ──extract──► kv_one (stored by the prefix cache)
+//! grow/shrink: extract each live slot ──► new bucket arena ──► inject
+//! ```
+
+pub mod sampler;
+pub mod tokenizer;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+use xla::PjRtBuffer;
+
+use crate::runtime::ModelRuntime;
+
+/// Per-sequence engine state.
+#[derive(Debug, Clone)]
+pub struct SeqState {
+    pub slot: usize,
+    /// Next KV write position == current sequence length.
+    pub pos: i32,
+}
+
+/// Engine statistics for /metrics and the benches.
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub decode_steps: u64,
+    pub decode_slot_steps: u64,
+    pub prefills: u64,
+    pub injects: u64,
+    pub extracts: u64,
+    pub migrations: u64,
+    /// Sum over steps of occupied/bucket (batch efficiency numerator).
+    pub occupancy_sum: f64,
+}
+
+pub struct TextEngine {
+    pub rt: ModelRuntime,
+    bucket: usize,
+    arena: PjRtBuffer,
+    slots: Vec<Option<u64>>,
+    seqs: HashMap<u64, SeqState>,
+    pub stats: EngineStats,
+}
+
+impl TextEngine {
+    pub fn new(rt: ModelRuntime) -> Result<Self> {
+        let bucket = *rt
+            .info
+            .decode_buckets
+            .first()
+            .ok_or_else(|| anyhow!("no decode buckets"))?;
+        let arena = rt.new_arena(bucket)?;
+        Ok(TextEngine {
+            rt,
+            bucket,
+            arena,
+            slots: vec![None; bucket],
+            seqs: HashMap::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    pub fn active(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn max_capacity(&self) -> usize {
+        *self.rt.info.decode_buckets.last().unwrap()
+    }
+
+    pub fn seq(&self, id: u64) -> Option<&SeqState> {
+        self.seqs.get(&id)
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.seqs.contains_key(&id)
+    }
+
+    /// Run prompt processing and return the kv_one buffer (device).
+    pub fn prefill(&mut self, tokens: &[i32]) -> Result<PjRtBuffer> {
+        self.stats.prefills += 1;
+        self.rt.prefill(tokens)
+    }
+
+    /// Logits stored in a kv_one's mailbox (post-prefill first token).
+    pub fn kv_one_logits(&self, kv_one: &PjRtBuffer) -> Result<Vec<f32>> {
+        self.rt.read_logits(1, kv_one, 0)
+    }
+
+    /// Admit a prefilled sequence: grow the arena if needed, inject into
+    /// a free slot.  `len` is the sequence length captured in `kv_one`.
+    pub fn admit(&mut self, id: u64, kv_one: &PjRtBuffer, len: usize) -> Result<()> {
+        if self.seqs.contains_key(&id) {
+            bail!("sequence {id} already admitted");
+        }
+        if len + 1 >= self.rt.info.s_max {
+            bail!("sequence of length {len} cannot fit arena (s_max {})", self.rt.info.s_max);
+        }
+        self.ensure_capacity(self.seqs.len() + 1)?;
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .expect("ensure_capacity guarantees a free slot");
+        self.arena = self.rt.inject(self.bucket, &self.arena, kv_one, slot)?;
+        self.stats.injects += 1;
+        self.slots[slot] = Some(id);
+        self.seqs.insert(id, SeqState { slot, pos: len as i32 });
+        Ok(())
+    }
+
+    /// Remove a sequence.  If `extract_kv` is set, returns its kv_one
+    /// (for the prefix cache to keep); otherwise the slot is just freed.
+    pub fn remove(&mut self, id: u64, extract_kv: bool) -> Result<Option<PjRtBuffer>> {
+        let st = self
+            .seqs
+            .remove(&id)
+            .ok_or_else(|| anyhow!("sequence {id} not active"))?;
+        self.slots[st.slot] = None;
+        if extract_kv {
+            let kv = self.rt.extract(self.bucket, &self.arena, st.slot)?;
+            self.stats.extracts += 1;
+            Ok(Some(kv))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// One batched decode step.  `next_tokens` maps sequence id -> the
+    /// token to feed (the previously sampled one).  Every active
+    /// sequence must be present.  Returns (id, logits) pairs.
+    pub fn step(&mut self, next_tokens: &HashMap<u64, i32>) -> Result<Vec<(u64, Vec<f32>)>> {
+        if self.seqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut tokens = vec![0i32; self.bucket];
+        let mut pos = vec![0i32; self.bucket];
+        for (&id, st) in &self.seqs {
+            let t = next_tokens
+                .get(&id)
+                .ok_or_else(|| anyhow!("no next token for active sequence {id}"))?;
+            if st.pos as usize + 1 >= self.rt.info.s_max {
+                bail!("sequence {id} overflows the KV arena");
+            }
+            tokens[st.slot] = *t;
+            pos[st.slot] = st.pos;
+        }
+        self.arena = self.rt.decode(self.bucket, &tokens, &pos, &self.arena)?;
+        self.stats.decode_steps += 1;
+        self.stats.decode_slot_steps += self.seqs.len() as u64;
+        self.stats.occupancy_sum += self.seqs.len() as f64 / self.bucket as f64;
+
+        let all = self.rt.read_logits_all(self.bucket, &self.arena)?;
+        let v = self.rt.info.vocab;
+        let mut out = Vec::with_capacity(self.seqs.len());
+        for (&id, st) in &mut self.seqs {
+            st.pos += 1;
+            out.push((id, all[st.slot * v..(st.slot + 1) * v].to_vec()));
+        }
+        Ok(out)
+    }
+
+    /// Grow (or keep) the arena so `n` sequences fit.  Live slots are
+    /// migrated device-side (extract from the old arena, inject into the
+    /// new) — no host copies.
+    pub fn ensure_capacity(&mut self, n: usize) -> Result<()> {
+        if n <= self.bucket {
+            return Ok(());
+        }
+        let new_bucket = self
+            .rt
+            .info
+            .bucket_for(n)
+            .ok_or_else(|| anyhow!("{n} sequences exceed the largest bucket"))?;
+        self.migrate(new_bucket)
+    }
+
+    /// Shrink to the smallest bucket that still fits the active set
+    /// (called by the scheduler when occupancy drops).  No-op if already
+    /// minimal.
+    pub fn maybe_shrink(&mut self) -> Result<bool> {
+        let needed = self.rt.info.bucket_for(self.seqs.len().max(1)).unwrap();
+        if needed < self.bucket {
+            self.migrate(needed)?;
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
+    fn migrate(&mut self, new_bucket: usize) -> Result<()> {
+        let mut new_arena = self.rt.new_arena(new_bucket)?;
+        let mut new_slots: Vec<Option<u64>> = vec![None; new_bucket];
+        let mut moved: Vec<(u64, usize)> = Vec::new();
+        for (new_slot, (&id, st)) in self.seqs.iter().enumerate() {
+            let kv = self.rt.extract(self.bucket, &self.arena, st.slot)?;
+            self.stats.extracts += 1;
+            new_arena = self.rt.inject(new_bucket, &new_arena, &kv, new_slot)?;
+            self.stats.injects += 1;
+            new_slots[new_slot] = Some(id);
+            moved.push((id, new_slot));
+        }
+        for (id, new_slot) in moved {
+            self.seqs.get_mut(&id).unwrap().slot = new_slot;
+        }
+        self.arena = new_arena;
+        self.slots = new_slots;
+        self.bucket = new_bucket;
+        self.stats.migrations += 1;
+        Ok(())
+    }
+}

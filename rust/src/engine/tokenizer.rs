@@ -1,0 +1,343 @@
+//! Byte-level BPE tokenizer + incremental UTF-8-safe detokenizer.
+//!
+//! The merge table is trained at build time (`python/compile/
+//! tokenizer_train.py`) and shipped in `artifacts/tokenizer.json`.
+//! Vocabulary layout:
+//!
+//! ```text
+//! 0..3    specials: <pad>=0 <bos>=1 <eos>=2 <img>=3
+//! 4..259  raw bytes
+//! 260..   merge tokens (id = 260 + merge rank)
+//! ```
+//!
+//! The streaming detokenizer reproduces the paper's §3.2 "Streaming":
+//! token boundaries do not align with UTF-8 codepoint boundaries (byte
+//! BPE can split an emoji across tokens), so decoded bytes are buffered
+//! until they form complete codepoints and only then surfaced.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::substrate::json::parse;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const IMG: i32 = 3;
+pub const N_SPECIAL: i32 = 4;
+const BYTE_BASE: i32 = N_SPECIAL;
+const MERGE_BASE: i32 = N_SPECIAL + 256;
+
+pub struct Tokenizer {
+    /// merges[rank] = (left id, right id); token id = MERGE_BASE + rank.
+    /// Kept for introspection (`merge_count`).
+    merges: Vec<(i32, i32)>,
+    /// (left, right) -> rank, for the encoder.
+    rank: HashMap<(i32, i32), u32>,
+    /// Expanded byte strings per merge token (decode fast path).
+    expansions: Vec<Vec<u8>>,
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let root = parse(text).context("tokenizer.json")?;
+        let vocab_size = root
+            .get("vocab_size")
+            .and_then(|j| j.as_usize())
+            .ok_or_else(|| anyhow!("tokenizer: missing vocab_size"))?;
+        let merges_json = root
+            .get("merges")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| anyhow!("tokenizer: missing merges"))?;
+        let mut merges = Vec::with_capacity(merges_json.len());
+        for m in merges_json {
+            let pair = m.as_arr().ok_or_else(|| anyhow!("merge must be a pair"))?;
+            if pair.len() != 2 {
+                bail!("merge must be a pair");
+            }
+            let a = pair[0].as_i64().ok_or_else(|| anyhow!("merge id"))? as i32;
+            let b = pair[1].as_i64().ok_or_else(|| anyhow!("merge id"))? as i32;
+            merges.push((a, b));
+        }
+        Self::new(merges, vocab_size)
+    }
+
+    pub fn new(merges: Vec<(i32, i32)>, vocab_size: usize) -> Result<Self> {
+        let mut rank = HashMap::with_capacity(merges.len());
+        let mut expansions: Vec<Vec<u8>> = Vec::with_capacity(merges.len());
+        for (r, &(a, b)) in merges.iter().enumerate() {
+            let tok = MERGE_BASE + r as i32;
+            if a >= tok || b >= tok || a < BYTE_BASE || b < BYTE_BASE {
+                bail!("merge {r} references invalid ids ({a},{b})");
+            }
+            let mut bytes = Vec::new();
+            for id in [a, b] {
+                if id < MERGE_BASE {
+                    bytes.push((id - BYTE_BASE) as u8);
+                } else {
+                    bytes.extend_from_slice(&expansions[(id - MERGE_BASE) as usize]);
+                }
+            }
+            expansions.push(bytes);
+            rank.insert((a, b), r as u32);
+        }
+        Ok(Tokenizer { merges, rank, expansions, vocab_size })
+    }
+
+    /// Number of learned merges.
+    pub fn merge_count(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Encode text to token ids (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::new();
+        for word in split_keep_spaces(text) {
+            let mut seq: Vec<i32> = word.bytes().map(|b| BYTE_BASE + b as i32).collect();
+            // Rank-greedy merging (GPT-2 style).
+            loop {
+                let mut best: Option<(usize, u32)> = None;
+                for i in 0..seq.len().saturating_sub(1) {
+                    if let Some(&r) = self.rank.get(&(seq[i], seq[i + 1])) {
+                        if best.map_or(true, |(_, br)| r < br) {
+                            best = Some((i, r));
+                        }
+                    }
+                }
+                match best {
+                    Some((i, r)) => {
+                        seq[i] = MERGE_BASE + r as i32;
+                        seq.remove(i + 1);
+                    }
+                    None => break,
+                }
+            }
+            out.extend(seq);
+        }
+        out
+    }
+
+    /// Encode with BOS prepended (prompt convention).
+    pub fn encode_prompt(&self, text: &str) -> Vec<i32> {
+        let mut v = vec![BOS];
+        v.extend(self.encode(text));
+        v
+    }
+
+    /// Raw bytes for one token (empty for specials).
+    pub fn token_bytes(&self, id: i32) -> &[u8] {
+        const EMPTY: &[u8] = &[];
+        if id < BYTE_BASE {
+            EMPTY
+        } else if id < MERGE_BASE {
+            // Single byte: serve from a static table.
+            static BYTES: [u8; 256] = {
+                let mut b = [0u8; 256];
+                let mut i = 0;
+                while i < 256 {
+                    b[i] = i as u8;
+                    i += 1;
+                }
+                b
+            };
+            std::slice::from_ref(&BYTES[(id - BYTE_BASE) as usize])
+        } else if ((id - MERGE_BASE) as usize) < self.expansions.len() {
+            &self.expansions[(id - MERGE_BASE) as usize]
+        } else {
+            EMPTY
+        }
+    }
+
+    /// One-shot decode (lossy on invalid UTF-8, like the python oracle).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            bytes.extend_from_slice(self.token_bytes(id));
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// Pre-tokenization: split into words, runs of whitespace attach to the
+/// following word (mirrors `tokenizer_train._split_keep_spaces`).
+fn split_keep_spaces(text: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars() {
+        if ch.is_whitespace() {
+            if !cur.is_empty() && !cur.chars().last().unwrap().is_whitespace() {
+                parts.push(std::mem::take(&mut cur));
+            }
+            cur.push(ch);
+        } else {
+            cur.push(ch);
+        }
+    }
+    if !cur.is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+/// Streaming detokenizer: feed tokens, emit only complete UTF-8.
+///
+/// Holds back bytes that could be a codepoint prefix; `flush` surfaces
+/// whatever remains (replacement chars for truncated sequences).
+#[derive(Default)]
+pub struct StreamDecoder {
+    pending: Vec<u8>,
+}
+
+impl StreamDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, tok: &Tokenizer, id: i32) -> String {
+        self.pending.extend_from_slice(tok.token_bytes(id));
+        self.drain_complete()
+    }
+
+    fn drain_complete(&mut self) -> String {
+        // Find the longest prefix that is valid, complete UTF-8.
+        match std::str::from_utf8(&self.pending) {
+            Ok(s) => {
+                let out = s.to_string();
+                self.pending.clear();
+                out
+            }
+            Err(e) => {
+                let valid = e.valid_up_to();
+                match e.error_len() {
+                    // Invalid bytes mid-stream: emit replacement and skip.
+                    Some(n) => {
+                        let mut out =
+                            String::from_utf8_lossy(&self.pending[..valid + n]).into_owned();
+                        self.pending.drain(..valid + n);
+                        // Recurse in case more complete text follows.
+                        out.push_str(&self.drain_complete());
+                        out
+                    }
+                    // Truncated sequence at the end: hold it back.
+                    None => {
+                        let out = String::from_utf8_lossy(&self.pending[..valid]).into_owned();
+                        self.pending.drain(..valid);
+                        out
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn flush(&mut self) -> String {
+        let out = String::from_utf8_lossy(&self.pending).into_owned();
+        self.pending.clear();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn real_tokenizer() -> Tokenizer {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Tokenizer::from_file(dir.join("tokenizer.json")).expect("run `make artifacts`")
+    }
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = real_tokenizer();
+        for s in ["hello world", "The quick brown fox", "a", "", "  spaced   out  "] {
+            assert_eq!(t.decode(&t.encode(s)), s, "roundtrip failed for {s:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_multibyte() {
+        let t = real_tokenizer();
+        for s in ["héllo wörld", "日本語のテスト", "emoji 😀🎉 mix", "Ärger — dash"] {
+            assert_eq!(t.decode(&t.encode(s)), s);
+        }
+    }
+
+    #[test]
+    fn merges_compress() {
+        let t = real_tokenizer();
+        // Corpus words must encode to fewer tokens than bytes.
+        let ids = t.encode("continuous batching throughput");
+        assert!(ids.len() < "continuous batching throughput".len() / 2);
+    }
+
+    #[test]
+    fn encode_matches_python_reference() {
+        // `tokenizer_train.encode` is the oracle; spot-check determinism:
+        // the same text must always produce the same ids.
+        let t = real_tokenizer();
+        assert_eq!(t.encode("the vision encoder"), t.encode("the vision encoder"));
+        // All ids within vocab.
+        for &id in t.encode("Prefix caching eliminates redundant encoding").iter() {
+            assert!((id as usize) < t.vocab_size);
+        }
+    }
+
+    #[test]
+    fn streaming_equals_oneshot() {
+        let t = real_tokenizer();
+        let text = "streaming 日本語 with émoji 😀 boundaries";
+        let ids = t.encode(text);
+        let mut sd = StreamDecoder::new();
+        let mut out = String::new();
+        for &id in &ids {
+            out.push_str(&sd.push(&t, id));
+        }
+        out.push_str(&sd.flush());
+        assert_eq!(out, text);
+    }
+
+    #[test]
+    fn streaming_splits_codepoints() {
+        // Hand-built tokenizer: no merges, so every token is one byte —
+        // a 4-byte emoji arrives as 4 tokens and must surface only once.
+        let t = Tokenizer::new(vec![], 260).unwrap();
+        let emoji = "😀";
+        let ids: Vec<i32> = emoji.bytes().map(|b| BYTE_BASE + b as i32).collect();
+        assert_eq!(ids.len(), 4);
+        let mut sd = StreamDecoder::new();
+        assert_eq!(sd.push(&t, ids[0]), "");
+        assert_eq!(sd.push(&t, ids[1]), "");
+        assert_eq!(sd.push(&t, ids[2]), "");
+        assert_eq!(sd.push(&t, ids[3]), emoji);
+    }
+
+    #[test]
+    fn flush_handles_truncation() {
+        let t = Tokenizer::new(vec![], 260).unwrap();
+        let mut sd = StreamDecoder::new();
+        let bytes = "é".as_bytes(); // 2 bytes
+        assert_eq!(sd.push(&t, BYTE_BASE + bytes[0] as i32), "");
+        let flushed = sd.flush();
+        assert_eq!(flushed, "\u{FFFD}");
+    }
+
+    #[test]
+    fn specials_decode_empty() {
+        let t = real_tokenizer();
+        assert_eq!(t.decode(&[BOS, EOS, PAD, IMG]), "");
+    }
+
+    #[test]
+    fn rejects_bad_merge_tables() {
+        assert!(Tokenizer::new(vec![(9999, 4)], 2048).is_err());
+        assert!(Tokenizer::new(vec![(0, 4)], 2048).is_err()); // special in merge
+    }
+}

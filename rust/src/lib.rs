@@ -1,0 +1,28 @@
+//! umserve — unified-memory LLM/MLLM serving on a PJRT backend.
+//!
+//! Reproduction of "Native LLM and MLLM Inference at Scale on Apple
+//! Silicon" (vllm-mlx). Three-layer architecture:
+//!
+//! * **L1** (build-time Python): Pallas kernels — fused decode attention,
+//!   4-bit quantized matmul, ViT patch embedding.
+//! * **L2** (build-time Python): JAX transformer / vision-encoder graphs,
+//!   AOT-lowered to HLO text artifacts plus a weight blob + manifest.
+//! * **L3** (this crate): the serving coordinator — continuous batching
+//!   scheduler, text prefix cache, content-based multimodal prefix cache,
+//!   paged KV manager, OpenAI-compatible HTTP server — with every
+//!   substrate (SHA-256, base64, JSON, HTTP) built in-tree.
+//!
+//! Python never runs on the request path: the runtime loads the HLO
+//! artifacts once via PJRT and serves from Rust.
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod cache;
+pub mod coordinator;
+pub mod engine;
+pub mod multimodal;
+pub mod runtime;
+pub mod server;
+pub mod substrate;
+
+pub use substrate::hash::Sha256;

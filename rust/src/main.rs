@@ -1,0 +1,149 @@
+//! umserve CLI launcher.
+//!
+//! ```text
+//! umserve serve --model qwen3-0.6b --port 8000 [--artifacts DIR] [cache flags]
+//! umserve run   --model qwen3-0.6b --prompt "..." [--max-tokens N] [--temperature T]
+//! umserve info  [--artifacts DIR]          # list models + artifact inventory
+//! ```
+
+use std::net::TcpListener;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{EngineConfig, Event, PromptInput};
+use umserve::engine::sampler::SamplingParams;
+use umserve::runtime::ArtifactStore;
+use umserve::substrate::argparse;
+
+const USAGE: &str = "umserve — unified-memory LLM/MLLM serving (vllm-mlx reproduction)
+
+USAGE:
+  umserve serve --model NAME [--port 8000] [--artifacts artifacts]
+                [--text-cache-mb 512] [--mm-emb-cache-mb 256] [--mm-kv-cache-mb 256]
+                [--no-cache] [--no-shrink]
+  umserve run   --model NAME --prompt TEXT [--max-tokens 64] [--temperature 0]
+                [--top-k 0] [--top-p 1.0] [--image PATH ...via --image=path]
+  umserve info  [--artifacts artifacts]
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = argparse::parse(&argv, &["no-cache", "no-shrink", "stream"])
+        .map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
+
+    match args.command.as_deref() {
+        Some("serve") => serve(&args),
+        Some("run") => run(&args),
+        Some("info") => info(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn engine_config(args: &argparse::Args) -> anyhow::Result<EngineConfig> {
+    let no_cache = args.bool("no-cache");
+    Ok(EngineConfig {
+        model: args.str("model", "qwen3-0.6b"),
+        artifacts_dir: args.str("artifacts", "artifacts"),
+        text_cache_bytes: if no_cache { 0 } else { args.usize("text-cache-mb", 512)? << 20 },
+        mm_emb_cache_bytes: if no_cache { 0 } else { args.usize("mm-emb-cache-mb", 256)? << 20 },
+        mm_kv_cache_bytes: if no_cache { 0 } else { args.usize("mm-kv-cache-mb", 256)? << 20 },
+        cache_finished: !no_cache,
+        allow_shrink: !args.bool("no-shrink"),
+        warmup: true,
+    })
+}
+
+fn serve(args: &argparse::Args) -> anyhow::Result<()> {
+    let cfg = engine_config(args)?;
+    let port = args.usize("port", 8000)?;
+    let model = cfg.model.clone();
+    eprintln!("loading model {model} ...");
+    let handle = Scheduler::spawn(cfg)?;
+    let listener = TcpListener::bind(("127.0.0.1", port as u16))?;
+    eprintln!("umserve listening on http://127.0.0.1:{port} (model {model})");
+    eprintln!("  POST /v1/chat/completions | POST /v1/completions | GET /v1/models | GET /metrics");
+    let shutdown = Arc::new(AtomicBool::new(false));
+    umserve::server::serve(listener, handle, model, shutdown)
+}
+
+fn run(args: &argparse::Args) -> anyhow::Result<()> {
+    let cfg = engine_config(args)?;
+    let prompt_text = args
+        .opt_str("prompt")
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| anyhow::anyhow!("--prompt required"))?;
+    let params = SamplingParams {
+        temperature: args.f64("temperature", 0.0)? as f32,
+        top_k: args.usize("top-k", 0)?,
+        top_p: args.f64("top-p", 1.0)? as f32,
+        max_tokens: args.usize("max-tokens", 64)?,
+        seed: args.usize("seed", 0)? as u64,
+        stop_on_eos: true,
+    };
+    let prompt = match args.opt_str("image") {
+        Some(path) => PromptInput::Multimodal {
+            images: vec![umserve::multimodal::ImageSource::Path(path)],
+            text: prompt_text,
+        },
+        None => PromptInput::Text(prompt_text),
+    };
+
+    let mut s = Scheduler::new(cfg)?;
+    let (tx, rx) = std::sync::mpsc::channel();
+    s.submit(umserve::coordinator::GenRequest {
+        id: 1,
+        prompt,
+        params,
+        events: tx,
+        enqueued_at: std::time::Instant::now(),
+    });
+    s.run_until_idle();
+    for ev in rx.try_iter() {
+        match ev {
+            Event::Token { text, .. } => print!("{text}"),
+            Event::Done { finish, usage, timing, .. } => {
+                println!();
+                eprintln!(
+                    "[done: {} | prompt {} tok, completion {} tok | ttft {:.0} ms, total {:.0} ms]",
+                    finish.as_str(),
+                    usage.prompt_tokens,
+                    usage.completion_tokens,
+                    timing.ttft_ms,
+                    timing.total_ms
+                );
+            }
+            Event::Error { message, .. } => anyhow::bail!(message),
+        }
+    }
+    Ok(())
+}
+
+fn info(args: &argparse::Args) -> anyhow::Result<()> {
+    let store = ArtifactStore::open(args.str("artifacts", "artifacts"))?;
+    println!("artifacts: {}", store.dir.display());
+    println!("tokenizer: {}", store.tokenizer_file);
+    println!("\n{:<20} {:>10} {:>8} {:>8} {:>14} {:>8}", "model", "params", "layers", "d_model", "buckets", "vision");
+    for (name, m) in &store.models {
+        println!(
+            "{:<20} {:>9.2}M {:>8} {:>8} {:>14} {:>8}",
+            name,
+            m.n_params as f64 / 1e6,
+            m.n_layers,
+            m.d_model,
+            format!("{:?}", m.decode_buckets),
+            if m.vision.is_some() { "yes" } else { "-" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Multimodal input handling: the UIMG/UVID codecs, transport
+//! resolution (file path / base64 data URL / raw bytes), pixel-level
+//! content hashing, and host-side patchification for the vision tower.
+//!
+//! The paper's evaluation uses real JPEG/PNG images over three
+//! transports; what Algorithm 3 actually requires is only that
+//! *identical decoded pixels produce identical cache keys regardless of
+//! transport*.  The in-tree UIMG codec (raw + RLE encodings) preserves
+//! exactly that property — the same pixels can arrive as a file, a
+//! base64 `data:` URL, or RLE-compressed bytes and all hash equal.
+
+pub mod image;
+pub mod video;
+pub mod vision;
+
+pub use image::{DecodedImage, ImageSource};
+pub use video::{sample_frames, Video};

@@ -1,0 +1,143 @@
+//! UVID video container + fps-based frame sampling (Table 3/6 workloads).
+//!
+//! Container layout (little-endian):
+//! ```text
+//! magic    4   b"UVID"
+//! version  1   (1)
+//! fps_x100 u32 capture rate * 100
+//! frames   u32
+//! per frame: len u64, UIMG blob
+//! ```
+
+use anyhow::{bail, Result};
+
+use super::image::{self, DecodedImage};
+
+#[derive(Debug, Clone)]
+pub struct Video {
+    /// Capture frame rate.
+    pub fps: f64,
+    pub frames: Vec<DecodedImage>,
+}
+
+impl Video {
+    pub fn duration_secs(&self) -> f64 {
+        self.frames.len() as f64 / self.fps
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"UVID");
+        out.push(1);
+        out.extend_from_slice(&((self.fps * 100.0) as u32).to_le_bytes());
+        out.extend_from_slice(&(self.frames.len() as u32).to_le_bytes());
+        for f in &self.frames {
+            let blob = f.encode_rle();
+            out.extend_from_slice(&(blob.len() as u64).to_le_bytes());
+            out.extend_from_slice(&blob);
+        }
+        out
+    }
+
+    pub fn decode(data: &[u8]) -> Result<Video> {
+        if data.len() < 13 || &data[..4] != b"UVID" {
+            bail!("not a UVID blob");
+        }
+        if data[4] != 1 {
+            bail!("unsupported UVID version {}", data[4]);
+        }
+        let fps = u32::from_le_bytes(data[5..9].try_into().unwrap()) as f64 / 100.0;
+        let count = u32::from_le_bytes(data[9..13].try_into().unwrap()) as usize;
+        if fps <= 0.0 || count > 100_000 {
+            bail!("implausible UVID header (fps {fps}, {count} frames)");
+        }
+        let mut frames = Vec::with_capacity(count);
+        let mut off = 13usize;
+        for _ in 0..count {
+            if off + 8 > data.len() {
+                bail!("UVID truncated at frame header");
+            }
+            let len = u64::from_le_bytes(data[off..off + 8].try_into().unwrap()) as usize;
+            off += 8;
+            if off + len > data.len() {
+                bail!("UVID truncated inside frame");
+            }
+            frames.push(image::decode(&data[off..off + len])?);
+            off += len;
+        }
+        if off != data.len() {
+            bail!("UVID trailing bytes");
+        }
+        Ok(Video { fps, frames })
+    }
+}
+
+/// Sample `n` frames at a uniform target rate (the paper's "N @ Xfps"
+/// configurations): evenly spaced capture indices over the clip, always
+/// including the first frame.
+pub fn sample_frames(video: &Video, n: usize) -> Vec<usize> {
+    let total = video.frames.len();
+    if n == 0 || total == 0 {
+        return Vec::new();
+    }
+    let n = n.min(total);
+    (0..n).map(|i| i * total / n).collect()
+}
+
+/// Deterministic procedural test clip: `seconds` at `fps`, each frame a
+/// seeded image that drifts over time (so frame hashes differ).
+pub fn generate_video(seed: u64, seconds: f64, fps: f64, side: usize) -> Video {
+    let count = (seconds * fps).round() as usize;
+    let frames = (0..count)
+        .map(|i| image::generate_image(seed.wrapping_mul(1000).wrapping_add(i as u64), side))
+        .collect();
+    Video { fps, frames }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let v = generate_video(5, 2.0, 4.0, 32);
+        assert_eq!(v.frames.len(), 8);
+        let dec = Video::decode(&v.encode()).unwrap();
+        assert_eq!(dec.frames.len(), 8);
+        assert_eq!(dec.fps, 4.0);
+        for (a, b) in v.frames.iter().zip(&dec.frames) {
+            assert_eq!(a.content_hash(), b.content_hash());
+        }
+    }
+
+    #[test]
+    fn sampling_even_spacing() {
+        let v = generate_video(1, 10.0, 8.0, 32); // 80 frames
+        let idx = sample_frames(&v, 4);
+        assert_eq!(idx, vec![0, 20, 40, 60]);
+        let idx = sample_frames(&v, 80);
+        assert_eq!(idx.len(), 80);
+        // Requesting more frames than exist clamps.
+        assert_eq!(sample_frames(&v, 200).len(), 80);
+        assert!(sample_frames(&v, 0).is_empty());
+    }
+
+    #[test]
+    fn frame_hashes_distinct_but_stable() {
+        let v1 = generate_video(7, 1.0, 4.0, 32);
+        let v2 = generate_video(7, 1.0, 4.0, 32);
+        for (a, b) in v1.frames.iter().zip(&v2.frames) {
+            assert_eq!(a.content_hash(), b.content_hash());
+        }
+        assert_ne!(v1.frames[0].content_hash(), v1.frames[1].content_hash());
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(Video::decode(b"nope").is_err());
+        let v = generate_video(2, 1.0, 2.0, 16);
+        let mut enc = v.encode();
+        enc.truncate(enc.len() - 3);
+        assert!(Video::decode(&enc).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Host-side vision preprocessing: resolution snapping + patchification.
+//!
+//! The vision tower artifacts take flattened pixel patches
+//! [P, 3*patch*patch] f32; patchification is a pure reshape/normalize
+//! on the host (no compute) so the expensive part — the encoder — runs
+//! entirely inside the AOT'd graph where caching can skip it.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::VisionInfo;
+
+use super::image::DecodedImage;
+
+/// Pick the supported encoder resolution for an input image: the
+/// smallest resolution >= the image's long side, else the largest.
+pub fn snap_resolution(v: &VisionInfo, img: &DecodedImage) -> usize {
+    let side = img.width.max(img.height);
+    v.resolutions
+        .iter()
+        .copied()
+        .find(|&r| r >= side)
+        .unwrap_or_else(|| *v.resolutions.last().unwrap())
+}
+
+/// Normalize + patchify a (square, supported-resolution) image into the
+/// encoder's input layout: patch-major, channel-major within patch:
+/// `patches[p][c*ps*ps + py*ps + px]`, pixels scaled to [-1, 1].
+pub fn patchify(v: &VisionInfo, img: &DecodedImage, resolution: usize) -> Result<Vec<f32>> {
+    if img.width != resolution || img.height != resolution {
+        return Err(anyhow!(
+            "image {}x{} not at encoder resolution {resolution} (resize first)",
+            img.width,
+            img.height
+        ));
+    }
+    let ps = v.patch;
+    let grid = resolution / ps;
+    let n_patches = grid * grid;
+    let mut out = vec![0f32; n_patches * v.patch_dim];
+    for gy in 0..grid {
+        for gx in 0..grid {
+            let p = gy * grid + gx;
+            let base = p * v.patch_dim;
+            for c in 0..3 {
+                for py in 0..ps {
+                    for px in 0..ps {
+                        let sy = gy * ps + py;
+                        let sx = gx * ps + px;
+                        let v8 = img.rgb[3 * (sy * resolution + sx) + c];
+                        out[base + c * ps * ps + py * ps + px] = v8 as f32 / 127.5 - 1.0;
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multimodal::image::generate_image;
+    use std::collections::BTreeMap;
+
+    fn vinfo() -> VisionInfo {
+        VisionInfo {
+            d_model: 96,
+            n_layers: 3,
+            patch: 32,
+            merge: 2,
+            patch_dim: 3 * 32 * 32,
+            resolutions: vec![224, 448, 768, 1024],
+            n_patches: BTreeMap::from([(224, 49), (448, 196), (768, 576), (1024, 1024)]),
+            n_visual_tokens: BTreeMap::from([(224, 16), (448, 49), (768, 144), (1024, 256)]),
+        }
+    }
+
+    #[test]
+    fn snapping() {
+        let v = vinfo();
+        assert_eq!(snap_resolution(&v, &generate_image(0, 100)), 224);
+        assert_eq!(snap_resolution(&v, &generate_image(0, 224)), 224);
+        assert_eq!(snap_resolution(&v, &generate_image(0, 300)), 448);
+        assert_eq!(snap_resolution(&v, &generate_image(0, 2000)), 1024);
+    }
+
+    #[test]
+    fn patchify_shapes_and_range() {
+        let v = vinfo();
+        let img = generate_image(3, 224);
+        let p = patchify(&v, &img, 224).unwrap();
+        assert_eq!(p.len(), 49 * 3072);
+        assert!(p.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+        // Wrong resolution errors.
+        assert!(patchify(&v, &img, 448).is_err());
+    }
+
+    #[test]
+    fn patchify_layout() {
+        // A single white pixel at (y=32, x=64) lands in patch (1,2) =
+        // index grid+2 at local (0,0) of every channel.
+        let v = vinfo();
+        let mut img = generate_image(0, 224).resize(224, 224);
+        img.rgb.iter_mut().for_each(|b| *b = 0);
+        let idx = 3 * (32 * 224 + 64);
+        img.rgb[idx] = 255;
+        img.rgb[idx + 1] = 255;
+        img.rgb[idx + 2] = 255;
+        let p = patchify(&v, &img, 224).unwrap();
+        let grid = 7;
+        let patch = 1 * grid + 2;
+        let base = patch * v.patch_dim;
+        for c in 0..3 {
+            assert_eq!(p[base + c * 1024], 1.0, "channel {c}");
+        }
+        // Everything else is -1.
+        let ones = p.iter().filter(|&&x| x == 1.0).count();
+        assert_eq!(ones, 3);
+    }
+
+    #[test]
+    fn deterministic() {
+        let v = vinfo();
+        let img = generate_image(11, 448);
+        assert_eq!(patchify(&v, &img, 448).unwrap(), patchify(&v, &img, 448).unwrap());
+    }
+}

@@ -1,0 +1,347 @@
+//! artifacts/manifest.json parsing.
+//!
+//! The manifest is the contract between `python/compile/aot.py` and this
+//! runtime: for every model it lists the architecture hyperparameters,
+//! the weight blob, and every lowered entry with its full positional
+//! argument list (inputs first, then weights by name).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::substrate::json::{parse, Json};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgDesc {
+    pub name: String,
+    /// "input" | "weight"
+    pub kind: String,
+    /// "float32" | "int32" | "uint8"
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl ArgDesc {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EntryDesc {
+    pub name: String,
+    /// Path relative to the artifacts dir.
+    pub file: String,
+    pub args: Vec<ArgDesc>,
+}
+
+impl EntryDesc {
+    pub fn inputs(&self) -> impl Iterator<Item = &ArgDesc> {
+        self.args.iter().filter(|a| a.kind == "input")
+    }
+
+    pub fn weight_names(&self) -> impl Iterator<Item = &str> {
+        self.args.iter().filter(|a| a.kind == "weight").map(|a| a.name.as_str())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MoeInfo {
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_expert: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct VisionInfo {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub patch: usize,
+    pub merge: usize,
+    pub patch_dim: usize,
+    pub resolutions: Vec<usize>,
+    /// resolution -> patch count / visual token count
+    pub n_patches: BTreeMap<usize, usize>,
+    pub n_visual_tokens: BTreeMap<usize, usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub paper_name: String,
+    pub weights_file: String,
+    pub n_params: u64,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+    pub s_max: usize,
+    pub moe: Option<MoeInfo>,
+    pub vision: Option<VisionInfo>,
+    pub decode_buckets: Vec<usize>,
+    pub prefill_buckets: Vec<usize>,
+    pub embed_prefill_buckets: Vec<usize>,
+    pub entries: BTreeMap<String, EntryDesc>,
+}
+
+impl ModelInfo {
+    /// KV arena shape for a batch bucket (plane 0 = logits mailbox).
+    pub fn arena_shape(&self, bucket: usize) -> Vec<usize> {
+        vec![self.n_layers + 1, 2, bucket, self.n_kv_heads, self.s_max, self.d_head]
+    }
+
+    pub fn arena_elements(&self, bucket: usize) -> usize {
+        self.arena_shape(bucket).iter().product()
+    }
+
+    /// Rows of the logits mailbox (== ceil(vocab / d_head)).
+    pub fn logits_rows(&self) -> usize {
+        self.vocab.div_ceil(self.d_head)
+    }
+
+    /// Element offset of slot `slot`'s logits within an arena buffer.
+    ///
+    /// Mailbox layout: plane 0, k-index 0, slot b, head 0, rows 0.. —
+    /// i.e. the first `rows*d_head` elements of the [Hkv, S, Dh] block
+    /// at flat index ((0*2+0)*B + b) * Hkv*S*Dh.
+    pub fn logits_offset(&self, slot: usize) -> usize {
+        slot * self.n_kv_heads * self.s_max * self.d_head
+    }
+
+    /// Smallest decode bucket that fits `n` active sequences.
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.decode_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Smallest prefill bucket that fits `n` prompt tokens.
+    pub fn prefill_bucket_for(&self, n: usize) -> Option<usize> {
+        self.prefill_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    pub fn embed_bucket_for(&self, n: usize) -> Option<usize> {
+        self.embed_prefill_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryDesc> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("model {} has no entry '{name}'", self.name))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub tokenizer_file: String,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+fn as_usize(j: &Json, what: &str) -> Result<usize> {
+    j.as_usize().ok_or_else(|| anyhow!("{what}: expected unsigned int"))
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest missing key '{key}'"))
+}
+
+fn usize_list(j: &Json, what: &str) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("{what}: expected array"))?
+        .iter()
+        .map(|x| as_usize(x, what))
+        .collect()
+}
+
+impl ArtifactStore {
+    /// Parse `<dir>/manifest.json`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let root = parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in req(&root, "models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest 'models' must be an object"))?
+        {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(ArtifactStore {
+            dir,
+            tokenizer_file: req(&root, "tokenizer")?
+                .as_str()
+                .ok_or_else(|| anyhow!("'tokenizer' must be a string"))?
+                .to_string(),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}' (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn tokenizer_path(&self) -> PathBuf {
+        self.dir.join(&self.tokenizer_file)
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
+    let mut entries = BTreeMap::new();
+    for (ename, e) in req(m, "entries")?
+        .as_obj()
+        .ok_or_else(|| anyhow!("'entries' must be an object"))?
+    {
+        let args = req(e, "args")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'args' must be an array"))?
+            .iter()
+            .map(|a| -> Result<ArgDesc> {
+                Ok(ArgDesc {
+                    name: req(a, "name")?.as_str().unwrap_or_default().to_string(),
+                    kind: req(a, "kind")?.as_str().unwrap_or_default().to_string(),
+                    dtype: req(a, "dtype")?.as_str().unwrap_or_default().to_string(),
+                    shape: usize_list(req(a, "shape")?, "arg shape")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        entries.insert(
+            ename.clone(),
+            EntryDesc {
+                name: ename.clone(),
+                file: req(e, "file")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("'file' must be a string"))?
+                    .to_string(),
+                args,
+            },
+        );
+    }
+
+    let moe = match m.get("moe") {
+        Some(Json::Null) | None => None,
+        Some(j) => Some(MoeInfo {
+            n_experts: as_usize(req(j, "n_experts")?, "moe.n_experts")?,
+            top_k: as_usize(req(j, "top_k")?, "moe.top_k")?,
+            d_expert: as_usize(req(j, "d_expert")?, "moe.d_expert")?,
+        }),
+    };
+
+    let vision = match m.get("vision") {
+        Some(Json::Null) | None => None,
+        Some(j) => {
+            let resolutions = usize_list(req(j, "resolutions")?, "vision.resolutions")?;
+            let mut n_patches = BTreeMap::new();
+            let mut n_visual_tokens = BTreeMap::new();
+            for (k, v) in req(j, "n_patches")?.as_obj().unwrap() {
+                n_patches.insert(k.parse::<usize>()?, as_usize(v, "n_patches")?);
+            }
+            for (k, v) in req(j, "n_visual_tokens")?.as_obj().unwrap() {
+                n_visual_tokens.insert(k.parse::<usize>()?, as_usize(v, "n_visual_tokens")?);
+            }
+            Some(VisionInfo {
+                d_model: as_usize(req(j, "d_model")?, "vision.d_model")?,
+                n_layers: as_usize(req(j, "n_layers")?, "vision.n_layers")?,
+                patch: as_usize(req(j, "patch")?, "vision.patch")?,
+                merge: as_usize(req(j, "merge")?, "vision.merge")?,
+                patch_dim: as_usize(req(j, "patch_dim")?, "vision.patch_dim")?,
+                resolutions,
+                n_patches,
+                n_visual_tokens,
+            })
+        }
+    };
+
+    let info = ModelInfo {
+        name: name.to_string(),
+        paper_name: req(m, "paper_name")?.as_str().unwrap_or_default().to_string(),
+        weights_file: req(m, "weights_file")?.as_str().unwrap_or_default().to_string(),
+        n_params: req(m, "n_params")?.as_f64().unwrap_or(0.0) as u64,
+        d_model: as_usize(req(m, "d_model")?, "d_model")?,
+        n_layers: as_usize(req(m, "n_layers")?, "n_layers")?,
+        n_q_heads: as_usize(req(m, "n_q_heads")?, "n_q_heads")?,
+        n_kv_heads: as_usize(req(m, "n_kv_heads")?, "n_kv_heads")?,
+        d_head: as_usize(req(m, "d_head")?, "d_head")?,
+        d_ffn: as_usize(req(m, "d_ffn")?, "d_ffn")?,
+        vocab: as_usize(req(m, "vocab")?, "vocab")?,
+        s_max: as_usize(req(m, "s_max")?, "s_max")?,
+        moe,
+        vision,
+        decode_buckets: usize_list(req(m, "decode_buckets")?, "decode_buckets")?,
+        prefill_buckets: usize_list(req(m, "prefill_buckets")?, "prefill_buckets")?,
+        embed_prefill_buckets: usize_list(
+            req(m, "embed_prefill_buckets")?,
+            "embed_prefill_buckets",
+        )?,
+        entries,
+    };
+    if info.decode_buckets.is_empty() {
+        bail!("model {name}: no decode buckets");
+    }
+    Ok(info)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn parses_real_manifest() {
+        let store = ArtifactStore::open(artifacts_dir()).expect("run `make artifacts` first");
+        assert!(store.models.len() >= 10, "expected the full zoo");
+        let m = store.model("qwen3-0.6b").unwrap();
+        assert_eq!(m.d_model, 64);
+        assert_eq!(m.decode_buckets, vec![1, 2, 4, 8, 16]);
+        let d1 = m.entry("decode_b1").unwrap();
+        // inputs: tokens, pos, kv — then weights.
+        let inputs: Vec<_> = d1.inputs().collect();
+        assert_eq!(inputs[0].name, "tokens");
+        assert_eq!(inputs[2].name, "kv");
+        assert_eq!(inputs[2].shape, m.arena_shape(1));
+        assert!(d1.weight_names().count() > 10);
+    }
+
+    #[test]
+    fn vision_metadata() {
+        let store = ArtifactStore::open(artifacts_dir()).unwrap();
+        let m = store.model("qwen3-vl-8b").unwrap();
+        let v = m.vision.as_ref().unwrap();
+        assert_eq!(v.resolutions, vec![224, 448, 768, 1024]);
+        assert_eq!(v.n_patches[&1024], 1024);
+        assert!(m.entries.contains_key("vision_r1024"));
+        assert!(m.entries.contains_key("prefill_embeds_s192"));
+    }
+
+    #[test]
+    fn logits_mailbox_math() {
+        let store = ArtifactStore::open(artifacts_dir()).unwrap();
+        let m = store.model("qwen3-0.6b").unwrap();
+        // vocab 2048, d_head 16 -> 128 rows; slot stride Hkv*S*Dh.
+        assert_eq!(m.logits_rows(), 128);
+        assert_eq!(m.logits_offset(0), 0);
+        assert_eq!(m.logits_offset(3), 3 * 2 * 640 * 16);
+        assert!(m.logits_rows() * m.d_head >= m.vocab);
+        assert!(m.logits_rows() <= m.s_max);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let store = ArtifactStore::open(artifacts_dir()).unwrap();
+        let m = store.model("qwen3-0.6b").unwrap();
+        assert_eq!(m.bucket_for(1), Some(1));
+        assert_eq!(m.bucket_for(3), Some(4));
+        assert_eq!(m.bucket_for(16), Some(16));
+        assert_eq!(m.bucket_for(17), None);
+        assert_eq!(m.prefill_bucket_for(33), Some(128));
+    }
+}

@@ -1,0 +1,28 @@
+//! PJRT runtime: load AOT artifacts, hold device-resident state, execute.
+//!
+//! This is the bridge between the build-time python stack (L1 Pallas +
+//! L2 JAX, lowered to HLO text by `python/compile/aot.py`) and the L3
+//! coordinator.  Responsibilities:
+//!
+//! * parse `artifacts/manifest.json` ([`manifest`])
+//! * parse the `.umw` weight blobs and upload each tensor ONCE as a
+//!   device-resident [`xla::PjRtBuffer`] ([`weights`], [`model`])
+//! * compile each HLO entry lazily and cache the executable
+//! * thread KV arenas between executables as device buffers
+//!   (`execute_b`) so the serving hot loop never copies model state
+//!   through the host — the reproduction's analog of the paper's
+//!   unified-memory zero-copy claim
+//! * read logits back via raw-offset device->host copies of the plane-0
+//!   "logits mailbox" (see `python/compile/model.py` module docs)
+//!
+//! Everything here is single-threaded by design: one engine thread owns
+//! the PJRT client and all buffers; the server communicates with it via
+//! channels (see `coordinator`).
+
+pub mod manifest;
+pub mod model;
+pub mod weights;
+
+pub use manifest::{ArgDesc, ArtifactStore, EntryDesc, ModelInfo, VisionInfo};
+pub use model::ModelRuntime;
+pub use weights::{HostTensor, UmwDtype};

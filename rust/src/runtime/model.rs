@@ -1,0 +1,395 @@
+//! ModelRuntime: one model's device-resident weights + lazily-compiled
+//! executables + typed execution helpers.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{ArgDesc, ArtifactStore, EntryDesc, ModelInfo};
+use super::weights::{read_umw, HostTensor, UmwDtype};
+
+/// A host-side input value for one executable argument.
+pub enum Input<'a> {
+    /// Device-resident buffer threaded from a previous execution
+    /// (KV arenas, cached vision embeddings) — the zero-copy path.
+    Buffer(&'a PjRtBuffer),
+    I32(Vec<i32>, Vec<usize>),
+    F32(Vec<f32>, Vec<usize>),
+}
+
+struct CompiledEntry {
+    exe: PjRtLoadedExecutable,
+    input_descs: Vec<ArgDesc>,
+    weight_names: Vec<String>,
+}
+
+/// Runtime statistics (exposed via /metrics and the §Perf benches).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub host_upload_bytes: u64,
+    pub host_readback_bytes: u64,
+    pub compile_count: u64,
+    pub compile_ms_total: f64,
+}
+
+pub struct ModelRuntime {
+    pub info: ModelInfo,
+    client: PjRtClient,
+    artifacts_dir: PathBuf,
+    /// Device-resident weight buffers, uploaded once at load.
+    weight_bufs: HashMap<String, PjRtBuffer>,
+    /// Host copies kept for size accounting + tests.
+    pub host_weights: HashMap<String, HostTensor>,
+    exes: RefCell<HashMap<String, Rc<CompiledEntry>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl ModelRuntime {
+    /// Load a model: parse weights, upload every tensor to the device.
+    /// Executables compile lazily on first use (`warmup` forces them).
+    pub fn load(client: &PjRtClient, store: &ArtifactStore, model: &str) -> Result<Self> {
+        let info = store.model(model)?.clone();
+        let host_weights = read_umw(store.dir.join(&info.weights_file))?;
+        let mut weight_bufs = HashMap::with_capacity(host_weights.len());
+        let mut upload_bytes = 0u64;
+        for (name, t) in &host_weights {
+            // NB: not `buffer_from_host_raw_bytes` — that wrapper passes an
+            // ElementType where the C API expects a PrimitiveType, silently
+            // creating wrongly-typed device buffers. The typed variant
+            // converts correctly.
+            let buf = match t.dtype {
+                UmwDtype::F32 => {
+                    let v: Vec<f32> = t
+                        .data
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    client.buffer_from_host_buffer::<f32>(&v, &t.shape, None)?
+                }
+                UmwDtype::U8 => client.buffer_from_host_buffer::<u8>(&t.data, &t.shape, None)?,
+                UmwDtype::I32 => {
+                    let v: Vec<i32> = t
+                        .data
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    client.buffer_from_host_buffer::<i32>(&v, &t.shape, None)?
+                }
+            };
+            upload_bytes += t.data.len() as u64;
+            weight_bufs.insert(name.clone(), buf);
+        }
+        let rt = ModelRuntime {
+            info,
+            client: client.clone(),
+            artifacts_dir: store.dir.clone(),
+            weight_bufs,
+            host_weights,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        };
+        rt.stats.borrow_mut().host_upload_bytes = upload_bytes;
+        Ok(rt)
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Force-compile a set of entries (used at server start so first
+    /// requests don't pay compile latency).
+    pub fn warmup(&self, entries: &[&str]) -> Result<()> {
+        for e in entries {
+            self.compiled(e)?;
+        }
+        Ok(())
+    }
+
+    fn compiled(&self, entry: &str) -> Result<Rc<CompiledEntry>> {
+        if let Some(e) = self.exes.borrow().get(entry) {
+            return Ok(e.clone());
+        }
+        let desc: &EntryDesc = self.info.entry(entry)?;
+        let path = self.artifacts_dir.join(&desc.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("loading HLO {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", desc.file))?;
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let compiled = Rc::new(CompiledEntry {
+            exe,
+            input_descs: desc.inputs().cloned().collect(),
+            weight_names: desc.weight_names().map(|s| s.to_string()).collect(),
+        });
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compile_count += 1;
+            st.compile_ms_total += compile_ms;
+        }
+        self.exes.borrow_mut().insert(entry.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Execute an entry: positional `inputs` (validated against the
+    /// manifest), weights bound automatically.  Returns the single
+    /// output buffer (see the logits-mailbox convention).
+    pub fn run(&self, entry: &str, inputs: &[Input<'_>]) -> Result<PjRtBuffer> {
+        let ce = self.compiled(entry)?;
+        if inputs.len() != ce.input_descs.len() {
+            bail!(
+                "{entry}: expected {} inputs, got {}",
+                ce.input_descs.len(),
+                inputs.len()
+            );
+        }
+        // Upload host inputs; hold ownership until after execute.
+        let mut owned: Vec<PjRtBuffer> = Vec::new();
+        let mut upload = 0u64;
+        for (i, (inp, desc)) in inputs.iter().zip(&ce.input_descs).enumerate() {
+            match inp {
+                Input::Buffer(_) => {}
+                Input::I32(v, dims) => {
+                    check_shape(entry, i, desc, dims, "int32")?;
+                    owned.push(self.client.buffer_from_host_buffer::<i32>(v, dims, None)?);
+                    upload += (v.len() * 4) as u64;
+                }
+                Input::F32(v, dims) => {
+                    check_shape(entry, i, desc, dims, "float32")?;
+                    owned.push(self.client.buffer_from_host_buffer::<f32>(v, dims, None)?);
+                    upload += (v.len() * 4) as u64;
+                }
+            }
+        }
+        let mut owned_iter = owned.iter();
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(inputs.len() + ce.weight_names.len());
+        for inp in inputs {
+            match inp {
+                Input::Buffer(b) => args.push(b),
+                _ => args.push(owned_iter.next().unwrap()),
+            }
+        }
+        for wname in &ce.weight_names {
+            args.push(
+                self.weight_bufs
+                    .get(wname)
+                    .ok_or_else(|| anyhow!("{entry}: missing weight '{wname}'"))?,
+            );
+        }
+        let mut out = ce.exe.execute_b(&args)?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.host_upload_bytes += upload;
+        }
+        let mut replica = out
+            .pop()
+            .ok_or_else(|| anyhow!("{entry}: no replica outputs"))?;
+        replica
+            .pop()
+            .ok_or_else(|| anyhow!("{entry}: no output buffer"))
+    }
+
+    // ------------------------------------------------------ typed helpers
+
+    /// Fresh zero-filled KV arena for a decode bucket, device-resident.
+    pub fn new_arena(&self, bucket: usize) -> Result<PjRtBuffer> {
+        let shape = self.info.arena_shape(bucket);
+        let zeros = vec![0f32; shape.iter().product()];
+        let buf = self.client.buffer_from_host_buffer::<f32>(&zeros, &shape, None)?;
+        Ok(buf)
+    }
+
+    /// One decode step over a bucket arena.  `tokens`/`pos` are per-slot
+    /// (pad idle slots with token 0 / their last position).
+    pub fn decode(
+        &self,
+        bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        arena: &PjRtBuffer,
+    ) -> Result<PjRtBuffer> {
+        debug_assert_eq!(tokens.len(), bucket);
+        self.run(
+            &format!("decode_b{bucket}"),
+            &[
+                Input::I32(tokens.to_vec(), vec![bucket]),
+                Input::I32(pos.to_vec(), vec![bucket]),
+                Input::Buffer(arena),
+            ],
+        )
+    }
+
+    /// Prompt processing: pads `tokens` into the chosen bucket.
+    /// Returns the kv_one buffer (logits in the mailbox).
+    pub fn prefill(&self, tokens: &[i32]) -> Result<PjRtBuffer> {
+        let bucket = self
+            .info
+            .prefill_bucket_for(tokens.len())
+            .ok_or_else(|| anyhow!("prompt of {} tokens exceeds buckets", tokens.len()))?;
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, 0);
+        self.run(
+            &format!("prefill_s{bucket}"),
+            &[
+                Input::I32(padded, vec![bucket]),
+                Input::I32(vec![tokens.len() as i32], vec![]),
+            ],
+        )
+    }
+
+    /// Prompt processing from a pre-composed embedding sequence
+    /// (multimodal path).  `embeds` is row-major [len, d_model].
+    pub fn prefill_embeds(&self, embeds: &[f32], len: usize) -> Result<PjRtBuffer> {
+        let d = self.info.d_model;
+        debug_assert_eq!(embeds.len(), len * d);
+        let bucket = self
+            .info
+            .embed_bucket_for(len)
+            .ok_or_else(|| anyhow!("embed sequence of {len} exceeds buckets"))?;
+        let mut padded = embeds.to_vec();
+        padded.resize(bucket * d, 0.0);
+        self.run(
+            &format!("prefill_embeds_s{bucket}"),
+            &[
+                Input::F32(padded, vec![bucket, d]),
+                Input::I32(vec![len as i32], vec![]),
+            ],
+        )
+    }
+
+    /// Token ids -> embedding rows (host-side multimodal composition).
+    pub fn embed_lookup(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let bucket = self
+            .info
+            .embed_bucket_for(tokens.len())
+            .ok_or_else(|| anyhow!("token sequence of {} exceeds buckets", tokens.len()))?;
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, 0);
+        let buf = self.run(
+            &format!("embed_lookup_s{bucket}"),
+            &[Input::I32(padded, vec![bucket])],
+        )?;
+        let mut out = self.to_host_f32(&buf)?;
+        out.truncate(tokens.len() * self.info.d_model);
+        Ok(out)
+    }
+
+    /// Encode one image's patches; returns the visual-embedding buffer
+    /// [n_visual_tokens, d_model] (device-resident, cacheable).
+    pub fn vision_encode(&self, resolution: usize, patches: Vec<f32>) -> Result<PjRtBuffer> {
+        let v = self
+            .info
+            .vision
+            .as_ref()
+            .ok_or_else(|| anyhow!("{} has no vision tower", self.info.name))?;
+        let p = *v
+            .n_patches
+            .get(&resolution)
+            .ok_or_else(|| anyhow!("unsupported resolution {resolution}"))?;
+        debug_assert_eq!(patches.len(), p * v.patch_dim);
+        self.run(
+            &format!("vision_r{resolution}"),
+            &[Input::F32(patches, vec![p, v.patch_dim])],
+        )
+    }
+
+    /// Insert a prefilled kv_one into `arena` slot `slot` (device-side).
+    pub fn inject(
+        &self,
+        bucket: usize,
+        arena: &PjRtBuffer,
+        kv_one: &PjRtBuffer,
+        slot: usize,
+    ) -> Result<PjRtBuffer> {
+        self.run(
+            &format!("inject_b{bucket}"),
+            &[
+                Input::Buffer(arena),
+                Input::Buffer(kv_one),
+                Input::I32(vec![slot as i32], vec![]),
+            ],
+        )
+    }
+
+    /// Extract slot `slot` of `arena` as a kv_one row (device-side).
+    pub fn extract(&self, bucket: usize, arena: &PjRtBuffer, slot: usize) -> Result<PjRtBuffer> {
+        self.run(
+            &format!("extract_b{bucket}"),
+            &[Input::Buffer(arena), Input::I32(vec![slot as i32], vec![])],
+        )
+    }
+
+    /// Read every slot's logits from an arena/kv_one buffer's plane-0
+    /// mailbox.  Executes the tiny `read_logits_b{bucket}` extractor
+    /// (the TFRT CPU client lacks raw-offset host reads) and copies back
+    /// only the [bucket, vocab] literal — ~8 kB/slot/step, the only
+    /// per-step host traffic besides the token ids.  Returns a flat
+    /// row-major [bucket * vocab] vector.
+    pub fn read_logits_all(&self, bucket: usize, arena: &PjRtBuffer) -> Result<Vec<f32>> {
+        let buf = self.run(&format!("read_logits_b{bucket}"), &[Input::Buffer(arena)])?;
+        let lit = buf.to_literal_sync()?;
+        let v = lit.to_vec::<f32>()?;
+        self.stats.borrow_mut().host_readback_bytes += (v.len() * 4) as u64;
+        Ok(v)
+    }
+
+    /// Convenience: one slot's logits (allocates; hot paths should use
+    /// `read_logits_all` and slice).
+    pub fn read_logits(&self, bucket: usize, arena: &PjRtBuffer, slot: usize) -> Result<Vec<f32>> {
+        let all = self.read_logits_all(bucket, arena)?;
+        let v = self.info.vocab;
+        Ok(all[slot * v..(slot + 1) * v].to_vec())
+    }
+
+    /// Full buffer to host (tests / baselines' deliberate round-trip).
+    pub fn to_host_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync()?;
+        let v = lit.to_vec::<f32>()?;
+        self.stats.borrow_mut().host_readback_bytes += (v.len() * 4) as u64;
+        Ok(v)
+    }
+
+    /// Host f32 slice -> device buffer (baselines' deliberate re-upload).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        let b = self.client.buffer_from_host_buffer::<f32>(data, dims, None)?;
+        self.stats.borrow_mut().host_upload_bytes += (data.len() * 4) as u64;
+        Ok(b)
+    }
+}
+
+fn check_shape(
+    entry: &str,
+    idx: usize,
+    desc: &ArgDesc,
+    dims: &[usize],
+    dtype: &str,
+) -> Result<()> {
+    if desc.dtype != dtype {
+        bail!(
+            "{entry} arg {idx} ({}): manifest dtype {} but got {dtype}",
+            desc.name,
+            desc.dtype
+        );
+    }
+    if desc.shape != dims {
+        bail!(
+            "{entry} arg {idx} ({}): manifest shape {:?} but got {:?}",
+            desc.name,
+            desc.shape,
+            dims
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,214 @@
+//! .umw weight-container parsing (see python/compile/weights.py for the
+//! writer and the layout spec).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UmwDtype {
+    F32,
+    U8,
+    I32,
+}
+
+impl UmwDtype {
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => UmwDtype::F32,
+            1 => UmwDtype::U8,
+            2 => UmwDtype::I32,
+            _ => bail!("unknown umw dtype code {c}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            UmwDtype::F32 | UmwDtype::I32 => 4,
+            UmwDtype::U8 => 1,
+        }
+    }
+
+    /// Matches the manifest's numpy dtype strings.
+    pub fn name(self) -> &'static str {
+        match self {
+            UmwDtype::F32 => "float32",
+            UmwDtype::U8 => "uint8",
+            UmwDtype::I32 => "int32",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub dtype: UmwDtype,
+    pub shape: Vec<usize>,
+    /// Raw little-endian bytes, row-major.
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("umw truncated at offset {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+/// Parse a .umw blob into named host tensors.
+pub fn read_umw(path: impl AsRef<Path>) -> Result<HashMap<String, HostTensor>> {
+    let data = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse_umw(&data)
+}
+
+pub fn parse_umw(data: &[u8]) -> Result<HashMap<String, HostTensor>> {
+    let mut c = Cursor { b: data, pos: 0 };
+    if c.take(4)? != b"UMW1" {
+        bail!("bad umw magic");
+    }
+    let count = c.u32()? as usize;
+    let mut out = HashMap::with_capacity(count);
+    for _ in 0..count {
+        let nlen = c.u16()? as usize;
+        let name = std::str::from_utf8(c.take(nlen)?)
+            .context("umw tensor name not utf-8")?
+            .to_string();
+        let dtype = UmwDtype::from_code(c.u8()?)?;
+        let ndim = c.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(c.u32()? as usize);
+        }
+        let nbytes = c.u64()? as usize;
+        let expect: usize = shape.iter().product::<usize>() * dtype.size();
+        if nbytes != expect {
+            bail!("umw tensor {name}: {nbytes} bytes but shape implies {expect}");
+        }
+        let data = c.take(nbytes)?.to_vec();
+        out.insert(name, HostTensor { dtype, shape, data });
+    }
+    if c.pos != data.len() {
+        bail!("umw trailing bytes after last tensor");
+    }
+    Ok(out)
+}
+
+/// Reinterpret a HostTensor's bytes as f32 (little-endian).
+pub fn as_f32(t: &HostTensor) -> Result<Vec<f32>> {
+    if t.dtype != UmwDtype::F32 {
+        bail!("tensor is {:?}, not f32", t.dtype);
+    }
+    Ok(t.data
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build a tiny .umw blob mirroring the python writer.
+    fn sample_blob() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"UMW1");
+        b.extend_from_slice(&2u32.to_le_bytes());
+        // tensor "a": f32 [2,2]
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.push(b'a');
+        b.push(0); // f32
+        b.push(2); // ndim
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&16u64.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        // tensor "q": u8 [3]
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.push(b'q');
+        b.push(1); // u8
+        b.push(1);
+        b.extend_from_slice(&3u32.to_le_bytes());
+        b.extend_from_slice(&3u64.to_le_bytes());
+        b.extend_from_slice(&[7, 8, 9]);
+        b
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = parse_umw(&sample_blob()).unwrap();
+        assert_eq!(m.len(), 2);
+        let a = &m["a"];
+        assert_eq!(a.shape, vec![2, 2]);
+        assert_eq!(as_f32(a).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let q = &m["q"];
+        assert_eq!(q.dtype, UmwDtype::U8);
+        assert_eq!(q.data, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let good = sample_blob();
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(parse_umw(&bad).is_err());
+        // Truncated.
+        assert!(parse_umw(&good[..good.len() - 1]).is_err());
+        // Trailing garbage.
+        let mut trail = good.clone();
+        trail.push(0);
+        assert!(parse_umw(&trail).is_err());
+        // Byte-count mismatch.
+        let mut mismatch = good;
+        // nbytes field of tensor "a" lives right after name+dtype+ndim+dims.
+        let off = 4 + 4 + 2 + 1 + 1 + 1 + 8;
+        mismatch[off] = 12;
+        assert!(parse_umw(&mismatch).is_err());
+    }
+
+    #[test]
+    fn reads_real_weights() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let m = read_umw(dir.join("qwen3-0.6b.umw")).expect("run `make artifacts` first");
+        assert!(m.contains_key("emb"));
+        assert_eq!(m["emb"].shape, vec![2048, 64]);
+        assert!(m.contains_key("layers.0.wq.q4"));
+        assert_eq!(m["layers.0.wq.q4"].dtype, UmwDtype::U8);
+        // q4 packing halves K.
+        assert_eq!(m["layers.0.wq.q4"].shape, vec![32, 64]);
+    }
+}

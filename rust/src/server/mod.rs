@@ -1,0 +1,40 @@
+//! OpenAI-compatible HTTP server (§3.2: "drop-in replacement of cloud
+//! services for privacy-sensitive applications").
+//!
+//! Endpoints:
+//! * `POST /v1/chat/completions` — messages with text and `image_url`
+//!   content parts (multimodal), optional `"stream": true` SSE.
+//! * `POST /v1/completions` — bare prompt completion.
+//! * `GET /v1/models` — the loaded model.
+//! * `GET /health`, `GET /metrics` (Prometheus text).
+//!
+//! The HTTP substrate is in-tree (`substrate::http`); handlers translate
+//! wire JSON <-> `coordinator` requests and bridge the scheduler's event
+//! channel onto SSE chunks.
+
+pub mod openai;
+
+use std::net::TcpListener;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::scheduler::SchedulerHandle;
+use crate::substrate::http;
+
+/// Serve forever (until `shutdown` flips).  `handle` must come from
+/// `Scheduler::spawn`.
+pub fn serve(
+    listener: TcpListener,
+    handle: SchedulerHandle,
+    model_name: String,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    let state = Arc::new(openai::ServerState { handle, model_name });
+    let h = Arc::new(move |req: http::Request, rw: &mut http::ResponseWriter<'_>| {
+        openai::route(&state, req, rw);
+    });
+    http::serve(listener, shutdown, h);
+    Ok(())
+}

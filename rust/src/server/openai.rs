@@ -1,0 +1,393 @@
+//! OpenAI wire-format translation + request routing.
+
+use std::sync::mpsc::channel;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::coordinator::scheduler::SchedulerHandle;
+use crate::coordinator::{Event, PromptInput};
+use crate::engine::sampler::SamplingParams;
+use crate::multimodal::ImageSource;
+use crate::substrate::http::{Request, ResponseWriter};
+use crate::substrate::json::{parse, Json};
+
+pub struct ServerState {
+    pub handle: SchedulerHandle,
+    pub model_name: String,
+}
+
+pub fn route(state: &ServerState, req: Request, rw: &mut ResponseWriter<'_>) {
+    let res = match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/chat/completions") => chat_completions(state, &req, rw),
+        ("POST", "/v1/completions") => completions(state, &req, rw),
+        ("GET", "/v1/models") => models(state, rw),
+        ("GET", "/health") => rw
+            .send_json(200, &Json::obj(vec![("status", Json::str("ok"))]))
+            .map_err(|e| (500u16, e.to_string())),
+        ("GET", "/metrics") => metrics(state, rw),
+        _ => rw
+            .send_json(404, &err_body("not_found", "unknown route"))
+            .map_err(|e| (500u16, e.to_string())),
+    };
+    if let Err((status, msg)) = res {
+        if !rw.started() {
+            let _ = rw.send_json(status, &err_body("invalid_request_error", &msg));
+        }
+    }
+}
+
+fn err_body(kind: &str, msg: &str) -> Json {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![("type", Json::str(kind)), ("message", Json::str(msg))]),
+    )])
+}
+
+type HandlerResult = Result<(), (u16, String)>;
+
+fn bad(msg: impl Into<String>) -> (u16, String) {
+    (400, msg.into())
+}
+
+fn now_unix() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0)
+}
+
+fn parse_params(body: &Json) -> SamplingParams {
+    SamplingParams {
+        temperature: body
+            .get("temperature")
+            .and_then(|j| j.as_f64())
+            .unwrap_or(0.0) as f32,
+        top_k: body.get("top_k").and_then(|j| j.as_usize()).unwrap_or(0),
+        top_p: body.get("top_p").and_then(|j| j.as_f64()).unwrap_or(1.0) as f32,
+        max_tokens: body
+            .get("max_tokens")
+            .and_then(|j| j.as_usize())
+            .unwrap_or(64)
+            .clamp(1, 512),
+        seed: body.get("seed").and_then(|j| j.as_i64()).unwrap_or(0) as u64,
+        stop_on_eos: true,
+    }
+}
+
+/// messages: [{role, content: str | [{type:"text"|"image_url", ...}]}]
+/// -> flattened prompt text + image sources (chat template: simple
+/// role-tagged concatenation; the sims carry no instruction tuning).
+fn messages_to_prompt(body: &Json) -> Result<(Vec<ImageSource>, String), (u16, String)> {
+    let msgs = body
+        .get("messages")
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| bad("missing 'messages' array"))?;
+    let mut text = String::new();
+    let mut images = Vec::new();
+    for m in msgs {
+        let role = m.get("role").and_then(|j| j.as_str()).unwrap_or("user");
+        match m.get("content") {
+            Some(Json::Str(s)) => {
+                text.push_str(&format!("<{role}> {s}\n"));
+            }
+            Some(Json::Arr(parts)) => {
+                text.push_str(&format!("<{role}> "));
+                for p in parts {
+                    match p.get("type").and_then(|j| j.as_str()) {
+                        Some("text") => {
+                            text.push_str(p.get("text").and_then(|j| j.as_str()).unwrap_or(""));
+                        }
+                        Some("image_url") => {
+                            let url = p
+                                .path(&["image_url", "url"])
+                                .and_then(|j| j.as_str())
+                                .ok_or_else(|| bad("image_url part missing url"))?;
+                            images.push(url_to_source(url)?);
+                        }
+                        _ => return Err(bad("unknown content part type")),
+                    }
+                }
+                text.push('\n');
+            }
+            _ => return Err(bad("message missing content")),
+        }
+    }
+    Ok((images, text))
+}
+
+fn url_to_source(url: &str) -> Result<ImageSource, (u16, String)> {
+    if url.starts_with("data:") {
+        Ok(ImageSource::DataUrl(url.to_string()))
+    } else if let Some(path) = url.strip_prefix("file://") {
+        Ok(ImageSource::Path(path.to_string()))
+    } else if !url.contains("://") {
+        Ok(ImageSource::Path(url.to_string()))
+    } else {
+        Err(bad("only data: and file:// image URLs are supported on-device"))
+    }
+}
+
+fn chat_completions(state: &ServerState, req: &Request, rw: &mut ResponseWriter<'_>) -> HandlerResult {
+    let body = parse(req.body_str().map_err(bad)?).map_err(|e| bad(e.to_string()))?;
+    let params = parse_params(&body);
+    let stream = body.get("stream").and_then(|j| j.as_bool()).unwrap_or(false);
+    let (images, text) = messages_to_prompt(&body)?;
+    let prompt = if images.is_empty() {
+        PromptInput::Text(text)
+    } else {
+        PromptInput::Multimodal { images, text }
+    };
+    run_request(state, prompt, params, stream, true, rw)
+}
+
+fn completions(state: &ServerState, req: &Request, rw: &mut ResponseWriter<'_>) -> HandlerResult {
+    let body = parse(req.body_str().map_err(bad)?).map_err(|e| bad(e.to_string()))?;
+    let params = parse_params(&body);
+    let stream = body.get("stream").and_then(|j| j.as_bool()).unwrap_or(false);
+    let prompt = body
+        .get("prompt")
+        .and_then(|j| j.as_str())
+        .ok_or_else(|| bad("missing 'prompt'"))?;
+    run_request(
+        state,
+        PromptInput::Text(prompt.to_string()),
+        params,
+        stream,
+        false,
+        rw,
+    )
+}
+
+fn run_request(
+    state: &ServerState,
+    prompt: PromptInput,
+    params: SamplingParams,
+    stream: bool,
+    chat: bool,
+    rw: &mut ResponseWriter<'_>,
+) -> HandlerResult {
+    let (tx, rx) = channel();
+    let id = state
+        .handle
+        .generate_with(prompt, params, tx)
+        .map_err(|e| (503u16, e.to_string()))?;
+    let oid = format!("chatcmpl-{id}");
+    let object = if chat { "chat.completion" } else { "text_completion" };
+
+    if stream {
+        rw.start_sse().map_err(|e| (500u16, e.to_string()))?;
+        for ev in rx.iter() {
+            match ev {
+                Event::Token { text, .. } => {
+                    if text.is_empty() {
+                        continue;
+                    }
+                    let delta = if chat {
+                        Json::obj(vec![("content", Json::str(text))])
+                    } else {
+                        Json::str(text)
+                    };
+                    let chunk = stream_chunk(&oid, &state.model_name, chat, delta, None);
+                    let _ = rw.sse_event(&chunk.to_string());
+                }
+                Event::Done { finish, usage, .. } => {
+                    let chunk = stream_chunk(
+                        &oid,
+                        &state.model_name,
+                        chat,
+                        if chat { Json::obj(vec![]) } else { Json::str("") },
+                        Some(finish.as_str()),
+                    );
+                    let _ = rw.sse_event(&chunk.to_string());
+                    let _ = rw.sse_event(
+                        &Json::obj(vec![
+                            ("object", Json::str("umserve.usage")),
+                            ("prompt_tokens", Json::num(usage.prompt_tokens as f64)),
+                            ("completion_tokens", Json::num(usage.completion_tokens as f64)),
+                        ])
+                        .to_string(),
+                    );
+                    let _ = rw.sse_event("[DONE]");
+                    break;
+                }
+                Event::Error { message, .. } => {
+                    let _ = rw.sse_event(&err_body("server_error", &message).to_string());
+                    let _ = rw.sse_event("[DONE]");
+                    break;
+                }
+            }
+        }
+        rw.finish_sse().map_err(|e| (500u16, e.to_string()))
+    } else {
+        let mut text = String::new();
+        let mut finish = "stop";
+        let mut usage = crate::coordinator::Usage::default();
+        let mut error: Option<String> = None;
+        for ev in rx.iter() {
+            match ev {
+                Event::Token { text: t, .. } => text.push_str(&t),
+                Event::Done { finish: f, usage: u, .. } => {
+                    finish = f.as_str();
+                    usage = u;
+                    break;
+                }
+                Event::Error { message, .. } => {
+                    error = Some(message);
+                    break;
+                }
+            }
+        }
+        if let Some(msg) = error {
+            return Err(bad(msg));
+        }
+        let choice = if chat {
+            Json::obj(vec![
+                ("index", Json::num(0.0)),
+                (
+                    "message",
+                    Json::obj(vec![
+                        ("role", Json::str("assistant")),
+                        ("content", Json::str(text)),
+                    ]),
+                ),
+                ("finish_reason", Json::str(finish)),
+            ])
+        } else {
+            Json::obj(vec![
+                ("index", Json::num(0.0)),
+                ("text", Json::str(text)),
+                ("finish_reason", Json::str(finish)),
+            ])
+        };
+        let body = Json::obj(vec![
+            ("id", Json::str(oid)),
+            ("object", Json::str(object)),
+            ("created", Json::num(now_unix())),
+            ("model", Json::str(state.model_name.clone())),
+            ("choices", Json::Arr(vec![choice])),
+            (
+                "usage",
+                Json::obj(vec![
+                    ("prompt_tokens", Json::num(usage.prompt_tokens as f64)),
+                    ("completion_tokens", Json::num(usage.completion_tokens as f64)),
+                    (
+                        "total_tokens",
+                        Json::num((usage.prompt_tokens + usage.completion_tokens) as f64),
+                    ),
+                ]),
+            ),
+        ]);
+        rw.send_json(200, &body).map_err(|e| (500u16, e.to_string()))
+    }
+}
+
+fn stream_chunk(id: &str, model: &str, chat: bool, delta: Json, finish: Option<&str>) -> Json {
+    let fin = finish.map(|f| Json::str(f)).unwrap_or(Json::Null);
+    let choice = if chat {
+        Json::obj(vec![
+            ("index", Json::num(0.0)),
+            ("delta", delta),
+            ("finish_reason", fin),
+        ])
+    } else {
+        Json::obj(vec![
+            ("index", Json::num(0.0)),
+            ("text", delta),
+            ("finish_reason", fin),
+        ])
+    };
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        (
+            "object",
+            Json::str(if chat { "chat.completion.chunk" } else { "text_completion.chunk" }),
+        ),
+        ("created", Json::num(now_unix())),
+        ("model", Json::str(model)),
+        ("choices", Json::Arr(vec![choice])),
+    ])
+}
+
+fn models(state: &ServerState, rw: &mut ResponseWriter<'_>) -> HandlerResult {
+    let body = Json::obj(vec![
+        ("object", Json::str("list")),
+        (
+            "data",
+            Json::Arr(vec![Json::obj(vec![
+                ("id", Json::str(state.model_name.clone())),
+                ("object", Json::str("model")),
+                ("owned_by", Json::str("umserve")),
+            ])]),
+        ),
+    ]);
+    rw.send_json(200, &body).map_err(|e| (500u16, e.to_string()))
+}
+
+fn metrics(state: &ServerState, rw: &mut ResponseWriter<'_>) -> HandlerResult {
+    let snap = state.handle.stats().map_err(|e| (503u16, e.to_string()))?;
+    let mut text = snap.metrics.render_prometheus();
+    text.push_str(&format!("umserve_bucket {}\n", snap.bucket));
+    text.push_str(&format!("umserve_active {}\n", snap.active));
+    text.push_str(&format!("umserve_occupancy_mean {:.4}\n", snap.occupancy_mean));
+    let (th, tm, te, tb) = snap.text_cache;
+    text.push_str(&format!(
+        "umserve_text_cache_hits {th}\numserve_text_cache_misses {tm}\numserve_text_cache_evictions {te}\numserve_text_cache_bytes {tb}\n"
+    ));
+    let m = snap.mm_cache;
+    text.push_str(&format!(
+        "umserve_mm_emb_hits {}\numserve_mm_emb_misses {}\numserve_mm_kv_hits {}\numserve_mm_kv_misses {}\n",
+        m.emb_hits, m.emb_misses, m.kv_hits, m.kv_misses
+    ));
+    rw.send(200, "text/plain; version=0.0.4", text.as_bytes())
+        .map_err(|e| (500u16, e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_flattening_text_only() {
+        let body = parse(
+            r#"{"messages":[{"role":"system","content":"be brief"},{"role":"user","content":"hi"}]}"#,
+        )
+        .unwrap();
+        let (imgs, text) = messages_to_prompt(&body).unwrap();
+        assert!(imgs.is_empty());
+        assert_eq!(text, "<system> be brief\n<user> hi\n");
+    }
+
+    #[test]
+    fn message_flattening_multimodal() {
+        let body = parse(
+            r#"{"messages":[{"role":"user","content":[
+                {"type":"image_url","image_url":{"url":"data:application/x-uimg;base64,QUJD"}},
+                {"type":"text","text":"what is this"}]}]}"#,
+        )
+        .unwrap();
+        let (imgs, text) = messages_to_prompt(&body).unwrap();
+        assert_eq!(imgs.len(), 1);
+        assert!(matches!(imgs[0], ImageSource::DataUrl(_)));
+        assert_eq!(text, "<user> what is this\n");
+    }
+
+    #[test]
+    fn rejects_remote_urls_and_bad_parts() {
+        assert!(url_to_source("https://example.com/cat.png").is_err());
+        assert!(matches!(url_to_source("file:///tmp/x.uimg"), Ok(ImageSource::Path(_))));
+        assert!(matches!(url_to_source("tmp/x.uimg"), Ok(ImageSource::Path(_))));
+        let body = parse(r#"{"messages":[{"role":"user","content":[{"type":"audio"}]}]}"#).unwrap();
+        assert!(messages_to_prompt(&body).is_err());
+    }
+
+    #[test]
+    fn params_parsing_defaults_and_clamps() {
+        let body = parse(r#"{"max_tokens": 100000, "temperature": 0.5, "top_p": 0.9}"#).unwrap();
+        let p = parse_params(&body);
+        assert_eq!(p.max_tokens, 512);
+        assert!((p.temperature - 0.5).abs() < 1e-6);
+        assert!((p.top_p - 0.9).abs() < 1e-6);
+        let p2 = parse_params(&parse("{}").unwrap());
+        assert_eq!(p2.max_tokens, 64);
+        assert_eq!(p2.temperature, 0.0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Tiny CLI argument parser for the launcher.
+//!
+//! Subcommand + `--flag value` / `--flag` / `--flag=value` conventions,
+//! typed accessors with defaults, and automatic usage text.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct ArgError(pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+/// Flags that take no value.
+pub fn parse(
+    argv: &[String],
+    bool_flags: &[&str],
+) -> Result<Args, ArgError> {
+    let mut args = Args { command: None, flags: HashMap::new(), positional: Vec::new() };
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if let Some((k, v)) = name.split_once('=') {
+                args.flags.insert(k.to_string(), v.to_string());
+            } else if bool_flags.contains(&name) {
+                args.flags.insert(name.to_string(), "true".to_string());
+            } else {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .ok_or_else(|| ArgError(format!("--{name} requires a value")))?;
+                args.flags.insert(name.to_string(), v.clone());
+            }
+        } else if args.command.is_none() && args.positional.is_empty() {
+            args.command = Some(a.clone());
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<String> {
+        self.flags.get(name).cloned()
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize, ArgError> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true" | "1" | "yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&v(&["serve", "--model", "qwen3-0.6b", "--port=8080", "--verbose"]),
+                      &["verbose"]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.str("model", ""), "qwen3-0.6b");
+        assert_eq!(a.usize("port", 0).unwrap(), 8080);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&v(&["bench"]), &[]).unwrap();
+        assert_eq!(a.usize("iters", 10).unwrap(), 10);
+        assert_eq!(a.str("model", "default"), "default");
+        assert_eq!(a.f64("temp", 0.7).unwrap(), 0.7);
+    }
+
+    #[test]
+    fn positional_after_command() {
+        let a = parse(&v(&["run", "prompt one", "prompt two"]), &[]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["prompt one", "prompt two"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&v(&["serve", "--model"]), &[]).is_err());
+        let a = parse(&v(&["serve", "--port", "abc"]), &[]).unwrap();
+        assert!(a.usize("port", 0).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! RFC 4648 base64 (standard alphabet, with/without padding).
+//!
+//! Needed for the OpenAI-compatible multimodal API: images arrive as
+//! `data:...;base64,` URLs and must decode to identical pixel bytes as
+//! any other transport so the content hash collides (Algorithm 3).
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+fn decode_table() -> [i8; 256] {
+    let mut t = [-1i8; 256];
+    let mut i = 0usize;
+    while i < 64 {
+        t[ALPHABET[i] as usize] = i as i8;
+        i += 1;
+    }
+    t
+}
+
+/// Encode bytes to padded base64.
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = *chunk.get(1).unwrap_or(&0) as u32;
+        let b2 = *chunk.get(2).unwrap_or(&0) as u32;
+        let n = (b0 << 16) | (b1 << 8) | b2;
+        out.push(ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(n >> 12) as usize & 63] as char);
+        if chunk.len() > 1 {
+            out.push(ALPHABET[(n >> 6) as usize & 63] as char);
+        } else {
+            out.push('=');
+        }
+        if chunk.len() > 2 {
+            out.push(ALPHABET[n as usize & 63] as char);
+        } else {
+            out.push('=');
+        }
+    }
+    out
+}
+
+/// Decode base64 (padding optional, whitespace rejected).
+pub fn decode(s: &str) -> Result<Vec<u8>, String> {
+    let table = decode_table();
+    let bytes: Vec<u8> = s.trim_end_matches('=').bytes().collect();
+    let mut out = Vec::with_capacity(bytes.len() * 3 / 4 + 3);
+    let mut acc: u32 = 0;
+    let mut nbits = 0u32;
+    for (i, &b) in bytes.iter().enumerate() {
+        let v = table[b as usize];
+        if v < 0 {
+            return Err(format!("invalid base64 byte {b:#x} at offset {i}"));
+        }
+        acc = (acc << 6) | v as u32;
+        nbits += 6;
+        if nbits >= 8 {
+            nbits -= 8;
+            out.push((acc >> nbits) as u8);
+        }
+    }
+    // Leftover bits must be zero padding of a valid final quantum.
+    if nbits > 0 && (acc & ((1 << nbits) - 1)) != 0 {
+        return Err("non-zero trailing base64 bits".into());
+    }
+    if bytes.len() % 4 == 1 {
+        return Err("truncated base64 (len % 4 == 1)".into());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // RFC 4648 §10 test vectors.
+    #[test]
+    fn rfc_vectors() {
+        let cases: &[(&str, &str)] = &[
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ];
+        for (plain, enc) in cases {
+            assert_eq!(encode(plain.as_bytes()), *enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn unpadded_accepted() {
+        assert_eq!(decode("Zm9vYg").unwrap(), b"foob");
+        assert_eq!(decode("Zm8").unwrap(), b"fo");
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode("Zm9v!").is_err());
+        assert!(decode("Z").is_err());
+        assert!(decode("Zm9v Zg==").is_err()); // embedded space
+    }
+
+    #[test]
+    fn rejects_nonzero_trailing_bits() {
+        // "Zh" decodes 12 bits where the last 4 must be zero; 'h'=33 -> 100001.
+        assert!(decode("Zh").is_err());
+    }
+}

@@ -1,0 +1,299 @@
+//! SHA-256 (FIPS 180-4), implemented in-tree.
+//!
+//! The paper's prefix caches key everything on SHA-256: text prefix
+//! caching hashes token-id prefixes (Algorithm 2) and the multimodal
+//! cache hashes *decoded pixel values* so the same image hits the cache
+//! regardless of transport format (Algorithm 3). A streaming
+//! implementation lets us hash multi-megabyte pixel buffers without
+//! copying them.
+
+/// Streaming SHA-256 hasher.
+///
+/// (`no_run`: doctest binaries don't inherit the xla_extension rpath on
+/// this toolchain; the same assertion runs in `tests::abc`.)
+///
+/// ```no_run
+/// use umserve::substrate::hash::Sha256;
+/// let d = Sha256::digest(b"abc");
+/// assert_eq!(
+///     Sha256::to_hex(&d),
+///     "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+/// );
+/// ```
+#[derive(Clone)]
+pub struct Sha256 {
+    state: [u32; 8],
+    /// Total message length in bytes so far.
+    len: u64,
+    /// Partially filled block.
+    buf: [u8; 64],
+    buf_len: usize,
+}
+
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+const H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab, 0x5be0cd19,
+];
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha256 {
+    pub fn new() -> Self {
+        Sha256 { state: H0, len: 0, buf: [0u8; 64], buf_len: 0 }
+    }
+
+    /// One-shot digest of `data`.
+    pub fn digest(data: &[u8]) -> [u8; 32] {
+        let mut h = Sha256::new();
+        h.update(data);
+        h.finalize()
+    }
+
+    /// One-shot digest returned as a lowercase hex string.
+    pub fn hex_digest(data: &[u8]) -> String {
+        Self::to_hex(&Self::digest(data))
+    }
+
+    /// Absorb `data` into the hash state.
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.len = self.len.wrapping_add(data.len() as u64);
+        // Fill a partial block first.
+        if self.buf_len > 0 {
+            let take = (64 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            }
+        }
+        // Whole blocks straight from the input.
+        while data.len() >= 64 {
+            let (block, rest) = data.split_at(64);
+            let mut b = [0u8; 64];
+            b.copy_from_slice(block);
+            self.compress(&b);
+            data = rest;
+        }
+        // Stash the tail.
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    /// Hash a `u32` slice in little-endian byte order (token ids, pixel
+    /// words) without materialising an intermediate byte buffer per call.
+    pub fn update_u32_le(&mut self, words: &[u32]) {
+        // Process in small stack chunks to stay allocation-free.
+        let mut chunk = [0u8; 256];
+        for group in words.chunks(64) {
+            for (i, w) in group.iter().enumerate() {
+                chunk[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+            }
+            self.update(&chunk[..group.len() * 4]);
+        }
+    }
+
+    /// Finish and return the 32-byte digest. Consumes the hasher state.
+    pub fn finalize(mut self) -> [u8; 32] {
+        let bit_len = self.len.wrapping_mul(8);
+        // Padding: 0x80 then zeros until 56 mod 64, then 64-bit BE length.
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0]);
+        }
+        // Manual length append (update would change self.len, but we
+        // captured bit_len already; still use compress path via update).
+        let len_bytes = bit_len.to_be_bytes();
+        self.buf[56..64].copy_from_slice(&len_bytes);
+        let block = self.buf;
+        self.compress(&block);
+        let mut out = [0u8; 32];
+        for (i, s) in self.state.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&s.to_be_bytes());
+        }
+        out
+    }
+
+    /// Lowercase hex of a digest.
+    pub fn to_hex(digest: &[u8; 32]) -> String {
+        const HEX: &[u8; 16] = b"0123456789abcdef";
+        let mut s = String::with_capacity(64);
+        for b in digest {
+            s.push(HEX[(b >> 4) as usize] as char);
+            s.push(HEX[(b & 0xf) as usize] as char);
+        }
+        s
+    }
+
+    fn compress(&mut self, block: &[u8; 64]) {
+        let mut w = [0u32; 64];
+        for i in 0..16 {
+            w[i] = u32::from_be_bytes([
+                block[i * 4],
+                block[i * 4 + 1],
+                block[i * 4 + 2],
+                block[i * 4 + 3],
+            ]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.state;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        self.state[0] = self.state[0].wrapping_add(a);
+        self.state[1] = self.state[1].wrapping_add(b);
+        self.state[2] = self.state[2].wrapping_add(c);
+        self.state[3] = self.state[3].wrapping_add(d);
+        self.state[4] = self.state[4].wrapping_add(e);
+        self.state[5] = self.state[5].wrapping_add(f);
+        self.state[6] = self.state[6].wrapping_add(g);
+        self.state[7] = self.state[7].wrapping_add(h);
+    }
+}
+
+/// A compact, copyable cache key derived from a SHA-256 digest.
+///
+/// The full 32-byte digest is kept; equality and hashing use all of it.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ContentHash(pub [u8; 32]);
+
+impl ContentHash {
+    pub fn of(data: &[u8]) -> Self {
+        ContentHash(Sha256::digest(data))
+    }
+
+    pub fn hex(&self) -> String {
+        Sha256::to_hex(&self.0)
+    }
+
+    /// Short prefix for logs.
+    pub fn short(&self) -> String {
+        self.hex()[..12].to_string()
+    }
+}
+
+impl std::fmt::Debug for ContentHash {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ContentHash({})", self.short())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // FIPS 180-4 / NIST CAVS known-answer vectors.
+    #[test]
+    fn empty_string() {
+        assert_eq!(
+            Sha256::hex_digest(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+    }
+
+    #[test]
+    fn abc() {
+        assert_eq!(
+            Sha256::hex_digest(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn two_block_message() {
+        assert_eq!(
+            Sha256::hex_digest(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn million_a() {
+        let data = vec![b'a'; 1_000_000];
+        assert_eq!(
+            Sha256::hex_digest(&data),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+        );
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i * 2654435761) as u8).collect();
+        // Split at awkward boundaries to exercise partial-block handling.
+        for splits in [vec![0usize], vec![1, 63, 64, 65], vec![55, 56, 57], vec![128, 5000]] {
+            let mut h = Sha256::new();
+            let mut last = 0;
+            for &s in &splits {
+                let s = s.min(data.len());
+                h.update(&data[last..s]);
+                last = s;
+            }
+            h.update(&data[last..]);
+            assert_eq!(h.finalize(), Sha256::digest(&data));
+        }
+    }
+
+    #[test]
+    fn update_u32_le_matches_bytes() {
+        let words: Vec<u32> = (0..1000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let mut bytes = Vec::new();
+        for w in &words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        let mut h = Sha256::new();
+        h.update_u32_le(&words);
+        assert_eq!(h.finalize(), Sha256::digest(&bytes));
+    }
+
+    #[test]
+    fn content_hash_distinct() {
+        let a = ContentHash::of(b"image-a");
+        let b = ContentHash::of(b"image-b");
+        assert_ne!(a, b);
+        assert_eq!(a, ContentHash::of(b"image-a"));
+        assert_eq!(a.hex().len(), 64);
+        assert_eq!(a.short().len(), 12);
+    }
+}

@@ -1,0 +1,387 @@
+//! Minimal threaded HTTP/1.1 server + request/response types.
+//!
+//! Serves the OpenAI-compatible API (§3.2).  Scope: what an inference
+//! server actually needs — request parsing with size limits, keep-alive,
+//! `Content-Length` bodies, chunked *responses* for SSE streaming — and
+//! nothing else.  Thread-per-connection: the serving bottleneck is the
+//! single engine thread, so connection concurrency just needs to be
+//! "enough to keep the batch full".
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read as _, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const MAX_HEADER_BYTES: usize = 64 * 1024;
+const MAX_BODY_BYTES: usize = 64 * 1024 * 1024; // videos arrive base64-inline
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: HashMap<String, String>,
+    /// Lower-cased header names.
+    pub headers: HashMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str, String> {
+        std::str::from_utf8(&self.body).map_err(|e| format!("non-utf8 body: {e}"))
+    }
+}
+
+/// Parse one request from a buffered stream. Returns Ok(None) on clean EOF
+/// (client closed between keep-alive requests).
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>, String> {
+    let mut line = String::new();
+    match r.read_line(&mut line) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(e) => return Err(format!("read error: {e}")),
+    }
+    let line = line.trim_end();
+    let mut parts = line.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().ok_or("malformed request line")?.to_string();
+    let version = parts.next().ok_or("malformed request line")?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(format!("unsupported version {version}"));
+    }
+    if method.is_empty() || !method.chars().all(|c| c.is_ascii_uppercase()) {
+        return Err("malformed method".into());
+    }
+
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), parse_query(q)),
+        None => (target, HashMap::new()),
+    };
+
+    let mut headers = HashMap::new();
+    let mut total = 0usize;
+    loop {
+        let mut hl = String::new();
+        r.read_line(&mut hl).map_err(|e| format!("header read: {e}"))?;
+        total += hl.len();
+        if total > MAX_HEADER_BYTES {
+            return Err("headers too large".into());
+        }
+        let hl = hl.trim_end();
+        if hl.is_empty() {
+            break;
+        }
+        let (k, v) = hl.split_once(':').ok_or("malformed header")?;
+        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+    }
+
+    let mut body = Vec::new();
+    if let Some(cl) = headers.get("content-length") {
+        let n: usize = cl.parse().map_err(|_| "bad content-length")?;
+        if n > MAX_BODY_BYTES {
+            return Err("body too large".into());
+        }
+        body.resize(n, 0);
+        r.read_exact(&mut body).map_err(|e| format!("body read: {e}"))?;
+    } else if headers.get("transfer-encoding").map(|s| s.as_str()) == Some("chunked") {
+        // Chunked *requests* are rare from API clients; support anyway.
+        loop {
+            let mut sz = String::new();
+            r.read_line(&mut sz).map_err(|e| format!("chunk size: {e}"))?;
+            let n = usize::from_str_radix(sz.trim(), 16).map_err(|_| "bad chunk size")?;
+            if body.len() + n > MAX_BODY_BYTES {
+                return Err("body too large".into());
+            }
+            if n == 0 {
+                let mut crlf = String::new();
+                let _ = r.read_line(&mut crlf);
+                break;
+            }
+            let start = body.len();
+            body.resize(start + n, 0);
+            r.read_exact(&mut body[start..]).map_err(|e| format!("chunk read: {e}"))?;
+            let mut crlf = [0u8; 2];
+            r.read_exact(&mut crlf).map_err(|e| format!("chunk crlf: {e}"))?;
+        }
+    }
+
+    Ok(Some(Request { method, path, query, headers, body }))
+}
+
+fn parse_query(q: &str) -> HashMap<String, String> {
+    q.split('&')
+        .filter(|s| !s.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (kv.to_string(), String::new()),
+        })
+        .collect()
+}
+
+/// A response writer bound to one connection.  Supports one-shot bodies
+/// and chunked SSE streaming.
+pub struct ResponseWriter<'a> {
+    stream: &'a mut dyn Write,
+    started: bool,
+}
+
+impl<'a> ResponseWriter<'a> {
+    pub fn new(stream: &'a mut dyn Write) -> Self {
+        ResponseWriter { stream, started: false }
+    }
+
+    pub fn send(&mut self, status: u16, content_type: &str, body: &[u8]) -> std::io::Result<()> {
+        self.started = true;
+        write!(
+            self.stream,
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: keep-alive\r\n\r\n",
+            status,
+            reason(status),
+            content_type,
+            body.len()
+        )?;
+        self.stream.write_all(body)?;
+        self.stream.flush()
+    }
+
+    pub fn send_json(&mut self, status: u16, body: &crate::substrate::json::Json) -> std::io::Result<()> {
+        self.send(status, "application/json", body.to_string().as_bytes())
+    }
+
+    /// Begin a chunked `text/event-stream` response (SSE).
+    pub fn start_sse(&mut self) -> std::io::Result<()> {
+        self.started = true;
+        write!(
+            self.stream,
+            "HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-cache\r\ntransfer-encoding: chunked\r\nconnection: keep-alive\r\n\r\n"
+        )?;
+        self.stream.flush()
+    }
+
+    /// One SSE `data:` event as an HTTP chunk.
+    pub fn sse_event(&mut self, data: &str) -> std::io::Result<()> {
+        let payload = format!("data: {data}\n\n");
+        write!(self.stream, "{:x}\r\n", payload.len())?;
+        self.stream.write_all(payload.as_bytes())?;
+        write!(self.stream, "\r\n")?;
+        self.stream.flush()
+    }
+
+    /// Terminate a chunked response.
+    pub fn finish_sse(&mut self) -> std::io::Result<()> {
+        write!(self.stream, "0\r\n\r\n")?;
+        self.stream.flush()
+    }
+
+    pub fn started(&self) -> bool {
+        self.started
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Serve until `shutdown` flips. `handler` runs on a per-connection thread.
+pub fn serve<F>(listener: TcpListener, shutdown: Arc<AtomicBool>, handler: Arc<F>)
+where
+    F: Fn(Request, &mut ResponseWriter<'_>) + Send + Sync + 'static,
+{
+    listener
+        .set_nonblocking(true)
+        .expect("nonblocking listener");
+    let mut joins = Vec::new();
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let h = handler.clone();
+                let sd = shutdown.clone();
+                joins.push(std::thread::spawn(move || handle_conn(stream, sd, h)));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+        joins.retain(|j| !j.is_finished());
+    }
+    for j in joins {
+        let _ = j.join();
+    }
+}
+
+fn handle_conn<F>(stream: TcpStream, shutdown: Arc<AtomicBool>, handler: Arc<F>)
+where
+    F: Fn(Request, &mut ResponseWriter<'_>),
+{
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(120)))
+        .ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    while !shutdown.load(Ordering::Relaxed) {
+        match read_request(&mut reader) {
+            Ok(Some(req)) => {
+                let mut rw = ResponseWriter::new(&mut writer);
+                handler(req, &mut rw);
+            }
+            Ok(None) => break,
+            Err(msg) => {
+                let mut rw = ResponseWriter::new(&mut writer);
+                let _ = rw.send(400, "text/plain", msg.as_bytes());
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Option<Request>, String> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let r = parse("GET /v1/models?limit=2&full HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/models");
+        assert_eq!(r.query.get("limit").unwrap(), "2");
+        assert!(r.query.contains_key("full"));
+        assert_eq!(r.header("host").unwrap(), "x");
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let r = parse(
+            "POST /v1/chat/completions HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: 13\r\n\r\n{\"model\":\"m\"}",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.body_str().unwrap(), "{\"model\":\"m\"}");
+        assert_eq!(r.header("content-type").unwrap(), "application/json");
+    }
+
+    #[test]
+    fn parses_chunked_body() {
+        let r = parse("POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nhello\r\n6\r\n world\r\n0\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.body, b"hello world");
+    }
+
+    #[test]
+    fn eof_returns_none() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("GARBAGE\r\n\r\n").is_err());
+        assert!(parse("GET /x HTTP/2.0\r\n\r\n").is_err());
+        assert!(parse("get /x HTTP/1.1\r\n\r\n").is_err());
+        assert!(parse("POST /x HTTP/1.1\r\nContent-Length: abc\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn keepalive_sequential_requests() {
+        let raw = "GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let mut cur = Cursor::new(raw.as_bytes().to_vec());
+        assert_eq!(read_request(&mut cur).unwrap().unwrap().path, "/a");
+        assert_eq!(read_request(&mut cur).unwrap().unwrap().path, "/b");
+        assert!(read_request(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn response_writer_one_shot() {
+        let mut buf = Vec::new();
+        {
+            let mut rw = ResponseWriter::new(&mut buf);
+            rw.send(200, "text/plain", b"hi").unwrap();
+        }
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("content-length: 2"));
+        assert!(s.ends_with("hi"));
+    }
+
+    #[test]
+    fn sse_stream_chunks() {
+        let mut buf = Vec::new();
+        {
+            let mut rw = ResponseWriter::new(&mut buf);
+            rw.start_sse().unwrap();
+            rw.sse_event("{\"x\":1}").unwrap();
+            rw.sse_event("[DONE]").unwrap();
+            rw.finish_sse().unwrap();
+        }
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("text/event-stream"));
+        assert!(s.contains("data: {\"x\":1}\n\n"));
+        assert!(s.contains("data: [DONE]\n\n"));
+        assert!(s.ends_with("0\r\n\r\n"));
+        // Chunk framing: every data event preceded by its hex length.
+        let payload = "data: [DONE]\n\n";
+        assert!(s.contains(&format!("{:x}\r\n{payload}", payload.len())));
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = shutdown.clone();
+        let handler = Arc::new(|req: Request, rw: &mut ResponseWriter<'_>| {
+            let body = format!("path={}", req.path);
+            rw.send(200, "text/plain", body.as_bytes()).unwrap();
+        });
+        let th = std::thread::spawn(move || serve(listener, sd, handler));
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET /ping HTTP/1.1\r\n\r\n").unwrap();
+        let mut r = BufReader::new(conn.try_clone().unwrap());
+        let mut status = String::new();
+        r.read_line(&mut status).unwrap();
+        assert!(status.starts_with("HTTP/1.1 200"));
+        let mut len = 0usize;
+        loop {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+                len = v.trim().parse().unwrap();
+            }
+        }
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body).unwrap();
+        assert_eq!(body, b"path=/ping");
+
+        shutdown.store(true, Ordering::Relaxed);
+        th.join().unwrap();
+    }
+}

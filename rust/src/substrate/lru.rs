@@ -1,0 +1,257 @@
+//! Byte-budgeted LRU map.
+//!
+//! Backs both prefix caches (§3.3 "Memory Management": "We implement LRU
+//! eviction to bound memory consumption, with configurable limits
+//! (default 512MB)").  Entries carry an explicit byte cost because cache
+//! values (vision embeddings + KV state) vary by orders of magnitude
+//! with resolution / frame count.
+//!
+//! Implementation: HashMap + monotonic touch counters with a lazy
+//! min-heap-free eviction scan.  Entry count is small (tens) while entry
+//! *size* is large, so O(n) eviction scans are cheaper and simpler than
+//! an intrusive list — revisit if entry counts ever grow (documented
+//! trade-off, see bench `ablation_scheduler`).
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+pub struct LruCache<K, V> {
+    map: HashMap<K, Entry<V>>,
+    budget_bytes: usize,
+    used_bytes: usize,
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+struct Entry<V> {
+    value: V,
+    bytes: usize,
+    last_used: u64,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    pub fn new(budget_bytes: usize) -> Self {
+        LruCache {
+            map: HashMap::new(),
+            budget_bytes,
+            used_bytes: 0,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Look up and mark as most-recently-used.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        self.clock += 1;
+        match self.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.clock;
+                self.hits += 1;
+                Some(&e.value)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Look up without affecting recency or hit/miss stats.
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.map.get(key).map(|e| &e.value)
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Insert (replacing any previous entry), then evict LRU entries
+    /// until within budget.  An entry larger than the whole budget is
+    /// rejected and returns false.
+    pub fn insert(&mut self, key: K, value: V, bytes: usize) -> bool {
+        if bytes > self.budget_bytes {
+            return false;
+        }
+        self.clock += 1;
+        if let Some(old) = self.map.remove(&key) {
+            self.used_bytes -= old.bytes;
+        }
+        self.map.insert(key, Entry { value, bytes, last_used: self.clock });
+        self.used_bytes += bytes;
+        self.evict_to_budget();
+        true
+    }
+
+    pub fn remove(&mut self, key: &K) -> Option<V> {
+        let e = self.map.remove(key)?;
+        self.used_bytes -= e.bytes;
+        Some(e.value)
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.used_bytes = 0;
+    }
+
+    fn evict_to_budget(&mut self) {
+        while self.used_bytes > self.budget_bytes {
+            // O(n) scan for the least-recently-used key; see module doc.
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    let e = self.map.remove(&k).unwrap();
+                    self.used_bytes -= e.bytes;
+                    self.evictions += 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// (hits, misses, evictions, used_bytes) snapshot for /metrics.
+    pub fn stats(&self) -> (u64, u64, u64, usize) {
+        (self.hits, self.misses, self.evictions, self.used_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let mut c: LruCache<u32, String> = LruCache::new(100);
+        assert!(c.insert(1, "a".into(), 10));
+        assert!(c.get(&1).is_some());
+        assert!(c.get(&2).is_none());
+        assert_eq!((c.hits, c.misses), (1, 1));
+    }
+
+    #[test]
+    fn evicts_lru_not_mru() {
+        let mut c: LruCache<u32, ()> = LruCache::new(30);
+        c.insert(1, (), 10);
+        c.insert(2, (), 10);
+        c.insert(3, (), 10);
+        c.get(&1); // 1 is now MRU; 2 is LRU
+        c.insert(4, (), 10); // must evict 2
+        assert!(c.contains(&1));
+        assert!(!c.contains(&2));
+        assert!(c.contains(&3));
+        assert!(c.contains(&4));
+        assert_eq!(c.evictions, 1);
+    }
+
+    #[test]
+    fn byte_budget_enforced() {
+        let mut c: LruCache<u32, ()> = LruCache::new(100);
+        for i in 0..20 {
+            c.insert(i, (), 15);
+        }
+        assert!(c.used_bytes() <= 100);
+        assert_eq!(c.len(), 6); // 6*15 = 90 <= 100 < 7*15
+    }
+
+    #[test]
+    fn oversized_entry_rejected() {
+        let mut c: LruCache<u32, ()> = LruCache::new(100);
+        assert!(!c.insert(1, (), 101));
+        assert!(c.is_empty());
+        assert!(c.insert(2, (), 100));
+    }
+
+    #[test]
+    fn replace_updates_bytes() {
+        let mut c: LruCache<u32, u32> = LruCache::new(100);
+        c.insert(1, 10, 60);
+        c.insert(1, 20, 30);
+        assert_eq!(c.used_bytes(), 30);
+        assert_eq!(*c.get(&1).unwrap(), 20);
+    }
+
+    #[test]
+    fn remove_and_clear() {
+        let mut c: LruCache<u32, ()> = LruCache::new(100);
+        c.insert(1, (), 40);
+        c.insert(2, (), 40);
+        assert!(c.remove(&1).is_some());
+        assert_eq!(c.used_bytes(), 40);
+        c.clear();
+        assert_eq!(c.used_bytes(), 0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn peek_does_not_touch() {
+        let mut c: LruCache<u32, ()> = LruCache::new(20);
+        c.insert(1, (), 10);
+        c.insert(2, (), 10);
+        c.peek(&1); // no recency bump
+        c.insert(3, (), 10); // evicts 1 (LRU despite the peek)
+        assert!(!c.contains(&1));
+        assert!(c.contains(&2));
+    }
+
+    /// Property-style sweep: random ops never exceed budget and never
+    /// evict the most-recently-used entry.
+    #[test]
+    fn randomized_invariants() {
+        let mut c: LruCache<u64, u64> = LruCache::new(500);
+        let mut state = 0x12345678u64;
+        let mut rand = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let mut last_inserted = None;
+        for _ in 0..5000 {
+            let k = rand() % 50;
+            match rand() % 3 {
+                0 => {
+                    let sz = (rand() % 90 + 1) as usize;
+                    if c.insert(k, k, sz) {
+                        last_inserted = Some(k);
+                    }
+                }
+                1 => {
+                    c.get(&k);
+                }
+                _ => {
+                    if last_inserted == Some(k) {
+                        last_inserted = None;
+                    }
+                    c.remove(&k);
+                }
+            }
+            assert!(c.used_bytes() <= 500);
+            if let Some(k) = last_inserted {
+                assert!(c.contains(&k), "MRU entry must survive");
+            }
+        }
+    }
+}

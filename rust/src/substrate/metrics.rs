@@ -1,0 +1,176 @@
+//! Serving metrics: counters + latency histograms + Prometheus text
+//! rendering (`/metrics` endpoint), with no global state — the scheduler
+//! owns one `MetricsRegistry` and snapshots are cloned out.
+
+use std::collections::BTreeMap;
+
+/// Log-bucketed latency histogram (microseconds to minutes).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Bucket upper bounds in milliseconds.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum_ms: f64,
+    count: u64,
+    max_ms: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 0.1ms .. ~100s, roughly x2 per bucket.
+        let bounds: Vec<f64> = (0..21).map(|i| 0.1 * 2f64.powi(i)).collect();
+        let n = bounds.len();
+        Histogram { bounds, counts: vec![0; n + 1], sum_ms: 0.0, count: 0, max_ms: 0.0 }
+    }
+
+    pub fn observe_ms(&mut self, ms: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| ms <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum_ms += ms;
+        self.count += 1;
+        if ms > self.max_ms {
+            self.max_ms = ms;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.count as f64
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_ms
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max_ms };
+            }
+        }
+        self.max_ms
+    }
+}
+
+/// A named collection of counters, gauges and histograms.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn observe_ms(&mut self, name: &str, ms: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_default()
+            .observe_ms(ms);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Prometheus text exposition format.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("# TYPE umserve_{k} counter\numserve_{k} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("# TYPE umserve_{k} gauge\numserve_{k} {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            out.push_str(&format!(
+                "# TYPE umserve_{k}_ms summary\numserve_{k}_ms_count {}\numserve_{k}_ms_mean {:.3}\numserve_{k}_ms_p50 {:.3}\numserve_{k}_ms_p95 {:.3}\numserve_{k}_ms_max {:.3}\n",
+                h.count(),
+                h.mean_ms(),
+                h.quantile_ms(0.5),
+                h.quantile_ms(0.95),
+                h.max_ms()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::new();
+        for ms in [1.0, 2.0, 3.0, 100.0] {
+            h.observe_ms(ms);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean_ms() - 26.5).abs() < 1e-9);
+        assert_eq!(h.max_ms(), 100.0);
+        // p50 falls in the bucket containing the 2nd observation.
+        assert!(h.quantile_ms(0.5) >= 2.0 && h.quantile_ms(0.5) <= 6.4);
+        assert!(h.quantile_ms(1.0) >= 100.0);
+    }
+
+    #[test]
+    fn registry_counters_and_render() {
+        let mut m = MetricsRegistry::new();
+        m.inc("requests_total", 1);
+        m.inc("requests_total", 2);
+        m.set_gauge("active_requests", 3.0);
+        m.observe_ms("ttft", 12.5);
+        assert_eq!(m.counter("requests_total"), 3);
+        let text = m.render_prometheus();
+        assert!(text.contains("umserve_requests_total 3"));
+        assert!(text.contains("umserve_active_requests 3"));
+        assert!(text.contains("umserve_ttft_ms_count 1"));
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.quantile_ms(0.99), 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree substrates: every generic building block the coordinator needs
+//! that is not the paper's contribution itself. Built from scratch because
+//! the deployment target is a self-contained static binary (and, for this
+//! reproduction, because the build is fully offline).
+
+pub mod argparse;
+pub mod base64;
+pub mod hash;
+pub mod http;
+pub mod json;
+pub mod lru;
+pub mod metrics;

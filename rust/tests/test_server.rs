@@ -1,0 +1,239 @@
+//! End-to-end HTTP server tests: OpenAI wire format, streaming SSE,
+//! multimodal content parts, error handling, metrics — all against a
+//! live server backed by the real model.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::EngineConfig;
+use umserve::multimodal::image::{generate_image, ImageSource};
+use umserve::substrate::json::parse;
+
+struct TestServer {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: umserve::coordinator::scheduler::SchedulerHandle,
+}
+
+impl TestServer {
+    fn start(model: &str) -> Self {
+        let handle = Scheduler::spawn(EngineConfig {
+            model: model.into(),
+            artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+            warmup: false,
+            ..Default::default()
+        })
+        .expect("scheduler");
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        {
+            let h = handle.clone();
+            let sd = shutdown.clone();
+            let model = model.to_string();
+            std::thread::spawn(move || {
+                let _ = umserve::server::serve(listener, h, model, sd);
+            });
+        }
+        TestServer { addr, shutdown, handle }
+    }
+
+    fn post(&self, path: &str, body: &str) -> (u16, String) {
+        let mut conn = TcpStream::connect(self.addr).unwrap();
+        write!(
+            conn,
+            "POST {path} HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        read_response(conn)
+    }
+
+    fn get(&self, path: &str) -> (u16, String) {
+        let mut conn = TcpStream::connect(self.addr).unwrap();
+        write!(conn, "GET {path} HTTP/1.1\r\n\r\n").unwrap();
+        read_response(conn)
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.handle.shutdown();
+    }
+}
+
+fn read_response(conn: TcpStream) -> (u16, String) {
+    let mut r = BufReader::new(conn);
+    let mut status_line = String::new();
+    r.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line.split(' ').nth(1).unwrap().parse().unwrap();
+    let mut len = 0usize;
+    let mut chunked = false;
+    loop {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let line = line.trim_end().to_ascii_lowercase();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line.strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap();
+        }
+        if line == "transfer-encoding: chunked" {
+            chunked = true;
+        }
+    }
+    if chunked {
+        // Decode chunked body.
+        let mut body = String::new();
+        loop {
+            let mut sz = String::new();
+            r.read_line(&mut sz).unwrap();
+            let n = usize::from_str_radix(sz.trim(), 16).unwrap();
+            if n == 0 {
+                let mut crlf = String::new();
+                let _ = r.read_line(&mut crlf);
+                break;
+            }
+            let mut chunk = vec![0u8; n];
+            r.read_exact(&mut chunk).unwrap();
+            body.push_str(std::str::from_utf8(&chunk).unwrap());
+            let mut crlf = [0u8; 2];
+            r.read_exact(&mut crlf).unwrap();
+        }
+        (status, body)
+    } else {
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body).unwrap();
+        (status, String::from_utf8(body).unwrap())
+    }
+}
+
+#[test]
+fn chat_completion_roundtrip() {
+    let srv = TestServer::start("qwen3-0.6b");
+    let (status, body) = srv.post(
+        "/v1/chat/completions",
+        r#"{"model":"qwen3-0.6b","max_tokens":8,
+            "messages":[{"role":"user","content":"hello world"}]}"#,
+    );
+    assert_eq!(status, 200, "{body}");
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("object").unwrap().as_str().unwrap(), "chat.completion");
+    let msg = v.path(&["choices"]).unwrap().as_arr().unwrap()[0]
+        .path(&["message", "content"])
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+    assert!(!msg.is_empty());
+    let usage = v.path(&["usage", "completion_tokens"]).unwrap().as_usize().unwrap();
+    assert!(usage > 0 && usage <= 8);
+}
+
+#[test]
+fn completions_and_determinism() {
+    let srv = TestServer::start("qwen3-0.6b");
+    let req = r#"{"prompt":"the quick brown","max_tokens":6}"#;
+    let (s1, b1) = srv.post("/v1/completions", req);
+    let (s2, b2) = srv.post("/v1/completions", req);
+    assert_eq!((s1, s2), (200, 200));
+    let t1 = parse(&b1).unwrap().path(&["choices"]).unwrap().as_arr().unwrap()[0]
+        .get("text").unwrap().as_str().unwrap().to_string();
+    let t2 = parse(&b2).unwrap().path(&["choices"]).unwrap().as_arr().unwrap()[0]
+        .get("text").unwrap().as_str().unwrap().to_string();
+    assert_eq!(t1, t2, "greedy completions must be deterministic");
+}
+
+#[test]
+fn streaming_sse_chunks() {
+    let srv = TestServer::start("qwen3-0.6b");
+    let (status, body) = srv.post(
+        "/v1/chat/completions",
+        r#"{"stream":true,"max_tokens":6,"messages":[{"role":"user","content":"hi"}]}"#,
+    );
+    assert_eq!(status, 200);
+    let events: Vec<&str> = body
+        .split("\n\n")
+        .filter_map(|e| e.trim().strip_prefix("data: "))
+        .collect();
+    assert!(events.len() >= 3, "expected several SSE events: {body}");
+    assert_eq!(*events.last().unwrap(), "[DONE]");
+    // Every non-terminal event is valid JSON with a choices array.
+    let mut content = String::new();
+    for e in &events[..events.len() - 1] {
+        let v = parse(e).unwrap_or_else(|_| panic!("bad SSE json: {e}"));
+        if v.get("object").map(|o| o.as_str() == Some("chat.completion.chunk")) == Some(true) {
+            if let Some(d) = v.path(&["choices"]).unwrap().as_arr().unwrap()[0]
+                .path(&["delta", "content"])
+            {
+                content.push_str(d.as_str().unwrap_or(""));
+            }
+        }
+    }
+    assert!(!content.is_empty(), "streamed content empty");
+}
+
+#[test]
+fn multimodal_chat_over_http_hits_cache() {
+    let srv = TestServer::start("qwen3-vl-4b");
+    let img = generate_image(9001, 224);
+    let url = ImageSource::to_data_url(&img);
+    let req = format!(
+        r#"{{"max_tokens":4,"messages":[{{"role":"user","content":[
+            {{"type":"image_url","image_url":{{"url":"{url}"}}}},
+            {{"type":"text","text":"describe"}}]}}]}}"#
+    );
+    let (s1, _) = srv.post("/v1/chat/completions", &req);
+    let (s2, _) = srv.post("/v1/chat/completions", &req);
+    assert_eq!((s1, s2), (200, 200));
+    let (_, metrics) = srv.get("/metrics");
+    let hits: u64 = metrics
+        .lines()
+        .find(|l| l.starts_with("umserve_mm_kv_hits"))
+        .and_then(|l| l.split(' ').nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    assert!(hits >= 1, "expected an mm KV hit after a repeated query:\n{metrics}");
+}
+
+#[test]
+fn error_paths() {
+    let srv = TestServer::start("qwen3-0.6b");
+    // Malformed JSON.
+    let (s, b) = srv.post("/v1/chat/completions", "{nope");
+    assert_eq!(s, 400, "{b}");
+    assert!(parse(&b).unwrap().get("error").is_some());
+    // Missing messages.
+    let (s, _) = srv.post("/v1/chat/completions", "{}");
+    assert_eq!(s, 400);
+    // Unknown route.
+    let (s, _) = srv.get("/v2/nothing");
+    assert_eq!(s, 404);
+    // Remote image URL rejected.
+    let (s, b) = srv.post(
+        "/v1/chat/completions",
+        r#"{"messages":[{"role":"user","content":[{"type":"image_url","image_url":{"url":"https://x.com/a.png"}}]}]}"#,
+    );
+    assert_eq!(s, 400, "{b}");
+}
+
+#[test]
+fn health_models_metrics() {
+    let srv = TestServer::start("qwen3-0.6b");
+    let (s, b) = srv.get("/health");
+    assert_eq!(s, 200);
+    assert!(b.contains("ok"));
+    let (s, b) = srv.get("/v1/models");
+    assert_eq!(s, 200);
+    assert!(b.contains("qwen3-0.6b"));
+    let (s, b) = srv.get("/metrics");
+    assert_eq!(s, 200);
+    // Gauges are always rendered; counters appear after first use.
+    assert!(b.contains("umserve_bucket"), "{b}");
+    assert!(b.contains("umserve_text_cache_hits"));
+}
