@@ -29,7 +29,7 @@ from jax._src.lib import xla_client as xc
 
 from . import model as M
 from . import vision as V
-from .configs import EMBED_PREFILL_BUCKETS, MODELS, ModelConfig
+from .configs import EMBED_PREFILL_BUCKETS, MODELS, PREFILL_CHUNK_BUCKETS, ModelConfig
 from .tokenizer_train import export as export_tokenizer
 from .weights import build_weights, text_weight_order, vision_weight_order, write_umw
 
@@ -155,6 +155,52 @@ class EntryBuilder:
             self.t_specs,
         )
 
+    def prefill_chunk(self, c: int):
+        cfg = self.cfg
+        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
+        self.lower(
+            f"prefill_chunk_c{c}",
+            functools.partial(M.prefill_chunk_fn, cfg),
+            [
+                arg_desc("tokens", "input", spec((c,), I32)),
+                arg_desc("start", "input", spec((), I32)),
+                arg_desc("length", "input", spec((), I32)),
+                arg_desc("kv_one", "input", kv_one),
+            ],
+            [spec((c,), I32), spec((), I32), spec((), I32), kv_one],
+            self.t_order,
+            self.t_specs,
+            donate=(3,),
+        )
+
+    def prefill_chunk_embeds(self, c: int):
+        cfg = self.cfg
+        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
+        self.lower(
+            f"prefill_chunk_embeds_c{c}",
+            functools.partial(M.prefill_chunk_embeds_fn, cfg),
+            [
+                arg_desc("embeds", "input", spec((c, cfg.d_model), F32)),
+                arg_desc("start", "input", spec((), I32)),
+                arg_desc("length", "input", spec((), I32)),
+                arg_desc("kv_one", "input", kv_one),
+            ],
+            [spec((c, cfg.d_model), F32), spec((), I32), spec((), I32), kv_one],
+            self.t_order,
+            self.t_specs,
+            donate=(3,),
+        )
+
+    def zeros(self, b: int):
+        self.lower(
+            f"zeros_b{b}",
+            functools.partial(M.zeros_fn, self.cfg, b),
+            [],
+            [],
+            [],
+            [],
+        )
+
     def embed_lookup(self, s: int):
         cfg = self.cfg
         self.lower(
@@ -174,6 +220,21 @@ class EntryBuilder:
             functools.partial(M.read_logits_fn, cfg),
             [arg_desc("kv", "input", kv)],
             [kv],
+            [],
+            [],
+        )
+
+    def read_logits_one(self, b: int):
+        cfg = self.cfg
+        kv = spec(M.kv_arena_shape(cfg, b), F32)
+        self.lower(
+            f"read_logits_one_b{b}",
+            functools.partial(M.read_logits_one_fn, cfg),
+            [
+                arg_desc("kv", "input", kv),
+                arg_desc("slot", "input", spec((), I32)),
+            ],
+            [kv, spec((), I32)],
             [],
             [],
         )
@@ -242,12 +303,18 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
         eb.inject(b)
         eb.extract(b)
         eb.read_logits(b)
+        eb.read_logits_one(b)
+        eb.zeros(b)
     for s in cfg.prefill_buckets:
         eb.prefill(s)
+    for c in PREFILL_CHUNK_BUCKETS:
+        eb.prefill_chunk(c)
     if cfg.vision:
         for s in EMBED_PREFILL_BUCKETS:
             eb.prefill_embeds(s)
             eb.embed_lookup(s)
+        for c in PREFILL_CHUNK_BUCKETS:
+            eb.prefill_chunk_embeds(c)
         for r in cfg.vision.resolutions:
             eb.vision(r)
 
@@ -271,6 +338,7 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
         ),
         "decode_buckets": list(cfg.decode_buckets),
         "prefill_buckets": list(cfg.prefill_buckets),
+        "prefill_chunk_buckets": list(PREFILL_CHUNK_BUCKETS),
         "embed_prefill_buckets": list(EMBED_PREFILL_BUCKETS) if cfg.vision else [],
         "vision": (
             {

@@ -157,3 +157,9 @@ MODELS = {
 
 # VL prefill-with-embeddings buckets: visual tokens (<=256) + text.
 EMBED_PREFILL_BUCKETS = (64, 192, 384, 640)
+
+# Chunked-prefill buckets: chunk sizes the staged admission pipeline can
+# feed per call (`prefill_chunk_c{C}` / `prefill_chunk_embeds_c{C}`).
+# Small bucket for short catch-up suffixes, large for full-prompt chunks
+# (the scheduler's default prefill_chunk_tokens is the largest bucket).
+PREFILL_CHUNK_BUCKETS = (8, 32)

@@ -285,6 +285,104 @@ def embed_lookup_fn(cfg: ModelConfig, tokens, *weights):
     return jnp.take(w["emb"], tokens, axis=0)
 
 
+# ------------------------------------------------------- chunked prefill
+
+def _chunk_body(cfg: ModelConfig, w: W, x, start, length, kv_one):
+    """Extend a partially-built kv_one by one chunk of embeddings.
+
+    The chunk occupies absolute positions ``start .. start+length-1`` of
+    the sequence.  Token-for-token this mirrors ``decode_fn`` — the same
+    fused Pallas attention kernel runs with the chunk rows as the batch
+    axis over a shared (broadcast) cache, and causality is enforced per
+    row by ``lens`` exactly as a decode step enforces it.  Feeding a
+    suffix in chunks therefore matches the token-by-token bucket-1
+    decode path within fp tolerance with identical greedy argmax (NOT
+    bit-exactly: XLA fuses [C, d] and [1, d] row blocks differently —
+    empirically ~2e-6 max abs diff; the equivalence tests assert 2e-4
+    plus argmax equality, the same batch-invariance contract the decode
+    arena already relies on).
+
+    Args:
+      x:      [C, d] chunk embeddings (rows >= length are padding).
+      start:  scalar i32, first absolute position of the chunk.
+      length: scalar i32, valid rows in the chunk.
+      kv_one: [L+1, 2, 1, Hkv, S_max, Dh] state built so far (positions
+              < start are valid; everything else is garbage/zeros).
+
+    Returns:
+      Updated kv_one with the chunk's K/V written at its positions and
+      the LAST valid chunk row's logits in the plane-0 mailbox.
+    """
+    c = x.shape[0]
+    offs = jnp.arange(c, dtype=jnp.int32)
+    pos = start + offs                                         # [C] absolute
+    valid = offs < length
+    # Per-row attention length, as decode: the row's own K/V included.
+    lens = jnp.where(valid, pos + 1, 1)
+    # Scatter target rows; invalid rows write out of range -> dropped.
+    pos_w = jnp.where(valid, pos, cfg.s_max)
+    planes = [None] * (cfg.n_layers + 1)
+
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        h = rmsnorm(x, w[p + "norm1"])
+        q = qmm(h, w, p + "wq").reshape(c, cfg.n_q_heads, cfg.d_head)
+        k = qmm(h, w, p + "wk").reshape(c, cfg.n_kv_heads, cfg.d_head)
+        v = qmm(h, w, p + "wv").reshape(c, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+
+        # Write the chunk's K/V rows into the single cache row.
+        k_cache = kv_one[l + 1, 0, 0]                          # [Hkv, S, Dh]
+        v_cache = kv_one[l + 1, 1, 0]
+        k_cache = k_cache.at[:, pos_w, :].set(
+            jnp.transpose(k, (1, 0, 2)), mode="drop")
+        v_cache = v_cache.at[:, pos_w, :].set(
+            jnp.transpose(v, (1, 0, 2)), mode="drop")
+        planes[l + 1] = jnp.stack([k_cache, v_cache])[:, None]  # [2,1,Hkv,S,Dh]
+
+        # Same fused kernel as decode: chunk rows are the batch axis over
+        # a shared cache; lens masks rows written by later chunk tokens.
+        kb = jnp.broadcast_to(k_cache, (c,) + k_cache.shape)
+        vb = jnp.broadcast_to(v_cache, (c,) + v_cache.shape)
+        attn = decode_attention(q, kb, vb, lens)               # [C, Hq, Dh]
+        x = x + qmm(attn.reshape(c, cfg.d_q), w, p + "wo")
+        h2 = rmsnorm(x, w[p + "norm2"])
+        x = x + _ffn(cfg, w, p, h2)
+
+    x = rmsnorm(x, w["norm_f"])
+    last = jax.lax.dynamic_slice(x, (length - 1, 0), (1, cfg.d_model))
+    logits = qmm(last, w, "unembed")                           # [1, vocab]
+    return _assemble_kv_one(cfg, planes, logits)
+
+
+def prefill_chunk_fn(cfg: ModelConfig, tokens, start, length, kv_one, *weights):
+    """Resume-capable prompt processing: extend kv_one by one token chunk.
+
+    Args:
+      tokens: [C_bucket] i32, padded with 0 beyond `length`.
+      start:  scalar i32 absolute position of tokens[0].
+      length: scalar i32 valid tokens in this chunk.
+      kv_one: the state built by previous chunks (donated).
+    """
+    w = W(text_weight_order(cfg), weights)
+    x = jnp.take(w["emb"], tokens, axis=0)                     # [C, d]
+    return _chunk_body(cfg, w, x, start, length, kv_one)
+
+
+def prefill_chunk_embeds_fn(cfg: ModelConfig, embeds, start, length, kv_one,
+                            *weights):
+    """Chunked prefill from raw embeddings (multimodal staged pipeline)."""
+    w = W(text_weight_order(cfg), weights)
+    return _chunk_body(cfg, w, embeds.astype(jnp.float32), start, length, kv_one)
+
+
+def zeros_fn(cfg: ModelConfig, batch: int):
+    """Device-side zero arena allocator (`zeros_b{B}`): replaces the
+    host-side vec![0f32] upload on every arena creation/migration."""
+    return jnp.zeros(kv_arena_shape(cfg, batch), jnp.float32)
+
+
 # ------------------------------------------------------- arena management
 
 def inject_fn(cfg: ModelConfig, arena, kv_one, slot):
@@ -313,6 +411,20 @@ def read_logits_fn(cfg: ModelConfig, kv):
     b = kv.shape[2]
     r = kv[0, 0, :, 0, :rows, :]                  # [B, rows, Dh]
     return r.reshape(b, rows * cfg.d_head)[:, : cfg.vocab]
+
+
+def read_logits_one_fn(cfg: ModelConfig, kv, slot):
+    """Extract ONE slot's plane-0 mailbox: kv, slot -> [vocab].
+
+    Lowered per decode bucket (`read_logits_one_b{B}`) so sparse batches
+    read back O(vocab) bytes per ACTIVE slot instead of the whole
+    [B, vocab] literal — the readback analog of slot-level admission.
+    """
+    rows = logits_rows(cfg)
+    plane = kv[0, 0]                              # [B, Hkv, S, Dh]
+    row = jax.lax.dynamic_slice(
+        plane, (slot, 0, 0, 0), (1, 1, rows, cfg.d_head))
+    return row.reshape(rows * cfg.d_head)[: cfg.vocab]
 
 
 def read_logits_mailbox(cfg: ModelConfig, kv, slot: int):

@@ -5,7 +5,7 @@ import os
 
 import pytest
 
-from compile.configs import EMBED_PREFILL_BUCKETS, MODELS
+from compile.configs import EMBED_PREFILL_BUCKETS, MODELS, PREFILL_CHUNK_BUCKETS
 
 ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
 
@@ -28,16 +28,23 @@ def test_entry_inventory(manifest, name):
     cfg = MODELS[name]
     entries = manifest["models"][name]["entries"]
     for b in cfg.decode_buckets:
-        for kind in ("decode", "inject", "extract", "read_logits"):
+        for kind in ("decode", "inject", "extract", "read_logits",
+                     "read_logits_one", "zeros"):
             assert f"{kind}_b{b}" in entries, f"{name} missing {kind}_b{b}"
     for s in cfg.prefill_buckets:
         assert f"prefill_s{s}" in entries
+    for c in PREFILL_CHUNK_BUCKETS:
+        assert f"prefill_chunk_c{c}" in entries
+    assert manifest["models"][name]["prefill_chunk_buckets"] == list(
+        PREFILL_CHUNK_BUCKETS)
     if cfg.vision:
         for r in cfg.vision.resolutions:
             assert f"vision_r{r}" in entries
         for s in EMBED_PREFILL_BUCKETS:
             assert f"prefill_embeds_s{s}" in entries
             assert f"embed_lookup_s{s}" in entries
+        for c in PREFILL_CHUNK_BUCKETS:
+            assert f"prefill_chunk_embeds_c{c}" in entries
 
 
 @pytest.mark.parametrize("name", list(MODELS))

@@ -102,6 +102,102 @@ def test_logits_mailbox_consistency():
     assert via_fn.shape == (1, CFG.vocab)
 
 
+def test_chunked_prefill_matches_full_prefill():
+    """Feeding a prompt in chunks through prefill_chunk_fn must agree
+    with one-shot prefill_fn on logits AND on every valid KV position."""
+    p = [1, 10, 20, 30, 40, 50, 60, 70, 80, 90, 100, 110]
+    kv_full = prefill(CFG, ARRS, p)
+
+    kv = M.zeros_fn(CFG, 1)
+    for start in range(0, len(p), 8):
+        chunk = p[start : start + 8]
+        toks = jnp.zeros(8, jnp.int32).at[: len(chunk)].set(jnp.asarray(chunk))
+        kv = M.prefill_chunk_fn(
+            CFG, toks, jnp.asarray(start, jnp.int32),
+            jnp.asarray(len(chunk), jnp.int32), kv, *ARRS)
+
+    np.testing.assert_allclose(
+        M.read_logits_mailbox(CFG, kv, 0),
+        M.read_logits_mailbox(CFG, kv_full, 0),
+        rtol=2e-4, atol=2e-4,
+    )
+    a = np.asarray(kv)[1:, :, :, :, : len(p), :]
+    b = np.asarray(kv_full)[1:, :, :, :, : len(p), :]
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_suffix_feed_matches_decode_feed():
+    """The chunked catch-up invariant: extending a KV state by a suffix
+    via ONE prefill_chunk_fn call must match feeding the suffix
+    token-by-token through bucket-1 decode.  The same fused kernel runs
+    in both paths, but XLA fuses [C, d] and [1, d] row blocks
+    differently, so equality is within fp tolerance (empirically
+    <2e-6 abs) with identical greedy argmax — the same batch-invariance
+    contract the decode arena already relies on."""
+    prefix = [1, 5, 9, 13]
+    suffix = [17, 21, 25, 29, 33]
+    kv = prefill(CFG, ARRS, prefix)
+
+    # Path A: token-by-token decode on an injected arena, then extract.
+    arena = M.inject_fn(CFG, jnp.zeros(M.kv_arena_shape(CFG, 1), jnp.float32),
+                        kv, jnp.asarray(0, jnp.int32))
+    for i, t in enumerate(suffix):
+        arena = M.decode_fn(CFG, jnp.asarray([t], jnp.int32),
+                            jnp.asarray([len(prefix) + i], jnp.int32), arena, *ARRS)
+    kv_a = M.extract_fn(CFG, arena, jnp.asarray(0, jnp.int32))
+
+    # Path B: one chunk call on a copy of the same state.
+    kv_b = M.inject_fn(CFG, jnp.zeros(M.kv_arena_shape(CFG, 1), jnp.float32),
+                       kv, jnp.asarray(0, jnp.int32))
+    toks = jnp.zeros(8, jnp.int32).at[: len(suffix)].set(jnp.asarray(suffix))
+    kv_b = M.prefill_chunk_fn(
+        CFG, toks, jnp.asarray(len(prefix), jnp.int32),
+        jnp.asarray(len(suffix), jnp.int32), kv_b, *ARRS)
+
+    np.testing.assert_allclose(np.asarray(kv_a), np.asarray(kv_b),
+                               rtol=2e-4, atol=2e-4)
+    la = M.read_logits_mailbox(CFG, kv_a, 0)
+    lb = M.read_logits_mailbox(CFG, kv_b, 0)
+    assert int(jnp.argmax(la)) == int(jnp.argmax(lb))
+
+
+def test_chunked_prefill_embeds_matches_token_chunks():
+    """prefill_chunk_embeds_fn(emb[chunk]) == prefill_chunk_fn(chunk)."""
+    prefix = [1, 3, 5]
+    suffix = [7, 11, 15, 19]
+    kv0 = prefill(CFG, ARRS, prefix)
+    base = lambda: M.inject_fn(
+        CFG, jnp.zeros(M.kv_arena_shape(CFG, 1), jnp.float32), kv0,
+        jnp.asarray(0, jnp.int32))
+    toks = jnp.zeros(8, jnp.int32).at[: len(suffix)].set(jnp.asarray(suffix))
+    kv_t = M.prefill_chunk_fn(
+        CFG, toks, jnp.asarray(len(prefix), jnp.int32),
+        jnp.asarray(len(suffix), jnp.int32), base(), *ARRS)
+    emb = M.embed_lookup_fn(CFG, toks, *ARRS)
+    kv_e = M.prefill_chunk_embeds_fn(
+        CFG, emb, jnp.asarray(len(prefix), jnp.int32),
+        jnp.asarray(len(suffix), jnp.int32), base(), *ARRS)
+    np.testing.assert_allclose(np.asarray(kv_t), np.asarray(kv_e),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_zeros_fn_matches_arena_shape():
+    for b in (1, 4):
+        z = M.zeros_fn(CFG, b)
+        assert z.shape == M.kv_arena_shape(CFG, b)
+        assert not np.asarray(z).any()
+
+
+def test_read_logits_one_matches_mailbox():
+    kv = prefill(CFG, ARRS, [1, 2, 3, 4])
+    z = jnp.zeros(M.kv_arena_shape(CFG, 4), jnp.float32)
+    arena = M.inject_fn(CFG, z, kv, jnp.asarray(2, jnp.int32))
+    got = M.read_logits_one_fn(CFG, arena, jnp.asarray(2, jnp.int32))
+    want = M.read_logits_mailbox(CFG, arena, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+    assert got.shape == (CFG.vocab,)
+
+
 def test_moe_routing_uses_top2():
     """A MoE model's FFN output == manual dense mix of top-2 experts."""
     cfg = MODELS["qwen3-30b-a3b"]

@@ -1,0 +1,193 @@
+//! Chunked-prefill ablation: staged admission (prefill chunks
+//! interleaved with decode) vs legacy inline prefill, at 1/4/16
+//! concurrent streams of mixed-length prompts.
+//!
+//! Reported per (streams, policy): wall time, aggregate decode tok/s,
+//! TTFT p50/p95, inter-token latency p99 (per-request gaps between
+//! token arrivals), and the scheduler's decode-stall histogram p99 —
+//! the time active sequences spent NOT decoding between steps, which is
+//! exactly what chunking bounds.  With inline prefill every arrival
+//! stalls the whole batch for a full prompt prefill; with chunking the
+//! stall is one chunk.  The two policies must produce IDENTICAL token
+//! streams for identical seeds (verified at the end).
+
+use std::collections::HashMap;
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
+
+use umserve::bench_harness::{banner, fmt_f, synth_prompt, Table};
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{EngineConfig, Event, GenRequest, PromptInput};
+use umserve::engine::sampler::SamplingParams;
+
+const GEN: usize = 16;
+/// Mixed prompt lengths: short / medium / long (chunk size is 32).
+const PROMPT_LENS: [usize; 3] = [16, 96, 256];
+
+fn main() -> anyhow::Result<()> {
+    banner("Chunked-prefill ablation — TTFT / ITL / decode-stall vs inline prefill");
+
+    let mut table = Table::new(
+        &format!("Chunked prefill (qwen3-0.6b-sim, mixed {PROMPT_LENS:?}-token prompts, {GEN} gen)"),
+        &[
+            "Streams",
+            "Policy",
+            "Wall (s)",
+            "Agg tok/s",
+            "TTFT p50 (ms)",
+            "TTFT p95 (ms)",
+            "ITL p99 (ms)",
+            "Stall p99 (ms)",
+        ],
+    );
+
+    // Token streams per (streams, request) for the equality check.
+    let mut outputs: HashMap<(usize, bool), Vec<Vec<i32>>> = HashMap::new();
+
+    for &streams in &[1usize, 4, 16] {
+        let total = (streams * 2).max(4);
+        for (label, chunked) in [("chunked 32/step", true), ("inline prefill", false)] {
+            let mut s = Scheduler::new(EngineConfig {
+                model: "qwen3-0.6b".into(),
+                artifacts_dir: "artifacts".into(),
+                text_cache_bytes: 0,
+                cache_finished: false,
+                allow_shrink: false,
+                warmup: false,
+                prefill_chunk_tokens: if chunked { 32 } else { 0 },
+                prefill_chunks_per_step: 1,
+                ..Default::default()
+            })?;
+            // Warm executables across buckets before timing.
+            for i in 0..4u64 {
+                let _ = submit(&mut s, 900 + i, 8, 4);
+            }
+            s.run_until_idle();
+
+            let t0 = Instant::now();
+            let mut rxs: Vec<Receiver<Event>> = Vec::new();
+            let mut arrivals: Vec<Vec<Instant>> = Vec::new();
+            let mut ttfts: Vec<f64> = Vec::new();
+            let mut tokens_out = 0usize;
+            let mut submitted = 0usize;
+            while submitted < total || s.active_count() + s.queued_count() > 0 {
+                // Closed-loop arrival process: keep `streams` in flight.
+                while submitted < total && s.active_count() + s.queued_count() < streams {
+                    let len = PROMPT_LENS[submitted % PROMPT_LENS.len()];
+                    let rx = submit(&mut s, 1000 + submitted as u64, len, GEN);
+                    rxs.push(rx);
+                    arrivals.push(Vec::new());
+                    submitted += 1;
+                }
+                s.tick();
+                // Drain events: timestamp token arrivals (tick
+                // granularity) and collect per-request Done stats.
+                let now = Instant::now();
+                for (i, rx) in rxs.iter().enumerate() {
+                    for ev in rx.try_iter() {
+                        match ev {
+                            Event::Token { token, .. } if token >= 0 => arrivals[i].push(now),
+                            Event::Done { usage, timing, .. } => {
+                                ttfts.push(timing.ttft_ms);
+                                tokens_out += usage.completion_tokens;
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+
+            // Inter-token latency from the recorded arrival gaps.
+            let mut itls: Vec<f64> = Vec::new();
+            for a in &arrivals {
+                for w in a.windows(2) {
+                    itls.push(w[1].duration_since(w[0]).as_secs_f64() * 1e3);
+                }
+            }
+            ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            itls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let stall_p99 = s
+                .metrics
+                .histogram("decode_stall")
+                .map(|h| h.quantile_ms(0.99))
+                .unwrap_or(0.0);
+            table.row(vec![
+                streams.to_string(),
+                label.into(),
+                fmt_f(wall, 2),
+                fmt_f(tokens_out as f64 / wall, 1),
+                fmt_f(pct(&ttfts, 0.50), 1),
+                fmt_f(pct(&ttfts, 0.95), 1),
+                fmt_f(pct(&itls, 0.99), 1),
+                fmt_f(stall_p99, 1),
+            ]);
+            eprintln!(
+                "  {streams}x {label}: chunks {}, queue-adm {} reqs, stall p99 {:.1} ms",
+                s.engine.stats.prefill_chunks,
+                ttfts.len(),
+                stall_p99
+            );
+
+            // Deterministic replay for the equality check (fresh
+            // scheduler, sequential, same ids/seeds as the timed run).
+            let mut replay = Vec::new();
+            let mut s2 = Scheduler::new(EngineConfig {
+                model: "qwen3-0.6b".into(),
+                artifacts_dir: "artifacts".into(),
+                text_cache_bytes: 0,
+                cache_finished: false,
+                warmup: false,
+                prefill_chunk_tokens: if chunked { 32 } else { 0 },
+                ..Default::default()
+            })?;
+            for idx in 0..total {
+                let len = PROMPT_LENS[idx % PROMPT_LENS.len()];
+                let rx = submit(&mut s2, 1000 + idx as u64, len, GEN);
+                s2.run_until_idle();
+                replay.push(
+                    rx.try_iter()
+                        .filter_map(|e| match e {
+                            Event::Token { token, .. } if token >= 0 => Some(token),
+                            _ => None,
+                        })
+                        .collect::<Vec<i32>>(),
+                );
+            }
+            outputs.insert((streams, chunked), replay);
+        }
+        let a = &outputs[&(streams, true)];
+        let b = &outputs[&(streams, false)];
+        let ok = a == b;
+        println!(
+            "{streams}-stream output equality (chunked vs inline, identical seeds): {}",
+            if ok { "IDENTICAL" } else { "MISMATCH" }
+        );
+        assert!(ok, "chunked prefill changed sampled outputs at {streams} streams");
+    }
+
+    table.print();
+    println!("expected: chunked prefill cuts decode-stall p99 and TTFT tail under");
+    println!("load (arrivals no longer stall the batch for a whole prompt) with");
+    println!("aggregate decode throughput within a few percent of inline.");
+    Ok(())
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() as f64 * q) as usize).min(sorted.len() - 1)]
+}
+
+fn submit(s: &mut Scheduler, id: u64, prompt_len: usize, n_new: usize) -> Receiver<Event> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    s.submit(GenRequest {
+        id,
+        prompt: PromptInput::Tokens(synth_prompt(id, prompt_len, 2048)),
+        params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) },
+        events: tx,
+        enqueued_at: Instant::now(),
+    });
+    rx
+}

@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         let mut arrivals: Vec<Instant> = Vec::new();
         let mut arrived = 0usize;
         let mut steps = 0usize;
-        while arrived < N_REQ || s.active_count() > 0 {
+        while arrived < N_REQ || s.active_count() + s.queued_count() > 0 {
             // Arrival process: one request every ARRIVE_EVERY steps.
             if arrived < N_REQ && steps >= arrived * ARRIVE_EVERY {
                 let arrival = *arrivals
@@ -69,15 +69,16 @@ fn main() -> anyhow::Result<()> {
                 // (the "wait for all to finish" policy); continuous:
                 // admit immediately at the token boundary.  Latency is
                 // measured from ARRIVAL either way.
-                if continuous || s.active_count() == 0 {
+                if continuous || s.active_count() + s.queued_count() == 0 {
                     let rx = submit_at(&mut s, 1000 + arrived as u64, GEN, arrival);
                     rxs.push(rx);
                     arrived += 1;
                     continue;
                 }
             }
-            if s.active_count() > 0 {
-                s.step_once();
+            if s.active_count() + s.queued_count() > 0 {
+                // One pipeline iteration: staged prefill chunks + decode.
+                s.tick();
             }
             steps += 1;
         }

@@ -14,7 +14,14 @@
 //! little-endian u32, matching `Sha256::update_u32_le`) and hold a
 //! device-resident kv_one.  The descending scan returns the *longest*
 //! cached prefix, so a multi-turn conversation reuses the previous
-//! turn's full state and only the new suffix is processed.
+//! turn's full state and only the new suffix is processed — the
+//! scheduler stages the suffix as a prefill job and feeds it via
+//! `TextEngine::feed_chunk` (one chunk per decode tick; see
+//! `coordinator::scheduler::advance_job`), so even long uncached
+//! suffixes never stall active decodes for more than one chunk.
+//! Cached kv_one buffers are shared (`Rc`) and must never be donated
+//! to a chunk executable; the catch-up path always extends a
+//! device-side copy (`TextEngine::clone_kv`).
 
 use std::rc::Rc;
 

@@ -67,6 +67,12 @@ pub struct Usage {
 #[derive(Debug, Clone, Default)]
 pub struct Timing {
     pub queue_ms: f64,
+    /// Time from entering the staged-prefill queue to the KV state
+    /// completing (includes both waiting behind other jobs and this
+    /// job's own chunk executions; ~prefill time when admission is
+    /// inline).  The staging analog of queue_ms — without it the
+    /// pipeline's own queueing would be invisible in /metrics.
+    pub staged_ms: f64,
     /// Time to first token (admission + prefill path).
     pub ttft_ms: f64,
     pub total_ms: f64,
@@ -113,6 +119,18 @@ pub struct EngineConfig {
     pub allow_shrink: bool,
     /// Warm up (pre-compile) common entries at startup.
     pub warmup: bool,
+    /// Staged-prefill chunk size: prompts longer than this are built
+    /// chunk by chunk, interleaved with decode steps, instead of
+    /// stalling the whole batch for one inline prefill.  0 disables
+    /// staging (legacy admit-then-decode); the effective chunk is
+    /// clamped to the largest lowered `prefill_chunk_c{C}` bucket, and
+    /// staging silently degrades to inline prefill on artifacts that
+    /// predate the chunk entries.
+    pub prefill_chunk_tokens: usize,
+    /// Fairness cap: at most this many prefill chunks are advanced per
+    /// scheduler tick (each tick also runs one batched decode step), so
+    /// admission work cannot starve active sequences.
+    pub prefill_chunks_per_step: usize,
 }
 
 impl Default for EngineConfig {
@@ -126,6 +144,8 @@ impl Default for EngineConfig {
             cache_finished: true,
             allow_shrink: false,
             warmup: true,
+            prefill_chunk_tokens: 32,
+            prefill_chunks_per_step: 1,
         }
     }
 }

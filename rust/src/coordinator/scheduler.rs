@@ -1,22 +1,43 @@
-//! The continuous-batching scheduler — Algorithm 1, plus the
-//! cache-aware admission paths of Algorithms 2 and 3.
+//! The continuous-batching scheduler — Algorithm 1 restructured as a
+//! staged prefill pipeline, plus the cache-aware admission paths of
+//! Algorithms 2 and 3.
+//!
+//! The paper's Algorithm 1 admits requests "at token boundaries", but a
+//! naive implementation runs the whole prompt prefill inline inside the
+//! decode loop, stalling every active sequence for the full
+//! prompt-processing time.  This scheduler instead splits prompt
+//! processing into fixed-size chunks and interleaves them with batched
+//! decode steps:
 //!
 //! ```text
 //! loop:
-//!   // Admit new requests at token boundaries
-//!   while |B| < M and Q != {}: B.add(Q.pop())         (admission runs
-//!       the cache-aware prefill pipeline and emits the first token)
-//!   // Generate one token for all active requests
+//!   // Stage admissions instead of prefilling inline
+//!   while |B| + |Q_pre| < M and Q != {}:
+//!       Q_pre.push(resolve(Q.pop()))      (cache lookup, vision encode;
+//!                                          full KV hits join B directly)
+//!   // Advance at most `prefill_chunks_per_step` chunks of the oldest
+//!   // staged prefill; a finished prefill samples its first token and
+//!   // joins B at the next token boundary
+//!   for _ in 0..C_max: Q_pre.front().feed_chunk(prefill_chunk_tokens)
+//!   // Generate one token for all active requests (never stalled for
+//!   // more than one chunk of prefill work)
 //!   for r in B: token_r = GenerateToken(r, KVCache[r])
 //!   // Remove completed requests immediately
 //!   for r in B where r.is_complete(): B.remove(r); yield r.output
 //! ```
 //!
+//! Prompts no longer than one chunk (and all admissions when
+//! `prefill_chunk_tokens` is 0 or the artifacts predate the
+//! `prefill_chunk_c{C}` entries) take the legacy inline path: one
+//! prefill executable call at admission.  Partial prefix-cache hits
+//! (Algorithm 2) and the multimodal embedding path (Algorithm 3) route
+//! their uncached suffix through the same chunked feed.
+//!
 //! The scheduler owns all PJRT state on one thread; use
 //! [`Scheduler::spawn`] to get a channel-based handle, or construct one
 //! in-thread (benches) and call [`Scheduler::run_until_idle`].
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -51,10 +72,13 @@ pub enum Command {
 pub struct StatsSnapshot {
     pub metrics: MetricsRegistry,
     pub active: usize,
+    /// Staged prefills waiting in the admission queue.
+    pub queued: usize,
     pub bucket: usize,
     pub text_cache: (u64, u64, u64, usize),
     pub mm_cache: crate::cache::mm::MmCacheStats,
     pub decode_steps: u64,
+    pub prefill_chunks: u64,
     pub occupancy_mean: f64,
 }
 
@@ -82,6 +106,78 @@ struct ActiveReq {
     enqueued_at: Instant,
 }
 
+/// What a staged prefill still has to feed into its KV state.
+enum Feed {
+    /// Prompt token ids (text path; for partial cache hits, the
+    /// uncached suffix).
+    Tokens(Vec<i32>),
+    /// Pre-composed embedding rows, row-major [len, d_model]
+    /// (multimodal path: vision ++ text embeddings).
+    Embeds(Vec<f32>),
+}
+
+impl Feed {
+    fn rows(&self, d_model: usize) -> usize {
+        match self {
+            Feed::Tokens(t) => t.len(),
+            Feed::Embeds(e) => e.len() / d_model,
+        }
+    }
+}
+
+/// One in-flight prefill in the staging area: its KV state is built
+/// chunk by chunk between decode steps, then the request joins the
+/// batch with its first token already sampled.
+struct PrefillJob {
+    id: u64,
+    events: Sender<Event>,
+    params: SamplingParams,
+    /// Token-id view of the full sequence (the prefix-cache key).
+    tokens: Vec<i32>,
+    feed: Feed,
+    /// Rows of `feed` already processed.
+    fed: usize,
+    /// KV state under construction.  None until the first chunk; the
+    /// first segment of a fresh prompt goes through the one-shot
+    /// prefill executables (identical arithmetic to the legacy path),
+    /// later segments extend it via `prefill_chunk_c{C}`.
+    kv_one: Option<xla::PjRtBuffer>,
+    /// Cached KV state this job extends (partial prefix hits).  The
+    /// chunked path materializes a donatable copy on first touch; the
+    /// tokenwise fallback reads it directly (no copy — nothing donates
+    /// the buffer on that path).
+    source: Option<Rc<CachedKv>>,
+    /// Positions already encoded in `kv_one` (>= `fed` when the job
+    /// started from a cached prefix).
+    built: usize,
+    /// Total positions when complete (multimodal: includes visual rows).
+    total: usize,
+    /// Suffix length fed due to a partial prefix hit (metrics).
+    catch_up_tokens: usize,
+    mm_hashes: Option<Vec<ContentHash>>,
+    mm_key: Option<ContentHash>,
+    prefill_ms: f64,
+    /// When the job entered the staging area (for Timing::staged_ms).
+    staged_at: Instant,
+    /// Requests with an identical prompt that arrived while this job
+    /// was staged: they join the batch from the same completed KV
+    /// instead of each running a redundant full prefill (the inline
+    /// path got this for free — serial admission inserted into the
+    /// prefix cache before the next lookup ran).
+    followers: Vec<Follower>,
+    timing: Timing,
+    enqueued_at: Instant,
+}
+
+/// A coalesced duplicate of a staged prefill (see PrefillJob::followers).
+struct Follower {
+    id: u64,
+    events: Sender<Event>,
+    params: SamplingParams,
+    timing: Timing,
+    enqueued_at: Instant,
+}
+
 pub struct Scheduler {
     pub engine: TextEngine,
     pub tokenizer: Rc<Tokenizer>,
@@ -89,6 +185,13 @@ pub struct Scheduler {
     mm_cache: MmCache,
     cfg: EngineConfig,
     active: HashMap<u64, ActiveReq>,
+    /// Admission queue of staged prefills (FIFO; the front job gets the
+    /// whole chunk budget so TTFT ordering follows arrival order).
+    pending: VecDeque<PrefillJob>,
+    /// Effective staged-prefill chunk size (0 = inline admissions).
+    chunk_tokens: usize,
+    /// End of the previous decode step, for the decode-stall histogram.
+    last_decode: Option<Instant>,
     pub metrics: MetricsRegistry,
 }
 
@@ -103,13 +206,29 @@ impl Scheduler {
         if cfg.warmup {
             let first = *rt.info.decode_buckets.first().unwrap();
             let pre = *rt.info.prefill_buckets.first().unwrap();
-            rt.warmup(&[
-                &format!("decode_b{first}"),
-                &format!("read_logits_b{first}"),
-                &format!("inject_b{first}"),
-                &format!("prefill_s{pre}"),
-            ])?;
+            let mut entries = vec![
+                format!("decode_b{first}"),
+                format!("read_logits_b{first}"),
+                format!("inject_b{first}"),
+                format!("prefill_s{pre}"),
+            ];
+            if let Some(c) = rt.info.max_chunk_bucket() {
+                if rt.has_chunk_prefill() {
+                    entries.push(format!("prefill_chunk_c{c}"));
+                    entries.push(format!("zeros_b{first}"));
+                }
+            }
+            let refs: Vec<&str> = entries.iter().map(|s| s.as_str()).collect();
+            rt.warmup(&refs)?;
         }
+        // Staged prefill needs the chunk entries; clamp the configured
+        // chunk to the largest lowered bucket and degrade to inline
+        // admissions (chunk 0) on pre-chunking artifacts.
+        let chunk_tokens = if cfg.prefill_chunk_tokens > 0 && rt.has_chunk_prefill() {
+            cfg.prefill_chunk_tokens.min(rt.info.max_chunk_bucket().unwrap_or(0))
+        } else {
+            0
+        };
         let mm_cache = MmCache::new(cfg.mm_emb_cache_bytes.max(1), cfg.mm_kv_cache_bytes.max(1), kv_bytes);
         let mut s = Scheduler {
             engine: TextEngine::new(rt)?,
@@ -118,6 +237,9 @@ impl Scheduler {
             mm_cache,
             cfg: cfg.clone(),
             active: HashMap::new(),
+            pending: VecDeque::new(),
+            chunk_tokens,
+            last_decode: None,
             metrics: MetricsRegistry::new(),
         };
         s.mm_cache.enable_emb = cfg.mm_emb_cache_bytes > 0;
@@ -157,7 +279,7 @@ impl Scheduler {
     pub fn run(&mut self, rx: Receiver<Command>) {
         loop {
             // Blocking wait only when idle; otherwise drain non-blocking.
-            if self.active.is_empty() {
+            if self.active.is_empty() && self.pending.is_empty() {
                 match rx.recv_timeout(Duration::from_millis(200)) {
                     Ok(Command::Gen(r)) => self.admit(r),
                     Ok(Command::Stats(tx)) => {
@@ -168,8 +290,10 @@ impl Scheduler {
                     Err(_) => return,
                 }
             }
-            // Token-boundary admission: fill the batch from the queue.
-            while self.active.len() < self.engine.max_capacity() {
+            // Token-boundary admission: stage requests up to capacity
+            // (coalesced followers count — they all join the batch when
+            // their primary finalizes).
+            while self.active.len() + self.staged_requests() < self.engine.max_capacity() {
                 match rx.try_recv() {
                     Ok(Command::Gen(r)) => self.admit(r),
                     Ok(Command::Stats(tx)) => {
@@ -179,18 +303,20 @@ impl Scheduler {
                     Err(_) => break,
                 }
             }
-            self.step_once();
+            self.tick();
         }
     }
 
-    /// Drive the loop until every active request finishes (bench mode).
+    /// Drive the loop until every staged and active request finishes
+    /// (bench mode).
     pub fn run_until_idle(&mut self) {
-        while !self.active.is_empty() {
-            self.step_once();
+        while !self.active.is_empty() || !self.pending.is_empty() {
+            self.tick();
         }
     }
 
-    /// Submit directly (in-thread use). Runs admission inline.
+    /// Submit directly (in-thread use).  Resolves caches and stages (or,
+    /// with staging disabled, prefills inline).
     pub fn submit(&mut self, req: GenRequest) {
         self.admit(req);
     }
@@ -199,21 +325,41 @@ impl Scheduler {
         self.active.len()
     }
 
+    /// Staged prefill jobs not yet admitted to the decode batch.
+    pub fn queued_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Requests the staging area will admit on completion: one per job
+    /// plus its coalesced followers (the admission capacity unit).
+    fn staged_requests(&self) -> usize {
+        self.pending.iter().map(|j| 1 + j.followers.len()).sum()
+    }
+
     pub fn snapshot(&self) -> StatsSnapshot {
         let es = &self.engine.stats;
         StatsSnapshot {
             metrics: self.metrics.clone(),
             active: self.active.len(),
+            queued: self.staged_requests(),
             bucket: self.engine.bucket(),
             text_cache: self.text_cache.stats(),
             mm_cache: self.mm_cache.stats(),
             decode_steps: es.decode_steps,
+            prefill_chunks: es.prefill_chunks,
             occupancy_mean: if es.decode_steps > 0 {
                 es.occupancy_sum / es.decode_steps as f64
             } else {
                 0.0
             },
         }
+    }
+
+    /// One iteration of the interleaved pipeline: advance staged
+    /// prefills by the chunk budget, then one batched decode step.
+    pub fn tick(&mut self) {
+        self.advance_prefills();
+        self.step_once();
     }
 
     // ------------------------------------------------------- admission
@@ -227,6 +373,9 @@ impl Scheduler {
         }
     }
 
+    /// Resolve a request's prompt against the caches and either admit it
+    /// directly (full KV hit), stage a prefill job (chunking enabled),
+    /// or run the legacy inline prefill to completion.
     fn try_admit(&mut self, req: GenRequest) -> Result<()> {
         let t_admit = Instant::now();
         let mut timing = Timing {
@@ -235,34 +384,111 @@ impl Scheduler {
         };
         self.metrics.inc("requests_total", 1);
 
-        // ---- Resolve the prompt into (tokens, kv_one, first_logits) ----
-        let (tokens, kv, logits, mm_hashes) = match &req.prompt {
+        // ---- Resolve the prompt into a ready KV or a staged job ----
+        let resolved = match &req.prompt {
             PromptInput::Text(t) => {
                 let toks = self.tokenizer.encode_prompt(t);
-                let (tk, kv, lg) = self.text_prefill(&toks, &mut timing)?;
-                (tk, kv, lg, None)
+                self.text_resolve(&toks, &mut timing)?
             }
-            PromptInput::Tokens(toks) => {
-                let (tk, kv, lg) = self.text_prefill(toks, &mut timing)?;
-                (tk, kv, lg, None)
-            }
+            PromptInput::Tokens(toks) => self.text_resolve(toks, &mut timing)?,
             PromptInput::Multimodal { images, text } => {
-                let (tk, kv, lg, hashes) = self.mm_prefill(images, text, &mut timing)?;
-                (tk, kv, lg, Some(hashes))
+                self.mm_resolve(images, text, &mut timing)?
             }
         };
+
+        match resolved {
+            Resolved::Ready { tokens, kv, logits, mm_hashes } => self.admit_ready(
+                req.id,
+                req.events,
+                req.params,
+                req.enqueued_at,
+                tokens,
+                kv,
+                logits,
+                mm_hashes,
+                timing,
+            ),
+            Resolved::Staged { tokens, feed, source, built, total, catch_up, mm_hashes, mm_key } => {
+                // Coalesce: an identical prompt already staged means this
+                // request can join the batch from that job's KV when it
+                // completes — without this, a burst of identical prompts
+                // all miss the cache (inserts happen at finalize) and
+                // each runs a redundant full prefill.
+                if self.chunk_tokens > 0 {
+                    if let Some(primary) = self
+                        .pending
+                        .iter_mut()
+                        .find(|j| j.tokens == tokens && j.mm_key == mm_key)
+                    {
+                        primary.followers.push(Follower {
+                            id: req.id,
+                            events: req.events,
+                            params: req.params,
+                            timing,
+                            enqueued_at: req.enqueued_at,
+                        });
+                        self.metrics.inc("prefill_coalesced", 1);
+                        return Ok(());
+                    }
+                }
+                let mut job = PrefillJob {
+                    id: req.id,
+                    events: req.events,
+                    params: req.params,
+                    tokens,
+                    feed,
+                    fed: 0,
+                    kv_one: None,
+                    source,
+                    built,
+                    total,
+                    catch_up_tokens: catch_up,
+                    mm_hashes,
+                    mm_key,
+                    prefill_ms: 0.0,
+                    staged_at: t_admit,
+                    followers: Vec::new(),
+                    timing,
+                    enqueued_at: req.enqueued_at,
+                };
+                if self.chunk_tokens == 0 {
+                    // Inline admission: drain the job synchronously (one
+                    // prefill call for fresh prompts, token-by-token
+                    // catch-up for cached prefixes — the legacy path).
+                    while !self.advance_job(&mut job)? {}
+                    self.finalize_job(job)?;
+                } else {
+                    self.pending.push_back(job);
+                    self.metrics
+                        .set_gauge("prefill_queue_depth", self.staged_requests() as f64);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Join the batch with a fully-built KV state (full cache hits, the
+    /// mm KV-validation path, and completed staged prefills).
+    #[allow(clippy::too_many_arguments)]
+    fn admit_ready(
+        &mut self,
+        id: u64,
+        events: Sender<Event>,
+        params: SamplingParams,
+        enqueued_at: Instant,
+        tokens: Vec<i32>,
+        kv: Rc<CachedKv>,
+        logits: Vec<f32>,
+        mm_hashes: Option<Vec<ContentHash>>,
+        timing: Timing,
+    ) -> Result<()> {
         let prompt_len = kv.len;
-
-        // ---- Sample the first token from the mailbox logits ----
-        let mut rng = Rng::new(req.params.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
-        let first = sample(&logits, &req.params, &mut rng);
-
-        // ---- Join the batch ----
-        self.engine.admit(req.id, &kv.kv_one, prompt_len)?;
-
+        let mut rng = Rng::new(params.seed ^ id.wrapping_mul(0x9E3779B97F4A7C15));
+        let first = sample(&logits, &params, &mut rng);
+        self.engine.admit(id, &kv.kv_one, prompt_len)?;
         let mut ar = ActiveReq {
-            events: req.events,
-            params: req.params,
+            events,
+            params,
             rng,
             decoder: StreamDecoder::new(),
             all_tokens: tokens,
@@ -272,17 +498,13 @@ impl Scheduler {
             next_token: first,
             mm_hashes,
             timing,
-            enqueued_at: req.enqueued_at,
+            enqueued_at,
         };
-        ar.timing.ttft_ms = ms_since(req.enqueued_at, Instant::now());
+        ar.timing.ttft_ms = ms_since(enqueued_at, Instant::now());
         self.metrics.observe_ms("ttft", ar.timing.ttft_ms);
-        self.metrics
-            .observe_ms("queue_wait", ar.timing.queue_ms);
+        self.metrics.observe_ms("queue_wait", ar.timing.queue_ms);
 
-        // Emit (or terminate on) the first token.
-        let id = req.id;
         if let Some(finish) = self.emit_token(id, &mut ar, first) {
-            // Finished on the very first token: remove from engine.
             self.active.insert(id, ar);
             self.finish(id, finish);
         } else {
@@ -293,13 +515,230 @@ impl Scheduler {
         Ok(())
     }
 
-    /// Text path: Algorithm 2 lookup, then full prefill / partial
-    /// catch-up / straight cache reuse.
-    fn text_prefill(
-        &mut self,
-        tokens: &[i32],
-        timing: &mut Timing,
-    ) -> Result<(Vec<i32>, Rc<CachedKv>, Vec<f32>)> {
+    // ------------------------------------------------- staged prefill
+
+    /// Advance the admission queue by at most `prefill_chunks_per_step`
+    /// chunks.  The front (oldest) job gets the whole budget; completed
+    /// jobs join the decode batch with their first token sampled.
+    fn advance_prefills(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let budget = self.cfg.prefill_chunks_per_step.max(1);
+        for _ in 0..budget {
+            let Some(mut job) = self.pending.pop_front() else { break };
+            match self.advance_job(&mut job) {
+                Ok(true) => {
+                    let id = job.id;
+                    let events = job.events.clone();
+                    if let Err(e) = self.finalize_job(job) {
+                        self.metrics.inc("requests_failed", 1);
+                        let _ = events.send(Event::Error { id, message: format!("{e:#}") });
+                    }
+                }
+                Ok(false) => {
+                    self.pending.push_front(job);
+                }
+                Err(e) => {
+                    // The job AND any coalesced followers fail together.
+                    self.fail_followers(&job, &e);
+                    self.metrics.inc("requests_failed", 1);
+                    let _ = job
+                        .events
+                        .send(Event::Error { id: job.id, message: format!("{e:#}") });
+                }
+            }
+        }
+        self.metrics
+            .set_gauge("prefill_queue_depth", self.staged_requests() as f64);
+    }
+
+    /// Feed one segment of `job`; returns true when its KV is complete.
+    fn advance_job(&mut self, job: &mut PrefillJob) -> Result<bool> {
+        let d = self.engine.rt.info.d_model;
+        let remaining = job.feed.rows(d) - job.fed;
+        if remaining == 0 {
+            return Ok(true);
+        }
+        let t0 = Instant::now();
+        let seg = if self.chunk_tokens > 0 { self.chunk_tokens } else { usize::MAX };
+        match &job.feed {
+            Feed::Tokens(toks) => {
+                let n = remaining.min(seg);
+                let chunked = self.chunk_tokens > 0 && self.engine.rt.has_chunk_prefill();
+                if job.kv_one.is_none() && job.source.is_none() {
+                    // First segment of a fresh prompt: the one-shot
+                    // prefill executable (identical arithmetic to the
+                    // legacy inline path for short prompts).
+                    debug_assert_eq!(job.built, 0);
+                    job.kv_one = Some(self.engine.prefill(&toks[..n])?);
+                    job.built += n;
+                    job.fed += n;
+                } else if !chunked {
+                    // chunk_tokens == 0 honours the "0 = legacy"
+                    // contract exactly: token-by-token catch-up through
+                    // bucket-1 decode, never the chunk executables
+                    // (which match only within fp tolerance, not
+                    // bit-exactly).  A cached source is read directly —
+                    // no copy, nothing donates it on this path.
+                    let piece = toks[job.fed..].to_vec();
+                    let (out, _) = match (&job.kv_one, &job.source) {
+                        (Some(kv), _) => {
+                            self.engine.catch_up_tokenwise(kv, job.built, &piece)?
+                        }
+                        (None, Some(src)) => {
+                            self.engine.catch_up_tokenwise(&src.kv_one, job.built, &piece)?
+                        }
+                        (None, None) => unreachable!("handled by the fresh-prompt branch"),
+                    };
+                    job.built += piece.len();
+                    job.fed += piece.len();
+                    job.kv_one = Some(out);
+                    job.source = None;
+                } else {
+                    // Chunked: materialize a donatable copy of a cached
+                    // source on first touch, then extend by one chunk
+                    // (never exceeding the largest lowered bucket).
+                    let kv = match (job.kv_one.take(), job.source.take()) {
+                        (Some(kv), _) => kv,
+                        (None, Some(src)) => self.engine.clone_kv(&src.kv_one)?,
+                        (None, None) => unreachable!("handled by the fresh-prompt branch"),
+                    };
+                    let max = self.engine.rt.info.max_chunk_bucket().unwrap();
+                    let n = n.min(max);
+                    let piece = toks[job.fed..job.fed + n].to_vec();
+                    let out = self.engine.feed_chunk(kv, job.built, &piece)?;
+                    self.metrics.inc("prefill_chunks", 1);
+                    job.built += n;
+                    job.fed += n;
+                    job.kv_one = Some(out);
+                }
+            }
+            Feed::Embeds(rows) => {
+                let n = remaining.min(seg);
+                match job.kv_one.take() {
+                    None => {
+                        debug_assert_eq!(job.built, 0);
+                        // First segment through the one-shot embeds
+                        // prefill; with staging off (or no chunk-embeds
+                        // entries) this is the whole sequence — the
+                        // legacy multimodal path.
+                        let n = if self.engine.rt.has_chunk_prefill_embeds() { n } else { remaining };
+                        let kv = self.engine.rt.prefill_embeds(&rows[..n * d], n)?;
+                        self.engine.stats.prefills += 1;
+                        job.kv_one = Some(kv);
+                        job.built += n;
+                        job.fed += n;
+                    }
+                    Some(kv) => {
+                        let max = self
+                            .engine
+                            .rt
+                            .info
+                            .max_chunk_bucket()
+                            .ok_or_else(|| anyhow!("no chunk buckets for staged embeds"))?;
+                        let n = n.min(max);
+                        let piece = rows[job.fed * d..(job.fed + n) * d].to_vec();
+                        let out = self.engine.feed_chunk_embeds(kv, job.built, &piece, n)?;
+                        self.metrics.inc("prefill_chunks", 1);
+                        job.built += n;
+                        job.fed += n;
+                        job.kv_one = Some(out);
+                    }
+                }
+            }
+        }
+        job.prefill_ms += ms_since(t0, Instant::now());
+        Ok(job.fed >= job.feed.rows(d))
+    }
+
+    /// Fail a job's coalesced followers (the primary's error is the
+    /// caller's to report).
+    fn fail_followers(&mut self, job: &PrefillJob, e: &anyhow::Error) {
+        self.metrics.inc("requests_failed", job.followers.len() as u64);
+        for f in &job.followers {
+            let _ = f
+                .events
+                .send(Event::Error { id: f.id, message: format!("{e:#}") });
+        }
+    }
+
+    /// A staged prefill finished building its KV: sample the first
+    /// token, insert into the caches, and join the decode batch —
+    /// along with any coalesced followers, which reuse the same KV.
+    fn finalize_job(&mut self, mut job: PrefillJob) -> Result<()> {
+        let kv_one = match job
+            .kv_one
+            .take()
+            .ok_or_else(|| anyhow!("staged prefill completed without KV state"))
+        {
+            Ok(k) => k,
+            Err(e) => {
+                self.fail_followers(&job, &e);
+                return Err(e);
+            }
+        };
+        let logits = match self.engine.rt.read_logits(1, &kv_one, 0) {
+            Ok(l) => l,
+            Err(e) => {
+                self.fail_followers(&job, &e);
+                return Err(e);
+            }
+        };
+        let kv = CachedKv::new(kv_one, job.total);
+        job.timing.staged_ms = ms_since(job.staged_at, Instant::now());
+        self.metrics.observe_ms("staged_wait", job.timing.staged_ms);
+        self.metrics.observe_ms("prefill", job.prefill_ms);
+        if job.catch_up_tokens > 0 {
+            self.metrics
+                .inc("catch_up_tokens", job.catch_up_tokens as u64);
+        }
+        match (&job.mm_hashes, &job.mm_key) {
+            (Some(_), Some(key)) => {
+                self.mm_cache.put_kv(*key, kv.clone());
+            }
+            _ => {
+                if self.cfg.text_cache_bytes > 0 && self.cfg.cache_finished {
+                    self.text_cache.insert(&job.tokens, kv.clone());
+                }
+            }
+        }
+        for f in std::mem::take(&mut job.followers) {
+            let mut timing = f.timing;
+            timing.staged_ms = ms_since(job.staged_at, Instant::now());
+            if let Err(e) = self.admit_ready(
+                f.id,
+                f.events.clone(),
+                f.params,
+                f.enqueued_at,
+                job.tokens.clone(),
+                kv.clone(),
+                logits.clone(),
+                job.mm_hashes.clone(),
+                timing,
+            ) {
+                self.metrics.inc("requests_failed", 1);
+                let _ = f.events.send(Event::Error { id: f.id, message: format!("{e:#}") });
+            }
+        }
+        self.admit_ready(
+            job.id,
+            job.events,
+            job.params,
+            job.enqueued_at,
+            job.tokens,
+            kv,
+            logits,
+            job.mm_hashes,
+            job.timing,
+        )
+    }
+
+    // ------------------------------------------- prompt resolution
+
+    /// Text path: Algorithm 2 lookup, then full-hit admission or a
+    /// staged job covering the uncached prefix/suffix.
+    fn text_resolve(&mut self, tokens: &[i32], timing: &mut Timing) -> Result<Resolved> {
         if tokens.is_empty() {
             return Err(anyhow!("empty prompt"));
         }
@@ -322,60 +761,55 @@ impl Scheduler {
                     self.metrics.inc("text_prefix_full_hits", 1);
                     timing.kv_full_hit = true;
                     let logits = self.engine.rt.read_logits(1, &hit.kv.kv_one, 0)?;
-                    return Ok((tokens.to_vec(), hit.kv, logits));
+                    return Ok(Resolved::Ready {
+                        tokens: tokens.to_vec(),
+                        kv: hit.kv,
+                        logits,
+                        mm_hashes: None,
+                    });
                 }
-                // Partial hit: resume from the cached state and catch up
-                // the remaining suffix with single-slot decode steps.
-                let (kv, logits) = self.catch_up(&hit.kv, &tokens[hit.matched..])?;
-                let kv = CachedKv::new_rc(kv, tokens.len());
-                if self.cfg.cache_finished {
-                    self.text_cache.insert(tokens, kv.clone());
-                }
-                return Ok((tokens.to_vec(), kv, logits));
+                // Partial hit: stage a catch-up job extending the
+                // cached state.  The chunked path copies it on first
+                // touch (the shared buffer must never be donated to a
+                // chunk executable); the tokenwise fallback reads it
+                // directly.
+                let suffix = tokens[hit.matched..].to_vec();
+                let catch_up = suffix.len();
+                return Ok(Resolved::Staged {
+                    tokens: tokens.to_vec(),
+                    feed: Feed::Tokens(suffix),
+                    source: Some(hit.kv),
+                    built: hit.matched,
+                    total: tokens.len(),
+                    catch_up,
+                    mm_hashes: None,
+                    mm_key: None,
+                });
             }
             self.metrics.inc("text_prefix_misses", 1);
         }
 
-        let t0 = Instant::now();
-        let kv_one = self.engine.prefill(tokens)?;
-        self.metrics.observe_ms("prefill", ms_since(t0, Instant::now()));
-        let logits = self.engine.rt.read_logits(1, &kv_one, 0)?;
-        let kv = CachedKv::new_rc(kv_one, tokens.len());
-        if self.cfg.text_cache_bytes > 0 && self.cfg.cache_finished {
-            self.text_cache.insert(tokens, kv.clone());
-        }
-        Ok((tokens.to_vec(), kv, logits))
-    }
-
-    /// Feed `suffix` tokens through bucket-1 decode steps starting from
-    /// a cached state; returns the extended kv_one and the last logits.
-    fn catch_up(
-        &mut self,
-        from: &CachedKv,
-        suffix: &[i32],
-    ) -> Result<(xla::PjRtBuffer, Vec<f32>)> {
-        let rt = &self.engine.rt;
-        let mut arena = rt.new_arena(1)?;
-        arena = rt.inject(1, &arena, &from.kv_one, 0)?;
-        let mut pos = from.len as i32;
-        for &t in suffix {
-            arena = rt.decode(1, &[t], &[pos], &arena)?;
-            pos += 1;
-        }
-        let logits = rt.read_logits(1, &arena, 0)?;
-        let kv_one = rt.extract(1, &arena, 0)?;
-        self.metrics.inc("catch_up_tokens", suffix.len() as u64);
-        Ok((kv_one, logits))
+        Ok(Resolved::Staged {
+            tokens: tokens.to_vec(),
+            feed: Feed::Tokens(tokens.to_vec()),
+            source: None,
+            built: 0,
+            total: tokens.len(),
+            catch_up: 0,
+            mm_hashes: None,
+            mm_key: None,
+        })
     }
 
     /// Multimodal path: Algorithm 3 — per-image content hashing with
-    /// embedding reuse, then KV-state reuse over (images ++ text).
-    fn mm_prefill(
+    /// embedding reuse, then KV-state reuse over (images ++ text); the
+    /// composed embedding sequence is fed through the staged pipeline.
+    fn mm_resolve(
         &mut self,
         images: &[crate::multimodal::ImageSource],
         text: &str,
         timing: &mut Timing,
-    ) -> Result<(Vec<i32>, Rc<CachedKv>, Vec<f32>, Vec<ContentHash>)> {
+    ) -> Result<Resolved> {
         let info = self.engine.rt.info.clone();
         let vinfo = info
             .vision
@@ -408,7 +842,12 @@ impl Scheduler {
             if self.mm_cache.enable_emb {
                 timing.vision_cached = decoded.len();
                 let logits = self.engine.rt.read_logits(1, &kv.kv_one, 0)?;
-                return Ok((text_tokens, kv.clone(), logits, hashes));
+                return Ok(Resolved::Ready {
+                    tokens: text_tokens,
+                    kv: kv.clone(),
+                    logits,
+                    mm_hashes: Some(hashes),
+                });
             }
         } else {
             self.metrics.inc("mm_kv_misses", 1);
@@ -469,28 +908,39 @@ impl Scheduler {
         // validation; prompt processing is still skipped.
         if let Some(kv) = kv_hit {
             let logits = self.engine.rt.read_logits(1, &kv.kv_one, 0)?;
-            return Ok((text_tokens, kv, logits, hashes));
+            return Ok(Resolved::Ready {
+                tokens: text_tokens,
+                kv,
+                logits,
+                mm_hashes: Some(hashes),
+            });
         }
 
-        // 4. Compose [vision ++ text] embeddings and prefill.
+        // 4. Compose [vision ++ text] embeddings; the staged pipeline
+        // feeds them chunk by chunk (or in one prefill_embeds call when
+        // staging is off / the suffix fits one chunk).
         let text_rows = self.engine.rt.embed_lookup(&text_tokens)?;
         let mut embeds = vis_embeds;
         embeds.extend_from_slice(&text_rows);
         let total_len = n_vis_tokens + text_tokens.len();
-        let t0 = Instant::now();
-        let kv_one = self.engine.rt.prefill_embeds(&embeds, total_len)?;
-        self.metrics.observe_ms("prefill", ms_since(t0, Instant::now()));
-        let logits = self.engine.rt.read_logits(1, &kv_one, 0)?;
-        let kv = CachedKv::new_rc(kv_one, total_len);
-        self.mm_cache.put_kv(kv_key, kv.clone());
-        Ok((text_tokens, kv, logits, hashes))
+        Ok(Resolved::Staged {
+            tokens: text_tokens,
+            feed: Feed::Embeds(embeds),
+            source: None,
+            built: 0,
+            total: total_len,
+            catch_up: 0,
+            mm_hashes: Some(hashes),
+            mm_key: Some(kv_key),
+        })
     }
 
     // ------------------------------------------------------- stepping
 
-    /// One iteration of the Algorithm-1 inner loop.
+    /// One batched decode step (the Algorithm-1 inner loop body).
     pub fn step_once(&mut self) {
         if self.active.is_empty() {
+            self.last_decode = None;
             return;
         }
         let next: HashMap<u64, i32> = self
@@ -499,6 +949,13 @@ impl Scheduler {
             .map(|(&id, a)| (id, a.next_token))
             .collect();
         let t0 = Instant::now();
+        // Decode-stall histogram: time active sequences spent NOT
+        // decoding since the previous step — admission/prefill work
+        // shows up here (inline prefill: whole prompts; staged: one
+        // chunk), which is exactly what the chunked pipeline bounds.
+        if let Some(prev) = self.last_decode {
+            self.metrics.observe_ms("decode_stall", ms_since(prev, t0));
+        }
         let results = match self.engine.step(&next) {
             Ok(r) => r,
             Err(e) => {
@@ -509,12 +966,13 @@ impl Scheduler {
                 return;
             }
         };
+        self.last_decode = Some(Instant::now());
         self.metrics.observe_ms("decode_step", ms_since(t0, Instant::now()));
 
         let mut finished: Vec<(u64, FinishReason)> = Vec::new();
-        for (id, logits) in results {
+        for (id, logits) in results.iter() {
             let a = self.active.get_mut(&id).unwrap();
-            let tok = sample(&logits, &a.params, &mut a.rng);
+            let tok = sample(logits, &a.params, &mut a.rng);
             // The step FED a.next_token into the KV; record it.
             a.all_tokens.push(a.next_token);
             a.fed += 1;
@@ -548,11 +1006,8 @@ impl Scheduler {
         // per live sequence, so only shrink when occupancy is far below
         // the bucket (the ablation_scheduler bench quantifies the thrash
         // cost of an aggressive 2x policy — see EXPERIMENTS.md §Perf).
-        if self.cfg.allow_shrink
-            && self.engine.bucket() >= 4
-            && self.active.len() * 4 <= self.engine.bucket()
-        {
-            let _ = self.engine.maybe_shrink();
+        if self.cfg.allow_shrink {
+            let _ = self.engine.maybe_shrink_with_hysteresis(4);
         }
         self.metrics
             .set_gauge("active_requests", self.active.len() as f64);
@@ -620,6 +1075,29 @@ impl Scheduler {
             timing: a.timing.clone(),
         });
     }
+}
+
+/// Outcome of resolving a prompt against the caches.
+enum Resolved {
+    /// KV state fully available: admit at this token boundary.
+    Ready {
+        tokens: Vec<i32>,
+        kv: Rc<CachedKv>,
+        logits: Vec<f32>,
+        mm_hashes: Option<Vec<ContentHash>>,
+    },
+    /// Prompt (or its uncached suffix) needs prefill work: stage it.
+    Staged {
+        tokens: Vec<i32>,
+        feed: Feed,
+        /// Cached state to extend (partial prefix hits).
+        source: Option<Rc<CachedKv>>,
+        built: usize,
+        total: usize,
+        catch_up: usize,
+        mm_hashes: Option<Vec<ContentHash>>,
+        mm_key: Option<ContentHash>,
+    },
 }
 
 fn ms_since(a: Instant, b: Instant) -> f64 {

@@ -8,16 +8,24 @@
 //! boundaries (Algorithm 1's mechanics — the *policy* lives in
 //! `coordinator::scheduler`).
 //!
-//! Slot arena lifecycle:
+//! Slot arena lifecycle (staged-prefill pipeline):
 //!
 //! ```text
-//! prefill(prompt) ──► kv_one ──inject──► arena slot i
+//!            STAGING (one kv_one per in-flight prefill)
+//! new_kv_one / clone_kv(cached) ──feed_chunk──► kv_one (partial)
+//!        ▲                            │   (scheduler interleaves one
+//!        └────── next chunk ──────────┘    decode step per chunk)
+//! complete kv_one ──inject──► arena slot i
 //!                                          │ decode (all slots, 1 token)
 //!                                          ▼
-//!                                   read_logits_all ──► sampler
+//!                            read_logits_all / read_logits_one ──► sampler
 //! finished slot ──extract──► kv_one (stored by the prefix cache)
 //! grow/shrink: extract each live slot ──► new bucket arena ──► inject
 //! ```
+//!
+//! Short prompts (≤ one chunk) still go through the one-shot `prefill`
+//! executables; the staging path exists so long prompts never stall the
+//! decode arena for more than one chunk's worth of work.
 
 pub mod sampler;
 pub mod tokenizer;
@@ -43,11 +51,60 @@ pub struct EngineStats {
     pub decode_steps: u64,
     pub decode_slot_steps: u64,
     pub prefills: u64,
+    /// Chunk executions through the staged-prefill path.
+    pub prefill_chunks: u64,
+    /// Valid tokens fed through those chunks.
+    pub chunk_tokens_fed: u64,
     pub injects: u64,
     pub extracts: u64,
     pub migrations: u64,
+    /// Steps whose logits were read back per-slot (sparse occupancy).
+    pub sparse_readbacks: u64,
     /// Sum over steps of occupied/bucket (batch efficiency numerator).
     pub occupancy_sum: f64,
+}
+
+/// Logits produced by one batched decode step, backed by the single
+/// readback buffer — per-sequence views are slices into it, so no
+/// `bucket * vocab` per-slot copies are materialized.
+pub struct StepLogits {
+    /// (sequence id, row index into `flat`).
+    ids: Vec<(u64, usize)>,
+    flat: Vec<f32>,
+    vocab: usize,
+}
+
+impl StepLogits {
+    fn empty(vocab: usize) -> Self {
+        StepLogits { ids: Vec::new(), flat: Vec::new(), vocab }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Iterate (sequence id, logits slice) pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &[f32])> + '_ {
+        self.ids
+            .iter()
+            .map(move |&(id, row)| (id, &self.flat[row * self.vocab..(row + 1) * self.vocab]))
+    }
+
+    pub fn get(&self, i: usize) -> (u64, &[f32]) {
+        let (id, row) = self.ids[i];
+        (id, &self.flat[row * self.vocab..(row + 1) * self.vocab])
+    }
+
+    pub fn for_id(&self, id: u64) -> Option<&[f32]> {
+        self.ids
+            .iter()
+            .find(|&&(i, _)| i == id)
+            .map(|&(_, row)| &self.flat[row * self.vocab..(row + 1) * self.vocab])
+    }
 }
 
 pub struct TextEngine {
@@ -149,10 +206,12 @@ impl TextEngine {
 
     /// One batched decode step.  `next_tokens` maps sequence id -> the
     /// token to feed (the previously sampled one).  Every active
-    /// sequence must be present.  Returns (id, logits) pairs.
-    pub fn step(&mut self, next_tokens: &HashMap<u64, i32>) -> Result<Vec<(u64, Vec<f32>)>> {
+    /// sequence must be present.  Returns the step's logits as slices
+    /// into one readback buffer (see [`StepLogits`]).
+    pub fn step(&mut self, next_tokens: &HashMap<u64, i32>) -> Result<StepLogits> {
+        let v = self.rt.info.vocab;
         if self.seqs.is_empty() {
-            return Ok(Vec::new());
+            return Ok(StepLogits::empty(v));
         }
         let mut tokens = vec![0i32; self.bucket];
         let mut pos = vec![0i32; self.bucket];
@@ -171,15 +230,134 @@ impl TextEngine {
         self.stats.decode_slot_steps += self.seqs.len() as u64;
         self.stats.occupancy_sum += self.seqs.len() as f64 / self.bucket as f64;
 
-        let all = self.rt.read_logits_all(self.bucket, &self.arena)?;
-        let v = self.rt.info.vocab;
-        let mut out = Vec::with_capacity(self.seqs.len());
-        for (&id, st) in &mut self.seqs {
-            st.pos += 1;
-            out.push((id, all[st.slot * v..(st.slot + 1) * v].to_vec()));
-        }
+        // Sparse occupancy: read back only the active slots' rows via
+        // the per-slot extractor instead of the whole [bucket, vocab]
+        // literal (each extractor run returns O(vocab) bytes).
+        let sparse = self.seqs.len() * 4 <= self.bucket
+            && self
+                .rt
+                .info
+                .has_entry(&format!("read_logits_one_b{}", self.bucket));
+        let mut ids = Vec::with_capacity(self.seqs.len());
+        let flat = if sparse {
+            let mut flat = Vec::with_capacity(self.seqs.len() * v);
+            for (&id, st) in &mut self.seqs {
+                st.pos += 1;
+                ids.push((id, ids.len()));
+                flat.extend_from_slice(&self.rt.read_logits_one(
+                    self.bucket,
+                    &self.arena,
+                    st.slot,
+                )?);
+            }
+            self.stats.sparse_readbacks += 1;
+            flat
+        } else {
+            for (&id, st) in &mut self.seqs {
+                st.pos += 1;
+                ids.push((id, st.slot));
+            }
+            self.rt.read_logits_all(self.bucket, &self.arena)?
+        };
+        Ok(StepLogits { ids, flat, vocab: v })
+    }
+
+    // ------------------------------------------------- staged prefill
+
+    /// Copy a (possibly cached, shared) kv_one into a fresh buffer the
+    /// chunked path may donate: inject into a new bucket-1 arena.  The
+    /// source buffer is left untouched.
+    pub fn clone_kv(&mut self, kv_one: &PjRtBuffer) -> Result<PjRtBuffer> {
+        let fresh = self.rt.new_kv_one()?;
+        let out = self.rt.inject(1, &fresh, kv_one, 0)?;
+        self.stats.injects += 1;
         Ok(out)
     }
+
+    /// Feed one chunk of prompt tokens (≤ the largest chunk bucket)
+    /// into a kv_one under construction.  `kv_one` is donated by the
+    /// chunk executable — the caller replaces it with the return value.
+    pub fn feed_chunk(
+        &mut self,
+        kv_one: PjRtBuffer,
+        start: usize,
+        tokens: &[i32],
+    ) -> Result<PjRtBuffer> {
+        let out = self.rt.prefill_from(&kv_one, start, tokens)?;
+        self.stats.prefill_chunks += 1;
+        self.stats.chunk_tokens_fed += tokens.len() as u64;
+        Ok(out)
+    }
+
+    /// `feed_chunk` over pre-composed embedding rows (multimodal).
+    pub fn feed_chunk_embeds(
+        &mut self,
+        kv_one: PjRtBuffer,
+        start: usize,
+        embeds: &[f32],
+        len: usize,
+    ) -> Result<PjRtBuffer> {
+        let out = self.rt.prefill_from_embeds(&kv_one, start, embeds, len)?;
+        self.stats.prefill_chunks += 1;
+        self.stats.chunk_tokens_fed += len as u64;
+        Ok(out)
+    }
+
+    /// Chunked catch-up: extend a cached KV state (covering `from_len`
+    /// tokens) by `suffix`, feeding up to `chunk` tokens per executable
+    /// call.  Returns the extended kv_one and the last token's logits.
+    ///
+    /// This is the synchronous form of the staged path (the scheduler
+    /// interleaves the same clone_kv + feed_chunk primitives one chunk
+    /// per tick rather than looping here) — for one-shot callers and
+    /// the equivalence tests.  Matches `catch_up_tokenwise` within fp
+    /// tolerance (same fused attention kernel; XLA fuses [C, d] and
+    /// [1, d] row blocks differently, so bit-equality is not
+    /// guaranteed — greedy argmax is, per the decode arena's
+    /// batch-invariance contract).
+    pub fn catch_up_chunk(
+        &mut self,
+        from_kv: &PjRtBuffer,
+        from_len: usize,
+        suffix: &[i32],
+        chunk: usize,
+    ) -> Result<(PjRtBuffer, Vec<f32>)> {
+        debug_assert!(chunk > 0);
+        let mut kv = self.clone_kv(from_kv)?;
+        let mut pos = from_len;
+        for piece in suffix.chunks(chunk.max(1)) {
+            kv = self.feed_chunk(kv, pos, piece)?;
+            pos += piece.len();
+        }
+        let logits = self.rt.read_logits(1, &kv, 0)?;
+        Ok((kv, logits))
+    }
+
+    /// Token-by-token catch-up through bucket-1 decode steps — the
+    /// pre-chunking path, kept for manifests without chunk entries and
+    /// as the equivalence baseline in tests.
+    pub fn catch_up_tokenwise(
+        &mut self,
+        from_kv: &PjRtBuffer,
+        from_len: usize,
+        suffix: &[i32],
+    ) -> Result<(PjRtBuffer, Vec<f32>)> {
+        let rt = &self.rt;
+        let mut arena = rt.new_arena(1)?;
+        arena = rt.inject(1, &arena, from_kv, 0)?;
+        let mut pos = from_len as i32;
+        for &t in suffix {
+            arena = rt.decode(1, &[t], &[pos], &arena)?;
+            pos += 1;
+        }
+        let logits = rt.read_logits(1, &arena, 0)?;
+        let kv_one = rt.extract(1, &arena, 0)?;
+        self.stats.injects += 1;
+        self.stats.extracts += 1;
+        Ok((kv_one, logits))
+    }
+
+    // ---------------------------------------------- capacity management
 
     /// Grow (or keep) the arena so `n` sequences fit.  Live slots are
     /// migrated device-side (extract from the old arena, inject into the
@@ -207,6 +385,18 @@ impl TextEngine {
         } else {
             Ok(false)
         }
+    }
+
+    /// Shrink with hysteresis: only migrate down when the active set
+    /// occupies at most 1/`factor` of the bucket, so occupancy
+    /// oscillating around a bucket boundary doesn't thrash grow→shrink
+    /// migrations (each costs O(arena) device work per live sequence —
+    /// the ablation_scheduler bench quantifies the thrash cost).
+    pub fn maybe_shrink_with_hysteresis(&mut self, factor: usize) -> Result<bool> {
+        if self.bucket < 4 || self.seqs.len() * factor > self.bucket {
+            return Ok(false);
+        }
+        self.maybe_shrink()
     }
 
     fn migrate(&mut self, new_bucket: usize) -> Result<()> {

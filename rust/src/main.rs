@@ -22,6 +22,7 @@ USAGE:
   umserve serve --model NAME [--port 8000] [--artifacts artifacts]
                 [--text-cache-mb 512] [--mm-emb-cache-mb 256] [--mm-kv-cache-mb 256]
                 [--no-cache] [--no-shrink]
+                [--prefill-chunk 32] [--prefill-chunks-per-step 1]
   umserve run   --model NAME --prompt TEXT [--max-tokens 64] [--temperature 0]
                 [--top-k 0] [--top-p 1.0] [--image PATH ...via --image=path]
   umserve info  [--artifacts artifacts]
@@ -61,6 +62,9 @@ fn engine_config(args: &argparse::Args) -> anyhow::Result<EngineConfig> {
         cache_finished: !no_cache,
         allow_shrink: !args.bool("no-shrink"),
         warmup: true,
+        // 0 disables staging (inline admit-then-decode prefill).
+        prefill_chunk_tokens: args.usize("prefill-chunk", 32)?,
+        prefill_chunks_per_step: args.usize("prefill-chunks-per-step", 1)?,
     })
 }
 

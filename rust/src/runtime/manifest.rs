@@ -84,6 +84,10 @@ pub struct ModelInfo {
     pub vision: Option<VisionInfo>,
     pub decode_buckets: Vec<usize>,
     pub prefill_buckets: Vec<usize>,
+    /// Chunk sizes with a lowered `prefill_chunk_c{C}` entry (empty for
+    /// manifests predating the staged-prefill pipeline — the runtime
+    /// falls back to token-by-token catch-up and inline prefill).
+    pub prefill_chunk_buckets: Vec<usize>,
     pub embed_prefill_buckets: Vec<usize>,
     pub entries: BTreeMap<String, EntryDesc>,
 }
@@ -124,6 +128,20 @@ impl ModelInfo {
 
     pub fn embed_bucket_for(&self, n: usize) -> Option<usize> {
         self.embed_prefill_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Smallest chunk bucket that fits `n` chunk tokens.
+    pub fn chunk_bucket_for(&self, n: usize) -> Option<usize> {
+        self.prefill_chunk_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Largest lowered chunk size (the natural `prefill_chunk_tokens`).
+    pub fn max_chunk_bucket(&self) -> Option<usize> {
+        self.prefill_chunk_buckets.last().copied()
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
     }
 
     pub fn entry(&self, name: &str) -> Result<&EntryDesc> {
@@ -275,6 +293,11 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
         vision,
         decode_buckets: usize_list(req(m, "decode_buckets")?, "decode_buckets")?,
         prefill_buckets: usize_list(req(m, "prefill_buckets")?, "prefill_buckets")?,
+        // Optional: absent in pre-chunking manifests.
+        prefill_chunk_buckets: match m.get("prefill_chunk_buckets") {
+            Some(Json::Null) | None => Vec::new(),
+            Some(j) => usize_list(j, "prefill_chunk_buckets")?,
+        },
         embed_prefill_buckets: usize_list(
             req(m, "embed_prefill_buckets")?,
             "embed_prefill_buckets",
@@ -343,5 +366,13 @@ mod tests {
         assert_eq!(m.bucket_for(16), Some(16));
         assert_eq!(m.bucket_for(17), None);
         assert_eq!(m.prefill_bucket_for(33), Some(128));
+        // Chunked-prefill buckets (8, 32 in the zoo).
+        assert_eq!(m.chunk_bucket_for(1), Some(8));
+        assert_eq!(m.chunk_bucket_for(9), Some(32));
+        assert_eq!(m.chunk_bucket_for(33), None);
+        assert_eq!(m.max_chunk_bucket(), Some(32));
+        assert!(m.has_entry("prefill_chunk_c32"));
+        assert!(m.has_entry("zeros_b1"));
+        assert!(m.has_entry("read_logits_one_b16"));
     }
 }

@@ -48,6 +48,10 @@ pub struct ModelRuntime {
     pub host_weights: HashMap<String, HostTensor>,
     exes: RefCell<HashMap<String, Rc<CompiledEntry>>>,
     stats: RefCell<RuntimeStats>,
+    /// Host zero staging vectors per bucket — only used as a fallback
+    /// when the manifest predates the device-side `zeros_b{B}` entries;
+    /// cached so repeated migrations don't re-allocate/zero O(arena).
+    zeros_host: RefCell<HashMap<usize, Vec<f32>>>,
 }
 
 impl ModelRuntime {
@@ -93,6 +97,7 @@ impl ModelRuntime {
             host_weights,
             exes: RefCell::new(HashMap::new()),
             stats: RefCell::new(RuntimeStats::default()),
+            zeros_host: RefCell::new(HashMap::new()),
         };
         rt.stats.borrow_mut().host_upload_bytes = upload_bytes;
         Ok(rt)
@@ -204,11 +209,31 @@ impl ModelRuntime {
     // ------------------------------------------------------ typed helpers
 
     /// Fresh zero-filled KV arena for a decode bucket, device-resident.
+    ///
+    /// Allocates on device via the tiny `zeros_b{bucket}` executable
+    /// (no host staging, no upload — arenas are O(MB) and this runs on
+    /// every grow/shrink migration).  Manifests predating that entry
+    /// fall back to uploading a cached host-zero staging vector.
     pub fn new_arena(&self, bucket: usize) -> Result<PjRtBuffer> {
+        let entry = format!("zeros_b{bucket}");
+        if self.info.has_entry(&entry) {
+            // Only a MISSING entry routes to the host fallback; real
+            // device errors (OOM mid-migration, …) must propagate, not
+            // silently degrade into per-migration host uploads.
+            return self.run(&entry, &[]);
+        }
         let shape = self.info.arena_shape(bucket);
-        let zeros = vec![0f32; shape.iter().product()];
-        let buf = self.client.buffer_from_host_buffer::<f32>(&zeros, &shape, None)?;
+        let n: usize = shape.iter().product();
+        let mut cache = self.zeros_host.borrow_mut();
+        let zeros = cache.entry(bucket).or_insert_with(|| vec![0f32; n]);
+        let buf = self.client.buffer_from_host_buffer::<f32>(zeros, &shape, None)?;
         Ok(buf)
+    }
+
+    /// Fresh zero kv_one (a bucket-1 arena) — the seed state the staged
+    /// prefill pipeline extends chunk by chunk.
+    pub fn new_kv_one(&self) -> Result<PjRtBuffer> {
+        self.new_arena(1)
     }
 
     /// One decode step over a bucket arena.  `tokens`/`pos` are per-slot
@@ -247,6 +272,79 @@ impl ModelRuntime {
                 Input::I32(vec![tokens.len() as i32], vec![]),
             ],
         )
+    }
+
+    /// Resume-capable prompt processing: extend a partially-built
+    /// kv_one by one chunk of tokens occupying absolute positions
+    /// `start .. start+tokens.len()`.  The chunk executable DONATES
+    /// `kv_one` (like `decode` donates the arena) — the caller must
+    /// replace its handle with the returned buffer.
+    pub fn prefill_from(
+        &self,
+        kv_one: &PjRtBuffer,
+        start: usize,
+        tokens: &[i32],
+    ) -> Result<PjRtBuffer> {
+        let c = self
+            .info
+            .chunk_bucket_for(tokens.len())
+            .ok_or_else(|| anyhow!("chunk of {} tokens exceeds chunk buckets", tokens.len()))?;
+        let mut padded = tokens.to_vec();
+        padded.resize(c, 0);
+        self.run(
+            &format!("prefill_chunk_c{c}"),
+            &[
+                Input::I32(padded, vec![c]),
+                Input::I32(vec![start as i32], vec![]),
+                Input::I32(vec![tokens.len() as i32], vec![]),
+                Input::Buffer(kv_one),
+            ],
+        )
+    }
+
+    /// `prefill_from` over pre-composed embedding rows (the multimodal
+    /// staged pipeline).  `embeds` is row-major [len, d_model]; kv_one
+    /// is donated as in `prefill_from`.
+    pub fn prefill_from_embeds(
+        &self,
+        kv_one: &PjRtBuffer,
+        start: usize,
+        embeds: &[f32],
+        len: usize,
+    ) -> Result<PjRtBuffer> {
+        let d = self.info.d_model;
+        debug_assert_eq!(embeds.len(), len * d);
+        let c = self
+            .info
+            .chunk_bucket_for(len)
+            .ok_or_else(|| anyhow!("embed chunk of {len} rows exceeds chunk buckets"))?;
+        let mut padded = embeds.to_vec();
+        padded.resize(c * d, 0.0);
+        self.run(
+            &format!("prefill_chunk_embeds_c{c}"),
+            &[
+                Input::F32(padded, vec![c, d]),
+                Input::I32(vec![start as i32], vec![]),
+                Input::I32(vec![len as i32], vec![]),
+                Input::Buffer(kv_one),
+            ],
+        )
+    }
+
+    /// Whether this model's artifacts carry the chunked-prefill entries
+    /// (manifests predating the staged pipeline don't).
+    pub fn has_chunk_prefill(&self) -> bool {
+        self.info
+            .prefill_chunk_buckets
+            .iter()
+            .any(|c| self.info.has_entry(&format!("prefill_chunk_c{c}")))
+    }
+
+    pub fn has_chunk_prefill_embeds(&self) -> bool {
+        self.info
+            .prefill_chunk_buckets
+            .iter()
+            .any(|c| self.info.has_entry(&format!("prefill_chunk_embeds_c{c}")))
     }
 
     /// Prompt processing from a pre-composed embedding sequence
@@ -345,11 +443,40 @@ impl ModelRuntime {
         Ok(v)
     }
 
-    /// Convenience: one slot's logits (allocates; hot paths should use
-    /// `read_logits_all` and slice).
+    /// One slot's logits via the per-slot extractor entry
+    /// (`read_logits_one_b{bucket}`): reads back O(vocab) bytes for that
+    /// slot only, instead of the whole [bucket, vocab] literal.  Falls
+    /// back to slicing the full readback on pre-chunking manifests.
+    pub fn read_logits_one(
+        &self,
+        bucket: usize,
+        arena: &PjRtBuffer,
+        slot: usize,
+    ) -> Result<Vec<f32>> {
+        let entry = format!("read_logits_one_b{bucket}");
+        if self.info.has_entry(&entry) {
+            let buf = self.run(
+                &entry,
+                &[Input::Buffer(arena), Input::I32(vec![slot as i32], vec![])],
+            )?;
+            let lit = buf.to_literal_sync()?;
+            let v = lit.to_vec::<f32>()?;
+            self.stats.borrow_mut().host_readback_bytes += (v.len() * 4) as u64;
+            return Ok(v);
+        }
+        self.read_logits(bucket, arena, slot)
+    }
+
+    /// Convenience: one slot's logits.  Slot 0 reuses the readback
+    /// allocation; batched hot paths should use `read_logits_all` (or
+    /// `read_logits_one` when occupancy is sparse) and slice.
     pub fn read_logits(&self, bucket: usize, arena: &PjRtBuffer, slot: usize) -> Result<Vec<f32>> {
-        let all = self.read_logits_all(bucket, arena)?;
         let v = self.info.vocab;
+        let mut all = self.read_logits_all(bucket, arena)?;
+        if slot == 0 {
+            all.truncate(v);
+            return Ok(all);
+        }
         Ok(all[slot * v..(slot + 1) * v].to_vec())
     }
 

@@ -327,6 +327,8 @@ fn metrics(state: &ServerState, rw: &mut ResponseWriter<'_>) -> HandlerResult {
     let mut text = snap.metrics.render_prometheus();
     text.push_str(&format!("umserve_bucket {}\n", snap.bucket));
     text.push_str(&format!("umserve_active {}\n", snap.active));
+    text.push_str(&format!("umserve_prefill_queued {}\n", snap.queued));
+    text.push_str(&format!("umserve_prefill_chunks_total {}\n", snap.prefill_chunks));
     text.push_str(&format!("umserve_occupancy_mean {:.4}\n", snap.occupancy_mean));
     let (th, tm, te, tb) = snap.text_cache;
     text.push_str(&format!(

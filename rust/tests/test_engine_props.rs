@@ -57,10 +57,10 @@ fn randomized_engine_operations_hold_invariants() {
                         live.keys().map(|&id| (id, 4 + (id % 1000) as i32)).collect();
                     let out = e.step(&tokens).unwrap();
                     assert_eq!(out.len(), live.len());
-                    for (id, logits) in &out {
+                    for (id, logits) in out.iter() {
                         assert_eq!(logits.len(), e.rt.info.vocab);
                         assert!(logits.iter().all(|x| x.is_finite()), "round {round}");
-                        *live.get_mut(id).unwrap() += 1;
+                        *live.get_mut(&id).unwrap() += 1;
                     }
                 }
             }
@@ -100,7 +100,7 @@ fn bucket_migration_preserves_sequences() {
     // Two steps at bucket 1.
     for _ in 0..2 {
         let out = e.step(&HashMap::from([(42, *produced.last().unwrap())])).unwrap();
-        produced.push(umserve::engine::sampler::argmax(&out[0].1));
+        produced.push(umserve::engine::sampler::argmax(out.get(0).1));
     }
     assert_eq!(e.bucket(), 1);
 
@@ -116,8 +116,8 @@ fn bucket_migration_preserves_sequences() {
         let mut feed = HashMap::from([(42, *produced.last().unwrap())]);
         feed.insert(7, 4);
         let out = e.step(&feed).unwrap();
-        let l42 = out.iter().find(|(id, _)| *id == 42).unwrap();
-        produced.push(umserve::engine::sampler::argmax(&l42.1));
+        let l42 = out.for_id(42).unwrap();
+        produced.push(umserve::engine::sampler::argmax(l42));
     }
     assert_eq!(produced, vec![1226, 1252, 1388, 1226, 1962, 1515]);
 
