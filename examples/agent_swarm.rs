@@ -41,7 +41,13 @@ fn main() -> anyhow::Result<()> {
         let handle = handle.clone();
         let shutdown = shutdown.clone();
         std::thread::spawn(move || {
-            let _ = umserve::server::serve(listener, handle, "qwen3-0.6b".into(), shutdown);
+            let _ = umserve::server::serve(
+                listener,
+                handle,
+                "qwen3-0.6b".into(),
+                umserve::coordinator::Priority::Normal,
+                shutdown,
+            );
         });
     }
     println!("server up at http://{addr} — launching {N_AGENTS} agents x {TURNS_PER_AGENT} turns");

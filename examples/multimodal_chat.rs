@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
             id: turn as u64 + 1,
             prompt: PromptInput::Multimodal { images: vec![source], text: question.into() },
             params: SamplingParams::greedy(16),
+            priority: Default::default(),
             events: tx,
             enqueued_at: Instant::now(),
         });

@@ -24,6 +24,7 @@ fn main() -> anyhow::Result<()> {
             id,
             prompt: PromptInput::Text(prompt.into()),
             params: SamplingParams::greedy(32),
+            priority: Default::default(),
             events: tx,
             enqueued_at: std::time::Instant::now(),
         });

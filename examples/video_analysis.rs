@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
                     text: q.into(),
                 },
                 params: SamplingParams::greedy(12),
+                priority: Default::default(),
                 events: tx,
                 enqueued_at: Instant::now(),
             });

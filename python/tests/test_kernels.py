@@ -9,6 +9,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+
+# Property sweeps need hypothesis; CI installs it, but container images
+# without it should still run the rest of the suite.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

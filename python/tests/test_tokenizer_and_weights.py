@@ -6,6 +6,10 @@ import tempfile
 
 import numpy as np
 import pytest
+
+# Property sweeps need hypothesis; CI installs it, but container images
+# without it should still run the rest of the suite.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile import tokenizer_train as T

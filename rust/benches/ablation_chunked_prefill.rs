@@ -15,7 +15,9 @@ use std::collections::HashMap;
 use std::sync::mpsc::Receiver;
 use std::time::Instant;
 
-use umserve::bench_harness::{banner, fmt_f, synth_prompt, Table};
+use umserve::bench_harness::{
+    banner, fmt_f, maybe_write_json, smoke, smoke_scale, synth_prompt, Table,
+};
 use umserve::coordinator::scheduler::Scheduler;
 use umserve::coordinator::{EngineConfig, Event, GenRequest, PromptInput};
 use umserve::engine::sampler::SamplingParams;
@@ -27,8 +29,11 @@ const PROMPT_LENS: [usize; 3] = [16, 96, 256];
 fn main() -> anyhow::Result<()> {
     banner("Chunked-prefill ablation — TTFT / ITL / decode-stall vs inline prefill");
 
+    let gen = smoke_scale(GEN, 8);
+    let stream_counts: &[usize] = if smoke() { &[1, 4] } else { &[1, 4, 16] };
+
     let mut table = Table::new(
-        &format!("Chunked prefill (qwen3-0.6b-sim, mixed {PROMPT_LENS:?}-token prompts, {GEN} gen)"),
+        &format!("Chunked prefill (qwen3-0.6b-sim, mixed {PROMPT_LENS:?}-token prompts, {gen} gen)"),
         &[
             "Streams",
             "Policy",
@@ -44,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     // Token streams per (streams, request) for the equality check.
     let mut outputs: HashMap<(usize, bool), Vec<Vec<i32>>> = HashMap::new();
 
-    for &streams in &[1usize, 4, 16] {
+    for &streams in stream_counts {
         let total = (streams * 2).max(4);
         for (label, chunked) in [("chunked 32/step", true), ("inline prefill", false)] {
             let mut s = Scheduler::new(EngineConfig {
@@ -74,7 +79,7 @@ fn main() -> anyhow::Result<()> {
                 // Closed-loop arrival process: keep `streams` in flight.
                 while submitted < total && s.active_count() + s.queued_count() < streams {
                     let len = PROMPT_LENS[submitted % PROMPT_LENS.len()];
-                    let rx = submit(&mut s, 1000 + submitted as u64, len, GEN);
+                    let rx = submit(&mut s, 1000 + submitted as u64, len, gen);
                     rxs.push(rx);
                     arrivals.push(Vec::new());
                     submitted += 1;
@@ -143,7 +148,7 @@ fn main() -> anyhow::Result<()> {
             })?;
             for idx in 0..total {
                 let len = PROMPT_LENS[idx % PROMPT_LENS.len()];
-                let rx = submit(&mut s2, 1000 + idx as u64, len, GEN);
+                let rx = submit(&mut s2, 1000 + idx as u64, len, gen);
                 s2.run_until_idle();
                 replay.push(
                     rx.try_iter()
@@ -167,6 +172,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     table.print();
+    maybe_write_json("ablation_chunked_prefill", &[&table])?;
     println!("expected: chunked prefill cuts decode-stall p99 and TTFT tail under");
     println!("load (arrivals no longer stall the batch for a whole prompt) with");
     println!("aggregate decode throughput within a few percent of inline.");
@@ -186,6 +192,7 @@ fn submit(s: &mut Scheduler, id: u64, prompt_len: usize, n_new: usize) -> Receiv
         id,
         prompt: PromptInput::Tokens(synth_prompt(id, prompt_len, 2048)),
         params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) },
+        priority: Default::default(),
         events: tx,
         enqueued_at: Instant::now(),
     });

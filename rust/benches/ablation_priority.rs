@@ -1,0 +1,217 @@
+//! Priority-scheduling ablation: interactive-class latency under a
+//! batch-prompt flood, FIFO vs priority ordering vs priority plus
+//! preemption (mid-prefill pause + decode-slot eviction).
+//!
+//! Workload: `N_BATCH` batch-class requests with long prompts are
+//! submitted at t0 (the flood), then `N_INT` short interactive
+//! requests arrive spaced through the run.  Reported per policy:
+//! wall time, aggregate decode tok/s, interactive TTFT p50/p99, batch
+//! TTFT p50, and the preemption counters.  FIFO head-of-line-blocks
+//! every interactive arrival behind the whole flood's prefill work;
+//! priority ordering lets them jump the admission queue; preemption
+//! additionally pauses an in-flight batch prefill and — once the
+//! decode slots fill — evicts a decoding batch sequence (KV
+//! checkpointed to the prefix cache, resumed via chunked catch-up).
+//!
+//! Scheduling must never change tokens: all three policies are
+//! asserted to produce identical greedy streams per request id.
+//!
+//! `BENCH_SMOKE=1` runs a reduced configuration (CI lane);
+//! `BENCH_JSON_OUT=dir` writes the table as a JSON artifact.
+
+use std::collections::HashMap;
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
+
+use umserve::bench_harness::{banner, fmt_f, maybe_write_json, smoke_scale, synth_prompt, Table};
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{EngineConfig, Event, GenRequest, Priority, PromptInput};
+use umserve::engine::sampler::SamplingParams;
+
+/// Interactive arrivals: one every `INT_EVERY` ticks from `INT_START`.
+const INT_START: usize = 8;
+const INT_EVERY: usize = 6;
+
+fn main() -> anyhow::Result<()> {
+    banner("Priority ablation — interactive TTFT under a batch-prompt flood");
+
+    let n_batch = smoke_scale(16, 6);
+    let n_int = smoke_scale(8, 4);
+    let gen_batch = smoke_scale(40, 12);
+    let gen_int = 8;
+    let batch_prompt = 192;
+    let int_prompt = 24;
+
+    let mut table = Table::new(
+        &format!(
+            "Priority scheduling (qwen3-0.6b-sim, {n_batch} batch x {batch_prompt}-tok prompts \
+             flood, {n_int} interactive x {int_prompt}-tok arrivals)"
+        ),
+        &[
+            "Policy",
+            "Wall (s)",
+            "Agg tok/s",
+            "Int TTFT p50 (ms)",
+            "Int TTFT p99 (ms)",
+            "Batch TTFT p50 (ms)",
+            "Preempt",
+            "Evict",
+            "Resume",
+        ],
+    );
+
+    // policy -> per-request greedy token streams (keyed by request id).
+    let mut outputs: HashMap<&'static str, HashMap<u64, Vec<i32>>> = HashMap::new();
+
+    for (label, psched, preempt) in [
+        ("fifo", false, false),
+        ("priority", true, false),
+        ("priority+preemption", true, true),
+    ] {
+        let mut s = Scheduler::new(EngineConfig {
+            model: "qwen3-0.6b".into(),
+            artifacts_dir: "artifacts".into(),
+            text_cache_bytes: 64 << 20,
+            cache_finished: false,
+            allow_shrink: false,
+            warmup: false,
+            prefill_chunk_tokens: 32,
+            prefill_chunks_per_step: 1,
+            priority_sched: psched,
+            preemption: preempt,
+            // Aging off: the ablation isolates ordering + preemption
+            // (starvation freedom is covered by tests/test_priority.rs).
+            aging_ticks: 0,
+            ..Default::default()
+        })?;
+        // Warm executables before timing.
+        for i in 0..4u64 {
+            let _ = submit(&mut s, 900 + i, 8, 4, Priority::Normal);
+        }
+        s.run_until_idle();
+
+        let t0 = Instant::now();
+        let mut rxs: Vec<(u64, Priority, Receiver<Event>)> = Vec::new();
+        for i in 0..n_batch {
+            let rx = submit(&mut s, 1000 + i as u64, batch_prompt, gen_batch, Priority::Batch);
+            rxs.push((1000 + i as u64, Priority::Batch, rx));
+        }
+        let mut next_int = 0usize;
+        let mut ticks = 0usize;
+        while next_int < n_int
+            || s.active_count() + s.queued_count() + s.evicted_count() > 0
+        {
+            if next_int < n_int && ticks >= INT_START + next_int * INT_EVERY {
+                let id = 2000 + next_int as u64;
+                let rx = submit(&mut s, id, int_prompt, gen_int, Priority::Interactive);
+                rxs.push((id, Priority::Interactive, rx));
+                next_int += 1;
+            }
+            s.tick();
+            ticks += 1;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+
+        let mut int_ttfts: Vec<f64> = Vec::new();
+        let mut batch_ttfts: Vec<f64> = Vec::new();
+        let mut tokens_out = 0usize;
+        let mut streams: HashMap<u64, Vec<i32>> = HashMap::new();
+        for (id, class, rx) in &rxs {
+            for ev in rx.try_iter() {
+                match ev {
+                    Event::Token { token, .. } if token >= 0 => {
+                        streams.entry(*id).or_default().push(token);
+                    }
+                    Event::Done { usage, timing, .. } => {
+                        tokens_out += usage.completion_tokens;
+                        if *id >= 1000 {
+                            match class {
+                                Priority::Interactive => int_ttfts.push(timing.ttft_ms),
+                                _ => batch_ttfts.push(timing.ttft_ms),
+                            }
+                        }
+                    }
+                    Event::Error { message, .. } => panic!("request {id} failed: {message}"),
+                    _ => {}
+                }
+            }
+        }
+        int_ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        batch_ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(int_ttfts.len(), n_int, "missing interactive completions");
+
+        table.row(vec![
+            label.into(),
+            fmt_f(wall, 2),
+            fmt_f(tokens_out as f64 / wall, 1),
+            fmt_f(pct(&int_ttfts, 0.50), 1),
+            fmt_f(pct(&int_ttfts, 0.99), 1),
+            fmt_f(pct(&batch_ttfts, 0.50), 1),
+            s.metrics.counter("preemptions").to_string(),
+            s.metrics.counter("evictions").to_string(),
+            s.metrics.counter("evicted_resumes").to_string(),
+        ]);
+        eprintln!(
+            "  {label}: wall {wall:.2}s, int p99 {:.1} ms, preempt {} / evict {} / resume {}",
+            pct(&int_ttfts, 0.99),
+            s.metrics.counter("preemptions"),
+            s.metrics.counter("evictions"),
+            s.metrics.counter("evicted_resumes"),
+        );
+        // Every eviction must eventually resume (nothing stranded).
+        assert_eq!(
+            s.metrics.counter("evictions"),
+            s.metrics.counter("evicted_resumes"),
+            "evicted sequences must all resume"
+        );
+        outputs.insert(label, streams);
+    }
+
+    // Scheduling policy must not change sampled tokens (greedy).
+    let fifo = &outputs["fifo"];
+    for policy in ["priority", "priority+preemption"] {
+        let other = &outputs[policy];
+        assert_eq!(fifo.len(), other.len(), "{policy}: request count mismatch");
+        for (id, toks) in fifo {
+            assert_eq!(
+                toks, &other[id],
+                "{policy}: request {id} diverged from FIFO output"
+            );
+        }
+        println!("output equality vs fifo ({policy}): IDENTICAL");
+    }
+
+    table.print();
+    maybe_write_json("ablation_priority", &[&table])?;
+    println!("expected: priority ordering collapses interactive TTFT p50/p99 vs");
+    println!("FIFO (no head-of-line blocking behind the flood's prefill), and");
+    println!("preemption bounds the tail under decode-slot pressure, with");
+    println!("aggregate throughput within a few percent of FIFO.");
+    Ok(())
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() as f64 * q) as usize).min(sorted.len() - 1)]
+}
+
+fn submit(
+    s: &mut Scheduler,
+    id: u64,
+    prompt_len: usize,
+    n_new: usize,
+    priority: Priority,
+) -> Receiver<Event> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    s.submit(GenRequest {
+        id,
+        prompt: PromptInput::Tokens(synth_prompt(id, prompt_len, 2048)),
+        params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) },
+        priority,
+        events: tx,
+        enqueued_at: Instant::now(),
+    });
+    rx
+}

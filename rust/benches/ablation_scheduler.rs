@@ -13,21 +13,22 @@
 use std::sync::mpsc::Receiver;
 use std::time::Instant;
 
-use umserve::bench_harness::{banner, fmt_f, synth_prompt, Table};
+use umserve::bench_harness::{banner, fmt_f, maybe_write_json, smoke_scale, synth_prompt, Table};
 use umserve::coordinator::scheduler::Scheduler;
 use umserve::coordinator::{EngineConfig, Event, GenRequest, PromptInput};
 use umserve::engine::sampler::SamplingParams;
 
-const N_REQ: usize = 12;
-const GEN: usize = 24;
 /// A new request becomes available every K decode steps.
 const ARRIVE_EVERY: usize = 6;
 
 fn main() -> anyhow::Result<()> {
     banner("Scheduler ablation — admission policy & shrink under staggered arrivals");
 
+    let n_req = smoke_scale(12, 6);
+    let gen = smoke_scale(24, 10);
+
     let mut table = Table::new(
-        &format!("Scheduler ablation (qwen3-0.6b-sim, {N_REQ} requests, 1 arrival / {ARRIVE_EVERY} steps)"),
+        &format!("Scheduler ablation (qwen3-0.6b-sim, {n_req} requests, 1 arrival / {ARRIVE_EVERY} steps)"),
         &["Policy", "Wall (s)", "Aggregate tok/s", "Mean latency (ms)", "p95 latency (ms)"],
     );
 
@@ -56,9 +57,9 @@ fn main() -> anyhow::Result<()> {
         let mut arrivals: Vec<Instant> = Vec::new();
         let mut arrived = 0usize;
         let mut steps = 0usize;
-        while arrived < N_REQ || s.active_count() + s.queued_count() > 0 {
+        while arrived < n_req || s.active_count() + s.queued_count() > 0 {
             // Arrival process: one request every ARRIVE_EVERY steps.
-            if arrived < N_REQ && steps >= arrived * ARRIVE_EVERY {
+            if arrived < n_req && steps >= arrived * ARRIVE_EVERY {
                 let arrival = *arrivals
                     .get(arrived)
                     .unwrap_or(&Instant::now());
@@ -70,7 +71,7 @@ fn main() -> anyhow::Result<()> {
                 // admit immediately at the token boundary.  Latency is
                 // measured from ARRIVAL either way.
                 if continuous || s.active_count() + s.queued_count() == 0 {
-                    let rx = submit_at(&mut s, 1000 + arrived as u64, GEN, arrival);
+                    let rx = submit_at(&mut s, 1000 + arrived as u64, gen, arrival);
                     rxs.push(rx);
                     arrived += 1;
                     continue;
@@ -110,6 +111,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     table.print();
+    maybe_write_json("ablation_scheduler", &[&table])?;
     println!("expected: continuous batching cuts latency vs static (requests");
     println!("join mid-flight); aggressive shrink adds migration overhead.");
     Ok(())
@@ -125,6 +127,7 @@ fn submit_at(s: &mut Scheduler, id: u64, n_new: usize, arrived: Instant) -> Rece
         id,
         prompt: PromptInput::Tokens(synth_prompt(id, 12, 2048)),
         params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) },
+        priority: Default::default(),
         events: tx,
         enqueued_at: arrived,
     });

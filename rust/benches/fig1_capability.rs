@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
             id: i + 1,
             prompt: PromptInput::Tokens(synth_prompt(i, 12, 2048)),
             params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(6) },
+            priority: Default::default(),
             events: tx,
             enqueued_at: std::time::Instant::now(),
         });
@@ -57,6 +58,7 @@ fn main() -> anyhow::Result<()> {
         id: 50,
         prompt: mm("probe"),
         params: SamplingParams::greedy(3),
+        priority: Default::default(),
         events: tx,
         enqueued_at: std::time::Instant::now(),
     });
@@ -67,6 +69,7 @@ fn main() -> anyhow::Result<()> {
         id: 51,
         prompt: mm("probe"),
         params: SamplingParams::greedy(3),
+        priority: Default::default(),
         events: tx2,
         enqueued_at: std::time::Instant::now(),
     });

@@ -102,6 +102,7 @@ fn run_closed_loop(
                 2048,
             )),
             params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) },
+            priority: Default::default(),
             events: tx,
             enqueued_at: Instant::now(),
         });

@@ -21,6 +21,7 @@ pub fn run_request(
         id: NEXT_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
         prompt,
         params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(max_tokens) },
+        priority: Default::default(),
         events: tx,
         enqueued_at: Instant::now(),
     });

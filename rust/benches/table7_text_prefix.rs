@@ -94,6 +94,7 @@ fn run_ttft(s: &mut Scheduler, tokens: Vec<i32>, max_tokens: usize) -> anyhow::R
         id: NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
         prompt: PromptInput::Tokens(tokens),
         params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(max_tokens) },
+        priority: Default::default(),
         events: tx,
         enqueued_at: Instant::now(),
     });

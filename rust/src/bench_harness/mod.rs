@@ -7,6 +7,45 @@
 
 use std::time::Instant;
 
+use crate::substrate::json::Json;
+
+/// True when the benches run in reduced-iteration smoke mode — the CI
+/// `bench-smoke` lane sets `BENCH_SMOKE=1` so every ablation executes
+/// end to end in seconds while still emitting its JSON artifact.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE")
+        .map(|v| v == "1" || v == "true")
+        .unwrap_or(false)
+}
+
+/// Pick `full` normally, `reduced` under `BENCH_SMOKE=1`.
+pub fn smoke_scale(full: usize, reduced: usize) -> usize {
+    if smoke() {
+        reduced
+    } else {
+        full
+    }
+}
+
+/// Write bench tables as a JSON artifact to `$BENCH_JSON_OUT/<name>.json`
+/// (no-op when the env var is unset).  CI uploads these so the perf
+/// trajectory is inspectable per-PR.
+pub fn maybe_write_json(name: &str, tables: &[&Table]) -> anyhow::Result<()> {
+    let Some(dir) = std::env::var_os("BENCH_JSON_OUT") else {
+        return Ok(());
+    };
+    std::fs::create_dir_all(&dir)?;
+    let path = std::path::Path::new(&dir).join(format!("{name}.json"));
+    let body = Json::obj(vec![
+        ("bench", Json::str(name)),
+        ("smoke", Json::Bool(smoke())),
+        ("tables", Json::Arr(tables.iter().map(|t| t.to_json()).collect())),
+    ]);
+    std::fs::write(&path, body.to_string())?;
+    eprintln!("  wrote {}", path.display());
+    Ok(())
+}
+
 /// Repeat a closure and report robust timing stats.
 pub fn time_n<F: FnMut() -> anyhow::Result<()>>(
     iters: usize,
@@ -76,6 +115,33 @@ impl Table {
         }
         println!();
     }
+
+    /// Structured form for the JSON bench artifacts: rows become
+    /// objects keyed by header, so downstream tooling doesn't need to
+    /// track column positions.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(
+                    self.headers
+                        .iter()
+                        .zip(r)
+                        .map(|(h, c)| (h.as_str(), Json::str(c.clone())))
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::str(h.clone())).collect()),
+            ),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
 }
 
 /// Deterministic synthetic prompt of `len` tokens (ids in vocab range,
@@ -136,5 +202,17 @@ mod tests {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["1".into(), "2".into()]);
         assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn table_to_json_keys_rows_by_header() {
+        let mut t = Table::new("demo", &["Policy", "tok/s"]);
+        t.row(vec!["fifo".into(), "12.5".into()]);
+        let j = t.to_json();
+        assert_eq!(j.path(&["title"]).and_then(|v| v.as_str()), Some("demo"));
+        let rows = j.get("rows").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("Policy").and_then(|v| v.as_str()), Some("fifo"));
+        assert_eq!(rows[0].get("tok/s").and_then(|v| v.as_str()), Some("12.5"));
     }
 }

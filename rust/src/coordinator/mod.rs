@@ -15,6 +15,53 @@ use std::time::Instant;
 use crate::engine::sampler::SamplingParams;
 use crate::multimodal::ImageSource;
 
+/// Scheduling class of a request.  Lower rank = scheduled first: the
+/// admission queue orders staged prefills by (class, arrival), a
+/// batch-class prefill is paused mid-prompt when an interactive request
+/// arrives, and — under decode-slot pressure — a decoding batch-class
+/// sequence can be evicted (its KV checkpointed into the text prefix
+/// cache) to make room for an interactive one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Latency-sensitive (chat turns): front of the queue, may preempt.
+    Interactive,
+    /// The default class: ordered ahead of batch, never preempts.
+    #[default]
+    Normal,
+    /// Throughput work (evals, synthetic data): runs when nothing
+    /// better is waiting; preemptible mid-prefill and mid-decode.
+    Batch,
+}
+
+impl Priority {
+    /// Queue rank (0 = front).  Aging subtracts from this.
+    pub fn rank(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Normal => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Normal => "normal",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse a class name (the CLI/API wire form).
+    pub fn from_name(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "normal" => Some(Priority::Normal),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+}
+
 /// What the client asked us to generate from.
 #[derive(Debug, Clone)]
 pub enum PromptInput {
@@ -31,6 +78,8 @@ pub struct GenRequest {
     pub id: u64,
     pub prompt: PromptInput,
     pub params: SamplingParams,
+    /// Scheduling class (see [`Priority`]).
+    pub priority: Priority,
     /// Event stream back to the submitter.
     pub events: Sender<Event>,
     pub enqueued_at: Instant,
@@ -75,7 +124,14 @@ pub struct Timing {
     pub staged_ms: f64,
     /// Time to first token (admission + prefill path).
     pub ttft_ms: f64,
+    /// Prompt-processing compute actually spent on this request (its
+    /// own chunk executions; excludes waiting behind other jobs).
+    pub prefill_ms: f64,
     pub total_ms: f64,
+    /// Times this request was evicted from a decode slot (checkpointed
+    /// to the prefix cache, later resumed).  Non-zero only for
+    /// lower-priority classes under preemption.
+    pub evictions: u32,
     /// Vision encoder calls skipped via the embedding cache / total images.
     pub vision_cached: usize,
     pub vision_total: usize,
@@ -131,6 +187,24 @@ pub struct EngineConfig {
     /// scheduler tick (each tick also runs one batched decode step), so
     /// admission work cannot starve active sequences.
     pub prefill_chunks_per_step: usize,
+    /// Class-aware admission: order staged prefills by
+    /// (priority, arrival) instead of strict FIFO.  Off = the PR-1
+    /// behaviour, kept for the ablation bench.
+    pub priority_sched: bool,
+    /// Allow preemption: pause a lower-class prefill mid-prompt when a
+    /// higher-class request arrives, and evict decoding batch-class
+    /// sequences (KV checkpointed to the prefix cache, resumed via the
+    /// chunked catch-up path) under decode-slot pressure.  Requires
+    /// `priority_sched`; decode eviction additionally requires a
+    /// non-zero `text_cache_bytes` to checkpoint into.
+    pub preemption: bool,
+    /// Class assigned to requests that don't specify one.
+    pub default_priority: Priority,
+    /// Starvation prevention: a staged job's effective class improves
+    /// by one every `aging_ticks` scheduler ticks spent waiting, so a
+    /// batch job behind a steady interactive flood is admitted within
+    /// `2 * aging_ticks` ticks.  0 disables aging.
+    pub aging_ticks: u64,
 }
 
 impl Default for EngineConfig {
@@ -146,6 +220,10 @@ impl Default for EngineConfig {
             warmup: true,
             prefill_chunk_tokens: 32,
             prefill_chunks_per_step: 1,
+            priority_sched: true,
+            preemption: true,
+            default_priority: Priority::Normal,
+            aging_ticks: 64,
         }
     }
 }

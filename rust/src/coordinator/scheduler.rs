@@ -33,6 +33,18 @@
 //! (Algorithm 2) and the multimodal embedding path (Algorithm 3) route
 //! their uncached suffix through the same chunked feed.
 //!
+//! Admission is priority-aware (`EngineConfig::priority_sched`): the
+//! staging queue is ordered by (class, arrival) over the
+//! interactive / normal / batch classes, with per-`aging_ticks` rank
+//! promotion so batch work cannot starve.  With
+//! `EngineConfig::preemption` on, a batch-class prefill is *paused*
+//! mid-prompt when an interactive request arrives (its partial KV
+//! simply waits in the queue), and under decode-slot pressure a
+//! decoding batch-class sequence is *evicted*: its KV prefix is
+//! checkpointed into the text prefix cache and the sequence resumes
+//! later through the chunked catch-up path — byte-identical greedy
+//! output, no prefill redone.
+//!
 //! The scheduler owns all PJRT state on one thread; use
 //! [`Scheduler::spawn`] to get a channel-based handle, or construct one
 //! in-thread (benches) and call [`Scheduler::run_until_idle`].
@@ -58,7 +70,7 @@ use crate::runtime::{ArtifactStore, ModelRuntime};
 use crate::substrate::hash::ContentHash;
 use crate::substrate::metrics::MetricsRegistry;
 
-use super::{EngineConfig, Event, FinishReason, GenRequest, PromptInput, Timing, Usage};
+use super::{EngineConfig, Event, FinishReason, GenRequest, Priority, PromptInput, Timing, Usage};
 
 /// Commands accepted by a spawned scheduler thread.
 pub enum Command {
@@ -74,6 +86,8 @@ pub struct StatsSnapshot {
     pub active: usize,
     /// Staged prefills waiting in the admission queue.
     pub queued: usize,
+    /// Checkpointed (evicted) sequences waiting to resume.
+    pub evicted: usize,
     pub bucket: usize,
     pub text_cache: (u64, u64, u64, usize),
     pub mm_cache: crate::cache::mm::MmCacheStats,
@@ -85,6 +99,7 @@ pub struct StatsSnapshot {
 struct ActiveReq {
     events: Sender<Event>,
     params: SamplingParams,
+    priority: Priority,
     rng: Rng,
     decoder: StreamDecoder,
     /// prompt ++ tokens actually FED into the KV state.  Invariant: the
@@ -132,6 +147,11 @@ struct PrefillJob {
     id: u64,
     events: Sender<Event>,
     params: SamplingParams,
+    /// Scheduling class: the admission queue is kept ordered by
+    /// (effective class, arrival); see [`Scheduler::order_queue`].
+    priority: Priority,
+    /// Tick at which the job entered the queue (aging reference).
+    staged_tick: u64,
     /// Token-id view of the full sequence (the prefix-cache key).
     tokens: Vec<i32>,
     feed: Feed,
@@ -174,8 +194,41 @@ struct Follower {
     id: u64,
     events: Sender<Event>,
     params: SamplingParams,
+    priority: Priority,
     timing: Timing,
     enqueued_at: Instant,
+}
+
+/// A sequence evicted from its decode slot under priority pressure.
+/// Its KV prefix was checkpointed into the text prefix cache at
+/// eviction; the full sampler/decoder state lives here so the resume
+/// continues the token stream exactly where it stopped.
+struct EvictedSeq {
+    id: u64,
+    req: ActiveReq,
+    /// Tick of eviction — the aging reference while waiting to resume.
+    evict_tick: u64,
+}
+
+/// Queue rank of a job: its class rank, improved by one step per
+/// `aging_ticks` ticks spent waiting (starvation prevention).  With
+/// `priority_sched` off every job ranks equally and the stable sort
+/// preserves pure FIFO order.
+fn effective_rank(
+    p: Priority,
+    since_tick: u64,
+    now_tick: u64,
+    aging_ticks: u64,
+    priority_sched: bool,
+) -> usize {
+    if !priority_sched {
+        return 0;
+    }
+    let mut r = p.rank();
+    if aging_ticks > 0 {
+        r = r.saturating_sub((now_tick.saturating_sub(since_tick) / aging_ticks) as usize);
+    }
+    r
 }
 
 pub struct Scheduler {
@@ -185,9 +238,14 @@ pub struct Scheduler {
     mm_cache: MmCache,
     cfg: EngineConfig,
     active: HashMap<u64, ActiveReq>,
-    /// Admission queue of staged prefills (FIFO; the front job gets the
-    /// whole chunk budget so TTFT ordering follows arrival order).
+    /// Admission queue of staged prefills, kept ordered by
+    /// (effective class, arrival) — strict FIFO when `priority_sched`
+    /// is off.  The front job gets the whole chunk budget.
     pending: VecDeque<PrefillJob>,
+    /// Sequences evicted from decode slots, waiting to resume.
+    evicted: Vec<EvictedSeq>,
+    /// Scheduler ticks elapsed (the aging clock).
+    tick_count: u64,
     /// Effective staged-prefill chunk size (0 = inline admissions).
     chunk_tokens: usize,
     /// End of the previous decode step, for the decode-stall histogram.
@@ -238,6 +296,8 @@ impl Scheduler {
             cfg: cfg.clone(),
             active: HashMap::new(),
             pending: VecDeque::new(),
+            evicted: Vec::new(),
+            tick_count: 0,
             chunk_tokens,
             last_decode: None,
             metrics: MetricsRegistry::new(),
@@ -249,6 +309,7 @@ impl Scheduler {
 
     /// Spawn on a dedicated thread; returns a cloneable handle.
     pub fn spawn(cfg: EngineConfig) -> Result<SchedulerHandle> {
+        let default_priority = cfg.default_priority;
         let (tx, rx) = channel::<Command>();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let join = std::thread::Builder::new()
@@ -269,6 +330,7 @@ impl Scheduler {
         Ok(SchedulerHandle {
             tx,
             next_id: Arc::new(AtomicU64::new(1)),
+            default_priority,
             join: Some(Arc::new(std::sync::Mutex::new(Some(join)))),
         })
     }
@@ -279,7 +341,7 @@ impl Scheduler {
     pub fn run(&mut self, rx: Receiver<Command>) {
         loop {
             // Blocking wait only when idle; otherwise drain non-blocking.
-            if self.active.is_empty() && self.pending.is_empty() {
+            if self.active.is_empty() && self.pending.is_empty() && self.evicted.is_empty() {
                 match rx.recv_timeout(Duration::from_millis(200)) {
                     Ok(Command::Gen(r)) => self.admit(r),
                     Ok(Command::Stats(tx)) => {
@@ -292,8 +354,18 @@ impl Scheduler {
             }
             // Token-boundary admission: stage requests up to capacity
             // (coalesced followers count — they all join the batch when
-            // their primary finalizes).
-            while self.active.len() + self.staged_requests() < self.engine.max_capacity() {
+            // their primary finalizes).  With the priority scheduler on,
+            // intake continues past decode capacity (bounded headroom)
+            // so an interactive arrival is visible for preemption even
+            // when every slot is busy with batch work.
+            let headroom = if self.chunk_tokens > 0 && self.cfg.priority_sched {
+                self.engine.max_capacity()
+            } else {
+                0
+            };
+            while self.active.len() + self.staged_requests() + self.evicted.len()
+                < self.engine.max_capacity() + headroom
+            {
                 match rx.try_recv() {
                     Ok(Command::Gen(r)) => self.admit(r),
                     Ok(Command::Stats(tx)) => {
@@ -307,10 +379,10 @@ impl Scheduler {
         }
     }
 
-    /// Drive the loop until every staged and active request finishes
-    /// (bench mode).
+    /// Drive the loop until every staged, active and evicted request
+    /// finishes (bench mode).
     pub fn run_until_idle(&mut self) {
-        while !self.active.is_empty() || !self.pending.is_empty() {
+        while !self.active.is_empty() || !self.pending.is_empty() || !self.evicted.is_empty() {
             self.tick();
         }
     }
@@ -330,6 +402,16 @@ impl Scheduler {
         self.pending.len()
     }
 
+    /// Sequences currently checkpointed out of their decode slot.
+    pub fn evicted_count(&self) -> usize {
+        self.evicted.len()
+    }
+
+    /// Decode slots left before the largest batch bucket is exhausted.
+    fn free_slots(&self) -> usize {
+        self.engine.max_capacity().saturating_sub(self.active.len())
+    }
+
     /// Requests the staging area will admit on completion: one per job
     /// plus its coalesced followers (the admission capacity unit).
     fn staged_requests(&self) -> usize {
@@ -342,6 +424,7 @@ impl Scheduler {
             metrics: self.metrics.clone(),
             active: self.active.len(),
             queued: self.staged_requests(),
+            evicted: self.evicted.len(),
             bucket: self.engine.bucket(),
             text_cache: self.text_cache.stats(),
             mm_cache: self.mm_cache.stats(),
@@ -355,9 +438,12 @@ impl Scheduler {
         }
     }
 
-    /// One iteration of the interleaved pipeline: advance staged
-    /// prefills by the chunk budget, then one batched decode step.
+    /// One iteration of the interleaved pipeline: resume checkpointed
+    /// sequences if slots and priorities allow, advance staged prefills
+    /// by the chunk budget, then one batched decode step.
     pub fn tick(&mut self) {
+        self.tick_count += 1;
+        self.try_resume_evicted();
         self.advance_prefills();
         self.step_once();
     }
@@ -397,17 +483,53 @@ impl Scheduler {
         };
 
         match resolved {
-            Resolved::Ready { tokens, kv, logits, mm_hashes } => self.admit_ready(
-                req.id,
-                req.events,
-                req.params,
-                req.enqueued_at,
-                tokens,
-                kv,
-                logits,
-                mm_hashes,
-                timing,
-            ),
+            Resolved::Ready { tokens, kv, logits, mm_hashes } => {
+                if self.free_slots() > 0 || self.chunk_tokens == 0 {
+                    return self.admit_ready(
+                        req.id,
+                        req.events,
+                        req.params,
+                        req.priority,
+                        req.enqueued_at,
+                        tokens,
+                        kv,
+                        logits,
+                        mm_hashes,
+                        timing,
+                    );
+                }
+                // At decode capacity: park the full hit in the admission
+                // queue as a zero-feed job.  It costs no prefill work and
+                // joins — possibly after evicting a lower-class decoder —
+                // when a slot frees.
+                let total = kv.len;
+                let job = PrefillJob {
+                    id: req.id,
+                    events: req.events,
+                    params: req.params,
+                    priority: req.priority,
+                    staged_tick: self.tick_count,
+                    tokens,
+                    feed: Feed::Tokens(Vec::new()),
+                    fed: 0,
+                    kv_one: None,
+                    source: Some(kv),
+                    built: total,
+                    total,
+                    catch_up_tokens: 0,
+                    mm_hashes,
+                    mm_key: None,
+                    prefill_ms: 0.0,
+                    staged_at: t_admit,
+                    followers: Vec::new(),
+                    timing,
+                    enqueued_at: req.enqueued_at,
+                };
+                self.pending.push_back(job);
+                self.metrics
+                    .set_gauge("prefill_queue_depth", self.staged_requests() as f64);
+                Ok(())
+            }
             Resolved::Staged { tokens, feed, source, built, total, catch_up, mm_hashes, mm_key } => {
                 // Coalesce: an identical prompt already staged means this
                 // request can join the batch from that job's KV when it
@@ -415,15 +537,29 @@ impl Scheduler {
                 // all miss the cache (inserts happen at finalize) and
                 // each runs a redundant full prefill.
                 if self.chunk_tokens > 0 {
+                    // Cap the coalesced group at decode capacity: the
+                    // whole group joins the batch at once when the
+                    // primary finalizes, so a group larger than the
+                    // arena could never be admitted.
+                    let cap = self.engine.max_capacity();
                     if let Some(primary) = self
                         .pending
                         .iter_mut()
-                        .find(|j| j.tokens == tokens && j.mm_key == mm_key)
+                        .find(|j| {
+                            j.tokens == tokens && j.mm_key == mm_key && 2 + j.followers.len() <= cap
+                        })
                     {
+                        // A higher-class duplicate promotes the shared
+                        // job — the interactive copy must not wait at
+                        // batch rank.
+                        if req.priority.rank() < primary.priority.rank() {
+                            primary.priority = req.priority;
+                        }
                         primary.followers.push(Follower {
                             id: req.id,
                             events: req.events,
                             params: req.params,
+                            priority: req.priority,
                             timing,
                             enqueued_at: req.enqueued_at,
                         });
@@ -435,6 +571,8 @@ impl Scheduler {
                     id: req.id,
                     events: req.events,
                     params: req.params,
+                    priority: req.priority,
+                    staged_tick: self.tick_count,
                     tokens,
                     feed,
                     fed: 0,
@@ -475,6 +613,7 @@ impl Scheduler {
         id: u64,
         events: Sender<Event>,
         params: SamplingParams,
+        priority: Priority,
         enqueued_at: Instant,
         tokens: Vec<i32>,
         kv: Rc<CachedKv>,
@@ -489,6 +628,7 @@ impl Scheduler {
         let mut ar = ActiveReq {
             events,
             params,
+            priority,
             rng,
             decoder: StreamDecoder::new(),
             all_tokens: tokens,
@@ -503,6 +643,13 @@ impl Scheduler {
         ar.timing.ttft_ms = ms_since(enqueued_at, Instant::now());
         self.metrics.observe_ms("ttft", ar.timing.ttft_ms);
         self.metrics.observe_ms("queue_wait", ar.timing.queue_ms);
+        // Scheduling wait by class: everything between enqueue and
+        // joining the decode batch that was NOT this request's own
+        // prompt-processing compute.
+        let sched_wait =
+            (ms_since(enqueued_at, Instant::now()) - ar.timing.prefill_ms).max(0.0);
+        self.metrics
+            .observe_ms_labeled("queue_wait_class", "class", priority.as_str(), sched_wait);
 
         if let Some(finish) = self.emit_token(id, &mut ar, first) {
             self.active.insert(id, ar);
@@ -517,27 +664,67 @@ impl Scheduler {
 
     // ------------------------------------------------- staged prefill
 
+    /// Keep the admission queue ordered by (effective class, arrival).
+    /// The sort is stable, so ties — including everything when
+    /// `priority_sched` is off — preserve arrival order.  Without
+    /// `preemption`, a job that has started feeding chunks pins the
+    /// front until it completes; with it, a higher-class arrival sorts
+    /// ahead, pausing the started job mid-prefill (its partial KV state
+    /// simply waits in the queue).
+    fn order_queue(&mut self) {
+        if self.pending.len() < 2 {
+            return;
+        }
+        let now = self.tick_count;
+        let aging = self.cfg.aging_ticks;
+        let psched = self.cfg.priority_sched;
+        let preempt = self.cfg.preemption;
+        let front_before = self.pending.front().map(|j| (j.id, j.fed > 0));
+        self.pending.make_contiguous().sort_by_key(|j| {
+            if !preempt && j.fed > 0 {
+                // Non-preemptive: started prefills keep the front.
+                0
+            } else {
+                effective_rank(j.priority, j.staged_tick, now, aging, psched)
+            }
+        });
+        if let (Some((old_id, true)), Some(new_front)) = (front_before, self.pending.front()) {
+            if new_front.id != old_id {
+                // A started lower-class prefill was paused in favour of
+                // a higher-class arrival.
+                self.metrics.inc("preemptions", 1);
+            }
+        }
+    }
+
     /// Advance the admission queue by at most `prefill_chunks_per_step`
-    /// chunks.  The front (oldest) job gets the whole budget; completed
-    /// jobs join the decode batch with their first token sampled.
+    /// chunks.  The highest-priority incomplete job gets the budget;
+    /// completed jobs join the decode batch in queue order with their
+    /// first token sampled, evicting lower-class decoders if the slots
+    /// are exhausted and preemption allows.  A completed head that is
+    /// still waiting for a decode slot does NOT stall later jobs'
+    /// prefill chunks — the pipeline keeps feeding behind it (it still
+    /// admits first; queue order is unchanged).
     fn advance_prefills(&mut self) {
         if self.pending.is_empty() {
             return;
         }
+        self.order_queue();
+        let d = self.engine.rt.info.d_model;
         let budget = self.cfg.prefill_chunks_per_step.max(1);
         for _ in 0..budget {
-            let Some(mut job) = self.pending.pop_front() else { break };
+            self.admit_completed_heads(d);
+            // One chunk for the first job with prefill work left.
+            let Some(pos) = self.pending.iter().position(|j| j.fed < j.feed.rows(d)) else {
+                break;
+            };
+            let Some(mut job) = self.pending.remove(pos) else { break };
             match self.advance_job(&mut job) {
-                Ok(true) => {
-                    let id = job.id;
-                    let events = job.events.clone();
-                    if let Err(e) = self.finalize_job(job) {
-                        self.metrics.inc("requests_failed", 1);
-                        let _ = events.send(Event::Error { id, message: format!("{e:#}") });
-                    }
-                }
-                Ok(false) => {
-                    self.pending.push_front(job);
+                Ok(_) => {
+                    // Re-enter at the same position; a completed job is
+                    // admitted by the next head pass once it reaches
+                    // the front.
+                    self.pending.insert(pos.min(self.pending.len()), job);
                 }
                 Err(e) => {
                     // The job AND any coalesced followers fail together.
@@ -549,8 +736,242 @@ impl Scheduler {
                 }
             }
         }
+        self.admit_completed_heads(d);
         self.metrics
             .set_gauge("prefill_queue_depth", self.staged_requests() as f64);
+    }
+
+    /// Admit completed jobs from the queue front while decode slots
+    /// (or evictable victims) allow.
+    fn admit_completed_heads(&mut self, d: usize) {
+        while let Some(front) = self.pending.front() {
+            if front.fed < front.feed.rows(d) {
+                break;
+            }
+            let (priority, need) = (front.priority, 1 + front.followers.len());
+            if !self.make_room(priority, need) {
+                break;
+            }
+            let Some(job) = self.pending.pop_front() else { break };
+            let id = job.id;
+            let events = job.events.clone();
+            if let Err(e) = self.finalize_job(job) {
+                self.metrics.inc("requests_failed", 1);
+                let _ = events.send(Event::Error { id, message: format!("{e:#}") });
+            }
+        }
+    }
+
+    /// Ensure `need` decode slots exist for a completed staged prefill
+    /// (the job plus its coalesced followers).  Under preemption,
+    /// batch-class decoders are evicted — KV checkpointed — to make
+    /// room for higher-class work.
+    fn make_room(&mut self, priority: Priority, need: usize) -> bool {
+        loop {
+            if self.free_slots() >= need {
+                return true;
+            }
+            if !(self.cfg.priority_sched && self.cfg.preemption) {
+                return false;
+            }
+            if !self.evict_one_below(priority) {
+                return false;
+            }
+        }
+    }
+
+    /// Evict the most recently enqueued batch-class decoding sequence
+    /// whose class is strictly lower-priority than `class`.  Its KV
+    /// prefix is checkpointed into the text prefix cache so the resume
+    /// rides the chunked catch-up path instead of re-prefilling from
+    /// scratch.  Returns false when no victim qualifies (or there is no
+    /// cache to checkpoint into).
+    fn evict_one_below(&mut self, class: Priority) -> bool {
+        if self.cfg.text_cache_bytes == 0 {
+            return false;
+        }
+        // Victims: batch-class text sequences only.  Multimodal KV
+        // (visual rows) can't be rebuilt from the token view, so mm
+        // sequences are never evicted.
+        let victim = self
+            .active
+            .iter()
+            .filter(|(_, a)| {
+                a.priority == Priority::Batch
+                    && a.priority.rank() > class.rank()
+                    && a.mm_hashes.is_none()
+            })
+            .map(|(&id, a)| (a.enqueued_at, id))
+            .max()
+            .map(|(_, id)| id);
+        let Some(id) = victim else { return false };
+        let Some(mut a) = self.active.remove(&id) else { return false };
+        match self.engine.remove(id, true) {
+            Ok(Some(kv_one)) => {
+                // Invariant (same as finish()): the slot KV encodes
+                // exactly prompt ++ fed tokens == all_tokens.
+                let kv_len = a.prompt_len + a.fed;
+                self.text_cache
+                    .insert(&a.all_tokens, CachedKv::new_rc(kv_one, kv_len));
+                a.timing.evictions += 1;
+                self.metrics.inc("evictions", 1);
+                self.evicted
+                    .push(EvictedSeq { id, req: a, evict_tick: self.tick_count });
+                self.metrics
+                    .set_gauge("evicted_waiting", self.evicted.len() as f64);
+                self.metrics
+                    .set_gauge("active_requests", self.active.len() as f64);
+                true
+            }
+            Ok(None) => {
+                // Unreachable with extract_kv=true; fail the request
+                // rather than dropping it silently.
+                self.metrics.inc("requests_failed", 1);
+                let _ = a.events.send(Event::Error {
+                    id,
+                    message: "eviction lost KV state".into(),
+                });
+                false
+            }
+            Err(e) => {
+                self.metrics.inc("requests_failed", 1);
+                let _ = a.events.send(Event::Error { id, message: format!("{e:#}") });
+                false
+            }
+        }
+    }
+
+    /// Resume checkpointed sequences while decode slots and priorities
+    /// allow.  Evicted sequences age like staged jobs, so a batch
+    /// evictee eventually outranks a steady interactive arrival stream.
+    fn try_resume_evicted(&mut self) {
+        while !self.evicted.is_empty() && self.free_slots() > 0 {
+            let now = self.tick_count;
+            let aging = self.cfg.aging_ticks;
+            let psched = self.cfg.priority_sched;
+            let idx = (0..self.evicted.len())
+                .min_by_key(|&i| {
+                    let e = &self.evicted[i];
+                    (
+                        effective_rank(e.req.priority, e.evict_tick, now, aging, psched),
+                        e.evict_tick,
+                        e.id,
+                    )
+                })
+                .unwrap();
+            let cand_rank = {
+                let e = &self.evicted[idx];
+                effective_rank(e.req.priority, e.evict_tick, now, aging, psched)
+            };
+            // Leave slots for staged work the evictee must not cut in
+            // front of: strictly better-class jobs, and equal-rank jobs
+            // that were already waiting when the eviction happened
+            // (resuming into their slot would just trigger another
+            // evict/resume round-trip).  Equal-rank arrivals AFTER the
+            // eviction don't reserve — otherwise a steady stream of
+            // them would starve an aged evictee forever.
+            let evict_tick = self.evicted[idx].evict_tick;
+            let reserved: usize = self
+                .pending
+                .iter()
+                .filter(|j| {
+                    let r = effective_rank(j.priority, j.staged_tick, now, aging, psched);
+                    r < cand_rank || (r == cand_rank && j.staged_tick <= evict_tick)
+                })
+                .map(|j| 1 + j.followers.len())
+                .sum();
+            if self.free_slots() <= reserved {
+                return;
+            }
+            let e = self.evicted.swap_remove(idx);
+            let id = e.id;
+            let events = e.req.events.clone();
+            if let Err(err) = self.resume_evicted(e) {
+                self.metrics.inc("requests_failed", 1);
+                let _ = events.send(Event::Error { id, message: format!("{err:#}") });
+            }
+            self.metrics
+                .set_gauge("evicted_waiting", self.evicted.len() as f64);
+        }
+    }
+
+    /// Re-admit an evicted sequence.  The checkpoint normally survives
+    /// in the text prefix cache as a full hit; if the LRU dropped (part
+    /// of) it, the longest surviving prefix is extended through the
+    /// chunked catch-up path, and only a complete miss re-prefills the
+    /// prompt from scratch.  Sampler/decoder state was preserved at
+    /// eviction, so the token stream continues byte-identically.
+    fn resume_evicted(&mut self, e: EvictedSeq) -> Result<()> {
+        let EvictedSeq { id, req, .. } = e;
+        let tokens = req.all_tokens.clone();
+        let chunked = self.chunk_tokens > 0 && self.engine.rt.has_chunk_prefill();
+        let kv: Rc<CachedKv> = match self.text_cache.lookup(&tokens) {
+            Some(h) if h.full => {
+                self.metrics.inc("text_prefix_hits", 1);
+                h.kv
+            }
+            other => {
+                let (src, matched) = match other {
+                    Some(h) => {
+                        self.metrics.inc("text_prefix_hits", 1);
+                        (Some(h.kv), h.matched)
+                    }
+                    None => {
+                        self.metrics.inc("text_prefix_misses", 1);
+                        (None, 0)
+                    }
+                };
+                let suffix = tokens[matched..].to_vec();
+                self.metrics.inc("catch_up_tokens", suffix.len() as u64);
+                let kv_one = match src {
+                    Some(src) if chunked => {
+                        let (kv, _) = self.engine.catch_up_chunk(
+                            &src.kv_one,
+                            matched,
+                            &suffix,
+                            self.chunk_tokens,
+                        )?;
+                        kv
+                    }
+                    Some(src) => {
+                        let (kv, _) =
+                            self.engine.catch_up_tokenwise(&src.kv_one, matched, &suffix)?;
+                        kv
+                    }
+                    None => {
+                        // Complete miss: one-shot prefill of the prompt
+                        // part, then catch up the generated tokens.
+                        let p = req.prompt_len.min(tokens.len());
+                        let kv = self.engine.prefill(&tokens[..p])?;
+                        if p < tokens.len() {
+                            let rest = tokens[p..].to_vec();
+                            if chunked {
+                                let (kv, _) = self.engine.catch_up_chunk(
+                                    &kv,
+                                    p,
+                                    &rest,
+                                    self.chunk_tokens,
+                                )?;
+                                kv
+                            } else {
+                                let (kv, _) =
+                                    self.engine.catch_up_tokenwise(&kv, p, &rest)?;
+                                kv
+                            }
+                        } else {
+                            kv
+                        }
+                    }
+                };
+                CachedKv::new(kv_one, tokens.len())
+            }
+        };
+        self.engine.admit(id, &kv.kv_one, tokens.len())?;
+        self.metrics.inc("evicted_resumes", 1);
+        self.active.insert(id, req);
+        self.metrics
+            .set_gauge("active_requests", self.active.len() as f64);
+        Ok(())
     }
 
     /// Feed one segment of `job`; returns true when its KV is complete.
@@ -667,39 +1088,46 @@ impl Scheduler {
     /// token, insert into the caches, and join the decode batch —
     /// along with any coalesced followers, which reuse the same KV.
     fn finalize_job(&mut self, mut job: PrefillJob) -> Result<()> {
-        let kv_one = match job
-            .kv_one
-            .take()
-            .ok_or_else(|| anyhow!("staged prefill completed without KV state"))
-        {
-            Ok(k) => k,
-            Err(e) => {
+        // A zero-feed job (full cache hit parked while the decode slots
+        // were exhausted) passes its already-cached source KV through.
+        let from_cache = job.kv_one.is_none() && job.source.is_some();
+        let kv: Rc<CachedKv> = match (job.kv_one.take(), job.source.take()) {
+            (Some(k), _) => CachedKv::new(k, job.total),
+            (None, Some(src)) => src,
+            (None, None) => {
+                let e = anyhow!("staged prefill completed without KV state");
                 self.fail_followers(&job, &e);
                 return Err(e);
             }
         };
-        let logits = match self.engine.rt.read_logits(1, &kv_one, 0) {
+        let logits = match self.engine.rt.read_logits(1, &kv.kv_one, 0) {
             Ok(l) => l,
             Err(e) => {
                 self.fail_followers(&job, &e);
                 return Err(e);
             }
         };
-        let kv = CachedKv::new(kv_one, job.total);
         job.timing.staged_ms = ms_since(job.staged_at, Instant::now());
+        job.timing.prefill_ms = job.prefill_ms;
         self.metrics.observe_ms("staged_wait", job.timing.staged_ms);
-        self.metrics.observe_ms("prefill", job.prefill_ms);
+        if !from_cache {
+            // Parked full hits did no prompt processing; a 0 ms sample
+            // would drag the prefill histogram toward zero.
+            self.metrics.observe_ms("prefill", job.prefill_ms);
+        }
         if job.catch_up_tokens > 0 {
             self.metrics
                 .inc("catch_up_tokens", job.catch_up_tokens as u64);
         }
-        match (&job.mm_hashes, &job.mm_key) {
-            (Some(_), Some(key)) => {
-                self.mm_cache.put_kv(*key, kv.clone());
-            }
-            _ => {
-                if self.cfg.text_cache_bytes > 0 && self.cfg.cache_finished {
-                    self.text_cache.insert(&job.tokens, kv.clone());
+        if !from_cache {
+            match (&job.mm_hashes, &job.mm_key) {
+                (Some(_), Some(key)) => {
+                    self.mm_cache.put_kv(*key, kv.clone());
+                }
+                _ => {
+                    if self.cfg.text_cache_bytes > 0 && self.cfg.cache_finished {
+                        self.text_cache.insert(&job.tokens, kv.clone());
+                    }
                 }
             }
         }
@@ -710,6 +1138,7 @@ impl Scheduler {
                 f.id,
                 f.events.clone(),
                 f.params,
+                f.priority,
                 f.enqueued_at,
                 job.tokens.clone(),
                 kv.clone(),
@@ -725,6 +1154,7 @@ impl Scheduler {
             job.id,
             job.events,
             job.params,
+            job.priority,
             job.enqueued_at,
             job.tokens,
             kv,
@@ -1117,6 +1547,8 @@ impl CachedKv {
 pub struct SchedulerHandle {
     tx: Sender<Command>,
     next_id: Arc<AtomicU64>,
+    /// The engine's configured default class, applied by `generate`.
+    default_priority: Priority,
     join: Option<Arc<std::sync::Mutex<Option<std::thread::JoinHandle<()>>>>>,
 }
 
@@ -1125,7 +1557,8 @@ impl SchedulerHandle {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Submit a generation request; events arrive on the returned channel.
+    /// Submit a generation request at the engine's default priority;
+    /// events arrive on the returned channel.
     pub fn generate(
         &self,
         prompt: PromptInput,
@@ -1138,6 +1571,7 @@ impl SchedulerHandle {
                 id,
                 prompt,
                 params,
+                priority: self.default_priority,
                 events: etx,
                 enqueued_at: Instant::now(),
             }))
@@ -1145,11 +1579,13 @@ impl SchedulerHandle {
         Ok((id, erx))
     }
 
-    /// Submit with a caller-provided event channel (server streaming).
+    /// Submit with a caller-provided event channel and scheduling class
+    /// (server streaming).
     pub fn generate_with(
         &self,
         prompt: PromptInput,
         params: SamplingParams,
+        priority: Priority,
         events: Sender<Event>,
     ) -> Result<u64> {
         let id = self.fresh_id();
@@ -1158,6 +1594,7 @@ impl SchedulerHandle {
                 id,
                 prompt,
                 params,
+                priority,
                 events,
                 enqueued_at: Instant::now(),
             }))

@@ -11,7 +11,7 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, Event, PromptInput};
+use umserve::coordinator::{EngineConfig, Event, Priority, PromptInput};
 use umserve::engine::sampler::SamplingParams;
 use umserve::runtime::ArtifactStore;
 use umserve::substrate::argparse;
@@ -23,9 +23,24 @@ USAGE:
                 [--text-cache-mb 512] [--mm-emb-cache-mb 256] [--mm-kv-cache-mb 256]
                 [--no-cache] [--no-shrink]
                 [--prefill-chunk 32] [--prefill-chunks-per-step 1]
+                [--sched priority|fifo] [--default-priority normal]
+                [--preemption on|off] [--aging-ticks 64]
   umserve run   --model NAME --prompt TEXT [--max-tokens 64] [--temperature 0]
                 [--top-k 0] [--top-p 1.0] [--image PATH ...via --image=path]
   umserve info  [--artifacts artifacts]
+
+SCHEDULING:
+  Requests carry a priority class: interactive | normal | batch
+  (OpenAI API: a top-level \"priority\" field; CLI default via
+  --default-priority).  With --sched priority (the default) the
+  admission queue is ordered by (class, arrival) and ages one class
+  step every --aging-ticks scheduler ticks, so batch work is never
+  starved.  With --preemption on (the default), an interactive arrival
+  pauses a batch-class prompt prefill mid-chunk, and under decode-slot
+  pressure a decoding batch-class sequence is evicted — its KV prefix
+  is checkpointed into the text prefix cache and the sequence resumes
+  through the chunked catch-up path with identical output.
+  --sched fifo restores the strict arrival-order scheduler.
 ";
 
 fn main() {
@@ -53,6 +68,12 @@ fn real_main() -> anyhow::Result<()> {
 
 fn engine_config(args: &argparse::Args) -> anyhow::Result<EngineConfig> {
     let no_cache = args.bool("no-cache");
+    let default_priority = Priority::from_name(&args.choice(
+        "default-priority",
+        "normal",
+        &["interactive", "normal", "batch"],
+    )?)
+    .expect("choice() validated the class name");
     Ok(EngineConfig {
         model: args.str("model", "qwen3-0.6b"),
         artifacts_dir: args.str("artifacts", "artifacts"),
@@ -65,6 +86,10 @@ fn engine_config(args: &argparse::Args) -> anyhow::Result<EngineConfig> {
         // 0 disables staging (inline admit-then-decode prefill).
         prefill_chunk_tokens: args.usize("prefill-chunk", 32)?,
         prefill_chunks_per_step: args.usize("prefill-chunks-per-step", 1)?,
+        priority_sched: args.choice("sched", "priority", &["fifo", "priority"])? == "priority",
+        preemption: args.on_off("preemption", true)?,
+        default_priority,
+        aging_ticks: args.usize("aging-ticks", 64)? as u64,
     })
 }
 
@@ -72,13 +97,14 @@ fn serve(args: &argparse::Args) -> anyhow::Result<()> {
     let cfg = engine_config(args)?;
     let port = args.usize("port", 8000)?;
     let model = cfg.model.clone();
+    let default_priority = cfg.default_priority;
     eprintln!("loading model {model} ...");
     let handle = Scheduler::spawn(cfg)?;
     let listener = TcpListener::bind(("127.0.0.1", port as u16))?;
     eprintln!("umserve listening on http://127.0.0.1:{port} (model {model})");
     eprintln!("  POST /v1/chat/completions | POST /v1/completions | GET /v1/models | GET /metrics");
     let shutdown = Arc::new(AtomicBool::new(false));
-    umserve::server::serve(listener, handle, model, shutdown)
+    umserve::server::serve(listener, handle, model, default_priority, shutdown)
 }
 
 fn run(args: &argparse::Args) -> anyhow::Result<()> {
@@ -103,12 +129,14 @@ fn run(args: &argparse::Args) -> anyhow::Result<()> {
         None => PromptInput::Text(prompt_text),
     };
 
+    let default_priority = cfg.default_priority;
     let mut s = Scheduler::new(cfg)?;
     let (tx, rx) = std::sync::mpsc::channel();
     s.submit(umserve::coordinator::GenRequest {
         id: 1,
         prompt,
         params,
+        priority: default_priority,
         events: tx,
         enqueued_at: std::time::Instant::now(),
     });

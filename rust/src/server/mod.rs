@@ -21,17 +21,20 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::coordinator::scheduler::SchedulerHandle;
+use crate::coordinator::Priority;
 use crate::substrate::http;
 
 /// Serve forever (until `shutdown` flips).  `handle` must come from
-/// `Scheduler::spawn`.
+/// `Scheduler::spawn`; `default_priority` is the class assigned to
+/// requests that don't carry a `priority` field.
 pub fn serve(
     listener: TcpListener,
     handle: SchedulerHandle,
     model_name: String,
+    default_priority: Priority,
     shutdown: Arc<AtomicBool>,
 ) -> Result<()> {
-    let state = Arc::new(openai::ServerState { handle, model_name });
+    let state = Arc::new(openai::ServerState { handle, model_name, default_priority });
     let h = Arc::new(move |req: http::Request, rw: &mut http::ResponseWriter<'_>| {
         openai::route(&state, req, rw);
     });

@@ -4,7 +4,7 @@ use std::sync::mpsc::channel;
 use std::time::{SystemTime, UNIX_EPOCH};
 
 use crate::coordinator::scheduler::SchedulerHandle;
-use crate::coordinator::{Event, PromptInput};
+use crate::coordinator::{Event, Priority, PromptInput};
 use crate::engine::sampler::SamplingParams;
 use crate::multimodal::ImageSource;
 use crate::substrate::http::{Request, ResponseWriter};
@@ -13,6 +13,8 @@ use crate::substrate::json::{parse, Json};
 pub struct ServerState {
     pub handle: SchedulerHandle,
     pub model_name: String,
+    /// Class for requests without an explicit `priority` field.
+    pub default_priority: Priority,
 }
 
 pub fn route(state: &ServerState, req: Request, rw: &mut ResponseWriter<'_>) {
@@ -53,6 +55,19 @@ fn now_unix() -> f64 {
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
         .unwrap_or(0.0)
+}
+
+/// Top-level `"priority": "interactive" | "normal" | "batch"` request
+/// field (absent -> the server's default class; unknown values are a
+/// 400 so typos don't silently run at the wrong class).
+fn parse_priority(body: &Json, default: Priority) -> Result<Priority, (u16, String)> {
+    match body.get("priority") {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Str(s)) => Priority::from_name(s).ok_or_else(|| {
+            bad(format!("unknown priority '{s}' (expected interactive|normal|batch)"))
+        }),
+        Some(_) => Err(bad("'priority' must be a string")),
+    }
 }
 
 fn parse_params(body: &Json) -> SamplingParams {
@@ -129,6 +144,7 @@ fn url_to_source(url: &str) -> Result<ImageSource, (u16, String)> {
 fn chat_completions(state: &ServerState, req: &Request, rw: &mut ResponseWriter<'_>) -> HandlerResult {
     let body = parse(req.body_str().map_err(bad)?).map_err(|e| bad(e.to_string()))?;
     let params = parse_params(&body);
+    let priority = parse_priority(&body, state.default_priority)?;
     let stream = body.get("stream").and_then(|j| j.as_bool()).unwrap_or(false);
     let (images, text) = messages_to_prompt(&body)?;
     let prompt = if images.is_empty() {
@@ -136,12 +152,13 @@ fn chat_completions(state: &ServerState, req: &Request, rw: &mut ResponseWriter<
     } else {
         PromptInput::Multimodal { images, text }
     };
-    run_request(state, prompt, params, stream, true, rw)
+    run_request(state, prompt, params, priority, stream, true, rw)
 }
 
 fn completions(state: &ServerState, req: &Request, rw: &mut ResponseWriter<'_>) -> HandlerResult {
     let body = parse(req.body_str().map_err(bad)?).map_err(|e| bad(e.to_string()))?;
     let params = parse_params(&body);
+    let priority = parse_priority(&body, state.default_priority)?;
     let stream = body.get("stream").and_then(|j| j.as_bool()).unwrap_or(false);
     let prompt = body
         .get("prompt")
@@ -151,16 +168,19 @@ fn completions(state: &ServerState, req: &Request, rw: &mut ResponseWriter<'_>) 
         state,
         PromptInput::Text(prompt.to_string()),
         params,
+        priority,
         stream,
         false,
         rw,
     )
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_request(
     state: &ServerState,
     prompt: PromptInput,
     params: SamplingParams,
+    priority: Priority,
     stream: bool,
     chat: bool,
     rw: &mut ResponseWriter<'_>,
@@ -168,7 +188,7 @@ fn run_request(
     let (tx, rx) = channel();
     let id = state
         .handle
-        .generate_with(prompt, params, tx)
+        .generate_with(prompt, params, priority, tx)
         .map_err(|e| (503u16, e.to_string()))?;
     let oid = format!("chatcmpl-{id}");
     let object = if chat { "chat.completion" } else { "text_completion" };
@@ -328,6 +348,7 @@ fn metrics(state: &ServerState, rw: &mut ResponseWriter<'_>) -> HandlerResult {
     text.push_str(&format!("umserve_bucket {}\n", snap.bucket));
     text.push_str(&format!("umserve_active {}\n", snap.active));
     text.push_str(&format!("umserve_prefill_queued {}\n", snap.queued));
+    text.push_str(&format!("umserve_evicted_waiting_now {}\n", snap.evicted));
     text.push_str(&format!("umserve_prefill_chunks_total {}\n", snap.prefill_chunks));
     text.push_str(&format!("umserve_occupancy_mean {:.4}\n", snap.occupancy_mean));
     let (th, tm, te, tb) = snap.text_cache;
@@ -379,6 +400,20 @@ mod tests {
         assert!(matches!(url_to_source("tmp/x.uimg"), Ok(ImageSource::Path(_))));
         let body = parse(r#"{"messages":[{"role":"user","content":[{"type":"audio"}]}]}"#).unwrap();
         assert!(messages_to_prompt(&body).is_err());
+    }
+
+    #[test]
+    fn priority_parsing() {
+        let body = parse(r#"{"priority": "interactive"}"#).unwrap();
+        assert_eq!(parse_priority(&body, Priority::Normal).unwrap(), Priority::Interactive);
+        let none = parse("{}").unwrap();
+        assert_eq!(parse_priority(&none, Priority::Batch).unwrap(), Priority::Batch);
+        let null = parse(r#"{"priority": null}"#).unwrap();
+        assert_eq!(parse_priority(&null, Priority::Normal).unwrap(), Priority::Normal);
+        let bad_val = parse(r#"{"priority": "urgent"}"#).unwrap();
+        assert!(parse_priority(&bad_val, Priority::Normal).is_err());
+        let bad_type = parse(r#"{"priority": 3}"#).unwrap();
+        assert!(parse_priority(&bad_type, Priority::Normal).is_err());
     }
 
     #[test]

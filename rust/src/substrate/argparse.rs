@@ -84,6 +84,29 @@ impl Args {
     pub fn bool(&self, name: &str) -> bool {
         matches!(self.flags.get(name).map(|s| s.as_str()), Some("true" | "1" | "yes"))
     }
+
+    /// Enumerated flag: the value must be one of `allowed` (the default
+    /// need not appear in `allowed` checks — it is returned verbatim
+    /// when the flag is absent).
+    pub fn choice(&self, name: &str, default: &str, allowed: &[&str]) -> Result<String, ArgError> {
+        match self.flags.get(name) {
+            None => Ok(default.to_string()),
+            Some(v) if allowed.contains(&v.as_str()) => Ok(v.clone()),
+            Some(v) => Err(ArgError(format!(
+                "--{name} expects one of {allowed:?}, got '{v}'"
+            ))),
+        }
+    }
+
+    /// On/off flag with a default: `--name on|off` (also true/false/1/0).
+    pub fn on_off(&self, name: &str, default: bool) -> Result<bool, ArgError> {
+        match self.flags.get(name).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("on" | "true" | "1" | "yes") => Ok(true),
+            Some("off" | "false" | "0" | "no") => Ok(false),
+            Some(v) => Err(ArgError(format!("--{name} expects on|off, got '{v}'"))),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -125,5 +148,29 @@ mod tests {
         assert!(parse(&v(&["serve", "--model"]), &[]).is_err());
         let a = parse(&v(&["serve", "--port", "abc"]), &[]).unwrap();
         assert!(a.usize("port", 0).is_err());
+    }
+
+    #[test]
+    fn choice_and_on_off() {
+        let a = parse(
+            &v(&["serve", "--default-priority", "batch", "--preemption", "off"]),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(
+            a.choice("default-priority", "normal", &["interactive", "normal", "batch"])
+                .unwrap(),
+            "batch"
+        );
+        assert_eq!(a.choice("sched", "priority", &["fifo", "priority"]).unwrap(), "priority");
+        assert!(a.choice("preemption", "on", &["on", "off"]).is_ok());
+        assert!(!a.on_off("preemption", true).unwrap());
+        assert!(a.on_off("missing", true).unwrap());
+        let bad = parse(&v(&["serve", "--sched", "lifo"]), &[]).unwrap();
+        assert!(bad.choice("sched", "priority", &["fifo", "priority"]).is_err());
+        assert!(parse(&v(&["serve", "--preemption", "maybe"]), &[])
+            .unwrap()
+            .on_off("preemption", true)
+            .is_err());
     }
 }

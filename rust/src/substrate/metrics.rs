@@ -82,6 +82,10 @@ pub struct MetricsRegistry {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
     histograms: BTreeMap<String, Histogram>,
+    /// Histograms with one label dimension, keyed
+    /// (family, label key, label value) — e.g. request queue wait
+    /// broken out by scheduling class.
+    labeled_histograms: BTreeMap<(String, String, String), Histogram>,
 }
 
 impl MetricsRegistry {
@@ -104,12 +108,30 @@ impl MetricsRegistry {
             .observe_ms(ms);
     }
 
+    /// Observe into a histogram carrying one label, e.g.
+    /// `observe_ms_labeled("queue_wait_class", "class", "interactive", 3.2)`
+    /// renders as `umserve_queue_wait_class_ms{class="interactive"} …`.
+    pub fn observe_ms_labeled(&mut self, name: &str, label_key: &str, label_val: &str, ms: f64) {
+        self.labeled_histograms
+            .entry((name.to_string(), label_key.to_string(), label_val.to_string()))
+            .or_default()
+            .observe_ms(ms);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
     pub fn histogram(&self, name: &str) -> Option<&Histogram> {
         self.histograms.get(name)
+    }
+
+    /// Labeled histogram lookup (any label key under `name`).
+    pub fn labeled_histogram(&self, name: &str, label_val: &str) -> Option<&Histogram> {
+        self.labeled_histograms
+            .iter()
+            .find(|((n, _, v), _)| n == name && v == label_val)
+            .map(|(_, h)| h)
     }
 
     /// Prometheus text exposition format.
@@ -128,6 +150,23 @@ impl MetricsRegistry {
                 h.mean_ms(),
                 h.quantile_ms(0.5),
                 h.quantile_ms(0.95),
+                h.max_ms()
+            ));
+        }
+        let mut last_family = String::new();
+        for ((name, lk, lv), h) in &self.labeled_histograms {
+            if *name != last_family {
+                out.push_str(&format!("# TYPE umserve_{name}_ms summary\n"));
+                last_family = name.clone();
+            }
+            let sel = format!("{{{lk}=\"{lv}\"}}");
+            out.push_str(&format!(
+                "umserve_{name}_ms_count{sel} {}\numserve_{name}_ms_mean{sel} {:.3}\numserve_{name}_ms_p50{sel} {:.3}\numserve_{name}_ms_p95{sel} {:.3}\numserve_{name}_ms_p99{sel} {:.3}\numserve_{name}_ms_max{sel} {:.3}\n",
+                h.count(),
+                h.mean_ms(),
+                h.quantile_ms(0.5),
+                h.quantile_ms(0.95),
+                h.quantile_ms(0.99),
                 h.max_ms()
             ));
         }
@@ -165,6 +204,23 @@ mod tests {
         assert!(text.contains("umserve_requests_total 3"));
         assert!(text.contains("umserve_active_requests 3"));
         assert!(text.contains("umserve_ttft_ms_count 1"));
+    }
+
+    #[test]
+    fn labeled_histograms_render_with_selector() {
+        let mut m = MetricsRegistry::new();
+        m.observe_ms_labeled("queue_wait_class", "class", "interactive", 2.0);
+        m.observe_ms_labeled("queue_wait_class", "class", "interactive", 4.0);
+        m.observe_ms_labeled("queue_wait_class", "class", "batch", 90.0);
+        let h = m.labeled_histogram("queue_wait_class", "interactive").unwrap();
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_ms() - 3.0).abs() < 1e-9);
+        assert!(m.labeled_histogram("queue_wait_class", "normal").is_none());
+        let text = m.render_prometheus();
+        assert!(text.contains("umserve_queue_wait_class_ms_count{class=\"interactive\"} 2"));
+        assert!(text.contains("umserve_queue_wait_class_ms_count{class=\"batch\"} 1"));
+        // One TYPE line per family, not per label value.
+        assert_eq!(text.matches("# TYPE umserve_queue_wait_class_ms").count(), 1);
     }
 
     #[test]

@@ -60,6 +60,7 @@ fn submit_tokens(s: &mut Scheduler, id: u64, prompt: Vec<i32>, params: SamplingP
         id,
         prompt: PromptInput::Tokens(prompt),
         params,
+        priority: Default::default(),
         events: tx,
         enqueued_at: std::time::Instant::now(),
     });
@@ -194,6 +195,7 @@ fn staged_mm_prefill_reproduces_inline_outputs() {
             id,
             prompt: mk(),
             params: SamplingParams::greedy(6),
+            priority: Default::default(),
             events: tx,
             enqueued_at: std::time::Instant::now(),
         });

@@ -1,0 +1,273 @@
+//! Integration tests for the priority scheduler: class ordering,
+//! mid-prefill preemption, decode-slot eviction + resume, and aging
+//! (starvation prevention), over REAL artifacts (qwen3-0.6b sim).
+//! Requires `make artifacts`.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::time::Instant;
+
+use umserve::bench_harness::synth_prompt;
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{EngineConfig, Event, GenRequest, Priority, PromptInput};
+use umserve::engine::sampler::SamplingParams;
+
+fn cfg(preemption: bool) -> EngineConfig {
+    EngineConfig {
+        model: "qwen3-0.6b".into(),
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+        warmup: false,
+        cache_finished: false,
+        allow_shrink: false,
+        prefill_chunk_tokens: 32,
+        prefill_chunks_per_step: 1,
+        priority_sched: true,
+        preemption,
+        aging_ticks: 0,
+        ..Default::default()
+    }
+}
+
+fn submit(
+    s: &mut Scheduler,
+    id: u64,
+    prompt_len: usize,
+    n_new: usize,
+    priority: Priority,
+) -> Receiver<Event> {
+    let (tx, rx) = channel();
+    s.submit(GenRequest {
+        id,
+        prompt: PromptInput::Tokens(synth_prompt(id, prompt_len, 2048)),
+        params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) },
+        priority,
+        events: tx,
+        enqueued_at: Instant::now(),
+    });
+    rx
+}
+
+fn tokens_of(rx: &Receiver<Event>) -> Vec<i32> {
+    rx.try_iter()
+        .filter_map(|e| match e {
+            Event::Token { token, .. } if token >= 0 => Some(token),
+            Event::Error { message, .. } => panic!("request failed: {message}"),
+            _ => None,
+        })
+        .collect()
+}
+
+fn done_timing(rx: &Receiver<Event>) -> Option<umserve::coordinator::Timing> {
+    // try_iter was already drained by tokens_of callers that want both;
+    // this helper is used on undrained receivers.
+    let mut timing = None;
+    for e in rx.try_iter() {
+        if let Event::Done { timing: t, .. } = e {
+            timing = Some(t);
+        }
+    }
+    timing
+}
+
+/// Decode-slot eviction round-trips byte-identically: fill every slot
+/// with batch-class decoders, drop in an interactive request (which
+/// must evict one), and compare every stream against an unpreempted
+/// run of the identical workload.
+#[test]
+fn preempted_then_resumed_output_is_byte_identical() {
+    let capacity = 16; // qwen3-0.6b decode buckets end at 16
+    let mut streams_by_policy: Vec<Vec<(u64, Vec<i32>)>> = Vec::new();
+    let mut evictions_by_policy: Vec<u64> = Vec::new();
+
+    for preemption in [true, false] {
+        let mut s = Scheduler::new(cfg(preemption)).unwrap();
+        let mut rxs: Vec<(u64, Receiver<Event>)> = Vec::new();
+        // Fill the decode arena with batch-class work (short prompts,
+        // long generations so they are all still decoding).
+        for i in 0..capacity as u64 {
+            rxs.push((100 + i, submit(&mut s, 100 + i, 8, 48, Priority::Batch)));
+        }
+        while s.active_count() < capacity && s.queued_count() > 0 {
+            s.tick();
+        }
+        assert_eq!(s.active_count(), capacity, "flood must fill every slot");
+        // Interactive arrival under full slots.
+        rxs.push((900, submit(&mut s, 900, 8, 4, Priority::Interactive)));
+        s.run_until_idle();
+
+        let evictions = s.metrics.counter("evictions");
+        if preemption {
+            assert!(evictions >= 1, "expected at least one eviction under preemption");
+            assert_eq!(
+                evictions,
+                s.metrics.counter("evicted_resumes"),
+                "every evicted sequence must resume"
+            );
+        } else {
+            assert_eq!(evictions, 0, "no preemption -> no evictions");
+        }
+        evictions_by_policy.push(evictions);
+
+        let mut streams = Vec::new();
+        let mut evicted_reqs = 0u32;
+        for (id, rx) in &rxs {
+            let mut toks = Vec::new();
+            let mut done = false;
+            for e in rx.try_iter() {
+                match e {
+                    Event::Token { token, .. } if token >= 0 => toks.push(token),
+                    Event::Done { timing, .. } => {
+                        done = true;
+                        evicted_reqs += timing.evictions;
+                    }
+                    Event::Error { message, .. } => panic!("request {id} failed: {message}"),
+                    _ => {}
+                }
+            }
+            assert!(done, "request {id} did not complete (preemption={preemption})");
+            streams.push((*id, toks));
+        }
+        if preemption {
+            assert!(evicted_reqs >= 1, "Done timing must report the eviction");
+        }
+        streams_by_policy.push(streams);
+    }
+
+    assert_eq!(
+        streams_by_policy[0], streams_by_policy[1],
+        "preempted-then-resumed output diverged from the unpreempted run \
+         ({} evictions in the preempting run)",
+        evictions_by_policy[0]
+    );
+}
+
+/// A newly arrived interactive request never waits behind more than
+/// one in-flight prefill chunk of lower-class work: the in-progress
+/// batch prefill is paused at its next chunk boundary.
+#[test]
+fn interactive_waits_behind_at_most_one_chunk() {
+    let mut s = Scheduler::new(cfg(true)).unwrap();
+    // Long batch prompt: 256 tokens = 8 chunks of 32.
+    let _batch_rx = submit(&mut s, 10, 256, 4, Priority::Batch);
+    s.tick();
+    s.tick();
+    let chunks_before = s.engine.stats.prefill_chunks;
+    assert!(chunks_before >= 1, "batch prefill must have started");
+    assert_eq!(s.active_count(), 0, "batch job must still be mid-prefill");
+
+    let int_rx = submit(&mut s, 11, 16, 2, Priority::Interactive);
+    let mut ticks = 0;
+    let mut first_token_after = None;
+    while first_token_after.is_none() && ticks < 50 {
+        s.tick();
+        ticks += 1;
+        if int_rx
+            .try_iter()
+            .any(|e| matches!(e, Event::Token { token, .. } if token >= 0))
+        {
+            first_token_after = Some(s.engine.stats.prefill_chunks - chunks_before);
+        }
+    }
+    let batch_chunks_meanwhile =
+        first_token_after.expect("interactive request never produced a token");
+    // The interactive prompt itself is one segment through the one-shot
+    // prefill executable (not the chunk counter), so every chunk in the
+    // delta was batch work — at most the one already in flight.
+    assert!(
+        batch_chunks_meanwhile <= 1,
+        "interactive waited behind {batch_chunks_meanwhile} batch chunks"
+    );
+    assert!(
+        s.metrics.counter("preemptions") >= 1,
+        "pausing the started batch prefill must count as a preemption"
+    );
+    s.run_until_idle();
+}
+
+/// Aging prevents starvation: under a continuous interactive flood, a
+/// batch job's effective class rises until it is admitted — within
+/// 2 * aging_ticks ticks plus a bounded drain of already-queued work.
+#[test]
+fn aging_admits_batch_job_under_interactive_flood() {
+    let mut s = Scheduler::new(EngineConfig { aging_ticks: 4, ..cfg(true) }).unwrap();
+    let batch_rx = submit(&mut s, 50, 64, 2, Priority::Batch);
+    let mut flood_rxs = Vec::new();
+    let mut batch_done_at = None;
+    for tick in 0..120u64 {
+        // One interactive arrival every other tick: without aging the
+        // batch job would never reach the queue front.
+        if tick % 2 == 0 && tick < 80 {
+            flood_rxs.push(submit(&mut s, 1000 + tick, 64, 2, Priority::Interactive));
+        }
+        s.tick();
+        if batch_done_at.is_none()
+            && batch_rx
+                .try_iter()
+                .any(|e| matches!(e, Event::Token { token, .. } if token >= 0))
+        {
+            batch_done_at = Some(tick);
+            break;
+        }
+    }
+    let admitted_at = batch_done_at.expect("batch job starved despite aging");
+    // rank 2 -> 0 after 2 * aging_ticks = 8 ticks; allow generous
+    // headroom for draining the interactive jobs already in the queue
+    // (each is 64 tokens = 2 chunks at one chunk per tick).
+    assert!(
+        admitted_at <= 60,
+        "batch job admitted only at tick {admitted_at}"
+    );
+    s.run_until_idle();
+    let _ = done_timing(&batch_rx);
+}
+
+/// Without preemption, a started batch prefill finishes before a later
+/// interactive arrival is admitted (non-preemptive priority still
+/// reorders NOT-yet-started jobs).
+#[test]
+fn no_preemption_keeps_started_prefill_at_front() {
+    let mut s = Scheduler::new(cfg(false)).unwrap();
+    let batch_rx = submit(&mut s, 20, 128, 2, Priority::Batch);
+    s.tick(); // batch starts feeding
+    let _int_rx = submit(&mut s, 21, 16, 2, Priority::Interactive);
+    s.run_until_idle();
+    assert_eq!(
+        s.metrics.counter("preemptions"),
+        0,
+        "preemption disabled must never pause a started prefill"
+    );
+    assert!(!tokens_of(&batch_rx).is_empty());
+}
+
+/// FIFO mode (priority_sched off) ignores classes entirely.
+#[test]
+fn fifo_mode_ignores_priority_classes() {
+    let mut s = Scheduler::new(EngineConfig {
+        priority_sched: false,
+        preemption: false,
+        ..cfg(false)
+    })
+    .unwrap();
+    // Two batch jobs ahead of one interactive; FIFO admits in arrival
+    // order, so the interactive TTFT tick count trails both.
+    let rx_a = submit(&mut s, 30, 96, 2, Priority::Batch);
+    let rx_b = submit(&mut s, 31, 96, 2, Priority::Batch);
+    let rx_c = submit(&mut s, 32, 16, 2, Priority::Interactive);
+    let mut first: Vec<u64> = Vec::new();
+    for _ in 0..60 {
+        s.tick();
+        for (id, rx) in [(30u64, &rx_a), (31, &rx_b), (32, &rx_c)] {
+            if !first.contains(&id)
+                && rx
+                    .try_iter()
+                    .any(|e| matches!(e, Event::Token { token, .. } if token >= 0))
+            {
+                first.push(id);
+            }
+        }
+        if first.len() == 3 {
+            break;
+        }
+    }
+    assert_eq!(first, vec![30, 31, 32], "FIFO must admit in arrival order");
+    s.run_until_idle();
+}

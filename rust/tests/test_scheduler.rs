@@ -7,7 +7,7 @@
 use std::collections::HashMap;
 
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, Event, FinishReason, PromptInput};
+use umserve::coordinator::{EngineConfig, Event, FinishReason, Priority, PromptInput};
 use umserve::engine::sampler::SamplingParams;
 use umserve::multimodal::image::{generate_image, ImageSource};
 
@@ -31,6 +31,7 @@ fn run_one(
         id: s.metrics.counter("requests_total") + 1000,
         prompt,
         params,
+        priority: Default::default(),
         events: tx,
         enqueued_at: std::time::Instant::now(),
     });
@@ -113,6 +114,7 @@ fn continuous_batching_interleaves_requests() {
             id: 100 + i,
             prompt: PromptInput::Tokens(vec![1, 4 + i as i32 * 3, 9]),
             params: SamplingParams::greedy(6 + i as usize),
+            priority: Default::default(),
             events: tx,
             enqueued_at: std::time::Instant::now(),
         });
@@ -142,6 +144,7 @@ fn continuous_batching_interleaves_requests() {
         id: 999,
         prompt: PromptInput::Tokens(vec![1, 4, 9]),
         params: SamplingParams::greedy(6),
+        priority: Default::default(),
         events: tx,
         enqueued_at: std::time::Instant::now(),
     });
@@ -252,6 +255,40 @@ fn sampling_params_respected() {
 }
 
 #[test]
+fn queue_wait_histogram_is_labeled_by_class() {
+    let mut s = Scheduler::new(cfg("qwen3-0.6b")).unwrap();
+    for (i, p) in [Priority::Interactive, Priority::Normal, Priority::Batch]
+        .into_iter()
+        .enumerate()
+    {
+        let (tx, rx) = std::sync::mpsc::channel();
+        s.submit(umserve::coordinator::GenRequest {
+            id: 500 + i as u64,
+            prompt: PromptInput::Tokens(vec![1, 7 + i as i32, 11, 15 + i as i32]),
+            params: SamplingParams::greedy(3),
+            priority: p,
+            events: tx,
+            enqueued_at: std::time::Instant::now(),
+        });
+        s.run_until_idle();
+        assert!(
+            rx.try_iter().any(|e| matches!(e, Event::Done { .. })),
+            "request at class {p:?} did not complete"
+        );
+    }
+    for class in ["interactive", "normal", "batch"] {
+        let h = s
+            .metrics
+            .labeled_histogram("queue_wait_class", class)
+            .unwrap_or_else(|| panic!("missing queue_wait_class histogram for {class}"));
+        assert!(h.count() >= 1, "no {class} observation recorded");
+    }
+    let text = s.metrics.render_prometheus();
+    assert!(text.contains("umserve_queue_wait_class_ms_count{class=\"interactive\"}"));
+    assert!(text.contains("umserve_queue_wait_class_ms_p99{class=\"batch\"}"));
+}
+
+#[test]
 fn rejects_oversized_and_bad_requests() {
     let mut s = Scheduler::new(cfg("qwen3-0.6b")).unwrap();
     let (tx, rx) = std::sync::mpsc::channel();
@@ -259,6 +296,7 @@ fn rejects_oversized_and_bad_requests() {
         id: 1,
         prompt: PromptInput::Tokens(vec![4; 600]), // > largest prefill bucket
         params: SamplingParams::greedy(4),
+        priority: Default::default(),
         events: tx,
         enqueued_at: std::time::Instant::now(),
     });
@@ -273,6 +311,7 @@ fn rejects_oversized_and_bad_requests() {
             text: "x".into(),
         },
         params: SamplingParams::greedy(4),
+        priority: Default::default(),
         events: tx2,
         enqueued_at: std::time::Instant::now(),
     });

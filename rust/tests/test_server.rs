@@ -35,7 +35,13 @@ impl TestServer {
             let sd = shutdown.clone();
             let model = model.to_string();
             std::thread::spawn(move || {
-                let _ = umserve::server::serve(listener, h, model, sd);
+                let _ = umserve::server::serve(
+                    listener,
+                    h,
+                    model,
+                    umserve::coordinator::Priority::Normal,
+                    sd,
+                );
             });
         }
         TestServer { addr, shutdown, handle }
@@ -199,6 +205,37 @@ fn multimodal_chat_over_http_hits_cache() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(0);
     assert!(hits >= 1, "expected an mm KV hit after a repeated query:\n{metrics}");
+}
+
+#[test]
+fn priority_field_accepted_and_surfaced_in_metrics() {
+    let srv = TestServer::start("qwen3-0.6b");
+    let (s, b) = srv.post(
+        "/v1/completions",
+        r#"{"prompt":"fast please","max_tokens":4,"priority":"interactive"}"#,
+    );
+    assert_eq!(s, 200, "{b}");
+    let (s, b) = srv.post(
+        "/v1/chat/completions",
+        r#"{"max_tokens":4,"priority":"batch","messages":[{"role":"user","content":"slow ok"}]}"#,
+    );
+    assert_eq!(s, 200, "{b}");
+    // Typos fail loudly instead of silently running at the default class.
+    let (s, b) = srv.post(
+        "/v1/completions",
+        r#"{"prompt":"x","priority":"urgent"}"#,
+    );
+    assert_eq!(s, 400, "{b}");
+    // The per-class queue-wait histogram shows both classes.
+    let (_, metrics) = srv.get("/metrics");
+    assert!(
+        metrics.contains("umserve_queue_wait_class_ms_count{class=\"interactive\"}"),
+        "{metrics}"
+    );
+    assert!(
+        metrics.contains("umserve_queue_wait_class_ms_count{class=\"batch\"}"),
+        "{metrics}"
+    );
 }
 
 #[test]
