@@ -1,0 +1,211 @@
+//! Vision-staging ablation: staged per-image encodes (at most one unit
+//! per scheduler tick, interleaved with decode) vs legacy inline
+//! encoding (the whole multi-image batch runs inside admission),
+//! under an image flood arriving while a text sequence is decoding.
+//!
+//! Reported per policy: wall time, mm TTFT p50/p95, the scheduler's
+//! decode-stall p99, the vision-stall histogram max (the contiguous
+//! encoder time injected between decode steps — ONE observation per
+//! inline admission vs one per staged tick), and total encoder
+//! executions.  Inline encoding stalls the decoding sequence for the
+//! full K-image cost at every admission; staging bounds the stall to a
+//! single encode unit per tick.  Both policies must produce IDENTICAL
+//! greedy token streams (verified per request id), and the staged
+//! vision-stall max is asserted to stay within one encode unit —
+//! the acceptance bound for the staged pipeline.
+//!
+//! `BENCH_SMOKE=1` runs a reduced configuration (CI lane);
+//! `BENCH_JSON_OUT=dir` writes the table as a JSON artifact.
+
+use std::collections::HashMap;
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
+
+use umserve::bench_harness::{banner, fmt_f, maybe_write_json, smoke_scale, Table};
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{EngineConfig, Event, GenRequest, PromptInput};
+use umserve::engine::sampler::SamplingParams;
+use umserve::multimodal::image::{generate_image, ImageSource};
+
+fn main() -> anyhow::Result<()> {
+    banner("Vision-staging ablation — decode stall + TTFT under an image flood");
+
+    let n_mm = smoke_scale(4, 2); // concurrent multi-image requests
+    let imgs_per_req = smoke_scale(6, 3); // encoder units per request
+    let text_gen = smoke_scale(160, 80);
+    let mm_gen = 8;
+
+    let mut table = Table::new(
+        &format!(
+            "Vision staging (qwen3-vl-4b-sim, {n_mm} mm reqs x {imgs_per_req} images \
+             flooding a decoding text stream)"
+        ),
+        &[
+            "Policy",
+            "Wall (s)",
+            "MM TTFT p50 (ms)",
+            "MM TTFT p95 (ms)",
+            "Decode-stall p99 (ms)",
+            "Vision-stall max (ms)",
+            "Encodes",
+        ],
+    );
+
+    // policy -> per-request greedy streams (keyed by request id).
+    let mut outputs: HashMap<&'static str, HashMap<u64, Vec<i32>>> = HashMap::new();
+    let mut stall_max_by_policy: HashMap<&'static str, f64> = HashMap::new();
+
+    for (label, staged) in [("inline encode", false), ("staged 1/tick", true)] {
+        let mut s = Scheduler::new(EngineConfig {
+            model: "qwen3-vl-4b".into(),
+            artifacts_dir: "artifacts".into(),
+            text_cache_bytes: 0,
+            cache_finished: false,
+            warmup: false,
+            vision_stage: staged,
+            vision_encodes_per_step: 1,
+            ..Default::default()
+        })?;
+        // Pre-compile the vision tower (so no histogram observation
+        // carries XLA compile time), then warm the remaining
+        // executables with a throwaway request.
+        s.engine.rt.warmup(&["vision_r224"])?;
+        let warm = PromptInput::Multimodal {
+            images: vec![ImageSource::Bytes(generate_image(9000, 224).encode_raw())],
+            text: "warmup".into(),
+        };
+        let rx = submit(&mut s, 999, warm, 2);
+        s.run_until_idle();
+        drop(rx);
+        let enc_base = s.metrics.counter("vision_encodes");
+
+        let t0 = Instant::now();
+        // A text sequence decodes throughout...
+        let mut rxs: Vec<(u64, Receiver<Event>)> =
+            vec![(1, submit(&mut s, 1, PromptInput::Tokens(vec![1, 8, 12, 19]), text_gen))];
+        for _ in 0..3 {
+            s.tick();
+        }
+        // ...and the image flood lands: n_mm requests, each carrying
+        // imgs_per_req DISTINCT cold images.
+        for r in 0..n_mm as u64 {
+            let images = (0..imgs_per_req as u64)
+                .map(|i| {
+                    ImageSource::Bytes(generate_image(100 * (r + 1) + i, 224).encode_raw())
+                })
+                .collect();
+            let prompt = PromptInput::Multimodal {
+                images,
+                text: format!("summarize scene set {r}"),
+            };
+            rxs.push((10 + r, submit(&mut s, 10 + r, prompt, mm_gen)));
+        }
+        s.run_until_idle();
+        let wall = t0.elapsed().as_secs_f64();
+
+        let mut mm_ttfts: Vec<f64> = Vec::new();
+        let mut streams: HashMap<u64, Vec<i32>> = HashMap::new();
+        for (id, rx) in &rxs {
+            for ev in rx.try_iter() {
+                match ev {
+                    Event::Token { token, .. } if token >= 0 => {
+                        streams.entry(*id).or_default().push(token);
+                    }
+                    Event::Done { timing, .. } => {
+                        if *id >= 10 {
+                            mm_ttfts.push(timing.ttft_ms);
+                        }
+                    }
+                    Event::Error { message, .. } => panic!("request {id} failed: {message}"),
+                    _ => {}
+                }
+            }
+        }
+        mm_ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(mm_ttfts.len(), n_mm, "missing mm completions");
+
+        let decode_stall_p99 = s
+            .metrics
+            .histogram("decode_stall")
+            .map(|h| h.quantile_ms(0.99))
+            .unwrap_or(0.0);
+        let vision_stall_max = s
+            .metrics
+            .histogram("vision_stall")
+            .map(|h| h.max_ms())
+            .unwrap_or(0.0);
+        let encode_unit_max = s
+            .metrics
+            .histogram("vision_encode")
+            .map(|h| h.max_ms())
+            .unwrap_or(0.0);
+        let encodes = s.metrics.counter("vision_encodes") - enc_base;
+        assert_eq!(encodes as usize, n_mm * imgs_per_req, "every cold image encodes once");
+        if staged {
+            // Acceptance bound: a decode-active sequence never stalls
+            // for more than one encode unit per tick.
+            assert!(
+                vision_stall_max <= encode_unit_max * 1.001 + 0.01,
+                "staged vision stall {vision_stall_max:.1} ms exceeds one encode unit \
+                 ({encode_unit_max:.1} ms)"
+            );
+        }
+        stall_max_by_policy.insert(label, vision_stall_max);
+
+        table.row(vec![
+            label.into(),
+            fmt_f(wall, 2),
+            fmt_f(pct(&mm_ttfts, 0.50), 1),
+            fmt_f(pct(&mm_ttfts, 0.95), 1),
+            fmt_f(decode_stall_p99, 1),
+            fmt_f(vision_stall_max, 1),
+            encodes.to_string(),
+        ]);
+        eprintln!(
+            "  {label}: wall {wall:.2}s, vision-stall max {vision_stall_max:.1} ms, \
+             decode-stall p99 {decode_stall_p99:.1} ms, {encodes} encodes"
+        );
+        outputs.insert(label, streams);
+    }
+
+    // Staging must not change tokens (greedy), and must not stall
+    // decode for more than the inline path's single-admission cost.
+    let inline_ = &outputs["inline encode"];
+    let staged = &outputs["staged 1/tick"];
+    assert_eq!(inline_.len(), staged.len(), "request count mismatch");
+    for (id, toks) in inline_ {
+        assert_eq!(toks, &staged[id], "request {id}: staged output diverged from inline");
+    }
+    println!("output equality (staged vs inline, identical seeds): IDENTICAL");
+    assert!(
+        stall_max_by_policy["staged 1/tick"] <= stall_max_by_policy["inline encode"] + 0.5,
+        "staging must bound the per-tick vision stall below the inline multi-image cost"
+    );
+
+    table.print();
+    maybe_write_json("ablation_vision_staging", &[&table])?;
+    println!("expected: staged encoding cuts the vision-stall max by ~the images-per-");
+    println!("request factor and bounds decode-stall p99, with identical token streams");
+    println!("and one encode per distinct image either way.");
+    Ok(())
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() as f64 * q) as usize).min(sorted.len() - 1)]
+}
+
+fn submit(s: &mut Scheduler, id: u64, prompt: PromptInput, n_new: usize) -> Receiver<Event> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    s.submit(GenRequest {
+        id,
+        prompt,
+        params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) },
+        priority: Default::default(),
+        events: tx,
+        enqueued_at: Instant::now(),
+    });
+    rx
+}

@@ -7,7 +7,7 @@
 mod mm_common;
 
 use mm_common::run_request;
-use umserve::bench_harness::{banner, Table};
+use umserve::bench_harness::{banner, maybe_write_json, smoke, smoke_scale, Table};
 use umserve::cache::kv_one_bytes;
 use umserve::coordinator::scheduler::Scheduler;
 use umserve::coordinator::{EngineConfig, PromptInput};
@@ -16,8 +16,8 @@ use umserve::multimodal::video::{generate_video, sample_frames};
 
 fn main() -> anyhow::Result<()> {
     banner("Table 6 — video cache effectiveness vs frame count");
-    let n_new = 8;
-    let frame_counts = [4usize, 8, 16, 32];
+    let n_new = smoke_scale(8, 4);
+    let frame_counts: &[usize] = if smoke() { &[4, 8] } else { &[4, 8, 16, 32] };
 
     let mut s = Scheduler::new(EngineConfig {
         model: "qwen3-vl-4b".into(),
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     // Warm every embed bucket with a different clip (compile time must
     // not pollute the cold column; caches stay cold for the bench clip).
     let warm_clip = generate_video(7, 10.0, 8.0, 224);
-    for &n in &frame_counts {
+    for &n in frame_counts {
         let idx = sample_frames(&warm_clip, n);
         let warm = PromptInput::Multimodal {
             images: idx
@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         "Table 6 — video cache vs frames (qwen3-vl-4b-sim, 10s clip)",
         &["Frames", "Cold", "Cached", "Speedup", "Cache"],
     );
-    for &n in &frame_counts {
+    for &n in frame_counts {
         // A DISTINCT clip per row: frames shared between rows would
         // pre-hit the embedding cache and shrink the cold column.
         let video = generate_video(606 + n as u64, 10.0, 8.0, 224);
@@ -79,6 +79,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     table.print();
+    maybe_write_json("table6_video_cache", &[&table])?;
     println!("paper shape check: cold cost and speedup grow with frame count.");
     Ok(())
 }

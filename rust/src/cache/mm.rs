@@ -7,18 +7,35 @@
 //!   image collide); value: the encoder's output embeddings.  A hit
 //!   skips the vision encoder entirely (the 1.5–4 s term).
 //! * **KV-state cache** — key: SHA-256 over (image content hashes ++
-//!   prompt token ids); value: the prefilled kv_one.  A hit
+//!   prompt token ids); value: the prefilled kv_one *plus the
+//!   fingerprint of the encoder outputs it was built from*.  A hit
 //!   additionally skips prompt processing, so turn-2+ latency is decode
 //!   only.
 //!
 //! ```text
-//! Algorithm 3 (cache-aware generation)
+//! Algorithm 3 (cache-aware generation, staged form)
 //!  for each image I_i: hash_i = SHA256(Decode(I_i))
-//!    hit  -> emb_i, kv from cache; skip vision encoder
-//!    miss -> emb_i = VisionEncoder(I_i)
+//!    emb hit  -> emb_i from cache; skip vision encoder
+//!    emb miss -> VisionJob(hash_i): the scheduler encodes at most
+//!                N per tick, coalescing concurrent requests for the
+//!                same image onto one execution
+//!  kv hit with emb cache ON  -> Generate(kv)        (decode only)
+//!  kv hit with emb cache OFF -> validate: recompute emb, compare its
+//!                fingerprint with the entry's recorded one
+//!                (LMCache-style); mismatch demotes to a miss
+//!                (`mm_kv_invalidated`) and re-prefills
 //!  output = Generate(Concat(emb, T), kv)
-//!  Cache[hash] = (emb, kv)
+//!  Cache[hash] = (emb); Cache[kv_key] = (kv, fingerprint(emb))
 //! ```
+//!
+//! KV entries are budgeted by their *actual sequence length*
+//! (`len * kv_token_bytes`), not a fixed per-entry cost — a 64-frame
+//! video KV occupies ~64x a single image's share of the budget.  The
+//! same cache doubles as the checkpoint store for *evicted* multimodal
+//! sequences: the scheduler inserts `(mm_prompt_hash(images, tokens) →
+//! kv)` when a decoding mm sequence is preempted out of its slot, and
+//! the resume path looks the checkpoint up again (falling back to a
+//! chunked embed re-prefill when the LRU dropped it).
 
 use std::rc::Rc;
 
@@ -36,10 +53,23 @@ pub struct VisionEntry {
     pub resolution: usize,
 }
 
+/// One KV-state cache entry: the prefilled kv_one plus the fingerprint
+/// of the raw (unpooled) encoder outputs it was built from.  The
+/// fingerprint is the validation material for the emb-cache-off
+/// "KV only" path: a hit is only trusted after freshly computed
+/// embeddings hash to the same value.
+#[derive(Clone)]
+pub struct MmKvEntry {
+    pub kv: Rc<CachedKv>,
+    pub emb_fp: ContentHash,
+}
+
 pub struct MmCache {
     emb: LruCache<ContentHash, Rc<VisionEntry>>,
-    kv: LruCache<ContentHash, Rc<CachedKv>>,
-    kv_entry_bytes: usize,
+    kv: LruCache<ContentHash, MmKvEntry>,
+    /// Bytes per KV token position (see [`crate::cache::kv_token_bytes`]);
+    /// an entry of length L charges `L * kv_token_bytes`.
+    kv_token_bytes: usize,
     /// Ablation toggles (Table 4): both default on.
     pub enable_emb: bool,
     pub enable_kv: bool,
@@ -56,14 +86,34 @@ pub fn mm_prompt_hash(image_hashes: &[ContentHash], tokens: &[i32]) -> ContentHa
     ContentHash(h.finalize())
 }
 
+/// Fingerprint of a sequence of encoder outputs (raw f32 embeddings in
+/// request order, pooling-independent).  Recorded at KV insert, and
+/// recomputed from fresh encodes to validate "KV only" hits.
+pub fn emb_fingerprint(entries: &[&[f32]]) -> ContentHash {
+    let mut h = Sha256::new();
+    // Blockwise like Sha256::update_u32_le: one update() per 4 KB
+    // stack buffer, not per float (a 64-frame video is ~10^5 floats).
+    let mut buf = [0u8; 4096];
+    for embeds in entries {
+        for chunk in embeds.chunks(1024) {
+            for (i, v) in chunk.iter().enumerate() {
+                buf[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+            }
+            h.update(&buf[..chunk.len() * 4]);
+        }
+    }
+    ContentHash(h.finalize())
+}
+
 impl MmCache {
     /// Budgets are split: embeddings and KV state are separately bounded
-    /// (default 512 MB total, per the paper's §3.3).
-    pub fn new(emb_budget: usize, kv_budget: usize, kv_entry_bytes: usize) -> Self {
+    /// (default 512 MB total, per the paper's §3.3).  `kv_token_bytes`
+    /// is the per-position KV cost used to size entries by length.
+    pub fn new(emb_budget: usize, kv_budget: usize, kv_token_bytes: usize) -> Self {
         MmCache {
             emb: LruCache::new(emb_budget),
             kv: LruCache::new(kv_budget),
-            kv_entry_bytes,
+            kv_token_bytes,
             enable_emb: true,
             enable_kv: true,
         }
@@ -89,16 +139,47 @@ impl MmCache {
 
     // --------------------------------------------------------- KV state
 
-    pub fn get_kv(&mut self, key: &ContentHash) -> Option<Rc<CachedKv>> {
+    /// Budget charge for a KV entry of `len` positions.
+    pub fn kv_entry_cost(&self, len: usize) -> usize {
+        len.max(1) * self.kv_token_bytes
+    }
+
+    pub fn get_kv(&mut self, key: &ContentHash) -> Option<MmKvEntry> {
         if !self.enable_kv {
             return None;
         }
         self.kv.get(key).cloned()
     }
 
-    pub fn put_kv(&mut self, key: ContentHash, kv: Rc<CachedKv>) {
+    /// Insert a KV state, charged by its actual sequence length.  An
+    /// entry exceeding the whole budget is rejected by the LRU (the
+    /// caller's resume/re-prefill fallbacks cover the loss).
+    ///
+    /// NOTE: this budgets the *logical* KV footprint (`len` positions,
+    /// matching the paper's per-frame cache-size accounting).  On this
+    /// testbed the kv_one buffers are physically s_max-sized, so the
+    /// byte budget is an entry-count-by-length bound, not a device
+    /// allocation bound — trimming kv_one to `len` positions at insert
+    /// (ROADMAP follow-up) closes that gap.
+    pub fn put_kv(&mut self, key: ContentHash, kv: Rc<CachedKv>, emb_fp: ContentHash) {
         if self.enable_kv {
-            self.kv.insert(key, kv, self.kv_entry_bytes);
+            let cost = self.kv_entry_cost(kv.len);
+            self.kv.insert(key, MmKvEntry { kv, emb_fp }, cost);
+        }
+    }
+
+    /// Drop an invalidated KV entry (failed fingerprint validation).
+    pub fn remove_kv(&mut self, key: &ContentHash) {
+        self.kv.remove(key);
+    }
+
+    /// Fault-injection hook for validation tests: flip every stored
+    /// fingerprint so the next "KV only" hit fails its comparison.
+    pub fn corrupt_kv_fingerprints(&mut self) {
+        for e in self.kv.values_mut() {
+            for b in e.emb_fp.0.iter_mut() {
+                *b ^= 0xFF;
+            }
         }
     }
 
@@ -182,5 +263,84 @@ mod tests {
         let s = c.stats();
         assert!(s.emb_bytes <= 1000);
         assert!(s.emb_evictions >= 7);
+    }
+
+    #[test]
+    fn emb_fingerprint_discriminates_and_is_stable() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.0, 3.5];
+        let fa = emb_fingerprint(&[a.as_slice()]);
+        assert_eq!(fa, emb_fingerprint(&[a.as_slice()]));
+        assert_ne!(fa, emb_fingerprint(&[b.as_slice()]));
+        // Order matters: [a, b] != [b, a].
+        assert_ne!(
+            emb_fingerprint(&[a.as_slice(), b.as_slice()]),
+            emb_fingerprint(&[b.as_slice(), a.as_slice()])
+        );
+    }
+
+    // KV-entry accounting tests: the entries hold real PjRtBuffers, so
+    // a CPU client (kept alive across the assertions) backs them.
+    fn dummy_kv(client: &xla::PjRtClient, len: usize) -> Rc<CachedKv> {
+        let buf = client
+            .buffer_from_host_buffer::<f32>(&[0.0f32], &[1], None)
+            .unwrap();
+        CachedKv::new(buf, len)
+    }
+
+    #[test]
+    fn kv_entries_are_sized_by_sequence_length() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        // 8 bytes per token position; budget fits 100 positions total.
+        let mut c = MmCache::new(1 << 20, 800, 8);
+        assert_eq!(c.kv_entry_cost(64), 512);
+        assert_eq!(c.kv_entry_cost(1), 8);
+
+        let fp = ContentHash::of(b"fp");
+        // A "64-frame video" KV (64 positions = 512 B) and two
+        // single-image KVs (16 positions = 128 B each) coexist: 768 B.
+        c.put_kv(ContentHash::of(b"video"), dummy_kv(&client, 64), fp);
+        c.put_kv(ContentHash::of(b"img1"), dummy_kv(&client, 16), fp);
+        c.put_kv(ContentHash::of(b"img2"), dummy_kv(&client, 16), fp);
+        let s = c.stats();
+        assert_eq!(s.kv_bytes, 768, "length-proportional accounting");
+        assert_eq!(s.kv_evictions, 0);
+
+        // One more long entry pushes past the budget: the LRU evicts
+        // until within bounds — a fixed-cost model would have admitted
+        // all of these at one unit each.
+        c.put_kv(ContentHash::of(b"video2"), dummy_kv(&client, 64), fp);
+        let s = c.stats();
+        assert!(s.kv_bytes <= 800, "budget must hold: {} B used", s.kv_bytes);
+        assert!(s.kv_evictions >= 1);
+        // The oldest (the first video) was the LRU victim.
+        assert!(c.get_kv(&ContentHash::of(b"video")).is_none());
+        assert!(c.get_kv(&ContentHash::of(b"video2")).is_some());
+    }
+
+    #[test]
+    fn oversized_kv_entry_rejected_not_cached() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let mut c = MmCache::new(1 << 20, 100, 8);
+        let fp = ContentHash::of(b"fp");
+        let k = ContentHash::of(b"huge");
+        // 64 positions * 8 B = 512 B > 100 B budget: rejected outright.
+        c.put_kv(k, dummy_kv(&client, 64), fp);
+        assert!(c.get_kv(&k).is_none());
+        assert_eq!(c.stats().kv_bytes, 0);
+    }
+
+    #[test]
+    fn kv_fingerprint_round_trips_and_corrupts() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let mut c = MmCache::new(1 << 20, 1 << 20, 8);
+        let fp = ContentHash::of(b"recorded");
+        let k = ContentHash::of(b"key");
+        c.put_kv(k, dummy_kv(&client, 4), fp);
+        assert_eq!(c.get_kv(&k).unwrap().emb_fp, fp);
+        c.corrupt_kv_fingerprints();
+        assert_ne!(c.get_kv(&k).unwrap().emb_fp, fp);
+        c.remove_kv(&k);
+        assert!(c.get_kv(&k).is_none());
     }
 }

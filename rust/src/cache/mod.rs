@@ -32,7 +32,15 @@ impl CachedKv {
     }
 }
 
-/// Bytes held by one kv_one buffer for budget accounting.
+/// Bytes one token position occupies across a kv_one's planes — the
+/// unit for length-proportional cache accounting: a 64-frame video's
+/// KV entry must charge ~64x a single image's, even though both are
+/// extracted from s_max-sized device buffers.
+pub fn kv_token_bytes(info: &crate::runtime::ModelInfo) -> usize {
+    (info.n_layers + 1) * 2 * info.n_kv_heads * info.d_head * 4
+}
+
+/// Bytes held by one full kv_one buffer for budget accounting.
 pub fn kv_one_bytes(info: &crate::runtime::ModelInfo) -> usize {
-    (info.n_layers + 1) * 2 * info.n_kv_heads * info.s_max * info.d_head * 4
+    kv_token_bytes(info) * info.s_max
 }

@@ -198,6 +198,18 @@ pub struct EngineConfig {
     /// `priority_sched`; decode eviction additionally requires a
     /// non-zero `text_cache_bytes` to checkpoint into.
     pub preemption: bool,
+    /// Staged vision encoding: each encoder miss becomes a per-image
+    /// `VisionJob` (keyed by content hash, so concurrent requests for
+    /// the same image coalesce onto one encode) that the scheduler
+    /// advances at most `vision_encodes_per_step` per tick alongside
+    /// prefill chunks — instead of running every encode inline inside
+    /// admission, where a multi-image request stalls all decoding
+    /// sequences for the full 1.5–4 s encoder cost.  Identical output
+    /// either way; off restores the inline encode.
+    pub vision_stage: bool,
+    /// Fairness cap for staged vision: encoder units advanced per
+    /// scheduler tick (each unit is one image).
+    pub vision_encodes_per_step: usize,
     /// Class assigned to requests that don't specify one.
     pub default_priority: Priority,
     /// Starvation prevention: a staged job's effective class improves
@@ -222,6 +234,8 @@ impl Default for EngineConfig {
             prefill_chunks_per_step: 1,
             priority_sched: true,
             preemption: true,
+            vision_stage: true,
+            vision_encodes_per_step: 1,
             default_priority: Priority::Normal,
             aging_ticks: 64,
         }

@@ -33,6 +33,19 @@
 //! (Algorithm 2) and the multimodal embedding path (Algorithm 3) route
 //! their uncached suffix through the same chunked feed.
 //!
+//! The vision encoder is staged the same way
+//! (`EngineConfig::vision_stage`): admission only decodes pixels,
+//! content-hashes each image, and resolves the caches; every encoder
+//! miss becomes a per-image [`VisionJob`] — keyed by content hash so
+//! concurrent requests for the same image coalesce onto one execution
+//! — and the tick loop advances at most
+//! `EngineConfig::vision_encodes_per_step` encodes per decode step.
+//! A decode-active sequence therefore never stalls for more than one
+//! encode unit per tick (`vision_stall` histogram), where the inline
+//! path stalls for a whole multi-image batch.  Once a request's images
+//! are all resolved, its composed `[vision ++ text]` embeddings enter
+//! the staged `Feed::Embeds` path unchanged.
+//!
 //! Admission is priority-aware (`EngineConfig::priority_sched`): the
 //! staging queue is ordered by (class, arrival) over the
 //! interactive / normal / batch classes, with per-`aging_ticks` rank
@@ -58,14 +71,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::cache::mm::{mm_prompt_hash, MmCache, VisionEntry};
+use crate::cache::mm::{emb_fingerprint, mm_prompt_hash, MmCache, VisionEntry};
 use crate::cache::text_prefix::TextPrefixCache;
-use crate::cache::{kv_one_bytes, CachedKv};
+use crate::cache::{kv_one_bytes, kv_token_bytes, CachedKv};
 use crate::engine::sampler::{sample, Rng, SamplingParams};
 use crate::engine::tokenizer::{StreamDecoder, Tokenizer, EOS, IMG};
 use crate::engine::TextEngine;
 use crate::multimodal::image::DecodedImage;
-use crate::multimodal::vision::{patchify, snap_resolution};
+use crate::multimodal::vision::{patchify, snap_resolution, temporal_pool};
 use crate::runtime::{ArtifactStore, ModelRuntime};
 use crate::substrate::hash::ContentHash;
 use crate::substrate::metrics::MetricsRegistry;
@@ -84,8 +97,11 @@ pub enum Command {
 pub struct StatsSnapshot {
     pub metrics: MetricsRegistry,
     pub active: usize,
-    /// Staged prefills waiting in the admission queue.
+    /// Staged prefills waiting in the admission queue (including
+    /// multimodal requests still waiting on staged vision encodes).
     pub queued: usize,
+    /// Per-image vision encodes waiting in the staging queue.
+    pub vision_queued: usize,
     /// Checkpointed (evicted) sequences waiting to resume.
     pub evicted: usize,
     pub bucket: usize,
@@ -112,13 +128,77 @@ struct ActiveReq {
     emitted: usize,
     /// Tokens fed into the KV state since admission.
     fed: usize,
-    /// Image content hashes (multimodal requests only) — routes the
-    /// finished-sequence KV into the mm cache instead of the text cache.
-    mm_hashes: Option<Vec<ContentHash>>,
+    /// Multimodal identity (None for text sequences) — routes the
+    /// finished/evicted KV into the mm cache instead of the text cache,
+    /// and retains the vision rows an eviction needs to rebuild from.
+    mm: Option<MmSeq>,
     /// Sampled token to feed at the next step.
     next_token: i32,
     timing: Timing,
     enqueued_at: Instant,
+}
+
+/// Multimodal identity of a sequence: the image content hashes (mm
+/// cache key material), the fingerprint of the raw encoder outputs the
+/// KV was built from (LMCache-style validation material recorded on
+/// every KV insert), and — for sequences that went through embed
+/// prefill — the pooled vision rows actually fed, retained so an
+/// evicted mm sequence can ALWAYS rebuild its KV even after the LRU
+/// dropped both its checkpoint and the embedding entries.
+#[derive(Clone)]
+struct MmSeq {
+    hashes: Vec<ContentHash>,
+    emb_fp: ContentHash,
+    /// Pooled composed [n_vis_rows, d_model] vision embeddings (None
+    /// for full-KV-hit admissions, which never composed embeds — such
+    /// sequences are not evictable).
+    vis_rows: Option<Rc<Vec<f32>>>,
+    n_vis_rows: usize,
+}
+
+/// One staged vision-encoder unit: a single image awaiting its encode,
+/// keyed by content hash so concurrent requests for the same image
+/// coalesce onto one execution.  The scheduler advances at most
+/// `vision_encodes_per_step` of these per tick.
+struct VisionJob {
+    hash: ContentHash,
+    image: DecodedImage,
+    /// Best class among the waiting requests (bumped on coalesce).
+    priority: Priority,
+    /// Tick at which the job entered the queue (aging reference).
+    staged_tick: u64,
+}
+
+/// A multimodal request parked while staged VisionJobs resolve its
+/// encoder misses (or while a "KV only" hit awaits validation against
+/// the fresh encoder outputs).
+struct MmPending {
+    id: u64,
+    events: Sender<Event>,
+    params: SamplingParams,
+    priority: Priority,
+    /// Token-id view: `[IMG; n_images] ++ BOS ++ text`.
+    text_tokens: Vec<i32>,
+    hashes: Vec<ContentHash>,
+    /// `mm_prompt_hash(hashes, text_tokens)` — the KV-cache key.
+    kv_key: ContentHash,
+    /// A full-prompt KV hit that still needs LMCache-style validation
+    /// (embedding cache disabled): trusted only once the fresh encoder
+    /// outputs fingerprint-match the entry's recorded value.
+    kv_hit: Option<crate::cache::mm::MmKvEntry>,
+    /// Per-image embeddings resolved so far (cache hits at admission
+    /// plus completed VisionJobs).
+    resolved: HashMap<ContentHash, Rc<VisionEntry>>,
+    timing: Timing,
+    enqueued_at: Instant,
+    /// Admission time (staged_ms reference — includes the vision wait).
+    staged_at: Instant,
+}
+
+impl MmPending {
+    fn images_resolved(&self) -> bool {
+        self.hashes.iter().all(|h| self.resolved.contains_key(h))
+    }
 }
 
 /// What a staged prefill still has to feed into its KV state.
@@ -174,7 +254,7 @@ struct PrefillJob {
     total: usize,
     /// Suffix length fed due to a partial prefix hit (metrics).
     catch_up_tokens: usize,
-    mm_hashes: Option<Vec<ContentHash>>,
+    mm: Option<MmSeq>,
     mm_key: Option<ContentHash>,
     prefill_ms: f64,
     /// When the job entered the staging area (for Timing::staged_ms).
@@ -242,6 +322,11 @@ pub struct Scheduler {
     /// (effective class, arrival) — strict FIFO when `priority_sched`
     /// is off.  The front job gets the whole chunk budget.
     pending: VecDeque<PrefillJob>,
+    /// Staged per-image vision encodes, ordered like `pending`;
+    /// advanced `vision_encodes_per_step` per tick.
+    vis_pending: VecDeque<VisionJob>,
+    /// Multimodal requests whose images are still being encoded.
+    mm_waiting: Vec<MmPending>,
     /// Sequences evicted from decode slots, waiting to resume.
     evicted: Vec<EvictedSeq>,
     /// Scheduler ticks elapsed (the aging clock).
@@ -287,7 +372,11 @@ impl Scheduler {
         } else {
             0
         };
-        let mm_cache = MmCache::new(cfg.mm_emb_cache_bytes.max(1), cfg.mm_kv_cache_bytes.max(1), kv_bytes);
+        let mm_cache = MmCache::new(
+            cfg.mm_emb_cache_bytes.max(1),
+            cfg.mm_kv_cache_bytes.max(1),
+            kv_token_bytes(&rt.info),
+        );
         let mut s = Scheduler {
             engine: TextEngine::new(rt)?,
             tokenizer,
@@ -296,6 +385,8 @@ impl Scheduler {
             cfg: cfg.clone(),
             active: HashMap::new(),
             pending: VecDeque::new(),
+            vis_pending: VecDeque::new(),
+            mm_waiting: Vec::new(),
             evicted: Vec::new(),
             tick_count: 0,
             chunk_tokens,
@@ -341,7 +432,12 @@ impl Scheduler {
     pub fn run(&mut self, rx: Receiver<Command>) {
         loop {
             // Blocking wait only when idle; otherwise drain non-blocking.
-            if self.active.is_empty() && self.pending.is_empty() && self.evicted.is_empty() {
+            if self.active.is_empty()
+                && self.pending.is_empty()
+                && self.evicted.is_empty()
+                && self.mm_waiting.is_empty()
+                && self.vis_pending.is_empty()
+            {
                 match rx.recv_timeout(Duration::from_millis(200)) {
                     Ok(Command::Gen(r)) => self.admit(r),
                     Ok(Command::Stats(tx)) => {
@@ -382,7 +478,12 @@ impl Scheduler {
     /// Drive the loop until every staged, active and evicted request
     /// finishes (bench mode).
     pub fn run_until_idle(&mut self) {
-        while !self.active.is_empty() || !self.pending.is_empty() || !self.evicted.is_empty() {
+        while !self.active.is_empty()
+            || !self.pending.is_empty()
+            || !self.evicted.is_empty()
+            || !self.mm_waiting.is_empty()
+            || !self.vis_pending.is_empty()
+        {
             self.tick();
         }
     }
@@ -397,14 +498,28 @@ impl Scheduler {
         self.active.len()
     }
 
-    /// Staged prefill jobs not yet admitted to the decode batch.
+    /// Staged jobs not yet admitted to the decode batch: prefills in
+    /// the admission queue plus multimodal requests still waiting on
+    /// staged vision encodes.
     pub fn queued_count(&self) -> usize {
-        self.pending.len()
+        self.pending.len() + self.mm_waiting.len()
+    }
+
+    /// Per-image vision encodes waiting in the staging queue.
+    pub fn vision_queued_count(&self) -> usize {
+        self.vis_pending.len()
     }
 
     /// Sequences currently checkpointed out of their decode slot.
     pub fn evicted_count(&self) -> usize {
         self.evicted.len()
+    }
+
+    /// Direct mm-cache access (benches and validation fault-injection
+    /// tests — e.g. corrupting recorded fingerprints to exercise the
+    /// `mm_kv_invalidated` demotion path).
+    pub fn mm_cache_mut(&mut self) -> &mut MmCache {
+        &mut self.mm_cache
     }
 
     /// Decode slots left before the largest batch bucket is exhausted.
@@ -413,9 +528,11 @@ impl Scheduler {
     }
 
     /// Requests the staging area will admit on completion: one per job
-    /// plus its coalesced followers (the admission capacity unit).
+    /// plus its coalesced followers (the admission capacity unit), plus
+    /// the multimodal requests still waiting on vision encodes.
     fn staged_requests(&self) -> usize {
-        self.pending.iter().map(|j| 1 + j.followers.len()).sum()
+        self.pending.iter().map(|j| 1 + j.followers.len()).sum::<usize>()
+            + self.mm_waiting.len()
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
@@ -424,6 +541,7 @@ impl Scheduler {
             metrics: self.metrics.clone(),
             active: self.active.len(),
             queued: self.staged_requests(),
+            vision_queued: self.vis_pending.len(),
             evicted: self.evicted.len(),
             bucket: self.engine.bucket(),
             text_cache: self.text_cache.stats(),
@@ -439,11 +557,13 @@ impl Scheduler {
     }
 
     /// One iteration of the interleaved pipeline: resume checkpointed
-    /// sequences if slots and priorities allow, advance staged prefills
-    /// by the chunk budget, then one batched decode step.
+    /// sequences if slots and priorities allow, advance staged vision
+    /// encodes and prefill chunks by their budgets, then one batched
+    /// decode step.
     pub fn tick(&mut self) {
         self.tick_count += 1;
         self.try_resume_evicted();
+        self.advance_visions();
         self.advance_prefills();
         self.step_once();
     }
@@ -461,7 +581,8 @@ impl Scheduler {
 
     /// Resolve a request's prompt against the caches and either admit it
     /// directly (full KV hit), stage a prefill job (chunking enabled),
-    /// or run the legacy inline prefill to completion.
+    /// park it behind staged vision encodes (multimodal misses), or run
+    /// the legacy inline prefill to completion.
     fn try_admit(&mut self, req: GenRequest) -> Result<()> {
         let t_admit = Instant::now();
         let mut timing = Timing {
@@ -470,32 +591,45 @@ impl Scheduler {
         };
         self.metrics.inc("requests_total", 1);
 
-        // ---- Resolve the prompt into a ready KV or a staged job ----
-        let resolved = match &req.prompt {
+        let GenRequest { id, prompt, params, priority, events, enqueued_at } = req;
+        let resolved = match &prompt {
             PromptInput::Text(t) => {
                 let toks = self.tokenizer.encode_prompt(t);
                 self.text_resolve(&toks, &mut timing)?
             }
             PromptInput::Tokens(toks) => self.text_resolve(toks, &mut timing)?,
             PromptInput::Multimodal { images, text } => {
-                self.mm_resolve(images, text, &mut timing)?
+                // mm admission resolves caches and may park the request
+                // behind staged VisionJobs; it dispatches downstream
+                // itself once (or if) the images are resolved.
+                return self.mm_admit(
+                    id, events, params, priority, enqueued_at, t_admit, images, text, timing,
+                );
             }
         };
+        self.dispatch_resolved(id, events, params, priority, enqueued_at, t_admit, resolved, timing)
+    }
 
+    /// Route a resolved prompt into the decode batch (Ready) or the
+    /// staged-prefill queue (Staged).  Shared by text admission and the
+    /// multimodal path once its vision encodes complete.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_resolved(
+        &mut self,
+        id: u64,
+        events: Sender<Event>,
+        params: SamplingParams,
+        priority: Priority,
+        enqueued_at: Instant,
+        staged_at: Instant,
+        resolved: Resolved,
+        timing: Timing,
+    ) -> Result<()> {
         match resolved {
-            Resolved::Ready { tokens, kv, logits, mm_hashes } => {
+            Resolved::Ready { tokens, kv, logits, mm } => {
                 if self.free_slots() > 0 || self.chunk_tokens == 0 {
                     return self.admit_ready(
-                        req.id,
-                        req.events,
-                        req.params,
-                        req.priority,
-                        req.enqueued_at,
-                        tokens,
-                        kv,
-                        logits,
-                        mm_hashes,
-                        timing,
+                        id, events, params, priority, enqueued_at, tokens, kv, logits, mm, timing,
                     );
                 }
                 // At decode capacity: park the full hit in the admission
@@ -504,10 +638,10 @@ impl Scheduler {
                 // when a slot frees.
                 let total = kv.len;
                 let job = PrefillJob {
-                    id: req.id,
-                    events: req.events,
-                    params: req.params,
-                    priority: req.priority,
+                    id,
+                    events,
+                    params,
+                    priority,
                     staged_tick: self.tick_count,
                     tokens,
                     feed: Feed::Tokens(Vec::new()),
@@ -517,20 +651,20 @@ impl Scheduler {
                     built: total,
                     total,
                     catch_up_tokens: 0,
-                    mm_hashes,
+                    mm,
                     mm_key: None,
                     prefill_ms: 0.0,
-                    staged_at: t_admit,
+                    staged_at,
                     followers: Vec::new(),
                     timing,
-                    enqueued_at: req.enqueued_at,
+                    enqueued_at,
                 };
                 self.pending.push_back(job);
                 self.metrics
                     .set_gauge("prefill_queue_depth", self.staged_requests() as f64);
                 Ok(())
             }
-            Resolved::Staged { tokens, feed, source, built, total, catch_up, mm_hashes, mm_key } => {
+            Resolved::Staged { tokens, feed, source, built, total, catch_up, mm, mm_key } => {
                 // Coalesce: an identical prompt already staged means this
                 // request can join the batch from that job's KV when it
                 // completes — without this, a burst of identical prompts
@@ -552,26 +686,26 @@ impl Scheduler {
                         // A higher-class duplicate promotes the shared
                         // job — the interactive copy must not wait at
                         // batch rank.
-                        if req.priority.rank() < primary.priority.rank() {
-                            primary.priority = req.priority;
+                        if priority.rank() < primary.priority.rank() {
+                            primary.priority = priority;
                         }
                         primary.followers.push(Follower {
-                            id: req.id,
-                            events: req.events,
-                            params: req.params,
-                            priority: req.priority,
+                            id,
+                            events,
+                            params,
+                            priority,
                             timing,
-                            enqueued_at: req.enqueued_at,
+                            enqueued_at,
                         });
                         self.metrics.inc("prefill_coalesced", 1);
                         return Ok(());
                     }
                 }
                 let mut job = PrefillJob {
-                    id: req.id,
-                    events: req.events,
-                    params: req.params,
-                    priority: req.priority,
+                    id,
+                    events,
+                    params,
+                    priority,
                     staged_tick: self.tick_count,
                     tokens,
                     feed,
@@ -581,13 +715,13 @@ impl Scheduler {
                     built,
                     total,
                     catch_up_tokens: catch_up,
-                    mm_hashes,
+                    mm,
                     mm_key,
                     prefill_ms: 0.0,
-                    staged_at: t_admit,
+                    staged_at,
                     followers: Vec::new(),
                     timing,
-                    enqueued_at: req.enqueued_at,
+                    enqueued_at,
                 };
                 if self.chunk_tokens == 0 {
                     // Inline admission: drain the job synchronously (one
@@ -618,7 +752,7 @@ impl Scheduler {
         tokens: Vec<i32>,
         kv: Rc<CachedKv>,
         logits: Vec<f32>,
-        mm_hashes: Option<Vec<ContentHash>>,
+        mm: Option<MmSeq>,
         timing: Timing,
     ) -> Result<()> {
         let prompt_len = kv.len;
@@ -636,7 +770,7 @@ impl Scheduler {
             emitted: 0,
             fed: 0,
             next_token: first,
-            mm_hashes,
+            mm,
             timing,
             enqueued_at,
         };
@@ -780,30 +914,40 @@ impl Scheduler {
         }
     }
 
-    /// Evict the most recently enqueued batch-class decoding sequence
+    /// Evict the batch-class decoding sequence with the CHEAPEST resume
     /// whose class is strictly lower-priority than `class`.  Its KV
-    /// prefix is checkpointed into the text prefix cache so the resume
-    /// rides the chunked catch-up path instead of re-prefilling from
-    /// scratch.  Returns false when no victim qualifies (or there is no
-    /// cache to checkpoint into).
+    /// prefix is checkpointed — text sequences into the text prefix
+    /// cache (resume rides the chunked catch-up path), multimodal
+    /// sequences into the mm KV cache keyed by
+    /// `mm_prompt_hash(images, all_tokens)` (resume is an mm KV full
+    /// hit, or a chunked embed re-prefill from the retained vision rows
+    /// if the LRU dropped the checkpoint).  Returns false when no
+    /// victim qualifies.
     fn evict_one_below(&mut self, class: Priority) -> bool {
-        if self.cfg.text_cache_bytes == 0 {
-            return false;
-        }
-        // Victims: batch-class text sequences only.  Multimodal KV
-        // (visual rows) can't be rebuilt from the token view, so mm
-        // sequences are never evicted.
+        // Eligibility: a victim's resume must be guaranteed.  Text
+        // sequences can always re-prefill from their token view (the
+        // checkpoint needs a text cache to land in); mm sequences
+        // qualify when they retain their composed vision rows AND the
+        // artifacts carry the chunked-embeds entries the rebuild needs
+        // (a resumed sequence may have outgrown the one-shot embed
+        // buckets, so on pre-chunking artifacts mm sequences stay
+        // un-evictable) — full-KV-hit admissions never composed embeds
+        // and are left alone.  Cost: the tokens to rebuild if the
+        // checkpoint is dropped, i.e. the full KV length (visual rows
+        // included); ties prefer the most recently enqueued (least
+        // sunk decode).
+        let mm_rebuildable = self.engine.rt.has_chunk_prefill_embeds();
         let victim = self
             .active
             .iter()
-            .filter(|(_, a)| {
-                a.priority == Priority::Batch
-                    && a.priority.rank() > class.rank()
-                    && a.mm_hashes.is_none()
+            .filter(|(_, a)| a.priority == Priority::Batch && a.priority.rank() > class.rank())
+            .filter(|(_, a)| match &a.mm {
+                None => self.cfg.text_cache_bytes > 0,
+                Some(m) => m.vis_rows.is_some() && mm_rebuildable,
             })
-            .map(|(&id, a)| (a.enqueued_at, id))
-            .max()
-            .map(|(_, id)| id);
+            .map(|(&id, a)| (a.prompt_len + a.fed, std::cmp::Reverse(a.enqueued_at), id))
+            .min()
+            .map(|(_, _, id)| id);
         let Some(id) = victim else { return false };
         let Some(mut a) = self.active.remove(&id) else { return false };
         match self.engine.remove(id, true) {
@@ -811,8 +955,16 @@ impl Scheduler {
                 // Invariant (same as finish()): the slot KV encodes
                 // exactly prompt ++ fed tokens == all_tokens.
                 let kv_len = a.prompt_len + a.fed;
-                self.text_cache
-                    .insert(&a.all_tokens, CachedKv::new_rc(kv_one, kv_len));
+                match &a.mm {
+                    Some(m) => {
+                        let key = mm_prompt_hash(&m.hashes, &a.all_tokens);
+                        self.mm_cache
+                            .put_kv(key, CachedKv::new(kv_one, kv_len), m.emb_fp);
+                    }
+                    None => self
+                        .text_cache
+                        .insert(&a.all_tokens, CachedKv::new_rc(kv_one, kv_len)),
+                }
                 a.timing.evictions += 1;
                 self.metrics.inc("evictions", 1);
                 self.evicted
@@ -896,13 +1048,18 @@ impl Scheduler {
     }
 
     /// Re-admit an evicted sequence.  The checkpoint normally survives
-    /// in the text prefix cache as a full hit; if the LRU dropped (part
-    /// of) it, the longest surviving prefix is extended through the
-    /// chunked catch-up path, and only a complete miss re-prefills the
-    /// prompt from scratch.  Sampler/decoder state was preserved at
-    /// eviction, so the token stream continues byte-identically.
+    /// in its cache (text prefix cache / mm KV cache) as a full hit; if
+    /// the LRU dropped (part of) it, text sequences extend the longest
+    /// surviving prefix through the chunked catch-up path (a complete
+    /// miss re-prefills from the token view) and mm sequences re-prefill
+    /// `[vision ++ all_tokens]` from their retained pooled vision rows.
+    /// Sampler/decoder state was preserved at eviction, so the token
+    /// stream continues byte-identically.
     fn resume_evicted(&mut self, e: EvictedSeq) -> Result<()> {
         let EvictedSeq { id, req, .. } = e;
+        if req.mm.is_some() {
+            return self.resume_evicted_mm(id, req);
+        }
         let tokens = req.all_tokens.clone();
         let chunked = self.chunk_tokens > 0 && self.engine.rt.has_chunk_prefill();
         let kv: Rc<CachedKv> = match self.text_cache.lookup(&tokens) {
@@ -972,6 +1129,94 @@ impl Scheduler {
         self.metrics
             .set_gauge("active_requests", self.active.len() as f64);
         Ok(())
+    }
+
+    /// Multimodal resume: the eviction checkpoint is looked up in the
+    /// mm KV cache (`mm_prompt_hash(images, all_tokens)`); if the LRU
+    /// dropped it (or the mm KV cache is disabled), the KV is rebuilt
+    /// by re-prefilling `[vision ++ all_tokens]` through the chunked
+    /// embed path from the pooled vision rows the sequence retained —
+    /// no vision re-encode, no pixel access.
+    fn resume_evicted_mm(&mut self, id: u64, req: ActiveReq) -> Result<()> {
+        let m = req.mm.clone().expect("mm resume requires mm identity");
+        let key = mm_prompt_hash(&m.hashes, &req.all_tokens);
+        let kv: Rc<CachedKv> = match self.mm_cache.get_kv(&key) {
+            Some(hit) => hit.kv,
+            None => {
+                let rows = m
+                    .vis_rows
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("evicted mm sequence lost its vision rows"))?;
+                let d = self.engine.rt.info.d_model;
+                let total = m.n_vis_rows + req.all_tokens.len();
+                let mut embeds = Vec::with_capacity(total * d);
+                embeds.extend_from_slice(rows);
+                // Embed-lookup in bucket-sized pieces: the full token
+                // view (prompt ++ generated) can exceed one lookup
+                // bucket late in a generation.
+                let max_lookup = *self
+                    .engine
+                    .rt
+                    .info
+                    .embed_prefill_buckets
+                    .last()
+                    .ok_or_else(|| anyhow!("no embed buckets for mm rebuild"))?;
+                for piece in req.all_tokens.chunks(max_lookup) {
+                    embeds.extend_from_slice(&self.engine.rt.embed_lookup(piece)?);
+                }
+                self.metrics.inc("mm_evict_rebuilds", 1);
+                let kv_one = self.prefill_embeds_all(&embeds, total)?;
+                CachedKv::new(kv_one, total)
+            }
+        };
+        self.engine.admit(id, &kv.kv_one, kv.len)?;
+        self.metrics.inc("evicted_resumes", 1);
+        self.active.insert(id, req);
+        self.metrics
+            .set_gauge("active_requests", self.active.len() as f64);
+        Ok(())
+    }
+
+    /// Build a kv_one over a full composed embedding sequence: first
+    /// segment through the one-shot embeds prefill, remainder through
+    /// the chunk entries — identical mechanics to the staged
+    /// `Feed::Embeds` path, run synchronously (mm eviction rebuilds).
+    fn prefill_embeds_all(&mut self, embeds: &[f32], total: usize) -> Result<xla::PjRtBuffer> {
+        let d = self.engine.rt.info.d_model;
+        let can_chunk = self.engine.rt.has_chunk_prefill_embeds();
+        let max_embed = *self
+            .engine
+            .rt
+            .info
+            .embed_prefill_buckets
+            .last()
+            .ok_or_else(|| anyhow!("no embed buckets for mm prefill"))?;
+        // Prefer the configured chunk size; a sequence that has outgrown
+        // the embed buckets (generated tokens past the original prompt)
+        // must chunk its remainder regardless of configuration.
+        let first = if can_chunk && self.chunk_tokens > 0 {
+            total.min(self.chunk_tokens)
+        } else {
+            total.min(max_embed)
+        };
+        let mut kv = self.engine.rt.prefill_embeds(&embeds[..first * d], first)?;
+        self.engine.stats.prefills += 1;
+        let mut fed = first;
+        while fed < total {
+            let max = self
+                .engine
+                .rt
+                .info
+                .max_chunk_bucket()
+                .ok_or_else(|| anyhow!("no chunk buckets for staged embeds"))?;
+            let n = (total - fed)
+                .min(if self.chunk_tokens > 0 { self.chunk_tokens } else { max })
+                .min(max);
+            let piece = embeds[fed * d..(fed + n) * d].to_vec();
+            kv = self.engine.feed_chunk_embeds(kv, fed, &piece, n)?;
+            fed += n;
+        }
+        Ok(kv)
     }
 
     /// Feed one segment of `job`; returns true when its KV is complete.
@@ -1120,9 +1365,9 @@ impl Scheduler {
                 .inc("catch_up_tokens", job.catch_up_tokens as u64);
         }
         if !from_cache {
-            match (&job.mm_hashes, &job.mm_key) {
-                (Some(_), Some(key)) => {
-                    self.mm_cache.put_kv(*key, kv.clone());
+            match (&job.mm, &job.mm_key) {
+                (Some(m), Some(key)) => {
+                    self.mm_cache.put_kv(*key, kv.clone(), m.emb_fp);
                 }
                 _ => {
                     if self.cfg.text_cache_bytes > 0 && self.cfg.cache_finished {
@@ -1143,7 +1388,7 @@ impl Scheduler {
                 job.tokens.clone(),
                 kv.clone(),
                 logits.clone(),
-                job.mm_hashes.clone(),
+                job.mm.clone(),
                 timing,
             ) {
                 self.metrics.inc("requests_failed", 1);
@@ -1159,8 +1404,409 @@ impl Scheduler {
             job.tokens,
             kv,
             logits,
-            job.mm_hashes,
+            job.mm,
             job.timing,
+        )
+    }
+
+    // ------------------------------------------------- staged vision
+
+    /// Advance the vision staging queue by at most
+    /// `vision_encodes_per_step` per-image encodes.  Encodes are
+    /// ordered by (effective class, arrival) like prefills; each
+    /// completed encode is distributed to every waiting multimodal
+    /// request (and the embedding cache), and requests whose images are
+    /// all resolved move on to the staged-prefill pipeline.
+    ///
+    /// The per-tick encode time lands in the `vision_stall` histogram:
+    /// with staging on this is bounded by one encode unit x the budget,
+    /// where the inline path records a whole multi-image admission as
+    /// one observation — exactly the stall the staging removes.
+    fn advance_visions(&mut self) {
+        if self.vis_pending.is_empty() {
+            return;
+        }
+        if self.vis_pending.len() > 1 {
+            let now = self.tick_count;
+            let aging = self.cfg.aging_ticks;
+            let psched = self.cfg.priority_sched;
+            self.vis_pending
+                .make_contiguous()
+                .sort_by_key(|j| effective_rank(j.priority, j.staged_tick, now, aging, psched));
+        }
+        let budget = self.cfg.vision_encodes_per_step.max(1);
+        let mut stall_ms = 0.0;
+        for _ in 0..budget {
+            let Some(job) = self.vis_pending.pop_front() else { break };
+            match self.encode_image(job.hash, &job.image) {
+                Ok((entry, dt)) => {
+                    stall_ms += dt;
+                    self.resolve_vision(job.hash, entry, dt);
+                }
+                Err(e) => self.fail_vision_waiters(job.hash, &e),
+            }
+        }
+        if stall_ms > 0.0 {
+            self.metrics.observe_ms("vision_stall", stall_ms);
+        }
+        self.metrics
+            .set_gauge("vision_queue_depth", self.vis_pending.len() as f64);
+    }
+
+    /// Run the vision encoder for one image and publish the entry to
+    /// the embedding cache.  Returns the entry and the encode wall ms.
+    fn encode_image(
+        &mut self,
+        hash: ContentHash,
+        img: &DecodedImage,
+    ) -> Result<(Rc<VisionEntry>, f64)> {
+        let vinfo = self
+            .engine
+            .rt
+            .info
+            .vision
+            .clone()
+            .ok_or_else(|| anyhow!("model {} has no vision tower", self.engine.rt.info.name))?;
+        let t0 = Instant::now();
+        let res = snap_resolution(&vinfo, img);
+        let snapped = img.resize(res, res);
+        let patches = patchify(&vinfo, &snapped, res)?;
+        let buf = self.engine.rt.vision_encode(res, patches)?;
+        let embeds = self.engine.rt.to_host_f32(&buf)?;
+        let n_tokens = vinfo.n_visual_tokens[&res];
+        let dt = ms_since(t0, Instant::now());
+        self.metrics.inc("vision_encodes", 1);
+        self.metrics.observe_ms("vision_encode", dt);
+        let rc = self
+            .mm_cache
+            .put_embeddings(hash, VisionEntry { embeds, n_tokens, resolution: res });
+        Ok((rc, dt))
+    }
+
+    /// Deliver a completed encode to every waiting mm request; requests
+    /// whose images are now all resolved proceed to compose + prefill.
+    fn resolve_vision(&mut self, hash: ContentHash, entry: Rc<VisionEntry>, dt_ms: f64) {
+        let mut ready: Vec<MmPending> = Vec::new();
+        let mut i = 0;
+        while i < self.mm_waiting.len() {
+            let p = &mut self.mm_waiting[i];
+            let waiting_on_it = p.hashes.contains(&hash) && !p.resolved.contains_key(&hash);
+            if waiting_on_it {
+                p.resolved.insert(hash, entry.clone());
+                // Coalesced waiters each waited the full encode.
+                p.timing.vision_ms += dt_ms;
+                if p.images_resolved() {
+                    ready.push(self.mm_waiting.remove(i));
+                    continue;
+                }
+            }
+            i += 1;
+        }
+        for p in ready {
+            let (id, events) = (p.id, p.events.clone());
+            if let Err(e) = self.finish_mm_resolve(p) {
+                self.metrics.inc("requests_failed", 1);
+                let _ = events.send(Event::Error { id, message: format!("{e:#}") });
+            }
+        }
+    }
+
+    /// An encode failed: fail every waiting request that needed it,
+    /// then prune queued VisionJobs no live request is waiting on —
+    /// encoding them anyway would burn the per-tick budget (seconds of
+    /// head-of-line delay) on results nobody consumes.
+    fn fail_vision_waiters(&mut self, hash: ContentHash, e: &anyhow::Error) {
+        let mut i = 0;
+        while i < self.mm_waiting.len() {
+            if self.mm_waiting[i].hashes.contains(&hash)
+                && !self.mm_waiting[i].resolved.contains_key(&hash)
+            {
+                let p = self.mm_waiting.remove(i);
+                self.metrics.inc("requests_failed", 1);
+                let _ = p.events.send(Event::Error { id: p.id, message: format!("{e:#}") });
+            } else {
+                i += 1;
+            }
+        }
+        let waiting = &self.mm_waiting;
+        self.vis_pending.retain(|j| {
+            waiting
+                .iter()
+                .any(|p| p.hashes.contains(&j.hash) && !p.resolved.contains_key(&j.hash))
+        });
+        self.metrics
+            .set_gauge("vision_queue_depth", self.vis_pending.len() as f64);
+        self.metrics
+            .set_gauge("prefill_queue_depth", self.staged_requests() as f64);
+    }
+
+    /// Multimodal admission (Algorithm 3, staged form): decode pixels,
+    /// content-hash every image, and resolve the caches NOW — but stage
+    /// each encoder miss as a per-image [`VisionJob`] instead of
+    /// running the encoder inline (unless `vision_stage` is off).
+    /// Full-prompt KV hits with the embedding cache on admit
+    /// immediately; with it off (Table 4 "KV only") the hit waits for
+    /// fresh encoder outputs and is validated against its recorded
+    /// fingerprint before being trusted.
+    #[allow(clippy::too_many_arguments)]
+    fn mm_admit(
+        &mut self,
+        id: u64,
+        events: Sender<Event>,
+        params: SamplingParams,
+        priority: Priority,
+        enqueued_at: Instant,
+        t_admit: Instant,
+        images: &[crate::multimodal::ImageSource],
+        text: &str,
+        mut timing: Timing,
+    ) -> Result<()> {
+        let info = self.engine.rt.info.clone();
+        if info.vision.is_none() {
+            return Err(anyhow!("model {} is text-only; multimodal request rejected", info.name));
+        }
+
+        // 1. Decode pixels + content-hash every image (format-independent).
+        let decoded: Vec<DecodedImage> = images
+            .iter()
+            .map(|s| s.decode())
+            .collect::<Result<Vec<_>>>()?;
+        let hashes: Vec<ContentHash> = decoded.iter().map(|d| d.content_hash()).collect();
+        timing.vision_total = decoded.len();
+
+        // Text tokens: <img> placeholder per image, then BOS + text.
+        let mut text_tokens: Vec<i32> = vec![IMG; decoded.len()];
+        text_tokens.push(crate::engine::tokenizer::BOS);
+        text_tokens.extend(self.tokenizer.encode(text));
+
+        // 2. Full-prompt KV hit?  With the embedding cache enabled this
+        // skips encoder AND prompt processing.  With it disabled (Table
+        // 4 "KV only"), the entry is only trusted after validation
+        // against freshly computed embeddings (LMCache-style), so the
+        // encoder still runs — the hit is carried into the pending
+        // request and compared when the encodes complete.
+        let kv_key = mm_prompt_hash(&hashes, &text_tokens);
+        let kv_hit = self.mm_cache.get_kv(&kv_key);
+        if let Some(hit) = &kv_hit {
+            self.metrics.inc("mm_kv_hits", 1);
+            timing.kv_full_hit = true;
+            if self.mm_cache.enable_emb {
+                timing.vision_cached = decoded.len();
+                let logits = self.engine.rt.read_logits(1, &hit.kv.kv_one, 0)?;
+                let mm = MmSeq {
+                    hashes,
+                    emb_fp: hit.emb_fp,
+                    vis_rows: None,
+                    n_vis_rows: 0,
+                };
+                let ready = Resolved::Ready {
+                    tokens: text_tokens,
+                    kv: hit.kv.clone(),
+                    logits,
+                    mm: Some(mm),
+                };
+                return self.dispatch_resolved(
+                    id, events, params, priority, enqueued_at, t_admit, ready, timing,
+                );
+            }
+        } else {
+            self.metrics.inc("mm_kv_misses", 1);
+        }
+
+        // 3. Per-image embedding resolution: cache hits resolve now,
+        // misses become encode work (staged or inline).  Duplicate
+        // images within one request share a single encode.
+        let mut resolved: HashMap<ContentHash, Rc<VisionEntry>> = HashMap::new();
+        let mut missing: Vec<(ContentHash, DecodedImage)> = Vec::new();
+        for (img, h) in decoded.into_iter().zip(&hashes) {
+            if resolved.contains_key(h) || missing.iter().any(|(mh, _)| mh == h) {
+                // Duplicate occurrence: served by the first one's encode.
+                timing.vision_cached += 1;
+                continue;
+            }
+            match self.mm_cache.get_embeddings(h) {
+                Some(e) => {
+                    timing.vision_cached += 1;
+                    self.metrics.inc("mm_emb_hits", 1);
+                    resolved.insert(*h, e);
+                }
+                None => {
+                    self.metrics.inc("mm_emb_misses", 1);
+                    missing.push((*h, img));
+                }
+            }
+        }
+
+        let mut pend = MmPending {
+            id,
+            events,
+            params,
+            priority,
+            text_tokens,
+            hashes,
+            kv_key,
+            kv_hit,
+            resolved,
+            timing,
+            enqueued_at,
+            staged_at: t_admit,
+        };
+
+        if missing.is_empty() {
+            return self.finish_mm_resolve(pend);
+        }
+
+        if !self.cfg.vision_stage {
+            // Inline encode (legacy): run every miss now, stalling the
+            // whole batch for the full multi-image cost — recorded as
+            // ONE vision_stall observation for the staged/inline
+            // comparison.
+            let mut stall_ms = 0.0;
+            for (h, img) in missing {
+                let (entry, dt) = self.encode_image(h, &img)?;
+                stall_ms += dt;
+                pend.timing.vision_ms += dt;
+                pend.resolved.insert(h, entry);
+            }
+            self.metrics.observe_ms("vision_stall", stall_ms);
+            return self.finish_mm_resolve(pend);
+        }
+
+        // Staged: enqueue a VisionJob per miss, coalescing on content
+        // hash — a job already queued for the same image serves this
+        // request too (one encode, many waiters).
+        for (h, img) in missing {
+            if let Some(job) = self.vis_pending.iter_mut().find(|j| j.hash == h) {
+                if pend.priority.rank() < job.priority.rank() {
+                    job.priority = pend.priority;
+                }
+                self.metrics.inc("vision_coalesced", 1);
+            } else {
+                self.vis_pending.push_back(VisionJob {
+                    hash: h,
+                    image: img,
+                    priority: pend.priority,
+                    staged_tick: self.tick_count,
+                });
+            }
+        }
+        self.mm_waiting.push(pend);
+        self.metrics
+            .set_gauge("vision_queue_depth", self.vis_pending.len() as f64);
+        self.metrics
+            .set_gauge("prefill_queue_depth", self.staged_requests() as f64);
+        Ok(())
+    }
+
+    /// All of a multimodal request's images are resolved: validate any
+    /// pending "KV only" hit, or compose + pool the `[vision ++ text]`
+    /// embeddings and hand the request to the staged-prefill pipeline.
+    fn finish_mm_resolve(&mut self, mut p: MmPending) -> Result<()> {
+        let info = self.engine.rt.info.clone();
+        // Compose per-image embeddings in request order; fingerprint
+        // the raw (unpooled) encoder outputs — pooling-independent, so
+        // the same images always produce the same fingerprint.
+        let mut vis_embeds: Vec<f32> = Vec::new();
+        let mut n_vis_tokens = 0usize;
+        for h in &p.hashes {
+            let e = p
+                .resolved
+                .get(h)
+                .ok_or_else(|| anyhow!("unresolved image embedding"))?;
+            vis_embeds.extend_from_slice(&e.embeds);
+            n_vis_tokens += e.n_tokens;
+        }
+        // Fingerprint the encoder outputs only when something can read
+        // it: a pending "KV only" validation, or a KV cache that will
+        // record it at insert.  The no-cache ablation skips the hash.
+        let emb_fp = if p.kv_hit.is_some() || self.cfg.mm_kv_cache_bytes > 0 {
+            let parts: Vec<&[f32]> = p
+                .hashes
+                .iter()
+                .map(|h| p.resolved[h].embeds.as_slice())
+                .collect();
+            emb_fingerprint(&parts)
+        } else {
+            ContentHash([0u8; 32])
+        };
+
+        // KV-validation (Table 4 "KV only"): the freshly computed
+        // embeddings must fingerprint-match what the entry was built
+        // from; a mismatch demotes the hit to a miss and re-prefills
+        // (`mm_kv_invalidated`).
+        if let Some(hit) = p.kv_hit.take() {
+            if hit.emb_fp == emb_fp {
+                let logits = self.engine.rt.read_logits(1, &hit.kv.kv_one, 0)?;
+                let mm = MmSeq {
+                    hashes: p.hashes,
+                    emb_fp,
+                    vis_rows: None,
+                    n_vis_rows: 0,
+                };
+                return self.dispatch_resolved(
+                    p.id,
+                    p.events,
+                    p.params,
+                    p.priority,
+                    p.enqueued_at,
+                    p.staged_at,
+                    Resolved::Ready { tokens: p.text_tokens, kv: hit.kv, logits, mm: Some(mm) },
+                    p.timing,
+                );
+            }
+            self.metrics.inc("mm_kv_invalidated", 1);
+            self.mm_cache.remove_kv(&p.kv_key);
+            p.timing.kv_full_hit = false;
+        }
+
+        // Temporal pooling: if the visual sequence would overflow the
+        // embed-prefill buckets, average-pool adjacent visual tokens
+        // 2:1 until it fits (video-frame sequences; Qwen-VL-style
+        // merge).  An odd tail row is carried through unchanged.
+        let max_embed = *info.embed_prefill_buckets.last().unwrap();
+        let d = info.d_model;
+        while n_vis_tokens + p.text_tokens.len() > max_embed && n_vis_tokens >= 2 {
+            let (pooled, n) = temporal_pool(&vis_embeds, n_vis_tokens, d);
+            vis_embeds = pooled;
+            n_vis_tokens = n;
+            self.metrics.inc("mm_temporal_pools", 1);
+        }
+
+        // Compose [vision ++ text] embeddings; the staged pipeline
+        // feeds them chunk by chunk (or in one prefill_embeds call when
+        // staging is off / the suffix fits one chunk).  The pooled
+        // vision rows are retained on the sequence so an eviction can
+        // always rebuild this KV.
+        let text_rows = self.engine.rt.embed_lookup(&p.text_tokens)?;
+        let vis_rc = Rc::new(vis_embeds);
+        let mut embeds = Vec::with_capacity((n_vis_tokens + p.text_tokens.len()) * d);
+        embeds.extend_from_slice(&vis_rc);
+        embeds.extend_from_slice(&text_rows);
+        let total = n_vis_tokens + p.text_tokens.len();
+        let mm = MmSeq {
+            hashes: p.hashes,
+            emb_fp,
+            vis_rows: Some(vis_rc),
+            n_vis_rows: n_vis_tokens,
+        };
+        self.dispatch_resolved(
+            p.id,
+            p.events,
+            p.params,
+            p.priority,
+            p.enqueued_at,
+            p.staged_at,
+            Resolved::Staged {
+                tokens: p.text_tokens,
+                feed: Feed::Embeds(embeds),
+                source: None,
+                built: 0,
+                total,
+                catch_up: 0,
+                mm: Some(mm),
+                mm_key: Some(p.kv_key),
+            },
+            p.timing,
         )
     }
 
@@ -1195,7 +1841,7 @@ impl Scheduler {
                         tokens: tokens.to_vec(),
                         kv: hit.kv,
                         logits,
-                        mm_hashes: None,
+                        mm: None,
                     });
                 }
                 // Partial hit: stage a catch-up job extending the
@@ -1212,7 +1858,7 @@ impl Scheduler {
                     built: hit.matched,
                     total: tokens.len(),
                     catch_up,
-                    mm_hashes: None,
+                    mm: None,
                     mm_key: None,
                 });
             }
@@ -1226,142 +1872,8 @@ impl Scheduler {
             built: 0,
             total: tokens.len(),
             catch_up: 0,
-            mm_hashes: None,
+            mm: None,
             mm_key: None,
-        })
-    }
-
-    /// Multimodal path: Algorithm 3 — per-image content hashing with
-    /// embedding reuse, then KV-state reuse over (images ++ text); the
-    /// composed embedding sequence is fed through the staged pipeline.
-    fn mm_resolve(
-        &mut self,
-        images: &[crate::multimodal::ImageSource],
-        text: &str,
-        timing: &mut Timing,
-    ) -> Result<Resolved> {
-        let info = self.engine.rt.info.clone();
-        let vinfo = info
-            .vision
-            .clone()
-            .ok_or_else(|| anyhow!("model {} is text-only; multimodal request rejected", info.name))?;
-
-        // 1. Decode pixels + content-hash every image (format-independent).
-        let decoded: Vec<DecodedImage> = images
-            .iter()
-            .map(|s| s.decode())
-            .collect::<Result<Vec<_>>>()?;
-        let hashes: Vec<ContentHash> = decoded.iter().map(|d| d.content_hash()).collect();
-        timing.vision_total = decoded.len();
-
-        // Text tokens: <img> placeholder per image, then BOS + text.
-        let mut text_tokens: Vec<i32> = vec![IMG; decoded.len()];
-        text_tokens.push(crate::engine::tokenizer::BOS);
-        text_tokens.extend(self.tokenizer.encode(text));
-
-        // 2. Full-prompt KV hit?  With the embedding cache enabled this
-        // skips encoder AND prompt processing.  With it disabled (Table 4
-        // "KV only"), the KV entry must be validated against freshly
-        // computed embeddings (LMCache-style), so the encoder still runs
-        // and only prompt processing is skipped — falls through below.
-        let kv_key = mm_prompt_hash(&hashes, &text_tokens);
-        let kv_hit = self.mm_cache.get_kv(&kv_key);
-        if let Some(kv) = &kv_hit {
-            self.metrics.inc("mm_kv_hits", 1);
-            timing.kv_full_hit = true;
-            if self.mm_cache.enable_emb {
-                timing.vision_cached = decoded.len();
-                let logits = self.engine.rt.read_logits(1, &kv.kv_one, 0)?;
-                return Ok(Resolved::Ready {
-                    tokens: text_tokens,
-                    kv: kv.clone(),
-                    logits,
-                    mm_hashes: Some(hashes),
-                });
-            }
-        } else {
-            self.metrics.inc("mm_kv_misses", 1);
-        }
-
-        // 3. Vision embeddings: cache per image, encode misses.
-        let mut vis_embeds: Vec<f32> = Vec::new();
-        let mut n_vis_tokens = 0usize;
-        for (img, h) in decoded.iter().zip(&hashes) {
-            let entry = match self.mm_cache.get_embeddings(h) {
-                Some(e) => {
-                    timing.vision_cached += 1;
-                    self.metrics.inc("mm_emb_hits", 1);
-                    e
-                }
-                None => {
-                    self.metrics.inc("mm_emb_misses", 1);
-                    let t0 = Instant::now();
-                    let res = snap_resolution(&vinfo, img);
-                    let snapped = img.resize(res, res);
-                    let patches = patchify(&vinfo, &snapped, res)?;
-                    let buf = self.engine.rt.vision_encode(res, patches)?;
-                    let embeds = self.engine.rt.to_host_f32(&buf)?;
-                    let n_tokens = vinfo.n_visual_tokens[&res];
-                    let dt = ms_since(t0, Instant::now());
-                    timing.vision_ms += dt;
-                    self.metrics.observe_ms("vision_encode", dt);
-                    self.mm_cache.put_embeddings(
-                        *h,
-                        VisionEntry { embeds, n_tokens, resolution: res },
-                    )
-                }
-            };
-            vis_embeds.extend_from_slice(&entry.embeds);
-            n_vis_tokens += entry.n_tokens;
-        }
-
-        // 3b. Temporal pooling: if the visual sequence would overflow the
-        // embed-prefill buckets, average-pool adjacent visual tokens 2:1
-        // until it fits (video-frame sequences; Qwen-VL-style merge).
-        let max_embed = *info.embed_prefill_buckets.last().unwrap();
-        let d = info.d_model;
-        while n_vis_tokens + text_tokens.len() > max_embed && n_vis_tokens >= 2 {
-            let half = n_vis_tokens / 2;
-            let mut pooled = vec![0f32; half * d];
-            for i in 0..half {
-                for j in 0..d {
-                    pooled[i * d + j] =
-                        0.5 * (vis_embeds[2 * i * d + j] + vis_embeds[(2 * i + 1) * d + j]);
-                }
-            }
-            vis_embeds = pooled;
-            n_vis_tokens = half;
-            self.metrics.inc("mm_temporal_pools", 1);
-        }
-
-        // 3c. KV-only fast path: embeddings were (re)computed above for
-        // validation; prompt processing is still skipped.
-        if let Some(kv) = kv_hit {
-            let logits = self.engine.rt.read_logits(1, &kv.kv_one, 0)?;
-            return Ok(Resolved::Ready {
-                tokens: text_tokens,
-                kv,
-                logits,
-                mm_hashes: Some(hashes),
-            });
-        }
-
-        // 4. Compose [vision ++ text] embeddings; the staged pipeline
-        // feeds them chunk by chunk (or in one prefill_embeds call when
-        // staging is off / the suffix fits one chunk).
-        let text_rows = self.engine.rt.embed_lookup(&text_tokens)?;
-        let mut embeds = vis_embeds;
-        embeds.extend_from_slice(&text_rows);
-        let total_len = n_vis_tokens + text_tokens.len();
-        Ok(Resolved::Staged {
-            tokens: text_tokens,
-            feed: Feed::Embeds(embeds),
-            source: None,
-            built: 0,
-            total: total_len,
-            catch_up: 0,
-            mm_hashes: Some(hashes),
-            mm_key: Some(kv_key),
         })
     }
 
@@ -1462,21 +1974,31 @@ impl Scheduler {
     fn finish(&mut self, id: u64, reason: FinishReason) {
         let Some(mut a) = self.active.remove(&id) else { return };
         // Engine removal (it may not be present if first-token finished
-        // before any step — admit() inserted it, so it is).
-        let cache_it = self.cfg.cache_finished && self.cfg.text_cache_bytes > 0;
+        // before any step — admit() inserted it, so it is).  Extraction
+        // is worthwhile when the destination cache for THIS sequence is
+        // enabled: the text prefix cache for text sequences, the mm KV
+        // cache for multimodal ones.
+        let cache_it = self.cfg.cache_finished
+            && match &a.mm {
+                Some(_) => self.cfg.mm_kv_cache_bytes > 0,
+                None => self.cfg.text_cache_bytes > 0,
+            };
         match self.engine.remove(id, cache_it) {
             Ok(Some(kv_one)) => {
                 // Invariant: the KV encodes exactly the prompt plus every
                 // FED token; a.all_tokens is that sequence (token-id view)
                 // and is therefore the cache key.
                 let kv_len = a.prompt_len + a.fed;
-                match &a.mm_hashes {
+                match &a.mm {
                     // Multimodal: key (image hashes ++ token ids) in the
                     // mm KV cache — repeated queries over the same images
-                    // become decode-only (Table 2 turn 3+).
-                    Some(hashes) => {
-                        let key = mm_prompt_hash(hashes, &a.all_tokens);
-                        self.mm_cache.put_kv(key, CachedKv::new(kv_one, kv_len));
+                    // become decode-only (Table 2 turn 3+).  The entry
+                    // records the sequence's encoder-output fingerprint
+                    // for later "KV only" validation.
+                    Some(m) => {
+                        let key = mm_prompt_hash(&m.hashes, &a.all_tokens);
+                        self.mm_cache
+                            .put_kv(key, CachedKv::new(kv_one, kv_len), m.emb_fp);
                     }
                     None => {
                         self.text_cache
@@ -1514,7 +2036,7 @@ enum Resolved {
         tokens: Vec<i32>,
         kv: Rc<CachedKv>,
         logits: Vec<f32>,
-        mm_hashes: Option<Vec<ContentHash>>,
+        mm: Option<MmSeq>,
     },
     /// Prompt (or its uncached suffix) needs prefill work: stage it.
     Staged {
@@ -1525,7 +2047,7 @@ enum Resolved {
         built: usize,
         total: usize,
         catch_up: usize,
-        mm_hashes: Option<Vec<ContentHash>>,
+        mm: Option<MmSeq>,
         mm_key: Option<ContentHash>,
     },
 }

@@ -25,6 +25,7 @@ USAGE:
                 [--prefill-chunk 32] [--prefill-chunks-per-step 1]
                 [--sched priority|fifo] [--default-priority normal]
                 [--preemption on|off] [--aging-ticks 64]
+                [--vision-stage on|off] [--vision-encodes-per-step 1]
   umserve run   --model NAME --prompt TEXT [--max-tokens 64] [--temperature 0]
                 [--top-k 0] [--top-p 1.0] [--image PATH ...via --image=path]
   umserve info  [--artifacts artifacts]
@@ -41,6 +42,17 @@ SCHEDULING:
   is checkpointed into the text prefix cache and the sequence resumes
   through the chunked catch-up path with identical output.
   --sched fifo restores the strict arrival-order scheduler.
+
+MULTIMODAL:
+  With --vision-stage on (the default) each vision-encoder miss is a
+  per-image job advanced at most --vision-encodes-per-step per
+  scheduler tick, interleaved with decode steps — a multi-image
+  admission never stalls decoding sequences for more than one encode
+  unit per tick (inline encoding stalls them for the whole batch).
+  Concurrent requests for the same image (by content hash) coalesce
+  onto one encode.  Evicted multimodal sequences checkpoint their KV
+  into the mm cache and resume via a KV hit or a chunked embed
+  re-prefill.  --vision-stage off restores inline encoding.
 ";
 
 fn main() {
@@ -88,6 +100,8 @@ fn engine_config(args: &argparse::Args) -> anyhow::Result<EngineConfig> {
         prefill_chunks_per_step: args.usize("prefill-chunks-per-step", 1)?,
         priority_sched: args.choice("sched", "priority", &["fifo", "priority"])? == "priority",
         preemption: args.on_off("preemption", true)?,
+        vision_stage: args.on_off("vision-stage", true)?,
+        vision_encodes_per_step: args.usize("vision-encodes-per-step", 1)?,
         default_priority,
         aging_ticks: args.usize("aging-ticks", 64)? as u64,
     })

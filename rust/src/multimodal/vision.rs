@@ -22,6 +22,28 @@ pub fn snap_resolution(v: &VisionInfo, img: &DecodedImage) -> usize {
         .unwrap_or_else(|| *v.resolutions.last().unwrap())
 }
 
+/// One 2:1 temporal-pooling step over a row-major [n, d] visual
+/// sequence (Qwen-VL-style merge, used when a video's visual tokens
+/// overflow the embed-prefill buckets): adjacent rows are averaged
+/// pairwise, and an odd tail row is carried through unchanged so no
+/// frame content is silently dropped.  Returns (pooled, new_n) with
+/// `new_n = ceil(n / 2)`.
+pub fn temporal_pool(rows: &[f32], n: usize, d: usize) -> (Vec<f32>, usize) {
+    debug_assert_eq!(rows.len(), n * d);
+    let pairs = n / 2;
+    let new_n = pairs + (n % 2);
+    let mut pooled = vec![0f32; new_n * d];
+    for i in 0..pairs {
+        for j in 0..d {
+            pooled[i * d + j] = 0.5 * (rows[2 * i * d + j] + rows[(2 * i + 1) * d + j]);
+        }
+    }
+    if n % 2 == 1 {
+        pooled[pairs * d..].copy_from_slice(&rows[(n - 1) * d..]);
+    }
+    (pooled, new_n)
+}
+
 /// Normalize + patchify a (square, supported-resolution) image into the
 /// encoder's input layout: patch-major, channel-major within patch:
 /// `patches[p][c*ps*ps + py*ps + px]`, pixels scaled to [-1, 1].
@@ -116,6 +138,48 @@ mod tests {
         // Everything else is -1.
         let ones = p.iter().filter(|&&x| x == 1.0).count();
         assert_eq!(ones, 3);
+    }
+
+    #[test]
+    fn temporal_pool_even_averages_pairs() {
+        // n=4, d=2: rows [0,0],[2,2],[4,4],[6,6] -> [1,1],[5,5].
+        let rows: Vec<f32> = vec![0.0, 0.0, 2.0, 2.0, 4.0, 4.0, 6.0, 6.0];
+        let (pooled, n) = temporal_pool(&rows, 4, 2);
+        assert_eq!(n, 2);
+        assert_eq!(pooled, vec![1.0, 1.0, 5.0, 5.0]);
+    }
+
+    #[test]
+    fn temporal_pool_odd_carries_tail_row() {
+        // Regression: `n/2` truncation used to DROP the last visual
+        // token of an odd-length sequence (e.g. a trailing video
+        // frame); the tail row must survive pooling unchanged.
+        let d = 3;
+        let rows: Vec<f32> = (0..5 * d).map(|i| i as f32).collect();
+        let (pooled, n) = temporal_pool(&rows, 5, d);
+        assert_eq!(n, 3, "ceil(5/2) rows, not 5/2");
+        // Pairs averaged...
+        assert_eq!(&pooled[..d], &[1.5, 2.5, 3.5]);
+        assert_eq!(&pooled[d..2 * d], &[7.5, 8.5, 9.5]);
+        // ...and the odd tail carried through verbatim.
+        assert_eq!(&pooled[2 * d..], &rows[4 * d..]);
+    }
+
+    #[test]
+    fn temporal_pool_converges_to_one_row() {
+        let d = 2;
+        let mut rows: Vec<f32> = (0..7 * d).map(|i| i as f32).collect();
+        let mut n = 7;
+        let mut steps = 0;
+        while n > 1 {
+            let (p, m) = temporal_pool(&rows, n, d);
+            assert_eq!(m, n / 2 + n % 2);
+            rows = p;
+            n = m;
+            steps += 1;
+            assert!(steps < 10, "pooling must converge");
+        }
+        assert_eq!(rows.len(), d);
     }
 
     #[test]

@@ -348,6 +348,7 @@ fn metrics(state: &ServerState, rw: &mut ResponseWriter<'_>) -> HandlerResult {
     text.push_str(&format!("umserve_bucket {}\n", snap.bucket));
     text.push_str(&format!("umserve_active {}\n", snap.active));
     text.push_str(&format!("umserve_prefill_queued {}\n", snap.queued));
+    text.push_str(&format!("umserve_vision_queued {}\n", snap.vision_queued));
     text.push_str(&format!("umserve_evicted_waiting_now {}\n", snap.evicted));
     text.push_str(&format!("umserve_prefill_chunks_total {}\n", snap.prefill_chunks));
     text.push_str(&format!("umserve_occupancy_mean {:.4}\n", snap.occupancy_mean));

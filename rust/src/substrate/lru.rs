@@ -113,6 +113,12 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         self.used_bytes = 0;
     }
 
+    /// Mutable access to every value (no recency effect); fault
+    /// injection and bulk fixups, not a hot path.
+    pub fn values_mut(&mut self) -> impl Iterator<Item = &mut V> {
+        self.map.values_mut().map(|e| &mut e.value)
+    }
+
     fn evict_to_budget(&mut self) {
         while self.used_bytes > self.budget_bytes {
             // O(n) scan for the least-recently-used key; see module doc.

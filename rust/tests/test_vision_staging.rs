@@ -1,0 +1,343 @@
+//! Staged vision encoding + evictable multimodal sequences, over REAL
+//! artifacts (qwen3-vl-4b sim).  Requires `make artifacts`.
+//!
+//! * staged-vs-inline vision equivalence: byte-identical greedy output,
+//!   with decode interleaving (a decode-active sequence keeps
+//!   generating while a multi-image admission encodes one unit/tick)
+//! * coalesced duplicate-image encode: one `vision_encode` execution
+//!   for two concurrent requests carrying the same image
+//! * mm evict -> resume round-trip: byte-identical continuation via the
+//!   mm KV checkpoint, AND via the chunked embed rebuild when the
+//!   checkpoint is dropped
+//! * temporal pooling: an odd visual-row count carries its tail row
+//!   (regression: `n/2` truncation silently lost the last token)
+//! * "KV only" validation: a fingerprint mismatch demotes the hit to a
+//!   miss (`mm_kv_invalidated`) instead of trusting stale KV state
+
+use std::sync::mpsc::{channel, Receiver};
+use std::time::Instant;
+
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{EngineConfig, Event, GenRequest, Priority, PromptInput, Usage};
+use umserve::engine::sampler::SamplingParams;
+use umserve::multimodal::image::{generate_image, ImageSource};
+
+fn art_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        model: "qwen3-vl-4b".into(),
+        artifacts_dir: art_dir(),
+        warmup: false,
+        ..Default::default()
+    }
+}
+
+fn submit(
+    s: &mut Scheduler,
+    id: u64,
+    prompt: PromptInput,
+    n_new: usize,
+    priority: Priority,
+) -> Receiver<Event> {
+    let (tx, rx) = channel();
+    s.submit(GenRequest {
+        id,
+        prompt,
+        params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) },
+        priority,
+        events: tx,
+        enqueued_at: Instant::now(),
+    });
+    rx
+}
+
+fn mm_prompt(seeds: &[u64], side: usize, text: &str) -> PromptInput {
+    PromptInput::Multimodal {
+        images: seeds
+            .iter()
+            .map(|&s| ImageSource::Bytes(generate_image(s, side).encode_raw()))
+            .collect(),
+        text: text.into(),
+    }
+}
+
+fn tokens_of(rx: &Receiver<Event>) -> Vec<i32> {
+    rx.try_iter()
+        .filter_map(|e| match e {
+            Event::Token { token, .. } if token >= 0 => Some(token),
+            Event::Error { message, .. } => panic!("request failed: {message}"),
+            _ => None,
+        })
+        .collect()
+}
+
+fn drain(rx: &Receiver<Event>) -> (Vec<i32>, Option<Usage>) {
+    let mut toks = Vec::new();
+    let mut usage = None;
+    for e in rx.try_iter() {
+        match e {
+            Event::Token { token, .. } if token >= 0 => toks.push(token),
+            Event::Done { usage: u, .. } => usage = Some(u),
+            Event::Error { message, .. } => panic!("request failed: {message}"),
+            _ => {}
+        }
+    }
+    (toks, usage)
+}
+
+// ------------------------------------------ staged-vs-inline equivalence
+
+#[test]
+fn staged_vision_reproduces_inline_outputs_and_interleaves() {
+    // Inline reference: every encode runs inside admission.
+    let mut inline_ = Scheduler::new(EngineConfig { vision_stage: false, ..cfg() }).unwrap();
+    let mm = || mm_prompt(&[301, 302, 303], 224, "compare these pictures");
+    let rx = submit(&mut inline_, 50, mm(), 6, Priority::Normal);
+    inline_.run_until_idle();
+    let inline_toks = tokens_of(&rx);
+    assert_eq!(inline_toks.len(), 6);
+    assert_eq!(inline_.metrics.counter("vision_encodes"), 3);
+
+    // Staged: a decode-active text sequence must keep generating while
+    // the 3-image admission encodes at most one unit per tick.
+    let mut staged = Scheduler::new(EngineConfig { vision_stage: true, ..cfg() }).unwrap();
+    let text_rx = submit(
+        &mut staged,
+        1,
+        PromptInput::Tokens(vec![1, 8, 12]),
+        60,
+        Priority::Normal,
+    );
+    for _ in 0..3 {
+        staged.tick();
+    }
+    assert!(!tokens_of(&text_rx).is_empty(), "text request never started");
+
+    let mm_rx = submit(&mut staged, 51, mm(), 6, Priority::Normal);
+    assert_eq!(staged.vision_queued_count(), 3, "3 cold images must stage 3 encodes");
+    assert_eq!(staged.queued_count(), 1, "mm request must wait on its encodes");
+
+    let mut ticks_while_staged = 0;
+    while staged.vision_queued_count() > 0 {
+        let encodes_before = staged.metrics.counter("vision_encodes");
+        staged.tick();
+        ticks_while_staged += 1;
+        assert!(
+            staged.metrics.counter("vision_encodes") - encodes_before <= 1,
+            "more than vision_encodes_per_step encodes in one tick"
+        );
+        assert!(ticks_while_staged < 32, "vision staging never drained");
+    }
+    let text_during = tokens_of(&text_rx).len();
+    assert!(
+        text_during >= ticks_while_staged.min(3),
+        "decode stalled during staged encodes: {text_during} tokens in {ticks_while_staged} ticks"
+    );
+    staged.run_until_idle();
+
+    assert_eq!(tokens_of(&mm_rx), inline_toks, "staged vision changed greedy output");
+    assert_eq!(staged.metrics.counter("vision_encodes"), 3);
+    // Each staged tick recorded its (single-unit) stall.
+    let stall = staged.metrics.histogram("vision_stall").expect("vision_stall recorded");
+    assert_eq!(stall.count(), 3);
+}
+
+// ------------------------------------------------- encode coalescing
+
+#[test]
+fn concurrent_same_image_requests_share_one_encode() {
+    let mut s = Scheduler::new(cfg()).unwrap();
+    // Same pixels, different transports AND different questions: both
+    // KV keys miss, both need the same encode.
+    let img = generate_image(77, 224);
+    let p1 = PromptInput::Multimodal {
+        images: vec![ImageSource::Bytes(img.encode_raw())],
+        text: "what is this".into(),
+    };
+    let p2 = PromptInput::Multimodal {
+        images: vec![ImageSource::Bytes(img.encode_rle())],
+        text: "describe the colors".into(),
+    };
+    let rx1 = submit(&mut s, 1, p1, 4, Priority::Normal);
+    let rx2 = submit(&mut s, 2, p2, 4, Priority::Normal);
+    assert_eq!(s.vision_queued_count(), 1, "same image must coalesce onto one VisionJob");
+    assert_eq!(s.queued_count(), 2, "both requests wait on the shared encode");
+    s.run_until_idle();
+
+    assert_eq!(s.metrics.counter("vision_encodes"), 1, "duplicate image re-encoded");
+    assert_eq!(s.metrics.counter("vision_coalesced"), 1);
+    assert_eq!(tokens_of(&rx1).len(), 4);
+    assert_eq!(tokens_of(&rx2).len(), 4);
+}
+
+// --------------------------------------------- mm eviction round-trips
+
+/// Run the eviction workload under a policy; returns (per-id streams,
+/// evictions, rebuilds).
+fn run_evict_workload(
+    preemption: bool,
+    mm_kv_cache_bytes: usize,
+) -> (Vec<(u64, Vec<i32>)>, u64, u64) {
+    let mut s = Scheduler::new(EngineConfig {
+        preemption,
+        mm_kv_cache_bytes,
+        cache_finished: false,
+        text_cache_bytes: 64 << 20,
+        aging_ticks: 0,
+        ..cfg()
+    })
+    .unwrap();
+    let capacity = s.engine.max_capacity();
+    let mut rxs: Vec<(u64, Receiver<Event>)> = Vec::new();
+    // Fill every decode slot with batch-class mm sequences (same image
+    // -> one encode; distinct questions -> distinct KV) that generate
+    // long enough to still be decoding at the interactive arrival.
+    for i in 0..capacity as u64 {
+        let p = mm_prompt(&[7], 224, &format!("question number {i} about the scene"));
+        rxs.push((100 + i, submit(&mut s, 100 + i, p, 48, Priority::Batch)));
+    }
+    let mut guard = 0;
+    while s.active_count() < capacity {
+        s.tick();
+        guard += 1;
+        assert!(guard < 300, "mm flood never filled the decode arena");
+    }
+    // Interactive text arrival under full slots: with preemption it
+    // must evict a decoding mm sequence.
+    let int_prompt = PromptInput::Tokens(vec![1, 9, 14]);
+    rxs.push((900, submit(&mut s, 900, int_prompt, 4, Priority::Interactive)));
+    s.run_until_idle();
+
+    let evictions = s.metrics.counter("evictions");
+    assert_eq!(
+        evictions,
+        s.metrics.counter("evicted_resumes"),
+        "every evicted mm sequence must resume"
+    );
+    let streams = rxs.iter().map(|(id, rx)| (*id, tokens_of(rx))).collect();
+    (streams, evictions, s.metrics.counter("mm_evict_rebuilds"))
+}
+
+#[test]
+fn mm_evicted_sequence_resumes_byte_identical_via_checkpoint() {
+    // Default-size mm KV cache: the eviction checkpoint survives and the
+    // resume is a KV full hit.
+    let (with_preempt, evictions, rebuilds) = run_evict_workload(true, 256 << 20);
+    assert!(evictions >= 1, "interactive arrival must evict a decoding mm sequence");
+    assert_eq!(rebuilds, 0, "checkpoint survived; no rebuild expected");
+    let (without, zero_evictions, _) = run_evict_workload(false, 256 << 20);
+    assert_eq!(zero_evictions, 0);
+    assert_eq!(
+        with_preempt, without,
+        "evicted-then-resumed mm output diverged from the unpreempted run"
+    );
+}
+
+#[test]
+fn mm_evicted_sequence_rebuilds_when_checkpoint_dropped() {
+    // A 1-byte mm KV budget rejects every checkpoint insert, so the
+    // resume must rebuild [vision ++ all_tokens] from the retained
+    // pooled rows through the chunked embed path.
+    let (with_preempt, evictions, rebuilds) = run_evict_workload(true, 1);
+    assert!(evictions >= 1);
+    assert!(rebuilds >= 1, "dropped checkpoint must force an embed rebuild");
+    let (without, _, _) = run_evict_workload(false, 1);
+    assert_eq!(
+        with_preempt, without,
+        "embed-rebuilt mm output diverged from the unpreempted run"
+    );
+}
+
+// ------------------------------------------------- temporal pooling
+
+#[test]
+fn odd_visual_rows_pool_with_tail_carried() {
+    // One 448-resolution image contributes an ODD visual-token count
+    // (49 on the sim zoo); a long text pushes the composed sequence
+    // over the largest embed bucket so pooling engages exactly once:
+    // 49 -> ceil(49/2) = 25 rows.  The old `n/2` truncation produced 24
+    // rows, silently dropping the last visual token.
+    let mut staged = Scheduler::new(cfg()).unwrap();
+    let info = staged.engine.rt.info.clone();
+    let vinfo = info.vision.as_ref().expect("vl model");
+    let n_vis = vinfo.n_visual_tokens[&448];
+    assert_eq!(n_vis % 2, 1, "test needs an odd visual-token resolution");
+    let max_embed = *info.embed_prefill_buckets.last().unwrap();
+
+    // Grow the text until [vision ++ text] overflows the embed buckets
+    // (1 IMG placeholder + BOS + text tokens).  Small increments keep
+    // the overflow minimal, so a single pooling step must land the
+    // sequence back inside the buckets whatever the tokenizer's
+    // granularity.
+    let mut text = String::from("scene report:");
+    loop {
+        let text_len = 2 + staged.tokenizer.encode(&text).len();
+        if n_vis + text_len > max_embed {
+            break;
+        }
+        text.push_str(" fox");
+    }
+    let text_len = 2 + staged.tokenizer.encode(&text).len();
+    let pooled_vis = n_vis / 2 + 1; // ceil(49/2) = 25 with the tail carried
+    assert!(pooled_vis + text_len <= max_embed, "one pooling step must suffice");
+
+    let mk = || mm_prompt(&[42], 448, &text);
+    let rx = submit(&mut staged, 1, mk(), 4, Priority::Normal);
+    staged.run_until_idle();
+    let (staged_toks, usage) = drain(&rx);
+    assert!(staged.metrics.counter("mm_temporal_pools") >= 1, "pooling never engaged");
+    assert_eq!(
+        usage.expect("Done event").prompt_tokens,
+        pooled_vis + text_len,
+        "pooled visual rows must include the carried odd tail"
+    );
+
+    // Inline admission pools identically.
+    let mut inline_ = Scheduler::new(EngineConfig { vision_stage: false, ..cfg() }).unwrap();
+    let rx2 = submit(&mut inline_, 1, mk(), 4, Priority::Normal);
+    inline_.run_until_idle();
+    let (inline_toks, usage2) = drain(&rx2);
+    assert_eq!(staged_toks, inline_toks);
+    assert_eq!(usage2.expect("Done event").prompt_tokens, pooled_vis + text_len);
+}
+
+// --------------------------------------------- "KV only" validation
+
+#[test]
+fn kv_only_validation_demotes_on_fingerprint_mismatch() {
+    // Table-4 "KV only" configuration: embedding cache off, KV cache on.
+    let mut s = Scheduler::new(EngineConfig {
+        mm_emb_cache_bytes: 0,
+        ..cfg()
+    })
+    .unwrap();
+    let mk = || mm_prompt(&[11], 224, "what stands out");
+
+    // Turn 1: cold build populates the KV cache (with a fingerprint).
+    let rx1 = submit(&mut s, 1, mk(), 4, Priority::Normal);
+    s.run_until_idle();
+    let t1 = tokens_of(&rx1);
+    assert_eq!(t1.len(), 4);
+
+    // Corrupt every recorded fingerprint: the next hit's freshly
+    // computed embeddings can no longer match, so the entry must be
+    // demoted to a miss instead of trusted (stale-KV protection).
+    s.mm_cache_mut().corrupt_kv_fingerprints();
+    let rx2 = submit(&mut s, 2, mk(), 4, Priority::Normal);
+    s.run_until_idle();
+    let t2 = tokens_of(&rx2);
+    assert_eq!(s.metrics.counter("mm_kv_invalidated"), 1, "mismatch must invalidate");
+    assert_eq!(t1, t2, "demoted hit must re-prefill to the same output");
+
+    // Turn 3: the re-prefill reinserted a valid entry; the hit is now
+    // validated and trusted (prompt processing skipped).
+    let rx3 = submit(&mut s, 3, mk(), 4, Priority::Normal);
+    s.run_until_idle();
+    let t3 = tokens_of(&rx3);
+    assert_eq!(t1, t3);
+    assert_eq!(s.metrics.counter("mm_kv_invalidated"), 1, "valid hit must not invalidate");
+    assert!(s.metrics.counter("mm_kv_hits") >= 2);
+}
