@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
         std::thread::spawn(move || {
             let _ = umserve::server::serve(
                 listener,
-                handle,
+                handle.into(),
                 "qwen3-0.6b".into(),
                 umserve::coordinator::Priority::Normal,
                 shutdown,

@@ -272,6 +272,30 @@ class EntryBuilder:
             [],
         )
 
+    def trim_kv(self, s: int):
+        cfg = self.cfg
+        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
+        self.lower(
+            f"trim_kv_s{s}",
+            functools.partial(M.trim_kv_fn, cfg, s),
+            [arg_desc("kv_one", "input", kv_one)],
+            [kv_one],
+            [],
+            [],
+        )
+
+    def untrim_kv(self, s: int):
+        cfg = self.cfg
+        trimmed = spec((cfg.n_layers + 1, 2, 1, cfg.n_kv_heads, s, cfg.d_head), F32)
+        self.lower(
+            f"untrim_kv_s{s}",
+            functools.partial(M.untrim_kv_fn, cfg, s),
+            [arg_desc("trimmed", "input", trimmed)],
+            [trimmed],
+            [],
+            [],
+        )
+
     def vision(self, resolution: int):
         cfg = self.cfg
         vc = cfg.vision
@@ -315,6 +339,12 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
             eb.embed_lookup(s)
         for c in PREFILL_CHUNK_BUCKETS:
             eb.prefill_chunk_embeds(c)
+        # KV trim/untrim: the mm KV cache stores whole multimodal
+        # prompts, so only vision models pay the s_max-sized entries the
+        # trim closes down.
+        for s in cfg.trim_kv_buckets():
+            eb.trim_kv(s)
+            eb.untrim_kv(s)
         for r in cfg.vision.resolutions:
             eb.vision(r)
 
@@ -340,6 +370,7 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
         "prefill_buckets": list(cfg.prefill_buckets),
         "prefill_chunk_buckets": list(PREFILL_CHUNK_BUCKETS),
         "embed_prefill_buckets": list(EMBED_PREFILL_BUCKETS) if cfg.vision else [],
+        "trim_kv_buckets": list(cfg.trim_kv_buckets()) if cfg.vision else [],
         "vision": (
             {
                 "d_model": cfg.vision.d_model,

@@ -78,6 +78,24 @@ class ModelConfig:
     def d_kv(self) -> int:
         return self.n_kv_heads * self.d_head
 
+    def logits_rows(self) -> int:
+        """Rows of the plane-0 logits mailbox: ceil(vocab / d_head)."""
+        return -(-self.vocab // self.d_head)
+
+    def trim_kv_buckets(self) -> Tuple[int, ...]:
+        """Position grids for the cached-KV trim entries
+        (`trim_kv_s{S}` / `untrim_kv_s{S}`).
+
+        A cached kv_one is physically s_max positions long even when it
+        logically encodes far fewer; trimming it to the smallest grid
+        size covering its length makes the cache's length-proportional
+        byte accounting a true allocation bound.  Every grid size must
+        keep the plane-0 logits mailbox intact (>= logits_rows), and a
+        size >= s_max would save nothing.
+        """
+        grid = sorted({max(b, self.logits_rows()) for b in TRIM_KV_GRID})
+        return tuple(b for b in grid if b < self.s_max)
+
     def n_params(self) -> int:
         """Approximate parameter count (for logs / DESIGN cross-check)."""
         d, f, v = self.d_model, self.d_ffn, self.vocab
@@ -163,3 +181,8 @@ EMBED_PREFILL_BUCKETS = (64, 192, 384, 640)
 # Small bucket for short catch-up suffixes, large for full-prompt chunks
 # (the scheduler's default prefill_chunk_tokens is the largest bucket).
 PREFILL_CHUNK_BUCKETS = (8, 32)
+
+# Candidate position grids for trimming cached kv_one buffers (see
+# ModelConfig.trim_kv_buckets — each is clamped up to the model's
+# logits-mailbox row count and capped below s_max).
+TRIM_KV_GRID = (128, 256, 384, 512)

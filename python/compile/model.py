@@ -385,6 +385,30 @@ def zeros_fn(cfg: ModelConfig, batch: int):
 
 # ------------------------------------------------------- arena management
 
+def trim_kv_fn(cfg: ModelConfig, s: int, kv_one):
+    """Slice a kv_one to its first `s` positions (`trim_kv_s{S}`).
+
+    Cached KV states are physically s_max positions long even when they
+    logically encode far fewer; the serving cache trims each entry to
+    the smallest lowered grid size covering its length at insert, so the
+    cache's length-proportional byte budget bounds real device
+    allocation.  `s` must cover the plane-0 logits mailbox rows
+    (cfg trim grids guarantee it), so a full-hit can still read its
+    first token's logits from the trimmed entry after un-trimming.
+    """
+    return kv_one[:, :, :, :, :s, :]
+
+
+def untrim_kv_fn(cfg: ModelConfig, s: int, trimmed):
+    """Re-expand a trimmed KV state to the s_max arena row
+    (`untrim_kv_s{S}`).  Positions >= s are zero-filled: the original
+    buffer held only padding/garbage there and attention masks by
+    sequence length, so decode from an un-trimmed state is
+    token-identical to decode from the original."""
+    return jnp.pad(trimmed,
+                   ((0, 0), (0, 0), (0, 0), (0, 0), (0, cfg.s_max - s), (0, 0)))
+
+
 def inject_fn(cfg: ModelConfig, arena, kv_one, slot):
     """Insert a prefilled single-sequence KV row into arena slot `slot`."""
     return jax.lax.dynamic_update_slice(arena, kv_one, (0, 0, slot, 0, 0, 0))

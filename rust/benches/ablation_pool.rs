@@ -1,0 +1,336 @@
+//! Multi-engine pool ablation: aggregate throughput and TTFT tails at
+//! 1/2/4 scheduler replicas under a mixed text+multimodal flood, the
+//! cache-affinity routing win on a repeated-image workload, and
+//! cross-engine work shedding on an affinity hotspot.
+//!
+//! Three experiments:
+//!
+//! 1. **Scaling** — the same 16-request flood (12 text + 4 mm over 2
+//!    distinct images) served by 1, 2 and 4 round-robin replicas.
+//!    Reported: aggregate tok/s, TTFT p50/p99, migrations.  Greedy
+//!    token streams must be IDENTICAL across engine counts — routing
+//!    and migration are scheduling decisions, never output decisions.
+//! 2. **Affinity** — N requests repeating ONE image, routed rr vs
+//!    cache-affinity.  rr scatters the image across replicas (one
+//!    encode per replica); affinity pins it to one (one encode total,
+//!    `affinity_hits` = N-1) — the paper's repeated-image speedup
+//!    preserved across a data-parallel pool.
+//! 3. **Shedding** — 16 prompts sharing one affinity key flood a
+//!    2-replica pool: everything routes to one engine, and the
+//!    rebalancer must migrate waiting work to the idle replica
+//!    (`migrations` > 0) with output byte-identical to an unmigrated
+//!    single-engine run.
+//!
+//! `BENCH_SMOKE=1` runs a reduced configuration (CI lane);
+//! `BENCH_JSON_OUT=dir` writes the tables as a JSON artifact.
+
+use std::time::{Duration, Instant};
+
+use umserve::bench_harness::{banner, fmt_f, maybe_write_json, smoke_scale, synth_prompt, Table};
+use umserve::cluster::{EnginePool, PoolConfig, RoutePolicy};
+use umserve::coordinator::{EngineConfig, Event, PromptInput};
+use umserve::engine::sampler::SamplingParams;
+use umserve::multimodal::image::{generate_image, ImageSource};
+
+struct Flood {
+    streams: Vec<Vec<i32>>,
+    ttfts: Vec<f64>,
+    wall_s: f64,
+    tokens: usize,
+}
+
+fn run_flood(
+    handle: &umserve::cluster::PoolHandle,
+    prompts: &[PromptInput],
+    gen: usize,
+) -> anyhow::Result<Flood> {
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(prompts.len());
+    for p in prompts {
+        let params = SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(gen) };
+        let (_, rx) = handle.generate(p.clone(), params)?;
+        rxs.push(rx);
+    }
+    let mut streams = Vec::with_capacity(rxs.len());
+    let mut ttfts = Vec::with_capacity(rxs.len());
+    let mut tokens = 0usize;
+    for rx in &rxs {
+        let mut toks = Vec::new();
+        let mut done = false;
+        for ev in rx.iter() {
+            match ev {
+                Event::Token { token, .. } if token >= 0 => toks.push(token),
+                Event::Done { timing, .. } => {
+                    ttfts.push(timing.ttft_ms);
+                    done = true;
+                    break;
+                }
+                Event::Error { message, .. } => anyhow::bail!("request failed: {message}"),
+                _ => {}
+            }
+        }
+        anyhow::ensure!(done, "request did not complete");
+        tokens += toks.len();
+        streams.push(toks);
+    }
+    Ok(Flood { streams, ttfts, wall_s: t0.elapsed().as_secs_f64(), tokens })
+}
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() as f64 * q) as usize).min(sorted.len() - 1)]
+}
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        model: "qwen3-vl-4b".into(),
+        artifacts_dir: "artifacts".into(),
+        warmup: false,
+        ..Default::default()
+    }
+}
+
+fn img_bytes(seed: u64) -> Vec<u8> {
+    generate_image(seed, 224).encode_raw()
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("Engine-pool ablation — data-parallel scaling, affinity routing, shedding");
+
+    let gen = smoke_scale(24, 10);
+    let n_req = 16usize; // the acceptance flood size, smoke included
+
+    // Mixed workload: 12 distinct text prompts + 4 mm requests over 2
+    // distinct images (repeats exercise the emb/KV caches).
+    let imgs: Vec<Vec<u8>> = (0..2).map(|i| img_bytes(7000 + i)).collect();
+    let mixed: Vec<PromptInput> = (0..n_req)
+        .map(|i| {
+            if i % 4 == 3 {
+                PromptInput::Multimodal {
+                    images: vec![ImageSource::Bytes(imgs[(i / 4) % 2].clone())],
+                    text: format!("describe scene {i}"),
+                }
+            } else {
+                PromptInput::Tokens(synth_prompt(100 + i as u64, 48, 2048))
+            }
+        })
+        .collect();
+
+    // ---- 1. scaling: 1 / 2 / 4 engines, round-robin -----------------
+    let mut scaling = Table::new(
+        &format!("Pool scaling (qwen3-vl-4b-sim, {n_req}-request mixed flood, route=rr)"),
+        &["Engines", "Agg tok/s", "TTFT p50 (ms)", "TTFT p99 (ms)", "Wall (s)", "Migrations"],
+    );
+    let mut tput = Vec::new();
+    let mut baseline: Option<Vec<Vec<i32>>> = None;
+    for n_engines in [1usize, 2, 4] {
+        let mut pool = EnginePool::spawn(
+            cfg(),
+            PoolConfig {
+                engines: n_engines,
+                route: RoutePolicy::RoundRobin,
+                migrate: true,
+                ..Default::default()
+            },
+        )?;
+        let h = pool.handle();
+        // Untimed warm pass: compiles exactly the executables the
+        // measured pass touches (per replica), so wall times compare
+        // scheduling, not XLA compilation.
+        let _ = run_flood(&h, &mixed, gen)?;
+        let flood = run_flood(&h, &mixed, gen)?;
+        let stats = h.stats()?;
+        let migrations = stats.router.counter("migrations");
+        let mut ttfts = flood.ttfts.clone();
+        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let tok_s = flood.tokens as f64 / flood.wall_s;
+        scaling.row(vec![
+            n_engines.to_string(),
+            fmt_f(tok_s, 1),
+            fmt_f(quantile(&ttfts, 0.50), 1),
+            fmt_f(quantile(&ttfts, 0.99), 1),
+            fmt_f(flood.wall_s, 2),
+            migrations.to_string(),
+        ]);
+        tput.push(tok_s);
+        if let Some(base) = &baseline {
+            assert_eq!(
+                base, &flood.streams,
+                "token streams diverged at {n_engines} engines — routing/migration \
+                 must never change outputs"
+            );
+        } else {
+            baseline = Some(flood.streams);
+        }
+        pool.shutdown();
+    }
+    scaling.print();
+    // Per-step monotonicity: strict in full runs; the CI smoke lane
+    // runs on shared core-constrained runners where scheduler noise in
+    // the reduced configuration can tie a step, so each step gets a
+    // 10% grace there (the overall 4-vs-1 margin stays unconditional).
+    let step_tol = if umserve::bench_harness::smoke() { 0.9 } else { 1.0 };
+    assert!(
+        tput[1] > tput[0] * step_tol,
+        "2 engines must out-throughput 1 ({:.1} vs {:.1} tok/s)",
+        tput[1],
+        tput[0]
+    );
+    // The 4-replica step additionally tolerates runners with fewer
+    // free cores than replicas, where the last doubling flattens.
+    assert!(
+        tput[2] > tput[1] * step_tol.min(0.97),
+        "4 engines regressed vs 2 ({:.1} vs {:.1} tok/s)",
+        tput[2],
+        tput[1]
+    );
+    assert!(
+        tput[2] > tput[0] * 1.2,
+        "4 engines must clearly out-throughput 1 ({:.1} vs {:.1} tok/s)",
+        tput[2],
+        tput[0]
+    );
+
+    // ---- 2. affinity vs rr on a repeated-image workload -------------
+    let n_aff_eng = smoke_scale(4, 2);
+    let n_aff_req = smoke_scale(12, 6);
+    let hot_img = img_bytes(9100);
+    let repeated: Vec<PromptInput> = (0..n_aff_req)
+        .map(|i| PromptInput::Multimodal {
+            images: vec![ImageSource::Bytes(hot_img.clone())],
+            text: format!("what changed in frame {i}"),
+        })
+        .collect();
+    let mut affinity = Table::new(
+        &format!(
+            "Affinity routing ({n_aff_eng} engines, {n_aff_req} requests repeating one image)"
+        ),
+        &["Route", "Encodes", "Affinity hits", "Agg tok/s", "Wall (s)"],
+    );
+    let mut encodes_by_route = Vec::new();
+    let mut aff_hits = 0u64;
+    let mut aff_streams: Vec<Vec<Vec<i32>>> = Vec::new();
+    for route in [RoutePolicy::RoundRobin, RoutePolicy::CacheAffinity] {
+        let mut pool = EnginePool::spawn(
+            cfg(),
+            PoolConfig { engines: n_aff_eng, route, migrate: false, ..Default::default() },
+        )?;
+        let h = pool.handle();
+        let flood = run_flood(&h, &repeated, gen)?;
+        let stats = h.stats()?;
+        let encodes: u64 = stats
+            .engines
+            .iter()
+            .map(|s| s.metrics.counter("vision_encodes"))
+            .sum();
+        let hits = stats.router.counter("affinity_hits");
+        if route == RoutePolicy::CacheAffinity {
+            aff_hits = hits;
+        }
+        affinity.row(vec![
+            route.as_str().to_string(),
+            encodes.to_string(),
+            hits.to_string(),
+            fmt_f(flood.tokens as f64 / flood.wall_s, 1),
+            fmt_f(flood.wall_s, 2),
+        ]);
+        encodes_by_route.push(encodes);
+        aff_streams.push(flood.streams);
+        pool.shutdown();
+    }
+    affinity.print();
+    assert!(aff_hits > 0, "repeated-image workload must report affinity hits");
+    assert_eq!(
+        aff_hits,
+        (n_aff_req - 1) as u64,
+        "every repeat after the first placement should follow the sticky mapping"
+    );
+    assert!(
+        encodes_by_route[1] < encodes_by_route[0],
+        "affinity routing must encode the repeated image on fewer replicas \
+         ({} vs {} encodes)",
+        encodes_by_route[1],
+        encodes_by_route[0]
+    );
+    assert_eq!(aff_streams[0], aff_streams[1], "routing policy must not change outputs");
+
+    // ---- 3. shedding on an affinity hotspot -------------------------
+    // 16 prompts sharing a 64-token prefix: one affinity key, so a
+    // 2-replica affinity pool routes everything to one engine and the
+    // rebalancer must spill waiting work to the idle one.
+    let prefix = synth_prompt(999, 64, 2048);
+    let hotspot: Vec<PromptInput> = (0..n_req)
+        .map(|i| {
+            let mut toks = prefix.clone();
+            toks.extend(synth_prompt(2000 + i as u64, 17, 2048).into_iter().skip(1));
+            PromptInput::Tokens(toks)
+        })
+        .collect();
+    let shed_gen = smoke_scale(16, 8);
+
+    let mut solo = EnginePool::spawn(
+        cfg(),
+        PoolConfig { engines: 1, migrate: false, ..Default::default() },
+    )?;
+    let base = run_flood(&solo.handle(), &hotspot, shed_gen)?;
+    solo.shutdown();
+
+    let mut pool = EnginePool::spawn(
+        cfg(),
+        PoolConfig {
+            engines: 2,
+            route: RoutePolicy::CacheAffinity,
+            migrate: true,
+            migrate_threshold: 2,
+            rebalance_interval: Duration::from_millis(1),
+            ..Default::default()
+        },
+    )?;
+    let h = pool.handle();
+    let shed = run_flood(&h, &hotspot, shed_gen)?;
+    let stats = h.stats()?;
+    let migrations = stats.router.counter("migrations");
+    let spilled: u64 = stats
+        .engines
+        .iter()
+        .map(|s| s.metrics.counter("migrations_in"))
+        .sum();
+    pool.shutdown();
+
+    let mut shedding = Table::new(
+        "Work shedding (2 engines, 16-request single-key hotspot, affinity + migrate)",
+        &["Config", "Wall (s)", "Agg tok/s", "Migrations"],
+    );
+    shedding.row(vec![
+        "1 engine (baseline)".into(),
+        fmt_f(base.wall_s, 2),
+        fmt_f(base.tokens as f64 / base.wall_s, 1),
+        "0".into(),
+    ]);
+    shedding.row(vec![
+        "2 engines + shed".into(),
+        fmt_f(shed.wall_s, 2),
+        fmt_f(shed.tokens as f64 / shed.wall_s, 1),
+        migrations.to_string(),
+    ]);
+    shedding.print();
+    assert!(
+        migrations > 0 && spilled > 0,
+        "the hotspot must trigger cross-engine migration (router {migrations}, \
+         accepted {spilled})"
+    );
+    assert_eq!(
+        base.streams, shed.streams,
+        "migrated sequences must be byte-identical to the unmigrated run"
+    );
+
+    maybe_write_json("ablation_pool", &[&scaling, &affinity, &shedding])?;
+    println!(
+        "engines 1/2/4 -> {:.1} / {:.1} / {:.1} tok/s; affinity encodes {} vs rr {}; \
+         {migrations} migrations byte-identical",
+        tput[0], tput[1], tput[2], encodes_by_route[1], encodes_by_route[0]
+    );
+    Ok(())
+}

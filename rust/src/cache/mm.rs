@@ -128,6 +128,17 @@ impl MmCache {
         self.emb.get(content).cloned()
     }
 
+    /// Read an embedding entry without touching hit/miss stats or
+    /// recency — used to recompose a full-KV-hit sequence's vision
+    /// rows (eviction rebuild material) without perturbing the Table-4
+    /// cache metrics or the LRU order.
+    pub fn peek_embeddings(&self, content: &ContentHash) -> Option<Rc<VisionEntry>> {
+        if !self.enable_emb {
+            return None;
+        }
+        self.emb.peek(content).cloned()
+    }
+
     pub fn put_embeddings(&mut self, content: ContentHash, entry: VisionEntry) -> Rc<VisionEntry> {
         let bytes = entry.embeds.len() * 4;
         let rc = Rc::new(entry);
@@ -155,12 +166,13 @@ impl MmCache {
     /// entry exceeding the whole budget is rejected by the LRU (the
     /// caller's resume/re-prefill fallbacks cover the loss).
     ///
-    /// NOTE: this budgets the *logical* KV footprint (`len` positions,
-    /// matching the paper's per-frame cache-size accounting).  On this
-    /// testbed the kv_one buffers are physically s_max-sized, so the
-    /// byte budget is an entry-count-by-length bound, not a device
-    /// allocation bound — trimming kv_one to `len` positions at insert
-    /// (ROADMAP follow-up) closes that gap.
+    /// NOTE: the charge is the *logical* KV footprint (`len` positions,
+    /// matching the paper's per-frame cache-size accounting).  The
+    /// scheduler's insert path (`Scheduler::mm_put_kv`) trims each
+    /// kv_one device-side to the smallest lowered grid covering `len`
+    /// before calling here, so on trim-capable artifacts the logical
+    /// charge also bounds the physical allocation (up to grid
+    /// rounding); untrimmed entries remain s_max-sized.
     pub fn put_kv(&mut self, key: ContentHash, kv: Rc<CachedKv>, emb_fp: ContentHash) {
         if self.enable_kv {
             let cost = self.kv_entry_cost(kv.len);

@@ -24,11 +24,23 @@ use xla::PjRtBuffer;
 pub struct CachedKv {
     pub kv_one: Rc<PjRtBuffer>,
     pub len: usize,
+    /// Physical positions present in `kv_one`: `None` = a full
+    /// s_max-sized arena row, `Some(s)` = device-side trimmed to the
+    /// first `s` positions at cache insert (the allocation the entry's
+    /// byte charge actually bounds).  Trimmed states must be
+    /// re-expanded (`ModelRuntime::untrim_kv`) before injection or
+    /// logits readback.
+    pub trim: Option<usize>,
 }
 
 impl CachedKv {
     pub fn new(kv_one: PjRtBuffer, len: usize) -> Rc<Self> {
-        Rc::new(CachedKv { kv_one: Rc::new(kv_one), len })
+        Rc::new(CachedKv { kv_one: Rc::new(kv_one), len, trim: None })
+    }
+
+    /// A state trimmed to `positions` physical positions.
+    pub fn new_trimmed(kv_one: PjRtBuffer, len: usize, positions: usize) -> Rc<Self> {
+        Rc::new(CachedKv { kv_one: Rc::new(kv_one), len, trim: Some(positions) })
     }
 }
 

@@ -1,0 +1,584 @@
+//! Multi-engine data-parallel serving: an [`EnginePool`] owns N
+//! independent [`Scheduler`] replicas — each with its own PJRT client,
+//! weights, decode arena, text-prefix cache, and mm cache on a
+//! dedicated thread — behind a router with pluggable placement
+//! policies:
+//!
+//! * **round-robin** (`rr`) — uniform spread, cache-oblivious.
+//! * **least-loaded** (`load`) — place on the replica with the fewest
+//!   queued + active + evicted requests, read from each engine's
+//!   lock-free [`EngineLoad`] (no stats round-trip on the hot path).
+//! * **cache-affinity** (`affinity`) — route by content identity: the
+//!   text-prefix hash for text prompts, the first image's decoded
+//!   content hash for multimodal ones.  Repeated prompts and images
+//!   land on the replica that already holds their KV or vision
+//!   embeddings, preserving the single-engine cache wins (the paper's
+//!   28x repeated-image speedup) across a data-parallel pool.  First
+//!   placement spreads deterministically by key; later requests follow
+//!   the sticky mapping (`affinity_hits`).
+//!
+//! The router also does **cross-engine work shedding**: a background
+//! rebalancer watches each replica's published backlog and, when one
+//! exceeds `migrate_threshold` while another replica sits idle, moves
+//! one unit of waiting work over the existing checkpoint format
+//! ([`MigrationUnit`]).  Only host state travels — PJRT buffers are
+//! engine-local — and the target rebuilds KV through the chunked
+//! catch-up / embed re-prefill paths, so a migrated sequence's greedy
+//! output is byte-identical to an unmigrated run (the same contract
+//! the single-engine evict/resume path guarantees).
+//!
+//! Every single-engine invariant (priority ordering, preemption,
+//! staged vision, chunked prefill) holds per-replica unchanged: the
+//! pool is a routing layer above schedulers, not a new scheduler.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::scheduler::{MigrationUnit, Scheduler, SchedulerHandle, StatsSnapshot};
+use crate::coordinator::{EngineConfig, Event, Priority, PromptInput};
+use crate::engine::sampler::SamplingParams;
+use crate::multimodal::ImageSource;
+use crate::substrate::hash::{ContentHash, Sha256};
+use crate::substrate::lru::LruCache;
+use crate::substrate::metrics::MetricsRegistry;
+
+/// Prompt bytes/tokens hashed into a text routing key: long enough to
+/// separate workloads, short enough that prompts sharing a system
+/// prefix (the prefix-cache win) map to the same replica.
+const AFFINITY_PREFIX_BYTES: usize = 256;
+const AFFINITY_PREFIX_TOKENS: usize = 64;
+/// Sticky-map capacity (entries, cost 1 each in the byte-budgeted LRU).
+const AFFINITY_MAP_ENTRIES: usize = 4096;
+
+/// Placement policy of the pool router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+    CacheAffinity,
+}
+
+impl RoutePolicy {
+    /// Parse the CLI/wire name.
+    pub fn from_name(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "rr" | "round-robin" => Some(RoutePolicy::RoundRobin),
+            "load" | "least-loaded" => Some(RoutePolicy::LeastLoaded),
+            "affinity" | "cache-affinity" => Some(RoutePolicy::CacheAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "rr",
+            RoutePolicy::LeastLoaded => "load",
+            RoutePolicy::CacheAffinity => "affinity",
+        }
+    }
+}
+
+/// Pool-level configuration (engine-level knobs stay in
+/// [`EngineConfig`], applied identically to every replica).
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Number of scheduler replicas (1 = plain single-engine serving).
+    pub engines: usize,
+    pub route: RoutePolicy,
+    /// Enable the background work-shedding rebalancer.
+    pub migrate: bool,
+    /// Backlog depth at which a replica starts shedding (hysteresis:
+    /// one-deep transient queues are cheaper to drain than to move).
+    pub migrate_threshold: usize,
+    /// Rebalancer poll interval.
+    pub rebalance_interval: Duration,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            engines: 1,
+            route: RoutePolicy::CacheAffinity,
+            migrate: true,
+            migrate_threshold: 2,
+            rebalance_interval: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Router-shared state: policy, sticky affinity map, and pool metrics.
+struct RouterState {
+    policy: RoutePolicy,
+    rr: AtomicUsize,
+    /// affinity key -> replica index (bounded sticky map).
+    affinity: Mutex<LruCache<ContentHash, usize>>,
+    /// image transport-bytes hash -> decoded content hash, so repeated
+    /// images are decoded for routing once, not per request (the
+    /// engine still decodes at admission; this only spares the
+    /// submission thread).
+    img_keys: Mutex<LruCache<ContentHash, ContentHash>>,
+    metrics: Mutex<MetricsRegistry>,
+}
+
+impl RouterState {
+    fn new(policy: RoutePolicy) -> Self {
+        RouterState {
+            policy,
+            rr: AtomicUsize::new(0),
+            affinity: Mutex::new(LruCache::new(AFFINITY_MAP_ENTRIES)),
+            img_keys: Mutex::new(LruCache::new(AFFINITY_MAP_ENTRIES)),
+            metrics: Mutex::new(MetricsRegistry::new()),
+        }
+    }
+}
+
+/// N scheduler replicas + the router + the rebalancer thread.
+pub struct EnginePool {
+    engines: Arc<Vec<SchedulerHandle>>,
+    router: Arc<RouterState>,
+    stop: Arc<AtomicBool>,
+    rebalancer: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EnginePool {
+    /// Spawn `pool.engines` scheduler replicas of `cfg`.  The request
+    /// id counter is shared so ids stay globally unique — a migrated
+    /// sequence can never collide with a native one on its target.
+    pub fn spawn(cfg: EngineConfig, pool: PoolConfig) -> Result<EnginePool> {
+        let n = pool.engines.max(1);
+        let next_id = Arc::new(AtomicU64::new(1));
+        // Overlap the N independent model loads (each replica owns its
+        // PJRT client and weights), then await every ready signal.
+        let mut pending = Vec::with_capacity(n);
+        for i in 0..n {
+            pending.push(Scheduler::spawn_indexed_deferred(cfg.clone(), i, next_id.clone())?);
+        }
+        let mut engines = Vec::with_capacity(n);
+        for (h, ready) in pending {
+            ready
+                .recv()
+                .map_err(|_| anyhow!("engine thread died during init"))?
+                .map_err(|e| anyhow!(e))?;
+            engines.push(h);
+        }
+        let engines = Arc::new(engines);
+        let router = Arc::new(RouterState::new(pool.route));
+        let stop = Arc::new(AtomicBool::new(false));
+        let rebalancer = if pool.migrate && n > 1 {
+            let e = engines.clone();
+            let r = router.clone();
+            let s = stop.clone();
+            let threshold = pool.migrate_threshold.max(1);
+            let interval = pool.rebalance_interval;
+            Some(
+                std::thread::Builder::new()
+                    .name("umserve-router".into())
+                    .spawn(move || rebalance_loop(&e, &r, &s, threshold, interval))?,
+            )
+        } else {
+            None
+        };
+        Ok(EnginePool { engines, router, stop, rebalancer })
+    }
+
+    /// Cloneable routing handle (the server's submission surface).
+    pub fn handle(&self) -> PoolHandle {
+        PoolHandle { engines: self.engines.clone(), router: self.router.clone() }
+    }
+
+    /// Direct access to the replica handles (tests, benches).
+    pub fn engines(&self) -> &[SchedulerHandle] {
+        &self.engines
+    }
+
+    /// Stop the rebalancer, then shut every replica down (joined).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.rebalancer.take() {
+            let _ = j.join();
+        }
+        for e in self.engines.iter() {
+            e.shutdown();
+        }
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Cross-engine rebalancer: when the busiest replica's backlog passes
+/// `threshold` and another replica has an idle slot with an empty
+/// queue, move one unit of waiting work.  Units are shed cheapest-
+/// first (raw intake, then unstarted staged jobs, then checkpointed
+/// evictees — see `Scheduler::shed_one`), so steady state migrates
+/// requests that lose nothing by moving.
+fn rebalance_loop(
+    engines: &[SchedulerHandle],
+    router: &RouterState,
+    stop: &AtomicBool,
+    threshold: usize,
+    interval: Duration,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(interval);
+        let Some((src, depth)) = engines
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (i, e.load().backlog()))
+            .max_by_key(|&(_, d)| d)
+        else {
+            continue;
+        };
+        if depth < threshold {
+            continue;
+        }
+        let Some(dst) = engines
+            .iter()
+            .enumerate()
+            .filter(|&(i, e)| i != src && e.load().has_headroom())
+            .min_by_key(|&(_, e)| e.load().total())
+            .map(|(i, _)| i)
+        else {
+            continue;
+        };
+        match engines[src].shed() {
+            Ok(Some(unit)) => match engines[dst].accept(unit) {
+                Ok(()) => {
+                    let mut m = router.metrics.lock().expect("router metrics lock");
+                    m.inc("migrations", 1);
+                }
+                // The destination died between headroom check and
+                // accept: hand the unit straight back to its source —
+                // it owns the client's event channel and must not be
+                // dropped.  If the source is gone too the pool is
+                // shutting down; fail the request visibly.
+                Err(unit) => {
+                    if let Err(u) = engines[src].accept(unit) {
+                        fail_unit(u);
+                        return;
+                    }
+                }
+            },
+            Ok(None) => {}
+            // A closed channel means the pool is shutting down.
+            Err(_) => return,
+        }
+    }
+}
+
+/// Last resort for a migration unit no engine would take: surface an
+/// error on the request's own event channel instead of silently
+/// dropping it.
+fn fail_unit(u: MigrationUnit) {
+    let (id, events) = match &u {
+        MigrationUnit::Fresh(r) => (r.id, r.events.clone()),
+        MigrationUnit::Queued(q) => (q.id, q.events.clone()),
+        MigrationUnit::Decoding(d) => (d.id, d.events.clone()),
+    };
+    let _ = events.send(Event::Error {
+        id,
+        message: "engine pool shut down while migrating request".into(),
+    });
+}
+
+/// The content identity a request's cache residence follows: the
+/// SHA-256 of the prompt's text/token prefix, or the first image's
+/// decoded content hash (transport-independent — the same identity the
+/// mm caches key on), so repeated images route to the replica holding
+/// their embeddings and KV.  None when no identity can be derived
+/// (e.g. an undecodable image) — the router then falls back to
+/// least-loaded placement.
+pub fn affinity_key(prompt: &PromptInput) -> Option<ContentHash> {
+    match prompt {
+        PromptInput::Text(t) => {
+            let b = t.as_bytes();
+            Some(ContentHash::of(&b[..b.len().min(AFFINITY_PREFIX_BYTES)]))
+        }
+        PromptInput::Tokens(toks) => {
+            let words: Vec<u32> = toks
+                .iter()
+                .take(AFFINITY_PREFIX_TOKENS)
+                .map(|&t| t as u32)
+                .collect();
+            let mut h = Sha256::new();
+            h.update_u32_le(&words);
+            Some(ContentHash(h.finalize()))
+        }
+        PromptInput::Multimodal { images, .. } => images
+            .first()
+            .and_then(|s| s.decode().ok())
+            .map(|d| d.content_hash()),
+    }
+}
+
+/// Deterministic first placement of an affinity key: same key, same
+/// replica — across pool instances, not just within one sticky map.
+fn spread(key: &ContentHash, n: usize) -> usize {
+    (u64::from_le_bytes(key.0[..8].try_into().expect("32-byte digest")) % n as u64) as usize
+}
+
+/// Cheap identity of an image's TRANSPORT encoding (path string, data
+/// URL, raw bytes) — the cache key that lets the router skip repeated
+/// decodes.  A path whose file contents changed can yield a stale
+/// routing hint (only placement is affected; the mm caches validate by
+/// true content hash at admission).
+fn transport_key(src: &ImageSource) -> ContentHash {
+    match src {
+        ImageSource::Path(p) => ContentHash::of(p.as_bytes()),
+        ImageSource::DataUrl(u) => ContentHash::of(u.as_bytes()),
+        ImageSource::Bytes(b) => ContentHash::of(b),
+    }
+}
+
+/// Pool-wide stats: one snapshot per replica plus router counters.
+#[derive(Debug, Clone)]
+pub struct PoolStatsSnapshot {
+    pub engines: Vec<StatsSnapshot>,
+    /// Router-level counters: `migrations`, `affinity_hits`,
+    /// `affinity_misses`.
+    pub router: MetricsRegistry,
+}
+
+impl PoolStatsSnapshot {
+    /// One aggregate registry for /metrics: replica registries summed
+    /// observation-wise, per-replica pressure surfaced as labeled
+    /// gauges (`pool_queue_depth{engine="k"}`, …), router counters
+    /// folded in.
+    pub fn aggregate(&self) -> MetricsRegistry {
+        let mut agg = MetricsRegistry::new();
+        for (i, s) in self.engines.iter().enumerate() {
+            agg.merge_sum(&s.metrics);
+            let l = i.to_string();
+            agg.set_gauge_labeled("pool_queue_depth", "engine", &l, s.queued as f64);
+            agg.set_gauge_labeled("pool_active", "engine", &l, s.active as f64);
+            agg.set_gauge_labeled("pool_evicted", "engine", &l, s.evicted as f64);
+        }
+        agg.merge_sum(&self.router);
+        agg.set_gauge("pool_engines", self.engines.len() as f64);
+        agg
+    }
+}
+
+/// Cloneable submission surface over the pool: routes each request to
+/// a replica per the configured policy.  A one-engine handle behaves
+/// exactly like a bare [`SchedulerHandle`].
+#[derive(Clone)]
+pub struct PoolHandle {
+    engines: Arc<Vec<SchedulerHandle>>,
+    router: Arc<RouterState>,
+}
+
+impl From<SchedulerHandle> for PoolHandle {
+    /// Wrap a single spawned scheduler as a trivial pool (tests and
+    /// embedders that managed the spawn themselves).
+    fn from(h: SchedulerHandle) -> Self {
+        PoolHandle {
+            engines: Arc::new(vec![h]),
+            router: Arc::new(RouterState::new(RoutePolicy::RoundRobin)),
+        }
+    }
+}
+
+impl PoolHandle {
+    pub fn engines(&self) -> &[SchedulerHandle] {
+        &self.engines
+    }
+
+    /// Route and submit at the engines' default priority.
+    pub fn generate(
+        &self,
+        prompt: PromptInput,
+        params: SamplingParams,
+    ) -> Result<(u64, Receiver<Event>)> {
+        let idx = self.select(&prompt);
+        self.engines[idx].generate(prompt, params)
+    }
+
+    /// Route and submit with a caller-provided event channel and
+    /// scheduling class (server streaming).
+    pub fn generate_with(
+        &self,
+        prompt: PromptInput,
+        params: SamplingParams,
+        priority: Priority,
+        events: Sender<Event>,
+    ) -> Result<u64> {
+        let idx = self.select(&prompt);
+        self.engines[idx].generate_with(prompt, params, priority, events)
+    }
+
+    /// Pick a replica for `prompt` per the routing policy.
+    fn select(&self, prompt: &PromptInput) -> usize {
+        let idx = self.select_inner(prompt);
+        // Optimistic pressure bump: the replica's own publish
+        // overwrites `queued` within a tick, but without this a burst
+        // routed before any engine thread runs would read every load
+        // as zero and herd onto one replica (least-loaded and the
+        // rebalancer both key off these).
+        self.engines[idx].load().queued.fetch_add(1, Ordering::Relaxed);
+        idx
+    }
+
+    fn select_inner(&self, prompt: &PromptInput) -> usize {
+        let n = self.engines.len();
+        if n <= 1 {
+            return 0;
+        }
+        match self.router.policy {
+            RoutePolicy::RoundRobin => self.router.rr.fetch_add(1, Ordering::Relaxed) % n,
+            RoutePolicy::LeastLoaded => self.least_loaded(),
+            RoutePolicy::CacheAffinity => match self.affinity_key_cached(prompt) {
+                Some(key) => {
+                    let mut map = self.router.affinity.lock().expect("affinity lock");
+                    if let Some(&idx) = map.get(&key) {
+                        drop(map);
+                        self.router
+                            .metrics
+                            .lock()
+                            .expect("router metrics lock")
+                            .inc("affinity_hits", 1);
+                        idx
+                    } else {
+                        let idx = spread(&key, n);
+                        map.insert(key, idx, 1);
+                        drop(map);
+                        self.router
+                            .metrics
+                            .lock()
+                            .expect("router metrics lock")
+                            .inc("affinity_misses", 1);
+                        idx
+                    }
+                }
+                None => self.least_loaded(),
+            },
+        }
+    }
+
+    fn least_loaded(&self) -> usize {
+        self.engines
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.load().total())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// [`affinity_key`] with the image decode memoized by transport
+    /// bytes, so repeated images cost one hash — not a pixel decode —
+    /// per request on the submission thread.
+    fn affinity_key_cached(&self, prompt: &PromptInput) -> Option<ContentHash> {
+        let PromptInput::Multimodal { images, .. } = prompt else {
+            return affinity_key(prompt);
+        };
+        let src = images.first()?;
+        let tkey = transport_key(src);
+        {
+            let mut cache = self.router.img_keys.lock().expect("img key lock");
+            if let Some(&k) = cache.get(&tkey) {
+                return Some(k);
+            }
+        }
+        let k = src.decode().ok()?.content_hash();
+        let mut cache = self.router.img_keys.lock().expect("img key lock");
+        cache.insert(tkey, k, 1);
+        Some(k)
+    }
+
+    /// Snapshot every replica plus the router counters.
+    pub fn stats(&self) -> Result<PoolStatsSnapshot> {
+        let mut engines = Vec::with_capacity(self.engines.len());
+        for e in self.engines.iter() {
+            engines.push(e.stats()?);
+        }
+        let router = self
+            .router
+            .metrics
+            .lock()
+            .map_err(|_| anyhow!("router metrics lock poisoned"))?
+            .clone();
+        Ok(PoolStatsSnapshot { engines, router })
+    }
+
+    /// Shut every replica down (joined).  Prefer
+    /// [`EnginePool::shutdown`] when the pool object is still owned —
+    /// it also stops the rebalancer.
+    pub fn shutdown(&self) {
+        for e in self.engines.iter() {
+            e.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multimodal::image::{generate_image, ImageSource};
+
+    #[test]
+    fn route_policy_names_round_trip() {
+        for (name, p) in [
+            ("rr", RoutePolicy::RoundRobin),
+            ("load", RoutePolicy::LeastLoaded),
+            ("affinity", RoutePolicy::CacheAffinity),
+        ] {
+            assert_eq!(RoutePolicy::from_name(name), Some(p));
+            assert_eq!(p.as_str(), name);
+        }
+        assert_eq!(RoutePolicy::from_name("round-robin"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::from_name("banana"), None);
+    }
+
+    #[test]
+    fn affinity_key_is_transport_independent_for_images() {
+        let img = generate_image(42, 64);
+        let raw = ImageSource::Bytes(img.encode_raw());
+        let url = ImageSource::DataUrl(ImageSource::to_data_url(&img));
+        let k_raw = affinity_key(&PromptInput::Multimodal {
+            images: vec![raw],
+            text: "describe".into(),
+        });
+        let k_url = affinity_key(&PromptInput::Multimodal {
+            images: vec![url],
+            text: "completely different text".into(),
+        });
+        assert!(k_raw.is_some());
+        assert_eq!(k_raw, k_url, "same pixels must route identically");
+        let other = affinity_key(&PromptInput::Multimodal {
+            images: vec![ImageSource::Bytes(generate_image(43, 64).encode_raw())],
+            text: "describe".into(),
+        });
+        assert_ne!(k_raw, other, "different pixels must produce different keys");
+    }
+
+    #[test]
+    fn affinity_key_text_uses_prefix() {
+        let sys = "x".repeat(AFFINITY_PREFIX_BYTES);
+        let a = affinity_key(&PromptInput::Text(format!("{sys} tail one")));
+        let b = affinity_key(&PromptInput::Text(format!("{sys} other tail")));
+        assert_eq!(a, b, "shared long prefix maps to one replica");
+        let c = affinity_key(&PromptInput::Text("short".into()));
+        let d = affinity_key(&PromptInput::Text("short".into()));
+        assert_eq!(c, d);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn spread_is_deterministic_and_in_range() {
+        for seed in 0..32u8 {
+            let k = ContentHash::of(&[seed]);
+            for n in 1..=8 {
+                let e = spread(&k, n);
+                assert!(e < n);
+                assert_eq!(e, spread(&k, n), "same key, same replica");
+            }
+        }
+    }
+}

@@ -64,14 +64,14 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::cache::mm::{emb_fingerprint, mm_prompt_hash, MmCache, VisionEntry};
+use crate::cache::mm::{emb_fingerprint, mm_prompt_hash, MmCache, MmKvEntry, VisionEntry};
 use crate::cache::text_prefix::TextPrefixCache;
 use crate::cache::{kv_one_bytes, kv_token_bytes, CachedKv};
 use crate::engine::sampler::{sample, Rng, SamplingParams};
@@ -85,20 +85,125 @@ use crate::substrate::metrics::MetricsRegistry;
 
 use super::{EngineConfig, Event, FinishReason, GenRequest, Priority, PromptInput, Timing, Usage};
 
-/// Commands accepted by a spawned scheduler thread.
+/// Commands accepted by a spawned scheduler thread.  Every variant is
+/// drained from the channel each loop iteration — a request flood can
+/// back up *admission*, never the control plane (stats snapshots and
+/// the pool router's shed/accept traffic must flow exactly when the
+/// engine is overloaded).
 pub enum Command {
     Gen(GenRequest),
     /// Snapshot metrics + cache stats.
     Stats(Sender<StatsSnapshot>),
+    /// Hand one migratable unit of waiting work to the pool router
+    /// (None when nothing can be shed safely).
+    Shed(Sender<Option<MigrationUnit>>),
+    /// Integrate a unit shed by another engine of the pool.
+    Accept(Box<MigrationUnit>),
     Shutdown,
+}
+
+/// Lock-free load summary a scheduler publishes every tick; the
+/// cluster router reads it for least-loaded placement and shed
+/// decisions without a Stats round-trip through the engine thread.
+#[derive(Debug, Default)]
+pub struct EngineLoad {
+    /// Requests not yet holding a decode slot: raw intake + staged
+    /// prefills + mm requests waiting on vision encodes.
+    pub queued: AtomicUsize,
+    /// Sequences currently decoding.
+    pub active: AtomicUsize,
+    /// Checkpointed sequences waiting to resume.
+    pub evicted: AtomicUsize,
+    /// Decode-slot capacity (stored once at engine start).
+    pub capacity: AtomicUsize,
+}
+
+impl EngineLoad {
+    /// Work waiting for a decode slot — the shed / spill signal.
+    pub fn backlog(&self) -> usize {
+        self.queued.load(Ordering::Relaxed) + self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Total requests in the engine (the least-loaded placement key).
+    pub fn total(&self) -> usize {
+        self.backlog() + self.active.load(Ordering::Relaxed)
+    }
+
+    /// Whether the engine has an idle decode slot and an empty queue
+    /// (a migration target).
+    pub fn has_headroom(&self) -> bool {
+        self.backlog() == 0
+            && self.active.load(Ordering::Relaxed) < self.capacity.load(Ordering::Relaxed)
+    }
+}
+
+/// Host-side identity of a multimodal sequence inside a migration
+/// unit: the cache key material plus the pooled composed vision rows
+/// the target engine needs to rebuild KV through the chunked embed
+/// re-prefill path — no pixels travel and no vision re-encode runs.
+pub struct MmMigration {
+    pub hashes: Vec<ContentHash>,
+    pub emb_fp: ContentHash,
+    /// Pooled composed [n_vis_rows, d_model] rows (host floats).
+    pub vis_rows: Vec<f32>,
+    pub n_vis_rows: usize,
+}
+
+/// A staged-but-unstarted request handed to another engine.  Only host
+/// state travels; the target re-resolves against its OWN caches
+/// (affinity placement decides whether that lookup hits).
+pub struct MigratedQueued {
+    pub id: u64,
+    pub events: Sender<Event>,
+    pub params: SamplingParams,
+    pub priority: Priority,
+    /// Token-id view of the full prompt (text path: the feed; mm path:
+    /// the text suffix behind the travelled vision rows).
+    pub tokens: Vec<i32>,
+    pub mm: Option<MmMigration>,
+    pub timing: Timing,
+    pub enqueued_at: Instant,
+}
+
+/// A mid-decode sequence evicted on its source engine.  The sampler
+/// RNG, stream decoder, and token view travel, so after the target
+/// rebuilds KV (chunked catch-up for text, embed re-prefill for mm)
+/// the token stream continues byte-identically with greedy sampling —
+/// the same contract the single-engine evict/resume path guarantees.
+pub struct MigratedSeq {
+    pub id: u64,
+    pub events: Sender<Event>,
+    pub params: SamplingParams,
+    pub priority: Priority,
+    pub rng: Rng,
+    pub decoder: StreamDecoder,
+    /// prompt ++ every token fed into KV so far (the rebuild recipe).
+    pub all_tokens: Vec<i32>,
+    pub prompt_len: usize,
+    pub emitted: usize,
+    pub fed: usize,
+    pub next_token: i32,
+    pub mm: Option<MmMigration>,
+    pub timing: Timing,
+    pub enqueued_at: Instant,
+}
+
+/// One unit of cross-engine work migration, ordered by sunk cost:
+/// `Fresh` carries an untouched request, `Queued` a staged prompt with
+/// no KV built yet, `Decoding` a checkpointed mid-generation sequence.
+pub enum MigrationUnit {
+    Fresh(GenRequest),
+    Queued(MigratedQueued),
+    Decoding(MigratedSeq),
 }
 
 #[derive(Debug, Clone)]
 pub struct StatsSnapshot {
     pub metrics: MetricsRegistry,
     pub active: usize,
-    /// Staged prefills waiting in the admission queue (including
-    /// multimodal requests still waiting on staged vision encodes).
+    /// Requests waiting to enter the decode batch: raw intake plus
+    /// staged prefills (including multimodal requests still waiting on
+    /// staged vision encodes).
     pub queued: usize,
     /// Per-image vision encodes waiting in the staging queue.
     pub vision_queued: usize,
@@ -149,9 +254,11 @@ struct ActiveReq {
 struct MmSeq {
     hashes: Vec<ContentHash>,
     emb_fp: ContentHash,
-    /// Pooled composed [n_vis_rows, d_model] vision embeddings (None
-    /// for full-KV-hit admissions, which never composed embeds — such
-    /// sequences are not evictable).
+    /// Pooled composed [n_vis_rows, d_model] vision embeddings.
+    /// Embed-prefill sequences retain the rows they fed; full-KV-hit
+    /// admissions recompose them lazily from the embedding cache
+    /// (`recompose_vis_rows`).  None — when recomposition failed — the
+    /// sequence is not evictable and not migratable.
     vis_rows: Option<Rc<Vec<f32>>>,
     n_vis_rows: usize,
 }
@@ -318,6 +425,11 @@ pub struct Scheduler {
     mm_cache: MmCache,
     cfg: EngineConfig,
     active: HashMap<u64, ActiveReq>,
+    /// Raw accepted-but-unresolved requests: the command loop drains
+    /// the channel unconditionally (control traffic must not starve
+    /// behind a flood) and `admit_from_intake` applies the
+    /// capacity-bounded admission gate.
+    intake: VecDeque<GenRequest>,
     /// Admission queue of staged prefills, kept ordered by
     /// (effective class, arrival) — strict FIFO when `priority_sched`
     /// is off.  The front job gets the whole chunk budget.
@@ -335,6 +447,9 @@ pub struct Scheduler {
     chunk_tokens: usize,
     /// End of the previous decode step, for the decode-stall histogram.
     last_decode: Option<Instant>,
+    /// Shared load summary (replaced by `spawn_indexed` with the
+    /// pool-visible Arc; updated every tick).
+    pub load: Arc<EngineLoad>,
     pub metrics: MetricsRegistry,
 }
 
@@ -384,6 +499,7 @@ impl Scheduler {
             mm_cache,
             cfg: cfg.clone(),
             active: HashMap::new(),
+            intake: VecDeque::new(),
             pending: VecDeque::new(),
             vis_pending: VecDeque::new(),
             mm_waiting: Vec::new(),
@@ -391,22 +507,62 @@ impl Scheduler {
             tick_count: 0,
             chunk_tokens,
             last_decode: None,
+            load: Arc::new(EngineLoad::default()),
             metrics: MetricsRegistry::new(),
         };
         s.mm_cache.enable_emb = cfg.mm_emb_cache_bytes > 0;
         s.mm_cache.enable_kv = cfg.mm_kv_cache_bytes > 0;
+        s.load
+            .capacity
+            .store(s.engine.max_capacity(), Ordering::Relaxed);
         Ok(s)
     }
 
     /// Spawn on a dedicated thread; returns a cloneable handle.
     pub fn spawn(cfg: EngineConfig) -> Result<SchedulerHandle> {
+        Self::spawn_indexed(cfg, 0, Arc::new(AtomicU64::new(1)))
+    }
+
+    /// Spawn as replica `index` of an engine pool.  The id counter is
+    /// shared across the pool — request ids must stay globally unique
+    /// so a migrated sequence can never collide with a native one on
+    /// its target engine — and the returned handle exposes the
+    /// engine's lock-free [`EngineLoad`] for router placement.
+    pub fn spawn_indexed(
+        cfg: EngineConfig,
+        index: usize,
+        next_id: Arc<AtomicU64>,
+    ) -> Result<SchedulerHandle> {
+        let (h, ready) = Self::spawn_indexed_deferred(cfg, index, next_id)?;
+        ready
+            .recv()
+            .map_err(|_| anyhow!("scheduler thread died during init"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok(h)
+    }
+
+    /// [`Self::spawn_indexed`] without waiting for the model load: the
+    /// returned channel reports init success/failure.  `EnginePool`
+    /// uses this to overlap N independent replica loads instead of
+    /// paying them serially at startup.
+    pub fn spawn_indexed_deferred(
+        cfg: EngineConfig,
+        index: usize,
+        next_id: Arc<AtomicU64>,
+    ) -> Result<(SchedulerHandle, Receiver<Result<(), String>>)> {
         let default_priority = cfg.default_priority;
+        let load = Arc::new(EngineLoad::default());
+        let thread_load = load.clone();
         let (tx, rx) = channel::<Command>();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let join = std::thread::Builder::new()
-            .name("umserve-scheduler".into())
+            .name(format!("umserve-engine-{index}"))
             .spawn(move || match Scheduler::new(cfg) {
                 Ok(mut s) => {
+                    s.load = thread_load;
+                    s.load
+                        .capacity
+                        .store(s.engine.max_capacity(), Ordering::Relaxed);
                     let _ = ready_tx.send(Ok(()));
                     s.run(rx);
                 }
@@ -414,16 +570,14 @@ impl Scheduler {
                     let _ = ready_tx.send(Err(format!("{e:#}")));
                 }
             })?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("scheduler thread died during init"))?
-            .map_err(|e| anyhow!(e))?;
-        Ok(SchedulerHandle {
+        let handle = SchedulerHandle {
             tx,
-            next_id: Arc::new(AtomicU64::new(1)),
+            next_id,
             default_priority,
+            load,
             join: Some(Arc::new(std::sync::Mutex::new(Some(join)))),
-        })
+        };
+        Ok((handle, ready_rx))
     }
 
     // ------------------------------------------------------------ loop
@@ -432,58 +586,92 @@ impl Scheduler {
     pub fn run(&mut self, rx: Receiver<Command>) {
         loop {
             // Blocking wait only when idle; otherwise drain non-blocking.
-            if self.active.is_empty()
-                && self.pending.is_empty()
-                && self.evicted.is_empty()
-                && self.mm_waiting.is_empty()
-                && self.vis_pending.is_empty()
-            {
+            if self.is_idle() {
                 match rx.recv_timeout(Duration::from_millis(200)) {
-                    Ok(Command::Gen(r)) => self.admit(r),
-                    Ok(Command::Stats(tx)) => {
-                        let _ = tx.send(self.snapshot());
+                    Ok(c) => {
+                        if self.handle_command(c) {
+                            return;
+                        }
                     }
-                    Ok(Command::Shutdown) => return,
                     Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
                     Err(_) => return,
                 }
             }
-            // Token-boundary admission: stage requests up to capacity
-            // (coalesced followers count — they all join the batch when
-            // their primary finalizes).  With the priority scheduler on,
-            // intake continues past decode capacity (bounded headroom)
-            // so an interactive arrival is visible for preemption even
-            // when every slot is busy with batch work.
-            let headroom = if self.chunk_tokens > 0 && self.cfg.priority_sched {
-                self.engine.max_capacity()
-            } else {
-                0
-            };
-            while self.active.len() + self.staged_requests() + self.evicted.len()
-                < self.engine.max_capacity() + headroom
-            {
+            // Drain EVERY waiting command: generation requests land in
+            // the unbounded intake queue (admission below applies the
+            // capacity gate), so a flood can back up admission but
+            // never the control plane — stats snapshots and the pool
+            // router's shed/accept traffic flow exactly when the
+            // engine is busiest.
+            loop {
                 match rx.try_recv() {
-                    Ok(Command::Gen(r)) => self.admit(r),
-                    Ok(Command::Stats(tx)) => {
-                        let _ = tx.send(self.snapshot());
+                    Ok(c) => {
+                        if self.handle_command(c) {
+                            return;
+                        }
                     }
-                    Ok(Command::Shutdown) => return,
                     Err(_) => break,
                 }
             }
+            self.admit_from_intake();
             self.tick();
+        }
+    }
+
+    fn is_idle(&self) -> bool {
+        self.active.is_empty()
+            && self.intake.is_empty()
+            && self.pending.is_empty()
+            && self.evicted.is_empty()
+            && self.mm_waiting.is_empty()
+            && self.vis_pending.is_empty()
+    }
+
+    /// Dispatch one channel command; returns true on Shutdown.
+    fn handle_command(&mut self, c: Command) -> bool {
+        match c {
+            Command::Gen(r) => {
+                self.intake.push_back(r);
+                self.publish_load();
+            }
+            Command::Stats(tx) => {
+                let _ = tx.send(self.snapshot());
+            }
+            Command::Shed(tx) => {
+                let _ = tx.send(self.shed_one());
+            }
+            Command::Accept(u) => self.accept_migrated(*u),
+            Command::Shutdown => return true,
+        }
+        false
+    }
+
+    /// Token-boundary admission: move intake into staging up to
+    /// capacity (coalesced followers count — they all join the batch
+    /// when their primary finalizes).  With the priority scheduler on,
+    /// staging continues past decode capacity (bounded headroom) so an
+    /// interactive arrival is visible for preemption even when every
+    /// slot is busy with batch work.
+    fn admit_from_intake(&mut self) {
+        let headroom = if self.chunk_tokens > 0 && self.cfg.priority_sched {
+            self.engine.max_capacity()
+        } else {
+            0
+        };
+        while !self.intake.is_empty()
+            && self.active.len() + self.staged_requests() + self.evicted.len()
+                < self.engine.max_capacity() + headroom
+        {
+            let r = self.intake.pop_front().expect("checked non-empty");
+            self.admit(r);
         }
     }
 
     /// Drive the loop until every staged, active and evicted request
     /// finishes (bench mode).
     pub fn run_until_idle(&mut self) {
-        while !self.active.is_empty()
-            || !self.pending.is_empty()
-            || !self.evicted.is_empty()
-            || !self.mm_waiting.is_empty()
-            || !self.vis_pending.is_empty()
-        {
+        while !self.is_idle() {
+            self.admit_from_intake();
             self.tick();
         }
     }
@@ -500,7 +688,8 @@ impl Scheduler {
 
     /// Staged jobs not yet admitted to the decode batch: prefills in
     /// the admission queue plus multimodal requests still waiting on
-    /// staged vision encodes.
+    /// staged vision encodes (raw intake is counted separately — see
+    /// [`StatsSnapshot::queued`]).
     pub fn queued_count(&self) -> usize {
         self.pending.len() + self.mm_waiting.len()
     }
@@ -522,6 +711,57 @@ impl Scheduler {
         &mut self.mm_cache
     }
 
+    /// Insert a KV state into the mm cache, first trimming it
+    /// device-side to the smallest lowered grid covering its length
+    /// (`trim_kv_s{S}`).  The cache's length-proportional byte charge
+    /// then bounds the real device allocation, not just the logical
+    /// footprint (ROADMAP follow-up from PR 3).  Pre-trim artifacts,
+    /// text-only models, and sequences longer than the largest grid
+    /// fall back to storing the full s_max buffer.
+    fn mm_put_kv(&mut self, key: ContentHash, kv: Rc<CachedKv>, emb_fp: ContentHash) {
+        if !self.mm_cache.enable_kv {
+            return;
+        }
+        if kv.trim.is_none() {
+            if let Some(s) = self.engine.rt.info.trim_bucket_for(kv.len) {
+                if s < self.engine.rt.info.s_max && self.engine.rt.has_trim_kv(s) {
+                    if let Ok(t) = self.engine.rt.trim_kv(&kv.kv_one, s) {
+                        self.metrics.inc("mm_kv_trims", 1);
+                        self.mm_cache
+                            .put_kv(key, CachedKv::new_trimmed(t, kv.len, s), emb_fp);
+                        return;
+                    }
+                    // Trim failure falls through to the untrimmed insert.
+                }
+            }
+        }
+        self.mm_cache.put_kv(key, kv, emb_fp);
+    }
+
+    /// Look up an mm KV entry, re-expanding trimmed states to full
+    /// arena rows (`untrim_kv_s{S}`) so every consumer — inject,
+    /// logits readback, clone — sees the shape it expects.  Positions
+    /// past the trim point are zero-filled; attention masks by
+    /// sequence length, so resumed decode is token-identical.
+    fn mm_get_kv(&mut self, key: &ContentHash) -> Option<MmKvEntry> {
+        let hit = self.mm_cache.get_kv(key)?;
+        match hit.kv.trim {
+            None => Some(hit),
+            Some(s) => match self.engine.rt.untrim_kv(&hit.kv.kv_one, s) {
+                Ok(full) => Some(MmKvEntry {
+                    kv: CachedKv::new(full, hit.kv.len),
+                    emb_fp: hit.emb_fp,
+                }),
+                Err(_) => {
+                    // Cannot rematerialize (mismatched artifacts):
+                    // treat as a miss and drop the unusable entry.
+                    self.mm_cache.remove_kv(key);
+                    None
+                }
+            },
+        }
+    }
+
     /// Decode slots left before the largest batch bucket is exhausted.
     fn free_slots(&self) -> usize {
         self.engine.max_capacity().saturating_sub(self.active.len())
@@ -540,7 +780,7 @@ impl Scheduler {
         StatsSnapshot {
             metrics: self.metrics.clone(),
             active: self.active.len(),
-            queued: self.staged_requests(),
+            queued: self.intake.len() + self.staged_requests(),
             vision_queued: self.vis_pending.len(),
             evicted: self.evicted.len(),
             bucket: self.engine.bucket(),
@@ -566,6 +806,16 @@ impl Scheduler {
         self.advance_visions();
         self.advance_prefills();
         self.step_once();
+        self.publish_load();
+    }
+
+    /// Refresh the lock-free load summary the cluster router reads.
+    fn publish_load(&self) {
+        self.load
+            .queued
+            .store(self.intake.len() + self.staged_requests(), Ordering::Relaxed);
+        self.load.active.store(self.active.len(), Ordering::Relaxed);
+        self.load.evicted.store(self.evicted.len(), Ordering::Relaxed);
     }
 
     // ------------------------------------------------------- admission
@@ -926,28 +1176,42 @@ impl Scheduler {
     fn evict_one_below(&mut self, class: Priority) -> bool {
         // Eligibility: a victim's resume must be guaranteed.  Text
         // sequences can always re-prefill from their token view (the
-        // checkpoint needs a text cache to land in); mm sequences
-        // qualify when they retain their composed vision rows AND the
-        // artifacts carry the chunked-embeds entries the rebuild needs
-        // (a resumed sequence may have outgrown the one-shot embed
-        // buckets, so on pre-chunking artifacts mm sequences stay
-        // un-evictable) — full-KV-hit admissions never composed embeds
-        // and are left alone.  Cost: the tokens to rebuild if the
-        // checkpoint is dropped, i.e. the full KV length (visual rows
-        // included); ties prefer the most recently enqueued (least
-        // sunk decode).
+        // checkpoint needs a text cache to land in); mm sequences need
+        // the chunked-embeds entries the rebuild uses (a resumed
+        // sequence may have outgrown the one-shot embed buckets, so on
+        // pre-chunking artifacts mm sequences stay un-evictable) plus
+        // their composed vision rows — embed-prefill sequences retain
+        // theirs, and full-KV-hit admissions get them recomposed
+        // lazily from the embedding cache the moment they are actually
+        // selected (`try_recompose_active`); a failed recompose skips
+        // to the next-cheapest candidate.  Cost: the tokens to rebuild
+        // if the checkpoint is dropped, i.e. the full KV length
+        // (visual rows included); ties prefer the most recently
+        // enqueued (least sunk decode).
         let mm_rebuildable = self.engine.rt.has_chunk_prefill_embeds();
-        let victim = self
+        let mut cands: Vec<(usize, std::cmp::Reverse<Instant>, u64)> = self
             .active
             .iter()
             .filter(|(_, a)| a.priority == Priority::Batch && a.priority.rank() > class.rank())
             .filter(|(_, a)| match &a.mm {
                 None => self.cfg.text_cache_bytes > 0,
-                Some(m) => m.vis_rows.is_some() && mm_rebuildable,
+                Some(_) => mm_rebuildable,
             })
             .map(|(&id, a)| (a.prompt_len + a.fed, std::cmp::Reverse(a.enqueued_at), id))
-            .min()
-            .map(|(_, _, id)| id);
+            .collect();
+        cands.sort_unstable();
+        let mut victim = None;
+        for (_, _, id) in cands {
+            let needs_rows = matches!(
+                self.active.get(&id).and_then(|a| a.mm.as_ref()),
+                Some(m) if m.vis_rows.is_none()
+            );
+            if needs_rows && !self.try_recompose_active(id) {
+                continue;
+            }
+            victim = Some(id);
+            break;
+        }
         let Some(id) = victim else { return false };
         let Some(mut a) = self.active.remove(&id) else { return false };
         match self.engine.remove(id, true) {
@@ -958,8 +1222,8 @@ impl Scheduler {
                 match &a.mm {
                     Some(m) => {
                         let key = mm_prompt_hash(&m.hashes, &a.all_tokens);
-                        self.mm_cache
-                            .put_kv(key, CachedKv::new(kv_one, kv_len), m.emb_fp);
+                        let fp = m.emb_fp;
+                        self.mm_put_kv(key, CachedKv::new(kv_one, kv_len), fp);
                     }
                     None => self
                         .text_cache
@@ -1140,7 +1404,7 @@ impl Scheduler {
     fn resume_evicted_mm(&mut self, id: u64, req: ActiveReq) -> Result<()> {
         let m = req.mm.clone().expect("mm resume requires mm identity");
         let key = mm_prompt_hash(&m.hashes, &req.all_tokens);
-        let kv: Rc<CachedKv> = match self.mm_cache.get_kv(&key) {
+        let kv: Rc<CachedKv> = match self.mm_get_kv(&key) {
             Some(hit) => hit.kv,
             None => {
                 let rows = m
@@ -1177,46 +1441,269 @@ impl Scheduler {
         Ok(())
     }
 
-    /// Build a kv_one over a full composed embedding sequence: first
-    /// segment through the one-shot embeds prefill, remainder through
-    /// the chunk entries — identical mechanics to the staged
-    /// `Feed::Embeds` path, run synchronously (mm eviction rebuilds).
+    /// Build a kv_one over a full composed embedding sequence by
+    /// looping [`Self::feed_embeds_segment`] to completion — the
+    /// synchronous form of the staged `Feed::Embeds` path, used by the
+    /// mm eviction rebuild.  Because both paths run the SAME segment
+    /// feeder, the build/rebuild byte-compat contract (identical
+    /// greedy continuation from a rebuilt KV) cannot drift.
     fn prefill_embeds_all(&mut self, embeds: &[f32], total: usize) -> Result<xla::PjRtBuffer> {
-        let d = self.engine.rt.info.d_model;
-        let can_chunk = self.engine.rt.has_chunk_prefill_embeds();
-        let max_embed = *self
-            .engine
-            .rt
-            .info
-            .embed_prefill_buckets
-            .last()
-            .ok_or_else(|| anyhow!("no embed buckets for mm prefill"))?;
-        // Prefer the configured chunk size; a sequence that has outgrown
-        // the embed buckets (generated tokens past the original prompt)
-        // must chunk its remainder regardless of configuration.
-        let first = if can_chunk && self.chunk_tokens > 0 {
-            total.min(self.chunk_tokens)
-        } else {
-            total.min(max_embed)
-        };
-        let mut kv = self.engine.rt.prefill_embeds(&embeds[..first * d], first)?;
-        self.engine.stats.prefills += 1;
-        let mut fed = first;
-        while fed < total {
-            let max = self
-                .engine
-                .rt
-                .info
-                .max_chunk_bucket()
-                .ok_or_else(|| anyhow!("no chunk buckets for staged embeds"))?;
-            let n = (total - fed)
-                .min(if self.chunk_tokens > 0 { self.chunk_tokens } else { max })
-                .min(max);
-            let piece = embeds[fed * d..(fed + n) * d].to_vec();
-            kv = self.engine.feed_chunk_embeds(kv, fed, &piece, n)?;
-            fed += n;
+        let mut kv: Option<xla::PjRtBuffer> = None;
+        let mut built = 0usize;
+        while built < total {
+            let (out, n) = self.feed_embeds_segment(kv.take(), embeds, built, total - built)?;
+            kv = Some(out);
+            built += n;
         }
-        Ok(kv)
+        kv.ok_or_else(|| anyhow!("empty embed sequence"))
+    }
+
+    /// Feed the next segment of a composed [vision ++ text] embedding
+    /// sequence into a kv_one under construction, returning the new
+    /// state and the rows consumed.  The FIRST segment of a fresh
+    /// sequence goes through the one-shot embeds prefill (identical
+    /// arithmetic to the legacy inline path); later segments extend it
+    /// via `prefill_chunk_embeds_c{C}`, never exceeding the largest
+    /// lowered chunk bucket.  Shared by the staged `Feed::Embeds`
+    /// branch of [`Self::advance_job`] (one call per scheduler tick)
+    /// and the synchronous [`Self::prefill_embeds_all`] rebuild, so
+    /// build and rebuild stay mechanically identical.
+    fn feed_embeds_segment(
+        &mut self,
+        kv_one: Option<xla::PjRtBuffer>,
+        rows: &[f32],
+        built: usize,
+        remaining: usize,
+    ) -> Result<(xla::PjRtBuffer, usize)> {
+        debug_assert!(remaining > 0);
+        let d = self.engine.rt.info.d_model;
+        match kv_one {
+            None => {
+                debug_assert_eq!(built, 0);
+                let can_chunk = self.engine.rt.has_chunk_prefill_embeds();
+                let max_embed = *self
+                    .engine
+                    .rt
+                    .info
+                    .embed_prefill_buckets
+                    .last()
+                    .ok_or_else(|| anyhow!("no embed buckets for mm prefill"))?;
+                // Prefer the configured chunk size; with staging off
+                // (or no chunk-embeds entries) take the largest
+                // one-shot bucket — a longer remainder must then chunk
+                // regardless of configuration (evict rebuilds of
+                // sequences that outgrew the embed buckets).
+                let n = if can_chunk && self.chunk_tokens > 0 {
+                    remaining.min(self.chunk_tokens)
+                } else {
+                    remaining.min(max_embed)
+                };
+                let kv = self.engine.rt.prefill_embeds(&rows[..n * d], n)?;
+                self.engine.stats.prefills += 1;
+                Ok((kv, n))
+            }
+            Some(kv) => {
+                let max = self
+                    .engine
+                    .rt
+                    .info
+                    .max_chunk_bucket()
+                    .ok_or_else(|| anyhow!("no chunk buckets for staged embeds"))?;
+                let n = remaining
+                    .min(if self.chunk_tokens > 0 { self.chunk_tokens } else { max })
+                    .min(max);
+                let piece = rows[built * d..(built + n) * d].to_vec();
+                let out = self.engine.feed_chunk_embeds(kv, built, &piece, n)?;
+                self.metrics.inc("prefill_chunks", 1);
+                Ok((out, n))
+            }
+        }
+    }
+
+    // --------------------------------------- cross-engine migration
+
+    /// Hand one unit of waiting work to the pool router.  Preference
+    /// order is by sunk cost: raw intake (no admission work done yet)
+    /// → staged-but-unstarted prefills (no KV built) → checkpointed
+    /// evicted sequences (decode progress travels as host state).
+    /// Never shed: started prefills (their partial KV is engine-local),
+    /// coalesced groups (they join the batch together), cache-sourced
+    /// jobs (their win IS this engine's cache), multimodal requests
+    /// still waiting on vision encodes, and active decoders.
+    fn shed_one(&mut self) -> Option<MigrationUnit> {
+        if let Some(r) = self.intake.pop_back() {
+            self.metrics.inc("migrations_out", 1);
+            self.publish_load();
+            return Some(MigrationUnit::Fresh(r));
+        }
+        // Scan staged jobs from the back: after order_queue that is the
+        // lowest effective class / latest arrival, so shedding disturbs
+        // the local schedule least.
+        if let Some(pos) = self.pending.iter().rposition(|j| {
+            j.fed == 0
+                && j.kv_one.is_none()
+                && j.source.is_none()
+                && j.followers.is_empty()
+                && match &j.mm {
+                    None => true,
+                    // mm jobs travel as [rows ++ tokens]; without
+                    // retained rows there is nothing to rebuild from.
+                    Some(m) => m.vis_rows.is_some(),
+                }
+        }) {
+            let j = self.pending.remove(pos).expect("rposition yields a valid index");
+            self.metrics.inc("migrations_out", 1);
+            self.metrics
+                .set_gauge("prefill_queue_depth", self.staged_requests() as f64);
+            self.publish_load();
+            let mm = j.mm.as_ref().and_then(mm_migration);
+            return Some(MigrationUnit::Queued(MigratedQueued {
+                id: j.id,
+                events: j.events,
+                params: j.params,
+                priority: j.priority,
+                tokens: j.tokens,
+                mm,
+                timing: j.timing,
+                enqueued_at: j.enqueued_at,
+            }));
+        }
+        // Evicted sequence with a guaranteed remote rebuild: text
+        // sequences always qualify (the token view travels), mm ones
+        // need their retained vision rows.
+        if let Some(pos) = self.evicted.iter().rposition(|e| match &e.req.mm {
+            None => true,
+            Some(m) => m.vis_rows.is_some(),
+        }) {
+            let e = self.evicted.remove(pos);
+            self.metrics.inc("migrations_out", 1);
+            self.metrics
+                .set_gauge("evicted_waiting", self.evicted.len() as f64);
+            self.publish_load();
+            let req = e.req;
+            let mm = req.mm.as_ref().and_then(mm_migration);
+            return Some(MigrationUnit::Decoding(MigratedSeq {
+                id: e.id,
+                events: req.events,
+                params: req.params,
+                priority: req.priority,
+                rng: req.rng,
+                decoder: req.decoder,
+                all_tokens: req.all_tokens,
+                prompt_len: req.prompt_len,
+                emitted: req.emitted,
+                fed: req.fed,
+                next_token: req.next_token,
+                mm,
+                timing: req.timing,
+                enqueued_at: req.enqueued_at,
+            }));
+        }
+        None
+    }
+
+    /// Integrate a migration unit shed by another engine.  Fresh and
+    /// queued units go through normal admission/resolution against
+    /// THIS engine's caches; decoding units re-enter via the
+    /// evicted-resume path, which rebuilds their KV locally (chunked
+    /// catch-up for text, embed re-prefill for mm) — the sampler and
+    /// stream-decoder state travelled, so the token stream continues
+    /// byte-identically under greedy sampling.
+    fn accept_migrated(&mut self, u: MigrationUnit) {
+        self.metrics.inc("migrations_in", 1);
+        match u {
+            MigrationUnit::Fresh(r) => self.intake.push_back(r),
+            MigrationUnit::Queued(q) => {
+                let MigratedQueued {
+                    id,
+                    events,
+                    params,
+                    priority,
+                    tokens,
+                    mm,
+                    mut timing,
+                    enqueued_at,
+                } = q;
+                let t_admit = Instant::now();
+                let resolved = match mm {
+                    None => self.text_resolve(&tokens, &mut timing),
+                    Some(m) => self.restage_migrated_mm(tokens, m),
+                };
+                let outcome = resolved.and_then(|res| {
+                    self.dispatch_resolved(
+                        id,
+                        events.clone(),
+                        params,
+                        priority,
+                        enqueued_at,
+                        t_admit,
+                        res,
+                        timing,
+                    )
+                });
+                if let Err(e) = outcome {
+                    self.metrics.inc("requests_failed", 1);
+                    let _ = events.send(Event::Error { id, message: format!("{e:#}") });
+                }
+            }
+            MigrationUnit::Decoding(d) => {
+                let req = ActiveReq {
+                    events: d.events,
+                    params: d.params,
+                    priority: d.priority,
+                    rng: d.rng,
+                    decoder: d.decoder,
+                    all_tokens: d.all_tokens,
+                    prompt_len: d.prompt_len,
+                    emitted: d.emitted,
+                    fed: d.fed,
+                    mm: d.mm.map(|m| MmSeq {
+                        hashes: m.hashes,
+                        emb_fp: m.emb_fp,
+                        vis_rows: Some(Rc::new(m.vis_rows)),
+                        n_vis_rows: m.n_vis_rows,
+                    }),
+                    next_token: d.next_token,
+                    timing: d.timing,
+                    enqueued_at: d.enqueued_at,
+                };
+                self.evicted
+                    .push(EvictedSeq { id: d.id, req, evict_tick: self.tick_count });
+                self.metrics
+                    .set_gauge("evicted_waiting", self.evicted.len() as f64);
+            }
+        }
+        self.publish_load();
+    }
+
+    /// Re-stage a migrated multimodal prompt: recompose the
+    /// [vision ++ text] embedding feed from the travelled pooled rows
+    /// plus a local embed lookup (deterministic — identical artifacts
+    /// produce identical rows), exactly the feed the source engine
+    /// would have run through the staged `Feed::Embeds` path.
+    fn restage_migrated_mm(&mut self, tokens: Vec<i32>, m: MmMigration) -> Result<Resolved> {
+        let d = self.engine.rt.info.d_model;
+        let kv_key = mm_prompt_hash(&m.hashes, &tokens);
+        let total = m.n_vis_rows + tokens.len();
+        let mut embeds = Vec::with_capacity(total * d);
+        embeds.extend_from_slice(&m.vis_rows);
+        embeds.extend_from_slice(&self.engine.rt.embed_lookup(&tokens)?);
+        let mm = MmSeq {
+            hashes: m.hashes,
+            emb_fp: m.emb_fp,
+            vis_rows: Some(Rc::new(m.vis_rows)),
+            n_vis_rows: m.n_vis_rows,
+        };
+        Ok(Resolved::Staged {
+            tokens,
+            feed: Feed::Embeds(embeds),
+            source: None,
+            built: 0,
+            total,
+            catch_up: 0,
+            mm: Some(mm),
+            mm_key: Some(kv_key),
+        })
     }
 
     /// Feed one segment of `job`; returns true when its KV is complete.
@@ -1281,37 +1768,13 @@ impl Scheduler {
                 }
             }
             Feed::Embeds(rows) => {
-                let n = remaining.min(seg);
-                match job.kv_one.take() {
-                    None => {
-                        debug_assert_eq!(job.built, 0);
-                        // First segment through the one-shot embeds
-                        // prefill; with staging off (or no chunk-embeds
-                        // entries) this is the whole sequence — the
-                        // legacy multimodal path.
-                        let n = if self.engine.rt.has_chunk_prefill_embeds() { n } else { remaining };
-                        let kv = self.engine.rt.prefill_embeds(&rows[..n * d], n)?;
-                        self.engine.stats.prefills += 1;
-                        job.kv_one = Some(kv);
-                        job.built += n;
-                        job.fed += n;
-                    }
-                    Some(kv) => {
-                        let max = self
-                            .engine
-                            .rt
-                            .info
-                            .max_chunk_bucket()
-                            .ok_or_else(|| anyhow!("no chunk buckets for staged embeds"))?;
-                        let n = n.min(max);
-                        let piece = rows[job.fed * d..(job.fed + n) * d].to_vec();
-                        let out = self.engine.feed_chunk_embeds(kv, job.built, &piece, n)?;
-                        self.metrics.inc("prefill_chunks", 1);
-                        job.built += n;
-                        job.fed += n;
-                        job.kv_one = Some(out);
-                    }
-                }
+                // One segment through the shared feeder (embeds jobs
+                // never extend a cached source, so built == fed).
+                let (kv, n) =
+                    self.feed_embeds_segment(job.kv_one.take(), rows, job.built, remaining)?;
+                job.kv_one = Some(kv);
+                job.built += n;
+                job.fed += n;
             }
         }
         job.prefill_ms += ms_since(t0, Instant::now());
@@ -1367,7 +1830,8 @@ impl Scheduler {
         if !from_cache {
             match (&job.mm, &job.mm_key) {
                 (Some(m), Some(key)) => {
-                    self.mm_cache.put_kv(*key, kv.clone(), m.emb_fp);
+                    let (key, fp) = (*key, m.emb_fp);
+                    self.mm_put_kv(key, kv.clone(), fp);
                 }
                 _ => {
                     if self.cfg.text_cache_bytes > 0 && self.cfg.cache_finished {
@@ -1586,19 +2050,20 @@ impl Scheduler {
         // encoder still runs — the hit is carried into the pending
         // request and compared when the encodes complete.
         let kv_key = mm_prompt_hash(&hashes, &text_tokens);
-        let kv_hit = self.mm_cache.get_kv(&kv_key);
+        let kv_hit = self.mm_get_kv(&kv_key);
         if let Some(hit) = &kv_hit {
             self.metrics.inc("mm_kv_hits", 1);
             timing.kv_full_hit = true;
             if self.mm_cache.enable_emb {
                 timing.vision_cached = decoded.len();
                 let logits = self.engine.rt.read_logits(1, &hit.kv.kv_one, 0)?;
-                let mm = MmSeq {
-                    hashes,
-                    emb_fp: hit.emb_fp,
-                    vis_rows: None,
-                    n_vis_rows: 0,
-                };
+                // No rows are composed here — this is the decode-only
+                // fast path.  If the sequence is later picked as an
+                // eviction/migration victim, its pooled rows are
+                // recomposed lazily from the embedding cache at that
+                // point (`try_recompose_active`), so full hits are
+                // victim candidates without taxing every admission.
+                let mm = MmSeq { hashes, emb_fp: hit.emb_fp, vis_rows: None, n_vis_rows: 0 };
                 let ready = Resolved::Ready {
                     tokens: text_tokens,
                     kv: hit.kv.clone(),
@@ -1698,6 +2163,120 @@ impl Scheduler {
         Ok(())
     }
 
+    /// Temporal-pool composed raw vision embeddings until
+    /// [vision ++ text] fits the embed-prefill buckets — the exact
+    /// transform the build path applies (2:1 adjacent averaging, odd
+    /// tail row carried), so replaying it over the same raw embeddings
+    /// reproduces byte-identical rows.  Returns the rows, their count,
+    /// and the number of pooling passes run.
+    fn pool_vis_rows(
+        &self,
+        mut vis: Vec<f32>,
+        mut n: usize,
+        text_len: usize,
+    ) -> (Vec<f32>, usize, u64) {
+        let info = &self.engine.rt.info;
+        let max_embed = *info.embed_prefill_buckets.last().unwrap();
+        let d = info.d_model;
+        let mut pools = 0u64;
+        while n + text_len > max_embed && n >= 2 {
+            let (pooled, m) = temporal_pool(&vis, n, d);
+            vis = pooled;
+            n = m;
+            pools += 1;
+        }
+        (vis, n, pools)
+    }
+
+    /// Lazily recompose the pooled vision rows of a full-KV-hit mm
+    /// sequence from per-image raw embeddings (the embedding cache, or
+    /// the fresh encodes of a validated "KV only" hit), so it retains
+    /// rebuild material and becomes an eviction/migration victim
+    /// candidate like every other mm sequence (ROADMAP follow-up from
+    /// PR 3).  Runs only when rebuild material is actually needed —
+    /// victim selection and the KV-validation path — never on the
+    /// decode-only fast path.  Returns None — leaving the sequence
+    /// un-evictable, the prior behaviour — when any image's raw
+    /// embeddings are unavailable, when they no longer fingerprint-
+    /// match what the KV was built from (`verify_fp`; skipped where
+    /// the caller just validated the same embeddings), or when the
+    /// replayed pooling count disagrees with the entry's actual visual
+    /// length (a longer text can force extra pooling passes the
+    /// original build never ran).
+    fn recompose_vis_rows(
+        &mut self,
+        hashes: &[ContentHash],
+        resolved: Option<&HashMap<ContentHash, Rc<VisionEntry>>>,
+        emb_fp: ContentHash,
+        verify_fp: bool,
+        kv_len: usize,
+        text_len: usize,
+    ) -> Option<(Rc<Vec<f32>>, usize)> {
+        let mut parts: Vec<Rc<VisionEntry>> = Vec::with_capacity(hashes.len());
+        for h in hashes {
+            let e = match resolved.and_then(|r| r.get(h)) {
+                Some(e) => e.clone(),
+                None => self.mm_cache.peek_embeddings(h)?,
+            };
+            parts.push(e);
+        }
+        // The recomposed rows must be the rows this KV was actually
+        // built from: validate against the entry's recorded encoder-
+        // output fingerprint (stale or re-encoded embeddings are not
+        // trustworthy rebuild material).
+        if verify_fp {
+            let raw: Vec<&[f32]> = parts.iter().map(|e| e.embeds.as_slice()).collect();
+            if emb_fingerprint(&raw) != emb_fp {
+                return None;
+            }
+        }
+        let mut vis: Vec<f32> = Vec::new();
+        let mut n = 0usize;
+        for e in &parts {
+            vis.extend_from_slice(&e.embeds);
+            n += e.n_tokens;
+        }
+        let (vis, n, _) = self.pool_vis_rows(vis, n, text_len);
+        if kv_len != n + text_len {
+            return None;
+        }
+        self.metrics.inc("mm_rows_recomposed", 1);
+        Some((Rc::new(vis), n))
+    }
+
+    /// Attach recomposed pooled vision rows to an ACTIVE full-KV-hit
+    /// sequence the moment it is actually selected as an eviction (or
+    /// shed) victim — the lazy complement of the fast-path admission
+    /// that skipped composition.  Returns false when no trustworthy
+    /// rebuild material exists (the sequence then stays pinned).
+    fn try_recompose_active(&mut self, id: u64) -> bool {
+        let Some(a) = self.active.get(&id) else { return false };
+        let Some(m) = &a.mm else { return false };
+        if m.vis_rows.is_some() {
+            return true;
+        }
+        let hashes = m.hashes.clone();
+        let emb_fp = m.emb_fp;
+        // Admission-time geometry: prompt_len covered vis + text, and
+        // the original text view is all_tokens minus the fed
+        // generation suffix (pooling replay must use the text length
+        // the build pooled against).
+        let kv_len = a.prompt_len;
+        let text_len = a.all_tokens.len() - a.fed;
+        match self.recompose_vis_rows(&hashes, None, emb_fp, true, kv_len, text_len) {
+            Some((rows, n)) => {
+                if let Some(a) = self.active.get_mut(&id) {
+                    if let Some(m) = &mut a.mm {
+                        m.vis_rows = Some(rows);
+                        m.n_vis_rows = n;
+                    }
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
     /// All of a multimodal request's images are resolved: validate any
     /// pending "KV only" hit, or compose + pool the `[vision ++ text]`
     /// embeddings and hand the request to the staged-prefill pipeline.
@@ -1737,12 +2316,23 @@ impl Scheduler {
         if let Some(hit) = p.kv_hit.take() {
             if hit.emb_fp == emb_fp {
                 let logits = self.engine.rt.read_logits(1, &hit.kv.kv_one, 0)?;
-                let mm = MmSeq {
-                    hashes: p.hashes,
+                // The fresh encodes just validated this KV; they are
+                // also its rebuild material — retain the pooled rows
+                // so the sequence is evictable.  (verify_fp=false: the
+                // fingerprint over these exact embeddings was compared
+                // one line up.)
+                let (vis_rows, n_vis_rows) = match self.recompose_vis_rows(
+                    &p.hashes,
+                    Some(&p.resolved),
                     emb_fp,
-                    vis_rows: None,
-                    n_vis_rows: 0,
+                    false,
+                    hit.kv.len,
+                    p.text_tokens.len(),
+                ) {
+                    Some((r, n)) => (Some(r), n),
+                    None => (None, 0),
                 };
+                let mm = MmSeq { hashes: p.hashes, emb_fp, vis_rows, n_vis_rows };
                 return self.dispatch_resolved(
                     p.id,
                     p.events,
@@ -1763,13 +2353,13 @@ impl Scheduler {
         // embed-prefill buckets, average-pool adjacent visual tokens
         // 2:1 until it fits (video-frame sequences; Qwen-VL-style
         // merge).  An odd tail row is carried through unchanged.
-        let max_embed = *info.embed_prefill_buckets.last().unwrap();
+        // Shared with the full-KV-hit row recomposition so replayed
+        // pooling is byte-identical to the build.
         let d = info.d_model;
-        while n_vis_tokens + p.text_tokens.len() > max_embed && n_vis_tokens >= 2 {
-            let (pooled, n) = temporal_pool(&vis_embeds, n_vis_tokens, d);
-            vis_embeds = pooled;
-            n_vis_tokens = n;
-            self.metrics.inc("mm_temporal_pools", 1);
+        let (vis_embeds, n_vis_tokens, pools) =
+            self.pool_vis_rows(vis_embeds, n_vis_tokens, p.text_tokens.len());
+        if pools > 0 {
+            self.metrics.inc("mm_temporal_pools", pools);
         }
 
         // Compose [vision ++ text] embeddings; the staged pipeline
@@ -1997,8 +2587,8 @@ impl Scheduler {
                     // for later "KV only" validation.
                     Some(m) => {
                         let key = mm_prompt_hash(&m.hashes, &a.all_tokens);
-                        self.mm_cache
-                            .put_kv(key, CachedKv::new(kv_one, kv_len), m.emb_fp);
+                        let fp = m.emb_fp;
+                        self.mm_put_kv(key, CachedKv::new(kv_one, kv_len), fp);
                     }
                     None => {
                         self.text_cache
@@ -2056,6 +2646,18 @@ fn ms_since(a: Instant, b: Instant) -> f64 {
     b.duration_since(a).as_secs_f64() * 1e3
 }
 
+/// Host copy of a sequence's multimodal identity for a migration unit
+/// (None when no vision rows were retained — nothing to rebuild from,
+/// so such sequences are not shed).
+fn mm_migration(m: &MmSeq) -> Option<MmMigration> {
+    m.vis_rows.as_ref().map(|r| MmMigration {
+        hashes: m.hashes.clone(),
+        emb_fp: m.emb_fp,
+        vis_rows: (**r).clone(),
+        n_vis_rows: m.n_vis_rows,
+    })
+}
+
 impl CachedKv {
     fn new_rc(kv_one: xla::PjRtBuffer, len: usize) -> Rc<Self> {
         CachedKv::new(kv_one, len)
@@ -2071,12 +2673,42 @@ pub struct SchedulerHandle {
     next_id: Arc<AtomicU64>,
     /// The engine's configured default class, applied by `generate`.
     default_priority: Priority,
+    /// Lock-free load summary the engine publishes every tick.
+    load: Arc<EngineLoad>,
     join: Option<Arc<std::sync::Mutex<Option<std::thread::JoinHandle<()>>>>>,
 }
 
 impl SchedulerHandle {
     pub fn fresh_id(&self) -> u64 {
         self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// This engine's published queue/slot pressure (router placement).
+    pub fn load(&self) -> &EngineLoad {
+        &self.load
+    }
+
+    /// Ask the engine to give up one migratable unit of waiting work
+    /// (None when nothing can be shed safely).
+    pub fn shed(&self) -> Result<Option<MigrationUnit>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Command::Shed(tx))
+            .map_err(|_| anyhow!("scheduler is gone"))?;
+        rx.recv().map_err(|_| anyhow!("scheduler is gone"))
+    }
+
+    /// Enqueue a unit shed by another engine of the pool.  On failure
+    /// (the engine is gone) the unit is handed BACK to the caller —
+    /// it owns a client's event channel, so dropping it would lose
+    /// the request without any error reaching the client.
+    pub fn accept(&self, unit: MigrationUnit) -> std::result::Result<(), MigrationUnit> {
+        self.tx
+            .send(Command::Accept(Box::new(unit)))
+            .map_err(|e| match e.0 {
+                Command::Accept(u) => *u,
+                _ => unreachable!("send error returns the sent command"),
+            })
     }
 
     /// Submit a generation request at the engine's default priority;

@@ -9,8 +9,9 @@
 //!   AOT-lowered to HLO text artifacts plus a weight blob + manifest.
 //! * **L3** (this crate): the serving coordinator — continuous batching
 //!   scheduler, text prefix cache, content-based multimodal prefix cache,
-//!   paged KV manager, OpenAI-compatible HTTP server — with every
-//!   substrate (SHA-256, base64, JSON, HTTP) built in-tree.
+//!   paged KV manager, a data-parallel multi-engine pool router
+//!   (`cluster`), OpenAI-compatible HTTP server — with every substrate
+//!   (SHA-256, base64, JSON, HTTP) built in-tree.
 //!
 //! Python never runs on the request path: the runtime loads the HLO
 //! artifacts once via PJRT and serves from Rust.
@@ -18,6 +19,7 @@
 pub mod baselines;
 pub mod bench_harness;
 pub mod cache;
+pub mod cluster;
 pub mod coordinator;
 pub mod engine;
 pub mod multimodal;

@@ -10,6 +10,7 @@ use std::net::TcpListener;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
+use umserve::cluster::{EnginePool, PoolConfig, RoutePolicy};
 use umserve::coordinator::scheduler::Scheduler;
 use umserve::coordinator::{EngineConfig, Event, Priority, PromptInput};
 use umserve::engine::sampler::SamplingParams;
@@ -26,6 +27,7 @@ USAGE:
                 [--sched priority|fifo] [--default-priority normal]
                 [--preemption on|off] [--aging-ticks 64]
                 [--vision-stage on|off] [--vision-encodes-per-step 1]
+                [--engines 1] [--route rr|load|affinity] [--migrate on|off]
   umserve run   --model NAME --prompt TEXT [--max-tokens 64] [--temperature 0]
                 [--top-k 0] [--top-p 1.0] [--image PATH ...via --image=path]
   umserve info  [--artifacts artifacts]
@@ -53,6 +55,18 @@ MULTIMODAL:
   onto one encode.  Evicted multimodal sequences checkpoint their KV
   into the mm cache and resume via a KV hit or a chunked embed
   re-prefill.  --vision-stage off restores inline encoding.
+
+CLUSTER:
+  --engines N serves from N independent scheduler replicas (each with
+  its own weights, decode arena and caches) behind a router.  --route
+  picks the placement policy: rr (round-robin), load (least-loaded by
+  live queue+slot pressure), or affinity (the default: route by text-
+  prefix hash / image content hash so repeated prompts and images land
+  on the replica already holding their KV or vision embeddings).  With
+  --migrate on (the default), a background rebalancer moves waiting
+  work from a backlogged replica to an idle one over the eviction
+  checkpoint format; migrated sequences rebuild their KV on the target
+  and continue with byte-identical greedy output.
 ";
 
 fn main() {
@@ -109,11 +123,22 @@ fn engine_config(args: &argparse::Args) -> anyhow::Result<EngineConfig> {
 
 fn serve(args: &argparse::Args) -> anyhow::Result<()> {
     let cfg = engine_config(args)?;
+    let route_name = args.choice("route", "affinity", &["rr", "load", "affinity"])?;
+    let pool_cfg = PoolConfig {
+        engines: args.usize("engines", 1)?.max(1),
+        route: RoutePolicy::from_name(&route_name).expect("choice() validated the policy name"),
+        migrate: args.on_off("migrate", true)?,
+        ..Default::default()
+    };
     let port = args.usize("port", 8000)?;
     let model = cfg.model.clone();
     let default_priority = cfg.default_priority;
-    eprintln!("loading model {model} ...");
-    let handle = Scheduler::spawn(cfg)?;
+    let n = pool_cfg.engines;
+    eprintln!("loading model {model} ({n} engine{}) ...", if n == 1 { "" } else { "s" });
+    // The pool owns the replica threads and the rebalancer; keep it
+    // alive for the lifetime of the server loop.
+    let pool = EnginePool::spawn(cfg, pool_cfg)?;
+    let handle = pool.handle();
     let listener = TcpListener::bind(("127.0.0.1", port as u16))?;
     eprintln!("umserve listening on http://127.0.0.1:{port} (model {model})");
     eprintln!("  POST /v1/chat/completions | POST /v1/completions | GET /v1/models | GET /metrics");

@@ -89,6 +89,10 @@ pub struct ModelInfo {
     /// falls back to token-by-token catch-up and inline prefill).
     pub prefill_chunk_buckets: Vec<usize>,
     pub embed_prefill_buckets: Vec<usize>,
+    /// Position grids with lowered `trim_kv_s{S}` / `untrim_kv_s{S}`
+    /// entries (empty for text-only models and manifests predating
+    /// cached-KV trimming — the caches then store full s_max buffers).
+    pub trim_kv_buckets: Vec<usize>,
     pub entries: BTreeMap<String, EntryDesc>,
 }
 
@@ -138,6 +142,14 @@ impl ModelInfo {
     /// Largest lowered chunk size (the natural `prefill_chunk_tokens`).
     pub fn max_chunk_bucket(&self) -> Option<usize> {
         self.prefill_chunk_buckets.last().copied()
+    }
+
+    /// Smallest trim grid size that keeps `n` positions AND the plane-0
+    /// logits mailbox intact (cached entries must still serve their
+    /// first-token logits on a full hit).
+    pub fn trim_bucket_for(&self, n: usize) -> Option<usize> {
+        let need = n.max(self.logits_rows());
+        self.trim_kv_buckets.iter().copied().find(|&s| s >= need)
     }
 
     pub fn has_entry(&self, name: &str) -> bool {
@@ -302,6 +314,11 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
             req(m, "embed_prefill_buckets")?,
             "embed_prefill_buckets",
         )?,
+        // Optional: absent in pre-trim manifests and text-only models.
+        trim_kv_buckets: match m.get("trim_kv_buckets") {
+            Some(Json::Null) | None => Vec::new(),
+            Some(j) => usize_list(j, "trim_kv_buckets")?,
+        },
         entries,
     };
     if info.decode_buckets.is_empty() {

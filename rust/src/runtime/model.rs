@@ -403,6 +403,29 @@ impl ModelRuntime {
         )
     }
 
+    /// Whether this model's artifacts carry the `trim_kv_s{s}` /
+    /// `untrim_kv_s{s}` pair for a grid size.
+    pub fn has_trim_kv(&self, s: usize) -> bool {
+        self.info.has_entry(&format!("trim_kv_s{s}"))
+            && self.info.has_entry(&format!("untrim_kv_s{s}"))
+    }
+
+    /// Device-side slice of a kv_one to its first `s` positions (a
+    /// lowered trim grid size).  The source buffer is read, not
+    /// donated — callers keep using the full state while the cache
+    /// stores the trimmed copy.
+    pub fn trim_kv(&self, kv_one: &PjRtBuffer, s: usize) -> Result<PjRtBuffer> {
+        self.run(&format!("trim_kv_s{s}"), &[Input::Buffer(kv_one)])
+    }
+
+    /// Re-expand a trimmed KV state (`s` positions) to the s_max arena
+    /// row, zero-filling positions >= `s`.  Attention masks by sequence
+    /// length, so decode from the result is token-identical to decode
+    /// from the original untrimmed buffer.
+    pub fn untrim_kv(&self, trimmed: &PjRtBuffer, s: usize) -> Result<PjRtBuffer> {
+        self.run(&format!("untrim_kv_s{s}"), &[Input::Buffer(trimmed)])
+    }
+
     /// Insert a prefilled kv_one into `arena` slot `slot` (device-side).
     pub fn inject(
         &self,

@@ -20,16 +20,18 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::scheduler::SchedulerHandle;
+use crate::cluster::PoolHandle;
 use crate::coordinator::Priority;
 use crate::substrate::http;
 
-/// Serve forever (until `shutdown` flips).  `handle` must come from
-/// `Scheduler::spawn`; `default_priority` is the class assigned to
-/// requests that don't carry a `priority` field.
+/// Serve forever (until `shutdown` flips).  `handle` routes requests
+/// across the pool's engine replicas (`EnginePool::handle`; a bare
+/// spawned scheduler converts via `PoolHandle::from`).
+/// `default_priority` is the class assigned to requests that don't
+/// carry a `priority` field.
 pub fn serve(
     listener: TcpListener,
-    handle: SchedulerHandle,
+    handle: PoolHandle,
     model_name: String,
     default_priority: Priority,
     shutdown: Arc<AtomicBool>,

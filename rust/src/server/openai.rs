@@ -3,7 +3,7 @@
 use std::sync::mpsc::channel;
 use std::time::{SystemTime, UNIX_EPOCH};
 
-use crate::coordinator::scheduler::SchedulerHandle;
+use crate::cluster::PoolHandle;
 use crate::coordinator::{Event, Priority, PromptInput};
 use crate::engine::sampler::SamplingParams;
 use crate::multimodal::ImageSource;
@@ -11,7 +11,10 @@ use crate::substrate::http::{Request, ResponseWriter};
 use crate::substrate::json::{parse, Json};
 
 pub struct ServerState {
-    pub handle: SchedulerHandle,
+    /// Pool-addressable submission handle: every request is routed to
+    /// one of N engine replicas by the pool's placement policy (N = 1
+    /// degenerates to the single-engine server).
+    pub handle: PoolHandle,
     pub model_name: String,
     /// Class for requests without an explicit `priority` field.
     pub default_priority: Priority,
@@ -344,22 +347,49 @@ fn models(state: &ServerState, rw: &mut ResponseWriter<'_>) -> HandlerResult {
 
 fn metrics(state: &ServerState, rw: &mut ResponseWriter<'_>) -> HandlerResult {
     let snap = state.handle.stats().map_err(|e| (503u16, e.to_string()))?;
-    let mut text = snap.metrics.render_prometheus();
-    text.push_str(&format!("umserve_bucket {}\n", snap.bucket));
-    text.push_str(&format!("umserve_active {}\n", snap.active));
-    text.push_str(&format!("umserve_prefill_queued {}\n", snap.queued));
-    text.push_str(&format!("umserve_vision_queued {}\n", snap.vision_queued));
-    text.push_str(&format!("umserve_evicted_waiting_now {}\n", snap.evicted));
-    text.push_str(&format!("umserve_prefill_chunks_total {}\n", snap.prefill_chunks));
-    text.push_str(&format!("umserve_occupancy_mean {:.4}\n", snap.occupancy_mean));
-    let (th, tm, te, tb) = snap.text_cache;
+    // Aggregate view: replica registries summed, per-replica pressure
+    // as labeled gauges (pool_queue_depth{engine="k"}, …), router
+    // counters (migrations, affinity_hits) folded in.
+    let mut text = snap.aggregate().render_prometheus();
+    let n = snap.engines.len().max(1);
+    let sum = |f: fn(&crate::coordinator::scheduler::StatsSnapshot) -> usize| -> usize {
+        snap.engines.iter().map(f).sum()
+    };
+    text.push_str(&format!(
+        "umserve_bucket {}\n",
+        snap.engines.iter().map(|s| s.bucket).max().unwrap_or(0)
+    ));
+    text.push_str(&format!("umserve_active {}\n", sum(|s| s.active)));
+    text.push_str(&format!("umserve_prefill_queued {}\n", sum(|s| s.queued)));
+    text.push_str(&format!("umserve_vision_queued {}\n", sum(|s| s.vision_queued)));
+    text.push_str(&format!("umserve_evicted_waiting_now {}\n", sum(|s| s.evicted)));
+    text.push_str(&format!(
+        "umserve_prefill_chunks_total {}\n",
+        snap.engines.iter().map(|s| s.prefill_chunks).sum::<u64>()
+    ));
+    text.push_str(&format!(
+        "umserve_occupancy_mean {:.4}\n",
+        snap.engines.iter().map(|s| s.occupancy_mean).sum::<f64>() / n as f64
+    ));
+    let (mut th, mut tm, mut te, mut tb) = (0u64, 0u64, 0u64, 0usize);
+    for s in &snap.engines {
+        th += s.text_cache.0;
+        tm += s.text_cache.1;
+        te += s.text_cache.2;
+        tb += s.text_cache.3;
+    }
     text.push_str(&format!(
         "umserve_text_cache_hits {th}\numserve_text_cache_misses {tm}\numserve_text_cache_evictions {te}\numserve_text_cache_bytes {tb}\n"
     ));
-    let m = snap.mm_cache;
+    let (mut eh, mut em, mut kh, mut km) = (0u64, 0u64, 0u64, 0u64);
+    for s in &snap.engines {
+        eh += s.mm_cache.emb_hits;
+        em += s.mm_cache.emb_misses;
+        kh += s.mm_cache.kv_hits;
+        km += s.mm_cache.kv_misses;
+    }
     text.push_str(&format!(
-        "umserve_mm_emb_hits {}\numserve_mm_emb_misses {}\numserve_mm_kv_hits {}\numserve_mm_kv_misses {}\n",
-        m.emb_hits, m.emb_misses, m.kv_hits, m.kv_misses
+        "umserve_mm_emb_hits {eh}\numserve_mm_emb_misses {em}\numserve_mm_kv_hits {kh}\numserve_mm_kv_misses {km}\n"
     ));
     rw.send(200, "text/plain; version=0.0.4", text.as_bytes())
         .map_err(|e| (500u16, e.to_string()))

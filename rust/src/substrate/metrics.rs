@@ -59,6 +59,21 @@ impl Histogram {
         self.max_ms
     }
 
+    /// Fold another histogram into this one (same log-bucket layout by
+    /// construction) — the pool's aggregate /metrics view sums every
+    /// replica's observations.
+    pub fn merge_from(&mut self, other: &Histogram) {
+        debug_assert_eq!(self.bounds.len(), other.bounds.len());
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.sum_ms += other.sum_ms;
+        self.count += other.count;
+        if other.max_ms > self.max_ms {
+            self.max_ms = other.max_ms;
+        }
+    }
+
     /// Approximate quantile from bucket upper bounds.
     pub fn quantile_ms(&self, q: f64) -> f64 {
         if self.count == 0 {
@@ -86,6 +101,9 @@ pub struct MetricsRegistry {
     /// (family, label key, label value) — e.g. request queue wait
     /// broken out by scheduling class.
     labeled_histograms: BTreeMap<(String, String, String), Histogram>,
+    /// Gauges with one label dimension, keyed like labeled histograms —
+    /// e.g. per-replica queue depth `pool_queue_depth{engine="2"}`.
+    labeled_gauges: BTreeMap<(String, String, String), f64>,
 }
 
 impl MetricsRegistry {
@@ -118,8 +136,53 @@ impl MetricsRegistry {
             .observe_ms(ms);
     }
 
+    /// Set a gauge carrying one label, e.g.
+    /// `set_gauge_labeled("pool_queue_depth", "engine", "0", 3.0)`
+    /// renders as `umserve_pool_queue_depth{engine="0"} 3`.
+    pub fn set_gauge_labeled(&mut self, name: &str, label_key: &str, label_val: &str, v: f64) {
+        self.labeled_gauges
+            .insert((name.to_string(), label_key.to_string(), label_val.to_string()), v);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Labeled gauge lookup (any label key under `name`).
+    pub fn labeled_gauge(&self, name: &str, label_val: &str) -> Option<f64> {
+        self.labeled_gauges
+            .iter()
+            .find(|((n, _, v), _)| n == name && v == label_val)
+            .map(|(_, g)| *g)
+    }
+
+    /// Fold another registry into this one: counters and gauges sum,
+    /// histograms merge observation-wise.  The pool's /metrics endpoint
+    /// uses this to present one aggregate view over N engine replicas
+    /// (per-replica state is surfaced separately via labeled gauges).
+    pub fn merge_sum(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            *self.gauges.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge_from(h);
+        }
+        for (k, h) in &other.labeled_histograms {
+            self.labeled_histograms
+                .entry(k.clone())
+                .or_default()
+                .merge_from(h);
+        }
+        for (k, v) in &other.labeled_gauges {
+            *self.labeled_gauges.entry(k.clone()).or_insert(0.0) += v;
+        }
     }
 
     pub fn histogram(&self, name: &str) -> Option<&Histogram> {
@@ -152,6 +215,14 @@ impl MetricsRegistry {
                 h.quantile_ms(0.95),
                 h.max_ms()
             ));
+        }
+        let mut last_gauge_family = String::new();
+        for ((name, lk, lv), v) in &self.labeled_gauges {
+            if *name != last_gauge_family {
+                out.push_str(&format!("# TYPE umserve_{name} gauge\n"));
+                last_gauge_family = name.clone();
+            }
+            out.push_str(&format!("umserve_{name}{{{lk}=\"{lv}\"}} {v}\n"));
         }
         let mut last_family = String::new();
         for ((name, lk, lv), h) in &self.labeled_histograms {
@@ -221,6 +292,45 @@ mod tests {
         assert!(text.contains("umserve_queue_wait_class_ms_count{class=\"batch\"} 1"));
         // One TYPE line per family, not per label value.
         assert_eq!(text.matches("# TYPE umserve_queue_wait_class_ms").count(), 1);
+    }
+
+    #[test]
+    fn labeled_gauges_render_and_lookup() {
+        let mut m = MetricsRegistry::new();
+        m.set_gauge_labeled("pool_queue_depth", "engine", "0", 3.0);
+        m.set_gauge_labeled("pool_queue_depth", "engine", "1", 0.0);
+        assert_eq!(m.labeled_gauge("pool_queue_depth", "0"), Some(3.0));
+        assert_eq!(m.labeled_gauge("pool_queue_depth", "7"), None);
+        let text = m.render_prometheus();
+        assert!(text.contains("umserve_pool_queue_depth{engine=\"0\"} 3"));
+        assert!(text.contains("umserve_pool_queue_depth{engine=\"1\"} 0"));
+        assert_eq!(text.matches("# TYPE umserve_pool_queue_depth gauge").count(), 1);
+    }
+
+    #[test]
+    fn merge_sum_aggregates_replicas() {
+        let mut a = MetricsRegistry::new();
+        a.inc("tokens_generated", 5);
+        a.set_gauge("active_requests", 2.0);
+        a.observe_ms("ttft", 10.0);
+        a.observe_ms_labeled("queue_wait_class", "class", "batch", 4.0);
+        let mut b = MetricsRegistry::new();
+        b.inc("tokens_generated", 7);
+        b.inc("migrations_in", 1);
+        b.set_gauge("active_requests", 3.0);
+        b.observe_ms("ttft", 30.0);
+        b.observe_ms_labeled("queue_wait_class", "class", "batch", 6.0);
+        a.merge_sum(&b);
+        assert_eq!(a.counter("tokens_generated"), 12);
+        assert_eq!(a.counter("migrations_in"), 1);
+        assert_eq!(a.gauge("active_requests"), Some(5.0));
+        let h = a.histogram("ttft").unwrap();
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_ms() - 20.0).abs() < 1e-9);
+        assert_eq!(h.max_ms(), 30.0);
+        let lh = a.labeled_histogram("queue_wait_class", "batch").unwrap();
+        assert_eq!(lh.count(), 2);
+        assert!((lh.mean_ms() - 5.0).abs() < 1e-9);
     }
 
     #[test]

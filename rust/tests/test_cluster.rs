@@ -1,0 +1,301 @@
+//! Integration tests for the multi-engine cluster: cross-engine
+//! migration of checkpointed sequences (byte-identical greedy output
+//! when a sequence is evicted on engine A and resumed on engine B),
+//! cache-affinity routing determinism (same image hash -> same
+//! replica), and least-loaded spreading — over REAL artifacts
+//! (qwen3-0.6b / qwen3-vl-4b sims).  Requires `make artifacts`.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use umserve::bench_harness::synth_prompt;
+use umserve::cluster::{EnginePool, PoolConfig, RoutePolicy};
+use umserve::coordinator::scheduler::{MigrationUnit, SchedulerHandle};
+use umserve::coordinator::{EngineConfig, Event, Priority, PromptInput};
+use umserve::engine::sampler::SamplingParams;
+use umserve::multimodal::image::{generate_image, ImageSource};
+
+fn cfg(model: &str) -> EngineConfig {
+    EngineConfig {
+        model: model.into(),
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+        warmup: false,
+        ..Default::default()
+    }
+}
+
+fn pool_cfg(engines: usize, route: RoutePolicy, migrate: bool) -> PoolConfig {
+    PoolConfig { engines, route, migrate, ..Default::default() }
+}
+
+/// Generous per-step bound: cold pools compile XLA executables on
+/// their first requests.
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn submit(
+    engine: &SchedulerHandle,
+    prompt: PromptInput,
+    n_new: usize,
+    priority: Priority,
+) -> Receiver<Event> {
+    let (tx, rx) = channel();
+    let params = SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) };
+    engine
+        .generate_with(prompt, params, priority, tx)
+        .expect("submit failed");
+    rx
+}
+
+/// Blocking-collect one request's token stream until Done.
+fn drain(rx: &Receiver<Event>) -> Vec<i32> {
+    let mut toks = Vec::new();
+    loop {
+        let ev = rx.recv_timeout(TIMEOUT).expect("request timed out");
+        match ev {
+            Event::Token { token, .. } if token >= 0 => toks.push(token),
+            Event::Done { .. } => return toks,
+            Event::Error { message, .. } => panic!("request failed: {message}"),
+            _ => {}
+        }
+    }
+}
+
+/// Poll an engine's published load until `pred` holds (or panic).
+fn wait_for(engine: &SchedulerHandle, what: &str, pred: impl Fn(&SchedulerHandle) -> bool) {
+    let t0 = Instant::now();
+    while !pred(engine) {
+        assert!(t0.elapsed() < TIMEOUT, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Fill engine 0 of `pool` with batch decoders, evict one with an
+/// interactive arrival, hand the checkpoint to engine 1, and return
+/// every stream (submission order).  `mk_prompt` builds the i-th batch
+/// prompt.
+fn run_migrated(
+    pool: &EnginePool,
+    n_fill: usize,
+    gen: usize,
+    mk_prompt: &dyn Fn(usize) -> PromptInput,
+) -> Vec<Vec<i32>> {
+    let src = &pool.engines()[0];
+    let dst = &pool.engines()[1];
+    let mut rxs: Vec<Receiver<Event>> = (0..n_fill)
+        .map(|i| submit(src, mk_prompt(i), gen, Priority::Batch))
+        .collect();
+    wait_for(src, "flood to fill every decode slot", |e| {
+        e.load().active.load(std::sync::atomic::Ordering::Relaxed) == n_fill
+    });
+
+    // Interactive arrival under full slots: evicts one batch decoder
+    // (KV checkpointed, sequence parked).
+    rxs.push(submit(
+        src,
+        PromptInput::Tokens(synth_prompt(900, 8, 2048)),
+        gen,
+        Priority::Interactive,
+    ));
+    wait_for(src, "an eviction under preemption", |e| {
+        e.load().evicted.load(std::sync::atomic::Ordering::Relaxed) >= 1
+            && e.load().queued.load(std::sync::atomic::Ordering::Relaxed) == 0
+    });
+
+    // Shed the checkpointed sequence and resume it on engine 1.  With
+    // intake and staging empty, the evicted unit is what sheds.
+    let unit = src.shed().expect("shed").expect("expected a migratable unit");
+    assert!(
+        matches!(unit, MigrationUnit::Decoding(_)),
+        "with empty intake/staging the checkpointed sequence must shed"
+    );
+    assert!(dst.accept(unit).is_ok(), "target engine refused the unit");
+
+    rxs.iter().map(drain).collect()
+}
+
+/// A sequence checkpointed on engine A and resumed on engine B — via
+/// the existing eviction checkpoint format, KV rebuilt on B through
+/// the chunked catch-up path — produces byte-identical greedy output
+/// to an unmigrated single-engine run of the same workload.
+#[test]
+fn migrated_text_sequence_is_byte_identical() {
+    let n_fill = 16; // qwen3-0.6b decode buckets end at 16
+    let gen = 64;
+    let mk = |i: usize| PromptInput::Tokens(synth_prompt(100 + i as u64, 8, 2048));
+
+    // Migration is driven by hand (shed/accept), so the rebalancer is off.
+    let pc = pool_cfg(2, RoutePolicy::RoundRobin, false);
+    let mut pool = EnginePool::spawn(cfg("qwen3-0.6b"), pc).expect("pool");
+    let migrated = run_migrated(&pool, n_fill, gen, &mk);
+
+    // Cross-engine accounting: one unit out of A, into B, resumed on B.
+    let src_stats = pool.engines()[0].stats().expect("stats");
+    let dst_stats = pool.engines()[1].stats().expect("stats");
+    assert_eq!(src_stats.metrics.counter("migrations_out"), 1);
+    assert_eq!(src_stats.metrics.counter("evictions"), 1);
+    assert_eq!(dst_stats.metrics.counter("migrations_in"), 1);
+    assert_eq!(dst_stats.metrics.counter("evicted_resumes"), 1);
+    pool.shutdown();
+
+    // Unmigrated baseline: the identical workload on one engine (the
+    // eviction still happens; PR-2 guarantees local evict/resume is
+    // byte-identical, so this is the ground truth either way).
+    let pc = pool_cfg(1, RoutePolicy::RoundRobin, false);
+    let mut solo = EnginePool::spawn(cfg("qwen3-0.6b"), pc).expect("solo pool");
+    let src = &solo.engines()[0];
+    let mut rxs: Vec<Receiver<Event>> =
+        (0..n_fill).map(|i| submit(src, mk(i), gen, Priority::Batch)).collect();
+    wait_for(src, "baseline flood to fill slots", |e| {
+        e.load().active.load(std::sync::atomic::Ordering::Relaxed) == n_fill
+    });
+    rxs.push(submit(
+        src,
+        PromptInput::Tokens(synth_prompt(900, 8, 2048)),
+        gen,
+        Priority::Interactive,
+    ));
+    let baseline: Vec<Vec<i32>> = rxs.iter().map(drain).collect();
+    solo.shutdown();
+
+    assert_eq!(
+        baseline, migrated,
+        "cross-engine migration changed a token stream"
+    );
+}
+
+/// The multimodal variant: an evicted mm sequence travels with its
+/// pooled vision rows and engine B — whose mm KV cache has never seen
+/// it — rebuilds the KV via the chunked embed re-prefill (no pixels,
+/// no re-encode), continuing byte-identically.
+#[test]
+fn migrated_mm_sequence_rebuilds_on_target() {
+    let n_fill = 8; // qwen3-vl-4b decode buckets end at 8
+    // Long generations: staged vision + chunked embed prefill admit the
+    // flood over tens of ticks, and every sequence must still be
+    // decoding when the last one joins (and when the shed fires).
+    let gen = 96;
+    let mut imgs: Vec<Vec<u8>> = Vec::new();
+    for i in 0..n_fill {
+        imgs.push(generate_image(40 + i as u64, 224).encode_raw());
+    }
+    let mk = move |i: usize| PromptInput::Multimodal {
+        images: vec![ImageSource::Bytes(imgs[i].clone())],
+        text: format!("describe scene number {i}"),
+    };
+
+    let pc = pool_cfg(2, RoutePolicy::RoundRobin, false);
+    let mut pool = EnginePool::spawn(cfg("qwen3-vl-4b"), pc).expect("pool");
+    let migrated = run_migrated(&pool, n_fill, gen, &mk);
+    let dst_stats = pool.engines()[1].stats().expect("stats");
+    assert_eq!(dst_stats.metrics.counter("migrations_in"), 1);
+    assert_eq!(
+        dst_stats.metrics.counter("mm_evict_rebuilds"),
+        1,
+        "the target's mm KV cache cannot hold the checkpoint — the KV \
+         must be rebuilt from the travelled vision rows"
+    );
+    pool.shutdown();
+
+    let pc = pool_cfg(1, RoutePolicy::RoundRobin, false);
+    let mut solo = EnginePool::spawn(cfg("qwen3-vl-4b"), pc).expect("solo pool");
+    let src = &solo.engines()[0];
+    let mut rxs: Vec<Receiver<Event>> =
+        (0..n_fill).map(|i| submit(src, mk(i), gen, Priority::Batch)).collect();
+    wait_for(src, "baseline mm flood to fill slots", |e| {
+        e.load().active.load(std::sync::atomic::Ordering::Relaxed) == n_fill
+    });
+    rxs.push(submit(
+        src,
+        PromptInput::Tokens(synth_prompt(900, 8, 2048)),
+        gen,
+        Priority::Interactive,
+    ));
+    let baseline: Vec<Vec<i32>> = rxs.iter().map(drain).collect();
+    solo.shutdown();
+
+    assert_eq!(
+        baseline, migrated,
+        "cross-engine mm migration changed a token stream"
+    );
+}
+
+/// Affinity routing is deterministic per content: every request
+/// carrying the same image (same content hash) lands on the same
+/// replica — one encode serves all of them, and the sticky map
+/// reports a hit per repeat.
+#[test]
+fn same_image_hash_routes_to_same_replica() {
+    let n_req = 6;
+    let pc = pool_cfg(4, RoutePolicy::CacheAffinity, false);
+    let mut pool = EnginePool::spawn(cfg("qwen3-vl-4b"), pc).expect("pool");
+    let h = pool.handle();
+    let img = generate_image(77, 224).encode_raw();
+    let rxs: Vec<Receiver<Event>> = (0..n_req)
+        .map(|i| {
+            let prompt = PromptInput::Multimodal {
+                images: vec![ImageSource::Bytes(img.clone())],
+                text: format!("turn {i}"),
+            };
+            let params = SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(4) };
+            let (_, rx) = h.generate(prompt, params).expect("submit");
+            rx
+        })
+        .collect();
+    for rx in &rxs {
+        let _ = drain(rx);
+    }
+    let stats = h.stats().expect("stats");
+    assert_eq!(
+        stats.router.counter("affinity_hits"),
+        (n_req - 1) as u64,
+        "every repeat must follow the first placement"
+    );
+    let served: Vec<usize> = stats
+        .engines
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.metrics.counter("requests_total") > 0)
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(served.len(), 1, "one image hash must map to exactly one replica: {served:?}");
+    let encodes: u64 = stats
+        .engines
+        .iter()
+        .map(|s| s.metrics.counter("vision_encodes"))
+        .sum();
+    assert_eq!(encodes, 1, "one replica, one content hash, one encode");
+    pool.shutdown();
+}
+
+/// Least-loaded placement spreads a paced flood across replicas (the
+/// published EngineLoad is the routing signal — no stats round-trips).
+#[test]
+fn least_loaded_routing_uses_both_replicas() {
+    let pc = pool_cfg(2, RoutePolicy::LeastLoaded, false);
+    let mut pool = EnginePool::spawn(cfg("qwen3-0.6b"), pc).expect("pool");
+    let h = pool.handle();
+    let mut rxs = Vec::new();
+    for i in 0..8u64 {
+        let prompt = PromptInput::Tokens(synth_prompt(300 + i, 32, 2048));
+        let params = SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(32) };
+        let (_, rx) = h.generate(prompt, params).expect("submit");
+        rxs.push(rx);
+        // Pace submissions so the replicas' published loads can react.
+        std::thread::sleep(Duration::from_millis(15));
+    }
+    for rx in &rxs {
+        let _ = drain(rx);
+    }
+    let stats = h.stats().expect("stats");
+    let served: Vec<u64> = stats
+        .engines
+        .iter()
+        .map(|s| s.metrics.counter("requests_total"))
+        .collect();
+    assert_eq!(served.iter().sum::<u64>(), 8);
+    assert!(
+        served.iter().all(|&c| c > 0),
+        "least-loaded routing left a replica idle: {served:?}"
+    );
+    pool.shutdown();
+}

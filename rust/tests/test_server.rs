@@ -37,7 +37,7 @@ impl TestServer {
             std::thread::spawn(move || {
                 let _ = umserve::server::serve(
                     listener,
-                    h,
+                    h.into(),
                     model,
                     umserve::coordinator::Priority::Normal,
                     sd,
