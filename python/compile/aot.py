@@ -29,7 +29,13 @@ from jax._src.lib import xla_client as xc
 
 from . import model as M
 from . import vision as V
-from .configs import EMBED_PREFILL_BUCKETS, MODELS, PREFILL_CHUNK_BUCKETS, ModelConfig
+from .configs import (
+    EMBED_PREFILL_BUCKETS,
+    MODELS,
+    PREFILL_CHUNK_BUCKETS,
+    VISION_BATCH_BUCKETS,
+    ModelConfig,
+)
 from .tokenizer_train import export as export_tokenizer
 from .weights import build_weights, text_weight_order, vision_weight_order, write_umw
 
@@ -311,6 +317,21 @@ class EntryBuilder:
             v_specs,
         )
 
+    def vision_batch(self, resolution: int, b: int):
+        cfg = self.cfg
+        vc = cfg.vision
+        p = vc.n_patches(resolution)
+        v_order = vision_weight_order(cfg)
+        v_specs = weight_specs(self.weights, v_order)
+        self.lower(
+            f"vision_r{resolution}_b{b}",
+            functools.partial(V.vision_encode_batch_fn, cfg),
+            [arg_desc("patches", "input", spec((b, p, vc.patch_dim), F32))],
+            [spec((b, p, vc.patch_dim), F32)],
+            v_order,
+            v_specs,
+        )
+
 
 def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
     print(f"model {cfg.name} ({cfg.paper_name}, ~{cfg.n_params()/1e6:.2f}M sim params)",
@@ -333,20 +354,24 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
         eb.prefill(s)
     for c in PREFILL_CHUNK_BUCKETS:
         eb.prefill_chunk(c)
+    # KV trim/untrim for EVERY model: the mm KV cache stores whole
+    # multimodal prompts and the text prefix cache stores finished /
+    # evicted text sequences — both trim their s_max-sized kv_one
+    # entries to the smallest covering grid at insert so the byte
+    # budget bounds real allocation.
+    for s in cfg.trim_kv_buckets():
+        eb.trim_kv(s)
+        eb.untrim_kv(s)
     if cfg.vision:
         for s in EMBED_PREFILL_BUCKETS:
             eb.prefill_embeds(s)
             eb.embed_lookup(s)
         for c in PREFILL_CHUNK_BUCKETS:
             eb.prefill_chunk_embeds(c)
-        # KV trim/untrim: the mm KV cache stores whole multimodal
-        # prompts, so only vision models pay the s_max-sized entries the
-        # trim closes down.
-        for s in cfg.trim_kv_buckets():
-            eb.trim_kv(s)
-            eb.untrim_kv(s)
         for r in cfg.vision.resolutions:
             eb.vision(r)
+            for b in VISION_BATCH_BUCKETS:
+                eb.vision_batch(r, b)
 
     meta = {
         "paper_name": cfg.paper_name,
@@ -370,13 +395,14 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
         "prefill_buckets": list(cfg.prefill_buckets),
         "prefill_chunk_buckets": list(PREFILL_CHUNK_BUCKETS),
         "embed_prefill_buckets": list(EMBED_PREFILL_BUCKETS) if cfg.vision else [],
-        "trim_kv_buckets": list(cfg.trim_kv_buckets()) if cfg.vision else [],
+        "trim_kv_buckets": list(cfg.trim_kv_buckets()),
         "vision": (
             {
                 "d_model": cfg.vision.d_model,
                 "n_layers": cfg.vision.n_layers,
                 "patch": cfg.vision.patch,
                 "merge": cfg.vision.merge,
+                "batch_buckets": list(VISION_BATCH_BUCKETS),
                 "resolutions": list(cfg.vision.resolutions),
                 "n_patches": {str(r): cfg.vision.n_patches(r) for r in cfg.vision.resolutions},
                 "n_visual_tokens": {

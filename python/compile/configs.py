@@ -184,5 +184,13 @@ PREFILL_CHUNK_BUCKETS = (8, 32)
 
 # Candidate position grids for trimming cached kv_one buffers (see
 # ModelConfig.trim_kv_buckets — each is clamped up to the model's
-# logits-mailbox row count and capped below s_max).
+# logits-mailbox row count and capped below s_max).  Lowered for EVERY
+# model: the mm KV cache and the text prefix cache both trim their
+# entries at insert.
 TRIM_KV_GRID = (128, 256, 384, 512)
+
+# Batched vision-encoder buckets (`vision_r{res}_b{B}`): one dispatch
+# encodes up to B same-resolution images.  The serving scheduler picks
+# the largest bucket <= its pending same-resolution count and falls
+# back to the single-image entry for the remainder.
+VISION_BATCH_BUCKETS = (2, 4, 8)

@@ -77,6 +77,32 @@ def vision_encode_fn(cfg: ModelConfig, patches, *weights):
     return merged @ w["vis.merge_w"] + w["vis.merge_b"]          # [T, d_text]
 
 
+def vision_encode_batch_fn(cfg: ModelConfig, patches, *weights):
+    """Encode a batch of same-resolution images in one dispatch.
+
+    Args:
+      patches: [B, P, 3*patch*patch] f32 flattened patches.
+      weights: flat tuple per vision_weight_order.
+
+    Returns:
+      [B, T, d_text] f32 visual tokens.
+
+    Deliberately an UNROLLED stack of per-image ``vision_encode_fn``
+    graphs rather than a vmap: each image's subgraph is structurally
+    identical to the single-image ``vision_r{res}`` entry, so a batched
+    encode is bit-exact with B single encodes (verified by
+    test_model.test_batched_vision_encode_is_bitexact).  vmap reorders
+    the batched contractions enough to shift results by ~1e-6, which
+    would fork the embedding-cache contents (and their recorded
+    fingerprints) by whichever batch size happened to encode an image
+    first.  The serving scheduler batches at most 8 images per
+    dispatch, so the unrolled graph stays small (~B x 44 kB of HLO).
+    """
+    return jnp.stack(
+        [vision_encode_fn(cfg, patches[i], *weights) for i in range(patches.shape[0])]
+    )
+
+
 def vision_encode_ref(cfg: ModelConfig, patches, weights_dict):
     """Dict-keyed convenience wrapper for tests."""
     order = vision_weight_order(cfg)

@@ -5,7 +5,12 @@ import os
 
 import pytest
 
-from compile.configs import EMBED_PREFILL_BUCKETS, MODELS, PREFILL_CHUNK_BUCKETS
+from compile.configs import (
+    EMBED_PREFILL_BUCKETS,
+    MODELS,
+    PREFILL_CHUNK_BUCKETS,
+    VISION_BATCH_BUCKETS,
+)
 
 ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
 
@@ -37,9 +42,19 @@ def test_entry_inventory(manifest, name):
         assert f"prefill_chunk_c{c}" in entries
     assert manifest["models"][name]["prefill_chunk_buckets"] == list(
         PREFILL_CHUNK_BUCKETS)
+    # Every model lowers the cached-KV trim grids (text prefix cache and
+    # mm KV cache both trim their entries at insert).
+    for s in cfg.trim_kv_buckets():
+        assert f"trim_kv_s{s}" in entries, f"{name} missing trim_kv_s{s}"
+        assert f"untrim_kv_s{s}" in entries
+    assert manifest["models"][name]["trim_kv_buckets"] == list(cfg.trim_kv_buckets())
     if cfg.vision:
         for r in cfg.vision.resolutions:
             assert f"vision_r{r}" in entries
+            for b in VISION_BATCH_BUCKETS:
+                assert f"vision_r{r}_b{b}" in entries, f"{name} missing vision_r{r}_b{b}"
+        assert manifest["models"][name]["vision"]["batch_buckets"] == list(
+            VISION_BATCH_BUCKETS)
         for s in EMBED_PREFILL_BUCKETS:
             assert f"prefill_embeds_s{s}" in entries
             assert f"embed_lookup_s{s}" in entries

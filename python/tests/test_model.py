@@ -246,6 +246,36 @@ def test_vision_encoder_is_content_sensitive():
     assert np.abs(np.asarray(o1) - np.asarray(o2)).max() > 1e-6
 
 
+def test_batched_vision_encode_is_bitexact():
+    """vision_encode_batch_fn == B independent vision_encode_fn calls,
+    BIT-exactly.  The serving scheduler batches same-resolution encoder
+    work through the `vision_r{res}_b{B}` entries; bit-exactness is
+    what keeps the embedding cache (and the fingerprints recorded for
+    "KV only" validation) independent of whichever batch size happened
+    to encode an image first.  The unrolled-stack construction in
+    vision.py exists precisely because vmap does NOT satisfy this."""
+    import functools
+
+    cfg = MODELS["qwen3-vl-4b"]
+    w = build_weights(cfg)
+    from compile.weights import vision_weight_order
+
+    arrs = [jnp.asarray(w[n]) for n in vision_weight_order(cfg)]
+    p = cfg.vision.n_patches(224)
+    rng = np.random.default_rng(7)
+    batch = jnp.asarray(
+        rng.standard_normal((4, p, cfg.vision.patch_dim)), jnp.float32)
+
+    single = jax.jit(functools.partial(V.vision_encode_fn, cfg))
+    batched = jax.jit(functools.partial(V.vision_encode_batch_fn, cfg))
+    want = np.stack([np.asarray(single(batch[i], *arrs)) for i in range(4)])
+    got = np.asarray(batched(batch, *arrs))
+    assert got.shape == (4, cfg.vision.n_visual_tokens(224), cfg.d_model)
+    assert np.array_equal(got, want), (
+        f"batched encode diverged from single encodes "
+        f"(max abs diff {np.abs(got - want).max()})")
+
+
 def test_prefill_embeds_equals_prefill_on_token_embeds():
     """prefill_embeds(emb[tokens]) == prefill(tokens) (the VL text path
     is the same trunk)."""

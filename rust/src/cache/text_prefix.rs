@@ -32,7 +32,12 @@ use super::CachedKv;
 
 pub struct TextPrefixCache {
     lru: LruCache<ContentHash, Rc<CachedKv>>,
-    entry_bytes: usize,
+    /// Bytes one token position occupies across a kv_one's planes
+    /// (see [`crate::cache::kv_token_bytes`]).
+    token_bytes: usize,
+    /// Physical positions of an UNtrimmed kv_one (the model's s_max) —
+    /// the charge for entries the insert path could not trim.
+    s_max: usize,
 }
 
 /// Result of a lookup: the cached state and how many prompt tokens it
@@ -53,9 +58,13 @@ pub fn hash_tokens(tokens: &[i32]) -> ContentHash {
 
 impl TextPrefixCache {
     /// `budget_bytes` bounds total kv_one memory (paper default 512 MB);
-    /// `entry_bytes` is the per-entry cost (kv_one size for the model).
-    pub fn new(budget_bytes: usize, entry_bytes: usize) -> Self {
-        TextPrefixCache { lru: LruCache::new(budget_bytes), entry_bytes }
+    /// `token_bytes` is the per-position KV cost and `s_max` the
+    /// physical length of an untrimmed kv_one — each entry is charged
+    /// by the positions it PHYSICALLY holds (`CachedKv::trim`, else
+    /// s_max), so on trim-capable artifacts the budget is a true
+    /// allocation bound rather than a worst-case one.
+    pub fn new(budget_bytes: usize, token_bytes: usize, s_max: usize) -> Self {
+        TextPrefixCache { lru: LruCache::new(budget_bytes), token_bytes, s_max }
     }
 
     /// Algorithm 2.  O(|P|) hashes of O(|P|) tokens each; |P| <= 640
@@ -77,10 +86,18 @@ impl TextPrefixCache {
         None
     }
 
-    /// Store the KV state for a processed token sequence.
+    /// Store the KV state for a processed token sequence, charged by
+    /// the positions its buffer physically holds.
     pub fn insert(&mut self, tokens: &[i32], kv: Rc<CachedKv>) {
         debug_assert_eq!(kv.len, tokens.len());
-        self.lru.insert(hash_tokens(tokens), kv, self.entry_bytes);
+        let cost = self.token_bytes * kv.trim.unwrap_or(self.s_max);
+        self.lru.insert(hash_tokens(tokens), kv, cost);
+    }
+
+    /// Drop an entry (e.g. a trimmed state the runtime can no longer
+    /// re-expand under mismatched artifacts).
+    pub fn remove(&mut self, tokens: &[i32]) {
+        self.lru.remove(&hash_tokens(tokens));
     }
 
     pub fn contains(&self, tokens: &[i32]) -> bool {

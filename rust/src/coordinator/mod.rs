@@ -208,8 +208,30 @@ pub struct EngineConfig {
     /// either way; off restores the inline encode.
     pub vision_stage: bool,
     /// Fairness cap for staged vision: encoder units advanced per
-    /// scheduler tick (each unit is one image).
+    /// scheduler tick (each unit is one image).  Interactive-class
+    /// encodes may additionally borrow the headroom batch-class work
+    /// leaves unused (up to one extra budget's worth per tick) when
+    /// `priority_sched` is on.
     pub vision_encodes_per_step: usize,
+    /// Max images per batched encoder dispatch: queued same-resolution
+    /// encodes are grouped and issued through the largest lowered
+    /// `vision_r{res}_b{B}` bucket <= the group size, so a K-image
+    /// flood costs ~K/B dispatches instead of K.  1 restores one
+    /// dispatch per image; the effective bucket is clamped to the
+    /// largest lowered one (batching silently degrades to per-image on
+    /// pre-batching artifacts).  Batching only engages when
+    /// `vision_encodes_per_step` allows more than one image per tick.
+    pub vision_batch: usize,
+    /// Overlap vision encoding with embed prefill: a multi-image
+    /// request starts feeding its resolved `[vision ++ text]` prefix
+    /// through chunked embed prefill while later images are still
+    /// queued for encoding, instead of parking until every image
+    /// resolves — encoder tail latency hides behind prefill chunks.
+    /// Requires chunked prefill; requests whose visual sequence needs
+    /// temporal pooling (pooling spans image boundaries) and "KV only"
+    /// validation hits take the parked path regardless.  Identical
+    /// greedy output either way.
+    pub mm_overlap: bool,
     /// Class assigned to requests that don't specify one.
     pub default_priority: Priority,
     /// Starvation prevention: a staged job's effective class improves
@@ -236,6 +258,8 @@ impl Default for EngineConfig {
             preemption: true,
             vision_stage: true,
             vision_encodes_per_step: 1,
+            vision_batch: 8,
+            mm_overlap: true,
             default_priority: Priority::Normal,
             aging_ticks: 64,
         }

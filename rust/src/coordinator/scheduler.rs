@@ -73,7 +73,7 @@ use anyhow::{anyhow, Result};
 
 use crate::cache::mm::{emb_fingerprint, mm_prompt_hash, MmCache, MmKvEntry, VisionEntry};
 use crate::cache::text_prefix::TextPrefixCache;
-use crate::cache::{kv_one_bytes, kv_token_bytes, CachedKv};
+use crate::cache::{kv_token_bytes, CachedKv};
 use crate::engine::sampler::{sample, Rng, SamplingParams};
 use crate::engine::tokenizer::{StreamDecoder, Tokenizer, EOS, IMG};
 use crate::engine::TextEngine;
@@ -266,10 +266,15 @@ struct MmSeq {
 /// One staged vision-encoder unit: a single image awaiting its encode,
 /// keyed by content hash so concurrent requests for the same image
 /// coalesce onto one execution.  The scheduler advances at most
-/// `vision_encodes_per_step` of these per tick.
+/// `vision_encodes_per_step` image units per tick (plus the
+/// interactive borrow), grouping queued same-resolution jobs into one
+/// batched `vision_r{res}_b{B}` dispatch.
 struct VisionJob {
     hash: ContentHash,
     image: DecodedImage,
+    /// Snapped encoder resolution (the batching key: only
+    /// same-resolution jobs share a dispatch).
+    res: usize,
     /// Best class among the waiting requests (bumped on coalesce).
     priority: Priority,
     /// Tick at which the job entered the queue (aging reference).
@@ -296,6 +301,17 @@ struct MmPending {
     /// Per-image embeddings resolved so far (cache hits at admission
     /// plus completed VisionJobs).
     resolved: HashMap<ContentHash, Rc<VisionEntry>>,
+    /// Encode/prefill overlap: Some(id) links this pending to an
+    /// open-feed [`PrefillJob`] already staged under that id — resolved
+    /// images append their rows to the job's feed in prompt order as
+    /// they complete, and the request is counted through the job, not
+    /// here.  None = the legacy parked form (compose after the last
+    /// encode).
+    job_id: Option<u64>,
+    /// Images whose rows have been appended to the linked job's feed —
+    /// always a prefix of `hashes`, so segments feed strictly in
+    /// prompt order no matter which encodes finish first.
+    composed: usize,
     timing: Timing,
     enqueued_at: Instant,
     /// Admission time (staged_ms reference — includes the vision wait).
@@ -305,6 +321,25 @@ struct MmPending {
 impl MmPending {
     fn images_resolved(&self) -> bool {
         self.hashes.iter().all(|h| self.resolved.contains_key(h))
+    }
+
+    /// Advance the compose frontier: collect the rows of every newly
+    /// prefix-contiguous resolved image (an image composes only after
+    /// ALL images before it), bumping `composed` past them.  The single
+    /// source of the strict prompt-order guarantee, shared by overlap
+    /// admission and encode resolution.
+    fn compose_frontier(&mut self) -> Vec<f32> {
+        let mut rows: Vec<f32> = Vec::new();
+        while self.composed < self.hashes.len() {
+            match self.resolved.get(&self.hashes[self.composed]) {
+                Some(e) => {
+                    rows.extend_from_slice(&e.embeds);
+                    self.composed += 1;
+                }
+                None => break,
+            }
+        }
+        rows
     }
 }
 
@@ -359,6 +394,12 @@ struct PrefillJob {
     built: usize,
     /// Total positions when complete (multimodal: includes visual rows).
     total: usize,
+    /// Encode/prefill overlap: true while later images of a multimodal
+    /// prompt are still being encoded — `feed` then holds only the
+    /// resolved prefix and grows as encodes complete (strictly in
+    /// prompt order).  An open job is never finalized, shed, or
+    /// considered complete, however many of its available rows are fed.
+    feed_open: bool,
     /// Suffix length fed due to a partial prefix hit (metrics).
     catch_up_tokens: usize,
     mm: Option<MmSeq>,
@@ -460,7 +501,7 @@ impl Scheduler {
         let store = ArtifactStore::open(&cfg.artifacts_dir)?;
         let rt = ModelRuntime::load(&client, &store, &cfg.model)?;
         let tokenizer = Rc::new(Tokenizer::from_file(store.tokenizer_path())?);
-        let kv_bytes = kv_one_bytes(&rt.info);
+        let token_bytes = kv_token_bytes(&rt.info);
         if cfg.warmup {
             let first = *rt.info.decode_buckets.first().unwrap();
             let pre = *rt.info.prefill_buckets.first().unwrap();
@@ -490,12 +531,13 @@ impl Scheduler {
         let mm_cache = MmCache::new(
             cfg.mm_emb_cache_bytes.max(1),
             cfg.mm_kv_cache_bytes.max(1),
-            kv_token_bytes(&rt.info),
+            token_bytes,
         );
+        let s_max = rt.info.s_max;
         let mut s = Scheduler {
             engine: TextEngine::new(rt)?,
             tokenizer,
-            text_cache: TextPrefixCache::new(cfg.text_cache_bytes.max(1), kv_bytes),
+            text_cache: TextPrefixCache::new(cfg.text_cache_bytes.max(1), token_bytes, s_max),
             mm_cache,
             cfg: cfg.clone(),
             active: HashMap::new(),
@@ -689,9 +731,17 @@ impl Scheduler {
     /// Staged jobs not yet admitted to the decode batch: prefills in
     /// the admission queue plus multimodal requests still waiting on
     /// staged vision encodes (raw intake is counted separately — see
-    /// [`StatsSnapshot::queued`]).
+    /// [`StatsSnapshot::queued`]).  Overlap pendings are linked to a
+    /// staged job and counted through it, never twice.
     pub fn queued_count(&self) -> usize {
-        self.pending.len() + self.mm_waiting.len()
+        self.pending.len() + self.parked_mm_count()
+    }
+
+    /// Multimodal requests parked as fully-blocked pendings (the
+    /// encode/prefill-overlap ones already hold a staged job and are
+    /// accounted there).
+    fn parked_mm_count(&self) -> usize {
+        self.mm_waiting.iter().filter(|p| p.job_id.is_none()).count()
     }
 
     /// Per-image vision encodes waiting in the staging queue.
@@ -711,54 +761,110 @@ impl Scheduler {
         &mut self.mm_cache
     }
 
+    /// Device-side trim of a KV state to the smallest lowered grid
+    /// covering its length (`trim_kv_s{S}`), so a cache's
+    /// length-proportional byte charge bounds the real device
+    /// allocation, not just the logical footprint.  Returns None —
+    /// caller stores the full s_max buffer — on pre-trim artifacts,
+    /// already-trimmed states, sequences longer than the largest grid,
+    /// and trim failures.  Shared by the mm KV cache and the text
+    /// prefix cache insert paths.
+    fn trim_for_cache(&mut self, kv: &CachedKv) -> Option<Rc<CachedKv>> {
+        if kv.trim.is_some() {
+            return None;
+        }
+        let s = self.engine.rt.info.trim_bucket_for(kv.len)?;
+        if s >= self.engine.rt.info.s_max || !self.engine.rt.has_trim_kv(s) {
+            return None;
+        }
+        let t = self.engine.rt.trim_kv(&kv.kv_one, s).ok()?;
+        Some(CachedKv::new_trimmed(t, kv.len, s))
+    }
+
     /// Insert a KV state into the mm cache, first trimming it
-    /// device-side to the smallest lowered grid covering its length
-    /// (`trim_kv_s{S}`).  The cache's length-proportional byte charge
-    /// then bounds the real device allocation, not just the logical
-    /// footprint (ROADMAP follow-up from PR 3).  Pre-trim artifacts,
-    /// text-only models, and sequences longer than the largest grid
-    /// fall back to storing the full s_max buffer.
+    /// device-side (ROADMAP follow-up from PR 3; see
+    /// [`Self::trim_for_cache`]).
     fn mm_put_kv(&mut self, key: ContentHash, kv: Rc<CachedKv>, emb_fp: ContentHash) {
         if !self.mm_cache.enable_kv {
             return;
         }
-        if kv.trim.is_none() {
-            if let Some(s) = self.engine.rt.info.trim_bucket_for(kv.len) {
-                if s < self.engine.rt.info.s_max && self.engine.rt.has_trim_kv(s) {
-                    if let Ok(t) = self.engine.rt.trim_kv(&kv.kv_one, s) {
-                        self.metrics.inc("mm_kv_trims", 1);
-                        self.mm_cache
-                            .put_kv(key, CachedKv::new_trimmed(t, kv.len, s), emb_fp);
-                        return;
-                    }
-                    // Trim failure falls through to the untrimmed insert.
-                }
+        match self.trim_for_cache(&kv) {
+            Some(t) => {
+                self.metrics.inc("mm_kv_trims", 1);
+                self.mm_cache.put_kv(key, t, emb_fp);
             }
+            None => self.mm_cache.put_kv(key, kv, emb_fp),
         }
-        self.mm_cache.put_kv(key, kv, emb_fp);
     }
 
-    /// Look up an mm KV entry, re-expanding trimmed states to full
-    /// arena rows (`untrim_kv_s{S}`) so every consumer — inject,
-    /// logits readback, clone — sees the shape it expects.  Positions
-    /// past the trim point are zero-filled; attention masks by
-    /// sequence length, so resumed decode is token-identical.
+    /// Insert a finished/evicted text sequence's KV into the prefix
+    /// cache, trimmed device-side like the mm path (ROADMAP follow-up
+    /// from PR 4: the text cache no longer stores s_max-sized kv_ones,
+    /// so its byte budget bounds real allocation too).
+    fn text_put(&mut self, tokens: &[i32], kv: Rc<CachedKv>) {
+        match self.trim_for_cache(&kv) {
+            Some(t) => {
+                self.metrics.inc("text_kv_trims", 1);
+                self.text_cache.insert(tokens, t);
+            }
+            None => self.text_cache.insert(tokens, kv),
+        }
+    }
+
+    /// Re-expand a trimmed cached state to full arena rows
+    /// (`untrim_kv_s{S}`) so every consumer — inject, logits readback,
+    /// clone, chunked catch-up — sees the shape it expects; untrimmed
+    /// states pass through.  None — the caller drops the entry and
+    /// treats it as a miss — when mismatched artifacts can no longer
+    /// rematerialize it.  The lookup-side complement of
+    /// [`Self::trim_for_cache`], shared by the text and mm caches.
+    fn expand_trimmed(&mut self, kv: Rc<CachedKv>) -> Option<Rc<CachedKv>> {
+        match kv.trim {
+            None => Some(kv),
+            Some(s) => self
+                .engine
+                .rt
+                .untrim_kv(&kv.kv_one, s)
+                .ok()
+                .map(|full| CachedKv::new(full, kv.len)),
+        }
+    }
+
+    /// Text prefix lookup through [`Self::expand_trimmed`] (the text
+    /// analog of [`Self::mm_get_kv`]).  An unexpandable entry is
+    /// dropped and the lookup RETRIES: unlike the single-key mm cache,
+    /// the prefix cache may still hold a shorter expandable prefix
+    /// worth a partial-hit catch-up.  Terminates because every failed
+    /// round removes its matched entry.
+    fn text_lookup(&mut self, tokens: &[i32]) -> Option<crate::cache::text_prefix::PrefixHit> {
+        loop {
+            let hit = self.text_cache.lookup(tokens)?;
+            match self.expand_trimmed(hit.kv) {
+                Some(kv) => {
+                    return Some(crate::cache::text_prefix::PrefixHit {
+                        kv,
+                        matched: hit.matched,
+                        full: hit.full,
+                    })
+                }
+                None => self.text_cache.remove(&tokens[..hit.matched]),
+            }
+        }
+    }
+
+    /// Look up an mm KV entry through [`Self::expand_trimmed`].
+    /// Positions past the trim point are zero-filled; attention masks
+    /// by sequence length, so resumed decode is token-identical.
     fn mm_get_kv(&mut self, key: &ContentHash) -> Option<MmKvEntry> {
         let hit = self.mm_cache.get_kv(key)?;
-        match hit.kv.trim {
-            None => Some(hit),
-            Some(s) => match self.engine.rt.untrim_kv(&hit.kv.kv_one, s) {
-                Ok(full) => Some(MmKvEntry {
-                    kv: CachedKv::new(full, hit.kv.len),
-                    emb_fp: hit.emb_fp,
-                }),
-                Err(_) => {
-                    // Cannot rematerialize (mismatched artifacts):
-                    // treat as a miss and drop the unusable entry.
-                    self.mm_cache.remove_kv(key);
-                    None
-                }
-            },
+        match self.expand_trimmed(hit.kv) {
+            Some(kv) => Some(MmKvEntry { kv, emb_fp: hit.emb_fp }),
+            None => {
+                // Cannot rematerialize (mismatched artifacts): treat as
+                // a miss and drop the unusable entry.
+                self.mm_cache.remove_kv(key);
+                None
+            }
         }
     }
 
@@ -769,10 +875,11 @@ impl Scheduler {
 
     /// Requests the staging area will admit on completion: one per job
     /// plus its coalesced followers (the admission capacity unit), plus
-    /// the multimodal requests still waiting on vision encodes.
+    /// the multimodal requests still parked waiting on vision encodes
+    /// (overlap pendings are counted through their linked job).
     fn staged_requests(&self) -> usize {
         self.pending.iter().map(|j| 1 + j.followers.len()).sum::<usize>()
-            + self.mm_waiting.len()
+            + self.parked_mm_count()
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
@@ -900,6 +1007,7 @@ impl Scheduler {
                     source: Some(kv),
                     built: total,
                     total,
+                    feed_open: false,
                     catch_up_tokens: 0,
                     mm,
                     mm_key: None,
@@ -964,6 +1072,7 @@ impl Scheduler {
                     source,
                     built,
                     total,
+                    feed_open: false,
                     catch_up_tokens: catch_up,
                     mm,
                     mm_key,
@@ -1117,6 +1226,11 @@ impl Scheduler {
                     let _ = job
                         .events
                         .send(Event::Error { id: job.id, message: format!("{e:#}") });
+                    if job.feed_open {
+                        // Unhook the overlap pending and its orphaned
+                        // encoder work (the error was just reported).
+                        self.drop_overlap_pending(job.id);
+                    }
                 }
             }
         }
@@ -1126,17 +1240,26 @@ impl Scheduler {
     }
 
     /// Admit completed jobs from the queue front while decode slots
-    /// (or evictable victims) allow.
+    /// (or evictable victims) allow.  Open-feed overlap jobs are
+    /// TRANSPARENT to admission: they cannot admit until their encoder
+    /// tail resolves whatever they have fed, and holding completed
+    /// work behind one would reintroduce the whole-encode admission
+    /// stall the overlap exists to hide (a parked mm request never
+    /// occupied the queue at all).  Order among closed jobs is
+    /// unchanged: the first closed-but-incomplete job still blocks
+    /// everything behind it.
     fn admit_completed_heads(&mut self, d: usize) {
-        while let Some(front) = self.pending.front() {
+        loop {
+            let Some(pos) = self.pending.iter().position(|j| !j.feed_open) else { return };
+            let front = &self.pending[pos];
             if front.fed < front.feed.rows(d) {
-                break;
+                return;
             }
             let (priority, need) = (front.priority, 1 + front.followers.len());
             if !self.make_room(priority, need) {
-                break;
+                return;
             }
-            let Some(job) = self.pending.pop_front() else { break };
+            let Some(job) = self.pending.remove(pos) else { return };
             let id = job.id;
             let events = job.events.clone();
             if let Err(e) = self.finalize_job(job) {
@@ -1225,9 +1348,7 @@ impl Scheduler {
                         let fp = m.emb_fp;
                         self.mm_put_kv(key, CachedKv::new(kv_one, kv_len), fp);
                     }
-                    None => self
-                        .text_cache
-                        .insert(&a.all_tokens, CachedKv::new_rc(kv_one, kv_len)),
+                    None => self.text_put(&a.all_tokens, CachedKv::new_rc(kv_one, kv_len)),
                 }
                 a.timing.evictions += 1;
                 self.metrics.inc("evictions", 1);
@@ -1326,7 +1447,7 @@ impl Scheduler {
         }
         let tokens = req.all_tokens.clone();
         let chunked = self.chunk_tokens > 0 && self.engine.rt.has_chunk_prefill();
-        let kv: Rc<CachedKv> = match self.text_cache.lookup(&tokens) {
+        let kv: Rc<CachedKv> = match self.text_lookup(&tokens) {
             Some(h) if h.full => {
                 self.metrics.inc("text_prefix_hits", 1);
                 h.kv
@@ -1541,6 +1662,7 @@ impl Scheduler {
         // the local schedule least.
         if let Some(pos) = self.pending.iter().rposition(|j| {
             j.fed == 0
+                && !j.feed_open
                 && j.kv_one.is_none()
                 && j.source.is_none()
                 && j.followers.is_empty()
@@ -1707,11 +1829,17 @@ impl Scheduler {
     }
 
     /// Feed one segment of `job`; returns true when its KV is complete.
+    /// An open-feed (encode/prefill overlap) job feeds only the rows
+    /// its resolved images have composed so far and is never complete
+    /// until the feed closes.
     fn advance_job(&mut self, job: &mut PrefillJob) -> Result<bool> {
         let d = self.engine.rt.info.d_model;
         let remaining = job.feed.rows(d) - job.fed;
         if remaining == 0 {
-            return Ok(true);
+            return Ok(!job.feed_open);
+        }
+        if job.feed_open {
+            self.metrics.inc("mm_overlap_chunks", 1);
         }
         let t0 = Instant::now();
         let seg = if self.chunk_tokens > 0 { self.chunk_tokens } else { usize::MAX };
@@ -1778,7 +1906,7 @@ impl Scheduler {
             }
         }
         job.prefill_ms += ms_since(t0, Instant::now());
-        Ok(job.fed >= job.feed.rows(d))
+        Ok(!job.feed_open && job.fed >= job.feed.rows(d))
     }
 
     /// Fail a job's coalesced followers (the primary's error is the
@@ -1835,7 +1963,7 @@ impl Scheduler {
                 }
                 _ => {
                     if self.cfg.text_cache_bytes > 0 && self.cfg.cache_finished {
-                        self.text_cache.insert(&job.tokens, kv.clone());
+                        self.text_put(&job.tokens, kv.clone());
                     }
                 }
             }
@@ -1876,45 +2004,186 @@ impl Scheduler {
     // ------------------------------------------------- staged vision
 
     /// Advance the vision staging queue by at most
-    /// `vision_encodes_per_step` per-image encodes.  Encodes are
-    /// ordered by (effective class, arrival) like prefills; each
-    /// completed encode is distributed to every waiting multimodal
-    /// request (and the embedding cache), and requests whose images are
-    /// all resolved move on to the staged-prefill pipeline.
+    /// `vision_encodes_per_step` image units (plus the interactive
+    /// borrow) per tick.  Encodes are ordered by (effective class,
+    /// arrival) like prefills; queued jobs snapped to the SAME encoder
+    /// resolution are grouped — up to `vision_batch` images, later
+    /// same-resolution jobs riding forward to fill the group — and
+    /// issued as one batched `vision_r{res}_b{B}` dispatch instead of
+    /// one dispatch per image.  Each completed encode is distributed to
+    /// every waiting multimodal request (and the embedding cache), and
+    /// requests whose images are all resolved move on to the
+    /// staged-prefill pipeline.
+    ///
+    /// Priority-aware budget: with `priority_sched` on,
+    /// interactive-class encodes may spend the headroom batch-class
+    /// work leaves unused — up to one extra `vision_encodes_per_step`
+    /// tranche per tick, shrunk by every batch-class encode actually
+    /// waiting (`vision_budget_borrowed` counts the extra units).
+    /// Normal/batch encodes never exceed the base budget.
     ///
     /// The per-tick encode time lands in the `vision_stall` histogram:
-    /// with staging on this is bounded by one encode unit x the budget,
-    /// where the inline path records a whole multi-image admission as
-    /// one observation — exactly the stall the staging removes.
+    /// with staging on this is bounded by the per-tick budget's worth
+    /// of encode units, where the inline path records a whole
+    /// multi-image admission as one observation — exactly the stall
+    /// the staging removes.
     fn advance_visions(&mut self) {
         if self.vis_pending.is_empty() {
             return;
         }
+        let now = self.tick_count;
+        let aging = self.cfg.aging_ticks;
+        let psched = self.cfg.priority_sched;
         if self.vis_pending.len() > 1 {
-            let now = self.tick_count;
-            let aging = self.cfg.aging_ticks;
-            let psched = self.cfg.priority_sched;
             self.vis_pending
                 .make_contiguous()
                 .sort_by_key(|j| effective_rank(j.priority, j.staged_tick, now, aging, psched));
         }
-        let budget = self.cfg.vision_encodes_per_step.max(1);
+        let base = self.cfg.vision_encodes_per_step.max(1);
+        let borrow = if self.cfg.priority_sched {
+            let n_int = self
+                .vis_pending
+                .iter()
+                .filter(|j| j.priority == Priority::Interactive)
+                .count();
+            let n_batch = self
+                .vis_pending
+                .iter()
+                .filter(|j| j.priority == Priority::Batch)
+                .count();
+            n_int.min(base.saturating_sub(n_batch))
+        } else {
+            0
+        };
+        let group_cap = self.cfg.vision_batch.max(1);
+        let mut spent = 0usize;
         let mut stall_ms = 0.0;
-        for _ in 0..budget {
-            let Some(job) = self.vis_pending.pop_front() else { break };
-            match self.encode_image(job.hash, &job.image) {
-                Ok((entry, dt)) => {
-                    stall_ms += dt;
-                    self.resolve_vision(job.hash, entry, dt);
-                }
-                Err(e) => self.fail_vision_waiters(job.hash, &e),
+        while let Some(front) = self.vis_pending.front() {
+            // Units beyond the base budget are borrowable only when the
+            // queue front (highest class after the sort) is interactive.
+            let allow = if front.priority == Priority::Interactive { base + borrow } else { base };
+            if spent >= allow {
+                break;
             }
+            let res = front.res;
+            let cap = (allow - spent).min(group_cap);
+            let mut group: Vec<VisionJob> =
+                vec![self.vis_pending.pop_front().expect("checked non-empty")];
+            // Pull later same-resolution jobs forward to fill the
+            // dispatch — but never PAST a better-ranked job of another
+            // resolution (a ride-along still consumes a budget unit,
+            // and letting e.g. a batch-class image displace a waiting
+            // normal-class encode would invert the priority order the
+            // sort just established; the queue is rank-sorted, so
+            // skipped jobs rank <= any candidate behind them and equal
+            // ranks may interleave freely), and never fund a
+            // non-interactive rider from the borrowed tranche — the
+            // "normal/batch never exceed the base budget" invariant
+            // holds per image unit, not just for group heads.
+            let mut skipped_best: Option<usize> = None;
+            let mut i = 0;
+            while group.len() < cap && i < self.vis_pending.len() {
+                let j = &self.vis_pending[i];
+                let jr = effective_rank(j.priority, j.staged_tick, now, aging, psched);
+                let borrowed_unit = spent + group.len() >= base;
+                if j.res == res
+                    && skipped_best.is_none_or(|b| jr <= b)
+                    && (!borrowed_unit || j.priority == Priority::Interactive)
+                {
+                    group.push(self.vis_pending.remove(i).expect("index in bounds"));
+                } else {
+                    skipped_best = Some(skipped_best.map_or(jr, |b| b.min(jr)));
+                    i += 1;
+                }
+            }
+            spent += group.len();
+            match self.encode_group(&group) {
+                Ok((entries, dt)) => {
+                    stall_ms += dt;
+                    // Each image's waiters are charged the amortized
+                    // share of the dispatch wall time.
+                    let per_image = dt / group.len() as f64;
+                    for (job, entry) in group.into_iter().zip(entries) {
+                        self.resolve_vision(job.hash, entry, per_image);
+                    }
+                }
+                Err(_) => {
+                    // Isolate the failure: retry each image of the
+                    // group individually so one bad image (or one bad
+                    // dispatch) fails only its own waiters, matching
+                    // the b=1 path's blast radius.
+                    for job in group {
+                        match self.encode_image(job.hash, &job.image) {
+                            Ok((entry, dt)) => {
+                                stall_ms += dt;
+                                self.resolve_vision(job.hash, entry, dt);
+                            }
+                            Err(e) => self.fail_vision_waiters(job.hash, &e),
+                        }
+                    }
+                }
+            }
+        }
+        if spent > base {
+            self.metrics.inc("vision_budget_borrowed", (spent - base) as u64);
         }
         if stall_ms > 0.0 {
             self.metrics.observe_ms("vision_stall", stall_ms);
         }
         self.metrics
             .set_gauge("vision_queue_depth", self.vis_pending.len() as f64);
+    }
+
+    /// Run ONE batched encoder dispatch over a group of same-resolution
+    /// jobs (a single `vision_r{res}` call when the group is a
+    /// singleton or the artifacts predate the batch entries), publish
+    /// every image's embeddings to the cache, and return the entries in
+    /// group order plus the dispatch wall time.  The batched entries
+    /// are an unrolled stack of the single-image graph, so embeddings —
+    /// and the fingerprints recorded from them — are bit-identical to
+    /// per-image encodes.
+    fn encode_group(&mut self, group: &[VisionJob]) -> Result<(Vec<Rc<VisionEntry>>, f64)> {
+        let vinfo = self
+            .engine
+            .rt
+            .info
+            .vision
+            .clone()
+            .ok_or_else(|| anyhow!("model {} has no vision tower", self.engine.rt.info.name))?;
+        let res = group[0].res;
+        let t0 = Instant::now();
+        let patches: Vec<Vec<f32>> = group
+            .iter()
+            .map(|j| {
+                debug_assert_eq!(j.res, res, "cross-resolution batching is never valid");
+                patchify(&vinfo, &j.image.resize(res, res), res)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let (embeds, sizes) = self.engine.rt.vision_encode_batch(res, patches)?;
+        let n_tokens = vinfo.n_visual_tokens[&res];
+        let dt = ms_since(t0, Instant::now());
+        self.metrics.inc("vision_encodes", group.len() as u64);
+        self.metrics.inc("vision_dispatches", sizes.len() as u64);
+        for &b in &sizes {
+            // NB: sizes ride the (log-bucketed, ms-labeled) latency
+            // histogram, so exported quantiles are bucket bounds —
+            // read mean/max, or derive the exact mean as
+            // vision_encodes / vision_dispatches.
+            self.metrics.observe_ms("vision_batch_size", b as f64);
+            if b >= 2 {
+                self.metrics.inc("vision_batched", b as u64);
+            }
+        }
+        self.metrics.observe_ms("vision_encode", dt);
+        let entries = group
+            .iter()
+            .zip(embeds)
+            .map(|(j, e)| {
+                self.mm_cache
+                    .put_embeddings(j.hash, VisionEntry { embeds: e, n_tokens, resolution: res })
+            })
+            .collect();
+        Ok((entries, dt))
     }
 
     /// Run the vision encoder for one image and publish the entry to
@@ -1940,6 +2209,7 @@ impl Scheduler {
         let n_tokens = vinfo.n_visual_tokens[&res];
         let dt = ms_since(t0, Instant::now());
         self.metrics.inc("vision_encodes", 1);
+        self.metrics.inc("vision_dispatches", 1);
         self.metrics.observe_ms("vision_encode", dt);
         let rc = self
             .mm_cache
@@ -1947,24 +2217,49 @@ impl Scheduler {
         Ok((rc, dt))
     }
 
-    /// Deliver a completed encode to every waiting mm request; requests
-    /// whose images are now all resolved proceed to compose + prefill.
+    /// Deliver a completed encode to every waiting mm request.  Parked
+    /// requests whose images are now all resolved proceed to compose +
+    /// prefill; overlap requests append the newly prefix-contiguous
+    /// image rows to their already-staged open-feed job — strictly in
+    /// prompt order — and close the feed (text rows appended, mm
+    /// identity attached) once the last image has composed.
     fn resolve_vision(&mut self, hash: ContentHash, entry: Rc<VisionEntry>, dt_ms: f64) {
         let mut ready: Vec<MmPending> = Vec::new();
+        let mut to_close: Vec<MmPending> = Vec::new();
+        let mut appends: Vec<(u64, Vec<f32>)> = Vec::new();
         let mut i = 0;
         while i < self.mm_waiting.len() {
             let p = &mut self.mm_waiting[i];
             let waiting_on_it = p.hashes.contains(&hash) && !p.resolved.contains_key(&hash);
             if waiting_on_it {
                 p.resolved.insert(hash, entry.clone());
-                // Coalesced waiters each waited the full encode.
+                // Coalesced waiters each waited the (amortized) encode.
                 p.timing.vision_ms += dt_ms;
-                if p.images_resolved() {
+                if let Some(jid) = p.job_id {
+                    let rows = p.compose_frontier();
+                    if !rows.is_empty() {
+                        appends.push((jid, rows));
+                    }
+                    if p.composed == p.hashes.len() {
+                        to_close.push(self.mm_waiting.remove(i));
+                        continue;
+                    }
+                } else if p.images_resolved() {
                     ready.push(self.mm_waiting.remove(i));
                     continue;
                 }
             }
             i += 1;
+        }
+        for (jid, rows) in appends {
+            if let Some(job) = self.pending.iter_mut().find(|j| j.id == jid) {
+                if let Feed::Embeds(v) = &mut job.feed {
+                    v.extend_from_slice(&rows);
+                }
+            }
+        }
+        for p in to_close {
+            self.close_overlap_feed(p);
         }
         for p in ready {
             let (id, events) = (p.id, p.events.clone());
@@ -1975,22 +2270,103 @@ impl Scheduler {
         }
     }
 
-    /// An encode failed: fail every waiting request that needed it,
-    /// then prune queued VisionJobs no live request is waiting on —
-    /// encoding them anyway would burn the per-tick budget (seconds of
-    /// head-of-line delay) on results nobody consumes.
+    /// All images of an overlap request have composed into its staged
+    /// job's feed: fingerprint the raw encoder outputs, append the text
+    /// embedding rows, attach the multimodal identity (the composed
+    /// visual rows double as the eviction-rebuild material), and close
+    /// the feed so the job can finalize once fully fed.
+    fn close_overlap_feed(&mut self, p: MmPending) {
+        let jid = p.job_id.expect("close_overlap_feed requires a linked job");
+        if !self.pending.iter().any(|j| j.id == jid) {
+            // The job already failed (its error was reported then);
+            // nothing left to feed.
+            return;
+        }
+        // Overlap never carries a kv_hit, so the KV cache is the only
+        // fingerprint consumer.
+        let emb_fp = emb_fp_of(&p.hashes, &p.resolved, self.cfg.mm_kv_cache_bytes > 0);
+        let text_rows = match self.engine.rt.embed_lookup(&p.text_tokens) {
+            Ok(r) => r,
+            Err(e) => {
+                self.fail_overlap_job(jid, &e);
+                return;
+            }
+        };
+        let d = self.engine.rt.info.d_model;
+        let Some(job) = self.pending.iter_mut().find(|j| j.id == jid) else { return };
+        if let Feed::Embeds(v) = &mut job.feed {
+            let n_vis = v.len() / d;
+            debug_assert_eq!(n_vis + p.text_tokens.len(), job.total);
+            if let Some(m) = &mut job.mm {
+                m.emb_fp = emb_fp;
+                m.vis_rows = Some(Rc::new(v.clone()));
+                m.n_vis_rows = n_vis;
+            }
+            v.extend_from_slice(&text_rows);
+        }
+        job.feed_open = false;
+        job.timing.vision_ms += p.timing.vision_ms;
+        self.metrics
+            .set_gauge("prefill_queue_depth", self.staged_requests() as f64);
+    }
+
+    /// Fail an overlap job (and its coalesced followers) out of the
+    /// staging queue, then prune encoder work nobody waits on anymore.
+    fn fail_overlap_job(&mut self, jid: u64, e: &anyhow::Error) {
+        if let Some(pos) = self.pending.iter().position(|j| j.id == jid) {
+            let job = self.pending.remove(pos).expect("position yields a valid index");
+            self.fail_followers(&job, e);
+            self.metrics.inc("requests_failed", 1);
+            let _ = job.events.send(Event::Error { id: job.id, message: format!("{e:#}") });
+        }
+        self.drop_overlap_pending(jid);
+    }
+
+    /// Remove the MmPending linked to a dead overlap job (without
+    /// re-reporting its error) and prune orphaned VisionJobs.
+    fn drop_overlap_pending(&mut self, jid: u64) {
+        self.mm_waiting.retain(|p| p.job_id != Some(jid));
+        let waiting = &self.mm_waiting;
+        self.vis_pending.retain(|j| {
+            waiting
+                .iter()
+                .any(|p| p.hashes.contains(&j.hash) && !p.resolved.contains_key(&j.hash))
+        });
+        self.metrics
+            .set_gauge("vision_queue_depth", self.vis_pending.len() as f64);
+        self.metrics
+            .set_gauge("prefill_queue_depth", self.staged_requests() as f64);
+    }
+
+    /// An encode failed: fail every waiting request that needed it
+    /// (overlap requests fail through their staged job, which also
+    /// fails its coalesced followers), then prune queued VisionJobs no
+    /// live request is waiting on — encoding them anyway would burn the
+    /// per-tick budget (seconds of head-of-line delay) on results
+    /// nobody consumes.
     fn fail_vision_waiters(&mut self, hash: ContentHash, e: &anyhow::Error) {
+        let mut dead_jobs: Vec<u64> = Vec::new();
         let mut i = 0;
         while i < self.mm_waiting.len() {
             if self.mm_waiting[i].hashes.contains(&hash)
                 && !self.mm_waiting[i].resolved.contains_key(&hash)
             {
                 let p = self.mm_waiting.remove(i);
-                self.metrics.inc("requests_failed", 1);
-                let _ = p.events.send(Event::Error { id: p.id, message: format!("{e:#}") });
+                match p.job_id {
+                    // The error is reported once, through the job.
+                    Some(jid) => dead_jobs.push(jid),
+                    None => {
+                        self.metrics.inc("requests_failed", 1);
+                        let _ =
+                            p.events.send(Event::Error { id: p.id, message: format!("{e:#}") });
+                    }
+                }
             } else {
                 i += 1;
             }
+        }
+        for jid in dead_jobs {
+            self.fail_overlap_job(jid, e);
         }
         let waiting = &self.mm_waiting;
         self.vis_pending.retain(|j| {
@@ -2112,6 +2488,8 @@ impl Scheduler {
             kv_key,
             kv_hit,
             resolved,
+            job_id: None,
+            composed: 0,
             timing,
             enqueued_at,
             staged_at: t_admit,
@@ -2137,6 +2515,78 @@ impl Scheduler {
             return self.finish_mm_resolve(pend);
         }
 
+        // Expected visual length — known NOW, before any encode runs:
+        // resolutions snap at admission, and every snapped resolution
+        // has a fixed visual-token count.  This is what lets the
+        // overlap gate rule out temporal pooling up front (pooling
+        // averages across image boundaries, so a request that will
+        // pool can only compose once every image has resolved).
+        let vinfo = info.vision.as_ref().expect("vision model checked above");
+        let expected_vis: usize = pend
+            .hashes
+            .iter()
+            .map(|h| match pend.resolved.get(h) {
+                Some(e) => e.n_tokens,
+                None => missing
+                    .iter()
+                    .find(|(mh, _)| mh == h)
+                    .map(|(_, img)| vinfo.n_visual_tokens[&snap_resolution(vinfo, img)])
+                    .expect("unresolved image must be in the missing set"),
+            })
+            .sum();
+
+        // Encode/prefill overlap: instead of parking until every image
+        // resolves, stage an OPEN-feed prefill job now and start
+        // feeding the resolved [vision ++ text] prefix through chunked
+        // embed prefill while later images are still queued — encoder
+        // tail latency hides behind prefill chunks.  Ineligible (and
+        // parked as before): pooling-bound requests, pending "KV only"
+        // validation hits, and configurations without chunked embeds.
+        let max_embed = info.embed_prefill_buckets.last().copied().unwrap_or(0);
+        let overlap_ok = self.cfg.mm_overlap
+            && self.chunk_tokens > 0
+            && self.engine.rt.has_chunk_prefill_embeds()
+            && pend.kv_hit.is_none()
+            && expected_vis + pend.text_tokens.len() <= max_embed;
+
+        // Overlap coalesce: an identical prompt (same images, same
+        // text) already staged serves this request from the same KV
+        // when it completes — its encoder work is already queued or
+        // done, so nothing new is staged here (checked BEFORE the
+        // VisionJob push so a duplicate never enqueues encoder work
+        // nobody waits on).
+        if overlap_ok {
+            let cap = self.engine.max_capacity();
+            if let Some(primary) = self.pending.iter_mut().find(|j| {
+                j.tokens == pend.text_tokens
+                    && j.mm_key == Some(pend.kv_key)
+                    && 2 + j.followers.len() <= cap
+            }) {
+                if pend.priority.rank() < primary.priority.rank() {
+                    primary.priority = pend.priority;
+                }
+                primary.followers.push(Follower {
+                    id,
+                    events: pend.events,
+                    params: pend.params,
+                    priority: pend.priority,
+                    timing: pend.timing,
+                    enqueued_at: pend.enqueued_at,
+                });
+                // A higher-class duplicate also boosts the primary's
+                // still-queued encoder work (the parked path gets this
+                // from the per-image coalesce loop below).
+                for job in self.vis_pending.iter_mut() {
+                    if pend.hashes.contains(&job.hash) && pend.priority.rank() < job.priority.rank()
+                    {
+                        job.priority = pend.priority;
+                    }
+                }
+                self.metrics.inc("prefill_coalesced", 1);
+                return Ok(());
+            }
+        }
+
         // Staged: enqueue a VisionJob per miss, coalescing on content
         // hash — a job already queued for the same image serves this
         // request too (one encode, many waiters).
@@ -2147,13 +2597,55 @@ impl Scheduler {
                 }
                 self.metrics.inc("vision_coalesced", 1);
             } else {
+                let res = snap_resolution(vinfo, &img);
                 self.vis_pending.push_back(VisionJob {
                     hash: h,
                     image: img,
+                    res,
                     priority: pend.priority,
                     staged_tick: self.tick_count,
                 });
             }
+        }
+
+        if overlap_ok {
+            // Compose whatever prefix is already resolved (admission
+            // cache hits) so the first chunks can feed this tick.
+            let rows = pend.compose_frontier();
+            let job = PrefillJob {
+                id,
+                events: pend.events.clone(),
+                params: pend.params.clone(),
+                priority: pend.priority,
+                staged_tick: self.tick_count,
+                tokens: pend.text_tokens.clone(),
+                feed: Feed::Embeds(rows),
+                fed: 0,
+                kv_one: None,
+                source: None,
+                built: 0,
+                total: expected_vis + pend.text_tokens.len(),
+                feed_open: true,
+                catch_up_tokens: 0,
+                // Placeholder identity until the feed closes: the
+                // fingerprint and rebuild rows exist only once every
+                // image has resolved, and an open job can neither
+                // finalize nor shed before then.
+                mm: Some(MmSeq {
+                    hashes: pend.hashes.clone(),
+                    emb_fp: ContentHash([0u8; 32]),
+                    vis_rows: None,
+                    n_vis_rows: 0,
+                }),
+                mm_key: Some(pend.kv_key),
+                prefill_ms: 0.0,
+                staged_at: t_admit,
+                followers: Vec::new(),
+                timing: pend.timing.clone(),
+                enqueued_at: pend.enqueued_at,
+            };
+            pend.job_id = Some(id);
+            self.pending.push_back(job);
         }
         self.mm_waiting.push(pend);
         self.metrics
@@ -2298,16 +2790,11 @@ impl Scheduler {
         // Fingerprint the encoder outputs only when something can read
         // it: a pending "KV only" validation, or a KV cache that will
         // record it at insert.  The no-cache ablation skips the hash.
-        let emb_fp = if p.kv_hit.is_some() || self.cfg.mm_kv_cache_bytes > 0 {
-            let parts: Vec<&[f32]> = p
-                .hashes
-                .iter()
-                .map(|h| p.resolved[h].embeds.as_slice())
-                .collect();
-            emb_fingerprint(&parts)
-        } else {
-            ContentHash([0u8; 32])
-        };
+        let emb_fp = emb_fp_of(
+            &p.hashes,
+            &p.resolved,
+            p.kv_hit.is_some() || self.cfg.mm_kv_cache_bytes > 0,
+        );
 
         // KV-validation (Table 4 "KV only"): the freshly computed
         // embeddings must fingerprint-match what the entry was built
@@ -2420,7 +2907,7 @@ impl Scheduler {
         }
 
         if self.cfg.text_cache_bytes > 0 {
-            if let Some(hit) = self.text_cache.lookup(tokens) {
+            if let Some(hit) = self.text_lookup(tokens) {
                 timing.prefix_hit_tokens = hit.matched;
                 self.metrics.inc("text_prefix_hits", 1);
                 if hit.full {
@@ -2591,8 +3078,7 @@ impl Scheduler {
                         self.mm_put_kv(key, CachedKv::new(kv_one, kv_len), fp);
                     }
                     None => {
-                        self.text_cache
-                            .insert(&a.all_tokens, CachedKv::new_rc(kv_one, kv_len));
+                        self.text_put(&a.all_tokens, CachedKv::new_rc(kv_one, kv_len));
                     }
                 }
             }
@@ -2644,6 +3130,25 @@ enum Resolved {
 
 fn ms_since(a: Instant, b: Instant) -> f64 {
     b.duration_since(a).as_secs_f64() * 1e3
+}
+
+/// Fingerprint a request's raw per-image encoder outputs in prompt
+/// (hash-list) order — the "KV only" validation material recorded at
+/// every mm KV insert.  Returns the zero hash when nothing can consume
+/// it (`wanted` false: no pending validation and no KV cache).  One
+/// definition shared by the parked (`finish_mm_resolve`) and overlap
+/// (`close_overlap_feed`) paths so their cache-validation material can
+/// never drift.
+fn emb_fp_of(
+    hashes: &[ContentHash],
+    resolved: &HashMap<ContentHash, Rc<VisionEntry>>,
+    wanted: bool,
+) -> ContentHash {
+    if !wanted {
+        return ContentHash([0u8; 32]);
+    }
+    let parts: Vec<&[f32]> = hashes.iter().map(|h| resolved[h].embeds.as_slice()).collect();
+    emb_fingerprint(&parts)
 }
 
 /// Host copy of a sequence's multimodal identity for a migration unit

@@ -27,6 +27,7 @@ USAGE:
                 [--sched priority|fifo] [--default-priority normal]
                 [--preemption on|off] [--aging-ticks 64]
                 [--vision-stage on|off] [--vision-encodes-per-step 1]
+                [--vision-batch 8] [--mm-overlap on|off]
                 [--engines 1] [--route rr|load|affinity] [--migrate on|off]
   umserve run   --model NAME --prompt TEXT [--max-tokens 64] [--temperature 0]
                 [--top-k 0] [--top-p 1.0] [--image PATH ...via --image=path]
@@ -52,9 +53,18 @@ MULTIMODAL:
   admission never stalls decoding sequences for more than one encode
   unit per tick (inline encoding stalls them for the whole batch).
   Concurrent requests for the same image (by content hash) coalesce
-  onto one encode.  Evicted multimodal sequences checkpoint their KV
-  into the mm cache and resume via a KV hit or a chunked embed
-  re-prefill.  --vision-stage off restores inline encoding.
+  onto one encode.  Queued SAME-resolution encodes are batched: up to
+  --vision-batch images share one vision_r{res}_b{B} dispatch (bit-
+  identical to per-image encodes; --vision-batch 1 restores one
+  dispatch per image).  Interactive-class encodes may borrow the
+  per-tick budget headroom batch-class work leaves unused.  With
+  --mm-overlap on (the default) a multi-image request starts feeding
+  its resolved [vision ++ text] prefix through chunked embed prefill
+  while later images are still encoding, so encoder tail latency
+  hides behind prefill chunks.  Evicted multimodal sequences
+  checkpoint their KV into the mm cache and resume via a KV hit or a
+  chunked embed re-prefill.  --vision-stage off restores inline
+  encoding.
 
 CLUSTER:
   --engines N serves from N independent scheduler replicas (each with
@@ -116,6 +126,8 @@ fn engine_config(args: &argparse::Args) -> anyhow::Result<EngineConfig> {
         preemption: args.on_off("preemption", true)?,
         vision_stage: args.on_off("vision-stage", true)?,
         vision_encodes_per_step: args.usize("vision-encodes-per-step", 1)?,
+        vision_batch: args.usize("vision-batch", 8)?,
+        mm_overlap: args.on_off("mm-overlap", true)?,
         default_priority,
         aging_ticks: args.usize("aging-ticks", 64)? as u64,
     })

@@ -94,6 +94,7 @@ mod tests {
             resolutions: vec![224, 448, 768, 1024],
             n_patches: BTreeMap::from([(224, 49), (448, 196), (768, 576), (1024, 1024)]),
             n_visual_tokens: BTreeMap::from([(224, 16), (448, 49), (768, 144), (1024, 256)]),
+            batch_buckets: vec![2, 4, 8],
         }
     }
 

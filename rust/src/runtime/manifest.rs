@@ -64,6 +64,10 @@ pub struct VisionInfo {
     /// resolution -> patch count / visual token count
     pub n_patches: BTreeMap<usize, usize>,
     pub n_visual_tokens: BTreeMap<usize, usize>,
+    /// Batch sizes with a lowered `vision_r{res}_b{B}` entry (empty for
+    /// manifests predating batched vision encoding — the runtime then
+    /// encodes one image per dispatch).
+    pub batch_buckets: Vec<usize>,
 }
 
 #[derive(Debug, Clone)]
@@ -150,6 +154,17 @@ impl ModelInfo {
     pub fn trim_bucket_for(&self, n: usize) -> Option<usize> {
         let need = n.max(self.logits_rows());
         self.trim_kv_buckets.iter().copied().find(|&s| s >= need)
+    }
+
+    /// Largest lowered vision batch bucket <= `n` pending same-resolution
+    /// images (None when only the single-image entry applies).
+    pub fn vision_batch_bucket_for(&self, resolution: usize, n: usize) -> Option<usize> {
+        let v = self.vision.as_ref()?;
+        v.batch_buckets
+            .iter()
+            .rev()
+            .copied()
+            .find(|&b| b >= 2 && b <= n && self.has_entry(&format!("vision_r{resolution}_b{b}")))
     }
 
     pub fn has_entry(&self, name: &str) -> bool {
@@ -284,6 +299,11 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
                 resolutions,
                 n_patches,
                 n_visual_tokens,
+                // Optional: absent in pre-batching manifests.
+                batch_buckets: match j.get("batch_buckets") {
+                    Some(Json::Null) | None => Vec::new(),
+                    Some(b) => usize_list(b, "vision.batch_buckets")?,
+                },
             })
         }
     };
@@ -360,6 +380,27 @@ mod tests {
         assert_eq!(v.n_patches[&1024], 1024);
         assert!(m.entries.contains_key("vision_r1024"));
         assert!(m.entries.contains_key("prefill_embeds_s192"));
+        // Batched encoder grids.
+        assert_eq!(v.batch_buckets, vec![2, 4, 8]);
+        assert!(m.entries.contains_key("vision_r224_b8"));
+        assert_eq!(m.vision_batch_bucket_for(224, 8), Some(8));
+        assert_eq!(m.vision_batch_bucket_for(224, 7), Some(4));
+        assert_eq!(m.vision_batch_bucket_for(224, 1), None, "b=1 uses the single entry");
+        assert_eq!(m.vision_batch_bucket_for(224, 100), Some(8));
+    }
+
+    #[test]
+    fn text_models_carry_trim_grids() {
+        // The text prefix cache trims its entries too, so every model —
+        // not just the vision ones — lowers the trim/untrim pair.
+        let store = ArtifactStore::open(artifacts_dir()).unwrap();
+        let m = store.model("qwen3-0.6b").unwrap();
+        assert!(!m.trim_kv_buckets.is_empty());
+        for &s in &m.trim_kv_buckets {
+            assert!(m.entries.contains_key(&format!("trim_kv_s{s}")));
+            assert!(m.entries.contains_key(&format!("untrim_kv_s{s}")));
+            assert!(s >= m.logits_rows() && s < m.s_max);
+        }
     }
 
     #[test]

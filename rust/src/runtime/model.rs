@@ -403,6 +403,71 @@ impl ModelRuntime {
         )
     }
 
+    /// Encode a group of same-resolution images through the batched
+    /// `vision_r{res}_b{B}` entries: repeatedly take the largest lowered
+    /// bucket <= the remaining count as ONE dispatch and split the
+    /// [B, T, d] output back into per-image host embeddings; a remainder
+    /// smaller than every bucket falls back to single `vision_r{res}`
+    /// dispatches.  The batched entries are an unrolled stack of the
+    /// single-image graph, so the returned embeddings are bit-identical
+    /// to per-image encodes — cache contents never depend on batch
+    /// composition.
+    ///
+    /// Returns the per-image embeddings (each `[T * d_model]` floats,
+    /// row-major) in input order, plus the dispatch sizes actually
+    /// issued (for dispatch-count metrics; `sizes.len()` executions ran,
+    /// `sizes.iter().sum() == patches.len()`).
+    pub fn vision_encode_batch(
+        &self,
+        resolution: usize,
+        patches: Vec<Vec<f32>>,
+    ) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
+        let v = self
+            .info
+            .vision
+            .as_ref()
+            .ok_or_else(|| anyhow!("{} has no vision tower", self.info.name))?;
+        let p = *v
+            .n_patches
+            .get(&resolution)
+            .ok_or_else(|| anyhow!("unsupported resolution {resolution}"))?;
+        let t = v.n_visual_tokens[&resolution];
+        let d = self.info.d_model;
+        let mut out: Vec<Vec<f32>> = Vec::with_capacity(patches.len());
+        let mut sizes: Vec<usize> = Vec::new();
+        let mut queue = patches.into_iter();
+        let mut remaining = queue.len();
+        while remaining > 0 {
+            match self.info.vision_batch_bucket_for(resolution, remaining) {
+                Some(b) => {
+                    let mut flat: Vec<f32> = Vec::with_capacity(b * p * v.patch_dim);
+                    for _ in 0..b {
+                        let one = queue.next().expect("bucket <= remaining");
+                        debug_assert_eq!(one.len(), p * v.patch_dim);
+                        flat.extend_from_slice(&one);
+                    }
+                    let buf = self.run(
+                        &format!("vision_r{resolution}_b{b}"),
+                        &[Input::F32(flat, vec![b, p, v.patch_dim])],
+                    )?;
+                    let host = self.to_host_f32(&buf)?;
+                    debug_assert_eq!(host.len(), b * t * d);
+                    out.extend(host.chunks_exact(t * d).map(|c| c.to_vec()));
+                    sizes.push(b);
+                    remaining -= b;
+                }
+                None => {
+                    let one = queue.next().expect("checked non-empty");
+                    let buf = self.vision_encode(resolution, one)?;
+                    out.push(self.to_host_f32(&buf)?);
+                    sizes.push(1);
+                    remaining -= 1;
+                }
+            }
+        }
+        Ok((out, sizes))
+    }
+
     /// Whether this model's artifacts carry the `trim_kv_s{s}` /
     /// `untrim_kv_s{s}` pair for a grid size.
     pub fn has_trim_kv(&self, s: usize) -> bool {

@@ -85,6 +85,29 @@ fn text_prefix_cache_full_hit_reproduces_output() {
 }
 
 #[test]
+fn text_prefix_cache_trims_entries_device_side() {
+    // Text CachedKv inserts route through the trim_kv grids like the mm
+    // cache (PR-4 follow-up): a short sequence stores on the smallest
+    // covering grid instead of an s_max-sized kv_one, the cache's byte
+    // accounting reflects the trimmed allocation, and a full hit
+    // re-expands (untrim) to byte-identical greedy output.
+    let mut s = Scheduler::new(cfg("qwen3-0.6b")).unwrap();
+    let prompt = PromptInput::Tokens(vec![1, 6, 10, 14]);
+    let (t1, _, _, _) = run_one(&mut s, prompt.clone_for_test(), SamplingParams::greedy(8));
+    assert!(
+        s.metrics.counter("text_kv_trims") >= 1,
+        "finished text KV must be trimmed at insert"
+    );
+    let bytes = s.snapshot().text_cache.3;
+    let full = umserve::cache::kv_one_bytes(&s.engine.rt.info);
+    assert!(bytes > 0 && bytes < full, "trimmed charge {bytes} must undercut s_max cost {full}");
+
+    let (t2, _, _, tm2) = run_one(&mut s, prompt, SamplingParams::greedy(8));
+    assert!(tm2.kv_full_hit, "second run must fully hit the trimmed entry");
+    assert_eq!(t1, t2, "untrimmed-hit output diverged");
+}
+
+#[test]
 fn text_prefix_cache_partial_hit_catches_up_correctly() {
     let mut s = Scheduler::new(cfg("qwen3-0.6b")).unwrap();
     let shared: Vec<i32> = (1..40).map(|i| (i * 7) % 1500 + 4).collect();

@@ -1,0 +1,375 @@
+//! Batched vision encoding + encode/prefill overlap, over REAL
+//! artifacts (qwen3-vl-4b sim).  Requires `make artifacts`.
+//!
+//! * batched-vs-sequential equivalence: a b=8 flood produces the SAME
+//!   embeddings (bit-identical — the batched entries are an unrolled
+//!   stack of the single-image graph), the same content-hash cache
+//!   entries, and byte-identical greedy streams, in 1/8 the encoder
+//!   dispatches
+//! * mixed-resolution grouping: images snapped to different encoder
+//!   resolutions never share a dispatch
+//! * encode/prefill overlap: a multi-image request starts feeding its
+//!   resolved [vision ++ text] prefix chunks BEFORE its last image's
+//!   encode completes (`mm_overlap_chunks` > 0), with byte-identical
+//!   output vs the parked path; pooling-bound requests stay parked
+//! * overlap + eviction: a sequence admitted through the overlap path,
+//!   later evicted mid-decode, resumes byte-identically
+//! * priority-aware encode budget: interactive-class encodes borrow
+//!   the per-tick headroom batch-class work leaves unused
+//!   (`vision_budget_borrowed`), batch-class encodes never exceed the
+//!   base budget
+
+use std::sync::mpsc::{channel, Receiver};
+use std::time::Instant;
+
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{EngineConfig, Event, GenRequest, Priority, PromptInput};
+use umserve::engine::sampler::SamplingParams;
+use umserve::multimodal::image::{generate_image, ImageSource};
+
+fn art_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        model: "qwen3-vl-4b".into(),
+        artifacts_dir: art_dir(),
+        warmup: false,
+        ..Default::default()
+    }
+}
+
+fn submit(
+    s: &mut Scheduler,
+    id: u64,
+    prompt: PromptInput,
+    n_new: usize,
+    priority: Priority,
+) -> Receiver<Event> {
+    let (tx, rx) = channel();
+    s.submit(GenRequest {
+        id,
+        prompt,
+        params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) },
+        priority,
+        events: tx,
+        enqueued_at: Instant::now(),
+    });
+    rx
+}
+
+fn mm_prompt(seeds: &[u64], side: usize, text: &str) -> PromptInput {
+    PromptInput::Multimodal {
+        images: seeds
+            .iter()
+            .map(|&s| ImageSource::Bytes(generate_image(s, side).encode_raw()))
+            .collect(),
+        text: text.into(),
+    }
+}
+
+fn tokens_of(rx: &Receiver<Event>) -> Vec<i32> {
+    rx.try_iter()
+        .filter_map(|e| match e {
+            Event::Token { token, .. } if token >= 0 => Some(token),
+            Event::Error { message, .. } => panic!("request failed: {message}"),
+            _ => None,
+        })
+        .collect()
+}
+
+// ---------------------------------------- batched-vs-sequential encode
+
+#[test]
+fn batched_encode_matches_sequential_encodes() {
+    let seeds: Vec<u64> = (0..8).map(|i| 9100 + i).collect();
+    let run = |vision_batch: usize| {
+        let mut s = Scheduler::new(EngineConfig {
+            vision_batch,
+            vision_encodes_per_step: 8,
+            ..cfg()
+        })
+        .unwrap();
+        let rx = submit(&mut s, 1, mm_prompt(&seeds, 224, "describe the set"), 6, Priority::Normal);
+        s.run_until_idle();
+        let toks = tokens_of(&rx);
+        assert_eq!(toks.len(), 6);
+        // Pull every image's cached embeddings by content hash.
+        let embeds: Vec<Vec<f32>> = seeds
+            .iter()
+            .map(|&sd| {
+                let h = generate_image(sd, 224).content_hash();
+                s.mm_cache_mut()
+                    .peek_embeddings(&h)
+                    .expect("encode must populate the embedding cache")
+                    .embeds
+                    .clone()
+            })
+            .collect();
+        (
+            toks,
+            embeds,
+            s.metrics.counter("vision_encodes"),
+            s.metrics.counter("vision_dispatches"),
+            s.metrics.counter("vision_batched"),
+        )
+    };
+
+    let (seq_toks, seq_emb, seq_enc, seq_disp, seq_batched) = run(1);
+    let (bat_toks, bat_emb, bat_enc, bat_disp, bat_batched) = run(8);
+
+    // Same work, fewer dispatches.
+    assert_eq!(seq_enc, 8);
+    assert_eq!(bat_enc, 8);
+    assert_eq!(seq_disp, 8, "b=1 must dispatch once per image");
+    assert_eq!(bat_disp, 1, "8 same-resolution images must share one b=8 dispatch");
+    assert_eq!(seq_batched, 0);
+    assert_eq!(bat_batched, 8);
+
+    // Bit-identical embeddings -> identical cache entries and
+    // fingerprints, whichever batch size encoded an image first.
+    for (i, (a, b)) in seq_emb.iter().zip(&bat_emb).enumerate() {
+        assert_eq!(a, b, "image {i}: batched embeddings diverged from sequential");
+    }
+    assert_eq!(seq_toks, bat_toks, "batched encode changed greedy output");
+}
+
+#[test]
+fn mixed_resolutions_never_share_a_dispatch() {
+    // 4 images snapped to 224 + 4 snapped to 448 in one request: the
+    // group former must issue one b=4 dispatch per resolution, never a
+    // cross-resolution batch (which would be shape-invalid anyway).
+    let sides = [(1u64, 224), (2, 224), (3, 224), (4, 224), (5, 448), (6, 448), (7, 448), (8, 448)];
+    let images: Vec<ImageSource> = sides
+        .iter()
+        .map(|&(sd, side)| ImageSource::Bytes(generate_image(sd, side).encode_raw()))
+        .collect();
+    let mk = || PromptInput::Multimodal { images: images.clone(), text: "compare".into() };
+
+    let mut s = Scheduler::new(EngineConfig {
+        vision_batch: 8,
+        vision_encodes_per_step: 8,
+        ..cfg()
+    })
+    .unwrap();
+    let rx = submit(&mut s, 1, mk(), 4, Priority::Normal);
+    assert_eq!(s.vision_queued_count(), 8);
+    s.tick();
+    assert_eq!(s.vision_queued_count(), 0, "budget 8 must drain all 8 in one tick");
+    assert_eq!(s.metrics.counter("vision_encodes"), 8);
+    assert_eq!(
+        s.metrics.counter("vision_dispatches"),
+        2,
+        "4x224 + 4x448 must group into exactly one b=4 dispatch per resolution"
+    );
+    s.run_until_idle();
+    let batched_toks = tokens_of(&rx);
+    assert_eq!(batched_toks.len(), 4);
+
+    // Identical stream without batching.
+    let mut seq = Scheduler::new(EngineConfig { vision_batch: 1, ..cfg() }).unwrap();
+    let rx2 = submit(&mut seq, 1, mk(), 4, Priority::Normal);
+    seq.run_until_idle();
+    assert_eq!(seq.metrics.counter("vision_dispatches"), 8);
+    assert_eq!(tokens_of(&rx2), batched_toks);
+}
+
+// ------------------------------------------- encode/prefill overlap
+
+#[test]
+fn overlap_feeds_prefix_chunks_before_last_encode_completes() {
+    // 3 distinct 448 images (49 visual tokens each; 147 + text fits the
+    // 640 embed bucket, so no pooling and the overlap path engages).
+    let mk = || mm_prompt(&[7101, 7102, 7103], 448, "walk through these scenes");
+
+    let mut s = Scheduler::new(cfg()).unwrap();
+    let rx = submit(&mut s, 1, mk(), 6, Priority::Normal);
+    // Overlap admission: the request holds an open-feed staged job (1
+    // queued unit) instead of a fully-blocked pending, with its 3
+    // encodes staged.
+    assert_eq!(s.queued_count(), 1, "overlap request must be counted once, via its job");
+    assert_eq!(s.vision_queued_count(), 3);
+
+    // After the first tick one image has resolved AND its rows were fed
+    // as prefill chunks in the same tick — prompt processing is under
+    // way while 2 encodes are still queued.
+    s.tick();
+    assert_eq!(s.vision_queued_count(), 2);
+    let overlap_chunks = s.metrics.counter("mm_overlap_chunks");
+    assert!(
+        overlap_chunks >= 1,
+        "no prefill chunk fed while encodes were still pending (overlap never engaged)"
+    );
+    s.run_until_idle();
+    let overlap_toks = tokens_of(&rx);
+    assert_eq!(overlap_toks.len(), 6);
+
+    // Byte-identical to the parked path...
+    let mut parked = Scheduler::new(EngineConfig { mm_overlap: false, ..cfg() }).unwrap();
+    let rx2 = submit(&mut parked, 1, mk(), 6, Priority::Normal);
+    parked.run_until_idle();
+    assert_eq!(parked.metrics.counter("mm_overlap_chunks"), 0);
+    assert_eq!(tokens_of(&rx2), overlap_toks, "overlap changed greedy output");
+
+    // ...and to inline encoding.
+    let mut inline_ = Scheduler::new(EngineConfig { vision_stage: false, ..cfg() }).unwrap();
+    let rx3 = submit(&mut inline_, 1, mk(), 6, Priority::Normal);
+    inline_.run_until_idle();
+    assert_eq!(tokens_of(&rx3), overlap_toks);
+}
+
+#[test]
+fn pooling_bound_requests_stay_parked() {
+    // 14 x 448 images = 686 visual tokens + text > the 640 embed
+    // bucket: composition must pool across image boundaries, so the
+    // overlap gate routes the request through the parked path even
+    // with mm_overlap on.
+    let seeds: Vec<u64> = (0..14).map(|i| 7300 + i).collect();
+    let mk = || mm_prompt(&seeds, 448, "summarize the clip");
+
+    let mut s = Scheduler::new(EngineConfig { vision_encodes_per_step: 8, ..cfg() }).unwrap();
+    let rx = submit(&mut s, 1, mk(), 4, Priority::Normal);
+    assert_eq!(
+        s.queued_count(),
+        1,
+        "pooling-bound request must park as a pending, not stage an open job"
+    );
+    s.run_until_idle();
+    assert_eq!(s.metrics.counter("mm_overlap_chunks"), 0);
+    assert!(s.metrics.counter("mm_temporal_pools") >= 1, "pooling must engage");
+    let toks = tokens_of(&rx);
+
+    let mut inline_ = Scheduler::new(EngineConfig { vision_stage: false, ..cfg() }).unwrap();
+    let rx2 = submit(&mut inline_, 1, mk(), 4, Priority::Normal);
+    inline_.run_until_idle();
+    assert_eq!(tokens_of(&rx2), toks);
+}
+
+/// Fill every decode slot with batch-class multi-image (overlap-path)
+/// sequences, then land an interactive arrival; with preemption a
+/// decoding mm sequence is evicted and must resume byte-identically.
+fn run_overlap_evict_workload(preemption: bool) -> (Vec<(u64, Vec<i32>)>, u64) {
+    let mut s = Scheduler::new(EngineConfig {
+        preemption,
+        cache_finished: false,
+        text_cache_bytes: 64 << 20,
+        aging_ticks: 0,
+        ..cfg()
+    })
+    .unwrap();
+    let capacity = s.engine.max_capacity();
+    let mut rxs: Vec<(u64, Receiver<Event>)> = Vec::new();
+    for i in 0..capacity as u64 {
+        // Two images per request (shared across requests -> one encode
+        // each), distinct questions -> distinct KV; all admitted via
+        // the overlap path (no pooling).
+        let p = mm_prompt(&[61, 62], 224, &format!("question {i} about the pair"));
+        rxs.push((100 + i, submit(&mut s, 100 + i, p, 48, Priority::Batch)));
+    }
+    let mut guard = 0;
+    while s.active_count() < capacity {
+        s.tick();
+        guard += 1;
+        assert!(guard < 300, "mm flood never filled the decode arena");
+    }
+    assert!(s.metrics.counter("mm_overlap_chunks") >= 1, "flood must use the overlap path");
+    rxs.push((
+        900,
+        submit(&mut s, 900, PromptInput::Tokens(vec![1, 9, 14]), 4, Priority::Interactive),
+    ));
+    s.run_until_idle();
+
+    let evictions = s.metrics.counter("evictions");
+    assert_eq!(
+        evictions,
+        s.metrics.counter("evicted_resumes"),
+        "every evicted sequence must resume"
+    );
+    (rxs.iter().map(|(id, rx)| (*id, tokens_of(rx))).collect(), evictions)
+}
+
+#[test]
+fn overlap_admitted_sequence_evicts_and_resumes_byte_identical() {
+    let (with_preempt, evictions) = run_overlap_evict_workload(true);
+    assert!(evictions >= 1, "interactive arrival must evict a decoding mm sequence");
+    let (without, zero) = run_overlap_evict_workload(false);
+    assert_eq!(zero, 0);
+    assert_eq!(
+        with_preempt, without,
+        "evicted-then-resumed overlap-admitted output diverged from the unpreempted run"
+    );
+}
+
+// ------------------------------------- priority-aware encode budget
+
+#[test]
+fn interactive_borrows_unused_batch_headroom() {
+    // vision_batch=1 isolates budget accounting from dispatch grouping.
+    let base_cfg = || EngineConfig {
+        vision_encodes_per_step: 2,
+        vision_batch: 1,
+        ..cfg()
+    };
+
+    // Interactive flood, no batch-class work waiting: 4 encodes land in
+    // ONE tick (base 2 + borrowed 2).
+    let mut s = Scheduler::new(base_cfg()).unwrap();
+    let rx = submit(
+        &mut s,
+        1,
+        mm_prompt(&[8201, 8202, 8203, 8204], 224, "what changed"),
+        4,
+        Priority::Interactive,
+    );
+    assert_eq!(s.vision_queued_count(), 4);
+    s.tick();
+    assert_eq!(s.vision_queued_count(), 0, "interactive must borrow the unused headroom");
+    assert_eq!(s.metrics.counter("vision_budget_borrowed"), 2);
+    s.run_until_idle();
+    assert_eq!(tokens_of(&rx).len(), 4);
+
+    // The same flood at batch class gets the base budget only.
+    let mut s2 = Scheduler::new(base_cfg()).unwrap();
+    let rx2 = submit(
+        &mut s2,
+        1,
+        mm_prompt(&[8201, 8202, 8203, 8204], 224, "what changed"),
+        4,
+        Priority::Batch,
+    );
+    s2.tick();
+    assert_eq!(s2.vision_queued_count(), 2, "batch class must not exceed the base budget");
+    assert_eq!(s2.metrics.counter("vision_budget_borrowed"), 0);
+    s2.tick();
+    assert_eq!(s2.vision_queued_count(), 0);
+    s2.run_until_idle();
+    assert_eq!(tokens_of(&rx2).len(), 4);
+
+    // With batch-class encodes actually waiting, the headroom is in
+    // use: interactive keeps the base share (served first), no borrow.
+    let mut s3 = Scheduler::new(base_cfg()).unwrap();
+    let _rx_b = submit(
+        &mut s3,
+        1,
+        mm_prompt(&[8301, 8302], 224, "batch pair"),
+        2,
+        Priority::Batch,
+    );
+    let _rx_i = submit(
+        &mut s3,
+        2,
+        mm_prompt(&[8401, 8402, 8403, 8404], 224, "interactive set"),
+        2,
+        Priority::Interactive,
+    );
+    assert_eq!(s3.vision_queued_count(), 6);
+    s3.tick();
+    assert_eq!(
+        s3.vision_queued_count(),
+        4,
+        "borrow must shrink to zero while batch-class encodes wait"
+    );
+    assert_eq!(s3.metrics.counter("vision_budget_borrowed"), 0);
+    s3.run_until_idle();
+}
