@@ -31,6 +31,7 @@ from . import model as M
 from . import vision as V
 from .configs import (
     EMBED_PREFILL_BUCKETS,
+    KV_PAGE_SIZE,
     MODELS,
     PREFILL_CHUNK_BUCKETS,
     VISION_BATCH_BUCKETS,
@@ -197,6 +198,135 @@ class EntryBuilder:
             donate=(3,),
         )
 
+    # ---- paged-KV entries ------------------------------------------------
+
+    def decode_paged(self, b: int):
+        cfg = self.cfg
+        pool = spec(M.kv_pool_shape(cfg), F32)
+        nblk = cfg.kv_blocks_per_seq()
+        self.lower(
+            f"decode_paged_b{b}",
+            functools.partial(M.decode_paged_fn, cfg),
+            [
+                arg_desc("tokens", "input", spec((b,), I32)),
+                arg_desc("pos", "input", spec((b,), I32)),
+                arg_desc("tables", "input", spec((b, nblk), I32)),
+                arg_desc("mailbox", "input", spec((b,), I32)),
+                arg_desc("pool", "input", pool),
+            ],
+            [spec((b,), I32), spec((b,), I32), spec((b, nblk), I32),
+             spec((b,), I32), pool],
+            self.t_order,
+            self.t_specs,
+            donate=(4,),
+        )
+
+    def prefill_chunk_paged(self, c: int):
+        cfg = self.cfg
+        pool = spec(M.kv_pool_shape(cfg), F32)
+        nblk = cfg.kv_blocks_per_seq()
+        self.lower(
+            f"prefill_chunk_paged_c{c}",
+            functools.partial(M.prefill_chunk_paged_fn, cfg),
+            [
+                arg_desc("tokens", "input", spec((c,), I32)),
+                arg_desc("start", "input", spec((), I32)),
+                arg_desc("length", "input", spec((), I32)),
+                arg_desc("tables", "input", spec((nblk,), I32)),
+                arg_desc("mailbox", "input", spec((), I32)),
+                arg_desc("pool", "input", pool),
+            ],
+            [spec((c,), I32), spec((), I32), spec((), I32), spec((nblk,), I32),
+             spec((), I32), pool],
+            self.t_order,
+            self.t_specs,
+            donate=(5,),
+        )
+
+    def prefill_chunk_embeds_paged(self, c: int):
+        cfg = self.cfg
+        pool = spec(M.kv_pool_shape(cfg), F32)
+        nblk = cfg.kv_blocks_per_seq()
+        self.lower(
+            f"prefill_chunk_embeds_paged_c{c}",
+            functools.partial(M.prefill_chunk_embeds_paged_fn, cfg),
+            [
+                arg_desc("embeds", "input", spec((c, cfg.d_model), F32)),
+                arg_desc("start", "input", spec((), I32)),
+                arg_desc("length", "input", spec((), I32)),
+                arg_desc("tables", "input", spec((nblk,), I32)),
+                arg_desc("mailbox", "input", spec((), I32)),
+                arg_desc("pool", "input", pool),
+            ],
+            [spec((c, cfg.d_model), F32), spec((), I32), spec((), I32),
+             spec((nblk,), I32), spec((), I32), pool],
+            self.t_order,
+            self.t_specs,
+            donate=(5,),
+        )
+
+    def adopt_paged(self):
+        cfg = self.cfg
+        pool = spec(M.kv_pool_shape(cfg), F32)
+        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
+        nblk = cfg.kv_blocks_per_seq()
+        self.lower(
+            "adopt_paged",
+            functools.partial(M.adopt_paged_fn, cfg),
+            [
+                arg_desc("pool", "input", pool),
+                arg_desc("kv_one", "input", kv_one),
+                arg_desc("tables", "input", spec((nblk,), I32)),
+                arg_desc("mailbox", "input", spec((), I32)),
+            ],
+            [pool, kv_one, spec((nblk,), I32), spec((), I32)],
+            [],
+            [],
+            donate=(0,),
+        )
+
+    def copy_page(self):
+        cfg = self.cfg
+        pool = spec(M.kv_pool_shape(cfg), F32)
+        self.lower(
+            "copy_page",
+            functools.partial(M.copy_page_fn, cfg),
+            [
+                arg_desc("pool", "input", pool),
+                arg_desc("src", "input", spec((), I32)),
+                arg_desc("dst", "input", spec((), I32)),
+            ],
+            [pool, spec((), I32), spec((), I32)],
+            [],
+            [],
+            donate=(0,),
+        )
+
+    def zeros_pool(self):
+        self.lower(
+            "zeros_pool",
+            functools.partial(M.zeros_pool_fn, self.cfg),
+            [],
+            [],
+            [],
+            [],
+        )
+
+    def read_logits_page(self):
+        cfg = self.cfg
+        pool = spec(M.kv_pool_shape(cfg), F32)
+        self.lower(
+            "read_logits_page",
+            functools.partial(M.read_logits_page_fn, cfg),
+            [
+                arg_desc("pool", "input", pool),
+                arg_desc("page", "input", spec((), I32)),
+            ],
+            [pool, spec((), I32)],
+            [],
+            [],
+        )
+
     def zeros(self, b: int):
         self.lower(
             f"zeros_b{b}",
@@ -345,6 +475,7 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
     eb = EntryBuilder(cfg, weights, out_dir, force)
     for b in cfg.decode_buckets:
         eb.decode(b)
+        eb.decode_paged(b)
         eb.inject(b)
         eb.extract(b)
         eb.read_logits(b)
@@ -354,6 +485,13 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
         eb.prefill(s)
     for c in PREFILL_CHUNK_BUCKETS:
         eb.prefill_chunk(c)
+        eb.prefill_chunk_paged(c)
+    # Paged-KV pool entries (bucket-independent: one pool serves every
+    # decode bucket, so grow/shrink swaps executables without touching KV).
+    eb.adopt_paged()
+    eb.copy_page()
+    eb.zeros_pool()
+    eb.read_logits_page()
     # KV trim/untrim for EVERY model: the mm KV cache stores whole
     # multimodal prompts and the text prefix cache stores finished /
     # evicted text sequences — both trim their s_max-sized kv_one
@@ -368,6 +506,7 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
             eb.embed_lookup(s)
         for c in PREFILL_CHUNK_BUCKETS:
             eb.prefill_chunk_embeds(c)
+            eb.prefill_chunk_embeds_paged(c)
         for r in cfg.vision.resolutions:
             eb.vision(r)
             for b in VISION_BATCH_BUCKETS:
@@ -396,6 +535,8 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
         "prefill_chunk_buckets": list(PREFILL_CHUNK_BUCKETS),
         "embed_prefill_buckets": list(EMBED_PREFILL_BUCKETS) if cfg.vision else [],
         "trim_kv_buckets": list(cfg.trim_kv_buckets()),
+        "kv_page_size": KV_PAGE_SIZE,
+        "kv_pool_pages": cfg.kv_pool_pages(),
         "vision": (
             {
                 "d_model": cfg.vision.d_model,

@@ -15,6 +15,13 @@ S_MAX = 640          # KV arena length: 512 prompt + 128 generation
 VOCAB = 2048
 Q4_GROUP = 32
 
+# Paged-KV page size in token positions.  Must divide S_MAX so one
+# sequence maps to exactly S_MAX // KV_PAGE_SIZE block-table entries,
+# and the per-page mailbox region (plane 0, k side: n_kv_heads *
+# KV_PAGE_SIZE * d_head floats) must cover VOCAB for every model in the
+# zoo (smallest: qwen3-0.6b at 2*64*16 = 2048 = VOCAB).
+KV_PAGE_SIZE = 64
+
 
 @dataclasses.dataclass(frozen=True)
 class MoeConfig:
@@ -81,6 +88,24 @@ class ModelConfig:
     def logits_rows(self) -> int:
         """Rows of the plane-0 logits mailbox: ceil(vocab / d_head)."""
         return -(-self.vocab // self.d_head)
+
+    def kv_blocks_per_seq(self) -> int:
+        """Block-table length: pages covering one s_max-long sequence."""
+        assert self.s_max % KV_PAGE_SIZE == 0, (self.s_max, KV_PAGE_SIZE)
+        return self.s_max // KV_PAGE_SIZE
+
+    def kv_pool_pages(self) -> int:
+        """Physical pages in the paged-KV pool lowered for this model.
+
+        Sized so the largest decode bucket can hold full-length
+        sequences (blocks + one mailbox page each) twice over — the
+        surplus is what the prefix caches pin for zero-copy reuse.  The
+        Rust allocator reserves page 0 as the garbage sink for inactive
+        decode lanes and may cap its *usable* budget below this at run
+        time (the paged-KV ablation does); this constant only fixes the
+        lowered pool shape.
+        """
+        return 2 * max(self.decode_buckets) * (self.kv_blocks_per_seq() + 1)
 
     def trim_kv_buckets(self) -> Tuple[int, ...]:
         """Position grids for the cached-KV trim entries

@@ -35,7 +35,7 @@ from typing import Dict, List, Sequence
 import jax
 import jax.numpy as jnp
 
-from .configs import ModelConfig, Q4_GROUP
+from .configs import KV_PAGE_SIZE, ModelConfig, Q4_GROUP
 from .kernels.attention import decode_attention
 from .kernels.quant_matmul import quant_matmul
 from .weights import text_weight_order
@@ -381,6 +381,254 @@ def zeros_fn(cfg: ModelConfig, batch: int):
     """Device-side zero arena allocator (`zeros_b{B}`): replaces the
     host-side vec![0f32] upload on every arena creation/migration."""
     return jnp.zeros(kv_arena_shape(cfg, batch), jnp.float32)
+
+
+# ---------------------------------------------------------------- paged KV
+
+def kv_pool_shape(cfg: ModelConfig):
+    """Page-pool layout: the slot arena with `batch` -> physical pages
+    and `s_max` -> KV_PAGE_SIZE.
+
+        pool[plane, 0=k|1=v, page, kv_head, offset, d_head]  f32
+
+    A sequence of length `len` owns ceil(len / page) KV pages named by
+    its block table (block j covers absolute positions j*page ..
+    j*page+page-1) plus one private mailbox page whose plane-0 k-side
+    region (flattened [Hkv*page, Dh]) holds its last logits.  Page 0 is
+    the reserved garbage sink: inactive decode lanes point their block
+    tables and mailbox at it, so their garbage-in/garbage-out compute
+    scatters harmlessly (it is never allocated, never read).
+    """
+    return (cfg.n_layers + 1, 2, cfg.kv_pool_pages(), cfg.n_kv_heads,
+            KV_PAGE_SIZE, cfg.d_head)
+
+
+def _mailbox_pad(cfg: ModelConfig, logits):
+    """[N, vocab] logits -> [N, Hkv*page, Dh] page-plane rows (the
+    mailbox region of a page, zero-padded past the logits)."""
+    rows = logits_rows(cfg)
+    n = logits.shape[0]
+    region_rows = cfg.n_kv_heads * KV_PAGE_SIZE
+    assert rows <= region_rows, (rows, region_rows)
+    pad = rows * cfg.d_head - cfg.vocab
+    r = jnp.pad(logits, ((0, 0), (0, pad))).reshape(n, rows, cfg.d_head)
+    return jnp.pad(r, ((0, 0), (0, region_rows - rows), (0, 0)))
+
+
+def _pool_mailbox_plane(cfg: ModelConfig, pool, mailbox, logits):
+    """Plane 0 of the pool with `logits` written into the mailbox
+    page(s).  Unlike the dense mailbox this is a scatter into the
+    EXISTING plane, not a zero-fill: other sequences' mailbox pages
+    (staged prefills mid-flight) must survive the step."""
+    n_pages = pool.shape[2]
+    region_rows = cfg.n_kv_heads * KV_PAGE_SIZE
+    p0k = pool[0, 0].reshape(n_pages, region_rows, cfg.d_head)
+    p0k = p0k.at[mailbox].set(_mailbox_pad(cfg, logits))
+    return jnp.stack([
+        p0k.reshape(n_pages, cfg.n_kv_heads, KV_PAGE_SIZE, cfg.d_head),
+        pool[0, 1],
+    ])
+
+
+def _gather_pages(cfg: ModelConfig, plane, tables):
+    """Gather per-sequence caches from a pool plane.
+
+    plane:  [P, Hkv, page, Dh] (one layer, k or v side).
+    tables: [..., n_blocks] i32 page ids.
+    Returns [..., Hkv, s_max, Dh] — identical in shape and (valid)
+    content to the dense arena row, so the same attention kernel runs
+    byte-identically on it.
+    """
+    ps = KV_PAGE_SIZE
+    nblk = tables.shape[-1]
+    lead = tables.shape[:-1]
+    flat = jnp.take(plane, tables.reshape(-1), axis=0)
+    flat = flat.reshape(lead + (nblk, cfg.n_kv_heads, ps, cfg.d_head))
+    perm = tuple(range(len(lead))) + tuple(
+        len(lead) + a for a in (1, 0, 2, 3))
+    return jnp.transpose(flat, perm).reshape(
+        lead + (cfg.n_kv_heads, nblk * ps, cfg.d_head))
+
+
+def decode_paged_fn(cfg: ModelConfig, tokens, pos, tables, mailbox, pool,
+                    *weights):
+    """One generation step over the page pool (`decode_paged_b{B}`).
+
+    Args:
+      tokens:  [B] i32 current token per lane (pad lanes feed token 0).
+      pos:     [B] i32 position the new token occupies.
+      tables:  [B, n_blocks] i32 per-lane block tables (pad lanes and
+               unallocated blocks point at page 0, the garbage sink).
+      mailbox: [B] i32 per-lane mailbox page (pad lanes: page 0).
+      pool:    kv_pool_shape(cfg) f32, donated.
+
+    Returns the updated pool.  Token-for-token this is decode_fn with
+    the dense arena row replaced by a block-table gather of the same
+    [B, Hkv, s_max, Dh] shape; positions beyond `pos` are masked by the
+    attention lengths either way, so greedy output is byte-identical to
+    the slot arena.
+    """
+    w = W(text_weight_order(cfg), weights)
+    b = tokens.shape[0]
+    ps = KV_PAGE_SIZE
+    x = jnp.take(w["emb"], tokens, axis=0)                    # [B, d]
+    lens = pos + 1
+    blk = pos // ps
+    off = pos % ps
+    # The page each lane's new token lands in.
+    pg = jnp.take_along_axis(tables, blk[:, None], axis=1)[:, 0]  # [B]
+
+    planes = [None] * (cfg.n_layers + 1)
+    logits = None
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        h = rmsnorm(x, w[p + "norm1"])
+        q = qmm(h, w, p + "wq").reshape(b, cfg.n_q_heads, cfg.d_head)
+        k = qmm(h, w, p + "wk").reshape(b, cfg.n_kv_heads, cfg.d_head)
+        v = qmm(h, w, p + "wv").reshape(b, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+
+        # Scatter the new token's K/V at (page, offset) per lane.  Pad
+        # lanes all hit page 0 — duplicate garbage writes, never read.
+        k_plane = pool[l + 1, 0].at[pg, :, off, :].set(k)     # [P,Hkv,ps,Dh]
+        v_plane = pool[l + 1, 1].at[pg, :, off, :].set(v)
+        planes[l + 1] = jnp.stack([k_plane, v_plane])
+
+        k_cache = _gather_pages(cfg, k_plane, tables)          # [B,Hkv,S,Dh]
+        v_cache = _gather_pages(cfg, v_plane, tables)
+        attn = decode_attention(q, k_cache, v_cache, lens)     # [B, Hq, Dh]
+        x = x + qmm(attn.reshape(b, cfg.d_q), w, p + "wo")
+        h2 = rmsnorm(x, w[p + "norm2"])
+        x = x + _ffn(cfg, w, p, h2)
+
+    x = rmsnorm(x, w["norm_f"])
+    logits = qmm(x, w, "unembed")                              # [B, vocab]
+    planes[0] = _pool_mailbox_plane(cfg, pool, mailbox, logits)
+    return jnp.stack(planes)
+
+
+def _chunk_body_paged(cfg: ModelConfig, w: W, x, start, length, tables,
+                      mailbox, pool):
+    """_chunk_body over the page pool: extend one sequence's pages by a
+    chunk of embeddings at absolute positions start..start+length-1.
+
+    Shapes fed to the attention kernel match the dense chunk path
+    exactly (the gather materializes the same [Hkv, s_max, Dh] cache
+    view the kv_one held), so chunked prefill over pages is
+    byte-identical to chunked prefill over a kv_one."""
+    c = x.shape[0]
+    ps = KV_PAGE_SIZE
+    n_pages = pool.shape[2]
+    offs = jnp.arange(c, dtype=jnp.int32)
+    pos = start + offs                                         # [C] absolute
+    valid = offs < length
+    lens = jnp.where(valid, pos + 1, 1)
+    pg = jnp.take(tables, pos // ps, axis=0)                   # [C]
+    # Invalid rows scatter out of range -> dropped.
+    pg_w = jnp.where(valid, pg, n_pages)
+    off_w = pos % ps
+    planes = [None] * (cfg.n_layers + 1)
+
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        h = rmsnorm(x, w[p + "norm1"])
+        q = qmm(h, w, p + "wq").reshape(c, cfg.n_q_heads, cfg.d_head)
+        k = qmm(h, w, p + "wk").reshape(c, cfg.n_kv_heads, cfg.d_head)
+        v = qmm(h, w, p + "wv").reshape(c, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+
+        k_plane = pool[l + 1, 0].at[pg_w, :, off_w, :].set(k, mode="drop")
+        v_plane = pool[l + 1, 1].at[pg_w, :, off_w, :].set(v, mode="drop")
+        planes[l + 1] = jnp.stack([k_plane, v_plane])
+
+        kseq = _gather_pages(cfg, k_plane, tables)             # [Hkv, S, Dh]
+        vseq = _gather_pages(cfg, v_plane, tables)
+        kb = jnp.broadcast_to(kseq, (c,) + kseq.shape)
+        vb = jnp.broadcast_to(vseq, (c,) + vseq.shape)
+        attn = decode_attention(q, kb, vb, lens)               # [C, Hq, Dh]
+        x = x + qmm(attn.reshape(c, cfg.d_q), w, p + "wo")
+        h2 = rmsnorm(x, w[p + "norm2"])
+        x = x + _ffn(cfg, w, p, h2)
+
+    x = rmsnorm(x, w["norm_f"])
+    last = jax.lax.dynamic_slice(x, (length - 1, 0), (1, cfg.d_model))
+    logits = qmm(last, w, "unembed")                           # [1, vocab]
+    planes[0] = _pool_mailbox_plane(cfg, pool, mailbox[None], logits)
+    return jnp.stack(planes)
+
+
+def prefill_chunk_paged_fn(cfg: ModelConfig, tokens, start, length, tables,
+                           mailbox, pool, *weights):
+    """Chunked prefill writing straight into the page pool
+    (`prefill_chunk_paged_c{C}`): the staged-admission pipeline in paged
+    mode builds sequences in place, so finishing a prefill costs no
+    inject and caching its state costs no extract."""
+    w = W(text_weight_order(cfg), weights)
+    x = jnp.take(w["emb"], tokens, axis=0)                     # [C, d]
+    return _chunk_body_paged(cfg, w, x, start, length, tables, mailbox, pool)
+
+
+def prefill_chunk_embeds_paged_fn(cfg: ModelConfig, embeds, start, length,
+                                  tables, mailbox, pool, *weights):
+    """Paged chunked prefill from raw embeddings (multimodal)."""
+    w = W(text_weight_order(cfg), weights)
+    return _chunk_body_paged(cfg, w, embeds.astype(jnp.float32), start, length,
+                             tables, mailbox, pool)
+
+
+def adopt_paged_fn(cfg: ModelConfig, pool, kv_one, tables, mailbox):
+    """Scatter a kv_one into the page pool (`adopt_paged`).
+
+    The bridge from the one-shot prefill entries (which still produce
+    dense kv_one states) into paged serving: all s_max positions are
+    re-blocked onto the sequence's pages and the plane-0 mailbox logits
+    move to its mailbox page.  Block-table entries past the sequence's
+    allocation point at page 0, which absorbs the garbage tail.  One
+    copy — the paged analog of the dense `inject`, paid only on the
+    kv_one -> pages boundary (fresh one-shot prompts), never on cache
+    hits.
+    """
+    ps = KV_PAGE_SIZE
+    nblk = cfg.s_max // ps
+    planes = [None] * (cfg.n_layers + 1)
+    for l in range(cfg.n_layers):
+        kp = kv_one[l + 1, 0, 0].reshape(cfg.n_kv_heads, nblk, ps, cfg.d_head)
+        vp = kv_one[l + 1, 1, 0].reshape(cfg.n_kv_heads, nblk, ps, cfg.d_head)
+        k_plane = pool[l + 1, 0].at[tables].set(jnp.transpose(kp, (1, 0, 2, 3)))
+        v_plane = pool[l + 1, 1].at[tables].set(jnp.transpose(vp, (1, 0, 2, 3)))
+        planes[l + 1] = jnp.stack([k_plane, v_plane])
+    rows = logits_rows(cfg)
+    logits = kv_one[0, 0, 0, 0, :rows, :].reshape(1, rows * cfg.d_head)
+    logits = logits[:, : cfg.vocab]
+    planes[0] = _pool_mailbox_plane(cfg, pool, mailbox[None], logits)
+    return jnp.stack(planes)
+
+
+def copy_page_fn(cfg: ModelConfig, pool, src, dst):
+    """Copy page `src` over page `dst` across every plane (`copy_page`)
+    — the copy-on-write primitive: a cache hit whose length is not
+    page-aligned clones only its partially-filled tail page."""
+    shape = kv_pool_shape(cfg)
+    page = jax.lax.dynamic_slice(
+        pool, (0, 0, src, 0, 0, 0),
+        (shape[0], 2, 1, cfg.n_kv_heads, KV_PAGE_SIZE, cfg.d_head))
+    return jax.lax.dynamic_update_slice(pool, page, (0, 0, dst, 0, 0, 0))
+
+
+def zeros_pool_fn(cfg: ModelConfig):
+    """Device-side zero page pool allocator (`zeros_pool`)."""
+    return jnp.zeros(kv_pool_shape(cfg), jnp.float32)
+
+
+def read_logits_page_fn(cfg: ModelConfig, pool, page):
+    """Extract one mailbox page's logits: pool, page -> [vocab]
+    (`read_logits_page`) — the paged analog of read_logits_one."""
+    region = jax.lax.dynamic_slice(
+        pool, (0, 0, page, 0, 0, 0),
+        (1, 1, 1, cfg.n_kv_heads, KV_PAGE_SIZE, cfg.d_head))
+    return region.reshape(-1)[: cfg.vocab]
 
 
 # ------------------------------------------------------- arena management

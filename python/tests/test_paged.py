@@ -1,0 +1,179 @@
+"""Paged-KV equivalence: the block-table entries must be *bit-exact*
+against the dense slot-arena entries.
+
+The paged gather materializes a [B, Hkv, s_max, Dh] cache view with the
+same shape and the same valid contents as the dense arena row, and the
+attention kernel masks positions >= len with -1e30 before any reduction,
+so garbage in unallocated / stale pages cannot perturb a single output
+bit.  These tests pin that contract at the L2 (jax) level; the Rust
+scheduler equivalence tests pin it end-to-end.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.configs import KV_PAGE_SIZE, MODELS
+
+CFG = MODELS["qwen3-0.6b"]
+NBLK = CFG.kv_blocks_per_seq()
+POOL_PAGES = CFG.kv_pool_pages()
+
+from compile.weights import build_weights, text_weight_order
+
+W = build_weights(CFG)
+ARRS = [jnp.asarray(W[n]) for n in text_weight_order(CFG)]
+
+
+def prefill(prompt, bucket=32):
+    toks = jnp.zeros(bucket, jnp.int32).at[: len(prompt)].set(jnp.asarray(prompt))
+    return M.prefill_fn(CFG, toks, jnp.asarray(len(prompt), jnp.int32), *ARRS)
+
+
+def i32(x):
+    return jnp.asarray(x, jnp.int32)
+
+
+def seq_tables(pages):
+    """Block table for one sequence: its pages, padded with page 0."""
+    t = [0] * NBLK
+    for j, p in enumerate(pages):
+        t[j] = p
+    return i32(t)
+
+
+def test_mailbox_region_covers_vocab_for_every_model():
+    for cfg in MODELS.values():
+        region = cfg.n_kv_heads * KV_PAGE_SIZE * cfg.d_head
+        assert region >= cfg.vocab, cfg.name
+        assert cfg.logits_rows() <= cfg.n_kv_heads * KV_PAGE_SIZE, cfg.name
+        assert cfg.s_max % KV_PAGE_SIZE == 0, cfg.name
+
+
+def test_adopt_then_read_logits_page_roundtrip():
+    kv_one = prefill([1, 10, 20, 30])
+    want = M.read_logits_mailbox(CFG, kv_one, 0)
+    pool = jnp.zeros(M.kv_pool_shape(CFG), jnp.float32)
+    pool = M.adopt_paged_fn(CFG, pool, kv_one, seq_tables([3]), i32(7))
+    got = M.read_logits_page_fn(CFG, pool, i32(7))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # Adopted K/V lands on the sequence's pages bit-exactly.
+    kp = np.asarray(pool)[1:, :, 3, :, :4, :]
+    ref = np.asarray(kv_one)[1:, :, 0, :, :4, :]
+    np.testing.assert_array_equal(kp, ref)
+
+
+def test_decode_paged_bitwise_matches_dense():
+    """N greedy steps: paged pool vs dense arena, logits bit-identical."""
+    prompts = [[1, 10, 20, 30], [2, 50, 60]]
+    b = 2
+    arena = jnp.zeros(M.kv_arena_shape(CFG, b), jnp.float32)
+    pool = jnp.zeros(M.kv_pool_shape(CFG), jnp.float32)
+    tables, mailbox, pos = [], [], []
+    for slot, p in enumerate(prompts):
+        kv_one = prefill(p)
+        arena = M.inject_fn(CFG, arena, kv_one, i32(slot))
+        pages = [10 + slot * 16]           # one page covers len<=64
+        pool = M.adopt_paged_fn(CFG, pool, kv_one, seq_tables(pages),
+                                i32(100 + slot))
+        tables.append(seq_tables(pages))
+        mailbox.append(100 + slot)
+        pos.append(len(p))
+    tables = jnp.stack(tables)
+    mailbox = i32(mailbox)
+
+    for _ in range(5):
+        toks = []
+        for slot in range(b):
+            ld = np.asarray(M.read_logits_mailbox(CFG, arena, slot))
+            lp = np.asarray(M.read_logits_page_fn(CFG, pool, i32(mailbox[slot])))
+            np.testing.assert_array_equal(lp, ld)
+            toks.append(int(ld.argmax()))
+        arena = M.decode_fn(CFG, i32(toks), i32(pos), arena, *ARRS)
+        pool = M.decode_paged_fn(CFG, i32(toks), i32(pos), tables, mailbox,
+                                 pool, *ARRS)
+        pos = [p + 1 for p in pos]
+
+
+def test_decode_paged_preserves_other_mailbox_pages():
+    """The paged mailbox write is a scatter, not a plane zero-fill:
+    pages belonging to staged sequences must survive a decode step."""
+    kv_one = prefill([1, 10, 20, 30])
+    pool = jnp.zeros(M.kv_pool_shape(CFG), jnp.float32)
+    pool = M.adopt_paged_fn(CFG, pool, kv_one, seq_tables([3]), i32(7))
+    bystander = np.asarray(M.read_logits_page_fn(CFG, pool, i32(7)))
+
+    kv2 = prefill([2, 50, 60])
+    pool = M.adopt_paged_fn(CFG, pool, kv2, seq_tables([5]), i32(9))
+    pool = M.decode_paged_fn(CFG, i32([70]), i32([3]),
+                             seq_tables([5])[None], i32([9]), pool, *ARRS)
+    after = np.asarray(M.read_logits_page_fn(CFG, pool, i32(7)))
+    np.testing.assert_array_equal(after, bystander)
+
+
+def test_chunked_prefill_paged_bitwise_matches_dense_chunks():
+    """Feeding the same chunk schedule into pages vs a kv_one yields
+    bit-identical K/V content and mailbox logits."""
+    prompt = [1, 9, 17, 25, 33, 41, 49, 57, 65, 73, 81, 89]
+    c = 8
+    kv_one = jnp.zeros(M.kv_arena_shape(CFG, 1), jnp.float32)
+    pool = jnp.zeros(M.kv_pool_shape(CFG), jnp.float32)
+    tables = seq_tables([4, 5])
+    for start in range(0, len(prompt), c):
+        chunk = prompt[start : start + c]
+        toks = jnp.zeros(c, jnp.int32).at[: len(chunk)].set(i32(chunk))
+        kv_one = M.prefill_chunk_fn(CFG, toks, i32(start), i32(len(chunk)),
+                                    kv_one, *ARRS)
+        pool = M.prefill_chunk_paged_fn(CFG, toks, i32(start), i32(len(chunk)),
+                                        tables, i32(11), pool, *ARRS)
+    ld = np.asarray(M.read_logits_mailbox(CFG, kv_one, 0))
+    lp = np.asarray(M.read_logits_page_fn(CFG, pool, i32(11)))
+    np.testing.assert_array_equal(lp, ld)
+    # K/V planes: kv_one positions 0..len-1 == page content.
+    n = len(prompt)
+    dense = np.asarray(kv_one)[1:, :, 0, :, :n, :]
+    kp = np.asarray(pool)[1:, :, 4, :, :, :]          # first page, 64 pos
+    np.testing.assert_array_equal(kp[:, :, :, :n, :], dense)
+
+
+def test_copy_page_clones_one_page_everywhere():
+    kv_one = prefill([1, 10, 20, 30])
+    pool = jnp.zeros(M.kv_pool_shape(CFG), jnp.float32)
+    pool = M.adopt_paged_fn(CFG, pool, kv_one, seq_tables([3]), i32(7))
+    before = np.asarray(pool)
+    pool2 = M.copy_page_fn(CFG, pool, i32(3), i32(20))
+    after = np.asarray(pool2)
+    np.testing.assert_array_equal(after[:, :, 20], before[:, :, 3])
+    # Everything except the destination page is untouched.
+    mask = np.ones(after.shape[2], bool)
+    mask[20] = False
+    np.testing.assert_array_equal(after[:, :, mask], before[:, :, mask])
+
+
+def test_decode_paged_cow_divergence():
+    """Two sequences sharing a full prefix page diverge bit-exactly: the
+    shared page is read-only (both write their new token into their own
+    second page), matching independent dense slots."""
+    prompt = list(range(1, 65))            # exactly one full page
+    kv_one = prefill(prompt, bucket=128)
+    pool = jnp.zeros(M.kv_pool_shape(CFG), jnp.float32)
+    # Both sequences' block tables point at shared page 6; their second
+    # (divergence) blocks are private pages 7 and 8.
+    pool = M.adopt_paged_fn(CFG, pool, kv_one, seq_tables([6]), i32(30))
+    t0, t1 = seq_tables([6, 7]), seq_tables([6, 8])
+    shared_before = np.asarray(pool)[:, :, 6].copy()
+
+    # Dense reference: two independent slots, same prefix.
+    arena = jnp.zeros(M.kv_arena_shape(CFG, 2), jnp.float32)
+    arena = M.inject_fn(CFG, arena, kv_one, i32(0))
+    arena = M.inject_fn(CFG, arena, kv_one, i32(1))
+
+    arena = M.decode_fn(CFG, i32([70, 71]), i32([64, 64]), arena, *ARRS)
+    pool = M.decode_paged_fn(CFG, i32([70, 71]), i32([64, 64]),
+                             jnp.stack([t0, t1]), i32([31, 32]), pool, *ARRS)
+    for slot, mb in ((0, 31), (1, 32)):
+        ld = np.asarray(M.read_logits_mailbox(CFG, arena, slot))
+        lp = np.asarray(M.read_logits_page_fn(CFG, pool, i32(mb)))
+        np.testing.assert_array_equal(lp, ld)
+    # The shared page was not written.
+    np.testing.assert_array_equal(np.asarray(pool)[:, :, 6], shared_before)

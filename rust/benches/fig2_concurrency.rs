@@ -11,16 +11,20 @@
 
 use std::time::Instant;
 
-use umserve::bench_harness::{banner, fmt_f, synth_prompt, Table};
+use umserve::bench_harness::{banner, fmt_f, maybe_write_json, smoke, synth_prompt, Table};
 use umserve::coordinator::scheduler::Scheduler;
 use umserve::coordinator::{EngineConfig, GenRequest, PromptInput};
 use umserve::engine::sampler::SamplingParams;
 
 fn main() -> anyhow::Result<()> {
     banner("Figure 2 — concurrency scaling (continuous batching)");
-    let quick = std::env::var("UMSERVE_QUICK").is_ok();
+    let quick = std::env::var("UMSERVE_QUICK").is_ok() || smoke();
     let n_new = if quick { 32 } else { 96 };
-    let models = ["qwen3-0.6b", "qwen3-4b", "qwen3-8b"];
+    let models: &[&str] = if smoke() {
+        &["qwen3-0.6b"]
+    } else {
+        &["qwen3-0.6b", "qwen3-4b", "qwen3-8b"]
+    };
     let concurrencies = [1usize, 2, 4, 8, 16];
 
     let mut agg = Table::new(
@@ -32,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         &["Model", "c=1", "c=2", "c=4", "c=8", "c=16"],
     );
 
-    for model in models {
+    for &model in models {
         let mut s = Scheduler::new(EngineConfig {
             model: model.into(),
             artifacts_dir: "artifacts".into(),
@@ -78,6 +82,7 @@ fn main() -> anyhow::Result<()> {
     }
     agg.print();
     reqs.print();
+    maybe_write_json("fig2_concurrency", &[&agg, &reqs])?;
     println!("paper shape check: sublinear scaling, strongest for the smallest model.");
     Ok(())
 }

@@ -8,7 +8,7 @@
 
 use std::time::Instant;
 
-use umserve::bench_harness::{banner, synth_prompt, Table};
+use umserve::bench_harness::{banner, maybe_write_json, smoke_scale, synth_prompt, Table};
 use umserve::coordinator::scheduler::Scheduler;
 use umserve::coordinator::{EngineConfig, Event, GenRequest, PromptInput};
 use umserve::engine::sampler::SamplingParams;
@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     banner("Table 7 — text prefix caching (TTFT)");
     let prefix_len = 480;
     let user_len = 16;
-    let reps = 5;
+    let reps = smoke_scale(5, 2);
 
     let mut s = Scheduler::new(EngineConfig {
         model: "qwen3-4b".into(),
@@ -80,6 +80,7 @@ fn main() -> anyhow::Result<()> {
         format!("{:.1}x", c / f),
     ]);
     table.print();
+    maybe_write_json("table7_text_prefix", &[&table])?;
     println!("paper shape check: full hit cuts TTFT by several-fold; the partial");
     println!("path's win is bounded by sequential catch-up decodes on this");
     println!("substrate (per-dispatch floor ~1 ms x suffix length).");

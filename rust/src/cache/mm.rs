@@ -185,6 +185,14 @@ impl MmCache {
         self.kv.remove(key);
     }
 
+    /// Pool pages currently pinned by paged KV entries (observability).
+    pub fn pinned_pages(&self) -> usize {
+        self.kv
+            .iter()
+            .filter_map(|(_, e)| e.kv.pages().map(|p| p.n_pages()))
+            .sum()
+    }
+
     /// Fault-injection hook for validation tests: flip every stored
     /// fingerprint so the next "KV only" hit fails its comparison.
     pub fn corrupt_kv_fingerprints(&mut self) {

@@ -17,30 +17,95 @@ use std::rc::Rc;
 
 use xla::PjRtBuffer;
 
-/// A cached prefilled KV state: the device-resident kv_one buffer plus
-/// the sequence length it encodes.  The mailbox plane still holds the
-/// last token's logits, so a full hit can sample its first token
-/// without touching the model.
+use crate::runtime::PageSet;
+
+/// Physical storage behind a cached KV state.
+pub enum KvBacking {
+    /// A device-resident kv_one buffer (the slot-arena backend).  The
+    /// mailbox plane still holds the last token's logits, so a full hit
+    /// can sample its first token without touching the model.  `trim`:
+    /// `None` = a full s_max-sized arena row, `Some(s)` = device-side
+    /// trimmed to the first `s` positions at cache insert (the
+    /// allocation the entry's byte charge actually bounds).  Trimmed
+    /// states must be re-expanded (`ModelRuntime::untrim_kv`) before
+    /// injection or logits readback.
+    Dense { kv_one: Rc<PjRtBuffer>, trim: Option<usize> },
+    /// Pinned pages in the engine's paged KV pool — a zero-copy
+    /// checkpoint: the pages stay where the sequence wrote them, this
+    /// entry just holds refcounts (dropping the entry releases them).
+    /// The last token's logits are captured host-side at checkpoint
+    /// time (one vocab-sized readback), so a full hit never touches
+    /// the device at all.  Paged entries are exactly sized — they hold
+    /// `ceil(len/page)` pages, no s_max slack — so the trim grids are
+    /// never needed on this path.
+    Paged { pages: PageSet, logits: Vec<f32> },
+}
+
+/// A cached prefilled KV state plus the sequence length it encodes.
 pub struct CachedKv {
-    pub kv_one: Rc<PjRtBuffer>,
+    pub backing: KvBacking,
     pub len: usize,
-    /// Physical positions present in `kv_one`: `None` = a full
-    /// s_max-sized arena row, `Some(s)` = device-side trimmed to the
-    /// first `s` positions at cache insert (the allocation the entry's
-    /// byte charge actually bounds).  Trimmed states must be
-    /// re-expanded (`ModelRuntime::untrim_kv`) before injection or
-    /// logits readback.
-    pub trim: Option<usize>,
 }
 
 impl CachedKv {
     pub fn new(kv_one: PjRtBuffer, len: usize) -> Rc<Self> {
-        Rc::new(CachedKv { kv_one: Rc::new(kv_one), len, trim: None })
+        Rc::new(CachedKv {
+            backing: KvBacking::Dense { kv_one: Rc::new(kv_one), trim: None },
+            len,
+        })
     }
 
-    /// A state trimmed to `positions` physical positions.
+    /// A dense state trimmed to `positions` physical positions.
     pub fn new_trimmed(kv_one: PjRtBuffer, len: usize, positions: usize) -> Rc<Self> {
-        Rc::new(CachedKv { kv_one: Rc::new(kv_one), len, trim: Some(positions) })
+        Rc::new(CachedKv {
+            backing: KvBacking::Dense { kv_one: Rc::new(kv_one), trim: Some(positions) },
+            len,
+        })
+    }
+
+    /// A paged checkpoint: pinned KV pages + host-side last logits.
+    pub fn new_paged(pages: PageSet, logits: Vec<f32>, len: usize) -> Rc<Self> {
+        Rc::new(CachedKv { backing: KvBacking::Paged { pages, logits }, len })
+    }
+
+    /// The dense kv_one buffer, if this state has one.
+    pub fn dense(&self) -> Option<&Rc<PjRtBuffer>> {
+        match &self.backing {
+            KvBacking::Dense { kv_one, .. } => Some(kv_one),
+            KvBacking::Paged { .. } => None,
+        }
+    }
+
+    /// Trimmed physical length of a dense state (None = untrimmed or
+    /// paged; paged entries carry no s_max slack to trim).
+    pub fn trim(&self) -> Option<usize> {
+        match &self.backing {
+            KvBacking::Dense { trim, .. } => *trim,
+            KvBacking::Paged { .. } => None,
+        }
+    }
+
+    pub fn pages(&self) -> Option<&PageSet> {
+        match &self.backing {
+            KvBacking::Paged { pages, .. } => Some(pages),
+            KvBacking::Dense { .. } => None,
+        }
+    }
+
+    pub fn is_paged(&self) -> bool {
+        matches!(self.backing, KvBacking::Paged { .. })
+    }
+
+    /// KV positions this entry PHYSICALLY holds — the unit for byte
+    /// accounting.  Dense: the trimmed length, else the full s_max row.
+    /// Paged: the pinned pages' worth (exactly `ceil(len/page_size)`
+    /// pages — pinned-but-shared pages are charged to every holder,
+    /// which over-counts sharing but keeps the budget a hard bound).
+    pub fn positions_held(&self, s_max: usize, page_size: usize) -> usize {
+        match &self.backing {
+            KvBacking::Dense { trim, .. } => trim.unwrap_or(s_max),
+            KvBacking::Paged { pages, .. } => pages.n_pages() * page_size,
+        }
     }
 }
 

@@ -38,6 +38,9 @@ pub struct TextPrefixCache {
     /// Physical positions of an UNtrimmed kv_one (the model's s_max) —
     /// the charge for entries the insert path could not trim.
     s_max: usize,
+    /// KV page size for charging paged entries (positions per page;
+    /// equals s_max on pre-paging artifacts where it never matters).
+    page_size: usize,
 }
 
 /// Result of a lookup: the cached state and how many prompt tokens it
@@ -64,7 +67,19 @@ impl TextPrefixCache {
     /// s_max), so on trim-capable artifacts the budget is a true
     /// allocation bound rather than a worst-case one.
     pub fn new(budget_bytes: usize, token_bytes: usize, s_max: usize) -> Self {
-        TextPrefixCache { lru: LruCache::new(budget_bytes), token_bytes, s_max }
+        Self::with_page_size(budget_bytes, token_bytes, s_max, s_max)
+    }
+
+    /// Like [`TextPrefixCache::new`] but with the KV page size used to
+    /// charge paged entries (`ceil(len/page) * page` positions — the
+    /// pages they actually pin, with no s_max slack).
+    pub fn with_page_size(
+        budget_bytes: usize,
+        token_bytes: usize,
+        s_max: usize,
+        page_size: usize,
+    ) -> Self {
+        TextPrefixCache { lru: LruCache::new(budget_bytes), token_bytes, s_max, page_size }
     }
 
     /// Algorithm 2.  O(|P|) hashes of O(|P|) tokens each; |P| <= 640
@@ -90,8 +105,16 @@ impl TextPrefixCache {
     /// the positions its buffer physically holds.
     pub fn insert(&mut self, tokens: &[i32], kv: Rc<CachedKv>) {
         debug_assert_eq!(kv.len, tokens.len());
-        let cost = self.token_bytes * kv.trim.unwrap_or(self.s_max);
+        let cost = self.token_bytes * kv.positions_held(self.s_max, self.page_size);
         self.lru.insert(hash_tokens(tokens), kv, cost);
+    }
+
+    /// Pool pages currently pinned by paged entries (observability).
+    pub fn pinned_pages(&self) -> usize {
+        self.lru
+            .iter()
+            .filter_map(|(_, kv)| kv.pages().map(|p| p.n_pages()))
+            .sum()
     }
 
     /// Drop an entry (e.g. a trimmed state the runtime can no longer

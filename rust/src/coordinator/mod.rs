@@ -239,6 +239,16 @@ pub struct EngineConfig {
     /// batch job behind a steady interactive flood is admitted within
     /// `2 * aging_ticks` ticks.  0 disables aging.
     pub aging_ticks: u64,
+    /// Back the KV with the paged pool (block/page allocator +
+    /// copy-on-write prefix sharing) instead of the dense slot arena.
+    /// Paged mode makes prefix-cache hits, eviction checkpoints, and
+    /// follower coalescing zero-copy page pins, and replaces device-side
+    /// trim/untrim/clone with refcount bookkeeping.  Greedy output is
+    /// byte-identical either way (fresh prompts build through the same
+    /// dense executables and are adopted onto pages).  Requires
+    /// artifacts with paged entries; `serve` defaults this ON, library
+    /// default stays OFF so existing embedders keep the arena.
+    pub kv_paged: bool,
 }
 
 impl Default for EngineConfig {
@@ -262,6 +272,7 @@ impl Default for EngineConfig {
             mm_overlap: true,
             default_priority: Priority::Normal,
             aging_ticks: 64,
+            kv_paged: false,
         }
     }
 }

@@ -69,17 +69,17 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::cache::mm::{emb_fingerprint, mm_prompt_hash, MmCache, MmKvEntry, VisionEntry};
 use crate::cache::text_prefix::TextPrefixCache;
 use crate::cache::{kv_token_bytes, CachedKv};
 use crate::engine::sampler::{sample, Rng, SamplingParams};
 use crate::engine::tokenizer::{StreamDecoder, Tokenizer, EOS, IMG};
-use crate::engine::TextEngine;
+use crate::engine::{PagePoolSnapshot, TextEngine};
 use crate::multimodal::image::DecodedImage;
 use crate::multimodal::vision::{patchify, snap_resolution, temporal_pool};
-use crate::runtime::{ArtifactStore, ModelRuntime};
+use crate::runtime::{ArtifactStore, ModelRuntime, PageSet};
 use crate::substrate::hash::ContentHash;
 use crate::substrate::metrics::MetricsRegistry;
 
@@ -215,6 +215,12 @@ pub struct StatsSnapshot {
     pub decode_steps: u64,
     pub prefill_chunks: u64,
     pub occupancy_mean: f64,
+    /// Paged-KV pool state (None on the slot-arena backend).
+    pub kv_pool: Option<PagePoolSnapshot>,
+    /// Pool pages pinned by text-prefix-cache checkpoints (paged mode).
+    pub text_cache_pinned_pages: usize,
+    /// Pool pages pinned by mm-KV-cache checkpoints (paged mode).
+    pub mm_cache_pinned_pages: usize,
 }
 
 struct ActiveReq {
@@ -389,6 +395,13 @@ struct PrefillJob {
     /// tokenwise fallback reads it directly (no copy — nothing donates
     /// the buffer on that path).
     source: Option<Rc<CachedKv>>,
+    /// Paged-backend build state: when extending a PAGED cached source,
+    /// the job pins the source's pages zero-copy on first touch and
+    /// feeds chunks straight onto pages (`prefill_chunk_paged_c{C}`) —
+    /// no dense staging kv_one, no adopt pass at finalize.  Mutually
+    /// exclusive with `kv_one`.  Fresh prompts build dense in both
+    /// modes (identical arithmetic) and adopt at finalize.
+    paged: Option<PageSet>,
     /// Positions already encoded in `kv_one` (>= `fed` when the job
     /// started from a cached prefix).
     built: usize,
@@ -502,6 +515,14 @@ impl Scheduler {
         let rt = ModelRuntime::load(&client, &store, &cfg.model)?;
         let tokenizer = Rc::new(Tokenizer::from_file(store.tokenizer_path())?);
         let token_bytes = kv_token_bytes(&rt.info);
+        let use_paged = cfg.kv_paged && rt.has_paged_kv();
+        if cfg.kv_paged && !use_paged {
+            bail!(
+                "model {} artifacts lack paged-KV entries; rebuild them with \
+                 `python -m compile.aot --out-dir ../rust/artifacts` or serve with --kv arena",
+                rt.info.name
+            );
+        }
         if cfg.warmup {
             let first = *rt.info.decode_buckets.first().unwrap();
             let pre = *rt.info.prefill_buckets.first().unwrap();
@@ -515,6 +536,18 @@ impl Scheduler {
                 if rt.has_chunk_prefill() {
                     entries.push(format!("prefill_chunk_c{c}"));
                     entries.push(format!("zeros_b{first}"));
+                }
+            }
+            if use_paged {
+                entries.push("zeros_pool".to_string());
+                entries.push(format!("decode_paged_b{first}"));
+                entries.push("adopt_paged".to_string());
+                entries.push("read_logits_page".to_string());
+                entries.push("copy_page".to_string());
+                if let Some(c) = rt.info.max_chunk_bucket() {
+                    if rt.has_chunk_prefill() {
+                        entries.push(format!("prefill_chunk_paged_c{c}"));
+                    }
                 }
             }
             let refs: Vec<&str> = entries.iter().map(|s| s.as_str()).collect();
@@ -534,10 +567,19 @@ impl Scheduler {
             token_bytes,
         );
         let s_max = rt.info.s_max;
+        // Paged cache entries are charged by the pages they pin.
+        let cache_page = if use_paged { rt.info.kv_page_size } else { s_max };
+        let engine =
+            if use_paged { TextEngine::new_paged(rt)? } else { TextEngine::new(rt)? };
         let mut s = Scheduler {
-            engine: TextEngine::new(rt)?,
+            engine,
             tokenizer,
-            text_cache: TextPrefixCache::new(cfg.text_cache_bytes.max(1), token_bytes, s_max),
+            text_cache: TextPrefixCache::with_page_size(
+                cfg.text_cache_bytes.max(1),
+                token_bytes,
+                s_max,
+                cache_page,
+            ),
             mm_cache,
             cfg: cfg.clone(),
             active: HashMap::new(),
@@ -770,14 +812,18 @@ impl Scheduler {
     /// and trim failures.  Shared by the mm KV cache and the text
     /// prefix cache insert paths.
     fn trim_for_cache(&mut self, kv: &CachedKv) -> Option<Rc<CachedKv>> {
-        if kv.trim.is_some() {
+        if kv.trim().is_some() {
             return None;
         }
+        // Paged checkpoints are exactly sized (they pin ceil(len/page)
+        // pages, no s_max slack) — the trim grids have nothing to do on
+        // this path, which is the point of the paging scheme.
+        let kv_one = kv.dense()?;
         let s = self.engine.rt.info.trim_bucket_for(kv.len)?;
         if s >= self.engine.rt.info.s_max || !self.engine.rt.has_trim_kv(s) {
             return None;
         }
-        let t = self.engine.rt.trim_kv(&kv.kv_one, s).ok()?;
+        let t = self.engine.rt.trim_kv(kv_one, s).ok()?;
         Some(CachedKv::new_trimmed(t, kv.len, s))
     }
 
@@ -819,12 +865,12 @@ impl Scheduler {
     /// rematerialize it.  The lookup-side complement of
     /// [`Self::trim_for_cache`], shared by the text and mm caches.
     fn expand_trimmed(&mut self, kv: Rc<CachedKv>) -> Option<Rc<CachedKv>> {
-        match kv.trim {
+        match kv.trim() {
             None => Some(kv),
             Some(s) => self
                 .engine
                 .rt
-                .untrim_kv(&kv.kv_one, s)
+                .untrim_kv(kv.dense()?, s)
                 .ok()
                 .map(|full| CachedKv::new(full, kv.len)),
         }
@@ -868,6 +914,27 @@ impl Scheduler {
         }
     }
 
+    /// Admission-time context check: `positions` prompt/vision rows
+    /// must leave room for at least one generated token.  The error
+    /// message is the contract with the OpenAI layer, which maps it to
+    /// a 400 with code `context_length_exceeded` — a request that can
+    /// never fit must be rejected up front, not crash mid-engine.
+    fn check_context(&self, positions: usize) -> Result<()> {
+        let info = &self.engine.rt.info;
+        // Prompts are built by the prefill/chunk executables (largest
+        // lowered bucket) and must fit the KV with one decode step
+        // (`admit` requires len + 1 < s_max).
+        let max_prompt = *info.prefill_buckets.last().unwrap_or(&info.s_max);
+        let limit = max_prompt.min(info.s_max.saturating_sub(2));
+        if positions > limit {
+            bail!(
+                "this model's maximum context length is {limit} tokens, \
+                 but the request holds {positions} prompt positions"
+            );
+        }
+        Ok(())
+    }
+
     /// Decode slots left before the largest batch bucket is exhausted.
     fn free_slots(&self) -> usize {
         self.engine.max_capacity().saturating_sub(self.active.len())
@@ -900,6 +967,9 @@ impl Scheduler {
             } else {
                 0.0
             },
+            kv_pool: self.engine.page_pool(),
+            text_cache_pinned_pages: self.text_cache.pinned_pages(),
+            mm_cache_pinned_pages: self.mm_cache.pinned_pages(),
         }
     }
 
@@ -913,7 +983,24 @@ impl Scheduler {
         self.advance_visions();
         self.advance_prefills();
         self.step_once();
+        self.publish_page_gauges();
         self.publish_load();
+    }
+
+    /// Refresh the paged-KV pool gauges (no-op on the arena backend).
+    fn publish_page_gauges(&mut self) {
+        let Some(p) = self.engine.page_pool() else { return };
+        self.metrics
+            .set_gauge("kv_pages_allocated", p.allocated_pages as f64);
+        self.metrics.set_gauge("kv_pages_free", p.free_pages as f64);
+        self.metrics
+            .set_gauge("kv_page_utilization", p.utilization);
+        self.metrics.set_gauge(
+            "text_cache_pinned_pages",
+            self.text_cache.pinned_pages() as f64,
+        );
+        self.metrics
+            .set_gauge("mm_cache_pinned_pages", self.mm_cache.pinned_pages() as f64);
     }
 
     /// Refresh the lock-free load summary the cluster router reads.
@@ -1005,6 +1092,7 @@ impl Scheduler {
                     fed: 0,
                     kv_one: None,
                     source: Some(kv),
+                    paged: None,
                     built: total,
                     total,
                     feed_open: false,
@@ -1070,6 +1158,7 @@ impl Scheduler {
                     fed: 0,
                     kv_one: None,
                     source,
+                    paged: None,
                     built,
                     total,
                     feed_open: false,
@@ -1117,7 +1206,7 @@ impl Scheduler {
         let prompt_len = kv.len;
         let mut rng = Rng::new(params.seed ^ id.wrapping_mul(0x9E3779B97F4A7C15));
         let first = sample(&logits, &params, &mut rng);
-        self.engine.admit(id, &kv.kv_one, prompt_len)?;
+        self.engine.admit(id, &kv, prompt_len)?;
         let mut ar = ActiveReq {
             events,
             params,
@@ -1338,17 +1427,19 @@ impl Scheduler {
         let Some(id) = victim else { return false };
         let Some(mut a) = self.active.remove(&id) else { return false };
         match self.engine.remove(id, true) {
-            Ok(Some(kv_one)) => {
+            Ok(Some(kv)) => {
                 // Invariant (same as finish()): the slot KV encodes
-                // exactly prompt ++ fed tokens == all_tokens.
-                let kv_len = a.prompt_len + a.fed;
+                // exactly prompt ++ fed tokens == all_tokens.  On the
+                // paged backend the checkpoint is zero-copy: the
+                // sequence's own pages move into the cache entry.
+                debug_assert_eq!(kv.len, a.prompt_len + a.fed);
                 match &a.mm {
                     Some(m) => {
                         let key = mm_prompt_hash(&m.hashes, &a.all_tokens);
                         let fp = m.emb_fp;
-                        self.mm_put_kv(key, CachedKv::new(kv_one, kv_len), fp);
+                        self.mm_put_kv(key, kv, fp);
                     }
-                    None => self.text_put(&a.all_tokens, CachedKv::new_rc(kv_one, kv_len)),
+                    None => self.text_put(&a.all_tokens, kv),
                 }
                 a.timing.evictions += 1;
                 self.metrics.inc("evictions", 1);
@@ -1465,27 +1556,24 @@ impl Scheduler {
                 };
                 let suffix = tokens[matched..].to_vec();
                 self.metrics.inc("catch_up_tokens", suffix.len() as u64);
-                let kv_one = match src {
-                    Some(src) if chunked => {
-                        let (kv, _) = self.engine.catch_up_chunk(
-                            &src.kv_one,
-                            matched,
-                            &suffix,
-                            self.chunk_tokens,
-                        )?;
-                        kv
-                    }
+                match src {
+                    Some(src) if chunked => self.engine.catch_up_chunk_cached(
+                        &src,
+                        matched,
+                        &suffix,
+                        self.chunk_tokens,
+                    )?,
                     Some(src) => {
-                        let (kv, _) =
-                            self.engine.catch_up_tokenwise(&src.kv_one, matched, &suffix)?;
-                        kv
+                        self.engine.catch_up_tokenwise_cached(&src, matched, &suffix)?
                     }
                     None => {
                         // Complete miss: one-shot prefill of the prompt
                         // part, then catch up the generated tokens.
+                        // Always a dense build (identical arithmetic in
+                        // both modes); paged admission adopts it.
                         let p = req.prompt_len.min(tokens.len());
                         let kv = self.engine.prefill(&tokens[..p])?;
-                        if p < tokens.len() {
+                        let kv_one = if p < tokens.len() {
                             let rest = tokens[p..].to_vec();
                             if chunked {
                                 let (kv, _) = self.engine.catch_up_chunk(
@@ -1502,13 +1590,13 @@ impl Scheduler {
                             }
                         } else {
                             kv
-                        }
+                        };
+                        CachedKv::new(kv_one, tokens.len())
                     }
-                };
-                CachedKv::new(kv_one, tokens.len())
+                }
             }
         };
-        self.engine.admit(id, &kv.kv_one, tokens.len())?;
+        self.engine.admit(id, &kv, tokens.len())?;
         self.metrics.inc("evicted_resumes", 1);
         self.active.insert(id, req);
         self.metrics
@@ -1554,7 +1642,7 @@ impl Scheduler {
                 CachedKv::new(kv_one, total)
             }
         };
-        self.engine.admit(id, &kv.kv_one, kv.len)?;
+        self.engine.admit(id, &kv, kv.len)?;
         self.metrics.inc("evicted_resumes", 1);
         self.active.insert(id, req);
         self.metrics
@@ -1665,6 +1753,7 @@ impl Scheduler {
                 && !j.feed_open
                 && j.kv_one.is_none()
                 && j.source.is_none()
+                && j.paged.is_none()
                 && j.followers.is_empty()
                 && match &j.mm {
                     None => true,
@@ -1847,7 +1936,9 @@ impl Scheduler {
             Feed::Tokens(toks) => {
                 let n = remaining.min(seg);
                 let chunked = self.chunk_tokens > 0 && self.engine.rt.has_chunk_prefill();
-                if job.kv_one.is_none() && job.source.is_none() {
+                let paged_src = job.paged.is_some()
+                    || job.source.as_ref().is_some_and(|s| s.is_paged());
+                if job.kv_one.is_none() && job.source.is_none() && job.paged.is_none() {
                     // First segment of a fresh prompt: the one-shot
                     // prefill executable (identical arithmetic to the
                     // legacy inline path for short prompts).
@@ -1855,6 +1946,35 @@ impl Scheduler {
                     job.kv_one = Some(self.engine.prefill(&toks[..n])?);
                     job.built += n;
                     job.fed += n;
+                } else if paged_src {
+                    // Paged cached source: pin its pages zero-copy on
+                    // first touch (no clone_kv materialization), then
+                    // feed the suffix straight onto pages.
+                    let mut set = match job.paged.take() {
+                        Some(s) => s,
+                        None => {
+                            let src = job.source.take().expect("paged source checked");
+                            self.engine.begin_extend_paged(&src, job.built)?
+                        }
+                    };
+                    if chunked {
+                        let max = self.engine.rt.info.max_chunk_bucket().unwrap();
+                        let n = n.min(max);
+                        let piece = toks[job.fed..job.fed + n].to_vec();
+                        self.engine.feed_chunk_paged(&mut set, job.built, &piece)?;
+                        self.metrics.inc("prefill_chunks", 1);
+                        job.built += n;
+                        job.fed += n;
+                    } else {
+                        // chunk_tokens == 0: token-by-token through the
+                        // bucket-1 paged decode (the "0 = legacy"
+                        // bit-exactness contract, paged flavour).
+                        let piece = toks[job.fed..].to_vec();
+                        self.engine.feed_tokens_paged(&mut set, job.built, &piece)?;
+                        job.built += piece.len();
+                        job.fed += piece.len();
+                    }
+                    job.paged = Some(set);
                 } else if !chunked {
                     // chunk_tokens == 0 honours the "0 = legacy"
                     // contract exactly: token-by-token catch-up through
@@ -1868,7 +1988,10 @@ impl Scheduler {
                             self.engine.catch_up_tokenwise(kv, job.built, &piece)?
                         }
                         (None, Some(src)) => {
-                            self.engine.catch_up_tokenwise(&src.kv_one, job.built, &piece)?
+                            let kv_one = src
+                                .dense()
+                                .expect("paged sources route through the paged branch");
+                            self.engine.catch_up_tokenwise(kv_one, job.built, &piece)?
                         }
                         (None, None) => unreachable!("handled by the fresh-prompt branch"),
                     };
@@ -1882,7 +2005,12 @@ impl Scheduler {
                     // (never exceeding the largest lowered bucket).
                     let kv = match (job.kv_one.take(), job.source.take()) {
                         (Some(kv), _) => kv,
-                        (None, Some(src)) => self.engine.clone_kv(&src.kv_one)?,
+                        (None, Some(src)) => {
+                            let kv_one = src
+                                .dense()
+                                .expect("paged sources route through the paged branch");
+                            self.engine.clone_kv(kv_one)?
+                        }
                         (None, None) => unreachable!("handled by the fresh-prompt branch"),
                     };
                     let max = self.engine.rt.info.max_chunk_bucket().unwrap();
@@ -1926,17 +2054,35 @@ impl Scheduler {
     fn finalize_job(&mut self, mut job: PrefillJob) -> Result<()> {
         // A zero-feed job (full cache hit parked while the decode slots
         // were exhausted) passes its already-cached source KV through.
-        let from_cache = job.kv_one.is_none() && job.source.is_some();
-        let kv: Rc<CachedKv> = match (job.kv_one.take(), job.source.take()) {
-            (Some(k), _) => CachedKv::new(k, job.total),
-            (None, Some(src)) => src,
-            (None, None) => {
-                let e = anyhow!("staged prefill completed without KV state");
+        let from_cache =
+            job.kv_one.is_none() && job.paged.is_none() && job.source.is_some();
+        let built: Result<Rc<CachedKv>> = match (job.paged.take(), job.kv_one.take()) {
+            // Paged extension: the pages *are* the cache entry — seal
+            // captures the mailbox logits and hands the set over with
+            // zero device-side copies.
+            (Some(set), _) => self.engine.seal_paged(set, job.total),
+            // Dense staging buffer: in paged mode adopt it onto pages
+            // (one scatter), otherwise wrap it as a dense entry.
+            (None, Some(k)) => {
+                if self.engine.is_paged() {
+                    self.engine.adopt_cached(&k, job.total)
+                } else {
+                    Ok(CachedKv::new(k, job.total))
+                }
+            }
+            (None, None) => match job.source.take() {
+                Some(src) => Ok(src),
+                None => Err(anyhow!("staged prefill completed without KV state")),
+            },
+        };
+        let kv = match built {
+            Ok(kv) => kv,
+            Err(e) => {
                 self.fail_followers(&job, &e);
                 return Err(e);
             }
         };
-        let logits = match self.engine.rt.read_logits(1, &kv.kv_one, 0) {
+        let logits = match self.engine.cached_logits(&kv) {
             Ok(l) => l,
             Err(e) => {
                 self.fail_followers(&job, &e);
@@ -2432,7 +2578,7 @@ impl Scheduler {
             timing.kv_full_hit = true;
             if self.mm_cache.enable_emb {
                 timing.vision_cached = decoded.len();
-                let logits = self.engine.rt.read_logits(1, &hit.kv.kv_one, 0)?;
+                let logits = self.engine.cached_logits(&hit.kv)?;
                 // No rows are composed here — this is the decode-only
                 // fast path.  If the sequence is later picked as an
                 // eviction/migration victim, its pooled rows are
@@ -2623,6 +2769,7 @@ impl Scheduler {
                 fed: 0,
                 kv_one: None,
                 source: None,
+                paged: None,
                 built: 0,
                 total: expected_vis + pend.text_tokens.len(),
                 feed_open: true,
@@ -2802,7 +2949,7 @@ impl Scheduler {
         // (`mm_kv_invalidated`).
         if let Some(hit) = p.kv_hit.take() {
             if hit.emb_fp == emb_fp {
-                let logits = self.engine.rt.read_logits(1, &hit.kv.kv_one, 0)?;
+                let logits = self.engine.cached_logits(&hit.kv)?;
                 // The fresh encodes just validated this KV; they are
                 // also its rebuild material — retain the pooled rows
                 // so the sequence is evictable.  (verify_fp=false: the
@@ -2854,12 +3001,21 @@ impl Scheduler {
         // staging is off / the suffix fits one chunk).  The pooled
         // vision rows are retained on the sequence so an eviction can
         // always rebuild this KV.
+        let total = n_vis_tokens + p.text_tokens.len();
+        let s_max = self.engine.rt.info.s_max;
+        if total + 1 >= s_max {
+            bail!(
+                "this model's maximum context length is {} positions, but the request \
+                 holds {total} ({n_vis_tokens} vision rows + {} text tokens)",
+                s_max.saturating_sub(2),
+                p.text_tokens.len()
+            );
+        }
         let text_rows = self.engine.rt.embed_lookup(&p.text_tokens)?;
         let vis_rc = Rc::new(vis_embeds);
-        let mut embeds = Vec::with_capacity((n_vis_tokens + p.text_tokens.len()) * d);
+        let mut embeds = Vec::with_capacity(total * d);
         embeds.extend_from_slice(&vis_rc);
         embeds.extend_from_slice(&text_rows);
-        let total = n_vis_tokens + p.text_tokens.len();
         let mm = MmSeq {
             hashes: p.hashes,
             emb_fp,
@@ -2895,16 +3051,7 @@ impl Scheduler {
         if tokens.is_empty() {
             return Err(anyhow!("empty prompt"));
         }
-        let max_prompt = *self
-            .engine
-            .rt
-            .info
-            .prefill_buckets
-            .last()
-            .unwrap_or(&self.engine.rt.info.s_max);
-        if tokens.len() > max_prompt {
-            return Err(anyhow!("prompt of {} tokens exceeds max {max_prompt}", tokens.len()));
-        }
+        self.check_context(tokens.len())?;
 
         if self.cfg.text_cache_bytes > 0 {
             if let Some(hit) = self.text_lookup(tokens) {
@@ -2913,7 +3060,7 @@ impl Scheduler {
                 if hit.full {
                     self.metrics.inc("text_prefix_full_hits", 1);
                     timing.kv_full_hit = true;
-                    let logits = self.engine.rt.read_logits(1, &hit.kv.kv_one, 0)?;
+                    let logits = self.engine.cached_logits(&hit.kv)?;
                     return Ok(Resolved::Ready {
                         tokens: tokens.to_vec(),
                         kv: hit.kv,
@@ -3021,12 +3168,18 @@ impl Scheduler {
         for (id, f) in finished {
             self.finish(id, f);
         }
-        // Shrink with 4x hysteresis: migrations cost O(arena) device work
-        // per live sequence, so only shrink when occupancy is far below
-        // the bucket (the ablation_scheduler bench quantifies the thrash
-        // cost of an aggressive 2x policy — see EXPERIMENTS.md §Perf).
+        // Shrink policy.  Arena mode: 4x hysteresis, because migrations
+        // cost O(arena) device work per live sequence (the
+        // ablation_scheduler bench quantifies the thrash cost of an
+        // aggressive 2x policy — see EXPERIMENTS.md §Perf).  Paged mode:
+        // shrink eagerly — migration is host-only slot compaction (the
+        // pool never moves), so there is no thrash cost to hedge against.
         if self.cfg.allow_shrink {
-            let _ = self.engine.maybe_shrink_with_hysteresis(4);
+            if self.engine.is_paged() {
+                let _ = self.engine.maybe_shrink();
+            } else {
+                let _ = self.engine.maybe_shrink_with_hysteresis(4);
+            }
         }
         self.metrics
             .set_gauge("active_requests", self.active.len() as f64);
@@ -3061,11 +3214,13 @@ impl Scheduler {
                 None => self.cfg.text_cache_bytes > 0,
             };
         match self.engine.remove(id, cache_it) {
-            Ok(Some(kv_one)) => {
+            Ok(Some(kv)) => {
                 // Invariant: the KV encodes exactly the prompt plus every
                 // FED token; a.all_tokens is that sequence (token-id view)
-                // and is therefore the cache key.
-                let kv_len = a.prompt_len + a.fed;
+                // and is therefore the cache key.  In paged mode the
+                // entry carries the sequence's own pages — handing it to
+                // the cache is refcount bookkeeping, not a device copy.
+                debug_assert_eq!(kv.len, a.prompt_len + a.fed);
                 match &a.mm {
                     // Multimodal: key (image hashes ++ token ids) in the
                     // mm KV cache — repeated queries over the same images
@@ -3075,10 +3230,10 @@ impl Scheduler {
                     Some(m) => {
                         let key = mm_prompt_hash(&m.hashes, &a.all_tokens);
                         let fp = m.emb_fp;
-                        self.mm_put_kv(key, CachedKv::new(kv_one, kv_len), fp);
+                        self.mm_put_kv(key, kv, fp);
                     }
                     None => {
-                        self.text_put(&a.all_tokens, CachedKv::new_rc(kv_one, kv_len));
+                        self.text_put(&a.all_tokens, kv);
                     }
                 }
             }
@@ -3161,12 +3316,6 @@ fn mm_migration(m: &MmSeq) -> Option<MmMigration> {
         vis_rows: (**r).clone(),
         n_vis_rows: m.n_vis_rows,
     })
-}
-
-impl CachedKv {
-    fn new_rc(kv_one: xla::PjRtBuffer, len: usize) -> Rc<Self> {
-        CachedKv::new(kv_one, len)
-    }
 }
 
 // ---------------------------------------------------------------- handle

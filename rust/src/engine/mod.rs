@@ -1,14 +1,31 @@
-//! The text inference engine: batched decode over a device-resident KV
-//! slot arena.
+//! The text inference engine: batched decode over device-resident KV
+//! state, with two interchangeable storage backends.
 //!
 //! This is the "ours" execution backend (Table 1): device-resident
-//! arenas threaded between executables with `execute_b` (the
+//! state threaded between executables with `execute_b` (the
 //! unified-memory zero-copy analog), bucketed batch executables, and
 //! slot-level admission/eviction so requests join and leave at token
 //! boundaries (Algorithm 1's mechanics — the *policy* lives in
 //! `coordinator::scheduler`).
 //!
-//! Slot arena lifecycle (staged-prefill pipeline):
+//! Backends ([`KvStore`]):
+//!
+//! * **Arena** — the original dense slot arena `[.., B, .., s_max, ..]`:
+//!   admission injects an s_max-sized kv_one into a slot, eviction
+//!   extracts a full copy, grow/shrink migrates every live slot through
+//!   extract+inject, and cache checkpoints cost an O(s_max) device copy
+//!   (optionally trimmed via the `trim_kv_s{S}` grids).
+//! * **Paged** — one pool buffer `[.., P, .., page, ..]` plus a
+//!   host-side [`PageArena`] handing out fixed-size pages with
+//!   refcounts.  Sequences own [`PageSet`]s; prefix-cache hits,
+//!   follower coalescing and eviction checkpoints become zero-copy
+//!   page pins (refcount++), with device-side `copy_page` only on
+//!   copy-on-write divergence inside a shared tail page.  Grow/shrink
+//!   is an executable-bucket swap — the pool never moves, so the trim
+//!   grids and migration copies are never needed on this path.
+//!
+//! Slot-arena lifecycle (staged-prefill pipeline; the paged backend
+//! replaces inject/extract with `adopt_paged` / page pins):
 //!
 //! ```text
 //!            STAGING (one kv_one per in-flight prefill)
@@ -25,17 +42,23 @@
 //!
 //! Short prompts (≤ one chunk) still go through the one-shot `prefill`
 //! executables; the staging path exists so long prompts never stall the
-//! decode arena for more than one chunk's worth of work.
+//! decode arena for more than one chunk's worth of work.  Fresh
+//! prompts build on dense kv_one buffers in BOTH modes (identical
+//! numerics); the paged backend adopts the finished kv_one onto pages
+//! at admission/finalize time, so greedy output is byte-identical
+//! across backends.
 
 pub mod sampler;
 pub mod tokenizer;
 
 use std::collections::HashMap;
+use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 use xla::PjRtBuffer;
 
-use crate::runtime::ModelRuntime;
+use crate::cache::{CachedKv, KvBacking};
+use crate::runtime::{paged, ModelRuntime, PageArena, PageArenaStats, PageSet, SharedPageArena};
 
 /// Per-sequence engine state.
 #[derive(Debug, Clone)]
@@ -43,6 +66,28 @@ pub struct SeqState {
     pub slot: usize,
     /// Next KV write position == current sequence length.
     pub pos: i32,
+}
+
+/// Paged-backend bookkeeping for one active sequence.
+struct PagedSeq {
+    set: PageSet,
+    /// Logits carried over from a zero-copy cached admission: the
+    /// mailbox page is freshly allocated (garbage) until the first
+    /// decode step writes it, so a checkpoint taken before any step
+    /// must use these instead of reading the mailbox.
+    last_logits: Option<Vec<f32>>,
+}
+
+/// KV storage backend (see module docs).
+enum KvStore {
+    Arena {
+        arena: PjRtBuffer,
+    },
+    Paged {
+        pool: PjRtBuffer,
+        arena: SharedPageArena,
+        seq_pages: HashMap<u64, PagedSeq>,
+    },
 }
 
 /// Engine statistics for /metrics and the benches.
@@ -62,6 +107,22 @@ pub struct EngineStats {
     pub sparse_readbacks: u64,
     /// Sum over steps of occupied/bucket (batch efficiency numerator).
     pub occupancy_sum: f64,
+    /// Dense kv_one states scattered onto pool pages (`adopt_paged`).
+    pub page_adopts: u64,
+    /// Admissions served entirely by page pins — no device KV copy.
+    pub zero_copy_admits: u64,
+}
+
+/// Point-in-time view of the paged KV pool for /metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct PagePoolSnapshot {
+    pub total_pages: usize,
+    pub capacity: usize,
+    pub free_pages: usize,
+    pub allocated_pages: usize,
+    pub utilization: f64,
+    pub page_size: usize,
+    pub stats: PageArenaStats,
 }
 
 /// Logits produced by one batched decode step, backed by the single
@@ -107,16 +168,35 @@ impl StepLogits {
     }
 }
 
+/// Copy-on-write block `j` of `set` if it is shared: allocate a private
+/// replacement and run the device-side `copy_page`.  Private blocks are
+/// a no-op (the allocator hands back `(src, src)`).
+fn cow_block(
+    rt: &ModelRuntime,
+    pool: &mut PjRtBuffer,
+    set: &mut PageSet,
+    j: usize,
+) -> Result<()> {
+    let (src, dst) = set
+        .cow(j)
+        .ok_or_else(|| anyhow!("KV page pool exhausted during copy-on-write"))?;
+    if src != dst {
+        *pool = rt.copy_page(pool, src, dst)?;
+    }
+    Ok(())
+}
+
 pub struct TextEngine {
     pub rt: ModelRuntime,
     bucket: usize,
-    arena: PjRtBuffer,
+    store: KvStore,
     slots: Vec<Option<u64>>,
     seqs: HashMap<u64, SeqState>,
     pub stats: EngineStats,
 }
 
 impl TextEngine {
+    /// Slot-arena backend (the pre-paging default).
     pub fn new(rt: ModelRuntime) -> Result<Self> {
         let bucket = *rt
             .info
@@ -127,11 +207,97 @@ impl TextEngine {
         Ok(TextEngine {
             rt,
             bucket,
-            arena,
+            store: KvStore::Arena { arena },
             slots: vec![None; bucket],
             seqs: HashMap::new(),
             stats: EngineStats::default(),
         })
+    }
+
+    /// Paged backend over the model's full lowered pool.
+    pub fn new_paged(rt: ModelRuntime) -> Result<Self> {
+        Self::new_paged_capped(rt, None)
+    }
+
+    /// Paged backend with the usable page budget capped below the
+    /// lowered pool size (the paged-KV ablation holds both modes to the
+    /// same KV byte budget this way).
+    pub fn new_paged_capped(rt: ModelRuntime, page_cap: Option<usize>) -> Result<Self> {
+        if !rt.has_paged_kv() {
+            bail!(
+                "model {} artifacts lack paged-KV entries; rebuild them with \
+                 `python -m compile.aot --out-dir ../rust/artifacts`",
+                rt.info.name
+            );
+        }
+        let bucket = *rt
+            .info
+            .decode_buckets
+            .first()
+            .ok_or_else(|| anyhow!("no decode buckets"))?;
+        let pool = rt.new_pool()?;
+        let total = rt.info.kv_pool_pages;
+        let cap = page_cap.unwrap_or(total).min(total.saturating_sub(1));
+        let arena = paged::shared(PageArena::with_capacity(total, cap));
+        Ok(TextEngine {
+            rt,
+            bucket,
+            store: KvStore::Paged { pool, arena, seq_pages: HashMap::new() },
+            slots: vec![None; bucket],
+            seqs: HashMap::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    pub fn is_paged(&self) -> bool {
+        matches!(self.store, KvStore::Paged { .. })
+    }
+
+    /// The paged pool's allocator (None on the arena backend).
+    pub fn page_arena(&self) -> Option<&SharedPageArena> {
+        match &self.store {
+            KvStore::Paged { arena, .. } => Some(arena),
+            KvStore::Arena { .. } => None,
+        }
+    }
+
+    /// Pool-state snapshot for /metrics (None on the arena backend).
+    pub fn page_pool(&self) -> Option<PagePoolSnapshot> {
+        match &self.store {
+            KvStore::Paged { arena, .. } => {
+                let a = arena.borrow();
+                Some(PagePoolSnapshot {
+                    total_pages: a.total_pages(),
+                    capacity: a.capacity(),
+                    free_pages: a.free_pages(),
+                    allocated_pages: a.allocated_pages(),
+                    utilization: a.utilization(),
+                    page_size: self.rt.info.kv_page_size,
+                    stats: a.stats(),
+                })
+            }
+            KvStore::Arena { .. } => None,
+        }
+    }
+
+    /// Split borrow of the paged backend's parts (rt is read-only; the
+    /// pool handle is replaced on every donating executable call).
+    #[allow(clippy::type_complexity)]
+    fn paged_mut(
+        &mut self,
+    ) -> Result<(
+        &ModelRuntime,
+        &mut PjRtBuffer,
+        &SharedPageArena,
+        &mut HashMap<u64, PagedSeq>,
+        &mut EngineStats,
+    )> {
+        match &mut self.store {
+            KvStore::Paged { pool, arena, seq_pages } => {
+                Ok((&self.rt, pool, arena, seq_pages, &mut self.stats))
+            }
+            KvStore::Arena { .. } => bail!("engine is not in paged mode"),
+        }
     }
 
     pub fn bucket(&self) -> usize {
@@ -155,6 +321,8 @@ impl TextEngine {
     }
 
     /// Run prompt processing and return the kv_one buffer (device).
+    /// Used by both backends — fresh prompts always build dense (the
+    /// paged backend adopts the result onto pages afterwards).
     pub fn prefill(&mut self, tokens: &[i32]) -> Result<PjRtBuffer> {
         self.stats.prefills += 1;
         self.rt.prefill(tokens)
@@ -165,9 +333,29 @@ impl TextEngine {
         self.rt.read_logits(1, kv_one, 0)
     }
 
-    /// Admit a prefilled sequence: grow the arena if needed, inject into
-    /// a free slot.  `len` is the sequence length captured in `kv_one`.
-    pub fn admit(&mut self, id: u64, kv_one: &PjRtBuffer, len: usize) -> Result<()> {
+    /// Last-token logits of a cached KV state: a mailbox readback for
+    /// dense entries, a host-side copy for paged checkpoints (which
+    /// captured them at extraction — full hits never touch the device).
+    pub fn cached_logits(&self, kv: &CachedKv) -> Result<Vec<f32>> {
+        match &kv.backing {
+            KvBacking::Dense { kv_one, trim } => {
+                if trim.is_some() {
+                    bail!("logits readback from a trimmed KV state (expand it first)");
+                }
+                self.rt.read_logits(1, kv_one, 0)
+            }
+            KvBacking::Paged { logits, .. } => Ok(logits.clone()),
+        }
+    }
+
+    /// Admit a prefilled sequence of length `len`.  Arena: grow if
+    /// needed and inject the dense kv_one into a free slot.  Paged:
+    /// dense states are scattered onto fresh pages (`adopt_paged`, one
+    /// device pass); paged cache checkpoints are admitted zero-copy —
+    /// their pages are pinned shared and only a private mailbox page is
+    /// allocated, with any tail-page divergence handled lazily by
+    /// copy-on-write at the first decode step.
+    pub fn admit(&mut self, id: u64, kv: &CachedKv, len: usize) -> Result<()> {
         if self.seqs.contains_key(&id) {
             bail!("sequence {id} already admitted");
         }
@@ -180,27 +368,95 @@ impl TextEngine {
             .iter()
             .position(|s| s.is_none())
             .expect("ensure_capacity guarantees a free slot");
-        self.arena = self.rt.inject(self.bucket, &self.arena, kv_one, slot)?;
-        self.stats.injects += 1;
+        match &mut self.store {
+            KvStore::Arena { arena } => {
+                let kv_one = kv
+                    .dense()
+                    .ok_or_else(|| anyhow!("paged KV state cannot enter the slot arena"))?;
+                *arena = self.rt.inject(self.bucket, arena, kv_one, slot)?;
+                self.stats.injects += 1;
+            }
+            KvStore::Paged { pool, arena, seq_pages } => {
+                let page = self.rt.info.kv_page_size;
+                let nblk = self.rt.info.kv_blocks_per_seq();
+                match &kv.backing {
+                    KvBacking::Dense { kv_one, trim } => {
+                        if trim.is_some() {
+                            bail!("trimmed KV state cannot be adopted onto pages");
+                        }
+                        let mut set = PageSet::new(arena);
+                        if len > 0 && !set.cover(len - 1, page) {
+                            bail!("KV page pool exhausted admitting sequence {id}");
+                        }
+                        if !set.alloc_mailbox() {
+                            bail!("KV page pool exhausted admitting sequence {id}");
+                        }
+                        let mb = set.mailbox.unwrap();
+                        *pool = self.rt.adopt_paged(pool, kv_one, &set.table(nblk), mb)?;
+                        self.stats.page_adopts += 1;
+                        seq_pages.insert(id, PagedSeq { set, last_logits: None });
+                    }
+                    KvBacking::Paged { pages, logits } => {
+                        let n = len.div_ceil(page).min(pages.pages.len());
+                        let mut set = pages.share_prefix(n);
+                        if !set.alloc_mailbox() {
+                            bail!("KV page pool exhausted admitting sequence {id}");
+                        }
+                        self.stats.zero_copy_admits += 1;
+                        seq_pages
+                            .insert(id, PagedSeq { set, last_logits: Some(logits.clone()) });
+                    }
+                }
+            }
+        }
         self.slots[slot] = Some(id);
         self.seqs.insert(id, SeqState { slot, pos: len as i32 });
         Ok(())
     }
 
-    /// Remove a sequence.  If `extract_kv` is set, returns its kv_one
-    /// (for the prefix cache to keep); otherwise the slot is just freed.
-    pub fn remove(&mut self, id: u64, extract_kv: bool) -> Result<Option<PjRtBuffer>> {
+    /// Remove a sequence.  If `extract_kv` is set, returns its KV state
+    /// for the prefix caches to keep: an extracted kv_one copy on the
+    /// arena backend, a zero-copy page checkpoint (the sequence's own
+    /// pages plus a host-side logits capture) on the paged backend.
+    pub fn remove(&mut self, id: u64, extract_kv: bool) -> Result<Option<Rc<CachedKv>>> {
         let st = self
             .seqs
             .remove(&id)
             .ok_or_else(|| anyhow!("sequence {id} not active"))?;
         self.slots[st.slot] = None;
-        if extract_kv {
-            let kv = self.rt.extract(self.bucket, &self.arena, st.slot)?;
-            self.stats.extracts += 1;
-            Ok(Some(kv))
-        } else {
-            Ok(None)
+        let len = st.pos as usize;
+        match &mut self.store {
+            KvStore::Arena { arena } => {
+                if extract_kv {
+                    let kv = self.rt.extract(self.bucket, arena, st.slot)?;
+                    self.stats.extracts += 1;
+                    Ok(Some(CachedKv::new(kv, len)))
+                } else {
+                    Ok(None)
+                }
+            }
+            KvStore::Paged { pool, seq_pages, .. } => {
+                let mut ps = seq_pages
+                    .remove(&id)
+                    .ok_or_else(|| anyhow!("paged sequence {id} has no pages"))?;
+                if extract_kv {
+                    let logits = match ps.last_logits.take() {
+                        Some(l) => l,
+                        None => {
+                            let mb = ps
+                                .set
+                                .mailbox
+                                .ok_or_else(|| anyhow!("paged sequence {id} has no mailbox"))?;
+                            self.rt.read_logits_page(pool, mb)?
+                        }
+                    };
+                    ps.set.release_mailbox();
+                    self.stats.extracts += 1;
+                    Ok(Some(CachedKv::new_paged(ps.set, logits, len)))
+                } else {
+                    Ok(None)
+                }
+            }
         }
     }
 
@@ -209,10 +465,21 @@ impl TextEngine {
     /// sequence must be present.  Returns the step's logits as slices
     /// into one readback buffer (see [`StepLogits`]).
     pub fn step(&mut self, next_tokens: &HashMap<u64, i32>) -> Result<StepLogits> {
+        if self.is_paged() {
+            self.step_paged(next_tokens)
+        } else {
+            self.step_arena(next_tokens)
+        }
+    }
+
+    fn step_arena(&mut self, next_tokens: &HashMap<u64, i32>) -> Result<StepLogits> {
         let v = self.rt.info.vocab;
         if self.seqs.is_empty() {
             return Ok(StepLogits::empty(v));
         }
+        let KvStore::Arena { arena } = &mut self.store else {
+            unreachable!("step_arena on paged store")
+        };
         let mut tokens = vec![0i32; self.bucket];
         let mut pos = vec![0i32; self.bucket];
         for (&id, st) in &self.seqs {
@@ -225,7 +492,7 @@ impl TextEngine {
             tokens[st.slot] = *t;
             pos[st.slot] = st.pos;
         }
-        self.arena = self.rt.decode(self.bucket, &tokens, &pos, &self.arena)?;
+        *arena = self.rt.decode(self.bucket, &tokens, &pos, arena)?;
         self.stats.decode_steps += 1;
         self.stats.decode_slot_steps += self.seqs.len() as u64;
         self.stats.occupancy_sum += self.seqs.len() as f64 / self.bucket as f64;
@@ -246,7 +513,7 @@ impl TextEngine {
                 ids.push((id, ids.len()));
                 flat.extend_from_slice(&self.rt.read_logits_one(
                     self.bucket,
-                    &self.arena,
+                    arena,
                     st.slot,
                 )?);
             }
@@ -257,8 +524,74 @@ impl TextEngine {
                 st.pos += 1;
                 ids.push((id, st.slot));
             }
-            self.rt.read_logits_all(self.bucket, &self.arena)?
+            self.rt.read_logits_all(self.bucket, arena)?
         };
+        Ok(StepLogits { ids, flat, vocab: v })
+    }
+
+    /// Paged decode step: per-lane block tables route attention to each
+    /// sequence's pages; lazy copy-on-write detaches any still-shared
+    /// write block first, so cached admissions that never diverge past
+    /// a page boundary never pay a copy.
+    fn step_paged(&mut self, next_tokens: &HashMap<u64, i32>) -> Result<StepLogits> {
+        let v = self.rt.info.vocab;
+        if self.seqs.is_empty() {
+            return Ok(StepLogits::empty(v));
+        }
+        let s_max = self.rt.info.s_max;
+        let page = self.rt.info.kv_page_size;
+        let nblk = self.rt.info.kv_blocks_per_seq();
+        let bucket = self.bucket;
+        let KvStore::Paged { pool, seq_pages, .. } = &mut self.store else {
+            unreachable!("step_paged on arena store")
+        };
+        let mut tokens = vec![0i32; bucket];
+        let mut pos = vec![0i32; bucket];
+        let mut tables = vec![0i32; bucket * nblk];
+        let mut mailbox = vec![0i32; bucket];
+        for (&id, st) in &self.seqs {
+            let t = next_tokens
+                .get(&id)
+                .ok_or_else(|| anyhow!("no next token for active sequence {id}"))?;
+            if st.pos as usize + 1 >= s_max {
+                bail!("sequence {id} overflows the KV arena");
+            }
+            let ps = seq_pages
+                .get_mut(&id)
+                .ok_or_else(|| anyhow!("paged sequence {id} has no pages"))?;
+            let wp = st.pos as usize;
+            if !ps.set.cover(wp, page) {
+                bail!("KV page pool exhausted mid-decode for sequence {id}");
+            }
+            cow_block(&self.rt, pool, &mut ps.set, wp / page)?;
+            ps.last_logits = None;
+            tokens[st.slot] = *t;
+            pos[st.slot] = st.pos;
+            tables[st.slot * nblk..(st.slot + 1) * nblk]
+                .copy_from_slice(&ps.set.table(nblk));
+            mailbox[st.slot] = ps
+                .set
+                .mailbox
+                .ok_or_else(|| anyhow!("paged sequence {id} has no mailbox"))?
+                as i32;
+        }
+        *pool = self.rt.decode_paged(bucket, &tokens, &pos, &tables, &mailbox, pool)?;
+        self.stats.decode_steps += 1;
+        self.stats.decode_slot_steps += self.seqs.len() as u64;
+        self.stats.occupancy_sum += self.seqs.len() as f64 / bucket as f64;
+
+        // Mailbox pages are per-sequence, so the readback is always
+        // sparse: O(active * vocab) regardless of bucket.
+        let mut ids = Vec::with_capacity(self.seqs.len());
+        let mut flat = Vec::with_capacity(self.seqs.len() * v);
+        for (&id, st) in &mut self.seqs {
+            st.pos += 1;
+            ids.push((id, ids.len()));
+            flat.extend_from_slice(
+                &self.rt.read_logits_page(pool, mailbox[st.slot] as u32)?,
+            );
+        }
+        self.stats.sparse_readbacks += 1;
         Ok(StepLogits { ids, flat, vocab: v })
     }
 
@@ -357,11 +690,171 @@ impl TextEngine {
         Ok((kv_one, logits))
     }
 
+    // --------------------------------------------- paged staged prefill
+
+    /// Start extending a paged cache checkpoint past `matched` tokens:
+    /// pin the covering pages zero-copy, allocate a private mailbox,
+    /// and copy-on-write the partial tail page (the next chunk writes
+    /// into it).  Page-aligned matches never copy.
+    pub fn begin_extend_paged(&mut self, src: &CachedKv, matched: usize) -> Result<PageSet> {
+        let (rt, pool, _arena, _sp, _stats) = self.paged_mut()?;
+        let page = rt.info.kv_page_size;
+        let pages = src
+            .pages()
+            .ok_or_else(|| anyhow!("begin_extend_paged needs a paged source"))?;
+        debug_assert!(matched <= src.len);
+        let n_shared = matched.div_ceil(page).min(pages.pages.len());
+        let mut set = pages.share_prefix(n_shared);
+        if !set.alloc_mailbox() {
+            bail!("KV page pool exhausted");
+        }
+        if matched % page != 0 && n_shared > 0 {
+            cow_block(rt, pool, &mut set, n_shared - 1)?;
+        }
+        Ok(set)
+    }
+
+    /// Feed one chunk of prompt tokens straight into a page set under
+    /// construction (the paged analog of [`TextEngine::feed_chunk`] —
+    /// no dense kv_one staging buffer, no adopt pass at the end).
+    pub fn feed_chunk_paged(
+        &mut self,
+        set: &mut PageSet,
+        start: usize,
+        tokens: &[i32],
+    ) -> Result<()> {
+        let (rt, pool, _arena, _sp, stats) = self.paged_mut()?;
+        let page = rt.info.kv_page_size;
+        let nblk = rt.info.kv_blocks_per_seq();
+        let end = start + tokens.len();
+        debug_assert!(end > start);
+        if !set.cover(end - 1, page) {
+            bail!("KV page pool exhausted");
+        }
+        for j in start / page..=(end - 1) / page {
+            cow_block(rt, pool, set, j)?;
+        }
+        if !set.alloc_mailbox() {
+            bail!("KV page pool exhausted");
+        }
+        let mb = set.mailbox.unwrap();
+        *pool = rt.prefill_from_paged(pool, start, tokens, &set.table(nblk), mb)?;
+        stats.prefill_chunks += 1;
+        stats.chunk_tokens_fed += tokens.len() as u64;
+        Ok(())
+    }
+
+    /// Token-by-token extension of a page set through bucket-1 paged
+    /// decode steps (the paged analog of the tokenwise catch-up).
+    pub fn feed_tokens_paged(
+        &mut self,
+        set: &mut PageSet,
+        start: usize,
+        tokens: &[i32],
+    ) -> Result<()> {
+        let (rt, pool, _arena, _sp, _stats) = self.paged_mut()?;
+        let page = rt.info.kv_page_size;
+        let nblk = rt.info.kv_blocks_per_seq();
+        if !set.alloc_mailbox() {
+            bail!("KV page pool exhausted");
+        }
+        let mb = set.mailbox.unwrap() as i32;
+        let mut pos = start;
+        for &t in tokens {
+            if !set.cover(pos, page) {
+                bail!("KV page pool exhausted");
+            }
+            cow_block(rt, pool, set, pos / page)?;
+            *pool = rt.decode_paged(1, &[t], &[pos as i32], &set.table(nblk), &[mb], pool)?;
+            pos += 1;
+        }
+        Ok(())
+    }
+
+    /// Finish a page-set build: capture the mailbox logits host-side,
+    /// release the mailbox page, and wrap the pages as a cache-ready
+    /// checkpoint of `len` tokens.
+    pub fn seal_paged(&mut self, mut set: PageSet, len: usize) -> Result<Rc<CachedKv>> {
+        let (rt, pool, _arena, _sp, _stats) = self.paged_mut()?;
+        let mb = set
+            .mailbox
+            .ok_or_else(|| anyhow!("sealing a page set without a mailbox"))?;
+        let logits = rt.read_logits_page(pool, mb)?;
+        set.release_mailbox();
+        Ok(CachedKv::new_paged(set, logits, len))
+    }
+
+    /// Scatter a finished dense kv_one onto fresh pool pages and wrap
+    /// it as a paged checkpoint (the bridge from dense prefill builds
+    /// into the paged world; one device pass, like an arena inject).
+    /// The mailbox plane is routed to the page-0 sink — the logits are
+    /// captured host-side first.
+    pub fn adopt_cached(&mut self, kv_one: &PjRtBuffer, len: usize) -> Result<Rc<CachedKv>> {
+        let (rt, pool, arena, _sp, stats) = self.paged_mut()?;
+        let page = rt.info.kv_page_size;
+        let nblk = rt.info.kv_blocks_per_seq();
+        let logits = rt.read_logits(1, kv_one, 0)?;
+        let mut set = PageSet::new(arena);
+        if len > 0 && !set.cover(len - 1, page) {
+            bail!("KV page pool exhausted");
+        }
+        *pool = rt.adopt_paged(pool, kv_one, &set.table(nblk), 0)?;
+        stats.page_adopts += 1;
+        Ok(CachedKv::new_paged(set, logits, len))
+    }
+
+    /// Backend-aware chunked catch-up from a cached state: dense
+    /// sources use the kv_one staging path, paged sources extend their
+    /// pages in place (zero-copy pins + CoW).  Returns the new state
+    /// covering `matched + suffix.len()` tokens; its logits are
+    /// reachable via [`TextEngine::cached_logits`].
+    pub fn catch_up_chunk_cached(
+        &mut self,
+        src: &CachedKv,
+        matched: usize,
+        suffix: &[i32],
+        chunk: usize,
+    ) -> Result<Rc<CachedKv>> {
+        if src.is_paged() {
+            let mut set = self.begin_extend_paged(src, matched)?;
+            let mut pos = matched;
+            for piece in suffix.chunks(chunk.max(1)) {
+                self.feed_chunk_paged(&mut set, pos, piece)?;
+                pos += piece.len();
+            }
+            self.seal_paged(set, pos)
+        } else {
+            let kv_one = src.dense().ok_or_else(|| anyhow!("dense source expected"))?.clone();
+            let (kv, _logits) = self.catch_up_chunk(&kv_one, matched, suffix, chunk)?;
+            Ok(CachedKv::new(kv, matched + suffix.len()))
+        }
+    }
+
+    /// Backend-aware tokenwise catch-up (see
+    /// [`TextEngine::catch_up_chunk_cached`]).
+    pub fn catch_up_tokenwise_cached(
+        &mut self,
+        src: &CachedKv,
+        matched: usize,
+        suffix: &[i32],
+    ) -> Result<Rc<CachedKv>> {
+        if src.is_paged() {
+            let mut set = self.begin_extend_paged(src, matched)?;
+            self.feed_tokens_paged(&mut set, matched, suffix)?;
+            self.seal_paged(set, matched + suffix.len())
+        } else {
+            let kv_one = src.dense().ok_or_else(|| anyhow!("dense source expected"))?.clone();
+            let (kv, _logits) = self.catch_up_tokenwise(&kv_one, matched, suffix)?;
+            Ok(CachedKv::new(kv, matched + suffix.len()))
+        }
+    }
+
     // ---------------------------------------------- capacity management
 
-    /// Grow (or keep) the arena so `n` sequences fit.  Live slots are
-    /// migrated device-side (extract from the old arena, inject into the
-    /// new) — no host copies.
+    /// Grow (or keep) capacity so `n` sequences fit.  Arena: live slots
+    /// are migrated device-side (extract from the old arena, inject
+    /// into the new).  Paged: an executable-bucket swap — the pool and
+    /// every page stay put, only slot numbers are reassigned.
     pub fn ensure_capacity(&mut self, n: usize) -> Result<()> {
         if n <= self.bucket {
             return Ok(());
@@ -390,8 +883,11 @@ impl TextEngine {
     /// Shrink with hysteresis: only migrate down when the active set
     /// occupies at most 1/`factor` of the bucket, so occupancy
     /// oscillating around a bucket boundary doesn't thrash grow→shrink
-    /// migrations (each costs O(arena) device work per live sequence —
-    /// the ablation_scheduler bench quantifies the thrash cost).
+    /// migrations (each costs O(arena) device work per live sequence on
+    /// the arena backend — the ablation_scheduler bench quantifies the
+    /// thrash cost).  The paged backend migrates for free (bucket swap
+    /// only), so its scheduler shrinks eagerly via
+    /// [`TextEngine::maybe_shrink`] instead.
     pub fn maybe_shrink_with_hysteresis(&mut self, factor: usize) -> Result<bool> {
         if self.bucket < 4 || self.seqs.len() * factor > self.bucket {
             return Ok(false);
@@ -400,11 +896,28 @@ impl TextEngine {
     }
 
     fn migrate(&mut self, new_bucket: usize) -> Result<()> {
+        if self.is_paged() {
+            // Host-only: pages never move; compact slot numbers into
+            // the new bucket's lane range.
+            debug_assert!(self.seqs.len() <= new_bucket);
+            let mut new_slots: Vec<Option<u64>> = vec![None; new_bucket];
+            for (i, (&id, st)) in self.seqs.iter_mut().enumerate() {
+                st.slot = i;
+                new_slots[i] = Some(id);
+            }
+            self.slots = new_slots;
+            self.bucket = new_bucket;
+            self.stats.migrations += 1;
+            return Ok(());
+        }
+        let KvStore::Arena { arena } = &mut self.store else {
+            unreachable!("arena migrate on paged store")
+        };
         let mut new_arena = self.rt.new_arena(new_bucket)?;
         let mut new_slots: Vec<Option<u64>> = vec![None; new_bucket];
         let mut moved: Vec<(u64, usize)> = Vec::new();
         for (new_slot, (&id, st)) in self.seqs.iter().enumerate() {
-            let kv = self.rt.extract(self.bucket, &self.arena, st.slot)?;
+            let kv = self.rt.extract(self.bucket, arena, st.slot)?;
             self.stats.extracts += 1;
             new_arena = self.rt.inject(new_bucket, &new_arena, &kv, new_slot)?;
             self.stats.injects += 1;
@@ -414,7 +927,7 @@ impl TextEngine {
         for (id, new_slot) in moved {
             self.seqs.get_mut(&id).unwrap().slot = new_slot;
         }
-        self.arena = new_arena;
+        *arena = new_arena;
         self.slots = new_slots;
         self.bucket = new_bucket;
         self.stats.migrations += 1;

@@ -22,7 +22,7 @@ const USAGE: &str = "umserve — unified-memory LLM/MLLM serving (vllm-mlx repro
 USAGE:
   umserve serve --model NAME [--port 8000] [--artifacts artifacts]
                 [--text-cache-mb 512] [--mm-emb-cache-mb 256] [--mm-kv-cache-mb 256]
-                [--no-cache] [--no-shrink]
+                [--no-cache] [--no-shrink] [--kv paged|arena]
                 [--prefill-chunk 32] [--prefill-chunks-per-step 1]
                 [--sched priority|fifo] [--default-priority normal]
                 [--preemption on|off] [--aging-ticks 64]
@@ -32,6 +32,16 @@ USAGE:
   umserve run   --model NAME --prompt TEXT [--max-tokens 64] [--temperature 0]
                 [--top-k 0] [--top-p 1.0] [--image PATH ...via --image=path]
   umserve info  [--artifacts artifacts]
+
+KV MEMORY:
+  With --kv paged (the default) the decode KV lives in a pool of
+  fixed-size pages managed by a block allocator with refcounted
+  copy-on-write sharing: prefix-cache hits, eviction checkpoints and
+  coalesced followers pin the cached pages instead of copying KV
+  state, and a sequence diverging from a shared prefix copies only
+  the one page it writes.  Greedy output is byte-identical to
+  --kv arena (the dense per-slot arena), which remains available for
+  A/B runs and for artifacts built before the paged entries existed.
 
 SCHEDULING:
   Requests carry a priority class: interactive | normal | batch
@@ -130,6 +140,7 @@ fn engine_config(args: &argparse::Args) -> anyhow::Result<EngineConfig> {
         mm_overlap: args.on_off("mm-overlap", true)?,
         default_priority,
         aging_ticks: args.usize("aging-ticks", 64)? as u64,
+        kv_paged: args.choice("kv", "paged", &["paged", "arena"])? == "paged",
     })
 }
 

@@ -97,6 +97,11 @@ pub struct ModelInfo {
     /// entries (empty for text-only models and manifests predating
     /// cached-KV trimming — the caches then store full s_max buffers).
     pub trim_kv_buckets: Vec<usize>,
+    /// Paged-KV geometry: page size in positions and physical pages in
+    /// the lowered pool (both 0 for manifests predating paging — the
+    /// runtime then only offers the dense slot arena).
+    pub kv_page_size: usize,
+    pub kv_pool_pages: usize,
     pub entries: BTreeMap<String, EntryDesc>,
 }
 
@@ -122,6 +127,47 @@ impl ModelInfo {
     /// at flat index ((0*2+0)*B + b) * Hkv*S*Dh.
     pub fn logits_offset(&self, slot: usize) -> usize {
         slot * self.n_kv_heads * self.s_max * self.d_head
+    }
+
+    /// Paged-KV pool shape (plane 0 = per-page logits mailboxes).
+    /// Unlike the dense arena this is bucket-independent: one pool
+    /// serves every decode bucket, so grow/shrink swaps executables
+    /// without migrating KV state.
+    pub fn pool_shape(&self) -> Vec<usize> {
+        vec![
+            self.n_layers + 1,
+            2,
+            self.kv_pool_pages,
+            self.n_kv_heads,
+            self.kv_page_size,
+            self.d_head,
+        ]
+    }
+
+    pub fn pool_elements(&self) -> usize {
+        self.pool_shape().iter().product()
+    }
+
+    /// Block-table length: pages covering one s_max-long sequence.
+    pub fn kv_blocks_per_seq(&self) -> usize {
+        debug_assert!(self.kv_page_size > 0);
+        self.s_max / self.kv_page_size
+    }
+
+    /// Bytes of one KV page across all planes (the paged analog of
+    /// `cache::kv_token_bytes * page_size`).
+    pub fn kv_page_bytes(&self) -> usize {
+        (self.n_layers + 1) * 2 * self.n_kv_heads * self.kv_page_size * self.d_head * 4
+    }
+
+    /// Whether this manifest carries the paged-KV entries.
+    pub fn has_paged_kv(&self) -> bool {
+        self.kv_page_size > 0
+            && self.kv_pool_pages > 0
+            && self.has_entry("zeros_pool")
+            && self.has_entry("adopt_paged")
+            && self.has_entry("copy_page")
+            && self.has_entry("read_logits_page")
     }
 
     /// Smallest decode bucket that fits `n` active sequences.
@@ -205,8 +251,21 @@ impl ArtifactStore {
     /// Parse `<dir>/manifest.json`.
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let manifest_path = dir.join("manifest.json");
+        if !manifest_path.exists() {
+            // A clean checkout ships no artifacts — fail with the exact
+            // build command instead of an opaque read error.
+            bail!(
+                "no AOT artifacts at {dir}: {mf} does not exist.\n\
+                 Build the sim-zoo artifacts first (takes ~1 min on CPU):\n\
+                 \n    cd python && python -m compile.aot --out-dir ../rust/artifacts\n\
+                 \nthen re-run from rust/ (see README 'Building').",
+                dir = dir.display(),
+                mf = manifest_path.display(),
+            );
+        }
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
         let root = parse(&text).context("parsing manifest.json")?;
 
         let mut models = BTreeMap::new();
@@ -339,6 +398,15 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
             Some(Json::Null) | None => Vec::new(),
             Some(j) => usize_list(j, "trim_kv_buckets")?,
         },
+        // Optional: absent in pre-paging manifests.
+        kv_page_size: match m.get("kv_page_size") {
+            Some(Json::Null) | None => 0,
+            Some(j) => as_usize(j, "kv_page_size")?,
+        },
+        kv_pool_pages: match m.get("kv_pool_pages") {
+            Some(Json::Null) | None => 0,
+            Some(j) => as_usize(j, "kv_pool_pages")?,
+        },
         entries,
     };
     if info.decode_buckets.is_empty() {
@@ -401,6 +469,40 @@ mod tests {
             assert!(m.entries.contains_key(&format!("untrim_kv_s{s}")));
             assert!(s >= m.logits_rows() && s < m.s_max);
         }
+    }
+
+    #[test]
+    fn paged_kv_metadata() {
+        let store = ArtifactStore::open(artifacts_dir()).unwrap();
+        for m in store.models.values() {
+            assert!(m.has_paged_kv(), "{} missing paged entries", m.name);
+            assert_eq!(m.kv_page_size, 64);
+            assert_eq!(m.s_max % m.kv_page_size, 0);
+            assert_eq!(m.kv_blocks_per_seq(), 10);
+            // The per-page mailbox region must cover the vocab.
+            assert!(m.n_kv_heads * m.kv_page_size * m.d_head >= m.vocab, "{}", m.name);
+            // Pool fits the largest bucket's worth of sequences twice.
+            let need = m.decode_buckets.iter().max().unwrap() * (m.kv_blocks_per_seq() + 1);
+            assert!(m.kv_pool_pages >= 2 * need, "{}", m.name);
+            for &b in &m.decode_buckets {
+                let e = m.entry(&format!("decode_paged_b{b}")).unwrap();
+                let inputs: Vec<_> = e.inputs().collect();
+                assert_eq!(inputs[2].name, "tables");
+                assert_eq!(inputs[2].shape, vec![b, m.kv_blocks_per_seq()]);
+                assert_eq!(inputs[4].shape, m.pool_shape());
+            }
+            for &c in &m.prefill_chunk_buckets {
+                assert!(m.has_entry(&format!("prefill_chunk_paged_c{c}")));
+            }
+        }
+    }
+
+    #[test]
+    fn missing_artifacts_hint_names_build_command() {
+        let err = ArtifactStore::open("/nonexistent-artifacts-dir").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("compile.aot"), "hint missing build command: {msg}");
+        assert!(msg.contains("--out-dir"), "hint missing out dir: {msg}");
     }
 
     #[test]

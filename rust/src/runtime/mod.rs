@@ -21,8 +21,10 @@
 
 pub mod manifest;
 pub mod model;
+pub mod paged;
 pub mod weights;
 
 pub use manifest::{ArgDesc, ArtifactStore, EntryDesc, ModelInfo, VisionInfo};
 pub use model::ModelRuntime;
+pub use paged::{PageArena, PageArenaStats, PageSet, SharedPageArena};
 pub use weights::{HostTensor, UmwDtype};

@@ -468,6 +468,165 @@ impl ModelRuntime {
         Ok((out, sizes))
     }
 
+    // ------------------------------------------------- paged-KV helpers
+
+    /// Whether this model's artifacts carry the paged-KV entries.
+    pub fn has_paged_kv(&self) -> bool {
+        self.info.has_paged_kv()
+            && self
+                .info
+                .decode_buckets
+                .iter()
+                .all(|b| self.info.has_entry(&format!("decode_paged_b{b}")))
+    }
+
+    /// Fresh zero-filled page pool, device-resident (the paged analog
+    /// of `new_arena`; allocated once per engine, never migrated).
+    pub fn new_pool(&self) -> Result<PjRtBuffer> {
+        self.run("zeros_pool", &[])
+    }
+
+    /// One decode step over the page pool.  `tables` is row-major
+    /// [bucket, n_blocks] (pad lanes / unallocated blocks -> page 0),
+    /// `mailbox` the per-lane logits page (pad lanes -> 0).  The pool
+    /// is donated — replace the handle with the returned buffer.
+    pub fn decode_paged(
+        &self,
+        bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        tables: &[i32],
+        mailbox: &[i32],
+        pool: &PjRtBuffer,
+    ) -> Result<PjRtBuffer> {
+        let nblk = self.info.kv_blocks_per_seq();
+        debug_assert_eq!(tokens.len(), bucket);
+        debug_assert_eq!(tables.len(), bucket * nblk);
+        self.run(
+            &format!("decode_paged_b{bucket}"),
+            &[
+                Input::I32(tokens.to_vec(), vec![bucket]),
+                Input::I32(pos.to_vec(), vec![bucket]),
+                Input::I32(tables.to_vec(), vec![bucket, nblk]),
+                Input::I32(mailbox.to_vec(), vec![bucket]),
+                Input::Buffer(pool),
+            ],
+        )
+    }
+
+    /// `prefill_from` writing straight into one sequence's pages: the
+    /// chunk occupies absolute positions `start ..`, the final logits
+    /// land in `mailbox`.  The pool is donated.
+    pub fn prefill_from_paged(
+        &self,
+        pool: &PjRtBuffer,
+        start: usize,
+        tokens: &[i32],
+        table: &[i32],
+        mailbox: u32,
+    ) -> Result<PjRtBuffer> {
+        let c = self
+            .info
+            .chunk_bucket_for(tokens.len())
+            .ok_or_else(|| anyhow!("chunk of {} tokens exceeds chunk buckets", tokens.len()))?;
+        let nblk = self.info.kv_blocks_per_seq();
+        debug_assert_eq!(table.len(), nblk);
+        let mut padded = tokens.to_vec();
+        padded.resize(c, 0);
+        self.run(
+            &format!("prefill_chunk_paged_c{c}"),
+            &[
+                Input::I32(padded, vec![c]),
+                Input::I32(vec![start as i32], vec![]),
+                Input::I32(vec![tokens.len() as i32], vec![]),
+                Input::I32(table.to_vec(), vec![nblk]),
+                Input::I32(vec![mailbox as i32], vec![]),
+                Input::Buffer(pool),
+            ],
+        )
+    }
+
+    /// `prefill_from_paged` over pre-composed embedding rows (the
+    /// multimodal staged pipeline).
+    pub fn prefill_from_embeds_paged(
+        &self,
+        pool: &PjRtBuffer,
+        start: usize,
+        embeds: &[f32],
+        len: usize,
+        table: &[i32],
+        mailbox: u32,
+    ) -> Result<PjRtBuffer> {
+        let d = self.info.d_model;
+        debug_assert_eq!(embeds.len(), len * d);
+        let c = self
+            .info
+            .chunk_bucket_for(len)
+            .ok_or_else(|| anyhow!("embed chunk of {len} rows exceeds chunk buckets"))?;
+        let nblk = self.info.kv_blocks_per_seq();
+        let mut padded = embeds.to_vec();
+        padded.resize(c * d, 0.0);
+        self.run(
+            &format!("prefill_chunk_embeds_paged_c{c}"),
+            &[
+                Input::F32(padded, vec![c, d]),
+                Input::I32(vec![start as i32], vec![]),
+                Input::I32(vec![len as i32], vec![]),
+                Input::I32(table.to_vec(), vec![nblk]),
+                Input::I32(vec![mailbox as i32], vec![]),
+                Input::Buffer(pool),
+            ],
+        )
+    }
+
+    /// Scatter a dense kv_one onto a sequence's pages (the one-shot
+    /// prefill -> paged serving bridge; the paged analog of `inject`).
+    /// The pool is donated; the kv_one is only read.
+    pub fn adopt_paged(
+        &self,
+        pool: &PjRtBuffer,
+        kv_one: &PjRtBuffer,
+        table: &[i32],
+        mailbox: u32,
+    ) -> Result<PjRtBuffer> {
+        let nblk = self.info.kv_blocks_per_seq();
+        debug_assert_eq!(table.len(), nblk);
+        self.run(
+            "adopt_paged",
+            &[
+                Input::Buffer(pool),
+                Input::Buffer(kv_one),
+                Input::I32(table.to_vec(), vec![nblk]),
+                Input::I32(vec![mailbox as i32], vec![]),
+            ],
+        )
+    }
+
+    /// Device-side copy of page `src` over page `dst` across every
+    /// plane — the copy-on-write primitive (pool donated).
+    pub fn copy_page(&self, pool: &PjRtBuffer, src: u32, dst: u32) -> Result<PjRtBuffer> {
+        self.run(
+            "copy_page",
+            &[
+                Input::Buffer(pool),
+                Input::I32(vec![src as i32], vec![]),
+                Input::I32(vec![dst as i32], vec![]),
+            ],
+        )
+    }
+
+    /// One mailbox page's logits (the paged `read_logits_one`).
+    pub fn read_logits_page(&self, pool: &PjRtBuffer, page: u32) -> Result<Vec<f32>> {
+        let buf = self.run(
+            "read_logits_page",
+            &[Input::Buffer(pool), Input::I32(vec![page as i32], vec![])],
+        )?;
+        let lit = buf.to_literal_sync()?;
+        let v = lit.to_vec::<f32>()?;
+        self.stats.borrow_mut().host_readback_bytes += (v.len() * 4) as u64;
+        Ok(v)
+    }
+
     /// Whether this model's artifacts carry the `trim_kv_s{s}` /
     /// `untrim_kv_s{s}` pair for a grid size.
     pub fn has_trim_kv(&self, s: usize) -> bool {

@@ -1,0 +1,494 @@
+//! PageArena: host-side allocator for the paged KV pool.
+//!
+//! The device holds ONE pool buffer per engine (shape
+//! `[L+1, 2, P, Hkv, page, Dh]`, see `ModelInfo::pool_shape`); this
+//! module tracks which of its P physical pages are in use and by how
+//! many owners.  All bookkeeping is host-only — allocation, refcounting
+//! and copy-on-write *decisions* never touch the device, which is what
+//! makes prefix-cache hits, follower coalescing and eviction
+//! checkpoints zero-copy: they pin pages (refcount++) instead of
+//! copying `s_max`-sized kv_one buffers.
+//!
+//! Invariants:
+//! * page 0 is the reserved garbage sink (inactive decode lanes point
+//!   their block tables and mailbox at it) — never allocated.
+//! * a page is either free (refcount 0, on the free list) or owned
+//!   (refcount >= 1); releasing the last owner returns it to the free
+//!   list.
+//! * shared pages (refcount > 1) are read-only by convention: a writer
+//!   must copy-on-write first (`PageSet::cow_tail` via the device-side
+//!   `copy_page` entry — the only device op in the whole scheme, paid
+//!   only for non-page-aligned divergence).
+//!
+//! Single-threaded by design like the rest of the runtime: the engine
+//! thread owns the arena behind `Rc<RefCell<..>>`; `PageSet` guards
+//! release their pages on drop so cache eviction frees pool memory
+//! automatically.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Cumulative allocator counters (exposed via /metrics and the paged-KV
+/// ablation).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PageArenaStats {
+    /// Pages handed out fresh from the free list.
+    pub allocs: u64,
+    /// Pages returned to the free list.
+    pub frees: u64,
+    /// Zero-copy shared pins (refcount increments).
+    pub shared_pins: u64,
+    /// Copy-on-write page clones (each one `copy_page` device op).
+    pub cow_copies: u64,
+    /// Allocation attempts that failed for lack of free pages.
+    pub alloc_failures: u64,
+}
+
+#[derive(Debug)]
+pub struct PageArena {
+    /// Physical pages in the lowered pool (including reserved page 0).
+    total_pages: usize,
+    /// Usable budget: pages 1..=capacity may be allocated.  At most
+    /// `total_pages - 1`, but a runtime byte budget may cap it lower
+    /// (the paged-KV ablation holds both modes to the same KV bytes).
+    capacity: usize,
+    refcounts: Vec<u32>,
+    free: Vec<u32>,
+    stats: PageArenaStats,
+}
+
+impl PageArena {
+    /// `total_pages` is the lowered pool's physical page count; the
+    /// usable budget excludes reserved page 0 and may be capped lower
+    /// with [`PageArena::with_capacity`].
+    pub fn new(total_pages: usize) -> Self {
+        Self::with_capacity(total_pages, total_pages.saturating_sub(1))
+    }
+
+    pub fn with_capacity(total_pages: usize, capacity: usize) -> Self {
+        let capacity = capacity.min(total_pages.saturating_sub(1));
+        // LIFO free list, lowest page first out: recently-freed pages
+        // are reused promptly, keeping the pool's touched footprint
+        // compact.
+        let free: Vec<u32> = (1..=capacity as u32).rev().collect();
+        PageArena {
+            total_pages,
+            capacity,
+            refcounts: vec![0; total_pages],
+            free,
+            stats: PageArenaStats::default(),
+        }
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    /// Usable page budget (excludes reserved page 0).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn allocated_pages(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    /// Allocated fraction of the usable budget, in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.capacity == 0 {
+            return 0.0;
+        }
+        self.allocated_pages() as f64 / self.capacity as f64
+    }
+
+    pub fn stats(&self) -> PageArenaStats {
+        self.stats
+    }
+
+    pub fn refcount(&self, page: u32) -> u32 {
+        self.refcounts[page as usize]
+    }
+
+    /// Hand out a fresh page (refcount 1), or None when the budget is
+    /// exhausted — callers surface that as admission backpressure, not
+    /// a crash.
+    pub fn alloc(&mut self) -> Option<u32> {
+        match self.free.pop() {
+            Some(p) => {
+                debug_assert_eq!(self.refcounts[p as usize], 0);
+                self.refcounts[p as usize] = 1;
+                self.stats.allocs += 1;
+                Some(p)
+            }
+            None => {
+                self.stats.alloc_failures += 1;
+                None
+            }
+        }
+    }
+
+    /// Zero-copy shared pin: one more owner for an allocated page.
+    pub fn retain(&mut self, page: u32) {
+        assert!(page != 0, "page 0 is the reserved garbage sink");
+        let rc = &mut self.refcounts[page as usize];
+        assert!(*rc > 0, "retain of free page {page}");
+        *rc += 1;
+        self.stats.shared_pins += 1;
+    }
+
+    /// Drop one owner; the last release returns the page to the pool.
+    pub fn release(&mut self, page: u32) {
+        assert!(page != 0, "page 0 is the reserved garbage sink");
+        let rc = &mut self.refcounts[page as usize];
+        assert!(*rc > 0, "release of free page {page}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(page);
+            self.stats.frees += 1;
+        }
+    }
+
+    pub fn is_shared(&self, page: u32) -> bool {
+        self.refcounts[page as usize] > 1
+    }
+
+    pub(crate) fn note_cow(&mut self) {
+        self.stats.cow_copies += 1;
+    }
+
+    /// Internal-consistency check (used by the property tests):
+    /// refcounted + free == capacity, free list disjoint from owned.
+    pub fn check_invariants(&self) {
+        assert_eq!(self.refcounts[0], 0, "page 0 must stay unallocated");
+        let owned = self.refcounts.iter().filter(|&&rc| rc > 0).count();
+        assert_eq!(owned + self.free.len(), self.capacity);
+        for &p in &self.free {
+            assert_eq!(self.refcounts[p as usize], 0, "free page {p} has owners");
+            assert!(p as usize <= self.capacity && p != 0);
+        }
+    }
+}
+
+pub type SharedPageArena = Rc<RefCell<PageArena>>;
+
+pub fn shared(arena: PageArena) -> SharedPageArena {
+    Rc::new(RefCell::new(arena))
+}
+
+/// An owned set of pages backing one sequence (or one cached prefix):
+/// `pages[j]` holds absolute positions `j*page .. (j+1)*page - 1`,
+/// `mailbox` (when present) is the sequence's private logits page.
+/// Dropping the set releases every page — LRU cache eviction and
+/// sequence teardown free pool memory without any explicit hook.
+#[derive(Debug)]
+pub struct PageSet {
+    arena: SharedPageArena,
+    pub pages: Vec<u32>,
+    pub mailbox: Option<u32>,
+}
+
+impl PageSet {
+    pub fn new(arena: &SharedPageArena) -> Self {
+        PageSet { arena: arena.clone(), pages: Vec::new(), mailbox: None }
+    }
+
+    pub fn arena(&self) -> &SharedPageArena {
+        &self.arena
+    }
+
+    /// Allocate `n` fresh KV pages onto the tail.  On exhaustion the
+    /// set is left unchanged and `false` is returned.
+    pub fn grow(&mut self, n: usize) -> bool {
+        let mut a = self.arena.borrow_mut();
+        let start = self.pages.len();
+        for _ in 0..n {
+            match a.alloc() {
+                Some(p) => self.pages.push(p),
+                None => {
+                    for p in self.pages.drain(start..) {
+                        a.release(p);
+                    }
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Ensure the set covers absolute position `pos` (0-based).
+    pub fn cover(&mut self, pos: usize, page_size: usize) -> bool {
+        let need = pos / page_size + 1;
+        if need <= self.pages.len() {
+            return true;
+        }
+        let extra = need - self.pages.len();
+        self.grow(extra)
+    }
+
+    /// Allocate the private mailbox page (idempotent).
+    pub fn alloc_mailbox(&mut self) -> bool {
+        if self.mailbox.is_some() {
+            return true;
+        }
+        match self.arena.borrow_mut().alloc() {
+            Some(p) => {
+                self.mailbox = Some(p);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release the private mailbox page (checkpoint time: the logits
+    /// have been read back host-side, the page is no longer needed).
+    pub fn release_mailbox(&mut self) {
+        if let Some(m) = self.mailbox.take() {
+            self.arena.borrow_mut().release(m);
+        }
+    }
+
+    /// Zero-copy clone of the first `n_pages` KV pages: shared pins,
+    /// no mailbox.  This is what the prefix caches store and what
+    /// followers/coalesced admissions start from.
+    pub fn share_prefix(&self, n_pages: usize) -> PageSet {
+        debug_assert!(n_pages <= self.pages.len());
+        let mut a = self.arena.borrow_mut();
+        for &p in &self.pages[..n_pages] {
+            a.retain(p);
+        }
+        PageSet {
+            arena: self.arena.clone(),
+            pages: self.pages[..n_pages].to_vec(),
+            mailbox: None,
+        }
+    }
+
+    /// Whether block `j` must be copied before writing (shared with
+    /// another owner).
+    pub fn needs_cow(&self, j: usize) -> bool {
+        self.arena.borrow().is_shared(self.pages[j])
+    }
+
+    /// Copy-on-write block `j`: allocate a private replacement page and
+    /// hand back `(src, dst)` for the caller to issue the device-side
+    /// `copy_page`; the set now owns the private page.  Returns None on
+    /// pool exhaustion (set unchanged).
+    pub fn cow(&mut self, j: usize) -> Option<(u32, u32)> {
+        let mut a = self.arena.borrow_mut();
+        let src = self.pages[j];
+        if a.refcounts[src as usize] <= 1 {
+            return Some((src, src)); // already private; no copy needed
+        }
+        let dst = a.alloc()?;
+        a.release(src);
+        a.note_cow();
+        self.pages[j] = dst;
+        Some((src, dst))
+    }
+
+    /// Block table padded to `n_blocks` entries with the page-0 sink —
+    /// exactly the i32 vector the paged executables take.
+    pub fn table(&self, n_blocks: usize) -> Vec<i32> {
+        let mut t = vec![0i32; n_blocks];
+        for (j, &p) in self.pages.iter().enumerate().take(n_blocks) {
+            t[j] = p as i32;
+        }
+        t
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.pages.len() + usize::from(self.mailbox.is_some())
+    }
+}
+
+impl Drop for PageSet {
+    fn drop(&mut self) {
+        let mut a = self.arena.borrow_mut();
+        for &p in &self.pages {
+            a.release(p);
+        }
+        if let Some(m) = self.mailbox {
+            a.release(m);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena(n: usize) -> SharedPageArena {
+        Rc::new(RefCell::new(PageArena::new(n)))
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let a = arena(8); // 7 usable
+        let mut s = PageSet::new(&a);
+        assert!(s.grow(7));
+        assert!(!s.grow(1), "budget exhausted");
+        assert_eq!(a.borrow().free_pages(), 0);
+        assert!(!s.pages.contains(&0), "page 0 never handed out");
+        drop(s);
+        assert_eq!(a.borrow().free_pages(), 7);
+        a.borrow().check_invariants();
+    }
+
+    #[test]
+    fn shared_pins_are_zero_copy_and_release_in_order() {
+        let a = arena(16);
+        let mut s = PageSet::new(&a);
+        assert!(s.grow(3));
+        assert!(s.alloc_mailbox());
+        let pinned = s.share_prefix(3);
+        assert_eq!(a.borrow().stats().shared_pins, 3);
+        assert_eq!(a.borrow().stats().cow_copies, 0);
+        for &p in &pinned.pages {
+            assert!(a.borrow().is_shared(p));
+        }
+        // Original dies; pinned copy keeps the pages alive.
+        let kept = pinned.pages.clone();
+        drop(s);
+        for &p in &kept {
+            assert_eq!(a.borrow().refcount(p), 1);
+        }
+        drop(pinned);
+        assert_eq!(a.borrow().allocated_pages(), 0);
+        a.borrow().check_invariants();
+    }
+
+    #[test]
+    fn cow_only_copies_shared_pages() {
+        let a = arena(16);
+        let mut s = PageSet::new(&a);
+        assert!(s.grow(2));
+        let _pin = s.share_prefix(2);
+        // Shared tail -> real copy onto a fresh page.
+        let (src, dst) = s.cow(1).unwrap();
+        assert_ne!(src, dst);
+        assert_eq!(a.borrow().stats().cow_copies, 1);
+        assert_eq!(a.borrow().refcount(src), 1, "pin keeps the original");
+        assert_eq!(a.borrow().refcount(dst), 1);
+        // Private page -> no-op.
+        let (s2, d2) = s.cow(1).unwrap();
+        assert_eq!(s2, d2);
+        assert_eq!(a.borrow().stats().cow_copies, 1);
+        a.borrow().check_invariants();
+    }
+
+    #[test]
+    fn cover_allocates_by_position() {
+        let a = arena(64);
+        let mut s = PageSet::new(&a);
+        assert!(s.cover(0, 64));
+        assert_eq!(s.pages.len(), 1);
+        assert!(s.cover(63, 64));
+        assert_eq!(s.pages.len(), 1);
+        assert!(s.cover(64, 64));
+        assert_eq!(s.pages.len(), 2);
+        assert!(s.cover(639, 64));
+        assert_eq!(s.pages.len(), 10);
+        let t = s.table(10);
+        assert!(t.iter().all(|&p| p > 0));
+    }
+
+    #[test]
+    fn capacity_cap_limits_budget_below_pool() {
+        let a = Rc::new(RefCell::new(PageArena::with_capacity(352, 40)));
+        let mut s = PageSet::new(&a);
+        assert!(s.grow(40));
+        assert!(!s.grow(1));
+        assert_eq!(a.borrow().capacity(), 40);
+        assert_eq!(a.borrow().stats().alloc_failures, 1);
+        assert_eq!(a.borrow().total_pages(), 352);
+    }
+
+    #[test]
+    fn grow_failure_rolls_back() {
+        let a = Rc::new(RefCell::new(PageArena::with_capacity(16, 4)));
+        let mut s = PageSet::new(&a);
+        assert!(s.grow(3));
+        assert!(!s.grow(2), "only 1 page left");
+        assert_eq!(s.pages.len(), 3, "partial grow rolled back");
+        assert_eq!(a.borrow().free_pages(), 1);
+        a.borrow().check_invariants();
+    }
+
+    /// Randomized grow / share / cow / drop workload: the invariants
+    /// (refcount + free-list consistency, page-0 reservation, no leaks)
+    /// must hold at every step.  Deterministic xorshift so failures
+    /// reproduce.
+    #[test]
+    fn randomized_grow_evict_resume_keeps_invariants() {
+        let a = Rc::new(RefCell::new(PageArena::new(96)));
+        let mut live: Vec<PageSet> = Vec::new();
+        let mut rng: u64 = 0x9e3779b97f4a7c15;
+        let mut next = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            rng
+        };
+        for step in 0..4000 {
+            match next() % 5 {
+                0 => {
+                    // Admit: fresh sequence with 1-4 pages + mailbox.
+                    let mut s = PageSet::new(&a);
+                    let n = (next() % 4 + 1) as usize;
+                    if s.grow(n) && s.alloc_mailbox() {
+                        live.push(s);
+                    }
+                }
+                1 => {
+                    // Cache hit / follower: pin a random live prefix.
+                    if !live.is_empty() {
+                        let i = (next() as usize) % live.len();
+                        let n = live[i].pages.len();
+                        if n > 0 {
+                            let k = (next() as usize) % n + 1;
+                            let pinned = live[i].share_prefix(k);
+                            live.push(pinned);
+                        }
+                    }
+                }
+                2 => {
+                    // Divergence: CoW a random block of a random set.
+                    if !live.is_empty() {
+                        let i = (next() as usize) % live.len();
+                        if !live[i].pages.is_empty() {
+                            let j = (next() as usize) % live[i].pages.len();
+                            let _ = live[i].cow(j);
+                        }
+                    }
+                }
+                3 => {
+                    // Decode growth: extend a random set by one page.
+                    if !live.is_empty() {
+                        let i = (next() as usize) % live.len();
+                        let _ = live[i].grow(1);
+                    }
+                }
+                _ => {
+                    // Evict / finish: drop a random set.
+                    if !live.is_empty() {
+                        let i = (next() as usize) % live.len();
+                        live.swap_remove(i);
+                    }
+                }
+            }
+            if step % 64 == 0 {
+                a.borrow().check_invariants();
+            }
+        }
+        let held: usize = live.iter().map(|s| s.n_pages()).sum();
+        // Shared pages are held by multiple sets but allocated once.
+        assert!(a.borrow().allocated_pages() <= held);
+        live.clear();
+        assert_eq!(a.borrow().allocated_pages(), 0, "all pages returned");
+        a.borrow().check_invariants();
+    }
+}

@@ -41,10 +41,13 @@ pub fn route(state: &ServerState, req: Request, rw: &mut ResponseWriter<'_>) {
 }
 
 fn err_body(kind: &str, msg: &str) -> Json {
-    Json::obj(vec![(
-        "error",
-        Json::obj(vec![("type", Json::str(kind)), ("message", Json::str(msg))]),
-    )])
+    let mut e = vec![("type", Json::str(kind)), ("message", Json::str(msg))];
+    // OpenAI clients branch on `error.code`; map the scheduler's
+    // context-overflow rejection onto the wire code they expect.
+    if msg.contains("maximum context length") {
+        e.push(("code", Json::str("context_length_exceeded")));
+    }
+    Json::obj(vec![("error", Json::obj(e))])
 }
 
 type HandlerResult = Result<(), (u16, String)>;

@@ -119,6 +119,12 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         self.map.values_mut().map(|e| &mut e.value)
     }
 
+    /// Borrowing walk over every entry (no recency effect); stats and
+    /// observability scans, not a hot path.
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> {
+        self.map.iter().map(|(k, e)| (k, &e.value))
+    }
+
     fn evict_to_budget(&mut self) {
         while self.used_bytes > self.budget_bytes {
             // O(n) scan for the least-recently-used key; see module doc.

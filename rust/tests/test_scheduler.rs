@@ -341,6 +341,115 @@ fn rejects_oversized_and_bad_requests() {
     assert!(matches!(rx2.try_iter().last(), Some(Event::Error { .. })));
 }
 
+#[test]
+fn paged_kv_matches_arena_byte_for_byte() {
+    // Tentpole invariant of the paged backend: block-allocated KV with
+    // copy-on-write sharing changes WHERE state lives, never WHAT gets
+    // generated — greedy output must match the dense slot arena (and
+    // the reference oracle) token for token.
+    let mut p = Scheduler::new(EngineConfig { kv_paged: true, ..cfg("qwen3-0.6b") }).unwrap();
+    let mut a = Scheduler::new(cfg("qwen3-0.6b")).unwrap();
+    assert!(p.snapshot().kv_pool.is_some(), "paged mode must surface pool stats");
+    assert!(a.snapshot().kv_pool.is_none(), "arena mode must not");
+
+    let (t, _, _, _) = run_one(
+        &mut p,
+        PromptInput::Tokens(vec![1, 10, 20, 30]),
+        SamplingParams::greedy(6),
+    );
+    assert_eq!(t, vec![1226, 1252, 1388, 1226, 1962, 1515]);
+
+    // Sequential mixed-length prompts (one-shot and chunked prefill).
+    for seed in 0..4i32 {
+        let len = 10 + seed as usize * 37;
+        let prompt: Vec<i32> = (0..len as i32).map(|i| (i * 13 + seed * 7) % 1500 + 4).collect();
+        let (tp, _, _, _) =
+            run_one(&mut p, PromptInput::Tokens(prompt.clone()), SamplingParams::greedy(8));
+        let (ta, _, _, _) = run_one(&mut a, PromptInput::Tokens(prompt), SamplingParams::greedy(8));
+        assert_eq!(tp, ta, "paged output diverged from arena (seed {seed})");
+    }
+
+    // Concurrent batch: multi-lane decode_paged + pool growth across
+    // bucket migrations must match the arena's batched streams.
+    let batch = |s: &mut Scheduler| -> Vec<Vec<i32>> {
+        let mut rxs = Vec::new();
+        for i in 0..5u64 {
+            let (tx, rx) = std::sync::mpsc::channel();
+            s.submit(umserve::coordinator::GenRequest {
+                id: 7000 + i,
+                prompt: PromptInput::Tokens(vec![1, 4 + i as i32 * 3, 9, 2 + i as i32]),
+                params: SamplingParams::greedy(6),
+                priority: Default::default(),
+                events: tx,
+                enqueued_at: std::time::Instant::now(),
+            });
+            rxs.push(rx);
+        }
+        s.run_until_idle();
+        rxs.iter()
+            .map(|rx| {
+                rx.try_iter()
+                    .filter_map(|e| match e {
+                        Event::Token { token, .. } if token >= 0 => Some(token),
+                        Event::Error { message, .. } => panic!("batched request failed: {message}"),
+                        _ => None,
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    assert_eq!(batch(&mut p), batch(&mut a), "batched paged decode diverged from arena");
+}
+
+#[test]
+fn paged_prefix_cache_hits_are_zero_copy_and_identical() {
+    let mut s = Scheduler::new(EngineConfig { kv_paged: true, ..cfg("qwen3-0.6b") }).unwrap();
+    let shared: Vec<i32> = (1..64).map(|i| (i * 11) % 1500 + 4).collect();
+    let (t1, _, _, _) =
+        run_one(&mut s, PromptInput::Tokens(shared.clone()), SamplingParams::greedy(6));
+
+    // Full hit: the checkpoint's pages are pinned, not copied.
+    let (t2, _, _, tm2) =
+        run_one(&mut s, PromptInput::Tokens(shared.clone()), SamplingParams::greedy(6));
+    assert_eq!(t1, t2, "full-hit output diverged");
+    assert!(tm2.kv_full_hit);
+    assert!(
+        s.engine.stats.zero_copy_admits >= 1,
+        "paged full hit must admit by pinning pages"
+    );
+
+    // Partial hit: the 63-token prefix ends mid-page, so the extension
+    // copies exactly the ragged tail page (CoW) and feeds the suffix
+    // through the paged chunk grids.
+    let mut ext = shared.clone();
+    ext.extend([7, 11, 15]);
+    let (t3, _, _, tm3) =
+        run_one(&mut s, PromptInput::Tokens(ext.clone()), SamplingParams::greedy(6));
+    assert!(tm3.prefix_hit_tokens > 0, "expected a partial hit");
+    assert!(!tm3.kv_full_hit);
+    let pool = s.snapshot().kv_pool.expect("paged pool stats");
+    assert!(pool.stats.cow_copies >= 1, "mid-page divergence must CoW the tail page");
+    assert!(pool.stats.shared_pins >= 1);
+
+    // Correctness anchor: a cold cacheless paged scheduler agrees.
+    let mut cold = Scheduler::new(EngineConfig {
+        kv_paged: true,
+        text_cache_bytes: 0,
+        cache_finished: false,
+        ..cfg("qwen3-0.6b")
+    })
+    .unwrap();
+    let (tc, _, _, _) = run_one(&mut cold, PromptInput::Tokens(ext), SamplingParams::greedy(6));
+    assert_eq!(t3, tc, "paged partial-hit extension diverged from cold prefill");
+
+    // Cache checkpoints hold pool pages, and the snapshot says so.
+    let snap = s.snapshot();
+    assert!(
+        snap.text_cache_pinned_pages > 0,
+        "finished sequences must checkpoint pages into the text cache"
+    );
+}
+
 // Test helper: PromptInput isn't Clone (holds ImageSource blobs fine, but
 // keep explicit).
 trait CloneForTest {

@@ -260,6 +260,28 @@ fn error_paths() {
 }
 
 #[test]
+fn context_overflow_is_a_clean_400() {
+    let srv = TestServer::start("qwen3-0.6b");
+    // Far beyond s_max (640 positions for this model): the scheduler
+    // must reject at admission with the OpenAI wire code instead of
+    // panicking or truncating silently.
+    let long = "alpha beta gamma delta ".repeat(400);
+    let (s, b) = srv.post(
+        "/v1/completions",
+        &format!(r#"{{"prompt":"{long}","max_tokens":4}}"#),
+    );
+    assert_eq!(s, 400, "{b}");
+    let v = parse(&b).unwrap();
+    let code = v.path(&["error", "code"]).unwrap().as_str().unwrap();
+    assert_eq!(code, "context_length_exceeded", "{b}");
+    let msg = v.path(&["error", "message"]).unwrap().as_str().unwrap();
+    assert!(msg.contains("maximum context length"), "{b}");
+    // The server stays healthy for the next (valid) request.
+    let (s, b) = srv.post("/v1/completions", r#"{"prompt":"ok then","max_tokens":4}"#);
+    assert_eq!(s, 200, "{b}");
+}
+
+#[test]
 fn health_models_metrics() {
     let srv = TestServer::start("qwen3-0.6b");
     let (s, b) = srv.get("/health");
