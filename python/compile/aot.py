@@ -34,6 +34,7 @@ from .configs import (
     KV_PAGE_SIZE,
     MODELS,
     PREFILL_CHUNK_BUCKETS,
+    SPEC_CHUNK_BUCKETS,
     VISION_BATCH_BUCKETS,
     ModelConfig,
 )
@@ -265,6 +266,75 @@ class EntryBuilder:
             donate=(5,),
         )
 
+    def spec_chunk(self, c: int):
+        cfg = self.cfg
+        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
+        self.lower(
+            f"spec_chunk_c{c}",
+            functools.partial(M.spec_chunk_fn, cfg),
+            [
+                arg_desc("tokens", "input", spec((c,), I32)),
+                arg_desc("start", "input", spec((), I32)),
+                arg_desc("length", "input", spec((), I32)),
+                arg_desc("kv_one", "input", kv_one),
+            ],
+            [spec((c,), I32), spec((), I32), spec((), I32), kv_one],
+            self.t_order,
+            self.t_specs,
+            donate=(3,),
+        )
+
+    def read_logits_chunk(self, c: int):
+        cfg = self.cfg
+        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
+        self.lower(
+            f"read_logits_chunk_c{c}",
+            functools.partial(M.read_logits_chunk_fn, cfg, c),
+            [arg_desc("kv_one", "input", kv_one)],
+            [kv_one],
+            [],
+            [],
+        )
+
+    def spec_chunk_paged(self, c: int):
+        cfg = self.cfg
+        pool = spec(M.kv_pool_shape(cfg), F32)
+        nblk = cfg.kv_blocks_per_seq()
+        m = cfg.spec_scratch_pages(c)
+        self.lower(
+            f"spec_chunk_paged_c{c}",
+            functools.partial(M.spec_chunk_paged_fn, cfg),
+            [
+                arg_desc("tokens", "input", spec((c,), I32)),
+                arg_desc("start", "input", spec((), I32)),
+                arg_desc("length", "input", spec((), I32)),
+                arg_desc("tables", "input", spec((nblk,), I32)),
+                arg_desc("spec_pages", "input", spec((m,), I32)),
+                arg_desc("pool", "input", pool),
+            ],
+            [spec((c,), I32), spec((), I32), spec((), I32), spec((nblk,), I32),
+             spec((m,), I32), pool],
+            self.t_order,
+            self.t_specs,
+            donate=(5,),
+        )
+
+    def read_logits_chunk_paged(self, c: int):
+        cfg = self.cfg
+        pool = spec(M.kv_pool_shape(cfg), F32)
+        m = cfg.spec_scratch_pages(c)
+        self.lower(
+            f"read_logits_chunk_paged_c{c}",
+            functools.partial(M.read_logits_chunk_paged_fn, cfg, c),
+            [
+                arg_desc("pool", "input", pool),
+                arg_desc("spec_pages", "input", spec((m,), I32)),
+            ],
+            [pool, spec((m,), I32)],
+            [],
+            [],
+        )
+
     def adopt_paged(self):
         cfg = self.cfg
         pool = spec(M.kv_pool_shape(cfg), F32)
@@ -486,6 +556,14 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
     for c in PREFILL_CHUNK_BUCKETS:
         eb.prefill_chunk(c)
         eb.prefill_chunk_paged(c)
+    # Speculative-decoding verify grids: score C draft positions in one
+    # dispatch and read all C logits rows back at once, on both KV
+    # backends.
+    for c in SPEC_CHUNK_BUCKETS:
+        eb.spec_chunk(c)
+        eb.read_logits_chunk(c)
+        eb.spec_chunk_paged(c)
+        eb.read_logits_chunk_paged(c)
     # Paged-KV pool entries (bucket-independent: one pool serves every
     # decode bucket, so grow/shrink swaps executables without touching KV).
     eb.adopt_paged()
@@ -533,6 +611,10 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
         "decode_buckets": list(cfg.decode_buckets),
         "prefill_buckets": list(cfg.prefill_buckets),
         "prefill_chunk_buckets": list(PREFILL_CHUNK_BUCKETS),
+        "spec_chunk_buckets": list(SPEC_CHUNK_BUCKETS),
+        "spec_scratch_pages": {
+            str(c): cfg.spec_scratch_pages(c) for c in SPEC_CHUNK_BUCKETS
+        },
         "embed_prefill_buckets": list(EMBED_PREFILL_BUCKETS) if cfg.vision else [],
         "trim_kv_buckets": list(cfg.trim_kv_buckets()),
         "kv_page_size": KV_PAGE_SIZE,

@@ -107,6 +107,17 @@ class ModelConfig:
         """
         return 2 * max(self.decode_buckets) * (self.kv_blocks_per_seq() + 1)
 
+    def spec_scratch_pages(self, c: int) -> int:
+        """Scratch pages holding a packed [C, vocab] logits readback
+        region for the paged speculative-verify entries
+        (`spec_chunk_paged_c{C}`): each dedicated scratch page
+        contributes its FULL (L+1) * 2 * Hkv * page * Dh floats (all
+        planes, k and v) — scratch pages are never in any block table,
+        so every element is free real estate.
+        """
+        per = (self.n_layers + 1) * 2 * self.n_kv_heads * KV_PAGE_SIZE * self.d_head
+        return -(-(c * self.vocab) // per)
+
     def trim_kv_buckets(self) -> Tuple[int, ...]:
         """Position grids for the cached-KV trim entries
         (`trim_kv_s{S}` / `untrim_kv_s{S}`).
@@ -206,6 +217,18 @@ EMBED_PREFILL_BUCKETS = (64, 192, 384, 640)
 # Small bucket for short catch-up suffixes, large for full-prompt chunks
 # (the scheduler's default prefill_chunk_tokens is the largest bucket).
 PREFILL_CHUNK_BUCKETS = (8, 32)
+
+# Speculative-decoding verify buckets (`spec_chunk_c{C}` /
+# `spec_chunk_paged_c{C}`): one dispatch scores C positions — the fed
+# next-token plus up to C-1 draft tokens — and packs ALL C rows' logits
+# for a single multi-position readback (`read_logits_chunk_c{C}`).
+# Unlike PREFILL_CHUNK_BUCKETS these are capped by packed-logits
+# capacity, not scheduler fairness: the dense entries pack C * vocab
+# floats into the whole plane-0 region of the single slot
+# (2 * n_kv_heads * s_max * d_head floats; smallest in the zoo is
+# gemma3-4b at 2*1*640*40 = 51200, so C=16 -> 32768 fits every model,
+# while C=32 -> 65536 would not).
+SPEC_CHUNK_BUCKETS = (8, 16)
 
 # Candidate position grids for trimming cached kv_one buffers (see
 # ModelConfig.trim_kv_buckets — each is clamped up to the model's

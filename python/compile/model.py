@@ -246,6 +246,28 @@ def _assemble_kv_one(cfg: ModelConfig, planes, logits):
     return jnp.stack(planes)
 
 
+def _spec_pack_dense(cfg: ModelConfig, planes, logits):
+    """Assemble kv_one with ALL chunk rows' logits packed into plane 0.
+
+    Layout: the whole plane-0 region of the single slot — both k/v
+    sides, all heads, flattened to 2 * Hkv * s_max * Dh floats — holds
+    the chunk's [C, vocab] logits row-major from offset 0, zero-padded.
+    This is deliberately NOT the decode/prefill mailbox (head-0 k rows
+    only): spec verify needs C * vocab floats, which outgrows the
+    head-0 region at C=16 for the narrow-KV zoo models, and
+    ``read_logits_chunk_c{C}`` is the layout's only reader.  The next
+    decode step rebuilds plane 0 from zeros, wiping the packing, so the
+    regular single-logits mailbox convention is undisturbed afterwards.
+    """
+    c, v = logits.shape
+    region = 2 * cfg.n_kv_heads * cfg.s_max * cfg.d_head
+    assert c * v <= region, (c, v, region)
+    packed = jnp.pad(logits.reshape(-1), (0, region - c * v)).reshape(
+        2, cfg.n_kv_heads, cfg.s_max, cfg.d_head)
+    planes[0] = packed[:, None]                   # [2, 1, Hkv, S, Dh]
+    return jnp.stack(planes)
+
+
 def prefill_fn(cfg: ModelConfig, tokens, length, *weights):
     """Prompt processing for one sequence.
 
@@ -287,7 +309,8 @@ def embed_lookup_fn(cfg: ModelConfig, tokens, *weights):
 
 # ------------------------------------------------------- chunked prefill
 
-def _chunk_body(cfg: ModelConfig, w: W, x, start, length, kv_one):
+def _chunk_body(cfg: ModelConfig, w: W, x, start, length, kv_one,
+                unembed_all=False):
     """Extend a partially-built kv_one by one chunk of embeddings.
 
     The chunk occupies absolute positions ``start .. start+length-1`` of
@@ -311,7 +334,9 @@ def _chunk_body(cfg: ModelConfig, w: W, x, start, length, kv_one):
 
     Returns:
       Updated kv_one with the chunk's K/V written at its positions and
-      the LAST valid chunk row's logits in the plane-0 mailbox.
+      the LAST valid chunk row's logits in the plane-0 mailbox — or,
+      with ``unembed_all`` (the speculative-verify entries), ALL C
+      rows' logits packed into plane 0 (see ``_spec_pack_dense``).
     """
     c = x.shape[0]
     offs = jnp.arange(c, dtype=jnp.int32)
@@ -351,6 +376,11 @@ def _chunk_body(cfg: ModelConfig, w: W, x, start, length, kv_one):
         x = x + _ffn(cfg, w, p, h2)
 
     x = rmsnorm(x, w["norm_f"])
+    if unembed_all:
+        # Speculative verify: every row's logits leave the device in one
+        # readback, so the accept loop can score all K drafts at once.
+        logits = qmm(x, w, "unembed")                          # [C, vocab]
+        return _spec_pack_dense(cfg, planes, logits)
     last = jax.lax.dynamic_slice(x, (length - 1, 0), (1, cfg.d_model))
     logits = qmm(last, w, "unembed")                           # [1, vocab]
     return _assemble_kv_one(cfg, planes, logits)
@@ -375,6 +405,35 @@ def prefill_chunk_embeds_fn(cfg: ModelConfig, embeds, start, length, kv_one,
     """Chunked prefill from raw embeddings (multimodal staged pipeline)."""
     w = W(text_weight_order(cfg), weights)
     return _chunk_body(cfg, w, embeds.astype(jnp.float32), start, length, kv_one)
+
+
+# ------------------------------------------------ speculative verification
+
+def spec_chunk_fn(cfg: ModelConfig, tokens, start, length, kv_one, *weights):
+    """Speculative-decoding verifier over the dense kv_one
+    (`spec_chunk_c{C}`).
+
+    The chunk is ``[next_token, draft_1 .. draft_{K}]`` fed at the
+    sequence's current length: row i's logits are the distribution
+    after feeding ``tokens[0..=i]``.  Token-for-token this IS
+    prefill_chunk_fn — same chunk body, same fused attention kernel,
+    so each row is fp-equivalent to the tokenwise decode step that
+    would have fed the same prefix, with identical greedy argmax (the
+    chunked-catch-up equivalence contract) — except every row is
+    unembedded and packed into plane 0 for one multi-position readback
+    instead of only the last.
+    """
+    w = W(text_weight_order(cfg), weights)
+    x = jnp.take(w["emb"], tokens, axis=0)                     # [C, d]
+    return _chunk_body(cfg, w, x, start, length, kv_one, unembed_all=True)
+
+
+def read_logits_chunk_fn(cfg: ModelConfig, c: int, kv):
+    """Extract a spec_chunk packing: kv_one -> [C, vocab]
+    (`read_logits_chunk_c{C}`) — the multi-position analog of
+    read_logits_one."""
+    flat = kv[0].reshape(-1)
+    return flat[: c * cfg.vocab].reshape(c, cfg.vocab)
 
 
 def zeros_fn(cfg: ModelConfig, batch: int):
@@ -509,7 +568,7 @@ def decode_paged_fn(cfg: ModelConfig, tokens, pos, tables, mailbox, pool,
 
 
 def _chunk_body_paged(cfg: ModelConfig, w: W, x, start, length, tables,
-                      mailbox, pool):
+                      mailbox, pool, spec_pages=None):
     """_chunk_body over the page pool: extend one sequence's pages by a
     chunk of embeddings at absolute positions start..start+length-1.
 
@@ -553,10 +612,35 @@ def _chunk_body_paged(cfg: ModelConfig, w: W, x, start, length, tables,
         x = x + _ffn(cfg, w, p, h2)
 
     x = rmsnorm(x, w["norm_f"])
+    if spec_pages is not None:
+        # Speculative verify: pack every row's logits across the
+        # dedicated scratch pages; plane 0 (other sequences' mailboxes)
+        # passes through untouched.
+        logits = qmm(x, w, "unembed")                          # [C, vocab]
+        planes[0] = pool[0]
+        return _spec_pack_paged(cfg, jnp.stack(planes), spec_pages, logits)
     last = jax.lax.dynamic_slice(x, (length - 1, 0), (1, cfg.d_model))
     logits = qmm(last, w, "unembed")                           # [1, vocab]
     planes[0] = _pool_mailbox_plane(cfg, pool, mailbox[None], logits)
     return jnp.stack(planes)
+
+
+def _spec_pack_paged(cfg: ModelConfig, pool, spec_pages, logits):
+    """Scatter [C, vocab] logits across the FULL planes (all layers,
+    k and v sides) of the M dedicated scratch pages, row-major from the
+    first page.  M = cfg.spec_scratch_pages(C); the scratch pages are
+    never named by any block table, so every element of theirs is free
+    real estate — unlike a mailbox page, whose plane-0 k-region alone
+    is too small for C * vocab floats on the narrow-KV zoo models."""
+    c, v = logits.shape
+    m = spec_pages.shape[0]
+    per = (cfg.n_layers + 1) * 2 * cfg.n_kv_heads * KV_PAGE_SIZE * cfg.d_head
+    assert c * v <= m * per, (c, v, m, per)
+    flat = jnp.pad(logits.reshape(-1), (0, m * per - c * v))
+    vals = flat.reshape(m, cfg.n_layers + 1, 2, cfg.n_kv_heads,
+                        KV_PAGE_SIZE, cfg.d_head)
+    vals = jnp.transpose(vals, (1, 2, 0, 3, 4, 5))
+    return pool.at[:, :, spec_pages].set(vals)
 
 
 def prefill_chunk_paged_fn(cfg: ModelConfig, tokens, start, length, tables,
@@ -629,6 +713,30 @@ def read_logits_page_fn(cfg: ModelConfig, pool, page):
         pool, (0, 0, page, 0, 0, 0),
         (1, 1, 1, cfg.n_kv_heads, KV_PAGE_SIZE, cfg.d_head))
     return region.reshape(-1)[: cfg.vocab]
+
+
+def spec_chunk_paged_fn(cfg: ModelConfig, tokens, start, length, tables,
+                        spec_pages, pool, *weights):
+    """Speculative-decoding verifier over the page pool
+    (`spec_chunk_paged_c{C}`): prefill_chunk_paged_fn with every row
+    unembedded and packed across the scratch pages (see spec_chunk_fn
+    for the row semantics).  The caller must have covered positions
+    start .. start+length-1 with PRIVATE pages (copy-on-write any
+    shared tail first): the chunk scatters draft K/V into them, and a
+    rejected draft's page-tail writes are rolled back host-side by
+    releasing the pages past the accepted length."""
+    w = W(text_weight_order(cfg), weights)
+    x = jnp.take(w["emb"], tokens, axis=0)                     # [C, d]
+    return _chunk_body_paged(cfg, w, x, start, length, tables, None, pool,
+                             spec_pages=spec_pages)
+
+
+def read_logits_chunk_paged_fn(cfg: ModelConfig, c: int, pool, spec_pages):
+    """Extract a spec_chunk_paged packing: pool, spec_pages ->
+    [C, vocab] (`read_logits_chunk_paged_c{C}`)."""
+    region = jnp.take(pool, spec_pages, axis=2)   # [L+1, 2, M, Hkv, ps, Dh]
+    region = jnp.transpose(region, (2, 0, 1, 3, 4, 5))
+    return region.reshape(-1)[: c * cfg.vocab].reshape(c, cfg.vocab)
 
 
 # ------------------------------------------------------- arena management

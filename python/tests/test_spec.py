@@ -1,0 +1,177 @@
+"""Speculative-verify parity: the multi-position readback entries
+(`spec_chunk_c{C}` / `read_logits_chunk_c{C}` and their paged twins)
+must return, for every chunk row i, logits fp-equivalent — with
+identical greedy argmax — to the tokenwise decode step that fed the
+same prefix.  That contract is what makes chunk-verify an EXACT greedy
+speculative-decoding verifier: accepting the longest matched argmax
+prefix can never change the emitted byte stream.
+
+Also pinned here: dense-vs-paged bit-identity of the packed readback,
+K/V side-effect equivalence with the plain prefill_chunk entries, and
+scratch-page isolation (a paged spec dispatch must not disturb other
+sequences' pages or mailboxes).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.configs import KV_PAGE_SIZE, MODELS, SPEC_CHUNK_BUCKETS
+from compile.weights import build_weights, text_weight_order
+
+CFG = MODELS["qwen3-0.6b"]
+NBLK = CFG.kv_blocks_per_seq()
+
+W = build_weights(CFG)
+ARRS = [jnp.asarray(W[n]) for n in text_weight_order(CFG)]
+
+
+def i32(x):
+    return jnp.asarray(x, jnp.int32)
+
+
+def prefill(prompt, bucket=32):
+    toks = jnp.zeros(bucket, jnp.int32).at[: len(prompt)].set(i32(prompt))
+    return M.prefill_fn(CFG, toks, i32(len(prompt)), *ARRS)
+
+
+def seq_tables(pages):
+    t = [0] * NBLK
+    for j, p in enumerate(pages):
+        t[j] = p
+    return i32(t)
+
+
+def spec_tokens(chunk, c):
+    return jnp.zeros(c, jnp.int32).at[: len(chunk)].set(i32(chunk))
+
+
+def tokenwise_rows(prompt, chunk):
+    """Reference: feed `chunk` one token at a time through decode_fn,
+    collecting the mailbox logits after each feed."""
+    kv_one = prefill(prompt)
+    arena = jnp.zeros(M.kv_arena_shape(CFG, 1), jnp.float32)
+    arena = M.inject_fn(CFG, arena, kv_one, i32(0))
+    rows, pos = [], len(prompt)
+    for t in chunk:
+        arena = M.decode_fn(CFG, i32([t]), i32([pos]), arena, *ARRS)
+        rows.append(np.asarray(M.read_logits_mailbox(CFG, arena, 0)))
+        pos += 1
+    return np.stack(rows)
+
+
+def test_spec_buckets_fit_every_model():
+    for cfg in MODELS.values():
+        dense_region = 2 * cfg.n_kv_heads * cfg.s_max * cfg.d_head
+        for c in SPEC_CHUNK_BUCKETS:
+            assert c * cfg.vocab <= dense_region, (cfg.name, c)
+            m = cfg.spec_scratch_pages(c)
+            per = ((cfg.n_layers + 1) * 2 * cfg.n_kv_heads
+                   * KV_PAGE_SIZE * cfg.d_head)
+            assert c * cfg.vocab <= m * per, (cfg.name, c)
+            # Scratch stays a tiny fraction of the lowered pool.
+            assert m <= 4, (cfg.name, c, m)
+
+
+def test_spec_chunk_rows_match_tokenwise_decode():
+    """Row i of the packed readback == logits after feeding chunk[0..=i]
+    tokenwise: fp-close and argmax-identical (the greedy-exactness
+    contract the Rust accept loop relies on)."""
+    prompt = [1, 10, 20, 30]
+    chunk = [40, 3, 17, 99, 5]            # next_token + 4 drafts
+    c = 8
+    ref = tokenwise_rows(prompt, chunk)
+
+    kv_one = prefill(prompt)
+    kv_one = M.spec_chunk_fn(CFG, spec_tokens(chunk, c), i32(len(prompt)),
+                             i32(len(chunk)), kv_one, *ARRS)
+    got = np.asarray(M.read_logits_chunk_fn(CFG, c, kv_one))[: len(chunk)]
+
+    np.testing.assert_allclose(got, ref, atol=2e-4)
+    np.testing.assert_array_equal(got.argmax(-1), ref.argmax(-1))
+
+
+def test_spec_chunk_paged_bitwise_matches_dense():
+    """The paged spec entry packs byte-identical logits to the dense
+    one, and its K/V page writes match prefill_chunk_paged's."""
+    prompt = [2, 50, 60]
+    chunk = [70, 8, 8, 8]
+    c = 8
+    m = CFG.spec_scratch_pages(c)
+    scratch = i32(list(range(15, 15 + m)))
+    tables = seq_tables([4])
+
+    kv_one = prefill(prompt)
+    dense = M.spec_chunk_fn(CFG, spec_tokens(chunk, c), i32(len(prompt)),
+                            i32(len(chunk)), kv_one, *ARRS)
+    want = np.asarray(M.read_logits_chunk_fn(CFG, c, dense))
+
+    pool = jnp.zeros(M.kv_pool_shape(CFG), jnp.float32)
+    pool = M.adopt_paged_fn(CFG, pool, prefill(prompt), tables, i32(9))
+    pool = M.spec_chunk_paged_fn(CFG, spec_tokens(chunk, c), i32(len(prompt)),
+                                 i32(len(chunk)), tables, scratch, pool, *ARRS)
+    got = np.asarray(M.read_logits_chunk_paged_fn(CFG, c, pool, scratch))
+    np.testing.assert_array_equal(got, want)
+
+    # K/V side effects == plain chunked prefill of the same tokens.
+    pool2 = jnp.zeros(M.kv_pool_shape(CFG), jnp.float32)
+    pool2 = M.adopt_paged_fn(CFG, pool2, prefill(prompt), tables, i32(9))
+    pool2 = M.prefill_chunk_paged_fn(CFG, spec_tokens(chunk, c),
+                                     i32(len(prompt)), i32(len(chunk)),
+                                     tables, i32(9), pool2, *ARRS)
+    n = len(prompt) + len(chunk)
+    np.testing.assert_array_equal(
+        np.asarray(pool)[1:, :, 4, :, :n, :],
+        np.asarray(pool2)[1:, :, 4, :, :n, :])
+
+
+def test_spec_chunk_paged_preserves_bystanders():
+    """A spec dispatch touches only the target sequence's pages and its
+    scratch pages: other sequences' K/V and mailbox logits survive
+    bit-exactly (the invariant that lets speculative lanes interleave
+    with staged prefills on one pool)."""
+    pool = jnp.zeros(M.kv_pool_shape(CFG), jnp.float32)
+    pool = M.adopt_paged_fn(CFG, pool, prefill([1, 10, 20, 30]),
+                            seq_tables([3]), i32(7))
+    bystander_kv = np.asarray(pool)[:, :, 3].copy()
+    bystander_logits = np.asarray(M.read_logits_page_fn(CFG, pool, i32(7)))
+
+    c = 8
+    m = CFG.spec_scratch_pages(c)
+    scratch = i32(list(range(20, 20 + m)))
+    pool = M.adopt_paged_fn(CFG, pool, prefill([2, 50, 60]),
+                            seq_tables([5]), i32(9))
+    pool = M.spec_chunk_paged_fn(CFG, spec_tokens([70, 8, 8], c), i32(3),
+                                 i32(3), seq_tables([5]), scratch, pool, *ARRS)
+    np.testing.assert_array_equal(np.asarray(pool)[:, :, 3], bystander_kv)
+    np.testing.assert_array_equal(
+        np.asarray(M.read_logits_page_fn(CFG, pool, i32(7))), bystander_logits)
+
+
+def test_spec_chunk_c16_roundtrip():
+    """C=16 exercises the packing's capacity edge (the whole plane-0
+    region on dense; multiple scratch pages on paged)."""
+    prompt = [1, 10, 20, 30]
+    chunk = [40] + [3, 17] * 6            # 13 valid rows
+    c = 16
+    ref = tokenwise_rows(prompt, chunk)
+
+    kv_one = prefill(prompt)
+    kv_one = M.spec_chunk_fn(CFG, spec_tokens(chunk, c), i32(len(prompt)),
+                             i32(len(chunk)), kv_one, *ARRS)
+    dense = np.asarray(M.read_logits_chunk_fn(CFG, c, kv_one))
+
+    m = CFG.spec_scratch_pages(c)
+    assert m >= 2, m                      # qwen3-0.6b needs >1 page at C=16
+    scratch = i32(list(range(15, 15 + m)))
+    tables = seq_tables([4])
+    pool = jnp.zeros(M.kv_pool_shape(CFG), jnp.float32)
+    pool = M.adopt_paged_fn(CFG, pool, prefill(prompt), tables, i32(9))
+    pool = M.spec_chunk_paged_fn(CFG, spec_tokens(chunk, c), i32(len(prompt)),
+                                 i32(len(chunk)), tables, scratch, pool, *ARRS)
+    paged = np.asarray(M.read_logits_chunk_paged_fn(CFG, c, pool, scratch))
+
+    np.testing.assert_array_equal(paged, dense)
+    np.testing.assert_allclose(dense[: len(chunk)], ref, atol=2e-4)
+    np.testing.assert_array_equal(dense[: len(chunk)].argmax(-1),
+                                  ref.argmax(-1))

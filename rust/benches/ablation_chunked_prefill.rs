@@ -19,7 +19,7 @@ use umserve::bench_harness::{
     banner, fmt_f, maybe_write_json, smoke, smoke_scale, synth_prompt, Table,
 };
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, Event, GenRequest, PromptInput};
+use umserve::coordinator::{EngineConfig, Event, GenRequest, KvConfig, PromptInput, SchedConfig};
 use umserve::engine::sampler::SamplingParams;
 
 const GEN: usize = 16;
@@ -55,12 +55,9 @@ fn main() -> anyhow::Result<()> {
             let mut s = Scheduler::new(EngineConfig {
                 model: "qwen3-0.6b".into(),
                 artifacts_dir: "artifacts".into(),
-                text_cache_bytes: 0,
-                cache_finished: false,
-                allow_shrink: false,
                 warmup: false,
-                prefill_chunk_tokens: if chunked { 32 } else { 0 },
-                prefill_chunks_per_step: 1,
+                sched: SchedConfig { prefill_chunk_tokens: if chunked { 32 } else { 0 }, prefill_chunks_per_step: 1, ..Default::default() },
+                kv: KvConfig { text_cache_bytes: 0, cache_finished: false, allow_shrink: false, ..Default::default() },
                 ..Default::default()
             })?;
             // Warm executables across buckets before timing.
@@ -140,10 +137,9 @@ fn main() -> anyhow::Result<()> {
             let mut s2 = Scheduler::new(EngineConfig {
                 model: "qwen3-0.6b".into(),
                 artifacts_dir: "artifacts".into(),
-                text_cache_bytes: 0,
-                cache_finished: false,
                 warmup: false,
-                prefill_chunk_tokens: if chunked { 32 } else { 0 },
+                sched: SchedConfig { prefill_chunk_tokens: if chunked { 32 } else { 0 }, ..Default::default() },
+                kv: KvConfig { text_cache_bytes: 0, cache_finished: false, ..Default::default() },
                 ..Default::default()
             })?;
             for idx in 0..total {

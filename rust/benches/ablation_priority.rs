@@ -25,7 +25,9 @@ use std::time::Instant;
 
 use umserve::bench_harness::{banner, fmt_f, maybe_write_json, smoke_scale, synth_prompt, Table};
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, Event, GenRequest, Priority, PromptInput};
+use umserve::coordinator::{
+    EngineConfig, Event, GenRequest, KvConfig, Priority, PromptInput, SchedConfig,
+};
 use umserve::engine::sampler::SamplingParams;
 
 /// Interactive arrivals: one every `INT_EVERY` ticks from `INT_START`.
@@ -71,17 +73,23 @@ fn main() -> anyhow::Result<()> {
         let mut s = Scheduler::new(EngineConfig {
             model: "qwen3-0.6b".into(),
             artifacts_dir: "artifacts".into(),
-            text_cache_bytes: 64 << 20,
-            cache_finished: false,
-            allow_shrink: false,
             warmup: false,
-            prefill_chunk_tokens: 32,
-            prefill_chunks_per_step: 1,
-            priority_sched: psched,
-            preemption: preempt,
-            // Aging off: the ablation isolates ordering + preemption
-            // (starvation freedom is covered by tests/test_priority.rs).
-            aging_ticks: 0,
+            sched: SchedConfig {
+                prefill_chunk_tokens: 32,
+                prefill_chunks_per_step: 1,
+                priority_sched: psched,
+                preemption: preempt,
+                // Aging off: the ablation isolates ordering + preemption
+                // (starvation freedom is covered by tests/test_priority.rs).
+                aging_ticks: 0,
+                ..Default::default()
+            },
+            kv: KvConfig {
+                text_cache_bytes: 64 << 20,
+                cache_finished: false,
+                allow_shrink: false,
+                ..Default::default()
+            },
             ..Default::default()
         })?;
         // Warm executables before timing.

@@ -15,7 +15,7 @@ use std::time::Instant;
 
 use umserve::bench_harness::{banner, fmt_f, maybe_write_json, smoke_scale, synth_prompt, Table};
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, Event, GenRequest, PromptInput};
+use umserve::coordinator::{EngineConfig, Event, GenRequest, KvConfig, PromptInput};
 use umserve::engine::sampler::SamplingParams;
 
 /// A new request becomes available every K decode steps.
@@ -40,10 +40,8 @@ fn main() -> anyhow::Result<()> {
         let mut s = Scheduler::new(EngineConfig {
             model: "qwen3-0.6b".into(),
             artifacts_dir: "artifacts".into(),
-            text_cache_bytes: 0,
-            cache_finished: false,
-            allow_shrink: shrink,
             warmup: false,
+            kv: KvConfig { text_cache_bytes: 0, cache_finished: false, allow_shrink: shrink, ..Default::default() },
             ..Default::default()
         })?;
         // Warm executables across buckets.

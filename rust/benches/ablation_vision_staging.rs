@@ -32,7 +32,7 @@ use std::time::Instant;
 
 use umserve::bench_harness::{banner, fmt_f, maybe_write_json, smoke_scale, Table};
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, Event, GenRequest, PromptInput};
+use umserve::coordinator::{EngineConfig, Event, GenRequest, KvConfig, PromptInput, VisionConfig};
 use umserve::engine::sampler::SamplingParams;
 use umserve::multimodal::image::{generate_image, ImageSource};
 
@@ -68,11 +68,9 @@ fn main() -> anyhow::Result<()> {
         let mut s = Scheduler::new(EngineConfig {
             model: "qwen3-vl-4b".into(),
             artifacts_dir: "artifacts".into(),
-            text_cache_bytes: 0,
-            cache_finished: false,
             warmup: false,
-            vision_stage: staged,
-            vision_encodes_per_step: 1,
+            vision: VisionConfig { stage: staged, encodes_per_step: 1, ..Default::default() },
+            kv: KvConfig { text_cache_bytes: 0, cache_finished: false, ..Default::default() },
             ..Default::default()
         })?;
         // Pre-compile the vision tower (so no histogram observation
@@ -209,11 +207,9 @@ fn main() -> anyhow::Result<()> {
         let mut s = Scheduler::new(EngineConfig {
             model: "qwen3-vl-4b".into(),
             artifacts_dir: "artifacts".into(),
-            text_cache_bytes: 0,
-            cache_finished: false,
             warmup: false,
-            vision_encodes_per_step: batch_imgs,
-            vision_batch: vb,
+            vision: VisionConfig { encodes_per_step: batch_imgs, batch: vb, ..Default::default() },
+            kv: KvConfig { text_cache_bytes: 0, cache_finished: false, ..Default::default() },
             ..Default::default()
         })?;
         // Pre-compile the encoder entries this arm will dispatch, then

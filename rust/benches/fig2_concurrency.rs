@@ -13,7 +13,7 @@ use std::time::Instant;
 
 use umserve::bench_harness::{banner, fmt_f, maybe_write_json, smoke, synth_prompt, Table};
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, GenRequest, PromptInput};
+use umserve::coordinator::{EngineConfig, GenRequest, KvConfig, PromptInput};
 use umserve::engine::sampler::SamplingParams;
 
 fn main() -> anyhow::Result<()> {
@@ -40,12 +40,15 @@ fn main() -> anyhow::Result<()> {
         let mut s = Scheduler::new(EngineConfig {
             model: model.into(),
             artifacts_dir: "artifacts".into(),
-            text_cache_bytes: 0, // every request must do real work
-            cache_finished: false,
             warmup: false,
-            // Shrink back between concurrency levels so c=1 after the
-            // c=16 warmup doesn't run on a 16-slot arena.
-            allow_shrink: true,
+            kv: KvConfig {
+                text_cache_bytes: 0, // every request must do real work
+                cache_finished: false,
+                // Shrink back between concurrency levels so c=1 after the
+                // c=16 warmup doesn't run on a 16-slot arena.
+                allow_shrink: true,
+                ..Default::default()
+            },
             ..Default::default()
         })?;
         // Warm all bucket executables once (compile time excluded).

@@ -11,7 +11,7 @@ mod mm_common;
 use mm_common::run_request;
 use umserve::bench_harness::{banner, Table};
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, PromptInput};
+use umserve::coordinator::{EngineConfig, KvConfig, PromptInput};
 use umserve::multimodal::image::{generate_image, ImageSource};
 
 fn main() -> anyhow::Result<()> {
@@ -28,10 +28,8 @@ fn main() -> anyhow::Result<()> {
     let mut cold_s = Scheduler::new(EngineConfig {
         model: "qwen3-vl-8b".into(),
         artifacts_dir: "artifacts".into(),
-        mm_emb_cache_bytes: 0,
-        mm_kv_cache_bytes: 0,
-        text_cache_bytes: 0,
         warmup: false,
+        kv: KvConfig { mm_emb_cache_bytes: 0, mm_kv_cache_bytes: 0, text_cache_bytes: 0, ..Default::default() },
         ..Default::default()
     })?;
     // Warm executables (compile excluded), then measure.

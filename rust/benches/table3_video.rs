@@ -19,7 +19,7 @@ use mm_common::run_request;
 use umserve::bench_harness::{banner, maybe_write_json, smoke, Table};
 use umserve::cache::kv_one_bytes;
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, PromptInput};
+use umserve::coordinator::{EngineConfig, KvConfig, PromptInput, VisionConfig};
 use umserve::multimodal::image::ImageSource;
 use umserve::multimodal::video::{generate_video, sample_frames};
 
@@ -44,19 +44,21 @@ fn main() -> anyhow::Result<()> {
     let base_cfg = EngineConfig {
         model: "qwen3-vl-4b".into(),
         artifacts_dir: "artifacts".into(),
-        // Disable caches: Table 3 is the COLD video path.
-        mm_emb_cache_bytes: 0,
-        mm_kv_cache_bytes: 0,
-        text_cache_bytes: 0,
         warmup: false,
+        // Disable caches: Table 3 is the COLD video path.
+        kv: KvConfig {
+            mm_emb_cache_bytes: 0,
+            mm_kv_cache_bytes: 0,
+            text_cache_bytes: 0,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let mut s = Scheduler::new(base_cfg.clone())?;
     // Same cold path, but same-resolution frames grouped into batched
     // encoder dispatches.
     let mut sb = Scheduler::new(EngineConfig {
-        vision_encodes_per_step: 8,
-        vision_batch: 8,
+        vision: VisionConfig { encodes_per_step: 8, batch: 8, ..base_cfg.vision.clone() },
         ..base_cfg
     })?;
     // Executable warmup: every embed-prefill bucket (and the batched

@@ -13,7 +13,7 @@ mod mm_common;
 use mm_common::run_request;
 use umserve::bench_harness::{banner, maybe_write_json, smoke, smoke_scale, Table};
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, PromptInput};
+use umserve::coordinator::{EngineConfig, KvConfig, PromptInput};
 use umserve::multimodal::image::{generate_image, ImageSource};
 
 fn main() -> anyhow::Result<()> {
@@ -44,10 +44,8 @@ fn main() -> anyhow::Result<()> {
         let mut s = Scheduler::new(EngineConfig {
             model: "qwen3-vl-8b".into(),
             artifacts_dir: "artifacts".into(),
-            mm_emb_cache_bytes: if emb { 256 << 20 } else { 0 },
-            mm_kv_cache_bytes: if kv { 256 << 20 } else { 0 },
-            text_cache_bytes: 0,
             warmup: false,
+            kv: KvConfig { mm_emb_cache_bytes: if emb { 256 << 20 } else { 0 }, mm_kv_cache_bytes: if kv { 256 << 20 } else { 0 }, text_cache_bytes: 0, ..Default::default() },
             ..Default::default()
         })?;
         // Warm executables with a different image, then turn 1 (populates

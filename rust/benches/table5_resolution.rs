@@ -10,7 +10,7 @@ use mm_common::run_request;
 use umserve::bench_harness::{banner, Table};
 use umserve::cache::kv_one_bytes;
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, PromptInput};
+use umserve::coordinator::{EngineConfig, KvConfig, PromptInput};
 use umserve::multimodal::image::{generate_image, ImageSource};
 
 fn main() -> anyhow::Result<()> {
@@ -21,8 +21,8 @@ fn main() -> anyhow::Result<()> {
     let mut s = Scheduler::new(EngineConfig {
         model: "qwen3-vl-4b".into(),
         artifacts_dir: "artifacts".into(),
-        text_cache_bytes: 0,
         warmup: false,
+        kv: KvConfig { text_cache_bytes: 0, ..Default::default() },
         ..Default::default()
     })?;
     // Warm each resolution's executables with throwaway images.

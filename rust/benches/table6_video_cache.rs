@@ -13,7 +13,7 @@ use mm_common::run_request;
 use umserve::bench_harness::{banner, maybe_write_json, smoke, smoke_scale, Table};
 use umserve::cache::kv_one_bytes;
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, PromptInput};
+use umserve::coordinator::{EngineConfig, KvConfig, PromptInput, VisionConfig};
 use umserve::multimodal::image::ImageSource;
 use umserve::multimodal::video::{generate_video, sample_frames};
 
@@ -25,10 +25,8 @@ fn main() -> anyhow::Result<()> {
     let base_cfg = EngineConfig {
         model: "qwen3-vl-4b".into(),
         artifacts_dir: "artifacts".into(),
-        text_cache_bytes: 0,
-        mm_emb_cache_bytes: 1 << 30,
-        mm_kv_cache_bytes: 1 << 30,
         warmup: false,
+        kv: KvConfig { text_cache_bytes: 0, mm_emb_cache_bytes: 1 << 30, mm_kv_cache_bytes: 1 << 30, ..Default::default() },
         ..Default::default()
     };
     let mut s = Scheduler::new(base_cfg.clone())?;
@@ -37,8 +35,7 @@ fn main() -> anyhow::Result<()> {
     // frame-encode bound (its caches are its own, so the bench clip is
     // cold there too).
     let mut sb = Scheduler::new(EngineConfig {
-        vision_encodes_per_step: 8,
-        vision_batch: 8,
+        vision: VisionConfig { encodes_per_step: 8, batch: 8, ..base_cfg.vision.clone() },
         ..base_cfg
     })?;
     // Warm every embed bucket with a different clip (compile time must

@@ -28,8 +28,13 @@ pub enum KvBacking {
     /// trimmed to the first `s` positions at cache insert (the
     /// allocation the entry's byte charge actually bounds).  Trimmed
     /// states must be re-expanded (`ModelRuntime::untrim_kv`) before
-    /// injection or logits readback.
-    Dense { kv_one: Rc<PjRtBuffer>, trim: Option<usize> },
+    /// injection or logits readback.  `logits`: host-side override for
+    /// states whose mailbox plane is NOT the last token's logits — a
+    /// speculative-verify dispatch repurposes the whole plane-0 region
+    /// as a packed multi-row readback, so a checkpoint taken before the
+    /// next decode step rebuilds the mailbox must carry its last logits
+    /// host-side (the dense analog of the paged checkpoint's capture).
+    Dense { kv_one: Rc<PjRtBuffer>, trim: Option<usize>, logits: Option<Vec<f32>> },
     /// Pinned pages in the engine's paged KV pool — a zero-copy
     /// checkpoint: the pages stay where the sequence wrote them, this
     /// entry just holds refcounts (dropping the entry releases them).
@@ -50,15 +55,32 @@ pub struct CachedKv {
 impl CachedKv {
     pub fn new(kv_one: PjRtBuffer, len: usize) -> Rc<Self> {
         Rc::new(CachedKv {
-            backing: KvBacking::Dense { kv_one: Rc::new(kv_one), trim: None },
+            backing: KvBacking::Dense { kv_one: Rc::new(kv_one), trim: None, logits: None },
             len,
         })
     }
 
+    /// A dense state whose plane-0 mailbox is stale (post-speculation
+    /// checkpoint): the last token's logits ride along host-side.
+    pub fn new_with_logits(kv_one: PjRtBuffer, logits: Vec<f32>, len: usize) -> Rc<Self> {
+        Self::new_dense(kv_one, len, None, Some(logits))
+    }
+
     /// A dense state trimmed to `positions` physical positions.
     pub fn new_trimmed(kv_one: PjRtBuffer, len: usize, positions: usize) -> Rc<Self> {
+        Self::new_dense(kv_one, len, Some(positions), None)
+    }
+
+    /// General dense constructor — trim and host-logits override are
+    /// independent (a trimmed post-speculation checkpoint carries both).
+    pub fn new_dense(
+        kv_one: PjRtBuffer,
+        len: usize,
+        trim: Option<usize>,
+        logits: Option<Vec<f32>>,
+    ) -> Rc<Self> {
         Rc::new(CachedKv {
-            backing: KvBacking::Dense { kv_one: Rc::new(kv_one), trim: Some(positions) },
+            backing: KvBacking::Dense { kv_one: Rc::new(kv_one), trim, logits },
             len,
         })
     }
@@ -81,6 +103,15 @@ impl CachedKv {
     pub fn trim(&self) -> Option<usize> {
         match &self.backing {
             KvBacking::Dense { trim, .. } => *trim,
+            KvBacking::Paged { .. } => None,
+        }
+    }
+
+    /// Host-side last-logits override of a dense state (present only on
+    /// post-speculation checkpoints whose mailbox plane is stale).
+    pub fn dense_logits(&self) -> Option<&Vec<f32>> {
+        match &self.backing {
+            KvBacking::Dense { logits, .. } => logits.as_ref(),
             KvBacking::Paged { .. } => None,
         }
     }

@@ -109,6 +109,12 @@ impl FinishReason {
 pub struct Usage {
     pub prompt_tokens: usize,
     pub completion_tokens: usize,
+    /// Speculative-decoding attribution (OpenAI
+    /// `completion_tokens_details`): draft tokens the proposer put in
+    /// front of the verifier, and how many of those it accepted.  Both
+    /// zero when speculation never ran for this request.
+    pub draft_tokens_proposed: usize,
+    pub draft_tokens_accepted: usize,
 }
 
 /// Request-level timing + cache attribution, reported on Done (the
@@ -152,29 +158,9 @@ pub enum Event {
     Error { id: u64, message: String },
 }
 
-/// Scheduler / engine configuration (the config-system surface that the
-/// CLI and server expose).
+/// Scheduling / admission policy knobs (Algorithm 1's policy surface).
 #[derive(Debug, Clone)]
-pub struct EngineConfig {
-    pub model: String,
-    pub artifacts_dir: String,
-    /// Text prefix cache budget (0 disables; paper default 512 MB).
-    pub text_cache_bytes: usize,
-    /// Multimodal embedding / KV cache budgets (0 disables).
-    pub mm_emb_cache_bytes: usize,
-    pub mm_kv_cache_bytes: usize,
-    /// Store finished sequences' KV for future prefix hits.
-    pub cache_finished: bool,
-    /// Allow shrinking the batch bucket when occupancy drops.
-    /// Default OFF: arena migrations cost O(arena) device work per live
-    /// sequence and the `ablation_scheduler` bench shows an aggressive
-    /// shrink policy thrashing under staggered arrivals (grow/shrink
-    /// oscillation).  Enable only for bursty workloads with long idle
-    /// tails where a large arena would otherwise slow single-stream
-    /// decode indefinitely.
-    pub allow_shrink: bool,
-    /// Warm up (pre-compile) common entries at startup.
-    pub warmup: bool,
+pub struct SchedConfig {
     /// Staged-prefill chunk size: prompts longer than this are built
     /// chunk by chunk, interleaved with decode steps, instead of
     /// stalling the whole batch for one inline prefill.  0 disables
@@ -196,23 +182,48 @@ pub struct EngineConfig {
     /// sequences (KV checkpointed to the prefix cache, resumed via the
     /// chunked catch-up path) under decode-slot pressure.  Requires
     /// `priority_sched`; decode eviction additionally requires a
-    /// non-zero `text_cache_bytes` to checkpoint into.
+    /// non-zero `kv.text_cache_bytes` to checkpoint into.
     pub preemption: bool,
+    /// Class assigned to requests that don't specify one.
+    pub default_priority: Priority,
+    /// Starvation prevention: a staged job's effective class improves
+    /// by one every `aging_ticks` scheduler ticks spent waiting, so a
+    /// batch job behind a steady interactive flood is admitted within
+    /// `2 * aging_ticks` ticks.  0 disables aging.
+    pub aging_ticks: u64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            prefill_chunk_tokens: 32,
+            prefill_chunks_per_step: 1,
+            priority_sched: true,
+            preemption: true,
+            default_priority: Priority::Normal,
+            aging_ticks: 64,
+        }
+    }
+}
+
+/// Vision-encoder pipeline knobs (the MLLM path).
+#[derive(Debug, Clone)]
+pub struct VisionConfig {
     /// Staged vision encoding: each encoder miss becomes a per-image
     /// `VisionJob` (keyed by content hash, so concurrent requests for
     /// the same image coalesce onto one encode) that the scheduler
-    /// advances at most `vision_encodes_per_step` per tick alongside
-    /// prefill chunks — instead of running every encode inline inside
+    /// advances at most `encodes_per_step` per tick alongside prefill
+    /// chunks — instead of running every encode inline inside
     /// admission, where a multi-image request stalls all decoding
     /// sequences for the full 1.5–4 s encoder cost.  Identical output
     /// either way; off restores the inline encode.
-    pub vision_stage: bool,
+    pub stage: bool,
     /// Fairness cap for staged vision: encoder units advanced per
     /// scheduler tick (each unit is one image).  Interactive-class
     /// encodes may additionally borrow the headroom batch-class work
     /// leaves unused (up to one extra budget's worth per tick) when
-    /// `priority_sched` is on.
-    pub vision_encodes_per_step: usize,
+    /// `sched.priority_sched` is on.
+    pub encodes_per_step: usize,
     /// Max images per batched encoder dispatch: queued same-resolution
     /// encodes are grouped and issued through the largest lowered
     /// `vision_r{res}_b{B}` bucket <= the group size, so a K-image
@@ -220,8 +231,8 @@ pub struct EngineConfig {
     /// dispatch per image; the effective bucket is clamped to the
     /// largest lowered one (batching silently degrades to per-image on
     /// pre-batching artifacts).  Batching only engages when
-    /// `vision_encodes_per_step` allows more than one image per tick.
-    pub vision_batch: usize,
+    /// `encodes_per_step` allows more than one image per tick.
+    pub batch: usize,
     /// Overlap vision encoding with embed prefill: a multi-image
     /// request starts feeding its resolved `[vision ++ text]` prefix
     /// through chunked embed prefill while later images are still
@@ -231,14 +242,18 @@ pub struct EngineConfig {
     /// temporal pooling (pooling spans image boundaries) and "KV only"
     /// validation hits take the parked path regardless.  Identical
     /// greedy output either way.
-    pub mm_overlap: bool,
-    /// Class assigned to requests that don't specify one.
-    pub default_priority: Priority,
-    /// Starvation prevention: a staged job's effective class improves
-    /// by one every `aging_ticks` scheduler ticks spent waiting, so a
-    /// batch job behind a steady interactive flood is admitted within
-    /// `2 * aging_ticks` ticks.  0 disables aging.
-    pub aging_ticks: u64,
+    pub overlap: bool,
+}
+
+impl Default for VisionConfig {
+    fn default() -> Self {
+        VisionConfig { stage: true, encodes_per_step: 1, batch: 8, overlap: true }
+    }
+}
+
+/// KV storage backend + cache budget knobs (§3.3 memory management).
+#[derive(Debug, Clone)]
+pub struct KvConfig {
     /// Back the KV with the paged pool (block/page allocator +
     /// copy-on-write prefix sharing) instead of the dense slot arena.
     /// Paged mode makes prefix-cache hits, eviction checkpoints, and
@@ -246,9 +261,81 @@ pub struct EngineConfig {
     /// trim/untrim/clone with refcount bookkeeping.  Greedy output is
     /// byte-identical either way (fresh prompts build through the same
     /// dense executables and are adopted onto pages).  Requires
-    /// artifacts with paged entries; `serve` defaults this ON, library
-    /// default stays OFF so existing embedders keep the arena.
-    pub kv_paged: bool,
+    /// artifacts with paged entries; both `serve` and the library
+    /// engine default it ON when the artifacts carry paged entries.
+    pub paged: bool,
+    /// Text prefix cache budget (0 disables; paper default 512 MB).
+    pub text_cache_bytes: usize,
+    /// Multimodal embedding / KV cache budgets (0 disables).
+    pub mm_emb_cache_bytes: usize,
+    pub mm_kv_cache_bytes: usize,
+    /// Store finished sequences' KV for future prefix hits.
+    pub cache_finished: bool,
+    /// Allow shrinking the batch bucket when occupancy drops.
+    /// Default OFF: arena migrations cost O(arena) device work per live
+    /// sequence and the `ablation_scheduler` bench shows an aggressive
+    /// shrink policy thrashing under staggered arrivals (grow/shrink
+    /// oscillation).  Enable only for bursty workloads with long idle
+    /// tails where a large arena would otherwise slow single-stream
+    /// decode indefinitely.  (Paged-mode shrink is a free bucket swap
+    /// and happens eagerly regardless.)
+    pub allow_shrink: bool,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        KvConfig {
+            paged: false,
+            text_cache_bytes: 512 << 20,
+            mm_emb_cache_bytes: 256 << 20,
+            mm_kv_cache_bytes: 256 << 20,
+            cache_finished: true,
+            allow_shrink: false,
+        }
+    }
+}
+
+/// Speculative-decoding knobs (model-free n-gram drafting + one-shot
+/// chunk verification; see `engine::draft`).
+#[derive(Debug, Clone)]
+pub struct SpecConfig {
+    /// Master switch.  Greedy-exact — enabling never changes output
+    /// bytes, only the number of dispatches per emitted token — so it
+    /// defaults ON; per-request `speculation: off` opts out.  Only
+    /// greedy (temperature 0) text requests speculate; sampling and
+    /// multimodal requests take the tokenwise path regardless.
+    pub enabled: bool,
+    /// Max draft tokens proposed per round (clamped to the lowered
+    /// `spec_chunk_c{C}` buckets: K+1 tokens are scored per dispatch).
+    pub draft_len: usize,
+    /// Shortest context suffix n-gram the proposer will match on.
+    /// Lower = drafts fire more often but mispredict more; 2 is the
+    /// prompt-lookup default.
+    pub ngram_min: usize,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig { enabled: true, draft_len: 7, ngram_min: 2 }
+    }
+}
+
+/// Scheduler / engine configuration (the config-system surface that the
+/// CLI and server expose), grouped by subsystem: scheduling policy
+/// ([`SchedConfig`]), vision pipeline ([`VisionConfig`]), KV backend +
+/// cache budgets ([`KvConfig`]), speculative decoding ([`SpecConfig`]).
+/// Built in ONE place for the CLI (`main.rs`); benches and tests
+/// compose the groups directly.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub model: String,
+    pub artifacts_dir: String,
+    /// Warm up (pre-compile) common entries at startup.
+    pub warmup: bool,
+    pub sched: SchedConfig,
+    pub vision: VisionConfig,
+    pub kv: KvConfig,
+    pub spec: SpecConfig,
 }
 
 impl Default for EngineConfig {
@@ -256,23 +343,11 @@ impl Default for EngineConfig {
         EngineConfig {
             model: "qwen3-0.6b".into(),
             artifacts_dir: "artifacts".into(),
-            text_cache_bytes: 512 << 20,
-            mm_emb_cache_bytes: 256 << 20,
-            mm_kv_cache_bytes: 256 << 20,
-            cache_finished: true,
-            allow_shrink: false,
             warmup: true,
-            prefill_chunk_tokens: 32,
-            prefill_chunks_per_step: 1,
-            priority_sched: true,
-            preemption: true,
-            vision_stage: true,
-            vision_encodes_per_step: 1,
-            vision_batch: 8,
-            mm_overlap: true,
-            default_priority: Priority::Normal,
-            aging_ticks: 64,
-            kv_paged: false,
+            sched: SchedConfig::default(),
+            vision: VisionConfig::default(),
+            kv: KvConfig::default(),
+            spec: SpecConfig::default(),
         }
     }
 }

@@ -74,6 +74,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::cache::mm::{emb_fingerprint, mm_prompt_hash, MmCache, MmKvEntry, VisionEntry};
 use crate::cache::text_prefix::TextPrefixCache;
 use crate::cache::{kv_token_bytes, CachedKv};
+use crate::engine::draft;
 use crate::engine::sampler::{sample, Rng, SamplingParams};
 use crate::engine::tokenizer::{StreamDecoder, Tokenizer, EOS, IMG};
 use crate::engine::{PagePoolSnapshot, TextEngine};
@@ -183,6 +184,8 @@ pub struct MigratedSeq {
     pub emitted: usize,
     pub fed: usize,
     pub next_token: i32,
+    pub spec_proposed: usize,
+    pub spec_accepted: usize,
     pub mm: Option<MmMigration>,
     pub timing: Timing,
     pub enqueued_at: Instant,
@@ -245,6 +248,10 @@ struct ActiveReq {
     mm: Option<MmSeq>,
     /// Sampled token to feed at the next step.
     next_token: i32,
+    /// Draft tokens proposed / accepted by speculative rounds (surfaced
+    /// in `Usage.completion_tokens_details`).
+    spec_proposed: usize,
+    spec_accepted: usize,
     timing: Timing,
     enqueued_at: Instant,
 }
@@ -515,8 +522,8 @@ impl Scheduler {
         let rt = ModelRuntime::load(&client, &store, &cfg.model)?;
         let tokenizer = Rc::new(Tokenizer::from_file(store.tokenizer_path())?);
         let token_bytes = kv_token_bytes(&rt.info);
-        let use_paged = cfg.kv_paged && rt.has_paged_kv();
-        if cfg.kv_paged && !use_paged {
+        let use_paged = cfg.kv.paged && rt.has_paged_kv();
+        if cfg.kv.paged && !use_paged {
             bail!(
                 "model {} artifacts lack paged-KV entries; rebuild them with \
                  `python -m compile.aot --out-dir ../rust/artifacts` or serve with --kv arena",
@@ -556,14 +563,14 @@ impl Scheduler {
         // Staged prefill needs the chunk entries; clamp the configured
         // chunk to the largest lowered bucket and degrade to inline
         // admissions (chunk 0) on pre-chunking artifacts.
-        let chunk_tokens = if cfg.prefill_chunk_tokens > 0 && rt.has_chunk_prefill() {
-            cfg.prefill_chunk_tokens.min(rt.info.max_chunk_bucket().unwrap_or(0))
+        let chunk_tokens = if cfg.sched.prefill_chunk_tokens > 0 && rt.has_chunk_prefill() {
+            cfg.sched.prefill_chunk_tokens.min(rt.info.max_chunk_bucket().unwrap_or(0))
         } else {
             0
         };
         let mm_cache = MmCache::new(
-            cfg.mm_emb_cache_bytes.max(1),
-            cfg.mm_kv_cache_bytes.max(1),
+            cfg.kv.mm_emb_cache_bytes.max(1),
+            cfg.kv.mm_kv_cache_bytes.max(1),
             token_bytes,
         );
         let s_max = rt.info.s_max;
@@ -575,7 +582,7 @@ impl Scheduler {
             engine,
             tokenizer,
             text_cache: TextPrefixCache::with_page_size(
-                cfg.text_cache_bytes.max(1),
+                cfg.kv.text_cache_bytes.max(1),
                 token_bytes,
                 s_max,
                 cache_page,
@@ -594,8 +601,8 @@ impl Scheduler {
             load: Arc::new(EngineLoad::default()),
             metrics: MetricsRegistry::new(),
         };
-        s.mm_cache.enable_emb = cfg.mm_emb_cache_bytes > 0;
-        s.mm_cache.enable_kv = cfg.mm_kv_cache_bytes > 0;
+        s.mm_cache.enable_emb = cfg.kv.mm_emb_cache_bytes > 0;
+        s.mm_cache.enable_kv = cfg.kv.mm_kv_cache_bytes > 0;
         s.load
             .capacity
             .store(s.engine.max_capacity(), Ordering::Relaxed);
@@ -634,7 +641,7 @@ impl Scheduler {
         index: usize,
         next_id: Arc<AtomicU64>,
     ) -> Result<(SchedulerHandle, Receiver<Result<(), String>>)> {
-        let default_priority = cfg.default_priority;
+        let default_priority = cfg.sched.default_priority;
         let load = Arc::new(EngineLoad::default());
         let thread_load = load.clone();
         let (tx, rx) = channel::<Command>();
@@ -737,7 +744,7 @@ impl Scheduler {
     /// interactive arrival is visible for preemption even when every
     /// slot is busy with batch work.
     fn admit_from_intake(&mut self) {
-        let headroom = if self.chunk_tokens > 0 && self.cfg.priority_sched {
+        let headroom = if self.chunk_tokens > 0 && self.cfg.sched.priority_sched {
             self.engine.max_capacity()
         } else {
             0
@@ -824,7 +831,10 @@ impl Scheduler {
             return None;
         }
         let t = self.engine.rt.trim_kv(kv_one, s).ok()?;
-        Some(CachedKv::new_trimmed(t, kv.len, s))
+        // A host-side logits override (post-speculation checkpoint)
+        // must survive the trim — the trimmed buffer's mailbox plane is
+        // as stale as the original's.
+        Some(CachedKv::new_dense(t, kv.len, Some(s), kv.dense_logits().cloned()))
     }
 
     /// Insert a KV state into the mm cache, first trimming it
@@ -872,7 +882,7 @@ impl Scheduler {
                 .rt
                 .untrim_kv(kv.dense()?, s)
                 .ok()
-                .map(|full| CachedKv::new(full, kv.len)),
+                .map(|full| CachedKv::new_dense(full, kv.len, None, kv.dense_logits().cloned())),
         }
     }
 
@@ -1218,6 +1228,8 @@ impl Scheduler {
             emitted: 0,
             fed: 0,
             next_token: first,
+            spec_proposed: 0,
+            spec_accepted: 0,
             mm,
             timing,
             enqueued_at,
@@ -1258,9 +1270,9 @@ impl Scheduler {
             return;
         }
         let now = self.tick_count;
-        let aging = self.cfg.aging_ticks;
-        let psched = self.cfg.priority_sched;
-        let preempt = self.cfg.preemption;
+        let aging = self.cfg.sched.aging_ticks;
+        let psched = self.cfg.sched.priority_sched;
+        let preempt = self.cfg.sched.preemption;
         let front_before = self.pending.front().map(|j| (j.id, j.fed > 0));
         self.pending.make_contiguous().sort_by_key(|j| {
             if !preempt && j.fed > 0 {
@@ -1293,7 +1305,7 @@ impl Scheduler {
         }
         self.order_queue();
         let d = self.engine.rt.info.d_model;
-        let budget = self.cfg.prefill_chunks_per_step.max(1);
+        let budget = self.cfg.sched.prefill_chunks_per_step.max(1);
         for _ in 0..budget {
             self.admit_completed_heads(d);
             // One chunk for the first job with prefill work left.
@@ -1367,7 +1379,7 @@ impl Scheduler {
             if self.free_slots() >= need {
                 return true;
             }
-            if !(self.cfg.priority_sched && self.cfg.preemption) {
+            if !(self.cfg.sched.priority_sched && self.cfg.sched.preemption) {
                 return false;
             }
             if !self.evict_one_below(priority) {
@@ -1406,7 +1418,7 @@ impl Scheduler {
             .iter()
             .filter(|(_, a)| a.priority == Priority::Batch && a.priority.rank() > class.rank())
             .filter(|(_, a)| match &a.mm {
-                None => self.cfg.text_cache_bytes > 0,
+                None => self.cfg.kv.text_cache_bytes > 0,
                 Some(_) => mm_rebuildable,
             })
             .map(|(&id, a)| (a.prompt_len + a.fed, std::cmp::Reverse(a.enqueued_at), id))
@@ -1475,8 +1487,8 @@ impl Scheduler {
     fn try_resume_evicted(&mut self) {
         while !self.evicted.is_empty() && self.free_slots() > 0 {
             let now = self.tick_count;
-            let aging = self.cfg.aging_ticks;
-            let psched = self.cfg.priority_sched;
+            let aging = self.cfg.sched.aging_ticks;
+            let psched = self.cfg.sched.priority_sched;
             let idx = (0..self.evicted.len())
                 .min_by_key(|&i| {
                     let e = &self.evicted[i];
@@ -1805,6 +1817,8 @@ impl Scheduler {
                 emitted: req.emitted,
                 fed: req.fed,
                 next_token: req.next_token,
+                spec_proposed: req.spec_proposed,
+                spec_accepted: req.spec_accepted,
                 mm,
                 timing: req.timing,
                 enqueued_at: req.enqueued_at,
@@ -1868,6 +1882,8 @@ impl Scheduler {
                     prompt_len: d.prompt_len,
                     emitted: d.emitted,
                     fed: d.fed,
+                    spec_proposed: d.spec_proposed,
+                    spec_accepted: d.spec_accepted,
                     mm: d.mm.map(|m| MmSeq {
                         hashes: m.hashes,
                         emb_fp: m.emb_fp,
@@ -2108,7 +2124,7 @@ impl Scheduler {
                     self.mm_put_kv(key, kv.clone(), fp);
                 }
                 _ => {
-                    if self.cfg.text_cache_bytes > 0 && self.cfg.cache_finished {
+                    if self.cfg.kv.text_cache_bytes > 0 && self.cfg.kv.cache_finished {
                         self.text_put(&job.tokens, kv.clone());
                     }
                 }
@@ -2178,15 +2194,15 @@ impl Scheduler {
             return;
         }
         let now = self.tick_count;
-        let aging = self.cfg.aging_ticks;
-        let psched = self.cfg.priority_sched;
+        let aging = self.cfg.sched.aging_ticks;
+        let psched = self.cfg.sched.priority_sched;
         if self.vis_pending.len() > 1 {
             self.vis_pending
                 .make_contiguous()
                 .sort_by_key(|j| effective_rank(j.priority, j.staged_tick, now, aging, psched));
         }
-        let base = self.cfg.vision_encodes_per_step.max(1);
-        let borrow = if self.cfg.priority_sched {
+        let base = self.cfg.vision.encodes_per_step.max(1);
+        let borrow = if self.cfg.sched.priority_sched {
             let n_int = self
                 .vis_pending
                 .iter()
@@ -2201,7 +2217,7 @@ impl Scheduler {
         } else {
             0
         };
-        let group_cap = self.cfg.vision_batch.max(1);
+        let group_cap = self.cfg.vision.batch.max(1);
         let mut spent = 0usize;
         let mut stall_ms = 0.0;
         while let Some(front) = self.vis_pending.front() {
@@ -2430,7 +2446,7 @@ impl Scheduler {
         }
         // Overlap never carries a kv_hit, so the KV cache is the only
         // fingerprint consumer.
-        let emb_fp = emb_fp_of(&p.hashes, &p.resolved, self.cfg.mm_kv_cache_bytes > 0);
+        let emb_fp = emb_fp_of(&p.hashes, &p.resolved, self.cfg.kv.mm_kv_cache_bytes > 0);
         let text_rows = match self.engine.rt.embed_lookup(&p.text_tokens) {
             Ok(r) => r,
             Err(e) => {
@@ -2645,7 +2661,7 @@ impl Scheduler {
             return self.finish_mm_resolve(pend);
         }
 
-        if !self.cfg.vision_stage {
+        if !self.cfg.vision.stage {
             // Inline encode (legacy): run every miss now, stalling the
             // whole batch for the full multi-image cost — recorded as
             // ONE vision_stall observation for the staged/inline
@@ -2689,7 +2705,7 @@ impl Scheduler {
         // parked as before): pooling-bound requests, pending "KV only"
         // validation hits, and configurations without chunked embeds.
         let max_embed = info.embed_prefill_buckets.last().copied().unwrap_or(0);
-        let overlap_ok = self.cfg.mm_overlap
+        let overlap_ok = self.cfg.vision.overlap
             && self.chunk_tokens > 0
             && self.engine.rt.has_chunk_prefill_embeds()
             && pend.kv_hit.is_none()
@@ -2940,7 +2956,7 @@ impl Scheduler {
         let emb_fp = emb_fp_of(
             &p.hashes,
             &p.resolved,
-            p.kv_hit.is_some() || self.cfg.mm_kv_cache_bytes > 0,
+            p.kv_hit.is_some() || self.cfg.kv.mm_kv_cache_bytes > 0,
         );
 
         // KV-validation (Table 4 "KV only"): the freshly computed
@@ -3053,7 +3069,7 @@ impl Scheduler {
         }
         self.check_context(tokens.len())?;
 
-        if self.cfg.text_cache_bytes > 0 {
+        if self.cfg.kv.text_cache_bytes > 0 {
             if let Some(hit) = self.text_lookup(tokens) {
                 timing.prefix_hit_tokens = hit.matched;
                 self.metrics.inc("text_prefix_hits", 1);
@@ -3103,8 +3119,114 @@ impl Scheduler {
 
     // ------------------------------------------------------- stepping
 
+    /// Speculative catch-up pass: for each eligible sequence, propose a
+    /// model-free n-gram draft from its own token history and verify it
+    /// in ONE `spec_chunk` dispatch, emitting the accepted prefix plus
+    /// the verifier's first divergent token.  Greedy verification is
+    /// exact — the emitted stream is byte-identical to token-by-token
+    /// decode — so eligibility is restricted to greedy, text-only
+    /// sequences that have not opted out.  Runs before the batched
+    /// decode step; sequences that finish inside a round are completed
+    /// here and drop out of the decode batch.
+    fn spec_pass(&mut self) {
+        if !self.engine.has_spec() {
+            return;
+        }
+        let ids: Vec<u64> = self.active.keys().copied().collect();
+        let mut finished: Vec<(u64, FinishReason)> = Vec::new();
+        for id in ids {
+            let a = self.active.get_mut(&id).unwrap();
+            let wanted = a.params.speculation.unwrap_or(self.cfg.spec.enabled);
+            if !wanted || a.params.temperature > 0.0 || a.mm.is_some() {
+                continue;
+            }
+            let remaining = a.params.max_tokens.saturating_sub(a.emitted);
+            if remaining < 2 {
+                continue;
+            }
+            // Draft from the full generated-so-far stream: prompt ++ fed
+            // tokens ++ the pending (sampled, not yet fed) token.
+            let mut ctx = a.all_tokens.clone();
+            ctx.push(a.next_token);
+            let Some(drafts) =
+                draft::propose(&ctx, self.cfg.spec.draft_len, self.cfg.spec.ngram_min)
+            else {
+                continue;
+            };
+            let stop = if a.params.stop_on_eos { Some(EOS) } else { None };
+            let round =
+                match self.engine.spec_step(id, a.next_token, &drafts, remaining, stop) {
+                    Ok(Some(r)) => r,
+                    Ok(None) => continue, // no bucket fit / pool pressure: decode normally
+                    Err(e) => {
+                        let a = self.active.remove(&id).unwrap();
+                        let _ = self.engine.remove(id, false);
+                        let _ = a.events.send(Event::Error { id, message: format!("{e:#}") });
+                        continue;
+                    }
+                };
+            let a = self.active.get_mut(&id).unwrap();
+            a.spec_proposed += round.drafted;
+            a.spec_accepted += round.accepted;
+            self.metrics.inc("spec_rounds", 1);
+            self.metrics.inc("spec_drafts_proposed", round.drafted as u64);
+            self.metrics.inc("spec_drafts_accepted", round.accepted as u64);
+            self.metrics.inc("spec_tokens", round.tokens.len() as u64);
+            if round.drafted > 0 {
+                // Acceptance-rate histogram, in percent (0..100).
+                self.metrics.observe_ms(
+                    "spec_accept_pct",
+                    100.0 * round.accepted as f64 / round.drafted as f64,
+                );
+            }
+            // Consume the round exactly as `step_once` consumes one
+            // decode result per token: the engine fed `a.next_token`
+            // then each accepted draft, so the push/feed bookkeeping
+            // below replays the same per-token transition and keeps
+            // `kv.len == prompt_len + fed` intact.
+            let mut fin: Option<FinishReason> = None;
+            for &tok in &round.tokens {
+                a.all_tokens.push(a.next_token);
+                a.fed += 1;
+                a.next_token = tok;
+                if a.params.stop_on_eos && tok == EOS {
+                    fin = Some(FinishReason::Stop);
+                    break; // engine truncated the round at EOS too
+                }
+                let text = a.decoder.push(&self.tokenizer, tok);
+                a.emitted += 1;
+                self.metrics.inc("tokens_generated", 1);
+                let _ = a.events.send(Event::Token { id, token: tok, text });
+                if a.emitted >= a.params.max_tokens {
+                    fin = Some(FinishReason::Length);
+                    break; // `remaining` capped the round: last token
+                }
+            }
+            if fin.is_none() {
+                let arena_limit = self
+                    .engine
+                    .seq(id)
+                    .map(|s| s.pos as usize + 1 >= self.engine.rt.info.s_max - 1);
+                if arena_limit == Some(true) {
+                    fin = Some(FinishReason::ArenaFull);
+                }
+            }
+            if let Some(f) = fin {
+                finished.push((id, f));
+            }
+        }
+        for (id, f) in finished {
+            self.finish(id, f);
+        }
+    }
+
     /// One batched decode step (the Algorithm-1 inner loop body).
     pub fn step_once(&mut self) {
+        if self.active.is_empty() {
+            self.last_decode = None;
+            return;
+        }
+        self.spec_pass();
         if self.active.is_empty() {
             self.last_decode = None;
             return;
@@ -3174,7 +3296,7 @@ impl Scheduler {
         // aggressive 2x policy — see EXPERIMENTS.md §Perf).  Paged mode:
         // shrink eagerly — migration is host-only slot compaction (the
         // pool never moves), so there is no thrash cost to hedge against.
-        if self.cfg.allow_shrink {
+        if self.cfg.kv.allow_shrink {
             if self.engine.is_paged() {
                 let _ = self.engine.maybe_shrink();
             } else {
@@ -3208,10 +3330,10 @@ impl Scheduler {
         // is worthwhile when the destination cache for THIS sequence is
         // enabled: the text prefix cache for text sequences, the mm KV
         // cache for multimodal ones.
-        let cache_it = self.cfg.cache_finished
+        let cache_it = self.cfg.kv.cache_finished
             && match &a.mm {
-                Some(_) => self.cfg.mm_kv_cache_bytes > 0,
-                None => self.cfg.text_cache_bytes > 0,
+                Some(_) => self.cfg.kv.mm_kv_cache_bytes > 0,
+                None => self.cfg.kv.text_cache_bytes > 0,
             };
         match self.engine.remove(id, cache_it) {
             Ok(Some(kv)) => {
@@ -3254,7 +3376,12 @@ impl Scheduler {
         let _ = a.events.send(Event::Done {
             id,
             finish: reason,
-            usage: Usage { prompt_tokens: a.prompt_len, completion_tokens: a.emitted },
+            usage: Usage {
+                prompt_tokens: a.prompt_len,
+                completion_tokens: a.emitted,
+                draft_tokens_proposed: a.spec_proposed,
+                draft_tokens_accepted: a.spec_accepted,
+            },
             timing: a.timing.clone(),
         });
     }

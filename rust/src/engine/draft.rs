@@ -1,0 +1,108 @@
+//! Model-free draft proposer for speculative decoding: prompt-lookup /
+//! n-gram drafting (the "assisted generation" family).  No draft model,
+//! no extra weights — the proposal is that text repeats itself: find
+//! the most recent earlier occurrence of the sequence's current suffix
+//! n-gram and propose the tokens that followed it last time.
+//!
+//! Why this pays on this stack: decode is dispatch-bound (one XLA
+//! execution per token), while the lowered `spec_chunk_c{C}` entries
+//! score C positions in ONE dispatch with logits for every position in
+//! a single readback.  When the proposal is right (repetitive spans:
+//! code, JSON, retrieval-stuffed prompts, agent transcripts), K+1
+//! tokens advance for ~one dispatch; when it is wrong, the verifier's
+//! greedy-prefix accept keeps output byte-identical to tokenwise
+//! decoding, so drafting is a pure latency trade with zero quality
+//! risk.
+
+/// Longest suffix n-gram length tried first.  Longer matches are more
+/// specific — fewer false continuations — so the search walks from
+/// `NGRAM_MAX` down to the configured minimum and stops at the first
+/// length with any match.
+pub const NGRAM_MAX: usize = 8;
+
+/// Propose up to `k` draft tokens continuing `context`.
+///
+/// Scans for the most recent earlier occurrence of the context's
+/// longest suffix n-gram (lengths `NGRAM_MAX` down to `ngram_min`) and
+/// returns the tokens that followed it — which may reach into the
+/// suffix region itself (an overlapping match is exactly what a
+/// repeating cycle produces).  Returns `None` when no suffix of any
+/// tried length recurs earlier in the context.
+///
+/// O(n * NGRAM_MAX) worst case over the context — n is bounded by
+/// s_max (640 in the sim zoo), so this is noise next to a dispatch.
+pub fn propose(context: &[i32], k: usize, ngram_min: usize) -> Option<Vec<i32>> {
+    let n = context.len();
+    let ngram_min = ngram_min.max(1);
+    if k == 0 || n < ngram_min + 1 {
+        return None;
+    }
+    for g in (ngram_min..=NGRAM_MAX.min(n - 1)).rev() {
+        let suffix = &context[n - g..];
+        // Most recent earlier occurrence: scan candidate start positions
+        // right-to-left.  `start < n - g` excludes the suffix itself and
+        // guarantees at least one follower token.
+        for start in (0..n - g).rev() {
+            if &context[start..start + g] == suffix {
+                let follow = &context[start + g..];
+                return Some(follow[..follow.len().min(k)].to_vec());
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeating_cycle_drafts_the_continuation() {
+        // ... 5 6 7 | 5 6 7 | 5 6 -> the suffix [5, 6] last occurred at
+        // the start, followed by 7 5 6 7 5 6.
+        let ctx = [5, 6, 7, 5, 6, 7, 5, 6];
+        assert_eq!(propose(&ctx, 3, 2), Some(vec![7, 5, 6]));
+        // k caps the proposal.
+        assert_eq!(propose(&ctx, 1, 2), Some(vec![7]));
+    }
+
+    #[test]
+    fn prefers_longest_matching_suffix() {
+        let ctx = [1, 2, 3, 7, 1, 2, 9, 1, 2, 3];
+        // Longest recurring suffix is [1, 2, 3] (g=3, at pos 0),
+        // followed by 7 1 2 9 — NOT g=2's most recent [1, 2] -> 3.
+        assert_eq!(propose(&ctx, 4, 2), Some(vec![7, 1, 2, 9]));
+    }
+
+    #[test]
+    fn most_recent_occurrence_wins_within_a_length() {
+        let ctx = [4, 5, 1, 4, 5, 2, 4, 5];
+        // g=2 suffix [4, 5]: occurrences at 0 (-> 1) and 3 (-> 2); the
+        // most recent wins.
+        assert_eq!(propose(&ctx, 2, 2), Some(vec![2, 4]));
+    }
+
+    #[test]
+    fn no_recurrence_means_no_draft() {
+        assert_eq!(propose(&[1, 2, 3, 4, 5, 6], 4, 2), None);
+        assert_eq!(propose(&[], 4, 2), None);
+        assert_eq!(propose(&[7], 4, 2), None);
+        assert_eq!(propose(&[7, 7], 4, 3), None, "below ngram_min");
+    }
+
+    #[test]
+    fn overlapping_matches_continue_the_cycle() {
+        // The suffix [9, 9] of [9, 9, 9] matches at position 0 — the
+        // continuation overlaps the suffix region, which is exactly the
+        // repeating-cycle case prompt lookup exists for.
+        assert_eq!(propose(&[9, 9, 9], 4, 2), Some(vec![9]));
+        // With only the suffix itself present there is no EARLIER match.
+        assert_eq!(propose(&[9, 9], 4, 2), None);
+    }
+
+    #[test]
+    fn zero_k_or_tiny_context_is_none() {
+        assert_eq!(propose(&[1, 2, 1, 2], 0, 2), None);
+        assert_eq!(propose(&[1, 2], 4, 2), None, "suffix == whole context");
+    }
+}

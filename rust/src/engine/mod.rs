@@ -48,6 +48,7 @@
 //! at admission/finalize time, so greedy output is byte-identical
 //! across backends.
 
+pub mod draft;
 pub mod sampler;
 pub mod tokenizer;
 
@@ -87,6 +88,11 @@ enum KvStore {
         pool: PjRtBuffer,
         arena: SharedPageArena,
         seq_pages: HashMap<u64, PagedSeq>,
+        /// Dedicated scratch pages for the speculative-verify packed
+        /// logits readback (`spec_chunk_paged_c{C}`): allocated lazily
+        /// on the first spec round, never named by any block table,
+        /// held for the engine's lifetime.
+        spec_scratch: Option<PageSet>,
     },
 }
 
@@ -111,6 +117,29 @@ pub struct EngineStats {
     pub page_adopts: u64,
     /// Admissions served entirely by page pins — no device KV copy.
     pub zero_copy_admits: u64,
+    /// Speculative verify rounds dispatched.
+    pub spec_rounds: u64,
+    /// Draft tokens scored by those rounds.
+    pub spec_drafts_proposed: u64,
+    /// Draft tokens whose greedy argmax matched (accepted).
+    pub spec_drafts_accepted: u64,
+    /// Tokens emitted through speculation (accepted drafts + the bonus
+    /// token each round yields).
+    pub spec_tokens: u64,
+}
+
+/// Outcome of one speculative verify round ([`TextEngine::spec_step`]).
+#[derive(Debug, Clone)]
+pub struct SpecRound {
+    /// Greedy-exact tokens this round produced, in emission order:
+    /// the accepted drafts followed by the verifier's bonus token
+    /// (always at least one).  The caller MUST consume every entry —
+    /// the engine has already advanced the sequence past them.
+    pub tokens: Vec<i32>,
+    /// Draft tokens actually scored (after headroom clamping).
+    pub drafted: usize,
+    /// Draft tokens whose greedy argmax matched.
+    pub accepted: usize,
 }
 
 /// Point-in-time view of the paged KV pool for /metrics.
@@ -186,18 +215,69 @@ fn cow_block(
     Ok(())
 }
 
+/// Greedy accept loop over packed verifier rows.  `fed` is the chunk
+/// that was scored: `[next_token, d_1..d_K]`; row `i` of `rows` is the
+/// model's logits after feeding `fed[0..=i]`.  Emits `r_i = argmax(row
+/// i)` while each draft matches (`r_i == d_{i+1}`), then one bonus
+/// token from the first mismatching row — so every round yields at
+/// least one token and the emitted stream equals tokenwise greedy
+/// decode exactly.  Truncates just past `stop` so nothing is emitted
+/// after EOS.  Returns (emitted tokens, accepted draft count); the
+/// number of KV positions consumed is `tokens.len()` (each emitted
+/// token corresponds to one fed position: `next_token` plus the
+/// accepted drafts).
+fn spec_accept(rows: &[f32], vocab: usize, fed: &[i32], stop: Option<i32>) -> (Vec<i32>, usize) {
+    let k = fed.len() - 1;
+    let mut tokens = Vec::with_capacity(k + 1);
+    let mut accepted = 0usize;
+    for i in 0..=k {
+        let r = sampler::argmax(&rows[i * vocab..(i + 1) * vocab]);
+        tokens.push(r);
+        if stop == Some(r) {
+            break;
+        }
+        if i < k && r == fed[i + 1] {
+            accepted += 1;
+        } else {
+            break;
+        }
+    }
+    (tokens, accepted)
+}
+
 pub struct TextEngine {
     pub rt: ModelRuntime,
     bucket: usize,
     store: KvStore,
     slots: Vec<Option<u64>>,
     seqs: HashMap<u64, SeqState>,
+    /// Arena-backend host-side last-logits overrides: a speculative
+    /// verify repurposes the slot's plane-0 mailbox as a packed
+    /// readback, so until the next decode step rebuilds the mailbox,
+    /// these carry the affected sequences' true last logits (the arena
+    /// analog of `PagedSeq::last_logits`).  Cleared by every decode
+    /// step.
+    arena_logits: HashMap<u64, Vec<f32>>,
     pub stats: EngineStats,
 }
 
 impl TextEngine {
-    /// Slot-arena backend (the pre-paging default).
+    /// Default constructor: the paged backend whenever the artifacts
+    /// carry the paged-KV entries, the dense slot arena otherwise.
+    /// Library embedders get the same default the CLI ships
+    /// (`--kv paged`); callers that specifically want arena semantics
+    /// use [`TextEngine::new_arena`].
     pub fn new(rt: ModelRuntime) -> Result<Self> {
+        if rt.has_paged_kv() {
+            Self::new_paged(rt)
+        } else {
+            Self::new_arena(rt)
+        }
+    }
+
+    /// Slot-arena backend (the pre-paging default, kept for ablations
+    /// and as the fallback for artifacts without paged entries).
+    pub fn new_arena(rt: ModelRuntime) -> Result<Self> {
         let bucket = *rt
             .info
             .decode_buckets
@@ -210,6 +290,7 @@ impl TextEngine {
             store: KvStore::Arena { arena },
             slots: vec![None; bucket],
             seqs: HashMap::new(),
+            arena_logits: HashMap::new(),
             stats: EngineStats::default(),
         })
     }
@@ -242,9 +323,15 @@ impl TextEngine {
         Ok(TextEngine {
             rt,
             bucket,
-            store: KvStore::Paged { pool, arena, seq_pages: HashMap::new() },
+            store: KvStore::Paged {
+                pool,
+                arena,
+                seq_pages: HashMap::new(),
+                spec_scratch: None,
+            },
             slots: vec![None; bucket],
             seqs: HashMap::new(),
+            arena_logits: HashMap::new(),
             stats: EngineStats::default(),
         })
     }
@@ -293,7 +380,7 @@ impl TextEngine {
         &mut EngineStats,
     )> {
         match &mut self.store {
-            KvStore::Paged { pool, arena, seq_pages } => {
+            KvStore::Paged { pool, arena, seq_pages, .. } => {
                 Ok((&self.rt, pool, arena, seq_pages, &mut self.stats))
             }
             KvStore::Arena { .. } => bail!("engine is not in paged mode"),
@@ -338,7 +425,13 @@ impl TextEngine {
     /// captured them at extraction — full hits never touch the device).
     pub fn cached_logits(&self, kv: &CachedKv) -> Result<Vec<f32>> {
         match &kv.backing {
-            KvBacking::Dense { kv_one, trim } => {
+            KvBacking::Dense { kv_one, trim, logits } => {
+                // Post-speculation checkpoints carry their logits
+                // host-side (the mailbox plane holds a stale packed
+                // readback) — the override wins even through trim.
+                if let Some(l) = logits {
+                    return Ok(l.clone());
+                }
                 if trim.is_some() {
                     bail!("logits readback from a trimmed KV state (expand it first)");
                 }
@@ -375,12 +468,17 @@ impl TextEngine {
                     .ok_or_else(|| anyhow!("paged KV state cannot enter the slot arena"))?;
                 *arena = self.rt.inject(self.bucket, arena, kv_one, slot)?;
                 self.stats.injects += 1;
+                // Stale-mailbox checkpoints keep their logits host-side
+                // until the next decode step rebuilds the mailbox.
+                if let Some(l) = kv.dense_logits() {
+                    self.arena_logits.insert(id, l.clone());
+                }
             }
-            KvStore::Paged { pool, arena, seq_pages } => {
+            KvStore::Paged { pool, arena, seq_pages, .. } => {
                 let page = self.rt.info.kv_page_size;
                 let nblk = self.rt.info.kv_blocks_per_seq();
                 match &kv.backing {
-                    KvBacking::Dense { kv_one, trim } => {
+                    KvBacking::Dense { kv_one, trim, .. } => {
                         if trim.is_some() {
                             bail!("trimmed KV state cannot be adopted onto pages");
                         }
@@ -394,7 +492,12 @@ impl TextEngine {
                         let mb = set.mailbox.unwrap();
                         *pool = self.rt.adopt_paged(pool, kv_one, &set.table(nblk), mb)?;
                         self.stats.page_adopts += 1;
-                        seq_pages.insert(id, PagedSeq { set, last_logits: None });
+                        // A post-speculation checkpoint's mailbox plane
+                        // is stale — carry its host-side logits so a
+                        // re-checkpoint before the first decode step
+                        // stays correct.
+                        seq_pages
+                            .insert(id, PagedSeq { set, last_logits: kv.dense_logits().cloned() });
                     }
                     KvBacking::Paged { pages, logits } => {
                         let n = len.div_ceil(page).min(pages.pages.len());
@@ -427,10 +530,16 @@ impl TextEngine {
         let len = st.pos as usize;
         match &mut self.store {
             KvStore::Arena { arena } => {
+                let logits = self.arena_logits.remove(&id);
                 if extract_kv {
                     let kv = self.rt.extract(self.bucket, arena, st.slot)?;
                     self.stats.extracts += 1;
-                    Ok(Some(CachedKv::new(kv, len)))
+                    Ok(Some(match logits {
+                        // The slot's mailbox is a stale packed spec
+                        // readback — the true last logits ride along.
+                        Some(l) => CachedKv::new_with_logits(kv, l, len),
+                        None => CachedKv::new(kv, len),
+                    }))
                 } else {
                     Ok(None)
                 }
@@ -493,6 +602,9 @@ impl TextEngine {
             pos[st.slot] = st.pos;
         }
         *arena = self.rt.decode(self.bucket, &tokens, &pos, arena)?;
+        // Every lane's mailbox row is rebuilt by the dispatch, so any
+        // post-speculation host-side overrides are now stale themselves.
+        self.arena_logits.clear();
         self.stats.decode_steps += 1;
         self.stats.decode_slot_steps += self.seqs.len() as u64;
         self.stats.occupancy_sum += self.seqs.len() as f64 / self.bucket as f64;
@@ -593,6 +705,181 @@ impl TextEngine {
         }
         self.stats.sparse_readbacks += 1;
         Ok(StepLogits { ids, flat, vocab: v })
+    }
+
+    // ---------------------------------------------- speculative decode
+
+    /// Whether the loaded artifacts carry the speculative-verify chunk
+    /// entries for the active backend.
+    pub fn has_spec(&self) -> bool {
+        self.rt.info.has_spec_chunk(self.is_paged())
+    }
+
+    /// One speculative verify round for sequence `id`: feed
+    /// `[next_token, drafts..]` through a single `spec_chunk` dispatch,
+    /// accept the longest greedy-matched draft prefix, and advance the
+    /// sequence past every returned token.  Greedy-exact: the returned
+    /// tokens are byte-identical to what tokenwise decode would emit
+    /// (the verifier rows match the decode grid's argmax per the
+    /// chunked-catch-up contract).
+    ///
+    /// * `next_token` — the token the scheduler was about to feed (the
+    ///   previously sampled one).
+    /// * `drafts` — proposed continuation ([`draft::propose`]); clamped
+    ///   internally to bucket/arena/budget headroom.
+    /// * `max_round` — emission budget: at most this many tokens are
+    ///   returned (the request's remaining `max_tokens`).
+    /// * `stop` — stop token: the round truncates just past it so no
+    ///   tokens are emitted after EOS.
+    ///
+    /// Returns `Ok(None)` when speculation cannot run this round (no
+    /// headroom, pool exhausted, budget ≤ 1) — the caller falls back to
+    /// the normal decode step.  On `Some(round)`, the caller MUST
+    /// consume every token in `round.tokens` (push + fed-count each):
+    /// the engine has already advanced `pos` by `round.tokens.len()`,
+    /// keeping the `kv.len == prompt_len + fed` invariant.  Rejected
+    /// draft positions beyond the accepted prefix hold garbage K/V but
+    /// are never attended (attention masks by length) and are
+    /// overwritten before becoming visible; on the paged backend their
+    /// tail pages are released immediately ([`PageSet::truncate`]).
+    pub fn spec_step(
+        &mut self,
+        id: u64,
+        next_token: i32,
+        drafts: &[i32],
+        max_round: usize,
+        stop: Option<i32>,
+    ) -> Result<Option<SpecRound>> {
+        if drafts.is_empty() || max_round <= 1 || !self.has_spec() {
+            return Ok(None);
+        }
+        let s_max = self.rt.info.s_max;
+        let vocab = self.rt.info.vocab;
+        let st = self
+            .seqs
+            .get(&id)
+            .ok_or_else(|| anyhow!("sequence {id} not active"))?;
+        let (pos, slot) = (st.pos as usize, st.slot);
+        // The chunk writes its PADDED bucket: positions pos..pos+c-1
+        // must fit the KV row, else the lowered dynamic-update-slice
+        // would clamp the start index backwards over live positions.
+        // Pick the largest bucket that fits, then clamp the draft count
+        // to it and to the emission budget (≤ K+1 tokens per round).
+        let c_fit = self
+            .rt
+            .info
+            .spec_chunk_buckets
+            .iter()
+            .copied()
+            .filter(|&c| pos + c < s_max)
+            .max();
+        let Some(c_fit) = c_fit else { return Ok(None) };
+        let k = drafts.len().min(max_round - 1).min(c_fit - 1);
+        if k == 0 {
+            return Ok(None);
+        }
+        let mut fed = Vec::with_capacity(k + 1);
+        fed.push(next_token);
+        fed.extend_from_slice(&drafts[..k]);
+
+        if self.is_paged() {
+            let page = self.rt.info.kv_page_size;
+            let nblk = self.rt.info.kv_blocks_per_seq();
+            let c = self
+                .rt
+                .info
+                .spec_chunk_bucket_for(fed.len())
+                .expect("c_fit bounds the bucket");
+            let m = *self
+                .rt
+                .info
+                .spec_scratch_pages
+                .get(&c)
+                .ok_or_else(|| anyhow!("no spec scratch sizing for bucket {c}"))?;
+            let KvStore::Paged { pool, arena, seq_pages, spec_scratch } = &mut self.store
+            else {
+                unreachable!("is_paged")
+            };
+            // Lazy scratch: dedicated readback pages, never in any
+            // block table, held for the engine's lifetime.
+            if !spec_scratch.as_ref().is_some_and(|s| s.pages.len() >= m) {
+                let mut s = spec_scratch.take().unwrap_or_else(|| PageSet::new(arena));
+                let need = m - s.pages.len();
+                let grown = s.grow(need);
+                *spec_scratch = Some(s);
+                if !grown {
+                    return Ok(None); // pool too tight — fall back
+                }
+            }
+            let scratch: Vec<i32> = spec_scratch.as_ref().unwrap().pages[..m]
+                .iter()
+                .map(|&p| p as i32)
+                .collect();
+            let ps = seq_pages
+                .get_mut(&id)
+                .ok_or_else(|| anyhow!("paged sequence {id} has no pages"))?;
+            let valid_pages = pos.div_ceil(page);
+            let end = pos + fed.len() - 1;
+            if !ps.set.cover(end, page) {
+                return Ok(None); // pool exhausted — fall back
+            }
+            for j in pos / page..=end / page {
+                if cow_block(&self.rt, pool, &mut ps.set, j).is_err() {
+                    // Roll the speculative tail back and fall back to
+                    // normal decode (privatized in-range pages are
+                    // valid copies and harmless to keep).
+                    ps.set.truncate(valid_pages);
+                    return Ok(None);
+                }
+            }
+            let (new_pool, c2) =
+                self.rt
+                    .spec_verify_paged(pool, pos, &fed, &ps.set.table(nblk), &scratch)?;
+            *pool = new_pool;
+            debug_assert_eq!(c2, c);
+            let rows = self.rt.read_spec_logits_paged(pool, c, &scratch)?;
+            let (tokens, accepted) = spec_accept(&rows, vocab, &fed, stop);
+            let consumed = tokens.len();
+            // The mailbox page was not written by the spec dispatch —
+            // the true last logits ride host-side until the next decode
+            // step rebuilds it.
+            ps.last_logits = Some(rows[(consumed - 1) * vocab..consumed * vocab].to_vec());
+            // Release rejected-draft tail pages (the partial page
+            // covering the accepted prefix keeps its garbage tail —
+            // masked by length, overwritten before visible).
+            ps.set.truncate((pos + consumed).div_ceil(page));
+            self.seqs.get_mut(&id).unwrap().pos += consumed as i32;
+            self.stats.spec_rounds += 1;
+            self.stats.spec_drafts_proposed += k as u64;
+            self.stats.spec_drafts_accepted += accepted as u64;
+            self.stats.spec_tokens += consumed as u64;
+            Ok(Some(SpecRound { tokens, drafted: k, accepted }))
+        } else {
+            let KvStore::Arena { arena } = &mut self.store else {
+                unreachable!("arena backend")
+            };
+            // The spec grids run on kv_one buffers, so the slot takes
+            // an extract/inject round-trip (the paged path avoids it).
+            let kv_one = self.rt.extract(self.bucket, arena, slot)?;
+            self.stats.extracts += 1;
+            let (kv_one, c) = self.rt.spec_verify(&kv_one, pos, &fed)?;
+            let rows = self.rt.read_spec_logits(&kv_one, c)?;
+            *arena = self.rt.inject(self.bucket, arena, &kv_one, slot)?;
+            self.stats.injects += 1;
+            let (tokens, accepted) = spec_accept(&rows, vocab, &fed, stop);
+            let consumed = tokens.len();
+            // The slot's plane-0 mailbox now holds the packed readback,
+            // not the last token's logits — override host-side until
+            // the next decode step rebuilds it.
+            self.arena_logits
+                .insert(id, rows[(consumed - 1) * vocab..consumed * vocab].to_vec());
+            self.seqs.get_mut(&id).unwrap().pos += consumed as i32;
+            self.stats.spec_rounds += 1;
+            self.stats.spec_drafts_proposed += k as u64;
+            self.stats.spec_drafts_accepted += accepted as u64;
+            self.stats.spec_tokens += consumed as u64;
+            Ok(Some(SpecRound { tokens, drafted: k, accepted }))
+        }
     }
 
     // ------------------------------------------------- staged prefill

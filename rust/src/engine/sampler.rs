@@ -14,6 +14,10 @@ pub struct SamplingParams {
     pub seed: u64,
     /// Stop generation when EOS is sampled.
     pub stop_on_eos: bool,
+    /// Per-request speculative-decoding override: `None` inherits the
+    /// engine config, `Some(false)` opts this request out, `Some(true)`
+    /// requests it (still subject to greedy-only eligibility).
+    pub speculation: Option<bool>,
 }
 
 impl Default for SamplingParams {
@@ -25,6 +29,7 @@ impl Default for SamplingParams {
             max_tokens: 64,
             seed: 0,
             stop_on_eos: true,
+            speculation: None,
         }
     }
 }

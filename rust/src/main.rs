@@ -12,7 +12,9 @@ use std::sync::Arc;
 
 use umserve::cluster::{EnginePool, PoolConfig, RoutePolicy};
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, Event, Priority, PromptInput};
+use umserve::coordinator::{
+    EngineConfig, Event, KvConfig, Priority, PromptInput, SchedConfig, SpecConfig, VisionConfig,
+};
 use umserve::engine::sampler::SamplingParams;
 use umserve::runtime::ArtifactStore;
 use umserve::substrate::argparse;
@@ -28,6 +30,7 @@ USAGE:
                 [--preemption on|off] [--aging-ticks 64]
                 [--vision-stage on|off] [--vision-encodes-per-step 1]
                 [--vision-batch 8] [--mm-overlap on|off]
+                [--spec on|off] [--spec-draft-len 7] [--spec-ngram-min 2]
                 [--engines 1] [--route rr|load|affinity] [--migrate on|off]
   umserve run   --model NAME --prompt TEXT [--max-tokens 64] [--temperature 0]
                 [--top-k 0] [--top-p 1.0] [--image PATH ...via --image=path]
@@ -55,6 +58,23 @@ SCHEDULING:
   is checkpointed into the text prefix cache and the sequence resumes
   through the chunked catch-up path with identical output.
   --sched fifo restores the strict arrival-order scheduler.
+
+SPECULATION:
+  With --spec on (the default), greedy text requests decode
+  speculatively: a model-free n-gram proposer drafts up to
+  --spec-draft-len tokens from the sequence's own context (prompt
+  lookup — no draft model, no extra weights) and a single spec_chunk
+  dispatch scores every draft at once, accepting the longest
+  greedy-matched prefix.  Accepted rounds advance K+1 tokens for ~one
+  dispatch on repetitive spans (code, JSON, multi-turn histories);
+  rejected drafts roll back without a trace, so output is always
+  byte-identical to tokenwise decoding.  --spec-ngram-min sets the
+  shortest context suffix the proposer may match on.  Sampling
+  (temperature > 0) and multimodal requests bypass drafting, and a
+  per-request \"speculation\": \"on\"|\"off\" field in the OpenAI API
+  overrides the server default.  Acceptance counters surface in
+  /metrics (umserve_spec_*) and per-request in
+  usage.completion_tokens_details.
 
 MULTIMODAL:
   With --vision-stage on (the default) each vision-encoder miss is a
@@ -120,27 +140,45 @@ fn engine_config(args: &argparse::Args) -> anyhow::Result<EngineConfig> {
         &["interactive", "normal", "batch"],
     )?)
     .expect("choice() validated the class name");
+    // The ONE place the CLI assembles the grouped config from flags —
+    // every existing flat flag maps onto its subsystem group here.
     Ok(EngineConfig {
         model: args.str("model", "qwen3-0.6b"),
         artifacts_dir: args.str("artifacts", "artifacts"),
-        text_cache_bytes: if no_cache { 0 } else { args.usize("text-cache-mb", 512)? << 20 },
-        mm_emb_cache_bytes: if no_cache { 0 } else { args.usize("mm-emb-cache-mb", 256)? << 20 },
-        mm_kv_cache_bytes: if no_cache { 0 } else { args.usize("mm-kv-cache-mb", 256)? << 20 },
-        cache_finished: !no_cache,
-        allow_shrink: !args.bool("no-shrink"),
         warmup: true,
-        // 0 disables staging (inline admit-then-decode prefill).
-        prefill_chunk_tokens: args.usize("prefill-chunk", 32)?,
-        prefill_chunks_per_step: args.usize("prefill-chunks-per-step", 1)?,
-        priority_sched: args.choice("sched", "priority", &["fifo", "priority"])? == "priority",
-        preemption: args.on_off("preemption", true)?,
-        vision_stage: args.on_off("vision-stage", true)?,
-        vision_encodes_per_step: args.usize("vision-encodes-per-step", 1)?,
-        vision_batch: args.usize("vision-batch", 8)?,
-        mm_overlap: args.on_off("mm-overlap", true)?,
-        default_priority,
-        aging_ticks: args.usize("aging-ticks", 64)? as u64,
-        kv_paged: args.choice("kv", "paged", &["paged", "arena"])? == "paged",
+        sched: SchedConfig {
+            // 0 disables staging (inline admit-then-decode prefill).
+            prefill_chunk_tokens: args.usize("prefill-chunk", 32)?,
+            prefill_chunks_per_step: args.usize("prefill-chunks-per-step", 1)?,
+            priority_sched: args.choice("sched", "priority", &["fifo", "priority"])?
+                == "priority",
+            preemption: args.on_off("preemption", true)?,
+            default_priority,
+            aging_ticks: args.usize("aging-ticks", 64)? as u64,
+        },
+        vision: VisionConfig {
+            stage: args.on_off("vision-stage", true)?,
+            encodes_per_step: args.usize("vision-encodes-per-step", 1)?,
+            batch: args.usize("vision-batch", 8)?,
+            overlap: args.on_off("mm-overlap", true)?,
+        },
+        kv: KvConfig {
+            paged: args.choice("kv", "paged", &["paged", "arena"])? == "paged",
+            text_cache_bytes: if no_cache { 0 } else { args.usize("text-cache-mb", 512)? << 20 },
+            mm_emb_cache_bytes: if no_cache {
+                0
+            } else {
+                args.usize("mm-emb-cache-mb", 256)? << 20
+            },
+            mm_kv_cache_bytes: if no_cache { 0 } else { args.usize("mm-kv-cache-mb", 256)? << 20 },
+            cache_finished: !no_cache,
+            allow_shrink: !args.bool("no-shrink"),
+        },
+        spec: SpecConfig {
+            enabled: args.on_off("spec", true)?,
+            draft_len: args.usize("spec-draft-len", 7)?,
+            ngram_min: args.usize("spec-ngram-min", 2)?,
+        },
     })
 }
 
@@ -155,7 +193,7 @@ fn serve(args: &argparse::Args) -> anyhow::Result<()> {
     };
     let port = args.usize("port", 8000)?;
     let model = cfg.model.clone();
-    let default_priority = cfg.default_priority;
+    let default_priority = cfg.sched.default_priority;
     let n = pool_cfg.engines;
     eprintln!("loading model {model} ({n} engine{}) ...", if n == 1 { "" } else { "s" });
     // The pool owns the replica threads and the rebalancer; keep it
@@ -182,6 +220,7 @@ fn run(args: &argparse::Args) -> anyhow::Result<()> {
         max_tokens: args.usize("max-tokens", 64)?,
         seed: args.usize("seed", 0)? as u64,
         stop_on_eos: true,
+        speculation: None,
     };
     let prompt = match args.opt_str("image") {
         Some(path) => PromptInput::Multimodal {
@@ -191,7 +230,7 @@ fn run(args: &argparse::Args) -> anyhow::Result<()> {
         None => PromptInput::Text(prompt_text),
     };
 
-    let default_priority = cfg.default_priority;
+    let default_priority = cfg.sched.default_priority;
     let mut s = Scheduler::new(cfg)?;
     let (tx, rx) = std::sync::mpsc::channel();
     s.submit(umserve::coordinator::GenRequest {

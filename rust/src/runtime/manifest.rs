@@ -102,6 +102,14 @@ pub struct ModelInfo {
     /// runtime then only offers the dense slot arena).
     pub kv_page_size: usize,
     pub kv_pool_pages: usize,
+    /// Chunk sizes with lowered speculative-verify entries
+    /// (`spec_chunk_c{C}` / `spec_chunk_paged_c{C}` and their
+    /// `read_logits_chunk*` readbacks; empty for manifests predating
+    /// speculative decoding — the scheduler then decodes tokenwise).
+    pub spec_chunk_buckets: Vec<usize>,
+    /// Scratch pages the paged spec entry at chunk size C packs its
+    /// [C, vocab] logits readback into (keyed by C).
+    pub spec_scratch_pages: BTreeMap<usize, usize>,
     pub entries: BTreeMap<String, EntryDesc>,
 }
 
@@ -192,6 +200,32 @@ impl ModelInfo {
     /// Largest lowered chunk size (the natural `prefill_chunk_tokens`).
     pub fn max_chunk_bucket(&self) -> Option<usize> {
         self.prefill_chunk_buckets.last().copied()
+    }
+
+    /// Smallest spec-verify chunk bucket that fits `n` fed tokens
+    /// (next_token + drafts).
+    pub fn spec_chunk_bucket_for(&self, n: usize) -> Option<usize> {
+        self.spec_chunk_buckets.iter().copied().find(|&c| c >= n)
+    }
+
+    /// Largest lowered spec-verify chunk (caps draft_len at C-1).
+    pub fn max_spec_chunk_bucket(&self) -> Option<usize> {
+        self.spec_chunk_buckets.last().copied()
+    }
+
+    /// Whether this manifest carries the speculative-verify entries for
+    /// the given KV backend.
+    pub fn has_spec_chunk(&self, paged: bool) -> bool {
+        self.spec_chunk_buckets.iter().all(|&c| {
+            if paged {
+                self.has_entry(&format!("spec_chunk_paged_c{c}"))
+                    && self.has_entry(&format!("read_logits_chunk_paged_c{c}"))
+                    && self.spec_scratch_pages.contains_key(&c)
+            } else {
+                self.has_entry(&format!("spec_chunk_c{c}"))
+                    && self.has_entry(&format!("read_logits_chunk_c{c}"))
+            }
+        }) && !self.spec_chunk_buckets.is_empty()
     }
 
     /// Smallest trim grid size that keeps `n` positions AND the plane-0
@@ -407,6 +441,20 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
             Some(Json::Null) | None => 0,
             Some(j) => as_usize(j, "kv_pool_pages")?,
         },
+        // Optional: absent in pre-speculation manifests.
+        spec_chunk_buckets: match m.get("spec_chunk_buckets") {
+            Some(Json::Null) | None => Vec::new(),
+            Some(j) => usize_list(j, "spec_chunk_buckets")?,
+        },
+        spec_scratch_pages: match m.get("spec_scratch_pages") {
+            Some(Json::Null) | None => BTreeMap::new(),
+            Some(j) => j
+                .as_obj()
+                .ok_or_else(|| anyhow!("'spec_scratch_pages' must be an object"))?
+                .iter()
+                .map(|(k, v)| Ok((k.parse::<usize>()?, as_usize(v, "spec_scratch_pages")?)))
+                .collect::<Result<BTreeMap<_, _>>>()?,
+        },
         entries,
     };
     if info.decode_buckets.is_empty() {
@@ -494,6 +542,31 @@ mod tests {
             for &c in &m.prefill_chunk_buckets {
                 assert!(m.has_entry(&format!("prefill_chunk_paged_c{c}")));
             }
+        }
+    }
+
+    #[test]
+    fn spec_chunk_metadata() {
+        let store = ArtifactStore::open(artifacts_dir()).unwrap();
+        for m in store.models.values() {
+            assert_eq!(m.spec_chunk_buckets, vec![8, 16], "{}", m.name);
+            assert!(m.has_spec_chunk(false), "{}", m.name);
+            assert!(m.has_spec_chunk(true), "{}", m.name);
+            for &c in &m.spec_chunk_buckets {
+                // Packed [C, vocab] readback must fit the layouts.
+                assert!(c * m.vocab <= 2 * m.n_kv_heads * m.s_max * m.d_head, "{}", m.name);
+                let pages = m.spec_scratch_pages[&c];
+                let per = (m.n_layers + 1) * 2 * m.n_kv_heads * m.kv_page_size * m.d_head;
+                assert!(c * m.vocab <= pages * per, "{}", m.name);
+                let e = m.entry(&format!("spec_chunk_paged_c{c}")).unwrap();
+                let inputs: Vec<_> = e.inputs().collect();
+                assert_eq!(inputs[4].name, "spec_pages");
+                assert_eq!(inputs[4].shape, vec![pages]);
+            }
+            assert_eq!(m.spec_chunk_bucket_for(8), Some(8));
+            assert_eq!(m.spec_chunk_bucket_for(9), Some(16));
+            assert_eq!(m.spec_chunk_bucket_for(17), None);
+            assert_eq!(m.max_spec_chunk_bucket(), Some(16));
         }
     }
 

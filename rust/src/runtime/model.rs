@@ -331,6 +331,58 @@ impl ModelRuntime {
         )
     }
 
+    /// Whether this model's artifacts carry the speculative-verify
+    /// entries for the active KV backend.
+    pub fn has_spec_chunk(&self, paged: bool) -> bool {
+        self.info.has_spec_chunk(paged)
+    }
+
+    /// Speculative verify over a dense kv_one: score `tokens`
+    /// (`[next_token, draft_1..draft_K]`) at absolute positions
+    /// `start ..` in ONE dispatch, packing every row's logits into
+    /// plane 0 for `read_spec_logits`.  Row i is fp-equivalent — with
+    /// identical greedy argmax — to the tokenwise decode step that fed
+    /// `tokens[0..=i]` (the chunked-catch-up equivalence contract), so
+    /// accepting the longest matched argmax prefix is EXACT for greedy
+    /// sampling.  The kv_one is donated; its K/V gains all fed rows
+    /// (rows past the accepted prefix are garbage the attention mask
+    /// hides, exactly like arena positions >= len).  NB: the returned
+    /// buffer's plane-0 mailbox holds the spec packing, NOT a single
+    /// logits row — the caller must track last-logits host-side until
+    /// the next decode/chunk dispatch rebuilds the mailbox.
+    pub fn spec_verify(
+        &self,
+        kv_one: &PjRtBuffer,
+        start: usize,
+        tokens: &[i32],
+    ) -> Result<(PjRtBuffer, usize)> {
+        let c = self
+            .info
+            .spec_chunk_bucket_for(tokens.len())
+            .ok_or_else(|| anyhow!("spec chunk of {} tokens exceeds buckets", tokens.len()))?;
+        let mut padded = tokens.to_vec();
+        padded.resize(c, 0);
+        let out = self.run(
+            &format!("spec_chunk_c{c}"),
+            &[
+                Input::I32(padded, vec![c]),
+                Input::I32(vec![start as i32], vec![]),
+                Input::I32(vec![tokens.len() as i32], vec![]),
+                Input::Buffer(kv_one),
+            ],
+        )?;
+        Ok((out, c))
+    }
+
+    /// Read back a `spec_verify` packing: [c, vocab] row-major.
+    pub fn read_spec_logits(&self, kv_one: &PjRtBuffer, c: usize) -> Result<Vec<f32>> {
+        let buf = self.run(&format!("read_logits_chunk_c{c}"), &[Input::Buffer(kv_one)])?;
+        let lit = buf.to_literal_sync()?;
+        let v = lit.to_vec::<f32>()?;
+        self.stats.borrow_mut().host_readback_bytes += (v.len() * 4) as u64;
+        Ok(v)
+    }
+
     /// Whether this model's artifacts carry the chunked-prefill entries
     /// (manifests predating the staged pipeline don't).
     pub fn has_chunk_prefill(&self) -> bool {
@@ -577,6 +629,68 @@ impl ModelRuntime {
                 Input::Buffer(pool),
             ],
         )
+    }
+
+    /// Speculative verify over the page pool (see `spec_verify` for the
+    /// row semantics).  The caller must have covered positions
+    /// `start .. start+tokens.len()` with PRIVATE pages in `table`
+    /// (copy-on-write any shared tail first): the dispatch scatters
+    /// draft K/V into them, and a rejected draft's page-tail writes are
+    /// rolled back host-side by releasing the pages past the accepted
+    /// length.  `scratch` are the model's dedicated spec scratch pages
+    /// (never in any block table); the packed logits land there for
+    /// `read_spec_logits_paged`.  The pool is donated.
+    pub fn spec_verify_paged(
+        &self,
+        pool: &PjRtBuffer,
+        start: usize,
+        tokens: &[i32],
+        table: &[i32],
+        scratch: &[i32],
+    ) -> Result<(PjRtBuffer, usize)> {
+        let c = self
+            .info
+            .spec_chunk_bucket_for(tokens.len())
+            .ok_or_else(|| anyhow!("spec chunk of {} tokens exceeds buckets", tokens.len()))?;
+        let nblk = self.info.kv_blocks_per_seq();
+        debug_assert_eq!(table.len(), nblk);
+        let m = *self
+            .info
+            .spec_scratch_pages
+            .get(&c)
+            .ok_or_else(|| anyhow!("no spec_scratch_pages for c={c}"))?;
+        debug_assert_eq!(scratch.len(), m);
+        let mut padded = tokens.to_vec();
+        padded.resize(c, 0);
+        let out = self.run(
+            &format!("spec_chunk_paged_c{c}"),
+            &[
+                Input::I32(padded, vec![c]),
+                Input::I32(vec![start as i32], vec![]),
+                Input::I32(vec![tokens.len() as i32], vec![]),
+                Input::I32(table.to_vec(), vec![nblk]),
+                Input::I32(scratch.to_vec(), vec![m]),
+                Input::Buffer(pool),
+            ],
+        )?;
+        Ok((out, c))
+    }
+
+    /// Read back a `spec_verify_paged` packing: [c, vocab] row-major.
+    pub fn read_spec_logits_paged(
+        &self,
+        pool: &PjRtBuffer,
+        c: usize,
+        scratch: &[i32],
+    ) -> Result<Vec<f32>> {
+        let buf = self.run(
+            &format!("read_logits_chunk_paged_c{c}"),
+            &[Input::Buffer(pool), Input::I32(scratch.to_vec(), vec![scratch.len()])],
+        )?;
+        let lit = buf.to_literal_sync()?;
+        let v = lit.to_vec::<f32>()?;
+        self.stats.borrow_mut().host_readback_bytes += (v.len() * 4) as u64;
+        Ok(v)
     }
 
     /// Scatter a dense kv_one onto a sequence's pages (the one-shot

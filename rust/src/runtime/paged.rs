@@ -290,6 +290,22 @@ impl PageSet {
         Some((src, dst))
     }
 
+    /// Release every KV page past the first `n_pages` — the
+    /// speculative-decoding rollback: a rejected draft's page-tail
+    /// writes become garbage the moment the pages return to the free
+    /// list (the attention mask already hides positions >= len, so
+    /// pages still covering accepted positions need no scrubbing).
+    /// The mailbox, if any, is untouched.
+    pub fn truncate(&mut self, n_pages: usize) {
+        if n_pages >= self.pages.len() {
+            return;
+        }
+        let mut a = self.arena.borrow_mut();
+        for p in self.pages.drain(n_pages..) {
+            a.release(p);
+        }
+    }
+
     /// Block table padded to `n_blocks` entries with the page-0 sink —
     /// exactly the i32 vector the paged executables take.
     pub fn table(&self, n_blocks: usize) -> Vec<i32> {
@@ -394,6 +410,29 @@ mod tests {
         assert_eq!(s.pages.len(), 10);
         let t = s.table(10);
         assert!(t.iter().all(|&p| p > 0));
+    }
+
+    #[test]
+    fn truncate_releases_draft_tail_pages() {
+        let a = arena(16);
+        let mut s = PageSet::new(&a);
+        assert!(s.grow(4));
+        assert!(s.alloc_mailbox());
+        let free_before = a.borrow().free_pages();
+        // Rejected draft: roll the set back to its accepted coverage.
+        s.truncate(2);
+        assert_eq!(s.pages.len(), 2);
+        assert!(s.mailbox.is_some(), "mailbox survives rollback");
+        assert_eq!(a.borrow().free_pages(), free_before + 2);
+        // No-op when already within bounds.
+        s.truncate(5);
+        assert_eq!(s.pages.len(), 2);
+        a.borrow().check_invariants();
+        // A shared page released by truncate stays alive for its pin.
+        let pin = s.share_prefix(2);
+        s.truncate(1);
+        assert_eq!(a.borrow().refcount(pin.pages[1]), 1);
+        a.borrow().check_invariants();
     }
 
     #[test]

@@ -76,6 +76,23 @@ fn parse_priority(body: &Json, default: Priority) -> Result<Priority, (u16, Stri
     }
 }
 
+/// Top-level `"speculation": "on" | "off"` request field (bools also
+/// accepted), mirroring `priority`: absent/null inherits the engine's
+/// configured default, unknown values are a 400.  Only greedy requests
+/// can actually speculate — for sampled requests "on" is a no-op.
+fn parse_speculation(body: &Json) -> Result<Option<bool>, (u16, String)> {
+    match body.get("speculation") {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(Json::Str(s)) => match s.as_str() {
+            "on" => Ok(Some(true)),
+            "off" => Ok(Some(false)),
+            _ => Err(bad(format!("unknown speculation '{s}' (expected on|off)"))),
+        },
+        Some(_) => Err(bad("'speculation' must be \"on\", \"off\", or a bool")),
+    }
+}
+
 fn parse_params(body: &Json) -> SamplingParams {
     SamplingParams {
         temperature: body
@@ -91,6 +108,7 @@ fn parse_params(body: &Json) -> SamplingParams {
             .clamp(1, 512),
         seed: body.get("seed").and_then(|j| j.as_i64()).unwrap_or(0) as u64,
         stop_on_eos: true,
+        speculation: None,
     }
 }
 
@@ -149,7 +167,8 @@ fn url_to_source(url: &str) -> Result<ImageSource, (u16, String)> {
 
 fn chat_completions(state: &ServerState, req: &Request, rw: &mut ResponseWriter<'_>) -> HandlerResult {
     let body = parse(req.body_str().map_err(bad)?).map_err(|e| bad(e.to_string()))?;
-    let params = parse_params(&body);
+    let mut params = parse_params(&body);
+    params.speculation = parse_speculation(&body)?;
     let priority = parse_priority(&body, state.default_priority)?;
     let stream = body.get("stream").and_then(|j| j.as_bool()).unwrap_or(false);
     let (images, text) = messages_to_prompt(&body)?;
@@ -163,7 +182,8 @@ fn chat_completions(state: &ServerState, req: &Request, rw: &mut ResponseWriter<
 
 fn completions(state: &ServerState, req: &Request, rw: &mut ResponseWriter<'_>) -> HandlerResult {
     let body = parse(req.body_str().map_err(bad)?).map_err(|e| bad(e.to_string()))?;
-    let params = parse_params(&body);
+    let mut params = parse_params(&body);
+    params.speculation = parse_speculation(&body)?;
     let priority = parse_priority(&body, state.default_priority)?;
     let stream = body.get("stream").and_then(|j| j.as_bool()).unwrap_or(false);
     let prompt = body
@@ -229,6 +249,7 @@ fn run_request(
                             ("object", Json::str("umserve.usage")),
                             ("prompt_tokens", Json::num(usage.prompt_tokens as f64)),
                             ("completion_tokens", Json::num(usage.completion_tokens as f64)),
+                            ("completion_tokens_details", usage_details(&usage)),
                         ])
                         .to_string(),
                     );
@@ -299,11 +320,22 @@ fn run_request(
                         "total_tokens",
                         Json::num((usage.prompt_tokens + usage.completion_tokens) as f64),
                     ),
+                    ("completion_tokens_details", usage_details(&usage)),
                 ]),
             ),
         ]);
         rw.send_json(200, &body).map_err(|e| (500u16, e.to_string()))
     }
+}
+
+/// OpenAI-style `usage.completion_tokens_details`: how many draft
+/// tokens the speculative decoder proposed and how many the verifier
+/// accepted for this request (both 0 when speculation never engaged).
+fn usage_details(usage: &crate::coordinator::Usage) -> Json {
+    Json::obj(vec![
+        ("draft_tokens_proposed", Json::num(usage.draft_tokens_proposed as f64)),
+        ("draft_tokens_accepted", Json::num(usage.draft_tokens_accepted as f64)),
+    ])
 }
 
 fn stream_chunk(id: &str, model: &str, chat: bool, delta: Json, finish: Option<&str>) -> Json {
@@ -460,5 +492,19 @@ mod tests {
         let p2 = parse_params(&parse("{}").unwrap());
         assert_eq!(p2.max_tokens, 64);
         assert_eq!(p2.temperature, 0.0);
+    }
+
+    #[test]
+    fn speculation_parsing() {
+        assert_eq!(parse_speculation(&parse(r#"{"speculation": "on"}"#).unwrap()), Ok(Some(true)));
+        assert_eq!(
+            parse_speculation(&parse(r#"{"speculation": "off"}"#).unwrap()),
+            Ok(Some(false))
+        );
+        assert_eq!(parse_speculation(&parse(r#"{"speculation": true}"#).unwrap()), Ok(Some(true)));
+        assert_eq!(parse_speculation(&parse("{}").unwrap()), Ok(None));
+        assert_eq!(parse_speculation(&parse(r#"{"speculation": null}"#).unwrap()), Ok(None));
+        assert!(parse_speculation(&parse(r#"{"speculation": "fast"}"#).unwrap()).is_err());
+        assert!(parse_speculation(&parse(r#"{"speculation": 3}"#).unwrap()).is_err());
     }
 }

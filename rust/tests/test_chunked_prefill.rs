@@ -15,8 +15,9 @@
 
 use std::collections::HashMap;
 
+use umserve::cache::CachedKv;
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, Event, GenRequest, PromptInput};
+use umserve::coordinator::{EngineConfig, Event, GenRequest, KvConfig, PromptInput, SchedConfig};
 use umserve::engine::sampler::{argmax, SamplingParams};
 use umserve::engine::TextEngine;
 use umserve::multimodal::image::{generate_image, ImageSource};
@@ -151,14 +152,19 @@ fn cached_kv_survives_catch_up() {
 #[test]
 fn staged_prefill_reproduces_inline_outputs() {
     let base = EngineConfig {
-        text_cache_bytes: 0,
-        cache_finished: false,
+        kv: KvConfig { text_cache_bytes: 0, cache_finished: false, ..Default::default() },
         ..cfg("qwen3-0.6b")
     };
-    let mut chunked =
-        Scheduler::new(EngineConfig { prefill_chunk_tokens: 32, ..base.clone() }).unwrap();
-    let mut inline_ =
-        Scheduler::new(EngineConfig { prefill_chunk_tokens: 0, ..base }).unwrap();
+    let mut chunked = Scheduler::new(EngineConfig {
+        sched: SchedConfig { prefill_chunk_tokens: 32, ..base.sched.clone() },
+        ..base.clone()
+    })
+    .unwrap();
+    let mut inline_ = Scheduler::new(EngineConfig {
+        sched: SchedConfig { prefill_chunk_tokens: 0, ..base.sched.clone() },
+        ..base
+    })
+    .unwrap();
 
     // Mixed lengths: below, at, and well above one chunk.
     for (i, len) in [(0u64, 12usize), (1, 100), (2, 300)] {
@@ -180,10 +186,16 @@ fn staged_prefill_reproduces_inline_outputs() {
 #[test]
 fn staged_mm_prefill_reproduces_inline_outputs() {
     let base = cfg("qwen3-vl-4b");
-    let mut chunked =
-        Scheduler::new(EngineConfig { prefill_chunk_tokens: 32, ..base.clone() }).unwrap();
-    let mut inline_ =
-        Scheduler::new(EngineConfig { prefill_chunk_tokens: 0, ..base }).unwrap();
+    let mut chunked = Scheduler::new(EngineConfig {
+        sched: SchedConfig { prefill_chunk_tokens: 32, ..base.sched.clone() },
+        ..base.clone()
+    })
+    .unwrap();
+    let mut inline_ = Scheduler::new(EngineConfig {
+        sched: SchedConfig { prefill_chunk_tokens: 0, ..base.sched.clone() },
+        ..base
+    })
+    .unwrap();
     let img = generate_image(33, 224);
     let mk = || PromptInput::Multimodal {
         images: vec![ImageSource::Bytes(img.encode_raw())],
@@ -211,9 +223,8 @@ fn staged_mm_prefill_reproduces_inline_outputs() {
 #[test]
 fn staged_prefill_interleaves_with_decode() {
     let mut s = Scheduler::new(EngineConfig {
-        text_cache_bytes: 0,
-        cache_finished: false,
-        prefill_chunk_tokens: 32,
+        kv: KvConfig { text_cache_bytes: 0, cache_finished: false, ..Default::default() },
+        sched: SchedConfig { prefill_chunk_tokens: 32, ..Default::default() },
         ..cfg("qwen3-0.6b")
     })
     .unwrap();
@@ -256,7 +267,7 @@ fn staged_prefill_interleaves_with_decode() {
 #[test]
 fn identical_staged_prompts_coalesce() {
     let mut s = Scheduler::new(EngineConfig {
-        prefill_chunk_tokens: 32,
+        sched: SchedConfig { prefill_chunk_tokens: 32, ..Default::default() },
         ..cfg("qwen3-0.6b")
     })
     .unwrap();
@@ -282,7 +293,7 @@ fn identical_staged_prompts_coalesce() {
 fn shrink_hysteresis_prevents_thrash() {
     let mut e = engine("qwen3-0.6b");
     for id in 1..=5u64 {
-        let kv = e.prefill(&[1, id as i32 + 3, 9]).unwrap();
+        let kv = CachedKv::new(e.prefill(&[1, id as i32 + 3, 9]).unwrap(), 3);
         e.admit(id, &kv, 3).unwrap();
     }
     assert_eq!(e.bucket(), 8);
@@ -293,7 +304,7 @@ fn shrink_hysteresis_prevents_thrash() {
     for _ in 0..3 {
         e.remove(5, false).unwrap();
         assert!(!e.maybe_shrink_with_hysteresis(4).unwrap());
-        let kv = e.prefill(&[1, 7, 11]).unwrap();
+        let kv = CachedKv::new(e.prefill(&[1, 7, 11]).unwrap(), 3);
         e.admit(5, &kv, 3).unwrap();
     }
     assert_eq!(e.stats.migrations, grow_migrations, "grow/shrink thrash detected");
@@ -319,11 +330,11 @@ fn shrink_hysteresis_prevents_thrash() {
 #[test]
 fn sparse_readback_is_exact() {
     let mut e = engine("qwen3-0.6b");
-    let kv = e.prefill(&[1, 10, 20, 30]).unwrap();
+    let kv = CachedKv::new(e.prefill(&[1, 10, 20, 30]).unwrap(), 4);
     e.admit(42, &kv, 4).unwrap();
     // Grow to bucket 8, then empty all but one slot -> sparse readback.
     for id in 100..104u64 {
-        let k = e.prefill(&[2, id as i32 % 50 + 4]).unwrap();
+        let k = CachedKv::new(e.prefill(&[2, id as i32 % 50 + 4]).unwrap(), 2);
         e.admit(id, &k, 2).unwrap();
     }
     for id in 100..104u64 {

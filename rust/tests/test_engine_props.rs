@@ -6,6 +6,7 @@
 
 use std::collections::HashMap;
 
+use umserve::cache::CachedKv;
 use umserve::engine::sampler::Rng;
 use umserve::engine::TextEngine;
 use umserve::runtime::{ArtifactStore, ModelRuntime};
@@ -43,7 +44,7 @@ fn randomized_engine_operations_hold_invariants() {
                     let plen = (rng.next_u64() % 8 + 2) as usize;
                     let prompt: Vec<i32> =
                         (0..plen).map(|i| 4 + ((id as i32 * 13 + i as i32) % 1000)).collect();
-                    let kv = e.prefill(&prompt).unwrap();
+                    let kv = CachedKv::new(e.prefill(&prompt).unwrap(), plen);
                     e.admit(id, &kv, plen).unwrap();
                     // Double admit must fail.
                     assert!(e.admit(id, &kv, plen).is_err());
@@ -91,7 +92,7 @@ fn randomized_engine_operations_hold_invariants() {
 fn bucket_migration_preserves_sequences() {
     let mut e = engine();
     let prompt = [1i32, 10, 20, 30];
-    let kv = e.prefill(&prompt).unwrap();
+    let kv = CachedKv::new(e.prefill(&prompt).unwrap(), prompt.len());
     e.admit(42, &kv, prompt.len()).unwrap();
 
     // Expected continuation from the oracle (see smoke_load):
@@ -105,7 +106,7 @@ fn bucket_migration_preserves_sequences() {
     assert_eq!(e.bucket(), 1);
 
     // Force a grow migration by admitting a second sequence.
-    let kv2 = e.prefill(&[2, 6, 8]).unwrap();
+    let kv2 = CachedKv::new(e.prefill(&[2, 6, 8]).unwrap(), 3);
     e.admit(7, &kv2, 3).unwrap();
     assert_eq!(e.bucket(), 2, "admitting a 2nd sequence must grow the bucket");
     assert_eq!(e.stats.migrations, 1);
@@ -135,7 +136,7 @@ fn arena_overflow_is_rejected_not_corrupted() {
     let mut e = engine();
     let s_max = e.rt.info.s_max;
     // A sequence whose length is near the arena limit cannot be admitted.
-    let kv = e.prefill(&[1, 2, 3]).unwrap();
+    let kv = CachedKv::new(e.prefill(&[1, 2, 3]).unwrap(), s_max - 1);
     assert!(e.admit(1, &kv, s_max - 1).is_err());
     assert_eq!(e.active(), 0);
 }

@@ -8,7 +8,7 @@ use std::time::Instant;
 
 use umserve::bench_harness::synth_prompt;
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, Event, GenRequest, Priority, PromptInput};
+use umserve::coordinator::{EngineConfig, Event, GenRequest, KvConfig, Priority, PromptInput, SchedConfig};
 use umserve::engine::sampler::SamplingParams;
 
 fn cfg(preemption: bool) -> EngineConfig {
@@ -16,13 +16,15 @@ fn cfg(preemption: bool) -> EngineConfig {
         model: "qwen3-0.6b".into(),
         artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
         warmup: false,
-        cache_finished: false,
-        allow_shrink: false,
-        prefill_chunk_tokens: 32,
-        prefill_chunks_per_step: 1,
-        priority_sched: true,
-        preemption,
-        aging_ticks: 0,
+        sched: SchedConfig {
+            prefill_chunk_tokens: 32,
+            prefill_chunks_per_step: 1,
+            priority_sched: true,
+            preemption,
+            aging_ticks: 0,
+            ..Default::default()
+        },
+        kv: KvConfig { cache_finished: false, allow_shrink: false, ..Default::default() },
         ..Default::default()
     }
 }
@@ -188,7 +190,11 @@ fn interactive_waits_behind_at_most_one_chunk() {
 /// 2 * aging_ticks ticks plus a bounded drain of already-queued work.
 #[test]
 fn aging_admits_batch_job_under_interactive_flood() {
-    let mut s = Scheduler::new(EngineConfig { aging_ticks: 4, ..cfg(true) }).unwrap();
+    let mut s = Scheduler::new({
+        let mut c = cfg(true);
+        c.sched.aging_ticks = 4;
+        c
+    }).unwrap();
     let batch_rx = submit(&mut s, 50, 64, 2, Priority::Batch);
     let mut flood_rxs = Vec::new();
     let mut batch_done_at = None;
@@ -241,10 +247,11 @@ fn no_preemption_keeps_started_prefill_at_front() {
 /// FIFO mode (priority_sched off) ignores classes entirely.
 #[test]
 fn fifo_mode_ignores_priority_classes() {
-    let mut s = Scheduler::new(EngineConfig {
-        priority_sched: false,
-        preemption: false,
-        ..cfg(false)
+    let mut s = Scheduler::new({
+        let mut c = cfg(false);
+        c.sched.priority_sched = false;
+        c.sched.preemption = false;
+        c
     })
     .unwrap();
     // Two batch jobs ahead of one interactive; FIFO admits in arrival

@@ -7,7 +7,7 @@
 use std::collections::HashMap;
 
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, Event, FinishReason, Priority, PromptInput};
+use umserve::coordinator::{EngineConfig, Event, FinishReason, KvConfig, Priority, PromptInput};
 use umserve::engine::sampler::SamplingParams;
 use umserve::multimodal::image::{generate_image, ImageSource};
 
@@ -121,7 +121,10 @@ fn text_prefix_cache_partial_hit_catches_up_correctly() {
     assert!(tm.prefix_hit_tokens > 0, "expected a partial hit");
     assert!(!tm.kv_full_hit);
     // Correctness: a cold scheduler must produce identical tokens.
-    let mut cold = Scheduler::new(EngineConfig { text_cache_bytes: 0, ..cfg("qwen3-0.6b") }).unwrap();
+    let mut cold = Scheduler::new(EngineConfig {
+        kv: KvConfig { text_cache_bytes: 0, ..Default::default() },
+        ..cfg("qwen3-0.6b")
+    }).unwrap();
     let (cold_tokens, _, _, _) =
         run_one(&mut cold, PromptInput::Tokens(extended), SamplingParams::greedy(6));
     assert_eq!(hit_tokens, cold_tokens, "catch-up path diverged from cold prefill");
@@ -231,7 +234,7 @@ fn multimodal_cache_hits_across_transports() {
 fn mm_ablation_toggles_change_behaviour() {
     // Vision-embedding cache disabled: second turn re-encodes.
     let mut s = Scheduler::new(EngineConfig {
-        mm_emb_cache_bytes: 0,
+        kv: KvConfig { mm_emb_cache_bytes: 0, ..Default::default() },
         ..cfg("qwen3-vl-4b")
     })
     .unwrap();
@@ -246,8 +249,7 @@ fn mm_ablation_toggles_change_behaviour() {
     assert!(tm2.kv_full_hit);
 
     let mut s2 = Scheduler::new(EngineConfig {
-        mm_emb_cache_bytes: 0,
-        mm_kv_cache_bytes: 0,
+        kv: KvConfig { mm_emb_cache_bytes: 0, mm_kv_cache_bytes: 0, ..Default::default() },
         ..cfg("qwen3-vl-4b")
     })
     .unwrap();
@@ -268,6 +270,7 @@ fn sampling_params_respected() {
         max_tokens: 12,
         seed: 7,
         stop_on_eos: true,
+        speculation: None,
     };
     let (t1, _, _, _) = run_one(&mut s, PromptInput::Tokens(vec![1, 2, 3]), p.clone());
     let (t2, _, _, _) = run_one(&mut s, PromptInput::Tokens(vec![1, 2, 3]), p);
@@ -347,7 +350,10 @@ fn paged_kv_matches_arena_byte_for_byte() {
     // copy-on-write sharing changes WHERE state lives, never WHAT gets
     // generated — greedy output must match the dense slot arena (and
     // the reference oracle) token for token.
-    let mut p = Scheduler::new(EngineConfig { kv_paged: true, ..cfg("qwen3-0.6b") }).unwrap();
+    let mut p = Scheduler::new(EngineConfig {
+        kv: KvConfig { paged: true, ..Default::default() },
+        ..cfg("qwen3-0.6b")
+    }).unwrap();
     let mut a = Scheduler::new(cfg("qwen3-0.6b")).unwrap();
     assert!(p.snapshot().kv_pool.is_some(), "paged mode must surface pool stats");
     assert!(a.snapshot().kv_pool.is_none(), "arena mode must not");
@@ -403,7 +409,10 @@ fn paged_kv_matches_arena_byte_for_byte() {
 
 #[test]
 fn paged_prefix_cache_hits_are_zero_copy_and_identical() {
-    let mut s = Scheduler::new(EngineConfig { kv_paged: true, ..cfg("qwen3-0.6b") }).unwrap();
+    let mut s = Scheduler::new(EngineConfig {
+        kv: KvConfig { paged: true, ..Default::default() },
+        ..cfg("qwen3-0.6b")
+    }).unwrap();
     let shared: Vec<i32> = (1..64).map(|i| (i * 11) % 1500 + 4).collect();
     let (t1, _, _, _) =
         run_one(&mut s, PromptInput::Tokens(shared.clone()), SamplingParams::greedy(6));
@@ -433,9 +442,12 @@ fn paged_prefix_cache_hits_are_zero_copy_and_identical() {
 
     // Correctness anchor: a cold cacheless paged scheduler agrees.
     let mut cold = Scheduler::new(EngineConfig {
-        kv_paged: true,
-        text_cache_bytes: 0,
-        cache_finished: false,
+        kv: KvConfig {
+            paged: true,
+            text_cache_bytes: 0,
+            cache_finished: false,
+            ..Default::default()
+        },
         ..cfg("qwen3-0.6b")
     })
     .unwrap();

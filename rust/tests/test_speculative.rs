@@ -1,0 +1,353 @@
+//! Speculative decoding over the catch-up grids: engine-level verify
+//! rounds must be byte-identical to tokenwise decode (full-accept and
+//! rejection paths, both KV backends), rejected paged drafts must roll
+//! their tail pages back, and the scheduler lane must preserve greedy
+//! output exactly with speculation on or off — including across
+//! eviction/resume — while non-greedy and opted-out requests bypass
+//! drafting entirely.  Requires `make artifacts`.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver};
+use std::time::Instant;
+
+use umserve::cache::CachedKv;
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{
+    EngineConfig, Event, GenRequest, KvConfig, Priority, PromptInput, SchedConfig, SpecConfig,
+    Usage,
+};
+use umserve::engine::sampler::{argmax, SamplingParams};
+use umserve::engine::TextEngine;
+use umserve::runtime::{ArtifactStore, ModelRuntime};
+
+fn art_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+fn engine(paged: bool) -> TextEngine {
+    let client = xla::PjRtClient::cpu().unwrap();
+    let store = ArtifactStore::open(art_dir()).unwrap();
+    let rt = ModelRuntime::load(&client, &store, "qwen3-0.6b").unwrap();
+    if paged { TextEngine::new(rt).unwrap() } else { TextEngine::new_arena(rt).unwrap() }
+}
+
+fn cfg(paged: bool, spec: bool) -> EngineConfig {
+    EngineConfig {
+        model: "qwen3-0.6b".into(),
+        artifacts_dir: art_dir(),
+        warmup: false,
+        kv: KvConfig { paged, ..Default::default() },
+        spec: SpecConfig { enabled: spec, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Repetitive prompt (per-seed distinct): n-gram prompt-lookup fodder.
+fn spec_prompt(seed: u64) -> Vec<i32> {
+    let b = 7 + (seed % 97) as i32;
+    [b, b + 211, b + 432, b + 653].repeat(3)
+}
+
+fn submit_pri(
+    s: &mut Scheduler,
+    id: u64,
+    prompt: Vec<i32>,
+    params: SamplingParams,
+    priority: Priority,
+) -> Receiver<Event> {
+    let (tx, rx) = channel();
+    s.submit(GenRequest {
+        id,
+        prompt: PromptInput::Tokens(prompt),
+        params,
+        priority,
+        events: tx,
+        enqueued_at: Instant::now(),
+    });
+    rx
+}
+
+fn submit(
+    s: &mut Scheduler,
+    id: u64,
+    prompt: Vec<i32>,
+    params: SamplingParams,
+) -> Receiver<Event> {
+    submit_pri(s, id, prompt, params, Priority::Normal)
+}
+
+fn drain(rx: &Receiver<Event>) -> (Vec<i32>, Option<Usage>) {
+    let mut toks = Vec::new();
+    let mut usage = None;
+    for e in rx.try_iter() {
+        match e {
+            Event::Token { token, .. } if token >= 0 => toks.push(token),
+            Event::Done { usage: u, .. } => usage = Some(u),
+            Event::Error { message, .. } => panic!("request failed: {message}"),
+            _ => {}
+        }
+    }
+    (toks, usage)
+}
+
+/// Tokenwise greedy continuation oracle: feed one token per step.
+fn step_greedy(e: &mut TextEngine, id: u64, first: i32, n: usize) -> Vec<i32> {
+    let mut out = Vec::new();
+    let mut t = first;
+    for _ in 0..n {
+        let res = e.step(&HashMap::from([(id, t)])).unwrap();
+        t = argmax(res.get(0).1);
+        out.push(t);
+    }
+    out
+}
+
+// Known oracle (see test_engine_props): prompt [1,10,20,30] prefills to
+// first token 1226 on the qwen3-0.6b sim.
+const PROMPT: [i32; 4] = [1, 10, 20, 30];
+const FIRST: i32 = 1226;
+
+// ------------------------------------------------ engine-level rounds
+
+fn full_accept_round(paged: bool) {
+    let mut a = engine(paged);
+    let mut b = engine(paged);
+    for e in [&mut a, &mut b] {
+        let kv = CachedKv::new(e.prefill(&PROMPT).unwrap(), PROMPT.len());
+        e.admit(7, &kv, PROMPT.len()).unwrap();
+    }
+    assert!(b.has_spec(), "artifacts must carry spec entries");
+    let g = step_greedy(&mut a, 7, FIRST, 12);
+
+    // Drafts = the true continuation: every draft position accepted,
+    // plus the verifier's one extra token.
+    let round = b.spec_step(7, FIRST, &g[0..5], 100, None).unwrap().unwrap();
+    assert_eq!(round.drafted, 5);
+    assert_eq!(round.accepted, 5);
+    assert_eq!(round.tokens, g[0..6], "spec round diverged from tokenwise");
+    assert_eq!(b.seq(7).unwrap().pos as usize, PROMPT.len() + 6);
+
+    // The stream continues byte-identically after the round.
+    assert_eq!(step_greedy(&mut b, 7, g[5], 6), g[6..12]);
+    assert_eq!(b.stats.spec_rounds, 1);
+    assert_eq!(b.stats.spec_drafts_accepted, 5);
+}
+
+fn rejection_round(paged: bool) {
+    let mut a = engine(paged);
+    let mut b = engine(paged);
+    for e in [&mut a, &mut b] {
+        let kv = CachedKv::new(e.prefill(&PROMPT).unwrap(), PROMPT.len());
+        e.admit(7, &kv, PROMPT.len()).unwrap();
+    }
+    let g = step_greedy(&mut a, 7, FIRST, 12);
+
+    // Poison the 3rd draft: the round must stop at the divergence,
+    // returning the 2 accepted drafts plus the verifier's correction.
+    let wrong = (g[2] + 1) % b.rt.info.vocab as i32;
+    let drafts = [g[0], g[1], wrong, g[3], g[4]];
+    let round = b.spec_step(7, FIRST, &drafts, 100, None).unwrap().unwrap();
+    assert_eq!(round.accepted, 2);
+    assert_eq!(round.tokens, g[0..3], "correction token must be the true continuation");
+    assert_eq!(b.seq(7).unwrap().pos as usize, PROMPT.len() + 3);
+
+    // Rejected tail positions were rolled back / are never attended:
+    // the continuation matches the tokenwise oracle exactly.
+    assert_eq!(step_greedy(&mut b, 7, g[2], 9), g[3..12]);
+}
+
+#[test]
+fn spec_round_full_accept_matches_tokenwise_arena() {
+    full_accept_round(false);
+}
+
+#[test]
+fn spec_round_full_accept_matches_tokenwise_paged() {
+    full_accept_round(true);
+}
+
+#[test]
+fn spec_round_rejection_matches_tokenwise_arena() {
+    rejection_round(false);
+}
+
+#[test]
+fn spec_round_rejection_matches_tokenwise_paged() {
+    rejection_round(true);
+}
+
+/// Rejected drafts that spilled onto a fresh page must release it: the
+/// pool allocation after a round reflects only the CONSUMED positions
+/// (plus the one-time spec scratch), and allocator invariants hold.
+#[test]
+fn rejected_drafts_roll_back_tail_pages() {
+    let mut e = engine(true);
+    let page = e.rt.info.kv_page_size;
+    // Park the write position just under a page boundary so a 7-draft
+    // round must allocate the next page.
+    let prompt: Vec<i32> = (0..page as i32 - 4).map(|i| 4 + i % 1500).collect();
+    let kv = CachedKv::new(e.prefill(&prompt).unwrap(), prompt.len());
+    e.admit(1, &kv, prompt.len()).unwrap();
+
+    // First round pays the lazy scratch allocation; do it up front so
+    // the accounting below is exact.
+    let r1 = e.spec_step(1, 5, &[6, 7, 8, 9, 10, 11, 12], 100, None).unwrap().unwrap();
+    let pos1 = prompt.len() + r1.tokens.len();
+    assert_eq!(e.seq(1).unwrap().pos as usize, pos1);
+
+    let before = e.page_pool().unwrap().allocated_pages;
+    let r2 = e.spec_step(1, 13, &[14, 15, 16, 17, 18, 19, 20], 100, None).unwrap().unwrap();
+    let pos2 = pos1 + r2.tokens.len();
+    // Pages now held for the sequence = exactly what the consumed
+    // prefix needs; every page covered for rejected drafts is back in
+    // the pool.
+    let extra = pos2.div_ceil(page) - pos1.div_ceil(page);
+    let after = e.page_pool().unwrap().allocated_pages;
+    assert_eq!(after, before + extra, "rejected-draft tail pages were not released");
+    e.page_arena().unwrap().borrow().check_invariants();
+}
+
+// --------------------------------------------------- scheduler lane
+
+/// Greedy output is byte-identical with speculation on and off, on both
+/// KV backends, and speculation genuinely engages on the repetitive
+/// workload (rounds > 0, per-request usage counters populated).
+#[test]
+fn scheduler_spec_on_off_byte_identity() {
+    for paged in [false, true] {
+        let mut streams: Vec<Vec<(u64, Vec<i32>)>> = Vec::new();
+        for spec in [true, false] {
+            let mut s = Scheduler::new(cfg(paged, spec)).unwrap();
+            let rxs: Vec<(u64, Receiver<Event>)> = (0..3u64)
+                .map(|i| (i, submit(&mut s, i, spec_prompt(i), SamplingParams::greedy(48))))
+                .collect();
+            s.run_until_idle();
+            let mut out = Vec::new();
+            let mut proposed = 0usize;
+            let mut accepted = 0usize;
+            for (id, rx) in &rxs {
+                let (toks, usage) = drain(rx);
+                let u = usage.expect("Done event");
+                proposed += u.draft_tokens_proposed;
+                accepted += u.draft_tokens_accepted;
+                out.push((*id, toks));
+            }
+            if spec {
+                assert!(
+                    s.metrics.counter("spec_rounds") > 0,
+                    "speculation never engaged (paged={paged})"
+                );
+                assert_eq!(proposed as u64, s.metrics.counter("spec_drafts_proposed"));
+                assert_eq!(accepted as u64, s.metrics.counter("spec_drafts_accepted"));
+                assert!(accepted <= proposed);
+            } else {
+                assert_eq!(s.metrics.counter("spec_rounds"), 0);
+                assert_eq!(proposed, 0);
+            }
+            streams.push(out);
+        }
+        assert_eq!(
+            streams[0], streams[1],
+            "speculation changed greedy output (paged={paged})"
+        );
+    }
+}
+
+/// Non-greedy requests and per-request opt-outs never draft; a
+/// per-request opt-in overrides a disabled engine default.
+#[test]
+fn non_greedy_and_overrides_bypass_speculation() {
+    // Engine default ON: sampled and opted-out requests bypass.
+    let mut s = Scheduler::new(cfg(false, true)).unwrap();
+    let sampled = SamplingParams {
+        temperature: 0.8,
+        top_k: 20,
+        ..SamplingParams::greedy(32)
+    };
+    let rx1 = submit(&mut s, 1, spec_prompt(1), sampled);
+    let opted_out = SamplingParams { speculation: Some(false), ..SamplingParams::greedy(32) };
+    let rx2 = submit(&mut s, 2, spec_prompt(2), opted_out);
+    s.run_until_idle();
+    drain(&rx1);
+    let (_, usage2) = drain(&rx2);
+    assert_eq!(s.metrics.counter("spec_rounds"), 0, "bypass requests must never draft");
+    assert_eq!(usage2.unwrap().draft_tokens_proposed, 0);
+
+    // Engine default OFF: an explicit opt-in speculates, byte-identical
+    // to the non-speculating stream.
+    let mut base = Scheduler::new(cfg(false, false)).unwrap();
+    let rx = submit(&mut base, 3, spec_prompt(3), SamplingParams::greedy(48));
+    base.run_until_idle();
+    let (want, _) = drain(&rx);
+
+    let mut s2 = Scheduler::new(cfg(false, false)).unwrap();
+    let opted_in = SamplingParams { speculation: Some(true), ..SamplingParams::greedy(48) };
+    let rx = submit(&mut s2, 3, spec_prompt(3), opted_in);
+    s2.run_until_idle();
+    let (got, usage) = drain(&rx);
+    assert!(s2.metrics.counter("spec_rounds") > 0, "opt-in must engage");
+    assert!(usage.unwrap().draft_tokens_proposed > 0);
+    assert_eq!(got, want, "opt-in speculation changed greedy output");
+}
+
+/// Eviction mid-generation with speculation active: preempted-then-
+/// resumed streams stay byte-identical to an unpreempted spec run (the
+/// spec rounds keep `all_tokens`/`fed`/KV consistent, so checkpoints
+/// built after a round resume exactly).
+#[test]
+fn evicted_mid_spec_resumes_byte_identically() {
+    for paged in [false, true] {
+        let capacity = 16; // qwen3-0.6b decode buckets end at 16
+        let mut streams_by_policy: Vec<Vec<(u64, Vec<i32>)>> = Vec::new();
+        for preemption in [true, false] {
+            let mut c = cfg(paged, true);
+            c.sched = SchedConfig {
+                prefill_chunk_tokens: 32,
+                priority_sched: true,
+                preemption,
+                aging_ticks: 0,
+                ..Default::default()
+            };
+            c.kv.cache_finished = false;
+            let mut s = Scheduler::new(c).unwrap();
+            let mut rxs: Vec<(u64, Receiver<Event>)> = Vec::new();
+            for i in 0..capacity as u64 {
+                let p = SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(40) };
+                rxs.push((100 + i, submit_pri(&mut s, 100 + i, spec_prompt(i), p, Priority::Batch)));
+            }
+            while s.active_count() < capacity && s.queued_count() > 0 {
+                s.tick();
+            }
+            assert_eq!(s.active_count(), capacity, "flood must fill every slot");
+            // Interactive arrival under full slots forces an eviction
+            // when preemption is on.
+            let p = SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(4) };
+            rxs.push((900, submit_pri(&mut s, 900, spec_prompt(900), p, Priority::Interactive)));
+            s.run_until_idle();
+
+            if preemption {
+                assert!(s.metrics.counter("evictions") >= 1, "expected an eviction");
+                assert_eq!(
+                    s.metrics.counter("evictions"),
+                    s.metrics.counter("evicted_resumes"),
+                    "every evicted sequence must resume"
+                );
+            }
+            assert!(
+                s.metrics.counter("spec_rounds") > 0,
+                "speculation never engaged (paged={paged}, preemption={preemption})"
+            );
+            let mut streams = Vec::new();
+            for (id, rx) in &rxs {
+                let (toks, usage) = drain(rx);
+                assert!(usage.is_some(), "request {id} did not complete");
+                streams.push((*id, toks));
+            }
+            streams_by_policy.push(streams);
+        }
+        assert_eq!(
+            streams_by_policy[0], streams_by_policy[1],
+            "evict/resume with speculation diverged (paged={paged})"
+        );
+    }
+}

@@ -23,7 +23,9 @@ use std::sync::mpsc::{channel, Receiver};
 use std::time::Instant;
 
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, Event, GenRequest, Priority, PromptInput};
+use umserve::coordinator::{
+    EngineConfig, Event, GenRequest, KvConfig, Priority, PromptInput, SchedConfig, VisionConfig,
+};
 use umserve::engine::sampler::SamplingParams;
 use umserve::multimodal::image::{generate_image, ImageSource};
 
@@ -86,8 +88,7 @@ fn batched_encode_matches_sequential_encodes() {
     let seeds: Vec<u64> = (0..8).map(|i| 9100 + i).collect();
     let run = |vision_batch: usize| {
         let mut s = Scheduler::new(EngineConfig {
-            vision_batch,
-            vision_encodes_per_step: 8,
+            vision: VisionConfig { batch: vision_batch, encodes_per_step: 8, ..Default::default() },
             ..cfg()
         })
         .unwrap();
@@ -148,8 +149,7 @@ fn mixed_resolutions_never_share_a_dispatch() {
     let mk = || PromptInput::Multimodal { images: images.clone(), text: "compare".into() };
 
     let mut s = Scheduler::new(EngineConfig {
-        vision_batch: 8,
-        vision_encodes_per_step: 8,
+        vision: VisionConfig { batch: 8, encodes_per_step: 8, ..Default::default() },
         ..cfg()
     })
     .unwrap();
@@ -168,7 +168,7 @@ fn mixed_resolutions_never_share_a_dispatch() {
     assert_eq!(batched_toks.len(), 4);
 
     // Identical stream without batching.
-    let mut seq = Scheduler::new(EngineConfig { vision_batch: 1, ..cfg() }).unwrap();
+    let mut seq = Scheduler::new(EngineConfig { vision: VisionConfig { batch: 1, ..Default::default() }, ..cfg() }).unwrap();
     let rx2 = submit(&mut seq, 1, mk(), 4, Priority::Normal);
     seq.run_until_idle();
     assert_eq!(seq.metrics.counter("vision_dispatches"), 8);
@@ -206,14 +206,14 @@ fn overlap_feeds_prefix_chunks_before_last_encode_completes() {
     assert_eq!(overlap_toks.len(), 6);
 
     // Byte-identical to the parked path...
-    let mut parked = Scheduler::new(EngineConfig { mm_overlap: false, ..cfg() }).unwrap();
+    let mut parked = Scheduler::new(EngineConfig { vision: VisionConfig { overlap: false, ..Default::default() }, ..cfg() }).unwrap();
     let rx2 = submit(&mut parked, 1, mk(), 6, Priority::Normal);
     parked.run_until_idle();
     assert_eq!(parked.metrics.counter("mm_overlap_chunks"), 0);
     assert_eq!(tokens_of(&rx2), overlap_toks, "overlap changed greedy output");
 
     // ...and to inline encoding.
-    let mut inline_ = Scheduler::new(EngineConfig { vision_stage: false, ..cfg() }).unwrap();
+    let mut inline_ = Scheduler::new(EngineConfig { vision: VisionConfig { stage: false, ..Default::default() }, ..cfg() }).unwrap();
     let rx3 = submit(&mut inline_, 1, mk(), 6, Priority::Normal);
     inline_.run_until_idle();
     assert_eq!(tokens_of(&rx3), overlap_toks);
@@ -228,7 +228,7 @@ fn pooling_bound_requests_stay_parked() {
     let seeds: Vec<u64> = (0..14).map(|i| 7300 + i).collect();
     let mk = || mm_prompt(&seeds, 448, "summarize the clip");
 
-    let mut s = Scheduler::new(EngineConfig { vision_encodes_per_step: 8, ..cfg() }).unwrap();
+    let mut s = Scheduler::new(EngineConfig { vision: VisionConfig { encodes_per_step: 8, ..Default::default() }, ..cfg() }).unwrap();
     let rx = submit(&mut s, 1, mk(), 4, Priority::Normal);
     assert_eq!(
         s.queued_count(),
@@ -240,7 +240,7 @@ fn pooling_bound_requests_stay_parked() {
     assert!(s.metrics.counter("mm_temporal_pools") >= 1, "pooling must engage");
     let toks = tokens_of(&rx);
 
-    let mut inline_ = Scheduler::new(EngineConfig { vision_stage: false, ..cfg() }).unwrap();
+    let mut inline_ = Scheduler::new(EngineConfig { vision: VisionConfig { stage: false, ..Default::default() }, ..cfg() }).unwrap();
     let rx2 = submit(&mut inline_, 1, mk(), 4, Priority::Normal);
     inline_.run_until_idle();
     assert_eq!(tokens_of(&rx2), toks);
@@ -251,10 +251,8 @@ fn pooling_bound_requests_stay_parked() {
 /// decoding mm sequence is evicted and must resume byte-identically.
 fn run_overlap_evict_workload(preemption: bool) -> (Vec<(u64, Vec<i32>)>, u64) {
     let mut s = Scheduler::new(EngineConfig {
-        preemption,
-        cache_finished: false,
-        text_cache_bytes: 64 << 20,
-        aging_ticks: 0,
+        sched: SchedConfig { preemption, aging_ticks: 0, ..Default::default() },
+        kv: KvConfig { cache_finished: false, text_cache_bytes: 64 << 20, ..Default::default() },
         ..cfg()
     })
     .unwrap();
@@ -307,8 +305,7 @@ fn overlap_admitted_sequence_evicts_and_resumes_byte_identical() {
 fn interactive_borrows_unused_batch_headroom() {
     // vision_batch=1 isolates budget accounting from dispatch grouping.
     let base_cfg = || EngineConfig {
-        vision_encodes_per_step: 2,
-        vision_batch: 1,
+        vision: VisionConfig { encodes_per_step: 2, batch: 1, ..Default::default() },
         ..cfg()
     };
 

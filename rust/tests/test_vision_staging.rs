@@ -18,7 +18,10 @@ use std::sync::mpsc::{channel, Receiver};
 use std::time::Instant;
 
 use umserve::coordinator::scheduler::Scheduler;
-use umserve::coordinator::{EngineConfig, Event, GenRequest, Priority, PromptInput, Usage};
+use umserve::coordinator::{
+    EngineConfig, Event, GenRequest, KvConfig, Priority, PromptInput, SchedConfig, Usage,
+    VisionConfig,
+};
 use umserve::engine::sampler::SamplingParams;
 use umserve::multimodal::image::{generate_image, ImageSource};
 
@@ -93,7 +96,7 @@ fn drain(rx: &Receiver<Event>) -> (Vec<i32>, Option<Usage>) {
 #[test]
 fn staged_vision_reproduces_inline_outputs_and_interleaves() {
     // Inline reference: every encode runs inside admission.
-    let mut inline_ = Scheduler::new(EngineConfig { vision_stage: false, ..cfg() }).unwrap();
+    let mut inline_ = Scheduler::new(EngineConfig { vision: VisionConfig { stage: false, ..Default::default() }, ..cfg() }).unwrap();
     let mm = || mm_prompt(&[301, 302, 303], 224, "compare these pictures");
     let rx = submit(&mut inline_, 50, mm(), 6, Priority::Normal);
     inline_.run_until_idle();
@@ -103,7 +106,7 @@ fn staged_vision_reproduces_inline_outputs_and_interleaves() {
 
     // Staged: a decode-active text sequence must keep generating while
     // the 3-image admission encodes at most one unit per tick.
-    let mut staged = Scheduler::new(EngineConfig { vision_stage: true, ..cfg() }).unwrap();
+    let mut staged = Scheduler::new(EngineConfig { vision: VisionConfig { stage: true, ..Default::default() }, ..cfg() }).unwrap();
     let text_rx = submit(
         &mut staged,
         1,
@@ -182,11 +185,13 @@ fn run_evict_workload(
     mm_kv_cache_bytes: usize,
 ) -> (Vec<(u64, Vec<i32>)>, u64, u64) {
     let mut s = Scheduler::new(EngineConfig {
-        preemption,
-        mm_kv_cache_bytes,
-        cache_finished: false,
-        text_cache_bytes: 64 << 20,
-        aging_ticks: 0,
+        sched: SchedConfig { preemption, aging_ticks: 0, ..Default::default() },
+        kv: KvConfig {
+            mm_kv_cache_bytes,
+            cache_finished: false,
+            text_cache_bytes: 64 << 20,
+            ..Default::default()
+        },
         ..cfg()
     })
     .unwrap();
@@ -296,7 +301,7 @@ fn odd_visual_rows_pool_with_tail_carried() {
     );
 
     // Inline admission pools identically.
-    let mut inline_ = Scheduler::new(EngineConfig { vision_stage: false, ..cfg() }).unwrap();
+    let mut inline_ = Scheduler::new(EngineConfig { vision: VisionConfig { stage: false, ..Default::default() }, ..cfg() }).unwrap();
     let rx2 = submit(&mut inline_, 1, mk(), 4, Priority::Normal);
     inline_.run_until_idle();
     let (inline_toks, usage2) = drain(&rx2);
@@ -310,7 +315,7 @@ fn odd_visual_rows_pool_with_tail_carried() {
 fn kv_only_validation_demotes_on_fingerprint_mismatch() {
     // Table-4 "KV only" configuration: embedding cache off, KV cache on.
     let mut s = Scheduler::new(EngineConfig {
-        mm_emb_cache_bytes: 0,
+        kv: KvConfig { mm_emb_cache_bytes: 0, ..Default::default() },
         ..cfg()
     })
     .unwrap();
