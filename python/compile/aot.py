@@ -49,7 +49,7 @@ def to_hlo_text(lowered) -> str:
 
     return_tuple=False: every artifact returns exactly ONE array so the
     executed PJRT output buffer is array-shaped and can be threaded
-    directly into the next execute_b call (device-resident KV arenas).
+    directly into the next execute_b call (device-resident KV pool).
     Multi-output modules come back as a single tuple buffer that can only
     be read through a host literal copy — see model.py's logits-mailbox
     convention.
@@ -105,9 +105,9 @@ class EntryBuilder:
         t0 = time.time()
         # keep_unused=True: parameter lists must match the manifest even
         # when an entry ignores some weights (e.g. embed_lookup).
-        # donate_argnums: arena-sized inputs are donated so XLA updates
+        # donate_argnums: pool-sized inputs are donated so XLA updates
         # them in place — without this every decode step copies the whole
-        # KV arena and batching scales inversely (EXPERIMENTS.md §Perf).
+        # KV pool and batching scales inversely (EXPERIMENTS.md §Perf).
         lowered = jax.jit(fn, keep_unused=True, donate_argnums=tuple(donate)).lower(
             *inputs_specs, *weight_specs_)
         text = to_hlo_text(lowered)
@@ -116,90 +116,12 @@ class EntryBuilder:
         print(f"  {self.cfg.name}/{entry}: {len(text)/1e3:.0f} kB in {time.time()-t0:.1f}s",
               flush=True)
 
-    # ---- text entries ----------------------------------------------------
-
-    def decode(self, b: int):
-        cfg = self.cfg
-        kv = spec(M.kv_arena_shape(cfg, b), F32)
-        self.lower(
-            f"decode_b{b}",
-            functools.partial(M.decode_fn, cfg),
-            [
-                arg_desc("tokens", "input", spec((b,), I32)),
-                arg_desc("pos", "input", spec((b,), I32)),
-                arg_desc("kv", "input", kv),
-            ],
-            [spec((b,), I32), spec((b,), I32), kv],
-            self.t_order,
-            self.t_specs,
-            donate=(2,),
-        )
-
-    def prefill(self, s: int):
-        cfg = self.cfg
-        self.lower(
-            f"prefill_s{s}",
-            functools.partial(M.prefill_fn, cfg),
-            [
-                arg_desc("tokens", "input", spec((s,), I32)),
-                arg_desc("length", "input", spec((), I32)),
-            ],
-            [spec((s,), I32), spec((), I32)],
-            self.t_order,
-            self.t_specs,
-        )
-
-    def prefill_embeds(self, s: int):
-        cfg = self.cfg
-        self.lower(
-            f"prefill_embeds_s{s}",
-            functools.partial(M.prefill_embeds_fn, cfg),
-            [
-                arg_desc("embeds", "input", spec((s, cfg.d_model), F32)),
-                arg_desc("length", "input", spec((), I32)),
-            ],
-            [spec((s, cfg.d_model), F32), spec((), I32)],
-            self.t_order,
-            self.t_specs,
-        )
-
-    def prefill_chunk(self, c: int):
-        cfg = self.cfg
-        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
-        self.lower(
-            f"prefill_chunk_c{c}",
-            functools.partial(M.prefill_chunk_fn, cfg),
-            [
-                arg_desc("tokens", "input", spec((c,), I32)),
-                arg_desc("start", "input", spec((), I32)),
-                arg_desc("length", "input", spec((), I32)),
-                arg_desc("kv_one", "input", kv_one),
-            ],
-            [spec((c,), I32), spec((), I32), spec((), I32), kv_one],
-            self.t_order,
-            self.t_specs,
-            donate=(3,),
-        )
-
-    def prefill_chunk_embeds(self, c: int):
-        cfg = self.cfg
-        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
-        self.lower(
-            f"prefill_chunk_embeds_c{c}",
-            functools.partial(M.prefill_chunk_embeds_fn, cfg),
-            [
-                arg_desc("embeds", "input", spec((c, cfg.d_model), F32)),
-                arg_desc("start", "input", spec((), I32)),
-                arg_desc("length", "input", spec((), I32)),
-                arg_desc("kv_one", "input", kv_one),
-            ],
-            [spec((c, cfg.d_model), F32), spec((), I32), spec((), I32), kv_one],
-            self.t_order,
-            self.t_specs,
-            donate=(3,),
-        )
-
     # ---- paged-KV entries ------------------------------------------------
+    #
+    # Serving is paged-only: the dense single-arena graphs
+    # (decode_b/prefill_s/inject_b/extract_b/...) are no longer lowered —
+    # they survive in model.py as python-level references that the
+    # equivalence tests pin the paged grids against.
 
     def decode_paged(self, b: int):
         cfg = self.cfg
@@ -266,36 +188,6 @@ class EntryBuilder:
             donate=(5,),
         )
 
-    def spec_chunk(self, c: int):
-        cfg = self.cfg
-        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
-        self.lower(
-            f"spec_chunk_c{c}",
-            functools.partial(M.spec_chunk_fn, cfg),
-            [
-                arg_desc("tokens", "input", spec((c,), I32)),
-                arg_desc("start", "input", spec((), I32)),
-                arg_desc("length", "input", spec((), I32)),
-                arg_desc("kv_one", "input", kv_one),
-            ],
-            [spec((c,), I32), spec((), I32), spec((), I32), kv_one],
-            self.t_order,
-            self.t_specs,
-            donate=(3,),
-        )
-
-    def read_logits_chunk(self, c: int):
-        cfg = self.cfg
-        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
-        self.lower(
-            f"read_logits_chunk_c{c}",
-            functools.partial(M.read_logits_chunk_fn, cfg, c),
-            [arg_desc("kv_one", "input", kv_one)],
-            [kv_one],
-            [],
-            [],
-        )
-
     def spec_chunk_paged(self, c: int):
         cfg = self.cfg
         pool = spec(M.kv_pool_shape(cfg), F32)
@@ -333,26 +225,6 @@ class EntryBuilder:
             [pool, spec((m,), I32)],
             [],
             [],
-        )
-
-    def adopt_paged(self):
-        cfg = self.cfg
-        pool = spec(M.kv_pool_shape(cfg), F32)
-        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
-        nblk = cfg.kv_blocks_per_seq()
-        self.lower(
-            "adopt_paged",
-            functools.partial(M.adopt_paged_fn, cfg),
-            [
-                arg_desc("pool", "input", pool),
-                arg_desc("kv_one", "input", kv_one),
-                arg_desc("tables", "input", spec((nblk,), I32)),
-                arg_desc("mailbox", "input", spec((), I32)),
-            ],
-            [pool, kv_one, spec((nblk,), I32), spec((), I32)],
-            [],
-            [],
-            donate=(0,),
         )
 
     def copy_page(self):
@@ -397,16 +269,6 @@ class EntryBuilder:
             [],
         )
 
-    def zeros(self, b: int):
-        self.lower(
-            f"zeros_b{b}",
-            functools.partial(M.zeros_fn, self.cfg, b),
-            [],
-            [],
-            [],
-            [],
-        )
-
     def embed_lookup(self, s: int):
         cfg = self.cfg
         self.lower(
@@ -416,90 +278,6 @@ class EntryBuilder:
             [spec((s,), I32)],
             self.t_order,
             self.t_specs,
-        )
-
-    def read_logits(self, b: int):
-        cfg = self.cfg
-        kv = spec(M.kv_arena_shape(cfg, b), F32)
-        self.lower(
-            f"read_logits_b{b}",
-            functools.partial(M.read_logits_fn, cfg),
-            [arg_desc("kv", "input", kv)],
-            [kv],
-            [],
-            [],
-        )
-
-    def read_logits_one(self, b: int):
-        cfg = self.cfg
-        kv = spec(M.kv_arena_shape(cfg, b), F32)
-        self.lower(
-            f"read_logits_one_b{b}",
-            functools.partial(M.read_logits_one_fn, cfg),
-            [
-                arg_desc("kv", "input", kv),
-                arg_desc("slot", "input", spec((), I32)),
-            ],
-            [kv, spec((), I32)],
-            [],
-            [],
-        )
-
-    def inject(self, b: int):
-        cfg = self.cfg
-        arena = spec(M.kv_arena_shape(cfg, b), F32)
-        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
-        self.lower(
-            f"inject_b{b}",
-            functools.partial(M.inject_fn, cfg),
-            [
-                arg_desc("arena", "input", arena),
-                arg_desc("kv_one", "input", kv_one),
-                arg_desc("slot", "input", spec((), I32)),
-            ],
-            [arena, kv_one, spec((), I32)],
-            [],
-            [],
-            donate=(0,),
-        )
-
-    def extract(self, b: int):
-        cfg = self.cfg
-        arena = spec(M.kv_arena_shape(cfg, b), F32)
-        self.lower(
-            f"extract_b{b}",
-            functools.partial(M.extract_fn, cfg),
-            [
-                arg_desc("arena", "input", arena),
-                arg_desc("slot", "input", spec((), I32)),
-            ],
-            [arena, spec((), I32)],
-            [],
-            [],
-        )
-
-    def trim_kv(self, s: int):
-        cfg = self.cfg
-        kv_one = spec(M.kv_arena_shape(cfg, 1), F32)
-        self.lower(
-            f"trim_kv_s{s}",
-            functools.partial(M.trim_kv_fn, cfg, s),
-            [arg_desc("kv_one", "input", kv_one)],
-            [kv_one],
-            [],
-            [],
-        )
-
-    def untrim_kv(self, s: int):
-        cfg = self.cfg
-        trimmed = spec((cfg.n_layers + 1, 2, 1, cfg.n_kv_heads, s, cfg.d_head), F32)
-        self.lower(
-            f"untrim_kv_s{s}",
-            functools.partial(M.untrim_kv_fn, cfg, s),
-            [arg_desc("trimmed", "input", trimmed)],
-            [trimmed],
-            [],
-            [],
         )
 
     def vision(self, resolution: int):
@@ -543,47 +321,28 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
         print(f"  weights: {nbytes/1e6:.1f} MB -> {cfg.name}.umw", flush=True)
 
     eb = EntryBuilder(cfg, weights, out_dir, force)
+    # Paged-only serving surface: per-bucket decode over block tables,
+    # chunked prefill straight onto pages (fresh prompts and catch-up
+    # resume alike), and the speculative verify grids.  The pool entries
+    # are bucket-independent — one pool serves every decode bucket, so
+    # grow/shrink swaps executables without touching KV, and >16 active
+    # lanes run as repeated largest-bucket dispatches over disjoint
+    # block-table slices (lane virtualization; see
+    # configs.DECODE_VIRTUAL_FACTOR).
     for b in cfg.decode_buckets:
-        eb.decode(b)
         eb.decode_paged(b)
-        eb.inject(b)
-        eb.extract(b)
-        eb.read_logits(b)
-        eb.read_logits_one(b)
-        eb.zeros(b)
-    for s in cfg.prefill_buckets:
-        eb.prefill(s)
     for c in PREFILL_CHUNK_BUCKETS:
-        eb.prefill_chunk(c)
         eb.prefill_chunk_paged(c)
-    # Speculative-decoding verify grids: score C draft positions in one
-    # dispatch and read all C logits rows back at once, on both KV
-    # backends.
     for c in SPEC_CHUNK_BUCKETS:
-        eb.spec_chunk(c)
-        eb.read_logits_chunk(c)
         eb.spec_chunk_paged(c)
         eb.read_logits_chunk_paged(c)
-    # Paged-KV pool entries (bucket-independent: one pool serves every
-    # decode bucket, so grow/shrink swaps executables without touching KV).
-    eb.adopt_paged()
     eb.copy_page()
     eb.zeros_pool()
     eb.read_logits_page()
-    # KV trim/untrim for EVERY model: the mm KV cache stores whole
-    # multimodal prompts and the text prefix cache stores finished /
-    # evicted text sequences — both trim their s_max-sized kv_one
-    # entries to the smallest covering grid at insert so the byte
-    # budget bounds real allocation.
-    for s in cfg.trim_kv_buckets():
-        eb.trim_kv(s)
-        eb.untrim_kv(s)
     if cfg.vision:
         for s in EMBED_PREFILL_BUCKETS:
-            eb.prefill_embeds(s)
             eb.embed_lookup(s)
         for c in PREFILL_CHUNK_BUCKETS:
-            eb.prefill_chunk_embeds(c)
             eb.prefill_chunk_embeds_paged(c)
         for r in cfg.vision.resolutions:
             eb.vision(r)
@@ -616,9 +375,9 @@ def build_model(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
             str(c): cfg.spec_scratch_pages(c) for c in SPEC_CHUNK_BUCKETS
         },
         "embed_prefill_buckets": list(EMBED_PREFILL_BUCKETS) if cfg.vision else [],
-        "trim_kv_buckets": list(cfg.trim_kv_buckets()),
         "kv_page_size": KV_PAGE_SIZE,
         "kv_pool_pages": cfg.kv_pool_pages(),
+        "decode_virtual_lanes": cfg.decode_virtual_lanes(),
         "vision": (
             {
                 "d_model": cfg.vision.d_model,

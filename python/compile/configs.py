@@ -22,6 +22,13 @@ Q4_GROUP = 32
 # zoo (smallest: qwen3-0.6b at 2*64*16 = 2048 = VOCAB).
 KV_PAGE_SIZE = 64
 
+# Decode lane virtualization factor: the engine serves up to
+# FACTOR * max(decode_buckets) concurrent decode lanes by issuing
+# repeated largest-bucket `decode_paged_b{B}` dispatches over disjoint
+# block-table slices; the pool is sized so every virtual lane can hold
+# a full-length sequence (see ModelConfig.kv_pool_pages).
+DECODE_VIRTUAL_FACTOR = 4
+
 
 @dataclasses.dataclass(frozen=True)
 class MoeConfig:
@@ -94,18 +101,32 @@ class ModelConfig:
         assert self.s_max % KV_PAGE_SIZE == 0, (self.s_max, KV_PAGE_SIZE)
         return self.s_max // KV_PAGE_SIZE
 
+    def decode_virtual_lanes(self) -> int:
+        """Decode-lane ceiling served by lane virtualization.
+
+        `decode_paged_b{B}` executables top out at the largest lowered
+        bucket, but the pool is bucket-independent: the engine packs
+        more active lanes into repeated largest-bucket dispatches over
+        disjoint block-table slices, so the serving ceiling is set by
+        pool capacity, not by lowering.  Virtual lanes are sized at 4x
+        the largest lowered bucket (64 for the text zoo) — past that,
+        unified-memory capacity is the binding resource and admission
+        backpressure takes over.
+        """
+        return DECODE_VIRTUAL_FACTOR * max(self.decode_buckets)
+
     def kv_pool_pages(self) -> int:
         """Physical pages in the paged-KV pool lowered for this model.
 
-        Sized so the largest decode bucket can hold full-length
-        sequences (blocks + one mailbox page each) twice over — the
-        surplus is what the prefix caches pin for zero-copy reuse.  The
-        Rust allocator reserves page 0 as the garbage sink for inactive
-        decode lanes and may cap its *usable* budget below this at run
-        time (the paged-KV ablation does); this constant only fixes the
-        lowered pool shape.
+        Sized so every *virtual* decode lane (see decode_virtual_lanes:
+        4x the largest lowered bucket) can hold a full-length sequence
+        — blocks plus one mailbox page each.  The Rust allocator
+        reserves page 0 as the garbage sink for inactive decode lanes
+        and may cap its *usable* budget below this at run time (the
+        paged-KV ablation does); this constant only fixes the lowered
+        pool shape.
         """
-        return 2 * max(self.decode_buckets) * (self.kv_blocks_per_seq() + 1)
+        return self.decode_virtual_lanes() * (self.kv_blocks_per_seq() + 1)
 
     def spec_scratch_pages(self, c: int) -> int:
         """Scratch pages holding a packed [C, vocab] logits readback
@@ -117,20 +138,6 @@ class ModelConfig:
         """
         per = (self.n_layers + 1) * 2 * self.n_kv_heads * KV_PAGE_SIZE * self.d_head
         return -(-(c * self.vocab) // per)
-
-    def trim_kv_buckets(self) -> Tuple[int, ...]:
-        """Position grids for the cached-KV trim entries
-        (`trim_kv_s{S}` / `untrim_kv_s{S}`).
-
-        A cached kv_one is physically s_max positions long even when it
-        logically encodes far fewer; trimming it to the smallest grid
-        size covering its length makes the cache's length-proportional
-        byte accounting a true allocation bound.  Every grid size must
-        keep the plane-0 logits mailbox intact (>= logits_rows), and a
-        size >= s_max would save nothing.
-        """
-        grid = sorted({max(b, self.logits_rows()) for b in TRIM_KV_GRID})
-        return tuple(b for b in grid if b < self.s_max)
 
     def n_params(self) -> int:
         """Approximate parameter count (for logs / DESIGN cross-check)."""
@@ -229,13 +236,6 @@ PREFILL_CHUNK_BUCKETS = (8, 32)
 # gemma3-4b at 2*1*640*40 = 51200, so C=16 -> 32768 fits every model,
 # while C=32 -> 65536 would not).
 SPEC_CHUNK_BUCKETS = (8, 16)
-
-# Candidate position grids for trimming cached kv_one buffers (see
-# ModelConfig.trim_kv_buckets — each is clamped up to the model's
-# logits-mailbox row count and capped below s_max).  Lowered for EVERY
-# model: the mm KV cache and the text prefix cache both trim their
-# entries at insert.
-TRIM_KV_GRID = (128, 256, 384, 512)
 
 # Batched vision-encoder buckets (`vision_r{res}_b{B}`): one dispatch
 # encodes up to B same-resolution images.  The serving scheduler picks

@@ -437,8 +437,8 @@ def read_logits_chunk_fn(cfg: ModelConfig, c: int, kv):
 
 
 def zeros_fn(cfg: ModelConfig, batch: int):
-    """Device-side zero arena allocator (`zeros_b{B}`): replaces the
-    host-side vec![0f32] upload on every arena creation/migration."""
+    """Zero dense-arena state (reference only — the dense grids are no
+    longer lowered; tests use this to pin the legacy layout math)."""
     return jnp.zeros(kv_arena_shape(cfg, batch), jnp.float32)
 
 
@@ -739,31 +739,13 @@ def read_logits_chunk_paged_fn(cfg: ModelConfig, c: int, pool, spec_pages):
     return region.reshape(-1)[: c * cfg.vocab].reshape(c, cfg.vocab)
 
 
-# ------------------------------------------------------- arena management
-
-def trim_kv_fn(cfg: ModelConfig, s: int, kv_one):
-    """Slice a kv_one to its first `s` positions (`trim_kv_s{S}`).
-
-    Cached KV states are physically s_max positions long even when they
-    logically encode far fewer; the serving cache trims each entry to
-    the smallest lowered grid size covering its length at insert, so the
-    cache's length-proportional byte budget bounds real device
-    allocation.  `s` must cover the plane-0 logits mailbox rows
-    (cfg trim grids guarantee it), so a full-hit can still read its
-    first token's logits from the trimmed entry after un-trimming.
-    """
-    return kv_one[:, :, :, :, :s, :]
-
-
-def untrim_kv_fn(cfg: ModelConfig, s: int, trimmed):
-    """Re-expand a trimmed KV state to the s_max arena row
-    (`untrim_kv_s{S}`).  Positions >= s are zero-filled: the original
-    buffer held only padding/garbage there and attention masks by
-    sequence length, so decode from an un-trimmed state is
-    token-identical to decode from the original."""
-    return jnp.pad(trimmed,
-                   ((0, 0), (0, 0), (0, 0), (0, 0), (0, cfg.s_max - s), (0, 0)))
-
+# ------------------------------------------------- dense reference graphs
+#
+# The dense single-arena functions below (inject/extract, and the
+# prefill/decode graphs above) are NOT lowered as artifacts anymore —
+# serving is paged-only.  They remain as python-level references: the
+# equivalence tests pin the paged grids bit-exactly against them, and
+# reference_generate drives them as the greedy oracle.
 
 def inject_fn(cfg: ModelConfig, arena, kv_one, slot):
     """Insert a prefilled single-sequence KV row into arena slot `slot`."""
@@ -782,10 +764,9 @@ def extract_fn(cfg: ModelConfig, arena, slot):
 def read_logits_fn(cfg: ModelConfig, kv):
     """Extract the plane-0 logits mailbox for every slot: kv -> [B, vocab].
 
-    Lowered as its own tiny artifact (`read_logits_b{B}`): the TFRT CPU
-    PJRT client does not implement raw-offset host reads, so the runtime
-    executes this extractor and copies back only the [B, vocab] literal
-    (~8 kB/slot/step) while the arena stays on device.
+    Reference only — no longer lowered.  The serving path reads one
+    mailbox *page* at a time (`read_logits_page`); this keeps the dense
+    mailbox layout contract testable against that extractor.
     """
     rows = logits_rows(cfg)
     b = kv.shape[2]
@@ -796,9 +777,8 @@ def read_logits_fn(cfg: ModelConfig, kv):
 def read_logits_one_fn(cfg: ModelConfig, kv, slot):
     """Extract ONE slot's plane-0 mailbox: kv, slot -> [vocab].
 
-    Lowered per decode bucket (`read_logits_one_b{B}`) so sparse batches
-    read back O(vocab) bytes per ACTIVE slot instead of the whole
-    [B, vocab] literal — the readback analog of slot-level admission.
+    Reference only — no longer lowered.  Kept so tests can assert the
+    sparse single-slot readback math against the full-batch extractor.
     """
     rows = logits_rows(cfg)
     plane = kv[0, 0]                              # [B, Hkv, S, Dh]

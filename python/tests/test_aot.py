@@ -7,8 +7,10 @@ import pytest
 
 from compile.configs import (
     EMBED_PREFILL_BUCKETS,
+    KV_PAGE_SIZE,
     MODELS,
     PREFILL_CHUNK_BUCKETS,
+    SPEC_CHUNK_BUCKETS,
     VISION_BATCH_BUCKETS,
 )
 
@@ -30,36 +32,48 @@ def test_all_models_present(manifest):
 
 @pytest.mark.parametrize("name", list(MODELS))
 def test_entry_inventory(manifest, name):
+    """Serving is paged-only: every lowered text entry operates on the
+    page pool over block tables; the dense single-arena graphs are
+    python-level references and must NOT appear in the artifacts."""
     cfg = MODELS[name]
-    entries = manifest["models"][name]["entries"]
+    m = manifest["models"][name]
+    entries = m["entries"]
     for b in cfg.decode_buckets:
-        for kind in ("decode", "inject", "extract", "read_logits",
-                     "read_logits_one", "zeros"):
-            assert f"{kind}_b{b}" in entries, f"{name} missing {kind}_b{b}"
-    for s in cfg.prefill_buckets:
-        assert f"prefill_s{s}" in entries
+        assert f"decode_paged_b{b}" in entries, f"{name} missing decode_paged_b{b}"
     for c in PREFILL_CHUNK_BUCKETS:
-        assert f"prefill_chunk_c{c}" in entries
-    assert manifest["models"][name]["prefill_chunk_buckets"] == list(
-        PREFILL_CHUNK_BUCKETS)
-    # Every model lowers the cached-KV trim grids (text prefix cache and
-    # mm KV cache both trim their entries at insert).
-    for s in cfg.trim_kv_buckets():
-        assert f"trim_kv_s{s}" in entries, f"{name} missing trim_kv_s{s}"
-        assert f"untrim_kv_s{s}" in entries
-    assert manifest["models"][name]["trim_kv_buckets"] == list(cfg.trim_kv_buckets())
+        assert f"prefill_chunk_paged_c{c}" in entries
+    for c in SPEC_CHUNK_BUCKETS:
+        assert f"spec_chunk_paged_c{c}" in entries
+        assert f"read_logits_chunk_paged_c{c}" in entries
+    for entry in ("copy_page", "zeros_pool", "read_logits_page"):
+        assert entry in entries, f"{name} missing {entry}"
+    assert m["prefill_chunk_buckets"] == list(PREFILL_CHUNK_BUCKETS)
+    assert m["spec_chunk_buckets"] == list(SPEC_CHUNK_BUCKETS)
+    assert m["kv_page_size"] == KV_PAGE_SIZE
+    assert m["kv_pool_pages"] == cfg.kv_pool_pages()
+    assert m["decode_virtual_lanes"] == cfg.decode_virtual_lanes()
+    # No dense-era entries: retired grids must not be re-lowered.
+    for entry in entries:
+        for stale in ("decode_b", "inject_b", "extract_b", "zeros_b",
+                      "read_logits_b", "read_logits_one_b", "prefill_s",
+                      "prefill_embeds_s", "adopt_paged"):
+            assert not entry.startswith(stale), f"{name} re-lowered {entry}"
+        assert "trim" not in entry, f"{name} re-lowered {entry}"
+        if entry.startswith("prefill_chunk"):
+            assert "paged" in entry, f"{name} re-lowered dense {entry}"
+        if entry.startswith(("spec_chunk", "read_logits_chunk")):
+            assert "paged" in entry, f"{name} re-lowered dense {entry}"
+    assert "trim_kv_buckets" not in m
     if cfg.vision:
         for r in cfg.vision.resolutions:
             assert f"vision_r{r}" in entries
             for b in VISION_BATCH_BUCKETS:
                 assert f"vision_r{r}_b{b}" in entries, f"{name} missing vision_r{r}_b{b}"
-        assert manifest["models"][name]["vision"]["batch_buckets"] == list(
-            VISION_BATCH_BUCKETS)
+        assert m["vision"]["batch_buckets"] == list(VISION_BATCH_BUCKETS)
         for s in EMBED_PREFILL_BUCKETS:
-            assert f"prefill_embeds_s{s}" in entries
             assert f"embed_lookup_s{s}" in entries
         for c in PREFILL_CHUNK_BUCKETS:
-            assert f"prefill_chunk_embeds_c{c}" in entries
+            assert f"prefill_chunk_embeds_paged_c{c}" in entries
 
 
 @pytest.mark.parametrize("name", list(MODELS))
@@ -76,19 +90,26 @@ def test_artifact_files_exist_and_are_hlo(manifest, name):
 
 def test_arg_descriptors_sane(manifest):
     m = manifest["models"]["qwen3-0.6b"]
-    d = m["entries"]["decode_b1"]["args"]
+    d = m["entries"]["decode_paged_b1"]["args"]
     kinds = [a["kind"] for a in d]
     # All inputs precede all weights.
     first_weight = kinds.index("weight")
     assert all(k == "weight" for k in kinds[first_weight:])
-    assert [a["name"] for a in d[:3]] == ["tokens", "pos", "kv"]
-    kv = d[2]
-    assert kv["shape"] == [m["n_layers"] + 1, 2, 1, m["n_kv_heads"], m["s_max"], m["d_head"]]
+    assert [a["name"] for a in d[:5]] == ["tokens", "pos", "tables", "mailbox", "pool"]
+    pool = d[4]
+    nblk = m["s_max"] // m["kv_page_size"]
+    assert d[2]["shape"] == [1, nblk]
+    assert pool["shape"] == [
+        m["n_layers"] + 1, 2, m["kv_pool_pages"], m["n_kv_heads"],
+        m["kv_page_size"], m["d_head"],
+    ]
     # Weight order starts with the embedding table.
-    assert d[3]["name"] == "emb"
+    assert d[5]["name"] == "emb"
 
 
 def test_mailbox_fits_every_model(manifest):
     for name, m in manifest["models"].items():
-        rows = -(-m["vocab"] // m["d_head"])
-        assert rows <= m["s_max"], f"{name}: logits mailbox would overflow the arena"
+        # One mailbox page (plane 0, k side) must cover the vocab.
+        assert m["n_kv_heads"] * m["kv_page_size"] * m["d_head"] >= m["vocab"], (
+            f"{name}: logits mailbox would overflow one page"
+        )

@@ -1,27 +1,30 @@
 //! Paged-KV ablation: block/page allocator + copy-on-write prefix
-//! sharing vs the dense slot arena.
+//! sharing vs a dense slot reservation.
 //!
 //! Three claims, each asserted (not just reported):
 //!
 //! 1. **Concurrency at a fixed KV byte budget.**  A dense slot reserves
-//!    all s_max positions per sequence; a page allocator holds only the
-//!    pages a sequence actually covers.  At a budget of 4 dense slots'
-//!    worth of KV bytes (capped via `new_paged_capped`), the paged
-//!    backend must host >= 2x the streams the arena can.
+//!    all s_max positions per sequence; the page allocator holds only
+//!    the pages a sequence actually covers.  At a budget of 4 dense
+//!    slots' worth of KV bytes (capped via `new_paged_capped`), the
+//!    paged engine must host >= 2x the streams dense reservation could
+//!    (the dense engine is gone, so its stream count is the exact
+//!    arithmetic `budget_bytes / (s_max * token_bytes)` it always was).
 //! 2. **Zero-copy cache-hit admission.**  Admitting a sequence from a
 //!    paged prefix-cache checkpoint pins the checkpoint's pages
 //!    (refcount++) instead of copying KV state: page-aligned hits incur
 //!    ZERO device copies even after decoding past the shared prefix,
 //!    and an unaligned hit copies exactly its one partial tail page
 //!    (copy-on-write) at the first decode step.
-//! 3. **Byte-identical greedy output.**  Paged (full pool and capped)
-//!    and arena backends must produce IDENTICAL greedy token streams.
+//! 3. **Byte-identical greedy output.**  The full pool and a capped
+//!    pool must produce IDENTICAL greedy token streams, pinned to the
+//!    python-reference oracle continuation.
 
 use std::collections::HashMap;
 use std::time::Instant;
 
 use umserve::bench_harness::{banner, fmt_f, maybe_write_json, smoke_scale, synth_prompt, Table};
-use umserve::cache::CachedKv;
+use umserve::cache::kv_one_bytes;
 use umserve::engine::sampler::argmax;
 use umserve::engine::TextEngine;
 use umserve::runtime::{ArtifactStore, ModelRuntime};
@@ -44,11 +47,12 @@ fn run_streams(e: &mut TextEngine, streams: usize, gen: usize) -> anyhow::Result
     for i in 0..streams {
         let id = 1 + i as u64;
         let prompt = synth_prompt(id, PROMPT_LEN, 2048);
-        let kv_one = e.prefill(&prompt)?;
-        let first = argmax(&e.kv_one_logits(&kv_one)?);
-        let ckpt = CachedKv::new(kv_one, prompt.len());
+        let Ok(ckpt) = e.prefill_cached(&prompt) else {
+            // Page budget exhausted mid-prefill — that IS the datum.
+            break;
+        };
+        let first = argmax(&ckpt.logits);
         if e.admit(id, &ckpt, prompt.len()).is_err() {
-            // Page budget (or bucket) exhausted — that IS the datum.
             break;
         }
         last.insert(id, first);
@@ -65,12 +69,12 @@ fn run_streams(e: &mut TextEngine, streams: usize, gen: usize) -> anyhow::Result
 }
 
 /// Full greedy stream (prefill first-token + `gen` decode steps) for
-/// the cross-backend equality check.
+/// the cross-configuration equality check.
 fn greedy_stream(e: &mut TextEngine, prompt: &[i32], gen: usize) -> anyhow::Result<Vec<i32>> {
-    let kv_one = e.prefill(prompt)?;
-    let mut produced = vec![argmax(&e.kv_one_logits(&kv_one)?)];
-    let ckpt = CachedKv::new(kv_one, prompt.len());
+    let ckpt = e.prefill_cached(prompt)?;
+    let mut produced = vec![argmax(&ckpt.logits)];
     e.admit(7, &ckpt, prompt.len())?;
+    drop(ckpt);
     for _ in 0..gen {
         let out = e.step(&HashMap::from([(7, *produced.last().unwrap())]))?;
         produced.push(argmax(out.for_id(7).unwrap()));
@@ -80,13 +84,14 @@ fn greedy_stream(e: &mut TextEngine, prompt: &[i32], gen: usize) -> anyhow::Resu
 }
 
 fn main() -> anyhow::Result<()> {
-    banner("Paged-KV ablation — concurrency / zero-copy admission / CoW vs slot arena");
+    banner("Paged-KV ablation — concurrency / zero-copy admission / CoW vs dense slots");
     let gen = smoke_scale(16, 8);
 
     let info = runtime()?.info.clone();
     let (s_max, page) = (info.s_max, info.kv_page_size);
     let budget_slots = 4usize;
     let budget_pages = budget_slots * (s_max / page);
+    let budget_bytes = budget_pages * info.kv_page_bytes();
 
     // ---- 1. concurrency at a fixed KV byte budget --------------------
     let mut t1 = Table::new(
@@ -98,20 +103,22 @@ fn main() -> anyhow::Result<()> {
         &["Backend", "Streams", "KV positions held", "Pool util", "Agg decode tok/s"],
     );
 
-    let mut arena = TextEngine::new(runtime()?)?;
-    let (dense_streams, dense_wall) = run_streams(&mut arena, budget_slots, gen)?;
+    // Dense reservation arithmetic: one s_max-long slot per stream,
+    // regardless of how short the prompt is.
+    let dense_streams = budget_bytes / kv_one_bytes(&info);
+    assert_eq!(dense_streams, budget_slots);
     t1.row(vec![
-        "arena (dense slots)".into(),
+        "dense slots (arithmetic)".into(),
         dense_streams.to_string(),
         format!("{} (reserved)", dense_streams * s_max),
         "100% reserved".into(),
-        fmt_f(dense_streams as f64 * gen as f64 / dense_wall, 1),
+        "-".into(),
     ]);
 
     let mut paged = TextEngine::new_paged_capped(runtime()?, Some(budget_pages))?;
     let max_lanes = paged.max_capacity();
     let (paged_streams, paged_wall) = run_streams(&mut paged, max_lanes, gen)?;
-    let pool = paged.page_pool().expect("paged backend has a pool");
+    let pool = paged.page_pool();
     t1.row(vec![
         format!("paged ({page}-token pages)"),
         paged_streams.to_string(),
@@ -122,43 +129,21 @@ fn main() -> anyhow::Result<()> {
     t1.print();
     assert!(
         paged_streams >= 2 * dense_streams,
-        "paged backend must host >= 2x the arena's streams at the same \
-         KV byte budget (arena {dense_streams}, paged {paged_streams})"
+        "paged pool must host >= 2x the dense reservation's streams at the \
+         same KV byte budget (dense {dense_streams}, paged {paged_streams})"
     );
 
-    // ---- 2. cache-hit admission: pins + CoW vs dense copies ----------
+    // ---- 2. cache-hit admission: pins + CoW --------------------------
     let mut t2 = Table::new(
         "Cache-hit admission cost (checkpoint -> N live sequences)",
-        &["Backend / hit shape", "Admissions", "Wall (ms)", "Zero-copy", "CoW page copies"],
+        &["Hit shape", "Admissions", "Wall (ms)", "Zero-copy", "CoW page copies"],
     );
 
-    // Arena baseline: every cache-hit admission re-injects (copies) the
-    // full dense kv_one into a slot.
-    let mut arena = TextEngine::new(runtime()?)?;
+    // Page-aligned hit: all admissions pin shared pages; decoding past
+    // the prefix starts a FRESH page, so no copy ever happens.
+    let mut paged = TextEngine::new(runtime()?)?;
     let prompt_aligned = synth_prompt(42, 2 * page, 2048); // page-aligned length
-    let kv_one = arena.prefill(&prompt_aligned)?;
-    arena.admit(100, &CachedKv::new(kv_one, prompt_aligned.len()), prompt_aligned.len())?;
-    let ckpt = arena.remove(100, true)?.expect("extracted checkpoint");
-    let t0 = Instant::now();
-    for id in 1..=4u64 {
-        arena.admit(id, &ckpt, prompt_aligned.len())?;
-    }
-    let arena_ms = t0.elapsed().as_secs_f64() * 1e3;
-    t2.row(vec![
-        "arena (inject copy)".into(),
-        "4".into(),
-        fmt_f(arena_ms, 2),
-        "0 / 4".into(),
-        "n/a".into(),
-    ]);
-
-    // Paged, page-aligned hit: all admissions pin shared pages; decoding
-    // past the prefix starts a FRESH page, so no copy ever happens.
-    let mut paged = TextEngine::new_paged(runtime()?)?;
-    let kv_one = paged.prefill(&prompt_aligned)?;
-    paged.admit(100, &CachedKv::new(kv_one, prompt_aligned.len()), prompt_aligned.len())?;
-    let ckpt = paged.remove(100, true)?.expect("extracted checkpoint");
-    assert!(ckpt.is_paged(), "paged extraction must checkpoint pages, not a dense copy");
+    let ckpt = paged.prefill_cached(&prompt_aligned)?;
     let t0 = Instant::now();
     for id in 1..=4u64 {
         paged.admit(id, &ckpt, prompt_aligned.len())?;
@@ -170,31 +155,29 @@ fn main() -> anyhow::Result<()> {
     // Same prefix, per-sequence divergence handled privately: the step
     // succeeded for all four and wrote only fresh pages.
     assert_eq!(out.len(), 4);
-    let cow_aligned = paged.page_pool().unwrap().stats.cow_copies;
+    let cow_aligned = paged.page_pool().stats.cow_copies;
     assert_eq!(cow_aligned, 0, "page-aligned divergence must never copy");
     t2.row(vec![
-        "paged, aligned hit (pin)".into(),
+        "aligned hit (pin)".into(),
         "4".into(),
         fmt_f(paged_ms, 2),
         "4 / 4".into(),
         cow_aligned.to_string(),
     ]);
 
-    // Paged, unaligned hit: the checkpoint's tail page is half full, so
-    // each diverging sequence copies exactly that ONE page on its first
+    // Unaligned hit: the checkpoint's tail page is half full, so each
+    // diverging sequence copies exactly that ONE page on its first
     // decode step — never the whole prefix.
-    let mut paged = TextEngine::new_paged(runtime()?)?;
+    let mut paged = TextEngine::new(runtime()?)?;
     let prompt_ragged = synth_prompt(43, page + page / 2, 2048);
-    let kv_one = paged.prefill(&prompt_ragged)?;
-    paged.admit(100, &CachedKv::new(kv_one, prompt_ragged.len()), prompt_ragged.len())?;
-    let ckpt = paged.remove(100, true)?.expect("extracted checkpoint");
+    let ckpt = paged.prefill_cached(&prompt_ragged)?;
     for id in 1..=2u64 {
         paged.admit(id, &ckpt, prompt_ragged.len())?;
     }
     assert_eq!(paged.stats.zero_copy_admits, 2);
     let feed: HashMap<u64, i32> = (1..=2u64).map(|id| (id, 9)).collect();
     let out = paged.step(&feed)?;
-    let cow_ragged = paged.page_pool().unwrap().stats.cow_copies;
+    let cow_ragged = paged.page_pool().stats.cow_copies;
     assert_eq!(cow_ragged, 2, "each diverging sequence CoWs exactly its tail page");
     // Identical state + identical fed token => identical logits.
     assert_eq!(
@@ -203,7 +186,7 @@ fn main() -> anyhow::Result<()> {
         "CoW'd twins diverged"
     );
     t2.row(vec![
-        "paged, unaligned hit (pin+CoW)".into(),
+        "unaligned hit (pin+CoW)".into(),
         "2".into(),
         "-".into(),
         "2 / 2".into(),
@@ -211,31 +194,25 @@ fn main() -> anyhow::Result<()> {
     ]);
     t2.print();
 
-    // ---- 3. byte-identical greedy output across backends -------------
+    // ---- 3. byte-identical greedy output across pool configs ---------
     let prompt = vec![1i32, 10, 20, 30];
-    let dense_toks = greedy_stream(&mut TextEngine::new(runtime()?)?, &prompt, 5)?;
-    let paged_toks = greedy_stream(&mut TextEngine::new_paged(runtime()?)?, &prompt, 5)?;
+    let paged_toks = greedy_stream(&mut TextEngine::new(runtime()?)?, &prompt, 5)?;
     let capped_toks = greedy_stream(
         &mut TextEngine::new_paged_capped(runtime()?, Some(budget_pages))?,
         &prompt,
         5,
     )?;
     println!(
-        "greedy equality (arena vs paged vs paged-capped): {}",
-        if dense_toks == paged_toks && dense_toks == capped_toks {
-            "IDENTICAL"
-        } else {
-            "MISMATCH"
-        }
+        "greedy equality (paged vs paged-capped): {}",
+        if paged_toks == capped_toks { "IDENTICAL" } else { "MISMATCH" }
     );
-    assert_eq!(dense_toks, paged_toks, "paged backend changed greedy output");
-    assert_eq!(dense_toks, capped_toks, "page cap changed greedy output");
+    assert_eq!(paged_toks, capped_toks, "page cap changed greedy output");
     // Pin the oracle continuation (same as the engine test suite).
-    assert_eq!(dense_toks, vec![1226, 1252, 1388, 1226, 1962, 1515]);
+    assert_eq!(paged_toks, vec![1226, 1252, 1388, 1226, 1962, 1515]);
 
     maybe_write_json("ablation_paged_kv", &[&t1, &t2])?;
     println!("expected: >=2x streams at the same KV byte budget, zero-copy");
     println!("admission on page-aligned prefix hits (CoW only for a ragged tail");
-    println!("page), and token-identical greedy output on every backend.");
+    println!("page), and token-identical greedy output at every pool size.");
     Ok(())
 }

@@ -4,8 +4,10 @@
 //!    arrivals — the regime Algorithm 1 targets: with static batching a
 //!    request arriving mid-wave waits for the whole wave to drain; with
 //!    continuous batching it joins at the next token boundary.
-//! 2. Bucket-shrink policy on/off: arena migrations cost O(arena)
-//!    device work, so an aggressive shrink policy can thrash.
+//! 2. Bucket-shrink policy on/off: lane-layout migrations renumber
+//!    block tables host-side (no device copies), but shrinking still
+//!    forfeits warmed large-bucket dispatch, so an aggressive shrink
+//!    policy can thrash.
 //!
 //! Reported: wall time, aggregate tok/s, and mean per-request latency —
 //! the latter is where continuous batching's win lives.

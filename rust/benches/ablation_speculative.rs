@@ -1,6 +1,6 @@
 //! Speculative-decoding ablation: prompt-lookup drafting + one-dispatch
-//! verification on the `spec_chunk_c{C}` catch-up grids, spec on vs off,
-//! on both KV backends (dense arena and paged pool).
+//! verification on the `spec_chunk_paged_c{C}` catch-up grids, spec on
+//! vs off.
 //!
 //! Decode on this stack is dispatch-bound — one XLA execution per
 //! token — so the honest, machine-independent speedup metric is tokens
@@ -14,9 +14,8 @@
 //! n-gram proposer locks onto.
 //!
 //! Speculation must never change tokens: greedy streams are asserted
-//! byte-identical across spec on/off AND across backends, and the
-//! per-request usage attribution must reconcile with the engine
-//! counters.
+//! byte-identical across spec on/off, and the per-request usage
+//! attribution must reconcile with the engine counters.
 //!
 //! `BENCH_SMOKE=1` runs a reduced configuration (CI lane);
 //! `BENCH_JSON_OUT=dir` writes the table as a JSON artifact.
@@ -32,12 +31,12 @@ use umserve::coordinator::{
 };
 use umserve::engine::sampler::SamplingParams;
 
-fn cfg(paged: bool, spec: bool) -> EngineConfig {
+fn cfg(spec: bool) -> EngineConfig {
     EngineConfig {
         model: "qwen3-0.6b".into(),
         artifacts_dir: "artifacts".into(),
         warmup: false,
-        kv: KvConfig { paged, cache_finished: false, ..Default::default() },
+        kv: KvConfig { cache_finished: false, ..Default::default() },
         spec: SpecConfig { enabled: spec, ..Default::default() },
         ..Default::default()
     }
@@ -59,8 +58,8 @@ impl RunOut {
     }
 }
 
-fn run(paged: bool, spec: bool, prompts: &[(u64, Vec<i32>)], n_new: usize) -> RunOut {
-    let mut s = Scheduler::new(cfg(paged, spec)).expect("scheduler");
+fn run(spec: bool, prompts: &[(u64, Vec<i32>)], n_new: usize) -> RunOut {
+    let mut s = Scheduler::new(cfg(spec)).expect("scheduler");
     // Warm the executables (prefill + decode + spec grids) off the clock.
     let _ = submit(&mut s, 9000, vec![9; 12], 4);
     s.run_until_idle();
@@ -136,7 +135,6 @@ fn main() -> anyhow::Result<()> {
         ),
         &[
             "Workload",
-            "Backend",
             "Spec",
             "Wall (s)",
             "tok/s",
@@ -147,65 +145,56 @@ fn main() -> anyhow::Result<()> {
         ],
     );
 
-    let mut solo_speedups: Vec<f64> = Vec::new();
+    let mut solo_speedup = None;
     for (wname, prompts, n_new) in [("solo", &solo, solo_gen), ("batch", &batch, batch_gen)] {
-        for paged in [false, true] {
-            let backend = if paged { "paged" } else { "arena" };
-            let mut by_spec: Vec<RunOut> = Vec::new();
-            for spec in [false, true] {
-                let r = run(paged, spec, prompts, n_new);
-                assert_eq!(
-                    r.tokens,
-                    prompts.len() * n_new,
-                    "{wname}/{backend}/spec={spec}: short generation"
-                );
-                if spec {
-                    assert!(
-                        r.spec_rounds > 0,
-                        "{wname}/{backend}: speculation never engaged on a repetitive workload"
-                    );
-                    assert!(r.accepted <= r.proposed);
-                    assert!(r.proposed > 0, "{wname}/{backend}: rounds fired but nothing drafted");
-                } else {
-                    assert_eq!(r.spec_rounds, 0, "spec off must not dispatch verify rounds");
-                    assert_eq!(r.proposed, 0);
-                }
-                table.row(vec![
-                    wname.into(),
-                    backend.into(),
-                    if spec { "on" } else { "off" }.into(),
-                    fmt_f(r.wall, 2),
-                    fmt_f(r.tokens as f64 / r.wall, 1),
-                    r.dispatches().to_string(),
-                    fmt_f(r.tokens as f64 / r.dispatches() as f64, 2),
-                    r.spec_rounds.to_string(),
-                    fmt_f(100.0 * r.accepted as f64 / r.proposed.max(1) as f64, 1),
-                ]);
-                by_spec.push(r);
-            }
-            let (off, on) = (&by_spec[0], &by_spec[1]);
-            // Zero output drift: speculation is a pure latency trade.
+        let mut by_spec: Vec<RunOut> = Vec::new();
+        for spec in [false, true] {
+            let r = run(spec, prompts, n_new);
             assert_eq!(
-                off.streams, on.streams,
-                "{wname}/{backend}: speculation changed greedy output"
+                r.tokens,
+                prompts.len() * n_new,
+                "{wname}/spec={spec}: short generation"
             );
-            let dispatch_speedup = off.dispatches() as f64 / on.dispatches() as f64;
-            eprintln!(
-                "  {wname}/{backend}: dispatch speedup {dispatch_speedup:.2}x \
-                 (wall {:.2}x), acceptance {:.0}%",
-                off.wall / on.wall,
-                100.0 * on.accepted as f64 / on.proposed.max(1) as f64,
-            );
-            if wname == "solo" {
-                solo_speedups.push(dispatch_speedup);
+            if spec {
+                assert!(
+                    r.spec_rounds > 0,
+                    "{wname}: speculation never engaged on a repetitive workload"
+                );
+                assert!(r.accepted <= r.proposed);
+                assert!(r.proposed > 0, "{wname}: rounds fired but nothing drafted");
+            } else {
+                assert_eq!(r.spec_rounds, 0, "spec off must not dispatch verify rounds");
+                assert_eq!(r.proposed, 0);
             }
+            table.row(vec![
+                wname.into(),
+                if spec { "on" } else { "off" }.into(),
+                fmt_f(r.wall, 2),
+                fmt_f(r.tokens as f64 / r.wall, 1),
+                r.dispatches().to_string(),
+                fmt_f(r.tokens as f64 / r.dispatches() as f64, 2),
+                r.spec_rounds.to_string(),
+                fmt_f(100.0 * r.accepted as f64 / r.proposed.max(1) as f64, 1),
+            ]);
+            by_spec.push(r);
+        }
+        let (off, on) = (&by_spec[0], &by_spec[1]);
+        // Zero output drift: speculation is a pure latency trade.
+        assert_eq!(
+            off.streams, on.streams,
+            "{wname}: speculation changed greedy output"
+        );
+        let dispatch_speedup = off.dispatches() as f64 / on.dispatches() as f64;
+        eprintln!(
+            "  {wname}: dispatch speedup {dispatch_speedup:.2}x \
+             (wall {:.2}x), acceptance {:.0}%",
+            off.wall / on.wall,
+            100.0 * on.accepted as f64 / on.proposed.max(1) as f64,
+        );
+        if wname == "solo" {
+            solo_speedup = Some(dispatch_speedup);
         }
     }
-
-    // Backend-independence of the streams (spot check: the solo stream
-    // must match between arena and paged regardless of speculation —
-    // covered per backend above, across backends here via the spec-on
-    // runs being equal to their spec-off twins which tests compare).
 
     // Deterministic dispatch-reduction floor on the repetitive solo
     // workload.  Full scale (192 new tokens) gives the proposer time to
@@ -213,19 +202,15 @@ fn main() -> anyhow::Result<()> {
     // decode.  The smoke run is a third the length — engagement ramps
     // over the first cycles — so the floor is looser there.
     let floor = if smoke() { 1.15 } else { 1.5 };
-    for (backend, sp) in ["arena", "paged"].iter().zip(&solo_speedups) {
-        assert!(
-            *sp >= floor,
-            "solo/{backend}: dispatch speedup {sp:.2}x below the {floor}x floor"
-        );
-    }
+    let sp = solo_speedup.expect("solo workload ran");
+    assert!(sp >= floor, "solo: dispatch speedup {sp:.2}x below the {floor}x floor");
 
     table.print();
     maybe_write_json("ablation_speculative", &[&table])?;
     println!("expected: on the repetitive solo workload, prompt-lookup drafts verify");
-    println!("in one spec_chunk dispatch each, cutting grid dispatches >= 1.5x at");
-    println!("full scale (wall-clock tok/s tracks dispatches on this dispatch-bound");
-    println!("stack); batched sequences draft independently against one shared");
+    println!("in one spec_chunk_paged dispatch each, cutting grid dispatches >= 1.5x");
+    println!("at full scale (wall-clock tok/s tracks dispatches on this dispatch-");
+    println!("bound stack); batched sequences draft independently against one shared");
     println!("decode dispatch; output is byte-identical everywhere, spec on or off.");
     Ok(())
 }

@@ -9,6 +9,7 @@
 use umserve::baselines::{generate_single_stream, Comparator};
 use umserve::bench_harness::{banner, fmt_f, synth_prompt, Table};
 use umserve::engine::tokenizer::Tokenizer;
+use umserve::engine::TextEngine;
 use umserve::runtime::{ArtifactStore, ModelRuntime};
 
 fn main() -> anyhow::Result<()> {
@@ -37,9 +38,11 @@ fn main() -> anyhow::Result<()> {
 
     for name in models {
         let rt = ModelRuntime::load(&client, &store, name)?;
+        let paper_name = rt.info.paper_name.clone();
         let prompt = synth_prompt(1, 24, rt.info.vocab);
+        let mut eng = TextEngine::new(rt)?;
         // Warm the executables (compile once, excluded from timing).
-        let _ = generate_single_stream(&rt, Comparator::Ours, None, &prompt, 4)?;
+        let _ = generate_single_stream(&mut eng, Comparator::Ours, None, &prompt, 4)?;
 
         let mut rates = std::collections::HashMap::new();
         for c in Comparator::all() {
@@ -47,7 +50,7 @@ fn main() -> anyhow::Result<()> {
             // orderings between comparators otherwise.
             let mut best = 0f64;
             for _ in 0..3 {
-                let rep = generate_single_stream(&rt, c, Some(&tokenizer), &prompt, n_new)?;
+                let rep = generate_single_stream(&mut eng, c, Some(&tokenizer), &prompt, n_new)?;
                 best = best.max(rep.tok_per_s);
             }
             rates.insert(c.name(), best);
@@ -55,7 +58,7 @@ fn main() -> anyhow::Result<()> {
         }
         let speedup = rates["ours"] / rates["llama.cpp-sim"];
         table.row(vec![
-            format!("{} ({})", name, rt.info.paper_name),
+            format!("{} ({})", name, paper_name),
             fmt_f(rates["ours"], 1),
             fmt_f(rates["vllm-metal-sim"], 1),
             fmt_f(rates["mlx-lm-sim"], 1),

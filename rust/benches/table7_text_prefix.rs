@@ -4,7 +4,8 @@
 //! Paper: no cache 245 ms TTFT -> prefix hit 42 ms (5.8x).  Workload:
 //! a long shared system prompt warmed once, then requests whose prompt
 //! = shared prefix + short unique user turn.  The hit path replaces a
-//! 512-token prefill with an inject + ~16 catch-up decode steps.
+//! 512-token prefill with a zero-copy page pin + ~16 catch-up decode
+//! steps.
 
 use std::time::Instant;
 
@@ -27,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     })?;
     let prefix = synth_prompt(7000, prefix_len, 2048);
 
-    // Executable warmup (both prefill bucket + decode + inject paths).
+    // Executable warmup (prefill chunks + decode + page-pin admission).
     run_ttft(&mut s, prefix.clone(), 1)?;
 
     // Cold TTFTs: unique prompts, no usable prefix in cache.
@@ -55,7 +56,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Full hits: the EXACT prompt repeats (the paper's "repeated
-    // prompts" case) — prefill replaced by a single arena inject.
+    // prompts" case) — prefill replaced by pinning the checkpoint's pages.
     let mut full = Vec::new();
     for _ in 0..reps {
         full.push(run_ttft(&mut s, repeated_prompt.clone(), 4)?);

@@ -8,10 +8,17 @@
 //!
 //! | comparator      | modelled property                      | mechanism here |
 //! |-----------------|----------------------------------------|----------------|
-//! | `llama.cpp-sim` | discrete-memory transfers, sequential  | full KV arena host round-trip per decode step |
+//! | `llama.cpp-sim` | discrete-memory transfers, sequential  | per-sequence KV footprint crosses the host boundary every decode step |
 //! | `mlx-lm-sim`    | library-only: no scheduler             | zero-copy KV, but per-step host softmax + full-output re-detokenisation |
 //! | `vllm-metal-sim`| hybrid MLX/PyTorch plugin              | batched, but KV round-trips on every batch-composition change + per-step host softmax |
-//! | ours            | vllm-mlx                               | device-resident arenas + bucketed continuous batching + incremental detok |
+//! | ours            | vllm-mlx                               | device-resident paged KV pool + bucketed continuous batching + incremental detok |
+//!
+//! All four decode through the SAME paged engine (pages + block tables
+//! + mailbox readback) — the dense arena backend is gone — so the
+//! overheads are synthesized on top: the discrete-memory models ship a
+//! buffer of exactly the modelled KV footprint (`ModelInfo::arena_shape`
+//! survives as pure geometry for this) across the host boundary at the
+//! modelled cadence.
 //!
 //! Honest-simulation note (EXPERIMENTS.md §Deviations): the `mlx-lm-sim`
 //! gap at batch 1 under-represents the paper's 1.5x for small models
@@ -19,13 +26,14 @@
 //! substrate; the llama.cpp gap (memory transfers) is reproduced
 //! directly.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::engine::sampler::argmax;
 use crate::engine::tokenizer::Tokenizer;
-use crate::runtime::ModelRuntime;
+use crate::engine::TextEngine;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Comparator {
@@ -66,44 +74,52 @@ pub struct SingleStreamReport {
     pub tok_per_s: f64,
 }
 
+/// Sequence id reserved for baseline runs (the engine is otherwise
+/// idle while a comparator measurement owns it).
+const BASE_ID: u64 = 1;
+
 /// Greedy single-stream generation under a comparator's overhead model.
-/// Measures decode-phase throughput (the paper's tok/s metric).
+/// Measures decode-phase throughput (the paper's tok/s metric).  The
+/// engine must have no active sequences; it is returned idle.
 pub fn generate_single_stream(
-    rt: &ModelRuntime,
+    eng: &mut TextEngine,
     comparator: Comparator,
     tokenizer: Option<&Tokenizer>,
     prompt: &[i32],
     n_new: usize,
 ) -> Result<SingleStreamReport> {
     let t0 = Instant::now();
-    let kv_one = rt.prefill(prompt)?;
-    let mut arena = rt.new_arena(1)?;
-    arena = rt.inject(1, &arena, &kv_one, 0)?;
+    let kv = eng.prefill_cached(prompt)?;
+    eng.admit(BASE_ID, &kv, prompt.len())?;
     let prefill_s = t0.elapsed().as_secs_f64();
 
-    let arena_dims = rt.info.arena_shape(1);
+    // Discrete-memory overhead model: a buffer of one sequence's full
+    // KV footprint (what a non-unified backend ships between CPU prep
+    // and GPU compute) crosses the host boundary every decode step.
+    let kv_one_dims = eng.rt.info.arena_shape(1);
+    let kv_one_host = vec![0.1f32; eng.rt.info.arena_elements(1)];
+
     let mut generated: Vec<i32> = Vec::with_capacity(n_new);
     let mut detok_sink = 0usize; // prevent the detok work being optimised out
 
-    let first = argmax(&rt.read_logits(1, &arena, 0)?);
-    generated.push(first);
+    generated.push(argmax(&eng.cached_logits(&kv)?));
+    drop(kv); // release the checkpoint pin; the admitted lane keeps its pages
     let t1 = Instant::now();
-    let mut pos = prompt.len() as i32;
     while generated.len() < n_new {
         let tok = *generated.last().unwrap();
-        arena = rt.decode(1, &[tok], &[pos], &arena)?;
-        pos += 1;
+        let step = eng.step(&HashMap::from([(BASE_ID, tok)]))?;
+        let logits = step
+            .for_id(BASE_ID)
+            .ok_or_else(|| anyhow::anyhow!("no logits for baseline sequence"))?;
 
         match comparator {
             Comparator::Ours => {
-                let logits = rt.read_logits(1, &arena, 0)?;
-                generated.push(argmax(&logits));
+                generated.push(argmax(logits));
             }
             Comparator::MlxLmSim | Comparator::VllmMetalSim => {
                 // Library/hybrid overhead model: full-vocab host softmax
                 // every step + full-output re-detokenisation (no
                 // incremental detok state).
-                let logits = rt.read_logits(1, &arena, 0)?;
                 let m = logits.iter().cloned().fold(f32::MIN, f32::max);
                 let exps: Vec<f32> = logits.iter().map(|l| (l - m).exp()).collect();
                 let sum: f32 = exps.iter().sum();
@@ -114,14 +130,9 @@ pub fn generate_single_stream(
                 }
             }
             Comparator::LlamaCppSim => {
-                // Discrete-memory model: the KV state crosses the host
-                // boundary every step (to_literal + re-upload), the way a
-                // non-unified-memory backend ships KV between CPU prep
-                // and GPU compute.
-                let host = rt.to_host_f32(&arena)?;
-                arena = rt.upload_f32(&host, &arena_dims)?;
-                let logits = rt.read_logits(1, &arena, 0)?;
-                generated.push(argmax(&logits));
+                let dev = eng.rt.upload_f32(&kv_one_host, &kv_one_dims)?;
+                std::hint::black_box(eng.rt.to_host_f32(&dev)?);
+                generated.push(argmax(logits));
                 if let Some(t) = tokenizer {
                     detok_sink += t.decode(&generated).len();
                 }
@@ -130,10 +141,11 @@ pub fn generate_single_stream(
     }
     let decode_s = t1.elapsed().as_secs_f64();
     std::hint::black_box(detok_sink);
+    eng.remove(BASE_ID, false)?;
 
     Ok(SingleStreamReport {
         comparator: comparator.name(),
-        model: rt.info.name.clone(),
+        model: eng.rt.info.name.clone(),
         prompt_tokens: prompt.len(),
         new_tokens: n_new,
         prefill_s,
@@ -143,44 +155,43 @@ pub fn generate_single_stream(
 }
 
 /// vllm-metal-sim batched mode: continuous batching like ours, but the
-/// arena round-trips through the host on every composition change.
-/// Returns aggregate tok/s over `n_requests` closed-loop requests.
+/// batch's KV footprint round-trips through the host on every
+/// composition change (each admission).  Returns aggregate tok/s over
+/// `n_requests` closed-loop requests.
 pub fn vllm_metal_batched(
-    rt: &ModelRuntime,
+    eng: &mut TextEngine,
     n_requests: usize,
     prompt: &[i32],
     n_new: usize,
 ) -> Result<f64> {
-    let bucket = rt
+    let bucket = eng
+        .rt
         .info
-        .bucket_for(n_requests)
+        .bucket_for(n_requests.min(eng.rt.info.max_decode_bucket()))
         .ok_or_else(|| anyhow::anyhow!("no bucket for {n_requests}"))?;
-    let arena_dims = rt.info.arena_shape(bucket);
-    let mut arena = rt.new_arena(bucket)?;
+    let batch_dims = eng.rt.info.arena_shape(bucket);
+    let batch_host = vec![0.1f32; eng.rt.info.arena_elements(bucket)];
     let t0 = Instant::now();
-    let mut pos = vec![0i32; bucket];
-    let mut last = vec![0i32; bucket];
-    for slot in 0..n_requests {
-        let kv_one = rt.prefill(prompt)?;
-        arena = rt.inject(bucket, &arena, &kv_one, slot)?;
-        // Composition change -> hybrid host round-trip.
-        let host = rt.to_host_f32(&arena)?;
-        arena = rt.upload_f32(&host, &arena_dims)?;
-        pos[slot] = prompt.len() as i32;
-        last[slot] = argmax(&rt.read_logits(bucket, &arena, slot)?);
+    let mut last: HashMap<u64, i32> = HashMap::new();
+    for i in 0..n_requests {
+        let id = BASE_ID + i as u64;
+        let kv = eng.prefill_cached(prompt)?;
+        eng.admit(id, &kv, prompt.len())?;
+        last.insert(id, argmax(&eng.cached_logits(&kv)?));
+        // Composition change -> hybrid host round-trip of the batch KV.
+        let dev = eng.rt.upload_f32(&batch_host, &batch_dims)?;
+        std::hint::black_box(eng.rt.to_host_f32(&dev)?);
     }
     let mut produced = n_requests;
     for _ in 1..n_new {
-        arena = rt.decode(bucket, &last, &pos, &arena)?;
-        for p in pos.iter_mut() {
-            *p += 1;
-        }
-        let all = rt.read_logits_all(bucket, &arena)?;
-        let v = rt.info.vocab;
-        for slot in 0..n_requests {
-            last[slot] = argmax(&all[slot * v..(slot + 1) * v]);
+        let step = eng.step(&last)?;
+        for (id, logits) in step.iter() {
+            last.insert(id, argmax(logits));
         }
         produced += n_requests;
+    }
+    for i in 0..n_requests {
+        eng.remove(BASE_ID + i as u64, false)?;
     }
     Ok(produced as f64 / t0.elapsed().as_secs_f64())
 }

@@ -1,4 +1,6 @@
-//! §Perf profiling probe: per-entry wall times across buckets.
+//! §Perf profiling probe: per-entry wall times across buckets, at the
+//! raw runtime layer (synthetic block tables over the paged pool — no
+//! engine, no scheduler).
 use std::time::Instant;
 use umserve::runtime::{ArtifactStore, ModelRuntime};
 
@@ -8,31 +10,55 @@ fn main() -> anyhow::Result<()> {
     let store = ArtifactStore::open("artifacts")?;
     let rt = ModelRuntime::load(&client, &store, &model)?;
     let buckets = rt.info.decode_buckets.clone();
+    let nblk = rt.info.kv_blocks_per_seq();
+    let mut pool = rt.new_pool()?;
+
+    // Prefill-chunk cost (the admission building block).
+    if let Some(c) = rt.info.max_chunk_bucket() {
+        let chunk = vec![5i32; c];
+        let mut table = vec![0i32; nblk];
+        table[0] = 1;
+        let n = 10;
+        pool = rt.prefill_from_paged(&pool, 0, &chunk, &table, 2)?; // warm
+        let t0 = Instant::now();
+        for _ in 0..n {
+            pool = rt.prefill_from_paged(&pool, 0, &chunk, &table, 2)?;
+        }
+        let chunk_ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+        println!("{model} prefill_chunk_paged_c{c}: {chunk_ms:.2} ms/chunk ({:.3} ms/token)", chunk_ms / c as f64);
+    }
+
     for &b in &buckets {
-        let arena = rt.new_arena(b)?;
+        // Lane i decodes into page 1+i (positions stay inside the first
+        // block) and reads back through mailbox page 1+b+i.
         let tokens = vec![5i32; b];
-        let pos: Vec<i32> = (0..b).map(|i| 10 + i as i32).collect();
+        let pos: Vec<i32> = (0..b).map(|i| 10 + i as i32 % 32).collect();
+        let mut tables = vec![0i32; b * nblk];
+        let mut mailbox = vec![0i32; b];
+        for i in 0..b {
+            tables[i * nblk] = (1 + i) as i32;
+            mailbox[i] = (1 + b + i) as i32;
+        }
         // warm (compile)
-        let mut a = rt.decode(b, &tokens, &pos, &arena)?;
+        pool = rt.decode_paged(b, &tokens, &pos, &tables, &mailbox, &pool)?;
         let n = 30;
         let t0 = Instant::now();
         for _ in 0..n {
-            a = rt.decode(b, &tokens, &pos, &a)?;
+            pool = rt.decode_paged(b, &tokens, &pos, &tables, &mailbox, &pool)?;
         }
         let decode_ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
         let t1 = Instant::now();
         for _ in 0..n {
-            let _ = rt.read_logits_all(b, &a)?;
+            let _ = rt.read_logits_page(&pool, mailbox[0] as u32)?;
         }
         let read_ms = t1.elapsed().as_secs_f64() * 1e3 / n as f64;
-        // inject cost
-        let kv1 = rt.new_arena(1)?;
+        // copy_page cost (the copy-on-write primitive)
         let t2 = Instant::now();
         for _ in 0..n {
-            a = rt.inject(b, &a, &kv1, 0)?;
+            pool = rt.copy_page(&pool, 1, 2)?;
         }
-        let inject_ms = t2.elapsed().as_secs_f64() * 1e3 / n as f64;
-        println!("{model} b{b}: decode {decode_ms:.2} ms/step ({:.2} ms/slot), read_logits {read_ms:.2} ms, inject {inject_ms:.2} ms",
+        let cow_ms = t2.elapsed().as_secs_f64() * 1e3 / n as f64;
+        println!("{model} b{b}: decode_paged {decode_ms:.2} ms/step ({:.2} ms/lane), read_logits_page {read_ms:.2} ms, copy_page {cow_ms:.2} ms",
                  decode_ms / b as f64);
     }
     Ok(())

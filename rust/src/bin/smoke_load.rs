@@ -1,32 +1,38 @@
 //! Runtime smoke: greedy-generate through the real artifact chain
-//! (prefill -> inject -> decode*) and print the tokens, for comparison
-//! against python's `model.reference_generate`.
+//! (paged prefill chunks -> decode_paged* -> read_logits_page) and
+//! print the tokens, for comparison against python's
+//! `model.reference_generate`.
 
+use std::collections::HashMap;
+
+use umserve::engine::TextEngine;
 use umserve::runtime::{ArtifactStore, ModelRuntime};
 
 fn main() -> anyhow::Result<()> {
     let client = xla::PjRtClient::cpu()?;
     let store = ArtifactStore::open("artifacts")?;
     let rt = ModelRuntime::load(&client, &store, "qwen3-0.6b")?;
+    let mut eng = TextEngine::new(rt)?;
 
     let prompt = [1i32, 10, 20, 30];
-    let kv_one = rt.prefill(&prompt)?;
-    let arena = rt.new_arena(1)?;
-    let arena = rt.inject(1, &arena, &kv_one, 0)?;
+    let kv = eng.prefill_cached(&prompt)?;
 
-    // Cross-check the extractor-based mailbox read against a full
-    // literal read of the arena (mailbox layout: plane 0, k=0, slot, h=0).
-    let raw = rt.read_logits(1, &arena, 0)?;
-    let full = rt.to_host_f32(&arena)?;
-    let off = rt.info.logits_offset(0);
-    let via_literal = &full[off..off + rt.info.vocab];
-    let max_diff = raw
+    // Chunk-invariance cross-check: rebuilding the same prompt token
+    // by token on top of a cached 1-token prefix must land on the
+    // exact same last-token logits (the catch-up equivalence contract
+    // every cache-hit resume path relies on).
+    let head = eng.prefill_cached(&prompt[..1])?;
+    let rebuilt = eng.catch_up_tokenwise_cached(&head, 1, &prompt[1..])?;
+    let max_diff = kv
+        .logits
         .iter()
-        .zip(via_literal)
+        .zip(rebuilt.logits.iter())
         .map(|(a, b)| (a - b).abs())
         .fold(0f32, f32::max);
-    println!("mailbox extractor-vs-literal max diff: {max_diff}");
-    assert_eq!(max_diff, 0.0, "mailbox read mismatch");
+    println!("prefill-vs-catchup max logit diff: {max_diff}");
+    assert_eq!(max_diff, 0.0, "catch-up equivalence violated");
+    drop(head);
+    drop(rebuilt);
 
     let argmax = |v: &[f32]| -> i32 {
         v.iter()
@@ -36,17 +42,20 @@ fn main() -> anyhow::Result<()> {
             .0 as i32
     };
 
-    let mut out = vec![argmax(&raw)];
-    let mut pos = prompt.len() as i32;
-    let mut arena = arena;
+    let mut out = vec![argmax(&kv.logits)];
+    eng.admit(1, &kv, prompt.len())?;
+    drop(kv);
     for _ in 0..5 {
-        arena = rt.decode(1, &[*out.last().unwrap()], &[pos], &arena)?;
-        out.push(argmax(&rt.read_logits(1, &arena, 0)?));
-        pos += 1;
+        let step = eng.step(&HashMap::from([(1u64, *out.last().unwrap())]))?;
+        let logits = step.for_id(1).expect("active sequence has logits");
+        out.push(argmax(logits));
     }
+    eng.remove(1, false)?;
     println!("rust greedy tokens: {out:?}");
     println!("expected (python) : [1226, 1252, 1388, 1226, 1962, 1515]");
     assert_eq!(out, vec![1226, 1252, 1388, 1226, 1962, 1515]);
-    println!("runtime smoke OK; stats: {:?}", rt.stats());
+    let pool = eng.page_pool();
+    assert_eq!(pool.allocated_pages, 0, "page leak after smoke");
+    println!("runtime smoke OK; stats: {:?}", eng.rt.stats());
     Ok(())
 }

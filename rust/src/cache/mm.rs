@@ -7,7 +7,8 @@
 //!   image collide); value: the encoder's output embeddings.  A hit
 //!   skips the vision encoder entirely (the 1.5–4 s term).
 //! * **KV-state cache** — key: SHA-256 over (image content hashes ++
-//!   prompt token ids); value: the prefilled kv_one *plus the
+//!   prompt token ids); value: the prefilled KV state (pinned pool
+//!   pages) *plus the
 //!   fingerprint of the encoder outputs it was built from*.  A hit
 //!   additionally skips prompt processing, so turn-2+ latency is decode
 //!   only.
@@ -53,7 +54,8 @@ pub struct VisionEntry {
     pub resolution: usize,
 }
 
-/// One KV-state cache entry: the prefilled kv_one plus the fingerprint
+/// One KV-state cache entry: the prefilled KV state (pinned pool
+/// pages) plus the fingerprint
 /// of the raw (unpooled) encoder outputs it was built from.  The
 /// fingerprint is the validation material for the emb-cache-off
 /// "KV only" path: a hit is only trusted after freshly computed
@@ -167,12 +169,10 @@ impl MmCache {
     /// caller's resume/re-prefill fallbacks cover the loss).
     ///
     /// NOTE: the charge is the *logical* KV footprint (`len` positions,
-    /// matching the paper's per-frame cache-size accounting).  The
-    /// scheduler's insert path (`Scheduler::mm_put_kv`) trims each
-    /// kv_one device-side to the smallest lowered grid covering `len`
-    /// before calling here, so on trim-capable artifacts the logical
-    /// charge also bounds the physical allocation (up to grid
-    /// rounding); untrimmed entries remain s_max-sized.
+    /// matching the paper's per-frame cache-size accounting).  Paged
+    /// entries pin exactly `ceil(len/page)` physical pages, so the
+    /// logical charge also bounds the physical pool pressure (up to
+    /// page rounding) — no device-side trimming is ever needed.
     pub fn put_kv(&mut self, key: ContentHash, kv: Rc<CachedKv>, emb_fp: ContentHash) {
         if self.enable_kv {
             let cost = self.kv_entry_cost(kv.len);
@@ -185,12 +185,9 @@ impl MmCache {
         self.kv.remove(key);
     }
 
-    /// Pool pages currently pinned by paged KV entries (observability).
+    /// Pool pages currently pinned by KV entries (observability).
     pub fn pinned_pages(&self) -> usize {
-        self.kv
-            .iter()
-            .filter_map(|(_, e)| e.kv.pages().map(|p| p.n_pages()))
-            .sum()
+        self.kv.iter().map(|(_, e)| e.kv.pages().n_pages()).sum()
     }
 
     /// Fault-injection hook for validation tests: flip every stored
@@ -299,18 +296,18 @@ mod tests {
         );
     }
 
-    // KV-entry accounting tests: the entries hold real PjRtBuffers, so
-    // a CPU client (kept alive across the assertions) backs them.
-    fn dummy_kv(client: &xla::PjRtClient, len: usize) -> Rc<CachedKv> {
-        let buf = client
-            .buffer_from_host_buffer::<f32>(&[0.0f32], &[1], None)
-            .unwrap();
-        CachedKv::new(buf, len)
+    // KV-entry accounting tests: CachedKv is host-state only (page
+    // pins + host logits), so a host-side PageArena backs the dummies —
+    // no device needed.
+    fn dummy_kv(arena: &crate::runtime::SharedPageArena, len: usize) -> Rc<CachedKv> {
+        let mut set = crate::runtime::PageSet::new(arena);
+        assert!(set.grow(len.div_ceil(64)));
+        CachedKv::new_paged(set, vec![0.0; 4], len)
     }
 
     #[test]
     fn kv_entries_are_sized_by_sequence_length() {
-        let client = xla::PjRtClient::cpu().unwrap();
+        let arena = crate::runtime::shared(crate::runtime::PageArena::new(32));
         // 8 bytes per token position; budget fits 100 positions total.
         let mut c = MmCache::new(1 << 20, 800, 8);
         assert_eq!(c.kv_entry_cost(64), 512);
@@ -319,44 +316,51 @@ mod tests {
         let fp = ContentHash::of(b"fp");
         // A "64-frame video" KV (64 positions = 512 B) and two
         // single-image KVs (16 positions = 128 B each) coexist: 768 B.
-        c.put_kv(ContentHash::of(b"video"), dummy_kv(&client, 64), fp);
-        c.put_kv(ContentHash::of(b"img1"), dummy_kv(&client, 16), fp);
-        c.put_kv(ContentHash::of(b"img2"), dummy_kv(&client, 16), fp);
+        c.put_kv(ContentHash::of(b"video"), dummy_kv(&arena, 64), fp);
+        c.put_kv(ContentHash::of(b"img1"), dummy_kv(&arena, 16), fp);
+        c.put_kv(ContentHash::of(b"img2"), dummy_kv(&arena, 16), fp);
         let s = c.stats();
         assert_eq!(s.kv_bytes, 768, "length-proportional accounting");
         assert_eq!(s.kv_evictions, 0);
+        assert_eq!(c.pinned_pages(), 3);
 
         // One more long entry pushes past the budget: the LRU evicts
         // until within bounds — a fixed-cost model would have admitted
-        // all of these at one unit each.
-        c.put_kv(ContentHash::of(b"video2"), dummy_kv(&client, 64), fp);
+        // all of these at one unit each.  Eviction also releases the
+        // victim's pinned pool pages.
+        let free_before = arena.borrow().free_pages();
+        c.put_kv(ContentHash::of(b"video2"), dummy_kv(&arena, 64), fp);
         let s = c.stats();
         assert!(s.kv_bytes <= 800, "budget must hold: {} B used", s.kv_bytes);
         assert!(s.kv_evictions >= 1);
         // The oldest (the first video) was the LRU victim.
         assert!(c.get_kv(&ContentHash::of(b"video")).is_none());
         assert!(c.get_kv(&ContentHash::of(b"video2")).is_some());
+        assert_eq!(arena.borrow().free_pages(), free_before);
+        arena.borrow().check_invariants();
     }
 
     #[test]
     fn oversized_kv_entry_rejected_not_cached() {
-        let client = xla::PjRtClient::cpu().unwrap();
+        let arena = crate::runtime::shared(crate::runtime::PageArena::new(8));
         let mut c = MmCache::new(1 << 20, 100, 8);
         let fp = ContentHash::of(b"fp");
         let k = ContentHash::of(b"huge");
-        // 64 positions * 8 B = 512 B > 100 B budget: rejected outright.
-        c.put_kv(k, dummy_kv(&client, 64), fp);
+        // 64 positions * 8 B = 512 B > 100 B budget: rejected outright,
+        // and the rejected entry's pages return to the pool.
+        c.put_kv(k, dummy_kv(&arena, 64), fp);
         assert!(c.get_kv(&k).is_none());
         assert_eq!(c.stats().kv_bytes, 0);
+        assert_eq!(arena.borrow().allocated_pages(), 0);
     }
 
     #[test]
     fn kv_fingerprint_round_trips_and_corrupts() {
-        let client = xla::PjRtClient::cpu().unwrap();
+        let arena = crate::runtime::shared(crate::runtime::PageArena::new(8));
         let mut c = MmCache::new(1 << 20, 1 << 20, 8);
         let fp = ContentHash::of(b"recorded");
         let k = ContentHash::of(b"key");
-        c.put_kv(k, dummy_kv(&client, 4), fp);
+        c.put_kv(k, dummy_kv(&arena, 4), fp);
         assert_eq!(c.get_kv(&k).unwrap().emb_fp, fp);
         c.corrupt_kv_fingerprints();
         assert_ne!(c.get_kv(&k).unwrap().emb_fp, fp);

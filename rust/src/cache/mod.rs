@@ -15,140 +15,55 @@ pub mod text_prefix;
 
 use std::rc::Rc;
 
-use xla::PjRtBuffer;
-
 use crate::runtime::PageSet;
 
-/// Physical storage behind a cached KV state.
-pub enum KvBacking {
-    /// A device-resident kv_one buffer (the slot-arena backend).  The
-    /// mailbox plane still holds the last token's logits, so a full hit
-    /// can sample its first token without touching the model.  `trim`:
-    /// `None` = a full s_max-sized arena row, `Some(s)` = device-side
-    /// trimmed to the first `s` positions at cache insert (the
-    /// allocation the entry's byte charge actually bounds).  Trimmed
-    /// states must be re-expanded (`ModelRuntime::untrim_kv`) before
-    /// injection or logits readback.  `logits`: host-side override for
-    /// states whose mailbox plane is NOT the last token's logits — a
-    /// speculative-verify dispatch repurposes the whole plane-0 region
-    /// as a packed multi-row readback, so a checkpoint taken before the
-    /// next decode step rebuilds the mailbox must carry its last logits
-    /// host-side (the dense analog of the paged checkpoint's capture).
-    Dense { kv_one: Rc<PjRtBuffer>, trim: Option<usize>, logits: Option<Vec<f32>> },
-    /// Pinned pages in the engine's paged KV pool — a zero-copy
-    /// checkpoint: the pages stay where the sequence wrote them, this
-    /// entry just holds refcounts (dropping the entry releases them).
-    /// The last token's logits are captured host-side at checkpoint
-    /// time (one vocab-sized readback), so a full hit never touches
-    /// the device at all.  Paged entries are exactly sized — they hold
-    /// `ceil(len/page)` pages, no s_max slack — so the trim grids are
-    /// never needed on this path.
-    Paged { pages: PageSet, logits: Vec<f32> },
-}
-
-/// A cached prefilled KV state plus the sequence length it encodes.
+/// A cached prefilled KV state: pinned pages in the engine's paged KV
+/// pool plus the sequence length they encode.
+///
+/// This is a zero-copy checkpoint — the pages stay where the sequence
+/// wrote them; the entry just holds refcounts (dropping it releases
+/// them back to the pool).  The last token's logits are captured
+/// host-side at checkpoint time (one vocab-sized readback), so a full
+/// cache hit never touches the device at all.  Entries are exactly
+/// sized: they pin `ceil(len/page)` pages, no s_max slack, which is
+/// why no trim/expand round-trip exists anywhere on this path.
 pub struct CachedKv {
-    pub backing: KvBacking,
+    /// Pinned KV pages (no mailbox — checkpoints carry logits host-side).
+    pub pages: PageSet,
+    /// The last token's vocab logits, read back at checkpoint time.
+    pub logits: Vec<f32>,
+    /// Token positions the state encodes.
     pub len: usize,
 }
 
 impl CachedKv {
-    pub fn new(kv_one: PjRtBuffer, len: usize) -> Rc<Self> {
-        Rc::new(CachedKv {
-            backing: KvBacking::Dense { kv_one: Rc::new(kv_one), trim: None, logits: None },
-            len,
-        })
-    }
-
-    /// A dense state whose plane-0 mailbox is stale (post-speculation
-    /// checkpoint): the last token's logits ride along host-side.
-    pub fn new_with_logits(kv_one: PjRtBuffer, logits: Vec<f32>, len: usize) -> Rc<Self> {
-        Self::new_dense(kv_one, len, None, Some(logits))
-    }
-
-    /// A dense state trimmed to `positions` physical positions.
-    pub fn new_trimmed(kv_one: PjRtBuffer, len: usize, positions: usize) -> Rc<Self> {
-        Self::new_dense(kv_one, len, Some(positions), None)
-    }
-
-    /// General dense constructor — trim and host-logits override are
-    /// independent (a trimmed post-speculation checkpoint carries both).
-    pub fn new_dense(
-        kv_one: PjRtBuffer,
-        len: usize,
-        trim: Option<usize>,
-        logits: Option<Vec<f32>>,
-    ) -> Rc<Self> {
-        Rc::new(CachedKv {
-            backing: KvBacking::Dense { kv_one: Rc::new(kv_one), trim, logits },
-            len,
-        })
-    }
-
-    /// A paged checkpoint: pinned KV pages + host-side last logits.
     pub fn new_paged(pages: PageSet, logits: Vec<f32>, len: usize) -> Rc<Self> {
-        Rc::new(CachedKv { backing: KvBacking::Paged { pages, logits }, len })
+        Rc::new(CachedKv { pages, logits, len })
     }
 
-    /// The dense kv_one buffer, if this state has one.
-    pub fn dense(&self) -> Option<&Rc<PjRtBuffer>> {
-        match &self.backing {
-            KvBacking::Dense { kv_one, .. } => Some(kv_one),
-            KvBacking::Paged { .. } => None,
-        }
-    }
-
-    /// Trimmed physical length of a dense state (None = untrimmed or
-    /// paged; paged entries carry no s_max slack to trim).
-    pub fn trim(&self) -> Option<usize> {
-        match &self.backing {
-            KvBacking::Dense { trim, .. } => *trim,
-            KvBacking::Paged { .. } => None,
-        }
-    }
-
-    /// Host-side last-logits override of a dense state (present only on
-    /// post-speculation checkpoints whose mailbox plane is stale).
-    pub fn dense_logits(&self) -> Option<&Vec<f32>> {
-        match &self.backing {
-            KvBacking::Dense { logits, .. } => logits.as_ref(),
-            KvBacking::Paged { .. } => None,
-        }
-    }
-
-    pub fn pages(&self) -> Option<&PageSet> {
-        match &self.backing {
-            KvBacking::Paged { pages, .. } => Some(pages),
-            KvBacking::Dense { .. } => None,
-        }
-    }
-
-    pub fn is_paged(&self) -> bool {
-        matches!(self.backing, KvBacking::Paged { .. })
+    pub fn pages(&self) -> &PageSet {
+        &self.pages
     }
 
     /// KV positions this entry PHYSICALLY holds — the unit for byte
-    /// accounting.  Dense: the trimmed length, else the full s_max row.
-    /// Paged: the pinned pages' worth (exactly `ceil(len/page_size)`
-    /// pages — pinned-but-shared pages are charged to every holder,
-    /// which over-counts sharing but keeps the budget a hard bound).
-    pub fn positions_held(&self, s_max: usize, page_size: usize) -> usize {
-        match &self.backing {
-            KvBacking::Dense { trim, .. } => trim.unwrap_or(s_max),
-            KvBacking::Paged { pages, .. } => pages.n_pages() * page_size,
-        }
+    /// accounting.  Pinned-but-shared pages are charged to every
+    /// holder, which over-counts sharing but keeps the budget a hard
+    /// bound on pool pressure.
+    pub fn positions_held(&self, page_size: usize) -> usize {
+        self.pages.n_pages() * page_size
     }
 }
 
-/// Bytes one token position occupies across a kv_one's planes — the
+/// Bytes one token position occupies across the pool's planes — the
 /// unit for length-proportional cache accounting: a 64-frame video's
-/// KV entry must charge ~64x a single image's, even though both are
-/// extracted from s_max-sized device buffers.
+/// KV entry must charge ~64x a single image's.
 pub fn kv_token_bytes(info: &crate::runtime::ModelInfo) -> usize {
     (info.n_layers + 1) * 2 * info.n_kv_heads * info.d_head * 4
 }
 
-/// Bytes held by one full kv_one buffer for budget accounting.
+/// Bytes a dense s_max-length KV state would occupy — pure geometry,
+/// used by the baseline simulators and capacity models to price the
+/// per-sequence buffers that discrete-memory runtimes ship around.
 pub fn kv_one_bytes(info: &crate::runtime::ModelInfo) -> usize {
     kv_token_bytes(info) * info.s_max
 }

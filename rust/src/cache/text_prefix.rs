@@ -11,17 +11,16 @@
 //! ```
 //!
 //! Entries are keyed by the SHA-256 of the token-id sequence (ids as
-//! little-endian u32, matching `Sha256::update_u32_le`) and hold a
-//! device-resident kv_one.  The descending scan returns the *longest*
-//! cached prefix, so a multi-turn conversation reuses the previous
-//! turn's full state and only the new suffix is processed — the
-//! scheduler stages the suffix as a prefill job and feeds it via
-//! `TextEngine::feed_chunk` (one chunk per decode tick; see
+//! little-endian u32, matching `Sha256::update_u32_le`) and hold
+//! pinned pages in the engine's KV pool ([`CachedKv`]).  The
+//! descending scan returns the *longest* cached prefix, so a
+//! multi-turn conversation reuses the previous turn's full state and
+//! only the new suffix is processed — adoption is zero-copy
+//! (`PageSet::share_prefix` pins the cached pages under the new
+//! sequence) and the scheduler stages the suffix as a prefill job fed
+//! one chunk per decode tick (`TextEngine::feed_chunk_paged`; see
 //! `coordinator::scheduler::advance_job`), so even long uncached
 //! suffixes never stall active decodes for more than one chunk.
-//! Cached kv_one buffers are shared (`Rc`) and must never be donated
-//! to a chunk executable; the catch-up path always extends a
-//! device-side copy (`TextEngine::clone_kv`).
 
 use std::rc::Rc;
 
@@ -32,14 +31,11 @@ use super::CachedKv;
 
 pub struct TextPrefixCache {
     lru: LruCache<ContentHash, Rc<CachedKv>>,
-    /// Bytes one token position occupies across a kv_one's planes
+    /// Bytes one token position occupies across the pool's planes
     /// (see [`crate::cache::kv_token_bytes`]).
     token_bytes: usize,
-    /// Physical positions of an UNtrimmed kv_one (the model's s_max) —
-    /// the charge for entries the insert path could not trim.
-    s_max: usize,
-    /// KV page size for charging paged entries (positions per page;
-    /// equals s_max on pre-paging artifacts where it never matters).
+    /// KV page size (positions per page) — entries are charged by the
+    /// physical pages they pin, `ceil(len/page) * page` positions.
     page_size: usize,
 }
 
@@ -60,26 +56,13 @@ pub fn hash_tokens(tokens: &[i32]) -> ContentHash {
 }
 
 impl TextPrefixCache {
-    /// `budget_bytes` bounds total kv_one memory (paper default 512 MB);
-    /// `token_bytes` is the per-position KV cost and `s_max` the
-    /// physical length of an untrimmed kv_one — each entry is charged
-    /// by the positions it PHYSICALLY holds (`CachedKv::trim`, else
-    /// s_max), so on trim-capable artifacts the budget is a true
-    /// allocation bound rather than a worst-case one.
-    pub fn new(budget_bytes: usize, token_bytes: usize, s_max: usize) -> Self {
-        Self::with_page_size(budget_bytes, token_bytes, s_max, s_max)
-    }
-
-    /// Like [`TextPrefixCache::new`] but with the KV page size used to
-    /// charge paged entries (`ceil(len/page) * page` positions — the
-    /// pages they actually pin, with no s_max slack).
-    pub fn with_page_size(
-        budget_bytes: usize,
-        token_bytes: usize,
-        s_max: usize,
-        page_size: usize,
-    ) -> Self {
-        TextPrefixCache { lru: LruCache::new(budget_bytes), token_bytes, s_max, page_size }
+    /// `budget_bytes` bounds the total physical pages pinned by cache
+    /// entries (paper default 512 MB); `token_bytes` is the per-position
+    /// KV cost and `page_size` the positions per pool page — each entry
+    /// is charged by the pages it PHYSICALLY pins, so the budget is a
+    /// true bound on pool pressure rather than a worst-case one.
+    pub fn new(budget_bytes: usize, token_bytes: usize, page_size: usize) -> Self {
+        TextPrefixCache { lru: LruCache::new(budget_bytes), token_bytes, page_size }
     }
 
     /// Algorithm 2.  O(|P|) hashes of O(|P|) tokens each; |P| <= 640
@@ -102,23 +85,19 @@ impl TextPrefixCache {
     }
 
     /// Store the KV state for a processed token sequence, charged by
-    /// the positions its buffer physically holds.
+    /// the pages it physically pins.
     pub fn insert(&mut self, tokens: &[i32], kv: Rc<CachedKv>) {
         debug_assert_eq!(kv.len, tokens.len());
-        let cost = self.token_bytes * kv.positions_held(self.s_max, self.page_size);
+        let cost = self.token_bytes * kv.positions_held(self.page_size);
         self.lru.insert(hash_tokens(tokens), kv, cost);
     }
 
-    /// Pool pages currently pinned by paged entries (observability).
+    /// Pool pages currently pinned by cache entries (observability).
     pub fn pinned_pages(&self) -> usize {
-        self.lru
-            .iter()
-            .filter_map(|(_, kv)| kv.pages().map(|p| p.n_pages()))
-            .sum()
+        self.lru.iter().map(|(_, kv)| kv.pages().n_pages()).sum()
     }
 
-    /// Drop an entry (e.g. a trimmed state the runtime can no longer
-    /// re-expand under mismatched artifacts).
+    /// Drop an entry explicitly (LRU eviction handles the common case).
     pub fn remove(&mut self, tokens: &[i32]) {
         self.lru.remove(&hash_tokens(tokens));
     }
@@ -147,12 +126,7 @@ impl TextPrefixCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    // Tests use a dummy CachedKv without touching PJRT: build from a
-    // real tiny buffer is integration-test territory; here we only need
-    // identity, so fabricate via Rc with an uninhabited buffer is not
-    // possible — instead these tests live in rust/tests/ where a client
-    // exists.  What we CAN test here: the hashing scheme.
+    use crate::runtime::{shared, PageArena, PageSet};
 
     #[test]
     fn token_hash_is_order_sensitive() {
@@ -168,5 +142,31 @@ mod tests {
         for i in 1..p.len() {
             assert_ne!(hash_tokens(&p[..i]), h_full);
         }
+    }
+
+    /// CachedKv is host-state only (page pins + host logits), so cache
+    /// behaviour is testable without a device: entries pin pool pages,
+    /// eviction releases them.
+    #[test]
+    fn eviction_releases_pinned_pages() {
+        let arena = shared(PageArena::new(64));
+        let page = 64usize;
+        let token_bytes = 4usize;
+        // Budget: two 2-page entries (2 pages * 64 pos * 4 B = 512 B each).
+        let mut c = TextPrefixCache::new(1024, token_bytes, page);
+        for id in 0..3i32 {
+            let mut set = PageSet::new(&arena);
+            assert!(set.grow(2));
+            let toks = [id, id + 10, id + 20];
+            c.insert(&toks, CachedKv::new_paged(set, vec![0.0; 4], toks.len()));
+        }
+        // Third insert evicted the first entry; its pages went back.
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.pinned_pages(), 4);
+        assert_eq!(arena.borrow().allocated_pages(), 4);
+        assert!(!c.contains(&[0, 10, 20]));
+        c.clear();
+        assert_eq!(arena.borrow().allocated_pages(), 0);
+        arena.borrow().check_invariants();
     }
 }

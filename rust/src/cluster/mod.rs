@@ -1,6 +1,6 @@
 //! Multi-engine data-parallel serving: an [`EnginePool`] owns N
 //! independent [`Scheduler`] replicas — each with its own PJRT client,
-//! weights, decode arena, text-prefix cache, and mm cache on a
+//! weights, KV page pool, text-prefix cache, and mm cache on a
 //! dedicated thread — behind a router with pluggable placement
 //! policies:
 //!

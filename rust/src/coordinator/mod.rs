@@ -2,7 +2,7 @@
 //! and the continuous-batching scheduler (Algorithm 1).
 //!
 //! Threading model: the [`scheduler::Scheduler`] owns every PJRT object
-//! (client, weights, arenas) on a single thread; the HTTP handlers and
+//! (client, weights, the KV page pool) on a single thread; the HTTP handlers and
 //! example drivers talk to it through mpsc channels — `GenRequest` in,
 //! per-request `Event` streams out.  Python never appears anywhere on
 //! this path.
@@ -91,8 +91,8 @@ pub enum FinishReason {
     Stop,
     /// Hit max_tokens.
     Length,
-    /// Hit the KV arena limit (s_max).
-    ArenaFull,
+    /// Hit the per-sequence KV position limit (s_max).
+    KvFull,
 }
 
 impl FinishReason {
@@ -100,7 +100,7 @@ impl FinishReason {
         match self {
             FinishReason::Stop => "stop",
             FinishReason::Length => "length",
-            FinishReason::ArenaFull => "length",
+            FinishReason::KvFull => "length",
         }
     }
 }
@@ -251,41 +251,43 @@ impl Default for VisionConfig {
     }
 }
 
-/// KV storage backend + cache budget knobs (§3.3 memory management).
+/// KV pool + cache budget knobs (§3.3 memory management).
 #[derive(Debug, Clone)]
 pub struct KvConfig {
-    /// Back the KV with the paged pool (block/page allocator +
-    /// copy-on-write prefix sharing) instead of the dense slot arena.
-    /// Paged mode makes prefix-cache hits, eviction checkpoints, and
-    /// follower coalescing zero-copy page pins, and replaces device-side
-    /// trim/untrim/clone with refcount bookkeeping.  Greedy output is
-    /// byte-identical either way (fresh prompts build through the same
-    /// dense executables and are adopted onto pages).  Requires
-    /// artifacts with paged entries; both `serve` and the library
-    /// engine default it ON when the artifacts carry paged entries.
+    /// Compatibility shim for the retired `--kv paged|arena` flag.
+    /// The paged pool (block/page allocator + copy-on-write prefix
+    /// sharing) is the ONLY KV backend: prefix-cache hits, eviction
+    /// checkpoints, and follower coalescing are zero-copy page pins,
+    /// and prefills build straight onto pages.  `false` (the old
+    /// `--kv arena` spelling) makes the scheduler bail at construction
+    /// with a migration hint; the field disappears next release.
     pub paged: bool,
+    /// Cap the page pool below the manifest's `kv_pool_pages` (None =
+    /// use the full lowered pool).  Benches and tests use this to
+    /// exercise pool exhaustion / backpressure deterministically; the
+    /// engine keeps one page of CoW headroom below whatever cap is set.
+    pub pool_page_cap: Option<usize>,
     /// Text prefix cache budget (0 disables; paper default 512 MB).
+    /// Charged in PHYSICAL pages: a cached entry costs only the pages
+    /// it uniquely pins, so shared prefixes are billed once.
     pub text_cache_bytes: usize,
     /// Multimodal embedding / KV cache budgets (0 disables).
     pub mm_emb_cache_bytes: usize,
     pub mm_kv_cache_bytes: usize,
     /// Store finished sequences' KV for future prefix hits.
     pub cache_finished: bool,
-    /// Allow shrinking the batch bucket when occupancy drops.
-    /// Default OFF: arena migrations cost O(arena) device work per live
-    /// sequence and the `ablation_scheduler` bench shows an aggressive
-    /// shrink policy thrashing under staggered arrivals (grow/shrink
-    /// oscillation).  Enable only for bursty workloads with long idle
-    /// tails where a large arena would otherwise slow single-stream
-    /// decode indefinitely.  (Paged-mode shrink is a free bucket swap
-    /// and happens eagerly regardless.)
+    /// Allow shrinking the decode bucket when occupancy drops.  A
+    /// shrink is a host-side renumber of block-table groups (no device
+    /// copies), but `ablation_scheduler` shows aggressive shrinking can
+    /// still oscillate under staggered arrivals, so it stays opt-in.
     pub allow_shrink: bool,
 }
 
 impl Default for KvConfig {
     fn default() -> Self {
         KvConfig {
-            paged: false,
+            paged: true,
+            pool_page_cap: None,
             text_cache_bytes: 512 << 20,
             mm_emb_cache_bytes: 256 << 20,
             mm_kv_cache_bytes: 256 << 20,

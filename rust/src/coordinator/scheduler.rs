@@ -26,12 +26,15 @@
 //!   for r in B where r.is_complete(): B.remove(r); yield r.output
 //! ```
 //!
-//! Prompts no longer than one chunk (and all admissions when
-//! `prefill_chunk_tokens` is 0 or the artifacts predate the
-//! `prefill_chunk_c{C}` entries) take the legacy inline path: one
-//! prefill executable call at admission.  Partial prefix-cache hits
-//! (Algorithm 2) and the multimodal embedding path (Algorithm 3) route
-//! their uncached suffix through the same chunked feed.
+//! Every prefill builds straight onto pool pages
+//! (`prefill_chunk_paged_c{C}` / `prefill_chunk_embeds_paged_c{C}`) —
+//! there is no dense staging buffer and no adopt pass at finalize.
+//! With `prefill_chunk_tokens` 0 admissions run inline (the whole
+//! prompt is fed synchronously, token-by-token through bucket-1 paged
+//! decode — the bit-exactness baseline).  Partial prefix-cache hits
+//! (Algorithm 2) pin the cached pages zero-copy and route their
+//! uncached suffix through the same chunked feed; the multimodal
+//! embedding path (Algorithm 3) does the same over composed rows.
 //!
 //! The vision encoder is staged the same way
 //! (`EngineConfig::vision_stage`): admission only decodes pixels,
@@ -216,13 +219,17 @@ pub struct StatsSnapshot {
     pub text_cache: (u64, u64, u64, usize),
     pub mm_cache: crate::cache::mm::MmCacheStats,
     pub decode_steps: u64,
+    /// Decode executable dispatches: one per non-empty lane group per
+    /// tick, so > `decode_steps` once lane virtualization packs more
+    /// sequences than the largest lowered bucket.
+    pub decode_dispatches: u64,
     pub prefill_chunks: u64,
     pub occupancy_mean: f64,
-    /// Paged-KV pool state (None on the slot-arena backend).
-    pub kv_pool: Option<PagePoolSnapshot>,
-    /// Pool pages pinned by text-prefix-cache checkpoints (paged mode).
+    /// Paged-KV pool state (the only backend).
+    pub kv_pool: PagePoolSnapshot,
+    /// Pool pages pinned by text-prefix-cache checkpoints.
     pub text_cache_pinned_pages: usize,
-    /// Pool pages pinned by mm-KV-cache checkpoints (paged mode).
+    /// Pool pages pinned by mm-KV-cache checkpoints.
     pub mm_cache_pinned_pages: usize,
 }
 
@@ -233,9 +240,9 @@ struct ActiveReq {
     rng: Rng,
     decoder: StreamDecoder,
     /// prompt ++ tokens actually FED into the KV state.  Invariant: the
-    /// kv arena slot (and any kv_one extracted from it) encodes exactly
-    /// this sequence, and its mailbox holds the logits that follow it —
-    /// so this is the correct prefix-cache key on finish.
+    /// sequence's pinned KV pages encode exactly this sequence, and its
+    /// mailbox page holds the logits that follow it — so this is the
+    /// correct prefix-cache key on finish.
     all_tokens: Vec<i32>,
     prompt_len: usize,
     /// Tokens emitted to the client (completion count).
@@ -392,24 +399,18 @@ struct PrefillJob {
     feed: Feed,
     /// Rows of `feed` already processed.
     fed: usize,
-    /// KV state under construction.  None until the first chunk; the
-    /// first segment of a fresh prompt goes through the one-shot
-    /// prefill executables (identical arithmetic to the legacy path),
-    /// later segments extend it via `prefill_chunk_c{C}`.
-    kv_one: Option<xla::PjRtBuffer>,
-    /// Cached KV state this job extends (partial prefix hits).  The
-    /// chunked path materializes a donatable copy on first touch; the
-    /// tokenwise fallback reads it directly (no copy — nothing donates
-    /// the buffer on that path).
+    /// Cached KV state this job extends (partial prefix hits) or
+    /// passes through untouched (full hits parked for a decode slot).
+    /// On first touch an extension pins the source's pages zero-copy
+    /// (`begin_extend_paged`) and moves to `paged`.
     source: Option<Rc<CachedKv>>,
-    /// Paged-backend build state: when extending a PAGED cached source,
-    /// the job pins the source's pages zero-copy on first touch and
-    /// feeds chunks straight onto pages (`prefill_chunk_paged_c{C}`) —
-    /// no dense staging kv_one, no adopt pass at finalize.  Mutually
-    /// exclusive with `kv_one`.  Fresh prompts build dense in both
-    /// modes (identical arithmetic) and adopt at finalize.
+    /// Pages under construction: fresh prompts and cached-source
+    /// extensions alike feed chunks straight onto pool pages
+    /// (`prefill_chunk_paged_c{C}` / the embeds variant) — no dense
+    /// staging buffer, no adopt pass at finalize.  None until the
+    /// first chunk.
     paged: Option<PageSet>,
-    /// Positions already encoded in `kv_one` (>= `fed` when the job
+    /// Positions already encoded on the pages (>= `fed` when the job
     /// started from a cached prefix).
     built: usize,
     /// Total positions when complete (multimodal: includes visual rows).
@@ -522,40 +523,26 @@ impl Scheduler {
         let rt = ModelRuntime::load(&client, &store, &cfg.model)?;
         let tokenizer = Rc::new(Tokenizer::from_file(store.tokenizer_path())?);
         let token_bytes = kv_token_bytes(&rt.info);
-        let use_paged = cfg.kv.paged && rt.has_paged_kv();
-        if cfg.kv.paged && !use_paged {
+        if !cfg.kv.paged {
+            // One-release compatibility shim: the dense slot-arena
+            // backend is gone (`--kv arena` used to select it).
             bail!(
-                "model {} artifacts lack paged-KV entries; rebuild them with \
-                 `python -m compile.aot --out-dir ../rust/artifacts` or serve with --kv arena",
-                rt.info.name
+                "the dense `--kv arena` backend has been removed; the paged pool is the \
+                 only KV backend.  Drop the flag (or pass --kv paged) — prefix caching, \
+                 eviction and migration are zero-copy page pins now, and greedy output \
+                 is unchanged.  See README.md 'Paged KV memory'."
             );
         }
         if cfg.warmup {
             let first = *rt.info.decode_buckets.first().unwrap();
-            let pre = *rt.info.prefill_buckets.first().unwrap();
             let mut entries = vec![
-                format!("decode_b{first}"),
-                format!("read_logits_b{first}"),
-                format!("inject_b{first}"),
-                format!("prefill_s{pre}"),
+                "zeros_pool".to_string(),
+                format!("decode_paged_b{first}"),
+                "read_logits_page".to_string(),
+                "copy_page".to_string(),
             ];
             if let Some(c) = rt.info.max_chunk_bucket() {
-                if rt.has_chunk_prefill() {
-                    entries.push(format!("prefill_chunk_c{c}"));
-                    entries.push(format!("zeros_b{first}"));
-                }
-            }
-            if use_paged {
-                entries.push("zeros_pool".to_string());
-                entries.push(format!("decode_paged_b{first}"));
-                entries.push("adopt_paged".to_string());
-                entries.push("read_logits_page".to_string());
-                entries.push("copy_page".to_string());
-                if let Some(c) = rt.info.max_chunk_bucket() {
-                    if rt.has_chunk_prefill() {
-                        entries.push(format!("prefill_chunk_paged_c{c}"));
-                    }
-                }
+                entries.push(format!("prefill_chunk_paged_c{c}"));
             }
             let refs: Vec<&str> = entries.iter().map(|s| s.as_str()).collect();
             rt.warmup(&refs)?;
@@ -573,18 +560,15 @@ impl Scheduler {
             cfg.kv.mm_kv_cache_bytes.max(1),
             token_bytes,
         );
-        let s_max = rt.info.s_max;
-        // Paged cache entries are charged by the pages they pin.
-        let cache_page = if use_paged { rt.info.kv_page_size } else { s_max };
-        let engine =
-            if use_paged { TextEngine::new_paged(rt)? } else { TextEngine::new(rt)? };
+        // Cache entries are charged by the pool pages they pin.
+        let cache_page = rt.info.kv_page_size;
+        let engine = TextEngine::new_paged_capped(rt, cfg.kv.pool_page_cap)?;
         let mut s = Scheduler {
             engine,
             tokenizer,
-            text_cache: TextPrefixCache::with_page_size(
+            text_cache: TextPrefixCache::new(
                 cfg.kv.text_cache_bytes.max(1),
                 token_bytes,
-                s_max,
                 cache_page,
             ),
             mm_cache,
@@ -810,118 +794,33 @@ impl Scheduler {
         &mut self.mm_cache
     }
 
-    /// Device-side trim of a KV state to the smallest lowered grid
-    /// covering its length (`trim_kv_s{S}`), so a cache's
-    /// length-proportional byte charge bounds the real device
-    /// allocation, not just the logical footprint.  Returns None —
-    /// caller stores the full s_max buffer — on pre-trim artifacts,
-    /// already-trimmed states, sequences longer than the largest grid,
-    /// and trim failures.  Shared by the mm KV cache and the text
-    /// prefix cache insert paths.
-    fn trim_for_cache(&mut self, kv: &CachedKv) -> Option<Rc<CachedKv>> {
-        if kv.trim().is_some() {
-            return None;
-        }
-        // Paged checkpoints are exactly sized (they pin ceil(len/page)
-        // pages, no s_max slack) — the trim grids have nothing to do on
-        // this path, which is the point of the paging scheme.
-        let kv_one = kv.dense()?;
-        let s = self.engine.rt.info.trim_bucket_for(kv.len)?;
-        if s >= self.engine.rt.info.s_max || !self.engine.rt.has_trim_kv(s) {
-            return None;
-        }
-        let t = self.engine.rt.trim_kv(kv_one, s).ok()?;
-        // A host-side logits override (post-speculation checkpoint)
-        // must survive the trim — the trimmed buffer's mailbox plane is
-        // as stale as the original's.
-        Some(CachedKv::new_dense(t, kv.len, Some(s), kv.dense_logits().cloned()))
-    }
-
-    /// Insert a KV state into the mm cache, first trimming it
-    /// device-side (ROADMAP follow-up from PR 3; see
-    /// [`Self::trim_for_cache`]).
+    /// Insert a KV state into the mm cache.  Paged checkpoints are
+    /// exactly sized — they pin `ceil(len/page)` pool pages, no s_max
+    /// slack — so insertion is pure refcount bookkeeping (the trim
+    /// grids this path once ran are gone with the dense backend).
     fn mm_put_kv(&mut self, key: ContentHash, kv: Rc<CachedKv>, emb_fp: ContentHash) {
         if !self.mm_cache.enable_kv {
             return;
         }
-        match self.trim_for_cache(&kv) {
-            Some(t) => {
-                self.metrics.inc("mm_kv_trims", 1);
-                self.mm_cache.put_kv(key, t, emb_fp);
-            }
-            None => self.mm_cache.put_kv(key, kv, emb_fp),
-        }
+        self.mm_cache.put_kv(key, kv, emb_fp);
     }
 
     /// Insert a finished/evicted text sequence's KV into the prefix
-    /// cache, trimmed device-side like the mm path (ROADMAP follow-up
-    /// from PR 4: the text cache no longer stores s_max-sized kv_ones,
-    /// so its byte budget bounds real allocation too).
+    /// cache — zero-copy: the sequence's own pinned pages become the
+    /// entry, charged by the bytes they physically hold.
     fn text_put(&mut self, tokens: &[i32], kv: Rc<CachedKv>) {
-        match self.trim_for_cache(&kv) {
-            Some(t) => {
-                self.metrics.inc("text_kv_trims", 1);
-                self.text_cache.insert(tokens, t);
-            }
-            None => self.text_cache.insert(tokens, kv),
-        }
+        self.text_cache.insert(tokens, kv);
     }
 
-    /// Re-expand a trimmed cached state to full arena rows
-    /// (`untrim_kv_s{S}`) so every consumer — inject, logits readback,
-    /// clone, chunked catch-up — sees the shape it expects; untrimmed
-    /// states pass through.  None — the caller drops the entry and
-    /// treats it as a miss — when mismatched artifacts can no longer
-    /// rematerialize it.  The lookup-side complement of
-    /// [`Self::trim_for_cache`], shared by the text and mm caches.
-    fn expand_trimmed(&mut self, kv: Rc<CachedKv>) -> Option<Rc<CachedKv>> {
-        match kv.trim() {
-            None => Some(kv),
-            Some(s) => self
-                .engine
-                .rt
-                .untrim_kv(kv.dense()?, s)
-                .ok()
-                .map(|full| CachedKv::new_dense(full, kv.len, None, kv.dense_logits().cloned())),
-        }
-    }
-
-    /// Text prefix lookup through [`Self::expand_trimmed`] (the text
-    /// analog of [`Self::mm_get_kv`]).  An unexpandable entry is
-    /// dropped and the lookup RETRIES: unlike the single-key mm cache,
-    /// the prefix cache may still hold a shorter expandable prefix
-    /// worth a partial-hit catch-up.  Terminates because every failed
-    /// round removes its matched entry.
+    /// Text prefix lookup (Algorithm 2; the text analog of
+    /// [`Self::mm_get_kv`]).
     fn text_lookup(&mut self, tokens: &[i32]) -> Option<crate::cache::text_prefix::PrefixHit> {
-        loop {
-            let hit = self.text_cache.lookup(tokens)?;
-            match self.expand_trimmed(hit.kv) {
-                Some(kv) => {
-                    return Some(crate::cache::text_prefix::PrefixHit {
-                        kv,
-                        matched: hit.matched,
-                        full: hit.full,
-                    })
-                }
-                None => self.text_cache.remove(&tokens[..hit.matched]),
-            }
-        }
+        self.text_cache.lookup(tokens)
     }
 
-    /// Look up an mm KV entry through [`Self::expand_trimmed`].
-    /// Positions past the trim point are zero-filled; attention masks
-    /// by sequence length, so resumed decode is token-identical.
+    /// Look up an mm KV entry.
     fn mm_get_kv(&mut self, key: &ContentHash) -> Option<MmKvEntry> {
-        let hit = self.mm_cache.get_kv(key)?;
-        match self.expand_trimmed(hit.kv) {
-            Some(kv) => Some(MmKvEntry { kv, emb_fp: hit.emb_fp }),
-            None => {
-                // Cannot rematerialize (mismatched artifacts): treat as
-                // a miss and drop the unusable entry.
-                self.mm_cache.remove_kv(key);
-                None
-            }
-        }
+        self.mm_cache.get_kv(key)
     }
 
     /// Admission-time context check: `positions` prompt/vision rows
@@ -931,11 +830,10 @@ impl Scheduler {
     /// never fit must be rejected up front, not crash mid-engine.
     fn check_context(&self, positions: usize) -> Result<()> {
         let info = &self.engine.rt.info;
-        // Prompts are built by the prefill/chunk executables (largest
-        // lowered bucket) and must fit the KV with one decode step
-        // (`admit` requires len + 1 < s_max).
-        let max_prompt = *info.prefill_buckets.last().unwrap_or(&info.s_max);
-        let limit = max_prompt.min(info.s_max.saturating_sub(2));
+        // Chunked paged prefill builds prompts of any length; the only
+        // bound is the per-sequence position budget with one decode
+        // step of headroom (`admit` requires len + 1 < s_max).
+        let limit = info.s_max.saturating_sub(2);
         if positions > limit {
             bail!(
                 "this model's maximum context length is {limit} tokens, \
@@ -948,6 +846,24 @@ impl Scheduler {
     /// Decode slots left before the largest batch bucket is exhausted.
     fn free_slots(&self) -> usize {
         self.engine.max_capacity().saturating_sub(self.active.len())
+    }
+
+    /// Page-pool admission control: park page-consuming staging work
+    /// (instead of erroring the engine) when the pool cannot hold it
+    /// and active decodes will free pages as they finish — the
+    /// `kv_pool_backpressure` counter tracks every parked attempt.
+    /// With nothing decoding the work proceeds regardless: parking
+    /// would deadlock the queue, and a genuine exhaustion is then a
+    /// real capacity error the request should see.
+    fn pool_backpressured(&mut self, need_pages: usize) -> bool {
+        if self.active.is_empty() {
+            return false;
+        }
+        if self.engine.page_pool().free_pages >= need_pages {
+            return false;
+        }
+        self.metrics.inc("kv_pool_backpressure", 1);
+        true
     }
 
     /// Requests the staging area will admit on completion: one per job
@@ -971,9 +887,12 @@ impl Scheduler {
             text_cache: self.text_cache.stats(),
             mm_cache: self.mm_cache.stats(),
             decode_steps: es.decode_steps,
+            decode_dispatches: es.decode_dispatches,
             prefill_chunks: es.prefill_chunks,
-            occupancy_mean: if es.decode_steps > 0 {
-                es.occupancy_sum / es.decode_steps as f64
+            // Mean lane occupancy per DISPATCH (not per tick): with
+            // virtualized lanes one tick issues several dispatches.
+            occupancy_mean: if es.decode_dispatches > 0 {
+                es.occupancy_sum / es.decode_dispatches as f64
             } else {
                 0.0
             },
@@ -997,9 +916,9 @@ impl Scheduler {
         self.publish_load();
     }
 
-    /// Refresh the paged-KV pool gauges (no-op on the arena backend).
+    /// Refresh the paged-KV pool gauges.
     fn publish_page_gauges(&mut self) {
-        let Some(p) = self.engine.page_pool() else { return };
+        let p = self.engine.page_pool();
         self.metrics
             .set_gauge("kv_pages_allocated", p.allocated_pages as f64);
         self.metrics.set_gauge("kv_pages_free", p.free_pages as f64);
@@ -1100,7 +1019,6 @@ impl Scheduler {
                     tokens,
                     feed: Feed::Tokens(Vec::new()),
                     fed: 0,
-                    kv_one: None,
                     source: Some(kv),
                     paged: None,
                     built: total,
@@ -1130,7 +1048,7 @@ impl Scheduler {
                     // Cap the coalesced group at decode capacity: the
                     // whole group joins the batch at once when the
                     // primary finalizes, so a group larger than the
-                    // arena could never be admitted.
+                    // decode-lane ceiling could never be admitted.
                     let cap = self.engine.max_capacity();
                     if let Some(primary) = self
                         .pending
@@ -1166,7 +1084,6 @@ impl Scheduler {
                     tokens,
                     feed,
                     fed: 0,
-                    kv_one: None,
                     source,
                     paged: None,
                     built,
@@ -1312,6 +1229,20 @@ impl Scheduler {
             let Some(pos) = self.pending.iter().position(|j| j.fed < j.feed.rows(d)) else {
                 break;
             };
+            // A chunk appends at most one chunk-bucket of tokens to the
+            // job's page set; +2 covers a straddled page boundary and
+            // the mailbox page the eventual admission pins.
+            let page = self.engine.rt.info.kv_page_size.max(1);
+            let chunk = self
+                .engine
+                .rt
+                .info
+                .max_chunk_bucket()
+                .unwrap_or(page)
+                .min(if self.chunk_tokens > 0 { self.chunk_tokens } else { usize::MAX });
+            if self.pool_backpressured(chunk.div_ceil(page) + 2) {
+                break;
+            }
             let Some(mut job) = self.pending.remove(pos) else { break };
             match self.advance_job(&mut job) {
                 Ok(_) => {
@@ -1358,6 +1289,11 @@ impl Scheduler {
             }
             let (priority, need) = (front.priority, 1 + front.followers.len());
             if !self.make_room(priority, need) {
+                return;
+            }
+            // Each admitted lane pins a logits-mailbox page, and its
+            // first decode step may copy-on-write the shared tail page.
+            if self.pool_backpressured(need * 2) {
                 return;
             }
             let Some(job) = self.pending.remove(pos) else { return };
@@ -1579,31 +1515,26 @@ impl Scheduler {
                         self.engine.catch_up_tokenwise_cached(&src, matched, &suffix)?
                     }
                     None => {
-                        // Complete miss: one-shot prefill of the prompt
-                        // part, then catch up the generated tokens.
-                        // Always a dense build (identical arithmetic in
-                        // both modes); paged admission adopts it.
+                        // Complete miss: re-prefill the prompt part
+                        // straight onto pages, then catch up the
+                        // generated tokens through the same paged feed.
                         let p = req.prompt_len.min(tokens.len());
-                        let kv = self.engine.prefill(&tokens[..p])?;
-                        let kv_one = if p < tokens.len() {
+                        let kv = self.engine.prefill_cached(&tokens[..p])?;
+                        if p < tokens.len() {
                             let rest = tokens[p..].to_vec();
                             if chunked {
-                                let (kv, _) = self.engine.catch_up_chunk(
+                                self.engine.catch_up_chunk_cached(
                                     &kv,
                                     p,
                                     &rest,
                                     self.chunk_tokens,
-                                )?;
-                                kv
+                                )?
                             } else {
-                                let (kv, _) =
-                                    self.engine.catch_up_tokenwise(&kv, p, &rest)?;
-                                kv
+                                self.engine.catch_up_tokenwise_cached(&kv, p, &rest)?
                             }
                         } else {
                             kv
-                        };
-                        CachedKv::new(kv_one, tokens.len())
+                        }
                     }
                 }
             }
@@ -1650,8 +1581,7 @@ impl Scheduler {
                     embeds.extend_from_slice(&self.engine.rt.embed_lookup(piece)?);
                 }
                 self.metrics.inc("mm_evict_rebuilds", 1);
-                let kv_one = self.prefill_embeds_all(&embeds, total)?;
-                CachedKv::new(kv_one, total)
+                self.prefill_embeds_all(&embeds, total)?
             }
         };
         self.engine.admit(id, &kv, kv.len)?;
@@ -1662,83 +1592,56 @@ impl Scheduler {
         Ok(())
     }
 
-    /// Build a kv_one over a full composed embedding sequence by
-    /// looping [`Self::feed_embeds_segment`] to completion — the
+    /// Build a cached KV state over a full composed embedding sequence
+    /// by looping [`Self::feed_embeds_segment`] to completion — the
     /// synchronous form of the staged `Feed::Embeds` path, used by the
     /// mm eviction rebuild.  Because both paths run the SAME segment
     /// feeder, the build/rebuild byte-compat contract (identical
     /// greedy continuation from a rebuilt KV) cannot drift.
-    fn prefill_embeds_all(&mut self, embeds: &[f32], total: usize) -> Result<xla::PjRtBuffer> {
-        let mut kv: Option<xla::PjRtBuffer> = None;
+    fn prefill_embeds_all(&mut self, embeds: &[f32], total: usize) -> Result<Rc<CachedKv>> {
+        if total == 0 {
+            bail!("empty embed sequence");
+        }
+        let mut set = self.engine.begin_fresh_paged()?;
+        self.engine.stats.prefills += 1;
         let mut built = 0usize;
         while built < total {
-            let (out, n) = self.feed_embeds_segment(kv.take(), embeds, built, total - built)?;
-            kv = Some(out);
-            built += n;
+            built += self.feed_embeds_segment(&mut set, built, embeds, total - built)?;
         }
-        kv.ok_or_else(|| anyhow!("empty embed sequence"))
+        self.engine.seal_paged(set, total)
     }
 
     /// Feed the next segment of a composed [vision ++ text] embedding
-    /// sequence into a kv_one under construction, returning the new
-    /// state and the rows consumed.  The FIRST segment of a fresh
-    /// sequence goes through the one-shot embeds prefill (identical
-    /// arithmetic to the legacy inline path); later segments extend it
-    /// via `prefill_chunk_embeds_c{C}`, never exceeding the largest
-    /// lowered chunk bucket.  Shared by the staged `Feed::Embeds`
-    /// branch of [`Self::advance_job`] (one call per scheduler tick)
-    /// and the synchronous [`Self::prefill_embeds_all`] rebuild, so
-    /// build and rebuild stay mechanically identical.
+    /// sequence onto the pages under construction, returning the rows
+    /// consumed.  Segments go through `prefill_chunk_embeds_paged_c{C}`
+    /// at the configured chunk size (clamped to the largest lowered
+    /// chunk bucket; the whole bucket when staging is off).  Shared by
+    /// the staged `Feed::Embeds` branch of [`Self::advance_job`] (one
+    /// call per scheduler tick) and the synchronous
+    /// [`Self::prefill_embeds_all`] rebuild, so build and rebuild stay
+    /// mechanically identical.
     fn feed_embeds_segment(
         &mut self,
-        kv_one: Option<xla::PjRtBuffer>,
-        rows: &[f32],
+        set: &mut PageSet,
         built: usize,
+        rows: &[f32],
         remaining: usize,
-    ) -> Result<(xla::PjRtBuffer, usize)> {
+    ) -> Result<usize> {
         debug_assert!(remaining > 0);
         let d = self.engine.rt.info.d_model;
-        match kv_one {
-            None => {
-                debug_assert_eq!(built, 0);
-                let can_chunk = self.engine.rt.has_chunk_prefill_embeds();
-                let max_embed = *self
-                    .engine
-                    .rt
-                    .info
-                    .embed_prefill_buckets
-                    .last()
-                    .ok_or_else(|| anyhow!("no embed buckets for mm prefill"))?;
-                // Prefer the configured chunk size; with staging off
-                // (or no chunk-embeds entries) take the largest
-                // one-shot bucket — a longer remainder must then chunk
-                // regardless of configuration (evict rebuilds of
-                // sequences that outgrew the embed buckets).
-                let n = if can_chunk && self.chunk_tokens > 0 {
-                    remaining.min(self.chunk_tokens)
-                } else {
-                    remaining.min(max_embed)
-                };
-                let kv = self.engine.rt.prefill_embeds(&rows[..n * d], n)?;
-                self.engine.stats.prefills += 1;
-                Ok((kv, n))
-            }
-            Some(kv) => {
-                let max = self
-                    .engine
-                    .rt
-                    .info
-                    .max_chunk_bucket()
-                    .ok_or_else(|| anyhow!("no chunk buckets for staged embeds"))?;
-                let n = remaining
-                    .min(if self.chunk_tokens > 0 { self.chunk_tokens } else { max })
-                    .min(max);
-                let piece = rows[built * d..(built + n) * d].to_vec();
-                let out = self.engine.feed_chunk_embeds(kv, built, &piece, n)?;
-                self.metrics.inc("prefill_chunks", 1);
-                Ok((out, n))
-            }
-        }
+        let max = self
+            .engine
+            .rt
+            .info
+            .max_chunk_bucket()
+            .ok_or_else(|| anyhow!("no chunk buckets for embed prefill"))?;
+        let n = remaining
+            .min(if self.chunk_tokens > 0 { self.chunk_tokens } else { max })
+            .min(max);
+        let piece = rows[built * d..(built + n) * d].to_vec();
+        self.engine.feed_chunk_embeds_paged(set, built, &piece, n)?;
+        self.metrics.inc("prefill_chunks", 1);
+        Ok(n)
     }
 
     // --------------------------------------- cross-engine migration
@@ -1763,7 +1666,6 @@ impl Scheduler {
         if let Some(pos) = self.pending.iter().rposition(|j| {
             j.fed == 0
                 && !j.feed_open
-                && j.kv_one.is_none()
                 && j.source.is_none()
                 && j.paged.is_none()
                 && j.followers.is_empty()
@@ -1947,108 +1849,52 @@ impl Scheduler {
             self.metrics.inc("mm_overlap_chunks", 1);
         }
         let t0 = Instant::now();
-        let seg = if self.chunk_tokens > 0 { self.chunk_tokens } else { usize::MAX };
+        // Pages under construction: fresh prompts start an empty set,
+        // extensions of a cached source pin its pages zero-copy on
+        // first touch (no materializing copy — the shared pages are
+        // read in place and diverging tail pages copy-on-write).
+        let mut set = match job.paged.take() {
+            Some(s) => s,
+            None => match job.source.take() {
+                Some(src) => self.engine.begin_extend_paged(&src, job.built)?,
+                None => {
+                    self.engine.stats.prefills += 1;
+                    self.engine.begin_fresh_paged()?
+                }
+            },
+        };
         match &job.feed {
             Feed::Tokens(toks) => {
-                let n = remaining.min(seg);
                 let chunked = self.chunk_tokens > 0 && self.engine.rt.has_chunk_prefill();
-                let paged_src = job.paged.is_some()
-                    || job.source.as_ref().is_some_and(|s| s.is_paged());
-                if job.kv_one.is_none() && job.source.is_none() && job.paged.is_none() {
-                    // First segment of a fresh prompt: the one-shot
-                    // prefill executable (identical arithmetic to the
-                    // legacy inline path for short prompts).
-                    debug_assert_eq!(job.built, 0);
-                    job.kv_one = Some(self.engine.prefill(&toks[..n])?);
-                    job.built += n;
-                    job.fed += n;
-                } else if paged_src {
-                    // Paged cached source: pin its pages zero-copy on
-                    // first touch (no clone_kv materialization), then
-                    // feed the suffix straight onto pages.
-                    let mut set = match job.paged.take() {
-                        Some(s) => s,
-                        None => {
-                            let src = job.source.take().expect("paged source checked");
-                            self.engine.begin_extend_paged(&src, job.built)?
-                        }
-                    };
-                    if chunked {
-                        let max = self.engine.rt.info.max_chunk_bucket().unwrap();
-                        let n = n.min(max);
-                        let piece = toks[job.fed..job.fed + n].to_vec();
-                        self.engine.feed_chunk_paged(&mut set, job.built, &piece)?;
-                        self.metrics.inc("prefill_chunks", 1);
-                        job.built += n;
-                        job.fed += n;
-                    } else {
-                        // chunk_tokens == 0: token-by-token through the
-                        // bucket-1 paged decode (the "0 = legacy"
-                        // bit-exactness contract, paged flavour).
-                        let piece = toks[job.fed..].to_vec();
-                        self.engine.feed_tokens_paged(&mut set, job.built, &piece)?;
-                        job.built += piece.len();
-                        job.fed += piece.len();
-                    }
-                    job.paged = Some(set);
-                } else if !chunked {
-                    // chunk_tokens == 0 honours the "0 = legacy"
-                    // contract exactly: token-by-token catch-up through
-                    // bucket-1 decode, never the chunk executables
-                    // (which match only within fp tolerance, not
-                    // bit-exactly).  A cached source is read directly —
-                    // no copy, nothing donates it on this path.
-                    let piece = toks[job.fed..].to_vec();
-                    let (out, _) = match (&job.kv_one, &job.source) {
-                        (Some(kv), _) => {
-                            self.engine.catch_up_tokenwise(kv, job.built, &piece)?
-                        }
-                        (None, Some(src)) => {
-                            let kv_one = src
-                                .dense()
-                                .expect("paged sources route through the paged branch");
-                            self.engine.catch_up_tokenwise(kv_one, job.built, &piece)?
-                        }
-                        (None, None) => unreachable!("handled by the fresh-prompt branch"),
-                    };
-                    job.built += piece.len();
-                    job.fed += piece.len();
-                    job.kv_one = Some(out);
-                    job.source = None;
-                } else {
-                    // Chunked: materialize a donatable copy of a cached
-                    // source on first touch, then extend by one chunk
-                    // (never exceeding the largest lowered bucket).
-                    let kv = match (job.kv_one.take(), job.source.take()) {
-                        (Some(kv), _) => kv,
-                        (None, Some(src)) => {
-                            let kv_one = src
-                                .dense()
-                                .expect("paged sources route through the paged branch");
-                            self.engine.clone_kv(kv_one)?
-                        }
-                        (None, None) => unreachable!("handled by the fresh-prompt branch"),
-                    };
+                if chunked {
                     let max = self.engine.rt.info.max_chunk_bucket().unwrap();
-                    let n = n.min(max);
+                    let n = remaining.min(self.chunk_tokens).min(max);
                     let piece = toks[job.fed..job.fed + n].to_vec();
-                    let out = self.engine.feed_chunk(kv, job.built, &piece)?;
+                    self.engine.feed_chunk_paged(&mut set, job.built, &piece)?;
                     self.metrics.inc("prefill_chunks", 1);
                     job.built += n;
                     job.fed += n;
-                    job.kv_one = Some(out);
+                } else {
+                    // chunk_tokens == 0 honours the "0 = legacy"
+                    // contract exactly: token-by-token through the
+                    // bucket-1 paged decode, never the chunk
+                    // executables (which match only within fp
+                    // tolerance, not bit-exactly).
+                    let piece = toks[job.fed..].to_vec();
+                    self.engine.feed_tokens_paged(&mut set, job.built, &piece)?;
+                    job.built += piece.len();
+                    job.fed += piece.len();
                 }
             }
             Feed::Embeds(rows) => {
                 // One segment through the shared feeder (embeds jobs
                 // never extend a cached source, so built == fed).
-                let (kv, n) =
-                    self.feed_embeds_segment(job.kv_one.take(), rows, job.built, remaining)?;
-                job.kv_one = Some(kv);
+                let n = self.feed_embeds_segment(&mut set, job.built, rows, remaining)?;
                 job.built += n;
                 job.fed += n;
             }
         }
+        job.paged = Some(set);
         job.prefill_ms += ms_since(t0, Instant::now());
         Ok(!job.feed_open && job.fed >= job.feed.rows(d))
     }
@@ -2070,23 +1916,13 @@ impl Scheduler {
     fn finalize_job(&mut self, mut job: PrefillJob) -> Result<()> {
         // A zero-feed job (full cache hit parked while the decode slots
         // were exhausted) passes its already-cached source KV through.
-        let from_cache =
-            job.kv_one.is_none() && job.paged.is_none() && job.source.is_some();
-        let built: Result<Rc<CachedKv>> = match (job.paged.take(), job.kv_one.take()) {
-            // Paged extension: the pages *are* the cache entry — seal
-            // captures the mailbox logits and hands the set over with
-            // zero device-side copies.
-            (Some(set), _) => self.engine.seal_paged(set, job.total),
-            // Dense staging buffer: in paged mode adopt it onto pages
-            // (one scatter), otherwise wrap it as a dense entry.
-            (None, Some(k)) => {
-                if self.engine.is_paged() {
-                    self.engine.adopt_cached(&k, job.total)
-                } else {
-                    Ok(CachedKv::new(k, job.total))
-                }
-            }
-            (None, None) => match job.source.take() {
+        let from_cache = job.paged.is_none() && job.source.is_some();
+        let built: Result<Rc<CachedKv>> = match job.paged.take() {
+            // The pages *are* the cache entry — seal captures the
+            // mailbox logits and hands the set over with zero
+            // device-side copies.
+            Some(set) => self.engine.seal_paged(set, job.total),
+            None => match job.source.take() {
                 Some(src) => Ok(src),
                 None => Err(anyhow!("staged prefill completed without KV state")),
             },
@@ -2783,7 +2619,6 @@ impl Scheduler {
                 tokens: pend.text_tokens.clone(),
                 feed: Feed::Embeds(rows),
                 fed: 0,
-                kv_one: None,
                 source: None,
                 paged: None,
                 built: 0,
@@ -3203,12 +3038,12 @@ impl Scheduler {
                 }
             }
             if fin.is_none() {
-                let arena_limit = self
+                let kv_limit = self
                     .engine
                     .seq(id)
                     .map(|s| s.pos as usize + 1 >= self.engine.rt.info.s_max - 1);
-                if arena_limit == Some(true) {
-                    fin = Some(FinishReason::ArenaFull);
+                if kv_limit == Some(true) {
+                    fin = Some(FinishReason::KvFull);
                 }
             }
             if let Some(f) = fin {
@@ -3265,18 +3100,18 @@ impl Scheduler {
             a.all_tokens.push(a.next_token);
             a.fed += 1;
             a.next_token = tok;
-            let arena_limit =
+            let kv_limit =
                 self.engine.seq(id).map(|s| s.pos as usize + 1 >= self.engine.rt.info.s_max - 1);
             let mut fin: Option<FinishReason> = None;
             if a.params.stop_on_eos && tok == EOS {
                 fin = Some(FinishReason::Stop);
             } else if a.emitted + 1 >= a.params.max_tokens {
                 fin = Some(FinishReason::Length);
-            } else if arena_limit == Some(true) {
-                fin = Some(FinishReason::ArenaFull);
+            } else if kv_limit == Some(true) {
+                fin = Some(FinishReason::KvFull);
             }
             if fin != Some(FinishReason::Stop) {
-                // Emit the newly sampled token.  On Length/ArenaFull this
+                // Emit the newly sampled token.  On Length/KvFull this
                 // is the final token: emitted but never fed into KV.
                 let text = a.decoder.push(&self.tokenizer, tok);
                 a.emitted += 1;
@@ -3290,18 +3125,11 @@ impl Scheduler {
         for (id, f) in finished {
             self.finish(id, f);
         }
-        // Shrink policy.  Arena mode: 4x hysteresis, because migrations
-        // cost O(arena) device work per live sequence (the
-        // ablation_scheduler bench quantifies the thrash cost of an
-        // aggressive 2x policy — see EXPERIMENTS.md §Perf).  Paged mode:
-        // shrink eagerly — migration is host-only slot compaction (the
-        // pool never moves), so there is no thrash cost to hedge against.
+        // Shrink eagerly when occupancy drops: migration is host-only
+        // lane renumbering (the pool and every page stay put), so there
+        // is no thrash cost to hedge against.
         if self.cfg.kv.allow_shrink {
-            if self.engine.is_paged() {
-                let _ = self.engine.maybe_shrink();
-            } else {
-                let _ = self.engine.maybe_shrink_with_hysteresis(4);
-            }
+            let _ = self.engine.maybe_shrink();
         }
         self.metrics
             .set_gauge("active_requests", self.active.len() as f64);

@@ -1,52 +1,49 @@
-//! The text inference engine: batched decode over device-resident KV
-//! state, with two interchangeable storage backends.
+//! The text inference engine: batched decode over the paged KV pool.
 //!
 //! This is the "ours" execution backend (Table 1): device-resident
 //! state threaded between executables with `execute_b` (the
 //! unified-memory zero-copy analog), bucketed batch executables, and
-//! slot-level admission/eviction so requests join and leave at token
+//! lane-level admission/eviction so requests join and leave at token
 //! boundaries (Algorithm 1's mechanics — the *policy* lives in
 //! `coordinator::scheduler`).
 //!
-//! Backends ([`KvStore`]):
+//! KV storage is ONE pool buffer `[.., P, .., page, ..]` plus a
+//! host-side [`PageArena`] handing out fixed-size pages with
+//! refcounts.  Sequences own [`PageSet`]s; prefix-cache hits, follower
+//! coalescing and eviction checkpoints are zero-copy page pins
+//! (refcount++), with device-side `copy_page` only on copy-on-write
+//! divergence inside a shared tail page.  Fresh prompts prefill
+//! straight onto pages (`prefill_chunk_paged`), so no dense staging
+//! buffer, inject/extract round-trip, or trim grid exists anywhere in
+//! the serving path.
 //!
-//! * **Arena** — the original dense slot arena `[.., B, .., s_max, ..]`:
-//!   admission injects an s_max-sized kv_one into a slot, eviction
-//!   extracts a full copy, grow/shrink migrates every live slot through
-//!   extract+inject, and cache checkpoints cost an O(s_max) device copy
-//!   (optionally trimmed via the `trim_kv_s{S}` grids).
-//! * **Paged** — one pool buffer `[.., P, .., page, ..]` plus a
-//!   host-side [`PageArena`] handing out fixed-size pages with
-//!   refcounts.  Sequences own [`PageSet`]s; prefix-cache hits,
-//!   follower coalescing and eviction checkpoints become zero-copy
-//!   page pins (refcount++), with device-side `copy_page` only on
-//!   copy-on-write divergence inside a shared tail page.  Grow/shrink
-//!   is an executable-bucket swap — the pool never moves, so the trim
-//!   grids and migration copies are never needed on this path.
+//! **Lane virtualization** lifts the decode ceiling past the largest
+//! lowered batch bucket: the engine's capacity is `groups * bucket`
+//! lanes, and one logical decode tick issues one `decode_paged_b{B}`
+//! dispatch per non-empty group of `bucket` lanes, each over its own
+//! disjoint block-table slice of the same pool (the pool handle is
+//! threaded through the dispatches sequentially).  Growing or
+//! shrinking capacity is a host-only renumbering — pages never move —
+//! so a 64-lane engine costs exactly 4 dispatches per tick at b=16
+//! and nothing else.  The ceiling is [`ModelInfo::virtual_lane_limit`]
+//! clamped to what the pool can physically hold.
 //!
-//! Slot-arena lifecycle (staged-prefill pipeline; the paged backend
-//! replaces inject/extract with `adopt_paged` / page pins):
+//! Sequence lifecycle (all page-native):
 //!
 //! ```text
-//!            STAGING (one kv_one per in-flight prefill)
-//! new_kv_one / clone_kv(cached) ──feed_chunk──► kv_one (partial)
-//!        ▲                            │   (scheduler interleaves one
-//!        └────── next chunk ──────────┘    decode step per chunk)
-//! complete kv_one ──inject──► arena slot i
-//!                                          │ decode (all slots, 1 token)
-//!                                          ▼
-//!                            read_logits_all / read_logits_one ──► sampler
-//! finished slot ──extract──► kv_one (stored by the prefix cache)
-//! grow/shrink: extract each live slot ──► new bucket arena ──► inject
+//! begin_fresh_paged / begin_extend_paged(cached, matched)
+//!        │                     (zero-copy pins + CoW of a ragged tail)
+//!        ▼
+//! feed_chunk_paged / feed_chunk_embeds_paged   (one chunk per tick;
+//!        │                      the scheduler interleaves decodes)
+//!        ▼
+//! seal_paged ──► Rc<CachedKv> (pinned pages + host logits)
+//!        │
+//! admit(id, kv) — pins the checkpoint's pages under a lane, no copy
+//!        │ step() / spec_step()            (decode, grow by pages)
+//!        ▼
+//! remove(id, extract_kv=true) ──► Rc<CachedKv> for the prefix caches
 //! ```
-//!
-//! Short prompts (≤ one chunk) still go through the one-shot `prefill`
-//! executables; the staging path exists so long prompts never stall the
-//! decode arena for more than one chunk's worth of work.  Fresh
-//! prompts build on dense kv_one buffers in BOTH modes (identical
-//! numerics); the paged backend adopts the finished kv_one onto pages
-//! at admission/finalize time, so greedy output is byte-identical
-//! across backends.
 
 pub mod draft;
 pub mod sampler;
@@ -58,7 +55,7 @@ use std::rc::Rc;
 use anyhow::{anyhow, bail, Result};
 use xla::PjRtBuffer;
 
-use crate::cache::{CachedKv, KvBacking};
+use crate::cache::CachedKv;
 use crate::runtime::{paged, ModelRuntime, PageArena, PageArenaStats, PageSet, SharedPageArena};
 
 /// Per-sequence engine state.
@@ -69,7 +66,7 @@ pub struct SeqState {
     pub pos: i32,
 }
 
-/// Paged-backend bookkeeping for one active sequence.
+/// Bookkeeping for one active sequence.
 struct PagedSeq {
     set: PageSet,
     /// Logits carried over from a zero-copy cached admission: the
@@ -79,42 +76,30 @@ struct PagedSeq {
     last_logits: Option<Vec<f32>>,
 }
 
-/// KV storage backend (see module docs).
-enum KvStore {
-    Arena {
-        arena: PjRtBuffer,
-    },
-    Paged {
-        pool: PjRtBuffer,
-        arena: SharedPageArena,
-        seq_pages: HashMap<u64, PagedSeq>,
-        /// Dedicated scratch pages for the speculative-verify packed
-        /// logits readback (`spec_chunk_paged_c{C}`): allocated lazily
-        /// on the first spec round, never named by any block table,
-        /// held for the engine's lifetime.
-        spec_scratch: Option<PageSet>,
-    },
-}
-
 /// Engine statistics for /metrics and the benches.
 #[derive(Debug, Default, Clone)]
 pub struct EngineStats {
+    /// Logical decode ticks (one per [`TextEngine::step`] call).
     pub decode_steps: u64,
+    /// `decode_paged_b{B}` executions — ticks over >bucket active
+    /// lanes issue one per non-empty lane group.
+    pub decode_dispatches: u64,
     pub decode_slot_steps: u64,
+    /// Fresh page-native prefill builds ([`TextEngine::prefill_cached`]).
     pub prefills: u64,
     /// Chunk executions through the staged-prefill path.
     pub prefill_chunks: u64,
     /// Valid tokens fed through those chunks.
     pub chunk_tokens_fed: u64,
-    pub injects: u64,
+    /// KV checkpoints taken at removal (zero-copy page pins).
     pub extracts: u64,
+    /// Capacity changes (host-only lane renumberings).
     pub migrations: u64,
-    /// Steps whose logits were read back per-slot (sparse occupancy).
+    /// Steps whose logits were read back per-lane (always, on pages).
     pub sparse_readbacks: u64,
-    /// Sum over steps of occupied/bucket (batch efficiency numerator).
+    /// Sum over dispatches of occupied/bucket (batch efficiency
+    /// numerator; divide by `decode_dispatches`).
     pub occupancy_sum: f64,
-    /// Dense kv_one states scattered onto pool pages (`adopt_paged`).
-    pub page_adopts: u64,
     /// Admissions served entirely by page pins — no device KV copy.
     pub zero_copy_admits: u64,
     /// Speculative verify rounds dispatched.
@@ -247,62 +232,43 @@ fn spec_accept(rows: &[f32], vocab: usize, fed: &[i32], stop: Option<i32>) -> (V
 
 pub struct TextEngine {
     pub rt: ModelRuntime,
+    /// Lanes per `decode_paged` dispatch (≤ the largest lowered bucket).
     bucket: usize,
-    store: KvStore,
+    /// Dispatch groups per tick; capacity = `groups * bucket`.
+    groups: usize,
+    /// The ONE device-resident KV pool, donated and replaced on every
+    /// mutating executable call.
+    pool: PjRtBuffer,
+    /// Host-side page allocator over the pool.
+    arena: SharedPageArena,
+    seq_pages: HashMap<u64, PagedSeq>,
+    /// Dedicated scratch pages for the speculative-verify packed
+    /// logits readback (`spec_chunk_paged_c{C}`): allocated lazily on
+    /// the first spec round, never named by any block table, held for
+    /// the engine's lifetime.
+    spec_scratch: Option<PageSet>,
     slots: Vec<Option<u64>>,
     seqs: HashMap<u64, SeqState>,
-    /// Arena-backend host-side last-logits overrides: a speculative
-    /// verify repurposes the slot's plane-0 mailbox as a packed
-    /// readback, so until the next decode step rebuilds the mailbox,
-    /// these carry the affected sequences' true last logits (the arena
-    /// analog of `PagedSeq::last_logits`).  Cleared by every decode
-    /// step.
-    arena_logits: HashMap<u64, Vec<f32>>,
     pub stats: EngineStats,
 }
 
 impl TextEngine {
-    /// Default constructor: the paged backend whenever the artifacts
-    /// carry the paged-KV entries, the dense slot arena otherwise.
-    /// Library embedders get the same default the CLI ships
-    /// (`--kv paged`); callers that specifically want arena semantics
-    /// use [`TextEngine::new_arena`].
+    /// The paged engine over the model's full lowered pool.  The dense
+    /// slot-arena backend is gone — artifacts without paged entries
+    /// must be rebuilt (the error says how).
     pub fn new(rt: ModelRuntime) -> Result<Self> {
-        if rt.has_paged_kv() {
-            Self::new_paged(rt)
-        } else {
-            Self::new_arena(rt)
-        }
+        Self::new_paged(rt)
     }
 
-    /// Slot-arena backend (the pre-paging default, kept for ablations
-    /// and as the fallback for artifacts without paged entries).
-    pub fn new_arena(rt: ModelRuntime) -> Result<Self> {
-        let bucket = *rt
-            .info
-            .decode_buckets
-            .first()
-            .ok_or_else(|| anyhow!("no decode buckets"))?;
-        let arena = rt.new_arena(bucket)?;
-        Ok(TextEngine {
-            rt,
-            bucket,
-            store: KvStore::Arena { arena },
-            slots: vec![None; bucket],
-            seqs: HashMap::new(),
-            arena_logits: HashMap::new(),
-            stats: EngineStats::default(),
-        })
-    }
-
-    /// Paged backend over the model's full lowered pool.
+    /// Alias of [`TextEngine::new`], kept for callers that spelled the
+    /// backend out while both existed.
     pub fn new_paged(rt: ModelRuntime) -> Result<Self> {
         Self::new_paged_capped(rt, None)
     }
 
-    /// Paged backend with the usable page budget capped below the
-    /// lowered pool size (the paged-KV ablation holds both modes to the
-    /// same KV byte budget this way).
+    /// Paged engine with the usable page budget capped below the
+    /// lowered pool size (the paged-KV ablation and the pool-pressure
+    /// tests hold the engine to a fixed KV byte budget this way).
     pub fn new_paged_capped(rt: ModelRuntime, page_cap: Option<usize>) -> Result<Self> {
         if !rt.has_paged_kv() {
             bail!(
@@ -323,80 +289,57 @@ impl TextEngine {
         Ok(TextEngine {
             rt,
             bucket,
-            store: KvStore::Paged {
-                pool,
-                arena,
-                seq_pages: HashMap::new(),
-                spec_scratch: None,
-            },
+            groups: 1,
+            pool,
+            arena,
+            seq_pages: HashMap::new(),
+            spec_scratch: None,
             slots: vec![None; bucket],
             seqs: HashMap::new(),
-            arena_logits: HashMap::new(),
             stats: EngineStats::default(),
         })
     }
 
-    pub fn is_paged(&self) -> bool {
-        matches!(self.store, KvStore::Paged { .. })
+    /// The pool's page allocator (shared with cache checkpoints).
+    pub fn page_arena(&self) -> &SharedPageArena {
+        &self.arena
     }
 
-    /// The paged pool's allocator (None on the arena backend).
-    pub fn page_arena(&self) -> Option<&SharedPageArena> {
-        match &self.store {
-            KvStore::Paged { arena, .. } => Some(arena),
-            KvStore::Arena { .. } => None,
+    /// Pool-state snapshot for /metrics.
+    pub fn page_pool(&self) -> PagePoolSnapshot {
+        let a = self.arena.borrow();
+        PagePoolSnapshot {
+            total_pages: a.total_pages(),
+            capacity: a.capacity(),
+            free_pages: a.free_pages(),
+            allocated_pages: a.allocated_pages(),
+            utilization: a.utilization(),
+            page_size: self.rt.info.kv_page_size,
+            stats: a.stats(),
         }
     }
 
-    /// Pool-state snapshot for /metrics (None on the arena backend).
-    pub fn page_pool(&self) -> Option<PagePoolSnapshot> {
-        match &self.store {
-            KvStore::Paged { arena, .. } => {
-                let a = arena.borrow();
-                Some(PagePoolSnapshot {
-                    total_pages: a.total_pages(),
-                    capacity: a.capacity(),
-                    free_pages: a.free_pages(),
-                    allocated_pages: a.allocated_pages(),
-                    utilization: a.utilization(),
-                    page_size: self.rt.info.kv_page_size,
-                    stats: a.stats(),
-                })
-            }
-            KvStore::Arena { .. } => None,
-        }
-    }
-
-    /// Split borrow of the paged backend's parts (rt is read-only; the
-    /// pool handle is replaced on every donating executable call).
-    #[allow(clippy::type_complexity)]
-    fn paged_mut(
-        &mut self,
-    ) -> Result<(
-        &ModelRuntime,
-        &mut PjRtBuffer,
-        &SharedPageArena,
-        &mut HashMap<u64, PagedSeq>,
-        &mut EngineStats,
-    )> {
-        match &mut self.store {
-            KvStore::Paged { pool, arena, seq_pages, .. } => {
-                Ok((&self.rt, pool, arena, seq_pages, &mut self.stats))
-            }
-            KvStore::Arena { .. } => bail!("engine is not in paged mode"),
-        }
-    }
-
+    /// Lanes per decode dispatch (grows/shrinks with load, capped at
+    /// the largest lowered bucket).
     pub fn bucket(&self) -> usize {
         self.bucket
+    }
+
+    /// Current lane capacity: `groups * bucket`.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
     }
 
     pub fn active(&self) -> usize {
         self.seqs.len()
     }
 
+    /// The decode-lane ceiling: the manifest's virtual-lane limit,
+    /// clamped to what the page budget can physically hold (each lane
+    /// needs at least one KV page plus its mailbox).
     pub fn max_capacity(&self) -> usize {
-        *self.rt.info.decode_buckets.last().unwrap()
+        let lanes = self.rt.info.virtual_lane_limit();
+        lanes.min(self.arena.borrow().capacity() / 2).max(1)
     }
 
     pub fn seq(&self, id: u64) -> Option<&SeqState> {
@@ -407,53 +350,24 @@ impl TextEngine {
         self.seqs.contains_key(&id)
     }
 
-    /// Run prompt processing and return the kv_one buffer (device).
-    /// Used by both backends — fresh prompts always build dense (the
-    /// paged backend adopts the result onto pages afterwards).
-    pub fn prefill(&mut self, tokens: &[i32]) -> Result<PjRtBuffer> {
-        self.stats.prefills += 1;
-        self.rt.prefill(tokens)
-    }
-
-    /// Logits stored in a kv_one's mailbox (post-prefill first token).
-    pub fn kv_one_logits(&self, kv_one: &PjRtBuffer) -> Result<Vec<f32>> {
-        self.rt.read_logits(1, kv_one, 0)
-    }
-
-    /// Last-token logits of a cached KV state: a mailbox readback for
-    /// dense entries, a host-side copy for paged checkpoints (which
-    /// captured them at extraction — full hits never touch the device).
+    /// Last-token logits of a cached KV state — captured host-side at
+    /// checkpoint time, so this never touches the device.
     pub fn cached_logits(&self, kv: &CachedKv) -> Result<Vec<f32>> {
-        match &kv.backing {
-            KvBacking::Dense { kv_one, trim, logits } => {
-                // Post-speculation checkpoints carry their logits
-                // host-side (the mailbox plane holds a stale packed
-                // readback) — the override wins even through trim.
-                if let Some(l) = logits {
-                    return Ok(l.clone());
-                }
-                if trim.is_some() {
-                    bail!("logits readback from a trimmed KV state (expand it first)");
-                }
-                self.rt.read_logits(1, kv_one, 0)
-            }
-            KvBacking::Paged { logits, .. } => Ok(logits.clone()),
-        }
+        Ok(kv.logits.clone())
     }
 
-    /// Admit a prefilled sequence of length `len`.  Arena: grow if
-    /// needed and inject the dense kv_one into a free slot.  Paged:
-    /// dense states are scattered onto fresh pages (`adopt_paged`, one
-    /// device pass); paged cache checkpoints are admitted zero-copy —
-    /// their pages are pinned shared and only a private mailbox page is
-    /// allocated, with any tail-page divergence handled lazily by
-    /// copy-on-write at the first decode step.
+    /// Admit a prefilled sequence of length `len`: pin the
+    /// checkpoint's pages zero-copy (refcount++) and allocate only a
+    /// private mailbox page.  Any tail-page divergence is handled
+    /// lazily by copy-on-write at the first decode step, so
+    /// admissions that never diverge past a page boundary never pay a
+    /// device copy at all.
     pub fn admit(&mut self, id: u64, kv: &CachedKv, len: usize) -> Result<()> {
         if self.seqs.contains_key(&id) {
             bail!("sequence {id} already admitted");
         }
         if len + 1 >= self.rt.info.s_max {
-            bail!("sequence of length {len} cannot fit arena (s_max {})", self.rt.info.s_max);
+            bail!("sequence of length {len} cannot fit s_max {}", self.rt.info.s_max);
         }
         self.ensure_capacity(self.seqs.len() + 1)?;
         let slot = self
@@ -461,66 +375,24 @@ impl TextEngine {
             .iter()
             .position(|s| s.is_none())
             .expect("ensure_capacity guarantees a free slot");
-        match &mut self.store {
-            KvStore::Arena { arena } => {
-                let kv_one = kv
-                    .dense()
-                    .ok_or_else(|| anyhow!("paged KV state cannot enter the slot arena"))?;
-                *arena = self.rt.inject(self.bucket, arena, kv_one, slot)?;
-                self.stats.injects += 1;
-                // Stale-mailbox checkpoints keep their logits host-side
-                // until the next decode step rebuilds the mailbox.
-                if let Some(l) = kv.dense_logits() {
-                    self.arena_logits.insert(id, l.clone());
-                }
-            }
-            KvStore::Paged { pool, arena, seq_pages, .. } => {
-                let page = self.rt.info.kv_page_size;
-                let nblk = self.rt.info.kv_blocks_per_seq();
-                match &kv.backing {
-                    KvBacking::Dense { kv_one, trim, .. } => {
-                        if trim.is_some() {
-                            bail!("trimmed KV state cannot be adopted onto pages");
-                        }
-                        let mut set = PageSet::new(arena);
-                        if len > 0 && !set.cover(len - 1, page) {
-                            bail!("KV page pool exhausted admitting sequence {id}");
-                        }
-                        if !set.alloc_mailbox() {
-                            bail!("KV page pool exhausted admitting sequence {id}");
-                        }
-                        let mb = set.mailbox.unwrap();
-                        *pool = self.rt.adopt_paged(pool, kv_one, &set.table(nblk), mb)?;
-                        self.stats.page_adopts += 1;
-                        // A post-speculation checkpoint's mailbox plane
-                        // is stale — carry its host-side logits so a
-                        // re-checkpoint before the first decode step
-                        // stays correct.
-                        seq_pages
-                            .insert(id, PagedSeq { set, last_logits: kv.dense_logits().cloned() });
-                    }
-                    KvBacking::Paged { pages, logits } => {
-                        let n = len.div_ceil(page).min(pages.pages.len());
-                        let mut set = pages.share_prefix(n);
-                        if !set.alloc_mailbox() {
-                            bail!("KV page pool exhausted admitting sequence {id}");
-                        }
-                        self.stats.zero_copy_admits += 1;
-                        seq_pages
-                            .insert(id, PagedSeq { set, last_logits: Some(logits.clone()) });
-                    }
-                }
-            }
+        let page = self.rt.info.kv_page_size;
+        let n = len.div_ceil(page).min(kv.pages.pages.len());
+        let mut set = kv.pages.share_prefix(n);
+        if !set.alloc_mailbox() {
+            bail!("KV page pool exhausted admitting sequence {id}");
         }
+        self.stats.zero_copy_admits += 1;
+        self.seq_pages
+            .insert(id, PagedSeq { set, last_logits: Some(kv.logits.clone()) });
         self.slots[slot] = Some(id);
         self.seqs.insert(id, SeqState { slot, pos: len as i32 });
         Ok(())
     }
 
-    /// Remove a sequence.  If `extract_kv` is set, returns its KV state
-    /// for the prefix caches to keep: an extracted kv_one copy on the
-    /// arena backend, a zero-copy page checkpoint (the sequence's own
-    /// pages plus a host-side logits capture) on the paged backend.
+    /// Remove a sequence.  If `extract_kv` is set, returns its KV
+    /// state for the prefix caches to keep: a zero-copy page
+    /// checkpoint — the sequence's own pages plus a host-side logits
+    /// capture (one vocab-sized readback at most).
     pub fn remove(&mut self, id: u64, extract_kv: bool) -> Result<Option<Rc<CachedKv>>> {
         let st = self
             .seqs
@@ -528,124 +400,40 @@ impl TextEngine {
             .ok_or_else(|| anyhow!("sequence {id} not active"))?;
         self.slots[st.slot] = None;
         let len = st.pos as usize;
-        match &mut self.store {
-            KvStore::Arena { arena } => {
-                let logits = self.arena_logits.remove(&id);
-                if extract_kv {
-                    let kv = self.rt.extract(self.bucket, arena, st.slot)?;
-                    self.stats.extracts += 1;
-                    Ok(Some(match logits {
-                        // The slot's mailbox is a stale packed spec
-                        // readback — the true last logits ride along.
-                        Some(l) => CachedKv::new_with_logits(kv, l, len),
-                        None => CachedKv::new(kv, len),
-                    }))
-                } else {
-                    Ok(None)
+        let mut ps = self
+            .seq_pages
+            .remove(&id)
+            .ok_or_else(|| anyhow!("sequence {id} has no pages"))?;
+        if extract_kv {
+            let logits = match ps.last_logits.take() {
+                Some(l) => l,
+                None => {
+                    let mb = ps
+                        .set
+                        .mailbox
+                        .ok_or_else(|| anyhow!("sequence {id} has no mailbox"))?;
+                    self.rt.read_logits_page(&self.pool, mb)?
                 }
-            }
-            KvStore::Paged { pool, seq_pages, .. } => {
-                let mut ps = seq_pages
-                    .remove(&id)
-                    .ok_or_else(|| anyhow!("paged sequence {id} has no pages"))?;
-                if extract_kv {
-                    let logits = match ps.last_logits.take() {
-                        Some(l) => l,
-                        None => {
-                            let mb = ps
-                                .set
-                                .mailbox
-                                .ok_or_else(|| anyhow!("paged sequence {id} has no mailbox"))?;
-                            self.rt.read_logits_page(pool, mb)?
-                        }
-                    };
-                    ps.set.release_mailbox();
-                    self.stats.extracts += 1;
-                    Ok(Some(CachedKv::new_paged(ps.set, logits, len)))
-                } else {
-                    Ok(None)
-                }
-            }
+            };
+            ps.set.release_mailbox();
+            self.stats.extracts += 1;
+            Ok(Some(CachedKv::new_paged(ps.set, logits, len)))
+        } else {
+            Ok(None)
         }
     }
 
-    /// One batched decode step.  `next_tokens` maps sequence id -> the
-    /// token to feed (the previously sampled one).  Every active
-    /// sequence must be present.  Returns the step's logits as slices
-    /// into one readback buffer (see [`StepLogits`]).
+    /// One batched decode tick.  `next_tokens` maps sequence id -> the
+    /// token to feed (the previously sampled one); every active
+    /// sequence must be present.  Per-lane block tables route
+    /// attention to each sequence's pages; lazy copy-on-write detaches
+    /// any still-shared write block first.  Active sets larger than
+    /// the dispatch bucket run as one `decode_paged_b{B}` call per
+    /// non-empty lane group, threading the pool handle through the
+    /// dispatches — that is the whole cost of lane virtualization.
+    /// Returns the tick's logits as slices into one readback buffer
+    /// (see [`StepLogits`]).
     pub fn step(&mut self, next_tokens: &HashMap<u64, i32>) -> Result<StepLogits> {
-        if self.is_paged() {
-            self.step_paged(next_tokens)
-        } else {
-            self.step_arena(next_tokens)
-        }
-    }
-
-    fn step_arena(&mut self, next_tokens: &HashMap<u64, i32>) -> Result<StepLogits> {
-        let v = self.rt.info.vocab;
-        if self.seqs.is_empty() {
-            return Ok(StepLogits::empty(v));
-        }
-        let KvStore::Arena { arena } = &mut self.store else {
-            unreachable!("step_arena on paged store")
-        };
-        let mut tokens = vec![0i32; self.bucket];
-        let mut pos = vec![0i32; self.bucket];
-        for (&id, st) in &self.seqs {
-            let t = next_tokens
-                .get(&id)
-                .ok_or_else(|| anyhow!("no next token for active sequence {id}"))?;
-            if st.pos as usize + 1 >= self.rt.info.s_max {
-                bail!("sequence {id} overflows the KV arena");
-            }
-            tokens[st.slot] = *t;
-            pos[st.slot] = st.pos;
-        }
-        *arena = self.rt.decode(self.bucket, &tokens, &pos, arena)?;
-        // Every lane's mailbox row is rebuilt by the dispatch, so any
-        // post-speculation host-side overrides are now stale themselves.
-        self.arena_logits.clear();
-        self.stats.decode_steps += 1;
-        self.stats.decode_slot_steps += self.seqs.len() as u64;
-        self.stats.occupancy_sum += self.seqs.len() as f64 / self.bucket as f64;
-
-        // Sparse occupancy: read back only the active slots' rows via
-        // the per-slot extractor instead of the whole [bucket, vocab]
-        // literal (each extractor run returns O(vocab) bytes).
-        let sparse = self.seqs.len() * 4 <= self.bucket
-            && self
-                .rt
-                .info
-                .has_entry(&format!("read_logits_one_b{}", self.bucket));
-        let mut ids = Vec::with_capacity(self.seqs.len());
-        let flat = if sparse {
-            let mut flat = Vec::with_capacity(self.seqs.len() * v);
-            for (&id, st) in &mut self.seqs {
-                st.pos += 1;
-                ids.push((id, ids.len()));
-                flat.extend_from_slice(&self.rt.read_logits_one(
-                    self.bucket,
-                    arena,
-                    st.slot,
-                )?);
-            }
-            self.stats.sparse_readbacks += 1;
-            flat
-        } else {
-            for (&id, st) in &mut self.seqs {
-                st.pos += 1;
-                ids.push((id, st.slot));
-            }
-            self.rt.read_logits_all(self.bucket, arena)?
-        };
-        Ok(StepLogits { ids, flat, vocab: v })
-    }
-
-    /// Paged decode step: per-lane block tables route attention to each
-    /// sequence's pages; lazy copy-on-write detaches any still-shared
-    /// write block first, so cached admissions that never diverge past
-    /// a page boundary never pay a copy.
-    fn step_paged(&mut self, next_tokens: &HashMap<u64, i32>) -> Result<StepLogits> {
         let v = self.rt.info.vocab;
         if self.seqs.is_empty() {
             return Ok(StepLogits::empty(v));
@@ -654,54 +442,66 @@ impl TextEngine {
         let page = self.rt.info.kv_page_size;
         let nblk = self.rt.info.kv_blocks_per_seq();
         let bucket = self.bucket;
-        let KvStore::Paged { pool, seq_pages, .. } = &mut self.store else {
-            unreachable!("step_paged on arena store")
-        };
-        let mut tokens = vec![0i32; bucket];
-        let mut pos = vec![0i32; bucket];
-        let mut tables = vec![0i32; bucket * nblk];
-        let mut mailbox = vec![0i32; bucket];
+        let cap = self.slots.len();
+        let mut tokens = vec![0i32; cap];
+        let mut pos = vec![0i32; cap];
+        let mut tables = vec![0i32; cap * nblk];
+        let mut mailbox = vec![0i32; cap];
+        let mut occupied = vec![0usize; self.groups];
         for (&id, st) in &self.seqs {
             let t = next_tokens
                 .get(&id)
                 .ok_or_else(|| anyhow!("no next token for active sequence {id}"))?;
             if st.pos as usize + 1 >= s_max {
-                bail!("sequence {id} overflows the KV arena");
+                bail!("sequence {id} overflows s_max");
             }
-            let ps = seq_pages
+            let ps = self
+                .seq_pages
                 .get_mut(&id)
-                .ok_or_else(|| anyhow!("paged sequence {id} has no pages"))?;
+                .ok_or_else(|| anyhow!("sequence {id} has no pages"))?;
             let wp = st.pos as usize;
             if !ps.set.cover(wp, page) {
                 bail!("KV page pool exhausted mid-decode for sequence {id}");
             }
-            cow_block(&self.rt, pool, &mut ps.set, wp / page)?;
+            cow_block(&self.rt, &mut self.pool, &mut ps.set, wp / page)?;
             ps.last_logits = None;
             tokens[st.slot] = *t;
             pos[st.slot] = st.pos;
-            tables[st.slot * nblk..(st.slot + 1) * nblk]
-                .copy_from_slice(&ps.set.table(nblk));
+            tables[st.slot * nblk..(st.slot + 1) * nblk].copy_from_slice(&ps.set.table(nblk));
             mailbox[st.slot] = ps
                 .set
                 .mailbox
-                .ok_or_else(|| anyhow!("paged sequence {id} has no mailbox"))?
+                .ok_or_else(|| anyhow!("sequence {id} has no mailbox"))?
                 as i32;
+            occupied[st.slot / bucket] += 1;
         }
-        *pool = self.rt.decode_paged(bucket, &tokens, &pos, &tables, &mailbox, pool)?;
+        for (g, &occ) in occupied.iter().enumerate() {
+            if occ == 0 {
+                continue;
+            }
+            let lanes = g * bucket..(g + 1) * bucket;
+            self.pool = self.rt.decode_paged(
+                bucket,
+                &tokens[lanes.clone()],
+                &pos[lanes.clone()],
+                &tables[g * bucket * nblk..(g + 1) * bucket * nblk],
+                &mailbox[lanes],
+                &self.pool,
+            )?;
+            self.stats.decode_dispatches += 1;
+            self.stats.occupancy_sum += occ as f64 / bucket as f64;
+        }
         self.stats.decode_steps += 1;
         self.stats.decode_slot_steps += self.seqs.len() as u64;
-        self.stats.occupancy_sum += self.seqs.len() as f64 / bucket as f64;
 
         // Mailbox pages are per-sequence, so the readback is always
-        // sparse: O(active * vocab) regardless of bucket.
+        // sparse: O(active * vocab) regardless of capacity.
         let mut ids = Vec::with_capacity(self.seqs.len());
         let mut flat = Vec::with_capacity(self.seqs.len() * v);
         for (&id, st) in &mut self.seqs {
             st.pos += 1;
             ids.push((id, ids.len()));
-            flat.extend_from_slice(
-                &self.rt.read_logits_page(pool, mailbox[st.slot] as u32)?,
-            );
+            flat.extend_from_slice(&self.rt.read_logits_page(&self.pool, mailbox[st.slot] as u32)?);
         }
         self.stats.sparse_readbacks += 1;
         Ok(StepLogits { ids, flat, vocab: v })
@@ -710,23 +510,23 @@ impl TextEngine {
     // ---------------------------------------------- speculative decode
 
     /// Whether the loaded artifacts carry the speculative-verify chunk
-    /// entries for the active backend.
+    /// entries.
     pub fn has_spec(&self) -> bool {
-        self.rt.info.has_spec_chunk(self.is_paged())
+        self.rt.info.has_spec_chunk()
     }
 
     /// One speculative verify round for sequence `id`: feed
-    /// `[next_token, drafts..]` through a single `spec_chunk` dispatch,
-    /// accept the longest greedy-matched draft prefix, and advance the
-    /// sequence past every returned token.  Greedy-exact: the returned
-    /// tokens are byte-identical to what tokenwise decode would emit
-    /// (the verifier rows match the decode grid's argmax per the
-    /// chunked-catch-up contract).
+    /// `[next_token, drafts..]` through a single `spec_chunk_paged`
+    /// dispatch, accept the longest greedy-matched draft prefix, and
+    /// advance the sequence past every returned token.  Greedy-exact:
+    /// the returned tokens are byte-identical to what tokenwise decode
+    /// would emit (the verifier rows match the decode grid's argmax
+    /// per the chunked-catch-up contract).
     ///
     /// * `next_token` — the token the scheduler was about to feed (the
     ///   previously sampled one).
     /// * `drafts` — proposed continuation ([`draft::propose`]); clamped
-    ///   internally to bucket/arena/budget headroom.
+    ///   internally to bucket/headroom/budget.
     /// * `max_round` — emission budget: at most this many tokens are
     ///   returned (the request's remaining `max_tokens`).
     /// * `stop` — stop token: the round truncates just past it so no
@@ -740,8 +540,8 @@ impl TextEngine {
     /// keeping the `kv.len == prompt_len + fed` invariant.  Rejected
     /// draft positions beyond the accepted prefix hold garbage K/V but
     /// are never attended (attention masks by length) and are
-    /// overwritten before becoming visible; on the paged backend their
-    /// tail pages are released immediately ([`PageSet::truncate`]).
+    /// overwritten before becoming visible; their tail pages are
+    /// released immediately ([`PageSet::truncate`]).
     pub fn spec_step(
         &mut self,
         id: u64,
@@ -755,11 +555,13 @@ impl TextEngine {
         }
         let s_max = self.rt.info.s_max;
         let vocab = self.rt.info.vocab;
+        let page = self.rt.info.kv_page_size;
+        let nblk = self.rt.info.kv_blocks_per_seq();
         let st = self
             .seqs
             .get(&id)
             .ok_or_else(|| anyhow!("sequence {id} not active"))?;
-        let (pos, slot) = (st.pos as usize, st.slot);
+        let pos = st.pos as usize;
         // The chunk writes its PADDED bucket: positions pos..pos+c-1
         // must fit the KV row, else the lowered dynamic-update-slice
         // would clamp the start index backwards over live positions.
@@ -782,266 +584,179 @@ impl TextEngine {
         fed.push(next_token);
         fed.extend_from_slice(&drafts[..k]);
 
-        if self.is_paged() {
-            let page = self.rt.info.kv_page_size;
-            let nblk = self.rt.info.kv_blocks_per_seq();
-            let c = self
-                .rt
-                .info
-                .spec_chunk_bucket_for(fed.len())
-                .expect("c_fit bounds the bucket");
-            let m = *self
-                .rt
-                .info
-                .spec_scratch_pages
-                .get(&c)
-                .ok_or_else(|| anyhow!("no spec scratch sizing for bucket {c}"))?;
-            let KvStore::Paged { pool, arena, seq_pages, spec_scratch } = &mut self.store
-            else {
-                unreachable!("is_paged")
-            };
-            // Lazy scratch: dedicated readback pages, never in any
-            // block table, held for the engine's lifetime.
-            if !spec_scratch.as_ref().is_some_and(|s| s.pages.len() >= m) {
-                let mut s = spec_scratch.take().unwrap_or_else(|| PageSet::new(arena));
-                let need = m - s.pages.len();
-                let grown = s.grow(need);
-                *spec_scratch = Some(s);
-                if !grown {
-                    return Ok(None); // pool too tight — fall back
-                }
+        let c = self
+            .rt
+            .info
+            .spec_chunk_bucket_for(fed.len())
+            .expect("c_fit bounds the bucket");
+        let m = *self
+            .rt
+            .info
+            .spec_scratch_pages
+            .get(&c)
+            .ok_or_else(|| anyhow!("no spec scratch sizing for bucket {c}"))?;
+        // Lazy scratch: dedicated readback pages, never in any block
+        // table, held for the engine's lifetime.
+        if !self.spec_scratch.as_ref().is_some_and(|s| s.pages.len() >= m) {
+            let mut s = self
+                .spec_scratch
+                .take()
+                .unwrap_or_else(|| PageSet::new(&self.arena));
+            let need = m - s.pages.len();
+            let grown = s.grow(need);
+            self.spec_scratch = Some(s);
+            if !grown {
+                return Ok(None); // pool too tight — fall back
             }
-            let scratch: Vec<i32> = spec_scratch.as_ref().unwrap().pages[..m]
-                .iter()
-                .map(|&p| p as i32)
-                .collect();
-            let ps = seq_pages
-                .get_mut(&id)
-                .ok_or_else(|| anyhow!("paged sequence {id} has no pages"))?;
-            let valid_pages = pos.div_ceil(page);
-            let end = pos + fed.len() - 1;
-            if !ps.set.cover(end, page) {
-                return Ok(None); // pool exhausted — fall back
-            }
-            for j in pos / page..=end / page {
-                if cow_block(&self.rt, pool, &mut ps.set, j).is_err() {
-                    // Roll the speculative tail back and fall back to
-                    // normal decode (privatized in-range pages are
-                    // valid copies and harmless to keep).
-                    ps.set.truncate(valid_pages);
-                    return Ok(None);
-                }
-            }
-            let (new_pool, c2) =
-                self.rt
-                    .spec_verify_paged(pool, pos, &fed, &ps.set.table(nblk), &scratch)?;
-            *pool = new_pool;
-            debug_assert_eq!(c2, c);
-            let rows = self.rt.read_spec_logits_paged(pool, c, &scratch)?;
-            let (tokens, accepted) = spec_accept(&rows, vocab, &fed, stop);
-            let consumed = tokens.len();
-            // The mailbox page was not written by the spec dispatch —
-            // the true last logits ride host-side until the next decode
-            // step rebuilds it.
-            ps.last_logits = Some(rows[(consumed - 1) * vocab..consumed * vocab].to_vec());
-            // Release rejected-draft tail pages (the partial page
-            // covering the accepted prefix keeps its garbage tail —
-            // masked by length, overwritten before visible).
-            ps.set.truncate((pos + consumed).div_ceil(page));
-            self.seqs.get_mut(&id).unwrap().pos += consumed as i32;
-            self.stats.spec_rounds += 1;
-            self.stats.spec_drafts_proposed += k as u64;
-            self.stats.spec_drafts_accepted += accepted as u64;
-            self.stats.spec_tokens += consumed as u64;
-            Ok(Some(SpecRound { tokens, drafted: k, accepted }))
-        } else {
-            let KvStore::Arena { arena } = &mut self.store else {
-                unreachable!("arena backend")
-            };
-            // The spec grids run on kv_one buffers, so the slot takes
-            // an extract/inject round-trip (the paged path avoids it).
-            let kv_one = self.rt.extract(self.bucket, arena, slot)?;
-            self.stats.extracts += 1;
-            let (kv_one, c) = self.rt.spec_verify(&kv_one, pos, &fed)?;
-            let rows = self.rt.read_spec_logits(&kv_one, c)?;
-            *arena = self.rt.inject(self.bucket, arena, &kv_one, slot)?;
-            self.stats.injects += 1;
-            let (tokens, accepted) = spec_accept(&rows, vocab, &fed, stop);
-            let consumed = tokens.len();
-            // The slot's plane-0 mailbox now holds the packed readback,
-            // not the last token's logits — override host-side until
-            // the next decode step rebuilds it.
-            self.arena_logits
-                .insert(id, rows[(consumed - 1) * vocab..consumed * vocab].to_vec());
-            self.seqs.get_mut(&id).unwrap().pos += consumed as i32;
-            self.stats.spec_rounds += 1;
-            self.stats.spec_drafts_proposed += k as u64;
-            self.stats.spec_drafts_accepted += accepted as u64;
-            self.stats.spec_tokens += consumed as u64;
-            Ok(Some(SpecRound { tokens, drafted: k, accepted }))
         }
+        let scratch: Vec<i32> = self.spec_scratch.as_ref().unwrap().pages[..m]
+            .iter()
+            .map(|&p| p as i32)
+            .collect();
+        let ps = self
+            .seq_pages
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("sequence {id} has no pages"))?;
+        let valid_pages = pos.div_ceil(page);
+        let end = pos + fed.len() - 1;
+        if !ps.set.cover(end, page) {
+            return Ok(None); // pool exhausted — fall back
+        }
+        for j in pos / page..=end / page {
+            if cow_block(&self.rt, &mut self.pool, &mut ps.set, j).is_err() {
+                // Roll the speculative tail back and fall back to
+                // normal decode (privatized in-range pages are valid
+                // copies and harmless to keep).
+                ps.set.truncate(valid_pages);
+                return Ok(None);
+            }
+        }
+        let (new_pool, c2) =
+            self.rt
+                .spec_verify_paged(&self.pool, pos, &fed, &ps.set.table(nblk), &scratch)?;
+        self.pool = new_pool;
+        debug_assert_eq!(c2, c);
+        let rows = self.rt.read_spec_logits_paged(&self.pool, c, &scratch)?;
+        let (tokens, accepted) = spec_accept(&rows, vocab, &fed, stop);
+        let consumed = tokens.len();
+        // The mailbox page was not written by the spec dispatch — the
+        // true last logits ride host-side until the next decode step
+        // rebuilds it.
+        ps.last_logits = Some(rows[(consumed - 1) * vocab..consumed * vocab].to_vec());
+        // Release rejected-draft tail pages (the partial page covering
+        // the accepted prefix keeps its garbage tail — masked by
+        // length, overwritten before visible).
+        ps.set.truncate((pos + consumed).div_ceil(page));
+        self.seqs.get_mut(&id).unwrap().pos += consumed as i32;
+        self.stats.spec_rounds += 1;
+        self.stats.spec_drafts_proposed += k as u64;
+        self.stats.spec_drafts_accepted += accepted as u64;
+        self.stats.spec_tokens += consumed as u64;
+        Ok(Some(SpecRound { tokens, drafted: k, accepted }))
     }
 
     // ------------------------------------------------- staged prefill
 
-    /// Copy a (possibly cached, shared) kv_one into a fresh buffer the
-    /// chunked path may donate: inject into a new bucket-1 arena.  The
-    /// source buffer is left untouched.
-    pub fn clone_kv(&mut self, kv_one: &PjRtBuffer) -> Result<PjRtBuffer> {
-        let fresh = self.rt.new_kv_one()?;
-        let out = self.rt.inject(1, &fresh, kv_one, 0)?;
-        self.stats.injects += 1;
-        Ok(out)
-    }
-
-    /// Feed one chunk of prompt tokens (≤ the largest chunk bucket)
-    /// into a kv_one under construction.  `kv_one` is donated by the
-    /// chunk executable — the caller replaces it with the return value.
-    pub fn feed_chunk(
-        &mut self,
-        kv_one: PjRtBuffer,
-        start: usize,
-        tokens: &[i32],
-    ) -> Result<PjRtBuffer> {
-        let out = self.rt.prefill_from(&kv_one, start, tokens)?;
-        self.stats.prefill_chunks += 1;
-        self.stats.chunk_tokens_fed += tokens.len() as u64;
-        Ok(out)
-    }
-
-    /// `feed_chunk` over pre-composed embedding rows (multimodal).
-    pub fn feed_chunk_embeds(
-        &mut self,
-        kv_one: PjRtBuffer,
-        start: usize,
-        embeds: &[f32],
-        len: usize,
-    ) -> Result<PjRtBuffer> {
-        let out = self.rt.prefill_from_embeds(&kv_one, start, embeds, len)?;
-        self.stats.prefill_chunks += 1;
-        self.stats.chunk_tokens_fed += len as u64;
-        Ok(out)
-    }
-
-    /// Chunked catch-up: extend a cached KV state (covering `from_len`
-    /// tokens) by `suffix`, feeding up to `chunk` tokens per executable
-    /// call.  Returns the extended kv_one and the last token's logits.
-    ///
-    /// This is the synchronous form of the staged path (the scheduler
-    /// interleaves the same clone_kv + feed_chunk primitives one chunk
-    /// per tick rather than looping here) — for one-shot callers and
-    /// the equivalence tests.  Matches `catch_up_tokenwise` within fp
-    /// tolerance (same fused attention kernel; XLA fuses [C, d] and
-    /// [1, d] row blocks differently, so bit-equality is not
-    /// guaranteed — greedy argmax is, per the decode arena's
-    /// batch-invariance contract).
-    pub fn catch_up_chunk(
-        &mut self,
-        from_kv: &PjRtBuffer,
-        from_len: usize,
-        suffix: &[i32],
-        chunk: usize,
-    ) -> Result<(PjRtBuffer, Vec<f32>)> {
-        debug_assert!(chunk > 0);
-        let mut kv = self.clone_kv(from_kv)?;
-        let mut pos = from_len;
-        for piece in suffix.chunks(chunk.max(1)) {
-            kv = self.feed_chunk(kv, pos, piece)?;
-            pos += piece.len();
-        }
-        let logits = self.rt.read_logits(1, &kv, 0)?;
-        Ok((kv, logits))
-    }
-
-    /// Token-by-token catch-up through bucket-1 decode steps — the
-    /// pre-chunking path, kept for manifests without chunk entries and
-    /// as the equivalence baseline in tests.
-    pub fn catch_up_tokenwise(
-        &mut self,
-        from_kv: &PjRtBuffer,
-        from_len: usize,
-        suffix: &[i32],
-    ) -> Result<(PjRtBuffer, Vec<f32>)> {
-        let rt = &self.rt;
-        let mut arena = rt.new_arena(1)?;
-        arena = rt.inject(1, &arena, from_kv, 0)?;
-        let mut pos = from_len as i32;
-        for &t in suffix {
-            arena = rt.decode(1, &[t], &[pos], &arena)?;
-            pos += 1;
-        }
-        let logits = rt.read_logits(1, &arena, 0)?;
-        let kv_one = rt.extract(1, &arena, 0)?;
-        self.stats.injects += 1;
-        self.stats.extracts += 1;
-        Ok((kv_one, logits))
-    }
-
-    // --------------------------------------------- paged staged prefill
-
-    /// Start extending a paged cache checkpoint past `matched` tokens:
-    /// pin the covering pages zero-copy, allocate a private mailbox,
-    /// and copy-on-write the partial tail page (the next chunk writes
-    /// into it).  Page-aligned matches never copy.
-    pub fn begin_extend_paged(&mut self, src: &CachedKv, matched: usize) -> Result<PageSet> {
-        let (rt, pool, _arena, _sp, _stats) = self.paged_mut()?;
-        let page = rt.info.kv_page_size;
-        let pages = src
-            .pages()
-            .ok_or_else(|| anyhow!("begin_extend_paged needs a paged source"))?;
-        debug_assert!(matched <= src.len);
-        let n_shared = matched.div_ceil(page).min(pages.pages.len());
-        let mut set = pages.share_prefix(n_shared);
+    /// Start a fresh page-native prefill build: an empty page set with
+    /// a private mailbox (the chunk dispatches write logits into it).
+    pub fn begin_fresh_paged(&mut self) -> Result<PageSet> {
+        let mut set = PageSet::new(&self.arena);
         if !set.alloc_mailbox() {
             bail!("KV page pool exhausted");
-        }
-        if matched % page != 0 && n_shared > 0 {
-            cow_block(rt, pool, &mut set, n_shared - 1)?;
         }
         Ok(set)
     }
 
-    /// Feed one chunk of prompt tokens straight into a page set under
-    /// construction (the paged analog of [`TextEngine::feed_chunk`] —
-    /// no dense kv_one staging buffer, no adopt pass at the end).
+    /// Start extending a cache checkpoint past `matched` tokens: pin
+    /// the covering pages zero-copy, allocate a private mailbox, and
+    /// copy-on-write the partial tail page (the next chunk writes into
+    /// it).  Page-aligned matches never copy.
+    pub fn begin_extend_paged(&mut self, src: &CachedKv, matched: usize) -> Result<PageSet> {
+        let page = self.rt.info.kv_page_size;
+        debug_assert!(matched <= src.len);
+        let n_shared = matched.div_ceil(page).min(src.pages.pages.len());
+        let mut set = src.pages.share_prefix(n_shared);
+        if !set.alloc_mailbox() {
+            bail!("KV page pool exhausted");
+        }
+        if matched % page != 0 && n_shared > 0 {
+            cow_block(&self.rt, &mut self.pool, &mut set, n_shared - 1)?;
+        }
+        Ok(set)
+    }
+
+    /// Feed one chunk of prompt tokens (≤ the largest chunk bucket)
+    /// into a page set under construction — no dense staging buffer,
+    /// no adopt pass at the end.
     pub fn feed_chunk_paged(
         &mut self,
         set: &mut PageSet,
         start: usize,
         tokens: &[i32],
     ) -> Result<()> {
-        let (rt, pool, _arena, _sp, stats) = self.paged_mut()?;
-        let page = rt.info.kv_page_size;
-        let nblk = rt.info.kv_blocks_per_seq();
+        let page = self.rt.info.kv_page_size;
+        let nblk = self.rt.info.kv_blocks_per_seq();
         let end = start + tokens.len();
         debug_assert!(end > start);
         if !set.cover(end - 1, page) {
             bail!("KV page pool exhausted");
         }
         for j in start / page..=(end - 1) / page {
-            cow_block(rt, pool, set, j)?;
+            cow_block(&self.rt, &mut self.pool, set, j)?;
         }
         if !set.alloc_mailbox() {
             bail!("KV page pool exhausted");
         }
         let mb = set.mailbox.unwrap();
-        *pool = rt.prefill_from_paged(pool, start, tokens, &set.table(nblk), mb)?;
-        stats.prefill_chunks += 1;
-        stats.chunk_tokens_fed += tokens.len() as u64;
+        self.pool = self
+            .rt
+            .prefill_from_paged(&self.pool, start, tokens, &set.table(nblk), mb)?;
+        self.stats.prefill_chunks += 1;
+        self.stats.chunk_tokens_fed += tokens.len() as u64;
+        Ok(())
+    }
+
+    /// [`TextEngine::feed_chunk_paged`] over pre-composed embedding
+    /// rows (the multimodal prefill and embed re-prefill path).
+    pub fn feed_chunk_embeds_paged(
+        &mut self,
+        set: &mut PageSet,
+        start: usize,
+        embeds: &[f32],
+        len: usize,
+    ) -> Result<()> {
+        let page = self.rt.info.kv_page_size;
+        let nblk = self.rt.info.kv_blocks_per_seq();
+        debug_assert!(len > 0);
+        let end = start + len;
+        if !set.cover(end - 1, page) {
+            bail!("KV page pool exhausted");
+        }
+        for j in start / page..=(end - 1) / page {
+            cow_block(&self.rt, &mut self.pool, set, j)?;
+        }
+        if !set.alloc_mailbox() {
+            bail!("KV page pool exhausted");
+        }
+        let mb = set.mailbox.unwrap();
+        self.pool = self
+            .rt
+            .prefill_from_embeds_paged(&self.pool, start, embeds, len, &set.table(nblk), mb)?;
+        self.stats.prefill_chunks += 1;
+        self.stats.chunk_tokens_fed += len as u64;
         Ok(())
     }
 
     /// Token-by-token extension of a page set through bucket-1 paged
-    /// decode steps (the paged analog of the tokenwise catch-up).
+    /// decode steps (the equivalence baseline for the chunked path).
     pub fn feed_tokens_paged(
         &mut self,
         set: &mut PageSet,
         start: usize,
         tokens: &[i32],
     ) -> Result<()> {
-        let (rt, pool, _arena, _sp, _stats) = self.paged_mut()?;
-        let page = rt.info.kv_page_size;
-        let nblk = rt.info.kv_blocks_per_seq();
+        let page = self.rt.info.kv_page_size;
+        let nblk = self.rt.info.kv_blocks_per_seq();
         if !set.alloc_mailbox() {
             bail!("KV page pool exhausted");
         }
@@ -1051,8 +766,10 @@ impl TextEngine {
             if !set.cover(pos, page) {
                 bail!("KV page pool exhausted");
             }
-            cow_block(rt, pool, set, pos / page)?;
-            *pool = rt.decode_paged(1, &[t], &[pos as i32], &set.table(nblk), &[mb], pool)?;
+            cow_block(&self.rt, &mut self.pool, set, pos / page)?;
+            self.pool =
+                self.rt
+                    .decode_paged(1, &[t], &[pos as i32], &set.table(nblk), &[mb], &self.pool)?;
             pos += 1;
         }
         Ok(())
@@ -1062,39 +779,49 @@ impl TextEngine {
     /// release the mailbox page, and wrap the pages as a cache-ready
     /// checkpoint of `len` tokens.
     pub fn seal_paged(&mut self, mut set: PageSet, len: usize) -> Result<Rc<CachedKv>> {
-        let (rt, pool, _arena, _sp, _stats) = self.paged_mut()?;
         let mb = set
             .mailbox
             .ok_or_else(|| anyhow!("sealing a page set without a mailbox"))?;
-        let logits = rt.read_logits_page(pool, mb)?;
+        let logits = self.rt.read_logits_page(&self.pool, mb)?;
         set.release_mailbox();
         Ok(CachedKv::new_paged(set, logits, len))
     }
 
-    /// Scatter a finished dense kv_one onto fresh pool pages and wrap
-    /// it as a paged checkpoint (the bridge from dense prefill builds
-    /// into the paged world; one device pass, like an arena inject).
-    /// The mailbox plane is routed to the page-0 sink — the logits are
-    /// captured host-side first.
-    pub fn adopt_cached(&mut self, kv_one: &PjRtBuffer, len: usize) -> Result<Rc<CachedKv>> {
-        let (rt, pool, arena, _sp, stats) = self.paged_mut()?;
-        let page = rt.info.kv_page_size;
-        let nblk = rt.info.kv_blocks_per_seq();
-        let logits = rt.read_logits(1, kv_one, 0)?;
-        let mut set = PageSet::new(arena);
-        if len > 0 && !set.cover(len - 1, page) {
-            bail!("KV page pool exhausted");
+    /// Prefill a fresh prompt straight onto pages, synchronously, and
+    /// return the cache-ready checkpoint.  One `prefill_chunk_paged`
+    /// dispatch per chunk — the one-shot form of the staged path (the
+    /// scheduler interleaves the same `feed_chunk_paged` primitive one
+    /// chunk per decode tick instead of looping here).
+    pub fn prefill_cached(&mut self, tokens: &[i32]) -> Result<Rc<CachedKv>> {
+        if tokens.is_empty() {
+            bail!("cannot prefill an empty prompt");
         }
-        *pool = rt.adopt_paged(pool, kv_one, &set.table(nblk), 0)?;
-        stats.page_adopts += 1;
-        Ok(CachedKv::new_paged(set, logits, len))
+        let chunk = self
+            .rt
+            .info
+            .prefill_chunk_buckets
+            .last()
+            .copied()
+            .ok_or_else(|| anyhow!("artifacts carry no prefill chunk buckets"))?;
+        self.stats.prefills += 1;
+        let mut set = self.begin_fresh_paged()?;
+        let mut pos = 0usize;
+        for piece in tokens.chunks(chunk) {
+            self.feed_chunk_paged(&mut set, pos, piece)?;
+            pos += piece.len();
+        }
+        self.seal_paged(set, pos)
     }
 
-    /// Backend-aware chunked catch-up from a cached state: dense
-    /// sources use the kv_one staging path, paged sources extend their
-    /// pages in place (zero-copy pins + CoW).  Returns the new state
+    /// Chunked catch-up from a cached state covering `matched` tokens:
+    /// extend its pages in place (zero-copy pins + CoW), feeding up to
+    /// `chunk` tokens per executable call.  Returns the new state
     /// covering `matched + suffix.len()` tokens; its logits are
-    /// reachable via [`TextEngine::cached_logits`].
+    /// reachable via [`TextEngine::cached_logits`].  Matches the
+    /// tokenwise path within fp tolerance (same fused attention
+    /// kernel; XLA fuses [C, d] and [1, d] row blocks differently, so
+    /// bit-equality is not guaranteed — greedy argmax is, per the
+    /// decode grid's batch-invariance contract).
     pub fn catch_up_chunk_cached(
         &mut self,
         src: &CachedKv,
@@ -1102,65 +829,62 @@ impl TextEngine {
         suffix: &[i32],
         chunk: usize,
     ) -> Result<Rc<CachedKv>> {
-        if src.is_paged() {
-            let mut set = self.begin_extend_paged(src, matched)?;
-            let mut pos = matched;
-            for piece in suffix.chunks(chunk.max(1)) {
-                self.feed_chunk_paged(&mut set, pos, piece)?;
-                pos += piece.len();
-            }
-            self.seal_paged(set, pos)
-        } else {
-            let kv_one = src.dense().ok_or_else(|| anyhow!("dense source expected"))?.clone();
-            let (kv, _logits) = self.catch_up_chunk(&kv_one, matched, suffix, chunk)?;
-            Ok(CachedKv::new(kv, matched + suffix.len()))
+        let mut set = self.begin_extend_paged(src, matched)?;
+        let mut pos = matched;
+        for piece in suffix.chunks(chunk.max(1)) {
+            self.feed_chunk_paged(&mut set, pos, piece)?;
+            pos += piece.len();
         }
+        self.seal_paged(set, pos)
     }
 
-    /// Backend-aware tokenwise catch-up (see
-    /// [`TextEngine::catch_up_chunk_cached`]).
+    /// Tokenwise catch-up (see [`TextEngine::catch_up_chunk_cached`]) —
+    /// the equivalence baseline in tests.
     pub fn catch_up_tokenwise_cached(
         &mut self,
         src: &CachedKv,
         matched: usize,
         suffix: &[i32],
     ) -> Result<Rc<CachedKv>> {
-        if src.is_paged() {
-            let mut set = self.begin_extend_paged(src, matched)?;
-            self.feed_tokens_paged(&mut set, matched, suffix)?;
-            self.seal_paged(set, matched + suffix.len())
-        } else {
-            let kv_one = src.dense().ok_or_else(|| anyhow!("dense source expected"))?.clone();
-            let (kv, _logits) = self.catch_up_tokenwise(&kv_one, matched, suffix)?;
-            Ok(CachedKv::new(kv, matched + suffix.len()))
-        }
+        let mut set = self.begin_extend_paged(src, matched)?;
+        self.feed_tokens_paged(&mut set, matched, suffix)?;
+        self.seal_paged(set, matched + suffix.len())
     }
 
     // ---------------------------------------------- capacity management
 
-    /// Grow (or keep) capacity so `n` sequences fit.  Arena: live slots
-    /// are migrated device-side (extract from the old arena, inject
-    /// into the new).  Paged: an executable-bucket swap — the pool and
-    /// every page stay put, only slot numbers are reassigned.
-    pub fn ensure_capacity(&mut self, n: usize) -> Result<()> {
-        if n <= self.bucket {
-            return Ok(());
+    /// (dispatch bucket, groups) able to hold `n` lanes: one group of
+    /// the smallest fitting bucket while `n` fits a lowered bucket,
+    /// else ceil(n/max_bucket) groups of the largest.
+    fn layout_for(&self, n: usize) -> Result<(usize, usize)> {
+        if let Some(b) = self.rt.info.bucket_for(n) {
+            return Ok((b, 1));
         }
-        let new_bucket = self
-            .rt
-            .info
-            .bucket_for(n)
-            .ok_or_else(|| anyhow!("{n} sequences exceed the largest bucket"))?;
-        self.migrate(new_bucket)
+        let max_b = self.rt.info.max_decode_bucket();
+        if n <= self.max_capacity() {
+            return Ok((max_b, n.div_ceil(max_b)));
+        }
+        bail!("{n} sequences exceed the {}-lane decode ceiling", self.max_capacity())
     }
 
-    /// Shrink to the smallest bucket that still fits the active set
-    /// (called by the scheduler when occupancy drops).  No-op if already
-    /// minimal.
+    /// Grow (or keep) capacity so `n` sequences fit.  Host-only: the
+    /// pool and every page stay put, lanes are renumbered into the new
+    /// bucket/group layout.
+    pub fn ensure_capacity(&mut self, n: usize) -> Result<()> {
+        if n <= self.capacity() {
+            return Ok(());
+        }
+        let (bucket, groups) = self.layout_for(n)?;
+        self.migrate(bucket, groups)
+    }
+
+    /// Shrink to the smallest layout that still fits the active set
+    /// (called by the scheduler when occupancy drops).  No-op if
+    /// already minimal.
     pub fn maybe_shrink(&mut self) -> Result<bool> {
-        let needed = self.rt.info.bucket_for(self.seqs.len().max(1)).unwrap();
-        if needed < self.bucket {
-            self.migrate(needed)?;
+        let (bucket, groups) = self.layout_for(self.seqs.len().max(1))?;
+        if bucket * groups < self.capacity() {
+            self.migrate(bucket, groups)?;
             Ok(true)
         } else {
             Ok(false)
@@ -1168,55 +892,28 @@ impl TextEngine {
     }
 
     /// Shrink with hysteresis: only migrate down when the active set
-    /// occupies at most 1/`factor` of the bucket, so occupancy
+    /// occupies at most 1/`factor` of capacity, so occupancy
     /// oscillating around a bucket boundary doesn't thrash grow→shrink
-    /// migrations (each costs O(arena) device work per live sequence on
-    /// the arena backend — the ablation_scheduler bench quantifies the
-    /// thrash cost).  The paged backend migrates for free (bucket swap
-    /// only), so its scheduler shrinks eagerly via
-    /// [`TextEngine::maybe_shrink`] instead.
+    /// renumberings.  (Migration is host-only and cheap here; the
+    /// hysteresis exists for schedulers that prefer stable dispatch
+    /// shapes, and as the knob the ablation_scheduler bench turns.)
     pub fn maybe_shrink_with_hysteresis(&mut self, factor: usize) -> Result<bool> {
-        if self.bucket < 4 || self.seqs.len() * factor > self.bucket {
+        if self.capacity() < 4 || self.seqs.len() * factor > self.capacity() {
             return Ok(false);
         }
         self.maybe_shrink()
     }
 
-    fn migrate(&mut self, new_bucket: usize) -> Result<()> {
-        if self.is_paged() {
-            // Host-only: pages never move; compact slot numbers into
-            // the new bucket's lane range.
-            debug_assert!(self.seqs.len() <= new_bucket);
-            let mut new_slots: Vec<Option<u64>> = vec![None; new_bucket];
-            for (i, (&id, st)) in self.seqs.iter_mut().enumerate() {
-                st.slot = i;
-                new_slots[i] = Some(id);
-            }
-            self.slots = new_slots;
-            self.bucket = new_bucket;
-            self.stats.migrations += 1;
-            return Ok(());
+    fn migrate(&mut self, bucket: usize, groups: usize) -> Result<()> {
+        debug_assert!(self.seqs.len() <= bucket * groups);
+        let mut slots: Vec<Option<u64>> = vec![None; bucket * groups];
+        for (i, (&id, st)) in self.seqs.iter_mut().enumerate() {
+            st.slot = i;
+            slots[i] = Some(id);
         }
-        let KvStore::Arena { arena } = &mut self.store else {
-            unreachable!("arena migrate on paged store")
-        };
-        let mut new_arena = self.rt.new_arena(new_bucket)?;
-        let mut new_slots: Vec<Option<u64>> = vec![None; new_bucket];
-        let mut moved: Vec<(u64, usize)> = Vec::new();
-        for (new_slot, (&id, st)) in self.seqs.iter().enumerate() {
-            let kv = self.rt.extract(self.bucket, arena, st.slot)?;
-            self.stats.extracts += 1;
-            new_arena = self.rt.inject(new_bucket, &new_arena, &kv, new_slot)?;
-            self.stats.injects += 1;
-            new_slots[new_slot] = Some(id);
-            moved.push((id, new_slot));
-        }
-        for (id, new_slot) in moved {
-            self.seqs.get_mut(&id).unwrap().slot = new_slot;
-        }
-        *arena = new_arena;
-        self.slots = new_slots;
-        self.bucket = new_bucket;
+        self.slots = slots;
+        self.bucket = bucket;
+        self.groups = groups;
         self.stats.migrations += 1;
         Ok(())
     }

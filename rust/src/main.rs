@@ -24,7 +24,7 @@ const USAGE: &str = "umserve — unified-memory LLM/MLLM serving (vllm-mlx repro
 USAGE:
   umserve serve --model NAME [--port 8000] [--artifacts artifacts]
                 [--text-cache-mb 512] [--mm-emb-cache-mb 256] [--mm-kv-cache-mb 256]
-                [--no-cache] [--no-shrink] [--kv paged|arena]
+                [--no-cache] [--no-shrink] [--kv-pool-pages N]
                 [--prefill-chunk 32] [--prefill-chunks-per-step 1]
                 [--sched priority|fifo] [--default-priority normal]
                 [--preemption on|off] [--aging-ticks 64]
@@ -37,14 +37,18 @@ USAGE:
   umserve info  [--artifacts artifacts]
 
 KV MEMORY:
-  With --kv paged (the default) the decode KV lives in a pool of
-  fixed-size pages managed by a block allocator with refcounted
-  copy-on-write sharing: prefix-cache hits, eviction checkpoints and
+  All KV state lives in a pool of fixed-size pages managed by a block
+  allocator with refcounted copy-on-write sharing: prompts prefill
+  straight onto pages, prefix-cache hits, eviction checkpoints and
   coalesced followers pin the cached pages instead of copying KV
   state, and a sequence diverging from a shared prefix copies only
-  the one page it writes.  Greedy output is byte-identical to
-  --kv arena (the dense per-slot arena), which remains available for
-  A/B runs and for artifacts built before the paged entries existed.
+  the one page it writes.  Decode lanes are virtual: the scheduler
+  packs any number of sequences into repeated fixed-bucket dispatches
+  per tick, so concurrency is bounded by pool pages, not by the
+  largest lowered batch bucket.  --kv-pool-pages caps the pool below
+  the manifest size (benchmarking / memory-pressure experiments).
+  The dense `--kv arena` backend has been removed; the flag is
+  recognised for one release and errors with a migration hint.
 
 SCHEDULING:
   Requests carry a priority class: interactive | normal | batch
@@ -98,7 +102,7 @@ MULTIMODAL:
 
 CLUSTER:
   --engines N serves from N independent scheduler replicas (each with
-  its own weights, decode arena and caches) behind a router.  --route
+  its own weights, KV page pool and caches) behind a router.  --route
   picks the placement policy: rr (round-robin), load (least-loaded by
   live queue+slot pressure), or affinity (the default: route by text-
   prefix hash / image content hash so repeated prompts and images land
@@ -163,7 +167,14 @@ fn engine_config(args: &argparse::Args) -> anyhow::Result<EngineConfig> {
             overlap: args.on_off("mm-overlap", true)?,
         },
         kv: KvConfig {
+            // One-release shim: `--kv arena` is still parsed so the
+            // scheduler can reject it with a migration hint instead of
+            // an unknown-flag error.
             paged: args.choice("kv", "paged", &["paged", "arena"])? == "paged",
+            pool_page_cap: match args.usize("kv-pool-pages", 0)? {
+                0 => None,
+                n => Some(n),
+            },
             text_cache_bytes: if no_cache { 0 } else { args.usize("text-cache-mb", 512)? << 20 },
             mm_emb_cache_bytes: if no_cache {
                 0

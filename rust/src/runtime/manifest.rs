@@ -93,19 +93,20 @@ pub struct ModelInfo {
     /// falls back to token-by-token catch-up and inline prefill).
     pub prefill_chunk_buckets: Vec<usize>,
     pub embed_prefill_buckets: Vec<usize>,
-    /// Position grids with lowered `trim_kv_s{S}` / `untrim_kv_s{S}`
-    /// entries (empty for text-only models and manifests predating
-    /// cached-KV trimming — the caches then store full s_max buffers).
-    pub trim_kv_buckets: Vec<usize>,
     /// Paged-KV geometry: page size in positions and physical pages in
-    /// the lowered pool (both 0 for manifests predating paging — the
-    /// runtime then only offers the dense slot arena).
+    /// the lowered pool (both 0 for manifests predating paging — such
+    /// artifact sets cannot serve and must be rebuilt).
     pub kv_page_size: usize,
     pub kv_pool_pages: usize,
+    /// Decode-lane ceiling under lane virtualization: the engine packs
+    /// up to this many active lanes into repeated largest-bucket
+    /// `decode_paged_b{B}` dispatches over disjoint block-table slices
+    /// (0 in the manifest defaults to 4x the largest lowered bucket).
+    pub decode_virtual_lanes: usize,
     /// Chunk sizes with lowered speculative-verify entries
-    /// (`spec_chunk_c{C}` / `spec_chunk_paged_c{C}` and their
-    /// `read_logits_chunk*` readbacks; empty for manifests predating
-    /// speculative decoding — the scheduler then decodes tokenwise).
+    /// (`spec_chunk_paged_c{C}` and their `read_logits_chunk_paged_c{C}`
+    /// readbacks; empty for manifests predating speculative decoding —
+    /// the scheduler then decodes tokenwise).
     pub spec_chunk_buckets: Vec<usize>,
     /// Scratch pages the paged spec entry at chunk size C packs its
     /// [C, vocab] logits readback into (keyed by C).
@@ -114,7 +115,10 @@ pub struct ModelInfo {
 }
 
 impl ModelInfo {
-    /// KV arena shape for a batch bucket (plane 0 = logits mailbox).
+    /// Dense single-sequence KV shape math (plane 0 = logits mailbox).
+    /// No dense entries are lowered anymore — this is pure geometry,
+    /// kept for byte-accounting and for the baseline simulators that
+    /// model per-step dense KV transfers.
     pub fn arena_shape(&self, bucket: usize) -> Vec<usize> {
         vec![self.n_layers + 1, 2, bucket, self.n_kv_heads, self.s_max, self.d_head]
     }
@@ -168,12 +172,12 @@ impl ModelInfo {
         (self.n_layers + 1) * 2 * self.n_kv_heads * self.kv_page_size * self.d_head * 4
     }
 
-    /// Whether this manifest carries the paged-KV entries.
+    /// Whether this manifest carries the paged-KV entries (serving is
+    /// paged-only: artifacts without them must be rebuilt).
     pub fn has_paged_kv(&self) -> bool {
         self.kv_page_size > 0
             && self.kv_pool_pages > 0
             && self.has_entry("zeros_pool")
-            && self.has_entry("adopt_paged")
             && self.has_entry("copy_page")
             && self.has_entry("read_logits_page")
     }
@@ -181,6 +185,21 @@ impl ModelInfo {
     /// Smallest decode bucket that fits `n` active sequences.
     pub fn bucket_for(&self, n: usize) -> Option<usize> {
         self.decode_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Largest lowered decode bucket (the per-dispatch lane count).
+    pub fn max_decode_bucket(&self) -> usize {
+        self.decode_buckets.last().copied().unwrap_or(1)
+    }
+
+    /// Decode-lane ceiling under lane virtualization: >bucket-sized
+    /// active sets run as ceil(n / max_bucket) dispatches per tick.
+    pub fn virtual_lane_limit(&self) -> usize {
+        if self.decode_virtual_lanes > 0 {
+            self.decode_virtual_lanes
+        } else {
+            4 * self.max_decode_bucket()
+        }
     }
 
     /// Smallest prefill bucket that fits `n` prompt tokens.
@@ -213,27 +232,13 @@ impl ModelInfo {
         self.spec_chunk_buckets.last().copied()
     }
 
-    /// Whether this manifest carries the speculative-verify entries for
-    /// the given KV backend.
-    pub fn has_spec_chunk(&self, paged: bool) -> bool {
+    /// Whether this manifest carries the speculative-verify entries.
+    pub fn has_spec_chunk(&self) -> bool {
         self.spec_chunk_buckets.iter().all(|&c| {
-            if paged {
-                self.has_entry(&format!("spec_chunk_paged_c{c}"))
-                    && self.has_entry(&format!("read_logits_chunk_paged_c{c}"))
-                    && self.spec_scratch_pages.contains_key(&c)
-            } else {
-                self.has_entry(&format!("spec_chunk_c{c}"))
-                    && self.has_entry(&format!("read_logits_chunk_c{c}"))
-            }
+            self.has_entry(&format!("spec_chunk_paged_c{c}"))
+                && self.has_entry(&format!("read_logits_chunk_paged_c{c}"))
+                && self.spec_scratch_pages.contains_key(&c)
         }) && !self.spec_chunk_buckets.is_empty()
-    }
-
-    /// Smallest trim grid size that keeps `n` positions AND the plane-0
-    /// logits mailbox intact (cached entries must still serve their
-    /// first-token logits on a full hit).
-    pub fn trim_bucket_for(&self, n: usize) -> Option<usize> {
-        let need = n.max(self.logits_rows());
-        self.trim_kv_buckets.iter().copied().find(|&s| s >= need)
     }
 
     /// Largest lowered vision batch bucket <= `n` pending same-resolution
@@ -427,11 +432,6 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
             req(m, "embed_prefill_buckets")?,
             "embed_prefill_buckets",
         )?,
-        // Optional: absent in pre-trim manifests and text-only models.
-        trim_kv_buckets: match m.get("trim_kv_buckets") {
-            Some(Json::Null) | None => Vec::new(),
-            Some(j) => usize_list(j, "trim_kv_buckets")?,
-        },
         // Optional: absent in pre-paging manifests.
         kv_page_size: match m.get("kv_page_size") {
             Some(Json::Null) | None => 0,
@@ -440,6 +440,12 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
         kv_pool_pages: match m.get("kv_pool_pages") {
             Some(Json::Null) | None => 0,
             Some(j) => as_usize(j, "kv_pool_pages")?,
+        },
+        // Optional: absent in pre-virtualization manifests (defaults to
+        // 4x the largest lowered bucket via virtual_lane_limit()).
+        decode_virtual_lanes: match m.get("decode_virtual_lanes") {
+            Some(Json::Null) | None => 0,
+            Some(j) => as_usize(j, "decode_virtual_lanes")?,
         },
         // Optional: absent in pre-speculation manifests.
         spec_chunk_buckets: match m.get("spec_chunk_buckets") {
@@ -478,12 +484,12 @@ mod tests {
         let m = store.model("qwen3-0.6b").unwrap();
         assert_eq!(m.d_model, 64);
         assert_eq!(m.decode_buckets, vec![1, 2, 4, 8, 16]);
-        let d1 = m.entry("decode_b1").unwrap();
-        // inputs: tokens, pos, kv — then weights.
+        let d1 = m.entry("decode_paged_b1").unwrap();
+        // inputs: tokens, pos, tables, mailbox, pool — then weights.
         let inputs: Vec<_> = d1.inputs().collect();
         assert_eq!(inputs[0].name, "tokens");
-        assert_eq!(inputs[2].name, "kv");
-        assert_eq!(inputs[2].shape, m.arena_shape(1));
+        assert_eq!(inputs[4].name, "pool");
+        assert_eq!(inputs[4].shape, m.pool_shape());
         assert!(d1.weight_names().count() > 10);
     }
 
@@ -495,7 +501,8 @@ mod tests {
         assert_eq!(v.resolutions, vec![224, 448, 768, 1024]);
         assert_eq!(v.n_patches[&1024], 1024);
         assert!(m.entries.contains_key("vision_r1024"));
-        assert!(m.entries.contains_key("prefill_embeds_s192"));
+        assert!(m.entries.contains_key("embed_lookup_s192"));
+        assert!(m.entries.contains_key("prefill_chunk_embeds_paged_c32"));
         // Batched encoder grids.
         assert_eq!(v.batch_buckets, vec![2, 4, 8]);
         assert!(m.entries.contains_key("vision_r224_b8"));
@@ -506,16 +513,23 @@ mod tests {
     }
 
     #[test]
-    fn text_models_carry_trim_grids() {
-        // The text prefix cache trims its entries too, so every model —
-        // not just the vision ones — lowers the trim/untrim pair.
+    fn no_dense_era_entries() {
+        // Serving is paged-only: the dense single-arena grids and the
+        // cached-KV trim grids must not reappear in the artifact set.
         let store = ArtifactStore::open(artifacts_dir()).unwrap();
-        let m = store.model("qwen3-0.6b").unwrap();
-        assert!(!m.trim_kv_buckets.is_empty());
-        for &s in &m.trim_kv_buckets {
-            assert!(m.entries.contains_key(&format!("trim_kv_s{s}")));
-            assert!(m.entries.contains_key(&format!("untrim_kv_s{s}")));
-            assert!(s >= m.logits_rows() && s < m.s_max);
+        for m in store.models.values() {
+            for name in m.entries.keys() {
+                for stale in [
+                    "decode_b", "inject_b", "extract_b", "zeros_b", "read_logits_b",
+                    "read_logits_one_b", "prefill_s", "prefill_embeds_s", "adopt_paged",
+                ] {
+                    assert!(!name.starts_with(stale), "{}: stale entry {name}", m.name);
+                }
+                assert!(!name.contains("trim"), "{}: stale entry {name}", m.name);
+                if name.starts_with("prefill_chunk") || name.starts_with("spec_chunk") {
+                    assert!(name.contains("paged"), "{}: stale dense entry {name}", m.name);
+                }
+            }
         }
     }
 
@@ -529,9 +543,11 @@ mod tests {
             assert_eq!(m.kv_blocks_per_seq(), 10);
             // The per-page mailbox region must cover the vocab.
             assert!(m.n_kv_heads * m.kv_page_size * m.d_head >= m.vocab, "{}", m.name);
-            // Pool fits the largest bucket's worth of sequences twice.
-            let need = m.decode_buckets.iter().max().unwrap() * (m.kv_blocks_per_seq() + 1);
-            assert!(m.kv_pool_pages >= 2 * need, "{}", m.name);
+            // Every virtual lane can hold a full-length sequence
+            // (blocks + one mailbox page).
+            assert_eq!(m.virtual_lane_limit(), 4 * m.max_decode_bucket(), "{}", m.name);
+            let need = m.virtual_lane_limit() * (m.kv_blocks_per_seq() + 1);
+            assert!(m.kv_pool_pages >= need, "{}", m.name);
             for &b in &m.decode_buckets {
                 let e = m.entry(&format!("decode_paged_b{b}")).unwrap();
                 let inputs: Vec<_> = e.inputs().collect();
@@ -550,8 +566,7 @@ mod tests {
         let store = ArtifactStore::open(artifacts_dir()).unwrap();
         for m in store.models.values() {
             assert_eq!(m.spec_chunk_buckets, vec![8, 16], "{}", m.name);
-            assert!(m.has_spec_chunk(false), "{}", m.name);
-            assert!(m.has_spec_chunk(true), "{}", m.name);
+            assert!(m.has_spec_chunk(), "{}", m.name);
             for &c in &m.spec_chunk_buckets {
                 // Packed [C, vocab] readback must fit the layouts.
                 assert!(c * m.vocab <= 2 * m.n_kv_heads * m.s_max * m.d_head, "{}", m.name);
@@ -597,15 +612,18 @@ mod tests {
         assert_eq!(m.bucket_for(1), Some(1));
         assert_eq!(m.bucket_for(3), Some(4));
         assert_eq!(m.bucket_for(16), Some(16));
+        // Past the largest lowered bucket, lane virtualization takes
+        // over: no single dispatch fits, but the engine serves up to
+        // virtual_lane_limit() lanes as repeated dispatches.
         assert_eq!(m.bucket_for(17), None);
-        assert_eq!(m.prefill_bucket_for(33), Some(128));
+        assert_eq!(m.max_decode_bucket(), 16);
+        assert_eq!(m.virtual_lane_limit(), 64);
         // Chunked-prefill buckets (8, 32 in the zoo).
         assert_eq!(m.chunk_bucket_for(1), Some(8));
         assert_eq!(m.chunk_bucket_for(9), Some(32));
         assert_eq!(m.chunk_bucket_for(33), None);
         assert_eq!(m.max_chunk_bucket(), Some(32));
-        assert!(m.has_entry("prefill_chunk_c32"));
-        assert!(m.has_entry("zeros_b1"));
-        assert!(m.has_entry("read_logits_one_b16"));
+        assert!(m.has_entry("prefill_chunk_paged_c32"));
+        assert!(m.has_entry("read_logits_page"));
     }
 }

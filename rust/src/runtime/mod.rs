@@ -8,7 +8,7 @@
 //! * parse the `.umw` weight blobs and upload each tensor ONCE as a
 //!   device-resident [`xla::PjRtBuffer`] ([`weights`], [`model`])
 //! * compile each HLO entry lazily and cache the executable
-//! * thread KV arenas between executables as device buffers
+//! * thread the paged KV pool between executables as a device buffer
 //!   (`execute_b`) so the serving hot loop never copies model state
 //!   through the host — the reproduction's analog of the paper's
 //!   unified-memory zero-copy claim
@@ -26,5 +26,5 @@ pub mod weights;
 
 pub use manifest::{ArgDesc, ArtifactStore, EntryDesc, ModelInfo, VisionInfo};
 pub use model::ModelRuntime;
-pub use paged::{PageArena, PageArenaStats, PageSet, SharedPageArena};
+pub use paged::{shared, PageArena, PageArenaStats, PageSet, SharedPageArena};
 pub use weights::{HostTensor, UmwDtype};

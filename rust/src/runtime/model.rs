@@ -48,10 +48,6 @@ pub struct ModelRuntime {
     pub host_weights: HashMap<String, HostTensor>,
     exes: RefCell<HashMap<String, Rc<CompiledEntry>>>,
     stats: RefCell<RuntimeStats>,
-    /// Host zero staging vectors per bucket — only used as a fallback
-    /// when the manifest predates the device-side `zeros_b{B}` entries;
-    /// cached so repeated migrations don't re-allocate/zero O(arena).
-    zeros_host: RefCell<HashMap<usize, Vec<f32>>>,
 }
 
 impl ModelRuntime {
@@ -97,7 +93,6 @@ impl ModelRuntime {
             host_weights,
             exes: RefCell::new(HashMap::new()),
             stats: RefCell::new(RuntimeStats::default()),
-            zeros_host: RefCell::new(HashMap::new()),
         };
         rt.stats.borrow_mut().host_upload_bytes = upload_bytes;
         Ok(rt)
@@ -207,180 +202,17 @@ impl ModelRuntime {
     }
 
     // ------------------------------------------------------ typed helpers
-
-    /// Fresh zero-filled KV arena for a decode bucket, device-resident.
-    ///
-    /// Allocates on device via the tiny `zeros_b{bucket}` executable
-    /// (no host staging, no upload — arenas are O(MB) and this runs on
-    /// every grow/shrink migration).  Manifests predating that entry
-    /// fall back to uploading a cached host-zero staging vector.
-    pub fn new_arena(&self, bucket: usize) -> Result<PjRtBuffer> {
-        let entry = format!("zeros_b{bucket}");
-        if self.info.has_entry(&entry) {
-            // Only a MISSING entry routes to the host fallback; real
-            // device errors (OOM mid-migration, …) must propagate, not
-            // silently degrade into per-migration host uploads.
-            return self.run(&entry, &[]);
-        }
-        let shape = self.info.arena_shape(bucket);
-        let n: usize = shape.iter().product();
-        let mut cache = self.zeros_host.borrow_mut();
-        let zeros = cache.entry(bucket).or_insert_with(|| vec![0f32; n]);
-        let buf = self.client.buffer_from_host_buffer::<f32>(zeros, &shape, None)?;
-        Ok(buf)
-    }
-
-    /// Fresh zero kv_one (a bucket-1 arena) — the seed state the staged
-    /// prefill pipeline extends chunk by chunk.
-    pub fn new_kv_one(&self) -> Result<PjRtBuffer> {
-        self.new_arena(1)
-    }
-
-    /// One decode step over a bucket arena.  `tokens`/`pos` are per-slot
-    /// (pad idle slots with token 0 / their last position).
-    pub fn decode(
-        &self,
-        bucket: usize,
-        tokens: &[i32],
-        pos: &[i32],
-        arena: &PjRtBuffer,
-    ) -> Result<PjRtBuffer> {
-        debug_assert_eq!(tokens.len(), bucket);
-        self.run(
-            &format!("decode_b{bucket}"),
-            &[
-                Input::I32(tokens.to_vec(), vec![bucket]),
-                Input::I32(pos.to_vec(), vec![bucket]),
-                Input::Buffer(arena),
-            ],
-        )
-    }
-
-    /// Prompt processing: pads `tokens` into the chosen bucket.
-    /// Returns the kv_one buffer (logits in the mailbox).
-    pub fn prefill(&self, tokens: &[i32]) -> Result<PjRtBuffer> {
-        let bucket = self
-            .info
-            .prefill_bucket_for(tokens.len())
-            .ok_or_else(|| anyhow!("prompt of {} tokens exceeds buckets", tokens.len()))?;
-        let mut padded = tokens.to_vec();
-        padded.resize(bucket, 0);
-        self.run(
-            &format!("prefill_s{bucket}"),
-            &[
-                Input::I32(padded, vec![bucket]),
-                Input::I32(vec![tokens.len() as i32], vec![]),
-            ],
-        )
-    }
-
-    /// Resume-capable prompt processing: extend a partially-built
-    /// kv_one by one chunk of tokens occupying absolute positions
-    /// `start .. start+tokens.len()`.  The chunk executable DONATES
-    /// `kv_one` (like `decode` donates the arena) — the caller must
-    /// replace its handle with the returned buffer.
-    pub fn prefill_from(
-        &self,
-        kv_one: &PjRtBuffer,
-        start: usize,
-        tokens: &[i32],
-    ) -> Result<PjRtBuffer> {
-        let c = self
-            .info
-            .chunk_bucket_for(tokens.len())
-            .ok_or_else(|| anyhow!("chunk of {} tokens exceeds chunk buckets", tokens.len()))?;
-        let mut padded = tokens.to_vec();
-        padded.resize(c, 0);
-        self.run(
-            &format!("prefill_chunk_c{c}"),
-            &[
-                Input::I32(padded, vec![c]),
-                Input::I32(vec![start as i32], vec![]),
-                Input::I32(vec![tokens.len() as i32], vec![]),
-                Input::Buffer(kv_one),
-            ],
-        )
-    }
-
-    /// `prefill_from` over pre-composed embedding rows (the multimodal
-    /// staged pipeline).  `embeds` is row-major [len, d_model]; kv_one
-    /// is donated as in `prefill_from`.
-    pub fn prefill_from_embeds(
-        &self,
-        kv_one: &PjRtBuffer,
-        start: usize,
-        embeds: &[f32],
-        len: usize,
-    ) -> Result<PjRtBuffer> {
-        let d = self.info.d_model;
-        debug_assert_eq!(embeds.len(), len * d);
-        let c = self
-            .info
-            .chunk_bucket_for(len)
-            .ok_or_else(|| anyhow!("embed chunk of {len} rows exceeds chunk buckets"))?;
-        let mut padded = embeds.to_vec();
-        padded.resize(c * d, 0.0);
-        self.run(
-            &format!("prefill_chunk_embeds_c{c}"),
-            &[
-                Input::F32(padded, vec![c, d]),
-                Input::I32(vec![start as i32], vec![]),
-                Input::I32(vec![len as i32], vec![]),
-                Input::Buffer(kv_one),
-            ],
-        )
-    }
+    //
+    // Serving is paged-only: every KV-touching helper operates on the
+    // page pool over block tables.  The dense single-arena helpers
+    // (arena construction, inject/extract, dense decode/prefill, KV
+    // trimming) are gone with their entries; `ModelInfo::arena_shape`
+    // survives as pure geometry for byte accounting.
 
     /// Whether this model's artifacts carry the speculative-verify
-    /// entries for the active KV backend.
-    pub fn has_spec_chunk(&self, paged: bool) -> bool {
-        self.info.has_spec_chunk(paged)
-    }
-
-    /// Speculative verify over a dense kv_one: score `tokens`
-    /// (`[next_token, draft_1..draft_K]`) at absolute positions
-    /// `start ..` in ONE dispatch, packing every row's logits into
-    /// plane 0 for `read_spec_logits`.  Row i is fp-equivalent — with
-    /// identical greedy argmax — to the tokenwise decode step that fed
-    /// `tokens[0..=i]` (the chunked-catch-up equivalence contract), so
-    /// accepting the longest matched argmax prefix is EXACT for greedy
-    /// sampling.  The kv_one is donated; its K/V gains all fed rows
-    /// (rows past the accepted prefix are garbage the attention mask
-    /// hides, exactly like arena positions >= len).  NB: the returned
-    /// buffer's plane-0 mailbox holds the spec packing, NOT a single
-    /// logits row — the caller must track last-logits host-side until
-    /// the next decode/chunk dispatch rebuilds the mailbox.
-    pub fn spec_verify(
-        &self,
-        kv_one: &PjRtBuffer,
-        start: usize,
-        tokens: &[i32],
-    ) -> Result<(PjRtBuffer, usize)> {
-        let c = self
-            .info
-            .spec_chunk_bucket_for(tokens.len())
-            .ok_or_else(|| anyhow!("spec chunk of {} tokens exceeds buckets", tokens.len()))?;
-        let mut padded = tokens.to_vec();
-        padded.resize(c, 0);
-        let out = self.run(
-            &format!("spec_chunk_c{c}"),
-            &[
-                Input::I32(padded, vec![c]),
-                Input::I32(vec![start as i32], vec![]),
-                Input::I32(vec![tokens.len() as i32], vec![]),
-                Input::Buffer(kv_one),
-            ],
-        )?;
-        Ok((out, c))
-    }
-
-    /// Read back a `spec_verify` packing: [c, vocab] row-major.
-    pub fn read_spec_logits(&self, kv_one: &PjRtBuffer, c: usize) -> Result<Vec<f32>> {
-        let buf = self.run(&format!("read_logits_chunk_c{c}"), &[Input::Buffer(kv_one)])?;
-        let lit = buf.to_literal_sync()?;
-        let v = lit.to_vec::<f32>()?;
-        self.stats.borrow_mut().host_readback_bytes += (v.len() * 4) as u64;
-        Ok(v)
+    /// entries.
+    pub fn has_spec_chunk(&self) -> bool {
+        self.info.has_spec_chunk()
     }
 
     /// Whether this model's artifacts carry the chunked-prefill entries
@@ -389,34 +221,14 @@ impl ModelRuntime {
         self.info
             .prefill_chunk_buckets
             .iter()
-            .any(|c| self.info.has_entry(&format!("prefill_chunk_c{c}")))
+            .any(|c| self.info.has_entry(&format!("prefill_chunk_paged_c{c}")))
     }
 
     pub fn has_chunk_prefill_embeds(&self) -> bool {
         self.info
             .prefill_chunk_buckets
             .iter()
-            .any(|c| self.info.has_entry(&format!("prefill_chunk_embeds_c{c}")))
-    }
-
-    /// Prompt processing from a pre-composed embedding sequence
-    /// (multimodal path).  `embeds` is row-major [len, d_model].
-    pub fn prefill_embeds(&self, embeds: &[f32], len: usize) -> Result<PjRtBuffer> {
-        let d = self.info.d_model;
-        debug_assert_eq!(embeds.len(), len * d);
-        let bucket = self
-            .info
-            .embed_bucket_for(len)
-            .ok_or_else(|| anyhow!("embed sequence of {len} exceeds buckets"))?;
-        let mut padded = embeds.to_vec();
-        padded.resize(bucket * d, 0.0);
-        self.run(
-            &format!("prefill_embeds_s{bucket}"),
-            &[
-                Input::F32(padded, vec![bucket, d]),
-                Input::I32(vec![len as i32], vec![]),
-            ],
-        )
+            .any(|c| self.info.has_entry(&format!("prefill_chunk_embeds_paged_c{c}")))
     }
 
     /// Token ids -> embedding rows (host-side multimodal composition).
@@ -532,8 +344,8 @@ impl ModelRuntime {
                 .all(|b| self.info.has_entry(&format!("decode_paged_b{b}")))
     }
 
-    /// Fresh zero-filled page pool, device-resident (the paged analog
-    /// of `new_arena`; allocated once per engine, never migrated).
+    /// Fresh zero-filled page pool, device-resident (allocated once per
+    /// engine, never migrated — bucket changes swap executables only).
     pub fn new_pool(&self) -> Result<PjRtBuffer> {
         self.run("zeros_pool", &[])
     }
@@ -566,9 +378,11 @@ impl ModelRuntime {
         )
     }
 
-    /// `prefill_from` writing straight into one sequence's pages: the
-    /// chunk occupies absolute positions `start ..`, the final logits
-    /// land in `mailbox`.  The pool is donated.
+    /// Chunked prefill writing straight into one sequence's pages:
+    /// extend a partially-built sequence by one chunk of tokens at
+    /// absolute positions `start ..`; the final logits land in
+    /// `mailbox`.  The pool is DONATED — the caller must replace its
+    /// handle with the returned buffer.
     pub fn prefill_from_paged(
         &self,
         pool: &PjRtBuffer,
@@ -631,8 +445,13 @@ impl ModelRuntime {
         )
     }
 
-    /// Speculative verify over the page pool (see `spec_verify` for the
-    /// row semantics).  The caller must have covered positions
+    /// Speculative verify over the page pool: score `tokens`
+    /// (`[next_token, draft_1..draft_K]`) at absolute positions
+    /// `start ..` in ONE dispatch.  Row i is fp-equivalent — with
+    /// identical greedy argmax — to the tokenwise decode step that fed
+    /// `tokens[0..=i]` (the chunked-catch-up equivalence contract), so
+    /// accepting the longest matched argmax prefix is EXACT for greedy
+    /// sampling.  The caller must have covered positions
     /// `start .. start+tokens.len()` with PRIVATE pages in `table`
     /// (copy-on-write any shared tail first): the dispatch scatters
     /// draft K/V into them, and a rejected draft's page-tail writes are
@@ -693,29 +512,6 @@ impl ModelRuntime {
         Ok(v)
     }
 
-    /// Scatter a dense kv_one onto a sequence's pages (the one-shot
-    /// prefill -> paged serving bridge; the paged analog of `inject`).
-    /// The pool is donated; the kv_one is only read.
-    pub fn adopt_paged(
-        &self,
-        pool: &PjRtBuffer,
-        kv_one: &PjRtBuffer,
-        table: &[i32],
-        mailbox: u32,
-    ) -> Result<PjRtBuffer> {
-        let nblk = self.info.kv_blocks_per_seq();
-        debug_assert_eq!(table.len(), nblk);
-        self.run(
-            "adopt_paged",
-            &[
-                Input::Buffer(pool),
-                Input::Buffer(kv_one),
-                Input::I32(table.to_vec(), vec![nblk]),
-                Input::I32(vec![mailbox as i32], vec![]),
-            ],
-        )
-    }
-
     /// Device-side copy of page `src` over page `dst` across every
     /// plane — the copy-on-write primitive (pool donated).
     pub fn copy_page(&self, pool: &PjRtBuffer, src: u32, dst: u32) -> Result<PjRtBuffer> {
@@ -739,106 +535,6 @@ impl ModelRuntime {
         let v = lit.to_vec::<f32>()?;
         self.stats.borrow_mut().host_readback_bytes += (v.len() * 4) as u64;
         Ok(v)
-    }
-
-    /// Whether this model's artifacts carry the `trim_kv_s{s}` /
-    /// `untrim_kv_s{s}` pair for a grid size.
-    pub fn has_trim_kv(&self, s: usize) -> bool {
-        self.info.has_entry(&format!("trim_kv_s{s}"))
-            && self.info.has_entry(&format!("untrim_kv_s{s}"))
-    }
-
-    /// Device-side slice of a kv_one to its first `s` positions (a
-    /// lowered trim grid size).  The source buffer is read, not
-    /// donated — callers keep using the full state while the cache
-    /// stores the trimmed copy.
-    pub fn trim_kv(&self, kv_one: &PjRtBuffer, s: usize) -> Result<PjRtBuffer> {
-        self.run(&format!("trim_kv_s{s}"), &[Input::Buffer(kv_one)])
-    }
-
-    /// Re-expand a trimmed KV state (`s` positions) to the s_max arena
-    /// row, zero-filling positions >= `s`.  Attention masks by sequence
-    /// length, so decode from the result is token-identical to decode
-    /// from the original untrimmed buffer.
-    pub fn untrim_kv(&self, trimmed: &PjRtBuffer, s: usize) -> Result<PjRtBuffer> {
-        self.run(&format!("untrim_kv_s{s}"), &[Input::Buffer(trimmed)])
-    }
-
-    /// Insert a prefilled kv_one into `arena` slot `slot` (device-side).
-    pub fn inject(
-        &self,
-        bucket: usize,
-        arena: &PjRtBuffer,
-        kv_one: &PjRtBuffer,
-        slot: usize,
-    ) -> Result<PjRtBuffer> {
-        self.run(
-            &format!("inject_b{bucket}"),
-            &[
-                Input::Buffer(arena),
-                Input::Buffer(kv_one),
-                Input::I32(vec![slot as i32], vec![]),
-            ],
-        )
-    }
-
-    /// Extract slot `slot` of `arena` as a kv_one row (device-side).
-    pub fn extract(&self, bucket: usize, arena: &PjRtBuffer, slot: usize) -> Result<PjRtBuffer> {
-        self.run(
-            &format!("extract_b{bucket}"),
-            &[Input::Buffer(arena), Input::I32(vec![slot as i32], vec![])],
-        )
-    }
-
-    /// Read every slot's logits from an arena/kv_one buffer's plane-0
-    /// mailbox.  Executes the tiny `read_logits_b{bucket}` extractor
-    /// (the TFRT CPU client lacks raw-offset host reads) and copies back
-    /// only the [bucket, vocab] literal — ~8 kB/slot/step, the only
-    /// per-step host traffic besides the token ids.  Returns a flat
-    /// row-major [bucket * vocab] vector.
-    pub fn read_logits_all(&self, bucket: usize, arena: &PjRtBuffer) -> Result<Vec<f32>> {
-        let buf = self.run(&format!("read_logits_b{bucket}"), &[Input::Buffer(arena)])?;
-        let lit = buf.to_literal_sync()?;
-        let v = lit.to_vec::<f32>()?;
-        self.stats.borrow_mut().host_readback_bytes += (v.len() * 4) as u64;
-        Ok(v)
-    }
-
-    /// One slot's logits via the per-slot extractor entry
-    /// (`read_logits_one_b{bucket}`): reads back O(vocab) bytes for that
-    /// slot only, instead of the whole [bucket, vocab] literal.  Falls
-    /// back to slicing the full readback on pre-chunking manifests.
-    pub fn read_logits_one(
-        &self,
-        bucket: usize,
-        arena: &PjRtBuffer,
-        slot: usize,
-    ) -> Result<Vec<f32>> {
-        let entry = format!("read_logits_one_b{bucket}");
-        if self.info.has_entry(&entry) {
-            let buf = self.run(
-                &entry,
-                &[Input::Buffer(arena), Input::I32(vec![slot as i32], vec![])],
-            )?;
-            let lit = buf.to_literal_sync()?;
-            let v = lit.to_vec::<f32>()?;
-            self.stats.borrow_mut().host_readback_bytes += (v.len() * 4) as u64;
-            return Ok(v);
-        }
-        self.read_logits(bucket, arena, slot)
-    }
-
-    /// Convenience: one slot's logits.  Slot 0 reuses the readback
-    /// allocation; batched hot paths should use `read_logits_all` (or
-    /// `read_logits_one` when occupancy is sparse) and slice.
-    pub fn read_logits(&self, bucket: usize, arena: &PjRtBuffer, slot: usize) -> Result<Vec<f32>> {
-        let v = self.info.vocab;
-        let mut all = self.read_logits_all(bucket, arena)?;
-        if slot == 0 {
-            all.truncate(v);
-            return Ok(all);
-        }
-        Ok(all[slot * v..(slot + 1) * v].to_vec())
     }
 
     /// Full buffer to host (tests / baselines' deliberate round-trip).

@@ -406,6 +406,17 @@ fn metrics(state: &ServerState, rw: &mut ResponseWriter<'_>) -> HandlerResult {
         "umserve_occupancy_mean {:.4}\n",
         snap.engines.iter().map(|s| s.occupancy_mean).sum::<f64>() / n as f64
     ));
+    text.push_str(&format!(
+        "umserve_kv_pool_pages_capacity {}\numserve_kv_pool_pages_allocated {}\numserve_kv_pool_pages_free {}\numserve_kv_pool_utilization {:.4}\n",
+        sum(|s| s.kv_pool.capacity),
+        sum(|s| s.kv_pool.allocated_pages),
+        sum(|s| s.kv_pool.free_pages),
+        snap.engines.iter().map(|s| s.kv_pool.utilization).sum::<f64>() / n as f64
+    ));
+    text.push_str(&format!(
+        "umserve_decode_dispatches_total {}\n",
+        snap.engines.iter().map(|s| s.decode_dispatches).sum::<u64>()
+    ));
     let (mut th, mut tm, mut te, mut tb) = (0u64, 0u64, 0u64, 0usize);
     for s in &snap.engines {
         th += s.text_cache.0;

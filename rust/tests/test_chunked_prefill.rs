@@ -15,7 +15,6 @@
 
 use std::collections::HashMap;
 
-use umserve::cache::CachedKv;
 use umserve::coordinator::scheduler::Scheduler;
 use umserve::coordinator::{EngineConfig, Event, GenRequest, KvConfig, PromptInput, SchedConfig};
 use umserve::engine::sampler::{argmax, SamplingParams};
@@ -85,17 +84,34 @@ fn chunked_catch_up_matches_tokenwise_text() {
     let prefix = [1i32, 10, 20, 30];
     // 11 tokens: crosses the small (8) chunk bucket.
     let suffix = [40i32, 50, 60, 70, 80, 90, 100, 110, 120, 130, 140];
-    let kv = e.prefill(&prefix).unwrap();
+    let kv = e.prefill_cached(&prefix).unwrap();
 
-    let (kv_a, log_a) = e.catch_up_tokenwise(&kv, prefix.len(), &suffix).unwrap();
-    let host_a = e.rt.to_host_f32(&kv_a).unwrap();
+    let kv_a = e.catch_up_tokenwise_cached(&kv, prefix.len(), &suffix).unwrap();
 
     for chunk in [3usize, 8, 32] {
-        let (kv_b, log_b) = e.catch_up_chunk(&kv, prefix.len(), &suffix, chunk).unwrap();
-        assert_eq!(argmax(&log_a), argmax(&log_b), "greedy diverged at chunk {chunk}");
-        assert_close(&log_a, &log_b, 1e-4, "last logits");
-        let host_b = e.rt.to_host_f32(&kv_b).unwrap();
-        assert_close(&host_a, &host_b, 1e-4, "extended kv_one");
+        let kv_b = e.catch_up_chunk_cached(&kv, prefix.len(), &suffix, chunk).unwrap();
+        assert_eq!(
+            argmax(&kv_a.logits),
+            argmax(&kv_b.logits),
+            "greedy diverged at chunk {chunk}"
+        );
+        assert_close(&kv_a.logits, &kv_b.logits, 1e-4, "last logits");
+
+        // The page states must agree FUNCTIONALLY, not just on the last
+        // logits: decoding forward from both checkpoints has to produce
+        // the same greedy continuation.
+        let total = prefix.len() + suffix.len();
+        e.admit(1, &kv_a, total).unwrap();
+        e.admit(2, &kv_b, total).unwrap();
+        let (mut ta, mut tb) = (argmax(&kv_a.logits), argmax(&kv_b.logits));
+        for _ in 0..4 {
+            let out = e.step(&HashMap::from([(1u64, ta), (2u64, tb)])).unwrap();
+            ta = argmax(out.for_id(1).unwrap());
+            tb = argmax(out.for_id(2).unwrap());
+            assert_eq!(ta, tb, "continuations diverged at chunk {chunk}");
+        }
+        e.remove(1, false).unwrap();
+        e.remove(2, false).unwrap();
     }
     assert!(e.stats.prefill_chunks > 0);
 }
@@ -108,43 +124,57 @@ fn chunked_catch_up_matches_tokenwise_embeds() {
     let mut e = engine("qwen3-vl-4b");
     let prefix = [1i32, 3, 5];
     let suffix = [7i32, 11, 15, 19, 23];
-    let kv = e.prefill(&prefix).unwrap();
+    let kv = e.prefill_cached(&prefix).unwrap();
 
-    let (kv_a, log_a) = e.catch_up_tokenwise(&kv, prefix.len(), &suffix).unwrap();
+    let kv_a = e.catch_up_tokenwise_cached(&kv, prefix.len(), &suffix).unwrap();
 
     let d = e.rt.info.d_model;
     let rows = e.rt.embed_lookup(&suffix).unwrap();
-    let mut kv_b = e.clone_kv(&kv).unwrap();
+    let mut set = e.begin_extend_paged(&kv, prefix.len()).unwrap();
     let mut fed = 0usize;
     while fed < suffix.len() {
         let n = (suffix.len() - fed).min(2);
         let piece = rows[fed * d..(fed + n) * d].to_vec();
-        kv_b = e
-            .feed_chunk_embeds(kv_b, prefix.len() + fed, &piece, n)
+        e.feed_chunk_embeds_paged(&mut set, prefix.len() + fed, &piece, n)
             .unwrap();
         fed += n;
     }
-    let log_b = e.rt.read_logits(1, &kv_b, 0).unwrap();
+    let total = prefix.len() + suffix.len();
+    let kv_b = e.seal_paged(set, total).unwrap();
 
-    assert_eq!(argmax(&log_a), argmax(&log_b));
-    assert_close(&log_a, &log_b, 1e-4, "embeds-suffix logits");
-    let host_a = e.rt.to_host_f32(&kv_a).unwrap();
-    let host_b = e.rt.to_host_f32(&kv_b).unwrap();
-    assert_close(&host_a, &host_b, 1e-4, "embeds-suffix kv_one");
+    assert_eq!(argmax(&kv_a.logits), argmax(&kv_b.logits));
+    assert_close(&kv_a.logits, &kv_b.logits, 1e-4, "embeds-suffix logits");
+
+    // Functional KV agreement: both checkpoints continue identically.
+    e.admit(1, &kv_a, total).unwrap();
+    e.admit(2, &kv_b, total).unwrap();
+    let (mut ta, mut tb) = (argmax(&kv_a.logits), argmax(&kv_b.logits));
+    for _ in 0..3 {
+        let out = e.step(&HashMap::from([(1u64, ta), (2u64, tb)])).unwrap();
+        ta = argmax(out.for_id(1).unwrap());
+        tb = argmax(out.for_id(2).unwrap());
+        assert_eq!(ta, tb, "embeds-suffix continuations diverged");
+    }
+    e.remove(1, false).unwrap();
+    e.remove(2, false).unwrap();
 }
 
 #[test]
 fn cached_kv_survives_catch_up() {
-    // The catch-up paths must extend a COPY: the shared (cached) kv_one
-    // is reused across calls and must stay intact.
+    // The catch-up paths must extend a copy-on-write view: the shared
+    // (cached) pages are reused across calls and must stay intact —
+    // the prefix ends mid-page, so a careless extension would scribble
+    // on the checkpoint's tail page.
     let mut e = engine("qwen3-0.6b");
     let prefix = [1i32, 2, 3, 4, 5];
-    let kv = e.prefill(&prefix).unwrap();
-    let before = e.rt.to_host_f32(&kv).unwrap();
-    let _ = e.catch_up_chunk(&kv, prefix.len(), &[9, 10, 11], 8).unwrap();
-    let _ = e.catch_up_tokenwise(&kv, prefix.len(), &[9, 10, 11]).unwrap();
-    let after = e.rt.to_host_f32(&kv).unwrap();
-    assert_eq!(before, after, "cached kv_one was mutated by catch-up");
+    let kv = e.prefill_cached(&prefix).unwrap();
+    let a1 = e.catch_up_tokenwise_cached(&kv, prefix.len(), &[9, 10, 11]).unwrap();
+    // A diverging extension between the two identical runs: if it
+    // mutated the shared pages, the second run could not reproduce the
+    // first bit-for-bit.
+    let _diverge = e.catch_up_chunk_cached(&kv, prefix.len(), &[30, 31, 32], 8).unwrap();
+    let a2 = e.catch_up_tokenwise_cached(&kv, prefix.len(), &[9, 10, 11]).unwrap();
+    assert_eq!(a1.logits, a2.logits, "cached pages were mutated by catch-up");
 }
 
 // ------------------------------------------- scheduler-level equivalence
@@ -293,7 +323,7 @@ fn identical_staged_prompts_coalesce() {
 fn shrink_hysteresis_prevents_thrash() {
     let mut e = engine("qwen3-0.6b");
     for id in 1..=5u64 {
-        let kv = CachedKv::new(e.prefill(&[1, id as i32 + 3, 9]).unwrap(), 3);
+        let kv = e.prefill_cached(&[1, id as i32 + 3, 9]).unwrap();
         e.admit(id, &kv, 3).unwrap();
     }
     assert_eq!(e.bucket(), 8);
@@ -304,7 +334,7 @@ fn shrink_hysteresis_prevents_thrash() {
     for _ in 0..3 {
         e.remove(5, false).unwrap();
         assert!(!e.maybe_shrink_with_hysteresis(4).unwrap());
-        let kv = CachedKv::new(e.prefill(&[1, 7, 11]).unwrap(), 3);
+        let kv = e.prefill_cached(&[1, 7, 11]).unwrap();
         e.admit(5, &kv, 3).unwrap();
     }
     assert_eq!(e.stats.migrations, grow_migrations, "grow/shrink thrash detected");
@@ -317,7 +347,7 @@ fn shrink_hysteresis_prevents_thrash() {
     assert_eq!(e.bucket(), 4);
 
     // A deep occupancy drop passes the gate (1 active, 1*4 <= bucket 4):
-    // shrink fires when the arena is genuinely oversized.
+    // shrink fires when the lane layout is genuinely oversized.
     for id in 2..=4u64 {
         e.remove(id, false).unwrap();
     }
@@ -330,11 +360,11 @@ fn shrink_hysteresis_prevents_thrash() {
 #[test]
 fn sparse_readback_is_exact() {
     let mut e = engine("qwen3-0.6b");
-    let kv = CachedKv::new(e.prefill(&[1, 10, 20, 30]).unwrap(), 4);
+    let kv = e.prefill_cached(&[1, 10, 20, 30]).unwrap();
     e.admit(42, &kv, 4).unwrap();
     // Grow to bucket 8, then empty all but one slot -> sparse readback.
     for id in 100..104u64 {
-        let k = CachedKv::new(e.prefill(&[2, id as i32 % 50 + 4]).unwrap(), 2);
+        let k = e.prefill_cached(&[2, id as i32 % 50 + 4]).unwrap();
         e.admit(id, &k, 2).unwrap();
     }
     for id in 100..104u64 {

@@ -6,7 +6,6 @@
 
 use std::collections::HashMap;
 
-use umserve::cache::CachedKv;
 use umserve::engine::sampler::Rng;
 use umserve::engine::TextEngine;
 use umserve::runtime::{ArtifactStore, ModelRuntime};
@@ -23,10 +22,11 @@ fn engine() -> TextEngine {
 }
 
 /// Randomized admit/step/remove sequences; invariants:
-/// * active count never exceeds the bucket
+/// * active count never exceeds the lane capacity
 /// * every active sequence advances by exactly one position per step
 /// * removed ids are really gone; double-admit rejected
-/// * bucket only takes values from the manifest's bucket list
+/// * the dispatch bucket only takes values from the manifest's list
+/// * no page leaks once everything is removed
 #[test]
 fn randomized_engine_operations_hold_invariants() {
     let mut e = engine();
@@ -44,7 +44,7 @@ fn randomized_engine_operations_hold_invariants() {
                     let plen = (rng.next_u64() % 8 + 2) as usize;
                     let prompt: Vec<i32> =
                         (0..plen).map(|i| 4 + ((id as i32 * 13 + i as i32) % 1000)).collect();
-                    let kv = CachedKv::new(e.prefill(&prompt).unwrap(), plen);
+                    let kv = e.prefill_cached(&prompt).unwrap();
                     e.admit(id, &kv, plen).unwrap();
                     // Double admit must fail.
                     assert!(e.admit(id, &kv, plen).is_err());
@@ -80,9 +80,14 @@ fn randomized_engine_operations_hold_invariants() {
         for (&id, &pos) in &live {
             assert_eq!(e.seq(id).unwrap().pos, pos, "position drift for {id}");
         }
-        assert!(live.len() <= e.bucket());
+        assert!(live.len() <= e.capacity());
         assert!(e.rt.info.decode_buckets.contains(&e.bucket()));
     }
+    // Drain everything; a clean engine must hold zero pool pages.
+    for id in live.keys().copied().collect::<Vec<_>>() {
+        e.remove(id, false).unwrap();
+    }
+    assert_eq!(e.page_pool().allocated_pages, 0, "page leak after randomized churn");
 }
 
 /// Growth migration preserves per-sequence generation exactly: tokens
@@ -92,7 +97,7 @@ fn randomized_engine_operations_hold_invariants() {
 fn bucket_migration_preserves_sequences() {
     let mut e = engine();
     let prompt = [1i32, 10, 20, 30];
-    let kv = CachedKv::new(e.prefill(&prompt).unwrap(), prompt.len());
+    let kv = e.prefill_cached(&prompt).unwrap();
     e.admit(42, &kv, prompt.len()).unwrap();
 
     // Expected continuation from the oracle (see smoke_load):
@@ -106,7 +111,7 @@ fn bucket_migration_preserves_sequences() {
     assert_eq!(e.bucket(), 1);
 
     // Force a grow migration by admitting a second sequence.
-    let kv2 = CachedKv::new(e.prefill(&[2, 6, 8]).unwrap(), 3);
+    let kv2 = e.prefill_cached(&[2, 6, 8]).unwrap();
     e.admit(7, &kv2, 3).unwrap();
     assert_eq!(e.bucket(), 2, "admitting a 2nd sequence must grow the bucket");
     assert_eq!(e.stats.migrations, 1);
@@ -132,11 +137,12 @@ fn bucket_migration_preserves_sequences() {
 }
 
 #[test]
-fn arena_overflow_is_rejected_not_corrupted() {
+fn context_overflow_is_rejected_not_corrupted() {
     let mut e = engine();
     let s_max = e.rt.info.s_max;
-    // A sequence whose length is near the arena limit cannot be admitted.
-    let kv = CachedKv::new(e.prefill(&[1, 2, 3]).unwrap(), s_max - 1);
+    // A sequence claiming a length at the context limit cannot be
+    // admitted: there is no room left for even one decoded token.
+    let kv = e.prefill_cached(&[1, 2, 3]).unwrap();
     assert!(e.admit(1, &kv, s_max - 1).is_err());
     assert_eq!(e.active(), 0);
 }
@@ -150,9 +156,9 @@ fn missing_model_and_entries_error_cleanly() {
     assert!(ModelRuntime::load(&client, &store, "gpt-17b").is_err());
     let rt = ModelRuntime::load(&client, &store, "qwen3-0.6b").unwrap();
     // Unknown entry.
-    assert!(rt.run("decode_b999", &[]).err().is_some());
-    // Wrong input arity / shape / dtype.
-    assert!(rt.decode(1, &[1, 2], &[0, 0], &rt.new_arena(1).unwrap()).is_err());
+    assert!(rt.run("decode_paged_b999", &[]).err().is_some());
+    // Wrong input arity on a real entry.
+    assert!(rt.run("decode_paged_b1", &[]).is_err());
 }
 
 #[test]
@@ -176,7 +182,7 @@ fn corrupt_artifacts_fail_loading_not_ub() {
 fn corrupt_hlo_text_fails_compile_cleanly() {
     let client = xla::PjRtClient::cpu().unwrap();
     let store = ArtifactStore::open(art_dir()).unwrap();
-    // Copy artifacts dir layout with a truncated decode HLO.
+    // Copy the artifact layout wholesale, then truncate the decode HLO.
     let tmp = std::env::temp_dir().join(format!("umserve_hlo_{}", std::process::id()));
     std::fs::create_dir_all(tmp.join("qwen3-0.6b")).unwrap();
     std::fs::copy(
@@ -190,39 +196,49 @@ fn corrupt_hlo_text_fails_compile_cleanly() {
         tmp.join("qwen3-0.6b.umw"),
     )
     .unwrap();
-    let hlo = std::fs::read_to_string(store.dir.join("qwen3-0.6b/decode_b1.hlo.txt")).unwrap();
+    for entry in std::fs::read_dir(store.dir.join("qwen3-0.6b")).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), tmp.join("qwen3-0.6b").join(entry.file_name())).unwrap();
+    }
+    let hlo =
+        std::fs::read_to_string(store.dir.join("qwen3-0.6b/decode_paged_b1.hlo.txt")).unwrap();
     std::fs::write(
-        tmp.join("qwen3-0.6b/decode_b1.hlo.txt"),
+        tmp.join("qwen3-0.6b/decode_paged_b1.hlo.txt"),
         &hlo[..hlo.len() / 3],
     )
     .unwrap();
     let store2 = ArtifactStore::open(&tmp).unwrap();
     let rt = ModelRuntime::load(&client, &store2, "qwen3-0.6b").unwrap();
-    let arena = rt.new_arena(1).unwrap();
-    let err = rt.decode(1, &[1], &[0], &arena);
+    let pool = rt.new_pool().unwrap();
+    let nblk = rt.info.kv_blocks_per_seq();
+    let err = rt.decode_paged(1, &[1], &[0], &vec![0i32; nblk], &[0], &pool);
     assert!(err.is_err(), "truncated HLO must fail compile, not execute garbage");
     std::fs::remove_dir_all(&tmp).ok();
 }
 
-/// Every model in the zoo must load, prefill, decode and read logits
-/// through the Rust runtime (catches HLO-text constructs the old parser
-/// rejects — e.g. lax.top_k's "largest" attribute in the MoE gate).
+/// Every model in the zoo must load, prefill onto pages, decode and
+/// read logits through the Rust runtime (catches HLO-text constructs
+/// the old parser rejects — e.g. lax.top_k's "largest" attribute in
+/// the MoE gate).
 #[test]
 fn whole_zoo_smoke() {
     let client = xla::PjRtClient::cpu().unwrap();
     let store = ArtifactStore::open(art_dir()).unwrap();
     for name in store.models.keys() {
         let rt = ModelRuntime::load(&client, &store, name).unwrap();
-        let kv = rt.prefill(&[1, 7, 9]).expect(name);
-        let arena = rt.new_arena(1).unwrap();
-        let arena = rt.inject(1, &arena, &kv, 0).expect(name);
-        let l0 = rt.read_logits(1, &arena, 0).expect(name);
-        assert_eq!(l0.len(), rt.info.vocab);
+        let mut e = TextEngine::new(rt).expect(name);
+        let kv = e.prefill_cached(&[1, 7, 9]).expect(name);
+        let l0 = e.cached_logits(&kv).expect(name);
+        assert_eq!(l0.len(), e.rt.info.vocab);
         assert!(l0.iter().all(|x| x.is_finite()), "{name}: non-finite logits");
-        let arena = rt.decode(1, &[5], &[3], &arena).expect(name);
-        let l1 = rt.read_logits(1, &arena, 0).expect(name);
+        e.admit(1, &kv, 3).expect(name);
+        drop(kv);
+        let out = e.step(&HashMap::from([(1u64, 5i32)])).expect(name);
+        let l1 = out.for_id(1).unwrap();
         assert!(l1.iter().all(|x| x.is_finite()));
         // Deterministic: decode must actually change the distribution.
-        assert_ne!(l0, l1, "{name}: decode produced identical logits");
+        assert_ne!(&l0[..], l1, "{name}: decode produced identical logits");
+        e.remove(1, false).expect(name);
+        assert_eq!(e.page_pool().allocated_pages, 0, "{name}: page leak");
     }
 }

@@ -1,0 +1,204 @@
+//! Pool-level serving tests for the paged-everywhere KV backend:
+//! a long-tail trace across all 64 virtual lanes (4x the largest
+//! lowered decode bucket) with allocator-invariant and gauge checks at
+//! every phase, and admission backpressure when a capped pool runs out
+//! of pages mid-burst.  Requires `make artifacts`.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver};
+use std::time::Instant;
+
+use umserve::coordinator::scheduler::Scheduler;
+use umserve::coordinator::{
+    EngineConfig, Event, GenRequest, KvConfig, PromptInput, SchedConfig,
+};
+use umserve::engine::sampler::SamplingParams;
+use umserve::engine::TextEngine;
+use umserve::runtime::{ArtifactStore, ModelRuntime};
+
+fn art_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+fn engine() -> TextEngine {
+    let client = xla::PjRtClient::cpu().unwrap();
+    let store = ArtifactStore::open(art_dir()).unwrap();
+    let rt = ModelRuntime::load(&client, &store, "qwen3-0.6b").unwrap();
+    TextEngine::new(rt).unwrap()
+}
+
+/// Pool snapshot must stay internally consistent at any point in time.
+fn assert_gauges(e: &TextEngine) {
+    let p = e.page_pool();
+    assert_eq!(
+        p.allocated_pages + p.free_pages,
+        p.capacity,
+        "allocated + free must cover the pool cap"
+    );
+    assert!(p.capacity < p.total_pages, "page 0 stays reserved");
+    assert!((0.0..=1.0).contains(&p.utilization));
+    let expect = p.allocated_pages as f64 / p.capacity.max(1) as f64;
+    assert!((p.utilization - expect).abs() < 1e-9, "utilization gauge drifted");
+    e.page_arena().borrow().check_invariants();
+}
+
+/// Long-tail trace: fill every virtual lane with staggered prompt
+/// lengths, decode with staggered finish times (most sequences are
+/// short, a tail runs long), and verify:
+/// * all 64 lanes decode concurrently through repeated b16 dispatches
+///   (4 dispatches per step at full occupancy);
+/// * allocator invariants and pool gauges hold at every phase;
+/// * the drained engine leaks zero pages and every alloc has a
+///   matching free.
+#[test]
+fn long_tail_trace_fills_all_virtual_lanes() {
+    let mut e = engine();
+    let lanes = e.max_capacity();
+    assert_eq!(lanes, 64, "qwen3-0.6b manifest advertises 64 virtual lanes");
+    assert_eq!(lanes, 4 * e.rt.info.max_decode_bucket());
+
+    // Staggered prompt lengths: 6..=123 tokens (one or two pages each).
+    let mut live: HashMap<u64, i32> = HashMap::new();
+    for i in 0..lanes as u64 {
+        let len = 6 + ((i * 13) % 118) as usize;
+        let prompt: Vec<i32> = (0..len as i32).map(|j| 4 + (j * 7 + i as i32) % 1500).collect();
+        let kv = e.prefill_cached(&prompt).unwrap();
+        e.admit(1 + i, &kv, len).unwrap();
+        live.insert(1 + i, 4 + (i % 1000) as i32);
+    }
+    assert_eq!(e.active(), lanes);
+    assert!(e.capacity() >= lanes);
+    assert_gauges(&e);
+
+    // Full occupancy: one step = ceil(64/16) = 4 bucket dispatches.
+    let before = e.stats.decode_dispatches;
+    let out = e.step(&live).unwrap();
+    assert_eq!(out.len(), lanes);
+    assert_eq!(
+        e.stats.decode_dispatches - before,
+        (lanes / e.rt.info.max_decode_bucket()) as u64,
+        "64 lanes must decode as repeated b16 dispatches"
+    );
+    for (id, logits) in out.iter() {
+        assert!(logits.iter().all(|x| x.is_finite()), "lane {id}: non-finite logits");
+        live.insert(id, umserve::engine::sampler::argmax(logits));
+    }
+
+    // Long-tail finishes: budget 2 more steps for most lanes, 24 for
+    // every 8th — the tail keeps decoding long after the crowd leaves.
+    let budget = |id: u64| if id % 8 == 0 { 24u32 } else { 2 };
+    let mut steps: HashMap<u64, u32> = live.keys().map(|&id| (id, 0)).collect();
+    let mut round = 0u32;
+    while !live.is_empty() {
+        let out = e.step(&live).unwrap();
+        assert_eq!(out.len(), live.len());
+        for (id, logits) in out.iter() {
+            live.insert(id, umserve::engine::sampler::argmax(logits));
+        }
+        let done: Vec<u64> = steps
+            .iter_mut()
+            .filter_map(|(&id, n)| {
+                *n += 1;
+                (*n >= budget(id)).then_some(id)
+            })
+            .collect();
+        for id in done {
+            e.remove(id, false).unwrap();
+            live.remove(&id);
+            steps.remove(&id);
+        }
+        round += 1;
+        if round % 4 == 0 {
+            assert_gauges(&e);
+            assert!(e.active() == live.len());
+        }
+    }
+
+    // Drained: no leaked pages, balanced alloc/free ledger.
+    let p = e.page_pool();
+    assert_eq!(p.allocated_pages, 0, "page leak after long-tail trace");
+    assert_eq!(p.stats.allocs, p.stats.frees, "alloc/free ledger unbalanced");
+    assert_eq!(p.stats.alloc_failures, 0, "full pool must never fail an alloc here");
+    assert_gauges(&e);
+    // The lane layout may still be oversized; shrinking brings it back.
+    while e.maybe_shrink().unwrap() {}
+    assert_eq!(e.bucket(), *e.rt.info.decode_buckets.first().unwrap());
+}
+
+fn submit(s: &mut Scheduler, id: u64, prompt: Vec<i32>, n_new: usize) -> Receiver<Event> {
+    let (tx, rx) = channel();
+    s.submit(GenRequest {
+        id,
+        prompt: PromptInput::Tokens(prompt),
+        params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) },
+        priority: Default::default(),
+        events: tx,
+        enqueued_at: Instant::now(),
+    });
+    rx
+}
+
+/// Page-pool exhaustion at admission parks the request in the wait
+/// queue (counted by `kv_pool_backpressure`) instead of erroring it;
+/// parked work admits and completes once decoding frees pages.
+#[test]
+fn pool_exhaustion_parks_admissions_until_pages_free() {
+    // 20-page pool: each 160-token prompt pins 3 KV pages + 1 mailbox,
+    // so five live sequences saturate the pool while the lane limit
+    // (capacity/2 = 10) is still far away — pressure is pages, not
+    // lanes.
+    let mut s = Scheduler::new(EngineConfig {
+        model: "qwen3-0.6b".into(),
+        artifacts_dir: art_dir(),
+        warmup: false,
+        kv: KvConfig {
+            pool_page_cap: Some(20),
+            text_cache_bytes: 0, // no checkpoints pinning pages
+            cache_finished: false,
+            ..Default::default()
+        },
+        sched: SchedConfig {
+            prefill_chunk_tokens: 32,
+            // Admit fast enough that the burst outruns completions.
+            prefill_chunks_per_step: 8,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(s.engine.page_pool().capacity, 20);
+
+    let rxs: Vec<(u64, Receiver<Event>)> = (0..10u64)
+        .map(|i| {
+            let prompt: Vec<i32> =
+                (0..160).map(|j| 4 + (j * 11 + i as i32 * 3) % 1500).collect();
+            (i, submit(&mut s, i, prompt, 6))
+        })
+        .collect();
+    s.run_until_idle();
+
+    assert!(
+        s.metrics.counter("kv_pool_backpressure") >= 1,
+        "the burst must hit the page-pool admission gate at least once"
+    );
+    for (id, rx) in &rxs {
+        let evs: Vec<Event> = rx.try_iter().collect();
+        assert!(
+            evs.iter().any(|e| matches!(e, Event::Done { .. })),
+            "parked request {id} never completed"
+        );
+        assert!(
+            !evs.iter().any(|e| matches!(e, Event::Error { .. })),
+            "request {id} errored instead of parking"
+        );
+        let n = evs
+            .iter()
+            .filter(|e| matches!(e, Event::Token { token, .. } if *token >= 0))
+            .count();
+        assert_eq!(n, 6, "request {id} token count");
+    }
+    // Caches disabled: a drained scheduler holds zero pool pages.
+    let p = s.engine.page_pool();
+    assert_eq!(p.allocated_pages, 0, "page leak after backpressured burst");
+    s.engine.page_arena().borrow().check_invariants();
+}

@@ -83,7 +83,7 @@ fn preempted_then_resumed_output_is_byte_identical() {
     for preemption in [true, false] {
         let mut s = Scheduler::new(cfg(preemption)).unwrap();
         let mut rxs: Vec<(u64, Receiver<Event>)> = Vec::new();
-        // Fill the decode arena with batch-class work (short prompts,
+        // Fill the decode lanes with batch-class work (short prompts,
         // long generations so they are all still decoding).
         for i in 0..capacity as u64 {
             rxs.push((100 + i, submit(&mut s, 100 + i, 8, 48, Priority::Batch)));

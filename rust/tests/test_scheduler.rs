@@ -85,26 +85,28 @@ fn text_prefix_cache_full_hit_reproduces_output() {
 }
 
 #[test]
-fn text_prefix_cache_trims_entries_device_side() {
-    // Text CachedKv inserts route through the trim_kv grids like the mm
-    // cache (PR-4 follow-up): a short sequence stores on the smallest
-    // covering grid instead of an s_max-sized kv_one, the cache's byte
-    // accounting reflects the trimmed allocation, and a full hit
-    // re-expands (untrim) to byte-identical greedy output.
+fn text_prefix_cache_charges_physical_pages() {
+    // Finished text KV states checkpoint as page pins (no device copy),
+    // and the cache's byte accounting charges exactly the pages an
+    // entry physically holds: a short sequence costs its page-rounded
+    // footprint, never an s_max-sized dense reservation.
     let mut s = Scheduler::new(cfg("qwen3-0.6b")).unwrap();
     let prompt = PromptInput::Tokens(vec![1, 6, 10, 14]);
     let (t1, _, _, _) = run_one(&mut s, prompt.clone_for_test(), SamplingParams::greedy(8));
-    assert!(
-        s.metrics.counter("text_kv_trims") >= 1,
-        "finished text KV must be trimmed at insert"
-    );
-    let bytes = s.snapshot().text_cache.3;
+    let snap = s.snapshot();
+    let bytes = snap.text_cache.3;
     let full = umserve::cache::kv_one_bytes(&s.engine.rt.info);
-    assert!(bytes > 0 && bytes < full, "trimmed charge {bytes} must undercut s_max cost {full}");
+    assert!(bytes > 0 && bytes < full, "page charge {bytes} must undercut an s_max slot {full}");
+    assert_eq!(
+        bytes % s.engine.rt.info.kv_page_bytes(),
+        0,
+        "cache charge must be whole physical pages"
+    );
+    assert!(snap.text_cache_pinned_pages > 0, "entries must pin pool pages");
 
     let (t2, _, _, tm2) = run_one(&mut s, prompt, SamplingParams::greedy(8));
-    assert!(tm2.kv_full_hit, "second run must fully hit the trimmed entry");
-    assert_eq!(t1, t2, "untrimmed-hit output diverged");
+    assert!(tm2.kv_full_hit, "second run must fully hit the checkpoint");
+    assert_eq!(t1, t2, "page-pinned hit output diverged");
 }
 
 #[test]
@@ -164,7 +166,7 @@ fn continuous_batching_interleaves_requests() {
         assert_eq!(n_tokens, 6 + i, "request {i} token count");
     }
     // Batched result must equal single-request result (batch invariance
-    // of the arena attention within fp tolerance -> greedy tokens equal).
+    // of the paged attention within fp tolerance -> greedy tokens equal).
     let (tx, rx) = std::sync::mpsc::channel();
     s.submit(umserve::coordinator::GenRequest {
         id: 999,
@@ -345,18 +347,18 @@ fn rejects_oversized_and_bad_requests() {
 }
 
 #[test]
-fn paged_kv_matches_arena_byte_for_byte() {
+fn pool_size_never_changes_output_byte_for_byte() {
     // Tentpole invariant of the paged backend: block-allocated KV with
     // copy-on-write sharing changes WHERE state lives, never WHAT gets
-    // generated — greedy output must match the dense slot arena (and
-    // the reference oracle) token for token.
-    let mut p = Scheduler::new(EngineConfig {
-        kv: KvConfig { paged: true, ..Default::default() },
+    // generated — greedy output must be identical across pool sizes
+    // (and match the reference oracle) token for token.
+    let mut p = Scheduler::new(cfg("qwen3-0.6b")).unwrap();
+    let mut a = Scheduler::new(EngineConfig {
+        kv: KvConfig { pool_page_cap: Some(96), ..Default::default() },
         ..cfg("qwen3-0.6b")
     }).unwrap();
-    let mut a = Scheduler::new(cfg("qwen3-0.6b")).unwrap();
-    assert!(p.snapshot().kv_pool.is_some(), "paged mode must surface pool stats");
-    assert!(a.snapshot().kv_pool.is_none(), "arena mode must not");
+    assert_eq!(a.snapshot().kv_pool.capacity, 96, "page cap must bound the pool");
+    assert!(p.snapshot().kv_pool.capacity > 96, "full pool must exceed the cap");
 
     let (t, _, _, _) = run_one(
         &mut p,
@@ -372,11 +374,11 @@ fn paged_kv_matches_arena_byte_for_byte() {
         let (tp, _, _, _) =
             run_one(&mut p, PromptInput::Tokens(prompt.clone()), SamplingParams::greedy(8));
         let (ta, _, _, _) = run_one(&mut a, PromptInput::Tokens(prompt), SamplingParams::greedy(8));
-        assert_eq!(tp, ta, "paged output diverged from arena (seed {seed})");
+        assert_eq!(tp, ta, "full-pool output diverged from capped pool (seed {seed})");
     }
 
-    // Concurrent batch: multi-lane decode_paged + pool growth across
-    // bucket migrations must match the arena's batched streams.
+    // Concurrent batch: multi-lane decode_paged + lane-layout growth
+    // across bucket migrations must match at both pool sizes.
     let batch = |s: &mut Scheduler| -> Vec<Vec<i32>> {
         let mut rxs = Vec::new();
         for i in 0..5u64 {
@@ -404,15 +406,12 @@ fn paged_kv_matches_arena_byte_for_byte() {
             })
             .collect()
     };
-    assert_eq!(batch(&mut p), batch(&mut a), "batched paged decode diverged from arena");
+    assert_eq!(batch(&mut p), batch(&mut a), "batched decode diverged across pool sizes");
 }
 
 #[test]
 fn paged_prefix_cache_hits_are_zero_copy_and_identical() {
-    let mut s = Scheduler::new(EngineConfig {
-        kv: KvConfig { paged: true, ..Default::default() },
-        ..cfg("qwen3-0.6b")
-    }).unwrap();
+    let mut s = Scheduler::new(cfg("qwen3-0.6b")).unwrap();
     let shared: Vec<i32> = (1..64).map(|i| (i * 11) % 1500 + 4).collect();
     let (t1, _, _, _) =
         run_one(&mut s, PromptInput::Tokens(shared.clone()), SamplingParams::greedy(6));
@@ -436,14 +435,13 @@ fn paged_prefix_cache_hits_are_zero_copy_and_identical() {
         run_one(&mut s, PromptInput::Tokens(ext.clone()), SamplingParams::greedy(6));
     assert!(tm3.prefix_hit_tokens > 0, "expected a partial hit");
     assert!(!tm3.kv_full_hit);
-    let pool = s.snapshot().kv_pool.expect("paged pool stats");
+    let pool = s.snapshot().kv_pool;
     assert!(pool.stats.cow_copies >= 1, "mid-page divergence must CoW the tail page");
     assert!(pool.stats.shared_pins >= 1);
 
-    // Correctness anchor: a cold cacheless paged scheduler agrees.
+    // Correctness anchor: a cold cacheless scheduler agrees.
     let mut cold = Scheduler::new(EngineConfig {
         kv: KvConfig {
-            paged: true,
             text_cache_bytes: 0,
             cache_finished: false,
             ..Default::default()

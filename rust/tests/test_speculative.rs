@@ -1,8 +1,8 @@
 //! Speculative decoding over the catch-up grids: engine-level verify
 //! rounds must be byte-identical to tokenwise decode (full-accept and
-//! rejection paths, both KV backends), rejected paged drafts must roll
-//! their tail pages back, and the scheduler lane must preserve greedy
-//! output exactly with speculation on or off — including across
+//! rejection paths), rejected drafts must roll their tail pages back
+//! into the pool, and the scheduler lane must preserve greedy output
+//! exactly with speculation on or off — including across
 //! eviction/resume — while non-greedy and opted-out requests bypass
 //! drafting entirely.  Requires `make artifacts`.
 
@@ -10,11 +10,9 @@ use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver};
 use std::time::Instant;
 
-use umserve::cache::CachedKv;
 use umserve::coordinator::scheduler::Scheduler;
 use umserve::coordinator::{
-    EngineConfig, Event, GenRequest, KvConfig, Priority, PromptInput, SchedConfig, SpecConfig,
-    Usage,
+    EngineConfig, Event, GenRequest, Priority, PromptInput, SchedConfig, SpecConfig, Usage,
 };
 use umserve::engine::sampler::{argmax, SamplingParams};
 use umserve::engine::TextEngine;
@@ -24,19 +22,18 @@ fn art_dir() -> String {
     concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
 }
 
-fn engine(paged: bool) -> TextEngine {
+fn engine() -> TextEngine {
     let client = xla::PjRtClient::cpu().unwrap();
     let store = ArtifactStore::open(art_dir()).unwrap();
     let rt = ModelRuntime::load(&client, &store, "qwen3-0.6b").unwrap();
-    if paged { TextEngine::new(rt).unwrap() } else { TextEngine::new_arena(rt).unwrap() }
+    TextEngine::new(rt).unwrap()
 }
 
-fn cfg(paged: bool, spec: bool) -> EngineConfig {
+fn cfg(spec: bool) -> EngineConfig {
     EngineConfig {
         model: "qwen3-0.6b".into(),
         artifacts_dir: art_dir(),
         warmup: false,
-        kv: KvConfig { paged, ..Default::default() },
         spec: SpecConfig { enabled: spec, ..Default::default() },
         ..Default::default()
     }
@@ -109,11 +106,12 @@ const FIRST: i32 = 1226;
 
 // ------------------------------------------------ engine-level rounds
 
-fn full_accept_round(paged: bool) {
-    let mut a = engine(paged);
-    let mut b = engine(paged);
+#[test]
+fn spec_round_full_accept_matches_tokenwise() {
+    let mut a = engine();
+    let mut b = engine();
     for e in [&mut a, &mut b] {
-        let kv = CachedKv::new(e.prefill(&PROMPT).unwrap(), PROMPT.len());
+        let kv = e.prefill_cached(&PROMPT).unwrap();
         e.admit(7, &kv, PROMPT.len()).unwrap();
     }
     assert!(b.has_spec(), "artifacts must carry spec entries");
@@ -133,11 +131,12 @@ fn full_accept_round(paged: bool) {
     assert_eq!(b.stats.spec_drafts_accepted, 5);
 }
 
-fn rejection_round(paged: bool) {
-    let mut a = engine(paged);
-    let mut b = engine(paged);
+#[test]
+fn spec_round_rejection_matches_tokenwise() {
+    let mut a = engine();
+    let mut b = engine();
     for e in [&mut a, &mut b] {
-        let kv = CachedKv::new(e.prefill(&PROMPT).unwrap(), PROMPT.len());
+        let kv = e.prefill_cached(&PROMPT).unwrap();
         e.admit(7, &kv, PROMPT.len()).unwrap();
     }
     let g = step_greedy(&mut a, 7, FIRST, 12);
@@ -156,38 +155,19 @@ fn rejection_round(paged: bool) {
     assert_eq!(step_greedy(&mut b, 7, g[2], 9), g[3..12]);
 }
 
-#[test]
-fn spec_round_full_accept_matches_tokenwise_arena() {
-    full_accept_round(false);
-}
-
-#[test]
-fn spec_round_full_accept_matches_tokenwise_paged() {
-    full_accept_round(true);
-}
-
-#[test]
-fn spec_round_rejection_matches_tokenwise_arena() {
-    rejection_round(false);
-}
-
-#[test]
-fn spec_round_rejection_matches_tokenwise_paged() {
-    rejection_round(true);
-}
-
 /// Rejected drafts that spilled onto a fresh page must release it: the
 /// pool allocation after a round reflects only the CONSUMED positions
 /// (plus the one-time spec scratch), and allocator invariants hold.
 #[test]
 fn rejected_drafts_roll_back_tail_pages() {
-    let mut e = engine(true);
+    let mut e = engine();
     let page = e.rt.info.kv_page_size;
     // Park the write position just under a page boundary so a 7-draft
     // round must allocate the next page.
     let prompt: Vec<i32> = (0..page as i32 - 4).map(|i| 4 + i % 1500).collect();
-    let kv = CachedKv::new(e.prefill(&prompt).unwrap(), prompt.len());
+    let kv = e.prefill_cached(&prompt).unwrap();
     e.admit(1, &kv, prompt.len()).unwrap();
+    drop(kv);
 
     // First round pays the lazy scratch allocation; do it up front so
     // the accounting below is exact.
@@ -195,62 +175,54 @@ fn rejected_drafts_roll_back_tail_pages() {
     let pos1 = prompt.len() + r1.tokens.len();
     assert_eq!(e.seq(1).unwrap().pos as usize, pos1);
 
-    let before = e.page_pool().unwrap().allocated_pages;
+    let before = e.page_pool().allocated_pages;
     let r2 = e.spec_step(1, 13, &[14, 15, 16, 17, 18, 19, 20], 100, None).unwrap().unwrap();
     let pos2 = pos1 + r2.tokens.len();
     // Pages now held for the sequence = exactly what the consumed
     // prefix needs; every page covered for rejected drafts is back in
     // the pool.
     let extra = pos2.div_ceil(page) - pos1.div_ceil(page);
-    let after = e.page_pool().unwrap().allocated_pages;
+    let after = e.page_pool().allocated_pages;
     assert_eq!(after, before + extra, "rejected-draft tail pages were not released");
-    e.page_arena().unwrap().borrow().check_invariants();
+    e.page_arena().borrow().check_invariants();
 }
 
 // --------------------------------------------------- scheduler lane
 
-/// Greedy output is byte-identical with speculation on and off, on both
-/// KV backends, and speculation genuinely engages on the repetitive
-/// workload (rounds > 0, per-request usage counters populated).
+/// Greedy output is byte-identical with speculation on and off, and
+/// speculation genuinely engages on the repetitive workload (rounds
+/// > 0, per-request usage counters populated).
 #[test]
 fn scheduler_spec_on_off_byte_identity() {
-    for paged in [false, true] {
-        let mut streams: Vec<Vec<(u64, Vec<i32>)>> = Vec::new();
-        for spec in [true, false] {
-            let mut s = Scheduler::new(cfg(paged, spec)).unwrap();
-            let rxs: Vec<(u64, Receiver<Event>)> = (0..3u64)
-                .map(|i| (i, submit(&mut s, i, spec_prompt(i), SamplingParams::greedy(48))))
-                .collect();
-            s.run_until_idle();
-            let mut out = Vec::new();
-            let mut proposed = 0usize;
-            let mut accepted = 0usize;
-            for (id, rx) in &rxs {
-                let (toks, usage) = drain(rx);
-                let u = usage.expect("Done event");
-                proposed += u.draft_tokens_proposed;
-                accepted += u.draft_tokens_accepted;
-                out.push((*id, toks));
-            }
-            if spec {
-                assert!(
-                    s.metrics.counter("spec_rounds") > 0,
-                    "speculation never engaged (paged={paged})"
-                );
-                assert_eq!(proposed as u64, s.metrics.counter("spec_drafts_proposed"));
-                assert_eq!(accepted as u64, s.metrics.counter("spec_drafts_accepted"));
-                assert!(accepted <= proposed);
-            } else {
-                assert_eq!(s.metrics.counter("spec_rounds"), 0);
-                assert_eq!(proposed, 0);
-            }
-            streams.push(out);
+    let mut streams: Vec<Vec<(u64, Vec<i32>)>> = Vec::new();
+    for spec in [true, false] {
+        let mut s = Scheduler::new(cfg(spec)).unwrap();
+        let rxs: Vec<(u64, Receiver<Event>)> = (0..3u64)
+            .map(|i| (i, submit(&mut s, i, spec_prompt(i), SamplingParams::greedy(48))))
+            .collect();
+        s.run_until_idle();
+        let mut out = Vec::new();
+        let mut proposed = 0usize;
+        let mut accepted = 0usize;
+        for (id, rx) in &rxs {
+            let (toks, usage) = drain(rx);
+            let u = usage.expect("Done event");
+            proposed += u.draft_tokens_proposed;
+            accepted += u.draft_tokens_accepted;
+            out.push((*id, toks));
         }
-        assert_eq!(
-            streams[0], streams[1],
-            "speculation changed greedy output (paged={paged})"
-        );
+        if spec {
+            assert!(s.metrics.counter("spec_rounds") > 0, "speculation never engaged");
+            assert_eq!(proposed as u64, s.metrics.counter("spec_drafts_proposed"));
+            assert_eq!(accepted as u64, s.metrics.counter("spec_drafts_accepted"));
+            assert!(accepted <= proposed);
+        } else {
+            assert_eq!(s.metrics.counter("spec_rounds"), 0);
+            assert_eq!(proposed, 0);
+        }
+        streams.push(out);
     }
+    assert_eq!(streams[0], streams[1], "speculation changed greedy output");
 }
 
 /// Non-greedy requests and per-request opt-outs never draft; a
@@ -258,7 +230,7 @@ fn scheduler_spec_on_off_byte_identity() {
 #[test]
 fn non_greedy_and_overrides_bypass_speculation() {
     // Engine default ON: sampled and opted-out requests bypass.
-    let mut s = Scheduler::new(cfg(false, true)).unwrap();
+    let mut s = Scheduler::new(cfg(true)).unwrap();
     let sampled = SamplingParams {
         temperature: 0.8,
         top_k: 20,
@@ -275,12 +247,12 @@ fn non_greedy_and_overrides_bypass_speculation() {
 
     // Engine default OFF: an explicit opt-in speculates, byte-identical
     // to the non-speculating stream.
-    let mut base = Scheduler::new(cfg(false, false)).unwrap();
+    let mut base = Scheduler::new(cfg(false)).unwrap();
     let rx = submit(&mut base, 3, spec_prompt(3), SamplingParams::greedy(48));
     base.run_until_idle();
     let (want, _) = drain(&rx);
 
-    let mut s2 = Scheduler::new(cfg(false, false)).unwrap();
+    let mut s2 = Scheduler::new(cfg(false)).unwrap();
     let opted_in = SamplingParams { speculation: Some(true), ..SamplingParams::greedy(48) };
     let rx = submit(&mut s2, 3, spec_prompt(3), opted_in);
     s2.run_until_idle();
@@ -296,58 +268,62 @@ fn non_greedy_and_overrides_bypass_speculation() {
 /// built after a round resume exactly).
 #[test]
 fn evicted_mid_spec_resumes_byte_identically() {
-    for paged in [false, true] {
-        let capacity = 16; // qwen3-0.6b decode buckets end at 16
-        let mut streams_by_policy: Vec<Vec<(u64, Vec<i32>)>> = Vec::new();
-        for preemption in [true, false] {
-            let mut c = cfg(paged, true);
-            c.sched = SchedConfig {
-                prefill_chunk_tokens: 32,
-                priority_sched: true,
-                preemption,
-                aging_ticks: 0,
-                ..Default::default()
-            };
-            c.kv.cache_finished = false;
-            let mut s = Scheduler::new(c).unwrap();
-            let mut rxs: Vec<(u64, Receiver<Event>)> = Vec::new();
-            for i in 0..capacity as u64 {
-                let p = SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(40) };
-                rxs.push((100 + i, submit_pri(&mut s, 100 + i, spec_prompt(i), p, Priority::Batch)));
-            }
-            while s.active_count() < capacity && s.queued_count() > 0 {
-                s.tick();
-            }
-            assert_eq!(s.active_count(), capacity, "flood must fill every slot");
-            // Interactive arrival under full slots forces an eviction
-            // when preemption is on.
-            let p = SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(4) };
-            rxs.push((900, submit_pri(&mut s, 900, spec_prompt(900), p, Priority::Interactive)));
-            s.run_until_idle();
-
-            if preemption {
-                assert!(s.metrics.counter("evictions") >= 1, "expected an eviction");
-                assert_eq!(
-                    s.metrics.counter("evictions"),
-                    s.metrics.counter("evicted_resumes"),
-                    "every evicted sequence must resume"
-                );
-            }
-            assert!(
-                s.metrics.counter("spec_rounds") > 0,
-                "speculation never engaged (paged={paged}, preemption={preemption})"
-            );
-            let mut streams = Vec::new();
-            for (id, rx) in &rxs {
-                let (toks, usage) = drain(rx);
-                assert!(usage.is_some(), "request {id} did not complete");
-                streams.push((*id, toks));
-            }
-            streams_by_policy.push(streams);
+    let mut streams_by_policy: Vec<Vec<(u64, Vec<i32>)>> = Vec::new();
+    for preemption in [true, false] {
+        let mut c = cfg(true);
+        c.sched = SchedConfig {
+            prefill_chunk_tokens: 32,
+            // Enough chunk budget per tick to admit the whole flood
+            // before the earliest sequence finishes — otherwise the
+            // 64 virtual lanes can never be simultaneously full.
+            prefill_chunks_per_step: 64,
+            priority_sched: true,
+            preemption,
+            aging_ticks: 0,
+            ..Default::default()
+        };
+        c.kv.cache_finished = false;
+        let mut s = Scheduler::new(c).unwrap();
+        // Fill every virtual lane (64 on qwen3-0.6b — 4x the largest
+        // 16-lane bucket) so the interactive arrival has nowhere to go.
+        let capacity = s.engine.max_capacity();
+        let mut rxs: Vec<(u64, Receiver<Event>)> = Vec::new();
+        for i in 0..capacity as u64 {
+            let p = SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(40) };
+            rxs.push((100 + i, submit_pri(&mut s, 100 + i, spec_prompt(i), p, Priority::Batch)));
         }
-        assert_eq!(
-            streams_by_policy[0], streams_by_policy[1],
-            "evict/resume with speculation diverged (paged={paged})"
+        while s.active_count() < capacity && s.queued_count() > 0 {
+            s.tick();
+        }
+        assert_eq!(s.active_count(), capacity, "flood must fill every lane");
+        // Interactive arrival under full lanes forces an eviction
+        // when preemption is on.
+        let p = SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(4) };
+        rxs.push((900, submit_pri(&mut s, 900, spec_prompt(900), p, Priority::Interactive)));
+        s.run_until_idle();
+
+        if preemption {
+            assert!(s.metrics.counter("evictions") >= 1, "expected an eviction");
+            assert_eq!(
+                s.metrics.counter("evictions"),
+                s.metrics.counter("evicted_resumes"),
+                "every evicted sequence must resume"
+            );
+        }
+        assert!(
+            s.metrics.counter("spec_rounds") > 0,
+            "speculation never engaged (preemption={preemption})"
         );
+        let mut streams = Vec::new();
+        for (id, rx) in &rxs {
+            let (toks, usage) = drain(rx);
+            assert!(usage.is_some(), "request {id} did not complete");
+            streams.push((*id, toks));
+        }
+        streams_by_policy.push(streams);
     }
+    assert_eq!(
+        streams_by_policy[0], streams_by_policy[1],
+        "evict/resume with speculation diverged"
+    );
 }

@@ -269,7 +269,7 @@ fn run_overlap_evict_workload(preemption: bool) -> (Vec<(u64, Vec<i32>)>, u64) {
     while s.active_count() < capacity {
         s.tick();
         guard += 1;
-        assert!(guard < 300, "mm flood never filled the decode arena");
+        assert!(guard < 300, "mm flood never filled the decode lanes");
     }
     assert!(s.metrics.counter("mm_overlap_chunks") >= 1, "flood must use the overlap path");
     rxs.push((

@@ -208,7 +208,7 @@ fn run_evict_workload(
     while s.active_count() < capacity {
         s.tick();
         guard += 1;
-        assert!(guard < 300, "mm flood never filled the decode arena");
+        assert!(guard < 300, "mm flood never filled the decode lanes");
     }
     // Interactive text arrival under full slots: with preemption it
     // must evict a decoding mm sequence.
