@@ -24,12 +24,16 @@ use std::collections::HashMap;
 use std::sync::mpsc::Receiver;
 use std::time::Instant;
 
-use umserve::bench_harness::{banner, fmt_f, maybe_write_json, smoke, smoke_scale, Table};
+use umserve::bench_harness::{
+    assert_dispatch_families, banner, fmt_f, maybe_write_dispatch_profile, maybe_write_json,
+    smoke, smoke_scale, Table,
+};
 use umserve::coordinator::scheduler::Scheduler;
 use umserve::coordinator::{
     EngineConfig, Event, GenRequest, KvConfig, PromptInput, SpecConfig,
 };
 use umserve::engine::sampler::SamplingParams;
+use umserve::substrate::metrics::MetricsRegistry;
 
 fn cfg(spec: bool) -> EngineConfig {
     EngineConfig {
@@ -50,6 +54,7 @@ struct RunOut {
     spec_rounds: u64,
     proposed: usize,
     accepted: usize,
+    profile: MetricsRegistry,
 }
 
 impl RunOut {
@@ -82,6 +87,7 @@ fn run(spec: bool, prompts: &[(u64, Vec<i32>)], n_new: usize) -> RunOut {
         spec_rounds: s.engine.stats.spec_rounds - warm_rounds,
         proposed: 0,
         accepted: 0,
+        profile: s.engine.rt.dispatch_profile(),
     };
     for (id, rx) in &rxs {
         for ev in rx.try_iter() {
@@ -146,10 +152,12 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut solo_speedup = None;
+    let mut dispatch = MetricsRegistry::new();
     for (wname, prompts, n_new) in [("solo", &solo, solo_gen), ("batch", &batch, batch_gen)] {
         let mut by_spec: Vec<RunOut> = Vec::new();
         for spec in [false, true] {
             let r = run(spec, prompts, n_new);
+            dispatch.merge_sum(&r.profile);
             assert_eq!(
                 r.tokens,
                 prompts.len() * n_new,
@@ -205,8 +213,17 @@ fn main() -> anyhow::Result<()> {
     let sp = solo_speedup.expect("solo workload ran");
     assert!(sp >= floor, "solo: dispatch speedup {sp:.2}x below the {floor}x floor");
 
+    // The grid profiler must have attributed every launch this bench
+    // exercises: tokenwise decode, chunked prefill and the spec
+    // catch-up grids all report nonzero dispatch counts.
+    assert_dispatch_families(
+        &dispatch,
+        &["decode_paged_b", "prefill_chunk_paged_c", "spec_chunk_paged_c"],
+    );
+
     table.print();
     maybe_write_json("ablation_speculative", &[&table])?;
+    maybe_write_dispatch_profile("ablation_speculative", &dispatch)?;
     println!("expected: on the repetitive solo workload, prompt-lookup drafts verify");
     println!("in one spec_chunk_paged dispatch each, cutting grid dispatches >= 1.5x");
     println!("at full scale (wall-clock tok/s tracks dispatches on this dispatch-");

@@ -30,11 +30,15 @@ use std::collections::HashMap;
 use std::sync::mpsc::Receiver;
 use std::time::Instant;
 
-use umserve::bench_harness::{banner, fmt_f, maybe_write_json, smoke_scale, Table};
+use umserve::bench_harness::{
+    assert_dispatch_families, banner, fmt_f, maybe_write_dispatch_profile, maybe_write_json,
+    smoke_scale, Table,
+};
 use umserve::coordinator::scheduler::Scheduler;
 use umserve::coordinator::{EngineConfig, Event, GenRequest, KvConfig, PromptInput, VisionConfig};
 use umserve::engine::sampler::SamplingParams;
 use umserve::multimodal::image::{generate_image, ImageSource};
+use umserve::substrate::metrics::MetricsRegistry;
 
 fn main() -> anyhow::Result<()> {
     banner("Vision-staging ablation — decode stall + TTFT under an image flood");
@@ -63,6 +67,7 @@ fn main() -> anyhow::Result<()> {
     // policy -> per-request greedy streams (keyed by request id).
     let mut outputs: HashMap<&'static str, HashMap<u64, Vec<i32>>> = HashMap::new();
     let mut stall_max_by_policy: HashMap<&'static str, f64> = HashMap::new();
+    let mut dispatch = MetricsRegistry::new();
 
     for (label, staged) in [("inline encode", false), ("staged 1/tick", true)] {
         let mut s = Scheduler::new(EngineConfig {
@@ -173,6 +178,7 @@ fn main() -> anyhow::Result<()> {
              decode-stall p99 {decode_stall_p99:.1} ms, {encodes} encodes"
         );
         outputs.insert(label, streams);
+        dispatch.merge_sum(&s.engine.rt.dispatch_profile());
     }
 
     // Staging must not change tokens (greedy), and must not stall
@@ -271,6 +277,7 @@ fn main() -> anyhow::Result<()> {
         bstreams.insert(label, toks);
         bp99.insert(label, stall_p99);
         bdisp.insert(label, dispatches);
+        dispatch.merge_sum(&s.engine.rt.dispatch_profile());
     }
     btable.print();
 
@@ -293,7 +300,15 @@ fn main() -> anyhow::Result<()> {
         bp99["dispatch/image (b=1)"]
     );
 
+    // The grid profiler must have attributed the vision tower and the
+    // chunked embed-prefill launches this bench exercises.
+    assert_dispatch_families(
+        &dispatch,
+        &["vision_r", "prefill_chunk_embeds_paged_c", "decode_paged_b"],
+    );
+
     maybe_write_json("ablation_vision_staging", &[&table, &btable])?;
+    maybe_write_dispatch_profile("ablation_vision_staging", &dispatch)?;
     println!("expected: staged encoding cuts the vision-stall max by ~the images-per-");
     println!("request factor and bounds decode-stall p99, with identical token streams");
     println!("and one encode per distinct image either way; encode batching then cuts");

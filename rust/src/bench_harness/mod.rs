@@ -7,7 +7,9 @@
 
 use std::time::Instant;
 
+use crate::runtime::model::grid_family;
 use crate::substrate::json::Json;
+use crate::substrate::metrics::MetricsRegistry;
 
 /// True when the benches run in reduced-iteration smoke mode — the CI
 /// `bench-smoke` lane sets `BENCH_SMOKE=1` so every ablation executes
@@ -44,6 +46,79 @@ pub fn maybe_write_json(name: &str, tables: &[&Table]) -> anyhow::Result<()> {
     std::fs::write(&path, body.to_string())?;
     eprintln!("  wrote {}", path.display());
     Ok(())
+}
+
+/// Structured form of a runtime dispatch profile
+/// (`ModelRuntime::dispatch_profile()`): one object per lowered grid
+/// with its dispatch count, total/mean wall time and tail quantiles,
+/// tagged with the grid family it belongs to.  This is the autotuner
+/// feedback artifact — CI uploads it next to the bench tables.
+pub fn dispatch_profile_json(name: &str, profile: &MetricsRegistry) -> Json {
+    let counts: std::collections::BTreeMap<String, u64> = profile
+        .labeled_counter_entries("dispatches_total")
+        .into_iter()
+        .map(|(g, n)| (g.to_string(), n))
+        .collect();
+    let grids: Vec<Json> = profile
+        .labeled_histogram_entries("dispatch")
+        .into_iter()
+        .map(|(grid, h)| {
+            Json::obj(vec![
+                ("grid", Json::str(grid)),
+                (
+                    "family",
+                    match grid_family(grid) {
+                        Some(f) => Json::str(f),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "dispatches",
+                    Json::Num(counts.get(grid).copied().unwrap_or(h.count()) as f64),
+                ),
+                ("sum_ms", Json::Num(h.sum_ms())),
+                ("mean_ms", Json::Num(h.mean_ms())),
+                ("p50_ms", Json::Num(h.quantile_ms(0.50))),
+                ("p95_ms", Json::Num(h.quantile_ms(0.95))),
+                ("p99_ms", Json::Num(h.quantile_ms(0.99))),
+                ("max_ms", Json::Num(h.max_ms())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::str(name)),
+        ("smoke", Json::Bool(smoke())),
+        ("grids", Json::Arr(grids)),
+    ])
+}
+
+/// Write a bench's dispatch profile to
+/// `$BENCH_JSON_OUT/<name>_dispatch_profile.json` (no-op when the env
+/// var is unset, same contract as [`maybe_write_json`]).
+pub fn maybe_write_dispatch_profile(name: &str, profile: &MetricsRegistry) -> anyhow::Result<()> {
+    let Some(dir) = std::env::var_os("BENCH_JSON_OUT") else {
+        return Ok(());
+    };
+    std::fs::create_dir_all(&dir)?;
+    let path = std::path::Path::new(&dir).join(format!("{name}_dispatch_profile.json"));
+    std::fs::write(&path, dispatch_profile_json(name, profile).to_string())?;
+    eprintln!("  wrote {}", path.display());
+    Ok(())
+}
+
+/// Assert the profiler saw at least one dispatch in each named grid
+/// family — the acceptance gate the ablation benches run so a lowering
+/// rename can't silently detach a family from the profiler.
+pub fn assert_dispatch_families(profile: &MetricsRegistry, families: &[&str]) {
+    for fam in families {
+        let n: u64 = profile
+            .labeled_counter_entries("dispatches_total")
+            .into_iter()
+            .filter(|(g, _)| grid_family(g) == Some(*fam))
+            .map(|(_, n)| n)
+            .sum();
+        assert!(n > 0, "dispatch profiler recorded no dispatches for grid family {fam}");
+    }
 }
 
 /// Repeat a closure and report robust timing stats.

@@ -31,6 +31,7 @@
 //! staged vision, chunked prefill) holds per-replica unchanged: the
 //! pool is a routing layer above schedulers, not a new scheduler.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -45,6 +46,7 @@ use crate::multimodal::ImageSource;
 use crate::substrate::hash::{ContentHash, Sha256};
 use crate::substrate::lru::LruCache;
 use crate::substrate::metrics::MetricsRegistry;
+use crate::substrate::trace::RequestTrace;
 
 /// Prompt bytes/tokens hashed into a text routing key: long enough to
 /// separate workloads, short enough that prompts sharing a system
@@ -278,7 +280,7 @@ fn rebalance_loop(
 /// dropping it.
 fn fail_unit(u: MigrationUnit) {
     let (id, events) = match &u {
-        MigrationUnit::Fresh(r) => (r.id, r.events.clone()),
+        MigrationUnit::Fresh(r, _) => (r.id, r.events.clone()),
         MigrationUnit::Queued(q) => (q.id, q.events.clone()),
         MigrationUnit::Decoding(d) => (d.id, d.events.clone()),
     };
@@ -490,6 +492,43 @@ impl PoolHandle {
         let mut cache = self.router.img_keys.lock().expect("img key lock");
         cache.insert(tkey, k, 1);
         Some(k)
+    }
+
+    /// One request's lifecycle timeline, merged across every replica
+    /// that recorded spans for it: a migrated request leaves its
+    /// pre-hop half on the source engine's flight recorder and its
+    /// post-hop half on the target (the carried trace travels with the
+    /// unit), so the pool view interleaves both by timestamp into one
+    /// ordered timeline.
+    pub fn trace(&self, id: u64) -> Result<Option<RequestTrace>> {
+        let mut parts = Vec::new();
+        for e in self.engines.iter() {
+            if let Some(t) = e.trace(id)? {
+                parts.push(t);
+            }
+        }
+        Ok(RequestTrace::merge(parts))
+    }
+
+    /// The pool's flight-recorder view: per-engine dumps merged by
+    /// request id, ordered by each request's first recorded event,
+    /// most recent `n` kept.
+    pub fn traces_last(&self, n: usize) -> Result<Vec<RequestTrace>> {
+        let mut by_id: HashMap<u64, Vec<RequestTrace>> = HashMap::new();
+        for e in self.engines.iter() {
+            for t in e.traces_last(n)? {
+                by_id.entry(t.id).or_default().push(t);
+            }
+        }
+        let mut merged: Vec<RequestTrace> =
+            by_id.into_values().filter_map(RequestTrace::merge).collect();
+        merged.sort_by(|a, b| {
+            let ka = a.events.first().map(|e| e.at_ms).unwrap_or(0.0);
+            let kb = b.events.first().map(|e| e.at_ms).unwrap_or(0.0);
+            ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let skip = merged.len().saturating_sub(n);
+        Ok(merged.split_off(skip))
     }
 
     /// Snapshot every replica plus the router counters.

@@ -322,6 +322,26 @@ impl Default for SpecConfig {
     }
 }
 
+/// Request-lifecycle tracing (`substrate::trace`): the per-request span
+/// recorder + bounded flight recorder behind `GET /v1/traces/{id}` and
+/// `GET /debug/traces`.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Master switch (`--trace on|off`).  Recording is append-only
+    /// host bookkeeping — greedy output is byte-identical either way
+    /// (asserted in tests) — so it defaults ON.
+    pub enabled: bool,
+    /// Flight-recorder capacity in completed request traces
+    /// (`--trace-buffer N`); the ring evicts oldest beyond this.
+    pub buffer: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: true, buffer: 256 }
+    }
+}
+
 /// Scheduler / engine configuration (the config-system surface that the
 /// CLI and server expose), grouped by subsystem: scheduling policy
 /// ([`SchedConfig`]), vision pipeline ([`VisionConfig`]), KV backend +
@@ -338,6 +358,7 @@ pub struct EngineConfig {
     pub vision: VisionConfig,
     pub kv: KvConfig,
     pub spec: SpecConfig,
+    pub trace: TraceConfig,
 }
 
 impl Default for EngineConfig {
@@ -350,6 +371,7 @@ impl Default for EngineConfig {
             vision: VisionConfig::default(),
             kv: KvConfig::default(),
             spec: SpecConfig::default(),
+            trace: TraceConfig::default(),
         }
     }
 }

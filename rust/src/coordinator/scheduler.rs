@@ -86,6 +86,7 @@ use crate::multimodal::vision::{patchify, snap_resolution, temporal_pool};
 use crate::runtime::{ArtifactStore, ModelRuntime, PageSet};
 use crate::substrate::hash::ContentHash;
 use crate::substrate::metrics::MetricsRegistry;
+use crate::substrate::trace::{FlightRecorder, RequestTrace};
 
 use super::{EngineConfig, Event, FinishReason, GenRequest, Priority, PromptInput, Timing, Usage};
 
@@ -103,6 +104,11 @@ pub enum Command {
     Shed(Sender<Option<MigrationUnit>>),
     /// Integrate a unit shed by another engine of the pool.
     Accept(Box<MigrationUnit>),
+    /// Fetch one request's lifecycle trace: the live span buffer if the
+    /// request is still in flight, else the flight-recorder copy.
+    Trace(u64, Sender<Option<RequestTrace>>),
+    /// Dump the most recent N completed traces from the flight recorder.
+    TraceDump(usize, Sender<Vec<RequestTrace>>),
     Shutdown,
 }
 
@@ -167,6 +173,9 @@ pub struct MigratedQueued {
     pub mm: Option<MmMigration>,
     pub timing: Timing,
     pub enqueued_at: Instant,
+    /// Lifecycle spans recorded so far on the source engine — rides the
+    /// unit so the merged timeline spans replicas.
+    pub trace: Option<RequestTrace>,
 }
 
 /// A mid-decode sequence evicted on its source engine.  The sampler
@@ -192,13 +201,17 @@ pub struct MigratedSeq {
     pub mm: Option<MmMigration>,
     pub timing: Timing,
     pub enqueued_at: Instant,
+    /// Lifecycle spans recorded so far on the source engine.
+    pub trace: Option<RequestTrace>,
 }
 
 /// One unit of cross-engine work migration, ordered by sunk cost:
 /// `Fresh` carries an untouched request, `Queued` a staged prompt with
 /// no KV built yet, `Decoding` a checkpointed mid-generation sequence.
+/// Each variant carries the source engine's lifecycle trace so a
+/// migrated request yields one timeline spanning both replicas.
 pub enum MigrationUnit {
-    Fresh(GenRequest),
+    Fresh(GenRequest, Option<RequestTrace>),
     Queued(MigratedQueued),
     Decoding(MigratedSeq),
 }
@@ -513,6 +526,15 @@ pub struct Scheduler {
     /// pool-visible Arc; updated every tick).
     pub load: Arc<EngineLoad>,
     pub metrics: MetricsRegistry,
+    /// Live per-request lifecycle span buffers (`--trace on`, default).
+    /// Tracing is pure host-side bookkeeping: it never touches the
+    /// sampler, the KV pool, or dispatch order, so greedy output is
+    /// byte-identical with tracing on or off.
+    traces: HashMap<u64, RequestTrace>,
+    /// Bounded ring of completed request traces (`--trace-buffer N`).
+    recorder: FlightRecorder,
+    /// Pool replica index stamped on every span (0 single-engine).
+    engine_index: usize,
 }
 
 impl Scheduler {
@@ -584,6 +606,9 @@ impl Scheduler {
             last_decode: None,
             load: Arc::new(EngineLoad::default()),
             metrics: MetricsRegistry::new(),
+            traces: HashMap::new(),
+            recorder: FlightRecorder::new(cfg.trace.buffer),
+            engine_index: 0,
         };
         s.mm_cache.enable_emb = cfg.kv.mm_emb_cache_bytes > 0;
         s.mm_cache.enable_kv = cfg.kv.mm_kv_cache_bytes > 0;
@@ -634,6 +659,7 @@ impl Scheduler {
             .name(format!("umserve-engine-{index}"))
             .spawn(move || match Scheduler::new(cfg) {
                 Ok(mut s) => {
+                    s.engine_index = index;
                     s.load = thread_load;
                     s.load
                         .capacity
@@ -706,6 +732,7 @@ impl Scheduler {
     fn handle_command(&mut self, c: Command) -> bool {
         match c {
             Command::Gen(r) => {
+                self.trace_ev(r.id, "enqueue", "", 0, 0);
                 self.intake.push_back(r);
                 self.publish_load();
             }
@@ -716,6 +743,22 @@ impl Scheduler {
                 let _ = tx.send(self.shed_one());
             }
             Command::Accept(u) => self.accept_migrated(*u),
+            Command::Trace(id, tx) => {
+                let t = self
+                    .traces
+                    .get(&id)
+                    .map(|t| t.snapshot())
+                    .or_else(|| self.recorder.find(id).cloned());
+                let _ = tx.send(t);
+            }
+            Command::TraceDump(n, tx) => {
+                let mut all = self.recorder.last(n);
+                // Include in-flight requests so a live dump shows the
+                // whole engine, not just finished work.
+                all.extend(self.traces.values().map(|t| t.snapshot()));
+                let skip = all.len().saturating_sub(n);
+                let _ = tx.send(all.split_off(skip));
+            }
             Command::Shutdown => return true,
         }
         false
@@ -754,6 +797,7 @@ impl Scheduler {
     /// Submit directly (in-thread use).  Resolves caches and stages (or,
     /// with staging disabled, prefills inline).
     pub fn submit(&mut self, req: GenRequest) {
+        self.trace_ev(req.id, "enqueue", "", 0, 0);
         self.admit(req);
     }
 
@@ -877,8 +921,14 @@ impl Scheduler {
 
     pub fn snapshot(&self) -> StatsSnapshot {
         let es = &self.engine.stats;
+        let mut metrics = self.metrics.clone();
+        // Fold in the runtime's per-dispatch grid profiler
+        // (`dispatch_ms{grid=…}` / `dispatches_total{grid=…}`) — the
+        // scheduler registry never holds those families, so the merge
+        // cannot double count.
+        metrics.merge_sum(&self.engine.rt.dispatch_profile());
         StatsSnapshot {
-            metrics: self.metrics.clone(),
+            metrics,
             active: self.active.len(),
             queued: self.intake.len() + self.staged_requests(),
             vision_queued: self.vis_pending.len(),
@@ -941,6 +991,106 @@ impl Scheduler {
         self.load.evicted.store(self.evicted.len(), Ordering::Relaxed);
     }
 
+    // -------------------------------------------------------- tracing
+
+    /// Append an instantaneous lifecycle event to a request's span
+    /// buffer.  No-op with `--trace off`; tracing never touches the
+    /// sampler or dispatch order, so generated output is byte-identical
+    /// either way.
+    fn trace_ev(&mut self, id: u64, kind: &'static str, label: &'static str, n: u64, m: u64) {
+        if !self.cfg.trace.enabled {
+            return;
+        }
+        let engine = self.engine_index;
+        self.traces.entry(id).or_insert_with(|| RequestTrace::new(id)).push(
+            kind, label, engine, n, m,
+        );
+    }
+
+    /// Append a span that took `dur_ms` and just ended.
+    fn trace_span(
+        &mut self,
+        id: u64,
+        kind: &'static str,
+        label: &'static str,
+        dur_ms: f64,
+        n: u64,
+        m: u64,
+    ) {
+        if !self.cfg.trace.enabled {
+            return;
+        }
+        let engine = self.engine_index;
+        self.traces.entry(id).or_insert_with(|| RequestTrace::new(id)).push_span(
+            kind, label, engine, dur_ms, n, m,
+        );
+    }
+
+    /// Record a parked transition, collapsing repeats: a request stuck
+    /// behind the same gate for many ticks gets ONE park event, not one
+    /// per tick (which would flood its bounded span buffer).
+    fn trace_park(&mut self, id: u64, label: &'static str) {
+        if !self.cfg.trace.enabled {
+            return;
+        }
+        let engine = self.engine_index;
+        let t = self.traces.entry(id).or_insert_with(|| RequestTrace::new(id));
+        if let Some(last) = t.events.last() {
+            if last.kind == "park" && last.label == label {
+                return;
+            }
+        }
+        t.push("park", label, engine, 0, 0);
+    }
+
+    /// Account one batched decode tick for an active sequence (folded
+    /// into per-N summary events by the recorder).
+    fn trace_decode_tick(&mut self, id: u64) {
+        if !self.cfg.trace.enabled {
+            return;
+        }
+        let engine = self.engine_index;
+        self.traces
+            .entry(id)
+            .or_insert_with(|| RequestTrace::new(id))
+            .decode_tick(engine);
+    }
+
+    /// Terminal transition: stamp the final event and retire the span
+    /// buffer into the flight recorder.
+    fn trace_retire(&mut self, id: u64, kind: &'static str, label: &'static str, n: u64) {
+        if !self.cfg.trace.enabled {
+            return;
+        }
+        let engine = self.engine_index;
+        let mut t = self.traces.remove(&id).unwrap_or_else(|| RequestTrace::new(id));
+        t.push(kind, label, engine, n, 0);
+        self.recorder.push(t);
+    }
+
+    /// Detach a request's trace to ride a migration unit, stamped with
+    /// the hop — the target engine continues the same timeline.
+    fn trace_detach(&mut self, id: u64) -> Option<RequestTrace> {
+        if !self.cfg.trace.enabled {
+            return None;
+        }
+        let engine = self.engine_index;
+        let mut t = self.traces.remove(&id)?;
+        t.push("migrate_out", "", engine, 0, 0);
+        Some(t)
+    }
+
+    /// Adopt a trace carried in by a migration unit.
+    fn trace_adopt(&mut self, id: u64, carried: Option<RequestTrace>) {
+        if !self.cfg.trace.enabled {
+            return;
+        }
+        let engine = self.engine_index;
+        let mut t = carried.unwrap_or_else(|| RequestTrace::new(id));
+        t.push("migrate_in", "", engine, 0, 0);
+        self.traces.insert(id, t);
+    }
+
     // ------------------------------------------------------- admission
 
     fn admit(&mut self, req: GenRequest) {
@@ -948,6 +1098,7 @@ impl Scheduler {
         let events = req.events.clone();
         if let Err(e) = self.try_admit(req) {
             self.metrics.inc("requests_failed", 1);
+            self.trace_retire(id, "error", "admit", 0);
             let _ = events.send(Event::Error { id, message: format!("{e:#}") });
         }
     }
@@ -1009,6 +1160,7 @@ impl Scheduler {
                 // queue as a zero-feed job.  It costs no prefill work and
                 // joins — possibly after evicting a lower-class decoder —
                 // when a slot frees.
+                self.trace_park(id, "decode_capacity");
                 let total = kv.len;
                 let job = PrefillJob {
                     id,
@@ -1072,6 +1224,7 @@ impl Scheduler {
                             enqueued_at,
                         });
                         self.metrics.inc("prefill_coalesced", 1);
+                        self.trace_ev(id, "stage", "coalesced", 0, 0);
                         return Ok(());
                     }
                 }
@@ -1098,6 +1251,7 @@ impl Scheduler {
                     timing,
                     enqueued_at,
                 };
+                self.trace_ev(id, "stage", "", total as u64, 0);
                 if self.chunk_tokens == 0 {
                     // Inline admission: drain the job synchronously (one
                     // prefill call for fresh prompts, token-by-token
@@ -1152,6 +1306,8 @@ impl Scheduler {
             enqueued_at,
         };
         ar.timing.ttft_ms = ms_since(enqueued_at, Instant::now());
+        self.trace_ev(id, "admit", priority.as_str(), prompt_len as u64, 0);
+        self.trace_ev(id, "first_token", "", 0, 0);
         self.metrics.observe_ms("ttft", ar.timing.ttft_ms);
         self.metrics.observe_ms("queue_wait", ar.timing.queue_ms);
         // Scheduling wait by class: everything between enqueue and
@@ -1241,6 +1397,9 @@ impl Scheduler {
                 .unwrap_or(page)
                 .min(if self.chunk_tokens > 0 { self.chunk_tokens } else { usize::MAX });
             if self.pool_backpressured(chunk.div_ceil(page) + 2) {
+                if let Some(jid) = self.pending.get(pos).map(|j| j.id) {
+                    self.trace_park(jid, "kv_pool_backpressure");
+                }
                 break;
             }
             let Some(mut job) = self.pending.remove(pos) else { break };
@@ -1255,6 +1414,7 @@ impl Scheduler {
                     // The job AND any coalesced followers fail together.
                     self.fail_followers(&job, &e);
                     self.metrics.inc("requests_failed", 1);
+                    self.trace_retire(job.id, "error", "prefill", 0);
                     let _ = job
                         .events
                         .send(Event::Error { id: job.id, message: format!("{e:#}") });
@@ -1294,6 +1454,9 @@ impl Scheduler {
             // Each admitted lane pins a logits-mailbox page, and its
             // first decode step may copy-on-write the shared tail page.
             if self.pool_backpressured(need * 2) {
+                if let Some(jid) = self.pending.get(pos).map(|j| j.id) {
+                    self.trace_park(jid, "kv_pool_backpressure");
+                }
                 return;
             }
             let Some(job) = self.pending.remove(pos) else { return };
@@ -1381,6 +1544,7 @@ impl Scheduler {
                 // paged backend the checkpoint is zero-copy: the
                 // sequence's own pages move into the cache entry.
                 debug_assert_eq!(kv.len, a.prompt_len + a.fed);
+                let ckpt_len = kv.len as u64;
                 match &a.mm {
                     Some(m) => {
                         let key = mm_prompt_hash(&m.hashes, &a.all_tokens);
@@ -1391,6 +1555,7 @@ impl Scheduler {
                 }
                 a.timing.evictions += 1;
                 self.metrics.inc("evictions", 1);
+                self.trace_ev(id, "evict", "", ckpt_len, 0);
                 self.evicted
                     .push(EvictedSeq { id, req: a, evict_tick: self.tick_count });
                 self.metrics
@@ -1403,6 +1568,7 @@ impl Scheduler {
                 // Unreachable with extract_kv=true; fail the request
                 // rather than dropping it silently.
                 self.metrics.inc("requests_failed", 1);
+                self.trace_retire(id, "error", "evict", 0);
                 let _ = a.events.send(Event::Error {
                     id,
                     message: "eviction lost KV state".into(),
@@ -1411,6 +1577,7 @@ impl Scheduler {
             }
             Err(e) => {
                 self.metrics.inc("requests_failed", 1);
+                self.trace_retire(id, "error", "evict", 0);
                 let _ = a.events.send(Event::Error { id, message: format!("{e:#}") });
                 false
             }
@@ -1464,6 +1631,7 @@ impl Scheduler {
             let events = e.req.events.clone();
             if let Err(err) = self.resume_evicted(e) {
                 self.metrics.inc("requests_failed", 1);
+                self.trace_retire(id, "error", "resume", 0);
                 let _ = events.send(Event::Error { id, message: format!("{err:#}") });
             }
             self.metrics
@@ -1541,6 +1709,7 @@ impl Scheduler {
         };
         self.engine.admit(id, &kv, tokens.len())?;
         self.metrics.inc("evicted_resumes", 1);
+        self.trace_ev(id, "resume", "text", tokens.len() as u64, 0);
         self.active.insert(id, req);
         self.metrics
             .set_gauge("active_requests", self.active.len() as f64);
@@ -1586,6 +1755,7 @@ impl Scheduler {
         };
         self.engine.admit(id, &kv, kv.len)?;
         self.metrics.inc("evicted_resumes", 1);
+        self.trace_ev(id, "resume", "mm", kv.len as u64, 0);
         self.active.insert(id, req);
         self.metrics
             .set_gauge("active_requests", self.active.len() as f64);
@@ -1658,7 +1828,8 @@ impl Scheduler {
         if let Some(r) = self.intake.pop_back() {
             self.metrics.inc("migrations_out", 1);
             self.publish_load();
-            return Some(MigrationUnit::Fresh(r));
+            let trace = self.trace_detach(r.id);
+            return Some(MigrationUnit::Fresh(r, trace));
         }
         // Scan staged jobs from the back: after order_queue that is the
         // lowest effective class / latest arrival, so shedding disturbs
@@ -1682,6 +1853,7 @@ impl Scheduler {
                 .set_gauge("prefill_queue_depth", self.staged_requests() as f64);
             self.publish_load();
             let mm = j.mm.as_ref().and_then(mm_migration);
+            let trace = self.trace_detach(j.id);
             return Some(MigrationUnit::Queued(MigratedQueued {
                 id: j.id,
                 events: j.events,
@@ -1691,6 +1863,7 @@ impl Scheduler {
                 mm,
                 timing: j.timing,
                 enqueued_at: j.enqueued_at,
+                trace,
             }));
         }
         // Evicted sequence with a guaranteed remote rebuild: text
@@ -1707,6 +1880,7 @@ impl Scheduler {
             self.publish_load();
             let req = e.req;
             let mm = req.mm.as_ref().and_then(mm_migration);
+            let trace = self.trace_detach(e.id);
             return Some(MigrationUnit::Decoding(MigratedSeq {
                 id: e.id,
                 events: req.events,
@@ -1724,6 +1898,7 @@ impl Scheduler {
                 mm,
                 timing: req.timing,
                 enqueued_at: req.enqueued_at,
+                trace,
             }));
         }
         None
@@ -1739,7 +1914,10 @@ impl Scheduler {
     fn accept_migrated(&mut self, u: MigrationUnit) {
         self.metrics.inc("migrations_in", 1);
         match u {
-            MigrationUnit::Fresh(r) => self.intake.push_back(r),
+            MigrationUnit::Fresh(r, trace) => {
+                self.trace_adopt(r.id, trace);
+                self.intake.push_back(r);
+            }
             MigrationUnit::Queued(q) => {
                 let MigratedQueued {
                     id,
@@ -1750,7 +1928,9 @@ impl Scheduler {
                     mm,
                     mut timing,
                     enqueued_at,
+                    trace,
                 } = q;
+                self.trace_adopt(id, trace);
                 let t_admit = Instant::now();
                 let resolved = match mm {
                     None => self.text_resolve(&tokens, &mut timing),
@@ -1770,10 +1950,12 @@ impl Scheduler {
                 });
                 if let Err(e) = outcome {
                     self.metrics.inc("requests_failed", 1);
+                    self.trace_retire(id, "error", "migrate", 0);
                     let _ = events.send(Event::Error { id, message: format!("{e:#}") });
                 }
             }
             MigrationUnit::Decoding(d) => {
+                self.trace_adopt(d.id, d.trace);
                 let req = ActiveReq {
                     events: d.events,
                     params: d.params,
@@ -1848,6 +2030,7 @@ impl Scheduler {
         if job.feed_open {
             self.metrics.inc("mm_overlap_chunks", 1);
         }
+        let fed_before = job.fed;
         let t0 = Instant::now();
         // Pages under construction: fresh prompts start an empty set,
         // extensions of a cached source pin its pages zero-copy on
@@ -1895,7 +2078,9 @@ impl Scheduler {
             }
         }
         job.paged = Some(set);
-        job.prefill_ms += ms_since(t0, Instant::now());
+        let dt = ms_since(t0, Instant::now());
+        job.prefill_ms += dt;
+        self.trace_span(job.id, "prefill_chunk", "", dt, (job.fed - fed_before) as u64, 0);
         Ok(!job.feed_open && job.fed >= job.feed.rows(d))
     }
 
@@ -1907,6 +2092,10 @@ impl Scheduler {
             let _ = f
                 .events
                 .send(Event::Error { id: f.id, message: format!("{e:#}") });
+        }
+        let ids: Vec<u64> = job.followers.iter().map(|f| f.id).collect();
+        for id in ids {
+            self.trace_retire(id, "error", "prefill", 0);
         }
     }
 
@@ -1982,6 +2171,7 @@ impl Scheduler {
                 timing,
             ) {
                 self.metrics.inc("requests_failed", 1);
+                self.trace_retire(f.id, "error", "admit", 0);
                 let _ = f.events.send(Event::Error { id: f.id, message: format!("{e:#}") });
             }
         }
@@ -2225,6 +2415,7 @@ impl Scheduler {
         let mut ready: Vec<MmPending> = Vec::new();
         let mut to_close: Vec<MmPending> = Vec::new();
         let mut appends: Vec<(u64, Vec<f32>)> = Vec::new();
+        let mut vision_spans: Vec<u64> = Vec::new();
         let mut i = 0;
         while i < self.mm_waiting.len() {
             let p = &mut self.mm_waiting[i];
@@ -2233,6 +2424,7 @@ impl Scheduler {
                 p.resolved.insert(hash, entry.clone());
                 // Coalesced waiters each waited the (amortized) encode.
                 p.timing.vision_ms += dt_ms;
+                vision_spans.push(p.id);
                 if let Some(jid) = p.job_id {
                     let rows = p.compose_frontier();
                     if !rows.is_empty() {
@@ -2248,6 +2440,9 @@ impl Scheduler {
                 }
             }
             i += 1;
+        }
+        for id in vision_spans {
+            self.trace_span(id, "vision", "", dt_ms, 1, 0);
         }
         for (jid, rows) in appends {
             if let Some(job) = self.pending.iter_mut().find(|j| j.id == jid) {
@@ -2645,7 +2840,9 @@ impl Scheduler {
             pend.job_id = Some(id);
             self.pending.push_back(job);
         }
+        let pend_id = pend.id;
         self.mm_waiting.push(pend);
+        self.trace_park(pend_id, "vision_pending");
         self.metrics
             .set_gauge("vision_queue_depth", self.vis_pending.len() as f64);
         self.metrics
@@ -2996,10 +3193,12 @@ impl Scheduler {
                     Err(e) => {
                         let a = self.active.remove(&id).unwrap();
                         let _ = self.engine.remove(id, false);
+                        self.trace_retire(id, "error", "spec", 0);
                         let _ = a.events.send(Event::Error { id, message: format!("{e:#}") });
                         continue;
                     }
                 };
+            self.trace_ev(id, "spec_round", "", round.drafted as u64, round.accepted as u64);
             let a = self.active.get_mut(&id).unwrap();
             a.spec_proposed += round.drafted;
             a.spec_accepted += round.accepted;
@@ -3083,7 +3282,9 @@ impl Scheduler {
             Ok(r) => r,
             Err(e) => {
                 // Fatal engine error: fail all active requests.
-                for (id, a) in self.active.drain() {
+                let failed: Vec<(u64, ActiveReq)> = self.active.drain().collect();
+                for (id, a) in failed {
+                    self.trace_retire(id, "error", "decode", 0);
                     let _ = a.events.send(Event::Error { id, message: format!("{e:#}") });
                 }
                 return;
@@ -3091,6 +3292,12 @@ impl Scheduler {
         };
         self.last_decode = Some(Instant::now());
         self.metrics.observe_ms("decode_step", ms_since(t0, Instant::now()));
+        if self.cfg.trace.enabled {
+            let tick_ids: Vec<u64> = next.keys().copied().collect();
+            for id in tick_ids {
+                self.trace_decode_tick(id);
+            }
+        }
 
         let mut finished: Vec<(u64, FinishReason)> = Vec::new();
         for (id, logits) in results.iter() {
@@ -3189,11 +3396,13 @@ impl Scheduler {
             }
             Ok(None) => {}
             Err(e) => {
+                self.trace_retire(id, "error", "finish", 0);
                 let _ = a.events.send(Event::Error { id, message: format!("{e:#}") });
                 return;
             }
         }
         a.timing.total_ms = ms_since(a.enqueued_at, Instant::now());
+        self.trace_retire(id, "finish", reason.as_str(), a.emitted as u64);
         self.metrics.observe_ms("request_total", a.timing.total_ms);
         self.metrics.inc("requests_completed", 1);
         // Flush any pending UTF-8 bytes.
@@ -3371,6 +3580,39 @@ impl SchedulerHandle {
             .send(Command::Stats(tx))
             .map_err(|_| anyhow!("scheduler is gone"))?;
         rx.recv().map_err(|_| anyhow!("scheduler is gone"))
+    }
+
+    /// Fetch one request's lifecycle trace (live requests return their
+    /// span buffer so far; finished ones the flight-recorder copy).
+    pub fn trace(&self, id: u64) -> Result<Option<RequestTrace>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Command::Trace(id, tx))
+            .map_err(|_| anyhow!("scheduler is gone"))?;
+        rx.recv().map_err(|_| anyhow!("scheduler is gone"))
+    }
+
+    /// The most recent `n` traces from the engine's flight recorder
+    /// (plus in-flight span buffers), oldest first.
+    pub fn traces_last(&self, n: usize) -> Result<Vec<RequestTrace>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Command::TraceDump(n, tx))
+            .map_err(|_| anyhow!("scheduler is gone"))?;
+        rx.recv().map_err(|_| anyhow!("scheduler is gone"))
+    }
+
+    /// Liveness probe for `/health`: false once the engine thread has
+    /// exited (panic or shutdown).  In-thread handles (no join handle)
+    /// report alive — there is no thread to have died.
+    pub fn is_alive(&self) -> bool {
+        match &self.join {
+            None => true,
+            Some(j) => match j.lock() {
+                Ok(g) => g.as_ref().map(|h| !h.is_finished()).unwrap_or(false),
+                Err(_) => false,
+            },
+        }
     }
 
     pub fn shutdown(&self) {

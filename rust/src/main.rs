@@ -13,7 +13,8 @@ use std::sync::Arc;
 use umserve::cluster::{EnginePool, PoolConfig, RoutePolicy};
 use umserve::coordinator::scheduler::Scheduler;
 use umserve::coordinator::{
-    EngineConfig, Event, KvConfig, Priority, PromptInput, SchedConfig, SpecConfig, VisionConfig,
+    EngineConfig, Event, KvConfig, Priority, PromptInput, SchedConfig, SpecConfig, TraceConfig,
+    VisionConfig,
 };
 use umserve::engine::sampler::SamplingParams;
 use umserve::runtime::ArtifactStore;
@@ -32,6 +33,7 @@ USAGE:
                 [--vision-batch 8] [--mm-overlap on|off]
                 [--spec on|off] [--spec-draft-len 7] [--spec-ngram-min 2]
                 [--engines 1] [--route rr|load|affinity] [--migrate on|off]
+                [--trace on|off] [--trace-buffer 256]
   umserve run   --model NAME --prompt TEXT [--max-tokens 64] [--temperature 0]
                 [--top-k 0] [--top-p 1.0] [--image PATH ...via --image=path]
   umserve info  [--artifacts artifacts]
@@ -111,6 +113,25 @@ CLUSTER:
   work from a backlogged replica to an idle one over the eviction
   checkpoint format; migrated sequences rebuild their KV on the target
   and continue with byte-identical greedy output.
+
+OBSERVABILITY:
+  With --trace on (the default) every request records a lifecycle
+  timeline — enqueue, admit/park, vision encodes, prefill chunks,
+  speculation rounds (drafted/accepted), decode-tick summaries,
+  eviction checkpoints, resumes and migration hops — into a
+  preallocated per-request span buffer; finished requests land in a
+  bounded flight recorder (--trace-buffer N timelines per engine).
+  Tracing is pure host-side bookkeeping: greedy output is
+  byte-identical with tracing on or off.  GET /v1/traces/{id} returns
+  one request's timeline as JSON (merged across replicas when the
+  request migrated); GET /debug/traces?last=N dumps the most recent
+  finished timelines; ?format=chrome on either emits Chrome
+  trace-event JSON loadable in Perfetto / chrome://tracing.  Every
+  executable dispatch is profiled into per-grid histograms
+  (umserve_dispatch_ms{grid=...} / umserve_dispatches_total{grid=...})
+  surfaced through GET /metrics; GET /health is a readiness probe
+  reporting queue depth, active lanes, free KV pages and per-replica
+  liveness (non-200 once any engine thread is gone).
 ";
 
 fn main() {
@@ -190,6 +211,10 @@ fn engine_config(args: &argparse::Args) -> anyhow::Result<EngineConfig> {
             draft_len: args.usize("spec-draft-len", 7)?,
             ngram_min: args.usize("spec-ngram-min", 2)?,
         },
+        trace: TraceConfig {
+            enabled: args.on_off("trace", true)?,
+            buffer: args.usize("trace-buffer", 256)?,
+        },
     })
 }
 
@@ -214,6 +239,7 @@ fn serve(args: &argparse::Args) -> anyhow::Result<()> {
     let listener = TcpListener::bind(("127.0.0.1", port as u16))?;
     eprintln!("umserve listening on http://127.0.0.1:{port} (model {model})");
     eprintln!("  POST /v1/chat/completions | POST /v1/completions | GET /v1/models | GET /metrics");
+    eprintln!("  GET /health | GET /v1/traces/{{id}} | GET /debug/traces?last=N  [?format=chrome]");
     let shutdown = Arc::new(AtomicBool::new(false));
     umserve::server::serve(listener, handle, model, default_priority, shutdown)
 }

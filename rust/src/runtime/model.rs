@@ -12,6 +12,35 @@ use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 use super::manifest::{ArgDesc, ArtifactStore, EntryDesc, ModelInfo};
 use super::weights::{read_umw, HostTensor, UmwDtype};
+use crate::substrate::metrics::MetricsRegistry;
+
+/// Every grid-name family the AOT compiler lowers
+/// (`python/compile/aot.py`), as the literal prefix before any
+/// size/bucket suffix.  The per-dispatch profiler classifies every
+/// executable launch against this list, and a CI grep-gate asserts the
+/// list covers every `lower(...)` call — a new grid cannot silently
+/// dodge attribution.  Order longest-prefix-first where one name
+/// prefixes another.
+pub const KNOWN_GRID_FAMILIES: &[&str] = &[
+    "prefill_chunk_embeds_paged_c",
+    "prefill_chunk_paged_c",
+    "read_logits_chunk_paged_c",
+    "spec_chunk_paged_c",
+    "decode_paged_b",
+    "embed_lookup_s",
+    "vision_r", // vision_r{res} and the batched vision_r{res}_b{B}
+    "read_logits_page",
+    "copy_page",
+    "zeros_pool",
+];
+
+/// Classify an entry name into its lowered grid family (the labels the
+/// ROADMAP autotuner aggregates over).  `None` means an entry the
+/// compiler does not emit — the profiler still records it under its
+/// raw name, but tests treat an unclassified dispatch as a bug.
+pub fn grid_family(entry: &str) -> Option<&'static str> {
+    KNOWN_GRID_FAMILIES.iter().copied().find(|f| entry.starts_with(f))
+}
 
 /// A host-side input value for one executable argument.
 pub enum Input<'a> {
@@ -48,6 +77,12 @@ pub struct ModelRuntime {
     pub host_weights: HashMap<String, HostTensor>,
     exes: RefCell<HashMap<String, Rc<CompiledEntry>>>,
     stats: RefCell<RuntimeStats>,
+    /// Per-dispatch grid profiler: wall time of every executable
+    /// launch as `dispatch_ms{grid=<entry>}` labeled histograms plus
+    /// `dispatches_total{grid=<entry>}` counters — the in-situ feedback
+    /// signal fixed tunings can't provide across chips.  Single-
+    /// threaded like the rest of the runtime, so a `RefCell` suffices.
+    dispatch: RefCell<MetricsRegistry>,
 }
 
 impl ModelRuntime {
@@ -93,6 +128,7 @@ impl ModelRuntime {
             host_weights,
             exes: RefCell::new(HashMap::new()),
             stats: RefCell::new(RuntimeStats::default()),
+            dispatch: RefCell::new(MetricsRegistry::new()),
         };
         rt.stats.borrow_mut().host_upload_bytes = upload_bytes;
         Ok(rt)
@@ -100,6 +136,14 @@ impl ModelRuntime {
 
     pub fn stats(&self) -> RuntimeStats {
         self.stats.borrow().clone()
+    }
+
+    /// Snapshot of the per-dispatch grid profile (`dispatch_ms{grid=…}`
+    /// histograms + `dispatches_total{grid=…}` counters).  The
+    /// scheduler folds this into its stats snapshot so /metrics and the
+    /// bench profile export see it.
+    pub fn dispatch_profile(&self) -> MetricsRegistry {
+        self.dispatch.borrow().clone()
     }
 
     /// Force-compile a set of entries (used at server start so first
@@ -147,6 +191,9 @@ impl ModelRuntime {
     /// output buffer (see the logits-mailbox convention).
     pub fn run(&self, entry: &str, inputs: &[Input<'_>]) -> Result<PjRtBuffer> {
         let ce = self.compiled(entry)?;
+        // Profile from here: the dispatch cost is argument upload +
+        // execution, never the one-off lazy compile above.
+        let t_dispatch = Instant::now();
         if inputs.len() != ce.input_descs.len() {
             bail!(
                 "{entry}: expected {} inputs, got {}",
@@ -192,6 +239,12 @@ impl ModelRuntime {
             let mut st = self.stats.borrow_mut();
             st.executions += 1;
             st.host_upload_bytes += upload;
+        }
+        {
+            let ms = t_dispatch.elapsed().as_secs_f64() * 1e3;
+            let mut d = self.dispatch.borrow_mut();
+            d.observe_ms_labeled("dispatch", "grid", entry, ms);
+            d.inc_labeled("dispatches_total", "grid", entry, 1);
         }
         let mut replica = out
             .pop()
@@ -550,6 +603,43 @@ impl ModelRuntime {
         let b = self.client.buffer_from_host_buffer::<f32>(data, dims, None)?;
         self.stats.borrow_mut().host_upload_bytes += (data.len() * 4) as u64;
         Ok(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_lowered_entry_classifies_to_a_grid_family() {
+        // One concrete entry name per aot.py `lower(...)` call.  The CI
+        // grep-gate keeps KNOWN_GRID_FAMILIES in sync with the lowering
+        // source; this test keeps the classifier in sync with the list.
+        for (entry, family) in [
+            ("decode_paged_b16", "decode_paged_b"),
+            ("prefill_chunk_paged_c32", "prefill_chunk_paged_c"),
+            ("prefill_chunk_embeds_paged_c32", "prefill_chunk_embeds_paged_c"),
+            ("spec_chunk_paged_c8", "spec_chunk_paged_c"),
+            ("read_logits_chunk_paged_c16", "read_logits_chunk_paged_c"),
+            ("copy_page", "copy_page"),
+            ("zeros_pool", "zeros_pool"),
+            ("read_logits_page", "read_logits_page"),
+            ("embed_lookup_s64", "embed_lookup_s"),
+            ("vision_r224", "vision_r"),
+            ("vision_r448_b8", "vision_r"),
+        ] {
+            assert_eq!(grid_family(entry), Some(family), "entry {entry}");
+        }
+        assert_eq!(grid_family("mystery_grid"), None);
+    }
+
+    #[test]
+    fn grid_family_prefers_longest_prefix() {
+        // `prefill_chunk_paged_c` must not swallow the embeds variant.
+        assert_eq!(
+            grid_family("prefill_chunk_embeds_paged_c64"),
+            Some("prefill_chunk_embeds_paged_c")
+        );
     }
 }
 

@@ -6,7 +6,14 @@
 //!   content parts (multimodal), optional `"stream": true` SSE.
 //! * `POST /v1/completions` — bare prompt completion.
 //! * `GET /v1/models` — the loaded model.
-//! * `GET /health`, `GET /metrics` (Prometheus text).
+//! * `GET /health` — readiness probe: per-replica liveness and
+//!   queue/KV-pool pressure as JSON (503 once any engine thread dies).
+//! * `GET /metrics` (Prometheus text).
+//! * `GET /v1/traces/{request_id}` — one request's lifecycle timeline
+//!   (merged across replicas for migrated requests);
+//!   `?format=chrome` emits Chrome trace-event JSON for Perfetto.
+//! * `GET /debug/traces?last=N[&format=chrome]` — the flight-recorder
+//!   dump: the most recent N request timelines across the pool.
 //!
 //! The HTTP substrate is in-tree (`substrate::http`); handlers translate
 //! wire JSON <-> `coordinator` requests and bridge the scheduler's event

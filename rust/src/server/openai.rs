@@ -1,5 +1,6 @@
 //! OpenAI wire-format translation + request routing.
 
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 use std::time::{SystemTime, UNIX_EPOCH};
 
@@ -9,6 +10,7 @@ use crate::engine::sampler::SamplingParams;
 use crate::multimodal::ImageSource;
 use crate::substrate::http::{Request, ResponseWriter};
 use crate::substrate::json::{parse, Json};
+use crate::substrate::trace::to_chrome_json;
 
 pub struct ServerState {
     /// Pool-addressable submission handle: every request is routed to
@@ -25,10 +27,10 @@ pub fn route(state: &ServerState, req: Request, rw: &mut ResponseWriter<'_>) {
         ("POST", "/v1/chat/completions") => chat_completions(state, &req, rw),
         ("POST", "/v1/completions") => completions(state, &req, rw),
         ("GET", "/v1/models") => models(state, rw),
-        ("GET", "/health") => rw
-            .send_json(200, &Json::obj(vec![("status", Json::str("ok"))]))
-            .map_err(|e| (500u16, e.to_string())),
+        ("GET", "/health") => health(state, rw),
         ("GET", "/metrics") => metrics(state, rw),
+        ("GET", "/debug/traces") => trace_dump(state, &req, rw),
+        ("GET", p) if p.starts_with("/v1/traces/") => trace_one(state, &req, rw),
         _ => rw
             .send_json(404, &err_body("not_found", "unknown route"))
             .map_err(|e| (500u16, e.to_string())),
@@ -377,6 +379,100 @@ fn models(state: &ServerState, rw: &mut ResponseWriter<'_>) -> HandlerResult {
             ])]),
         ),
     ]);
+    rw.send_json(200, &body).map_err(|e| (500u16, e.to_string()))
+}
+
+/// Readiness probe: per-replica liveness (the engine thread can die on
+/// a panic), queue/slot pressure from the lock-free load summaries,
+/// and KV pool headroom.  All replicas alive -> 200; any dead -> 503
+/// so load balancers stop routing here.
+fn health(state: &ServerState, rw: &mut ResponseWriter<'_>) -> HandlerResult {
+    let mut replicas = Vec::new();
+    let mut all_alive = true;
+    let (mut queued, mut active) = (0usize, 0usize);
+    for (i, e) in state.handle.engines().iter().enumerate() {
+        let alive = e.is_alive();
+        all_alive &= alive;
+        let load = e.load();
+        let (q, a, ev, cap) = (
+            load.queued.load(Ordering::Relaxed),
+            load.active.load(Ordering::Relaxed),
+            load.evicted.load(Ordering::Relaxed),
+            load.capacity.load(Ordering::Relaxed),
+        );
+        queued += q;
+        active += a;
+        let mut fields = vec![
+            ("engine", Json::num(i as f64)),
+            ("alive", Json::Bool(alive)),
+            ("queued", Json::num(q as f64)),
+            ("active", Json::num(a as f64)),
+            ("evicted", Json::num(ev as f64)),
+            ("capacity", Json::num(cap as f64)),
+        ];
+        if alive {
+            // Pool headroom needs a stats round-trip through the engine
+            // thread; only ask threads that can still answer.
+            if let Ok(s) = e.stats() {
+                fields.push(("kv_pages_free", Json::num(s.kv_pool.free_pages as f64)));
+                fields.push(("kv_page_utilization", Json::num(s.kv_pool.utilization)));
+            }
+        }
+        replicas.push(Json::obj(fields));
+    }
+    let status = if all_alive { "ok" } else { "degraded" };
+    let body = Json::obj(vec![
+        ("status", Json::str(status)),
+        ("queued", Json::num(queued as f64)),
+        ("active", Json::num(active as f64)),
+        ("engines", Json::Arr(replicas)),
+    ]);
+    let code = if all_alive { 200 } else { 503 };
+    rw.send_json(code, &body).map_err(|e| (500u16, e.to_string()))
+}
+
+/// `GET /v1/traces/{request_id}` — one request's merged lifecycle
+/// timeline (cross-replica for migrated requests).  `?format=chrome`
+/// returns Chrome trace-event JSON loadable in Perfetto.
+fn trace_one(state: &ServerState, req: &Request, rw: &mut ResponseWriter<'_>) -> HandlerResult {
+    let id: u64 = req
+        .path
+        .strip_prefix("/v1/traces/")
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad("trace id must be a request id (integer)"))?;
+    let t = state.handle.trace(id).map_err(|e| (503u16, e.to_string()))?;
+    let Some(t) = t else {
+        return rw
+            .send_json(
+                404,
+                &err_body("not_found", "no trace for that id (rotated out, or tracing is off)"),
+            )
+            .map_err(|e| (500u16, e.to_string()));
+    };
+    let chrome = req.query.get("format").map(|f| f == "chrome").unwrap_or(false);
+    let body = if chrome { to_chrome_json(&[t]) } else { t.to_json() };
+    rw.send_json(200, &body).map_err(|e| (500u16, e.to_string()))
+}
+
+/// `GET /debug/traces?last=N[&format=chrome]` — the pool's flight
+/// recorder: the most recent N request timelines across all replicas.
+fn trace_dump(state: &ServerState, req: &Request, rw: &mut ResponseWriter<'_>) -> HandlerResult {
+    let n = req
+        .query
+        .get("last")
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(32)
+        .max(1);
+    let traces = state.handle.traces_last(n).map_err(|e| (503u16, e.to_string()))?;
+    let chrome = req.query.get("format").map(|f| f == "chrome").unwrap_or(false);
+    let body = if chrome {
+        to_chrome_json(&traces)
+    } else {
+        Json::obj(vec![
+            ("count", Json::num(traces.len() as f64)),
+            ("traces", Json::Arr(traces.iter().map(|t| t.to_json()).collect())),
+        ])
+    };
     rw.send_json(200, &body).map_err(|e| (500u16, e.to_string()))
 }
 

@@ -59,6 +59,12 @@ impl Histogram {
         self.max_ms
     }
 
+    /// Total of all observations — `_sum` in the rendered summary, so
+    /// downstream rate math (`rate(sum)/rate(count)`) works.
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_ms
+    }
+
     /// Fold another histogram into this one (same log-bucket layout by
     /// construction) — the pool's aggregate /metrics view sums every
     /// replica's observations.
@@ -91,12 +97,30 @@ impl Histogram {
     }
 }
 
+/// Whether a gauge family holds a *ratio* (utilization, percentage):
+/// merging replica registries must AVERAGE such gauges — summing
+/// renders `kv_page_utilization` as N× the truth (>1.0) on the pool's
+/// aggregate /metrics.  Absolute gauges (queue depths, active counts)
+/// keep summing.
+fn is_ratio_gauge(name: &str) -> bool {
+    name.ends_with("_utilization") || name.ends_with("_ratio") || name.ends_with("_pct")
+}
+
 /// A named collection of counters, gauges and histograms.
 #[derive(Debug, Default, Clone)]
 pub struct MetricsRegistry {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
+    /// Replica count folded into each ratio gauge by `merge_sum` —
+    /// internally ratio gauges store the SUM of replica values and the
+    /// accessors divide by this weight, which keeps pairwise merging
+    /// associative.  Absent (weight 1) until a registry is merged.
+    gauge_weights: BTreeMap<String, u64>,
     histograms: BTreeMap<String, Histogram>,
+    /// Counters with one label dimension, keyed
+    /// (family, label key, label value) — e.g. per-grid dispatch counts
+    /// `dispatches_total{grid="decode_paged_b16"}`.
+    labeled_counters: BTreeMap<(String, String, String), u64>,
     /// Histograms with one label dimension, keyed
     /// (family, label key, label value) — e.g. request queue wait
     /// broken out by scheduling class.
@@ -117,6 +141,19 @@ impl MetricsRegistry {
 
     pub fn set_gauge(&mut self, name: &str, v: f64) {
         self.gauges.insert(name.to_string(), v);
+        // A direct set is one replica's truth again: reset any merge
+        // weight so the accessor does not divide a fresh value.
+        self.gauge_weights.remove(name);
+    }
+
+    /// Bump a counter carrying one label, e.g.
+    /// `inc_labeled("dispatches_total", "grid", "decode_paged_b16", 1)`
+    /// renders as `umserve_dispatches_total{grid="decode_paged_b16"} …`.
+    pub fn inc_labeled(&mut self, name: &str, label_key: &str, label_val: &str, by: u64) {
+        *self
+            .labeled_counters
+            .entry((name.to_string(), label_key.to_string(), label_val.to_string()))
+            .or_insert(0) += by;
     }
 
     pub fn observe_ms(&mut self, name: &str, ms: f64) {
@@ -149,7 +186,36 @@ impl MetricsRegistry {
     }
 
     pub fn gauge(&self, name: &str) -> Option<f64> {
-        self.gauges.get(name).copied()
+        let v = self.gauges.get(name).copied()?;
+        let w = self.gauge_weights.get(name).copied().unwrap_or(1).max(1);
+        Some(if w > 1 { v / w as f64 } else { v })
+    }
+
+    /// Labeled counter lookup (any label key under `name`).
+    pub fn labeled_counter(&self, name: &str, label_val: &str) -> u64 {
+        self.labeled_counters
+            .iter()
+            .find(|((n, _, v), _)| n == name && v == label_val)
+            .map(|(_, c)| *c)
+            .unwrap_or(0)
+    }
+
+    /// Every (label value, count) under a labeled-counter family.
+    pub fn labeled_counter_entries(&self, name: &str) -> Vec<(&str, u64)> {
+        self.labeled_counters
+            .iter()
+            .filter(|((n, _, _), _)| n == name)
+            .map(|((_, _, v), c)| (v.as_str(), *c))
+            .collect()
+    }
+
+    /// Every (label value, histogram) under a labeled-histogram family.
+    pub fn labeled_histogram_entries(&self, name: &str) -> Vec<(&str, &Histogram)> {
+        self.labeled_histograms
+            .iter()
+            .filter(|((n, _, _), _)| n == name)
+            .map(|((_, _, v), h)| (v.as_str(), h))
+            .collect()
     }
 
     /// Labeled gauge lookup (any label key under `name`).
@@ -160,19 +226,34 @@ impl MetricsRegistry {
             .map(|(_, g)| *g)
     }
 
-    /// Fold another registry into this one: counters and gauges sum,
-    /// histograms merge observation-wise.  The pool's /metrics endpoint
-    /// uses this to present one aggregate view over N engine replicas
+    /// Fold another registry into this one: counters and absolute
+    /// gauges sum, histograms merge observation-wise, and RATIO gauges
+    /// ([`is_ratio_gauge`]: `*_utilization`/`*_ratio`/`*_pct`) average
+    /// — each side's replica weight is tracked so pairwise merging
+    /// stays associative and `kv_page_utilization` can never render
+    /// above 1.0 on the pool's aggregate /metrics.  The pool endpoint
+    /// uses this to present one view over N engine replicas
     /// (per-replica state is surfaced separately via labeled gauges).
     pub fn merge_sum(&mut self, other: &MetricsRegistry) {
         for (k, v) in &other.counters {
             *self.counters.entry(k.clone()).or_insert(0) += v;
         }
         for (k, v) in &other.gauges {
+            if is_ratio_gauge(k) {
+                // Weight bookkeeping first: a key we already hold
+                // contributed one replica's worth (unless an earlier
+                // merge recorded more); a key we lack contributed 0.
+                let held = if self.gauges.contains_key(k) { 1 } else { 0 };
+                let ow = other.gauge_weights.get(k).copied().unwrap_or(1);
+                *self.gauge_weights.entry(k.clone()).or_insert(held) += ow;
+            }
             *self.gauges.entry(k.clone()).or_insert(0.0) += v;
         }
         for (k, h) in &other.histograms {
             self.histograms.entry(k.clone()).or_default().merge_from(h);
+        }
+        for (k, v) in &other.labeled_counters {
+            *self.labeled_counters.entry(k.clone()).or_insert(0) += v;
         }
         for (k, h) in &other.labeled_histograms {
             self.labeled_histograms
@@ -203,16 +284,29 @@ impl MetricsRegistry {
         for (k, v) in &self.counters {
             out.push_str(&format!("# TYPE umserve_{k} counter\numserve_{k} {v}\n"));
         }
-        for (k, v) in &self.gauges {
+        for k in self.gauges.keys() {
+            // `gauge()` applies the ratio-average weight, so a merged
+            // utilization renders as the mean across replicas.
+            let v = self.gauge(k).unwrap_or(0.0);
             out.push_str(&format!("# TYPE umserve_{k} gauge\numserve_{k} {v}\n"));
+        }
+        let mut last_counter_family = String::new();
+        for ((name, lk, lv), v) in &self.labeled_counters {
+            if *name != last_counter_family {
+                out.push_str(&format!("# TYPE umserve_{name} counter\n"));
+                last_counter_family = name.clone();
+            }
+            out.push_str(&format!("umserve_{name}{{{lk}=\"{lv}\"}} {v}\n"));
         }
         for (k, h) in &self.histograms {
             out.push_str(&format!(
-                "# TYPE umserve_{k}_ms summary\numserve_{k}_ms_count {}\numserve_{k}_ms_mean {:.3}\numserve_{k}_ms_p50 {:.3}\numserve_{k}_ms_p95 {:.3}\numserve_{k}_ms_max {:.3}\n",
+                "# TYPE umserve_{k}_ms summary\numserve_{k}_ms_count {}\numserve_{k}_ms_sum {:.3}\numserve_{k}_ms_mean {:.3}\numserve_{k}_ms_p50 {:.3}\numserve_{k}_ms_p95 {:.3}\numserve_{k}_ms_p99 {:.3}\numserve_{k}_ms_max {:.3}\n",
                 h.count(),
+                h.sum_ms(),
                 h.mean_ms(),
                 h.quantile_ms(0.5),
                 h.quantile_ms(0.95),
+                h.quantile_ms(0.99),
                 h.max_ms()
             ));
         }
@@ -232,8 +326,9 @@ impl MetricsRegistry {
             }
             let sel = format!("{{{lk}=\"{lv}\"}}");
             out.push_str(&format!(
-                "umserve_{name}_ms_count{sel} {}\numserve_{name}_ms_mean{sel} {:.3}\numserve_{name}_ms_p50{sel} {:.3}\numserve_{name}_ms_p95{sel} {:.3}\numserve_{name}_ms_p99{sel} {:.3}\numserve_{name}_ms_max{sel} {:.3}\n",
+                "umserve_{name}_ms_count{sel} {}\numserve_{name}_ms_sum{sel} {:.3}\numserve_{name}_ms_mean{sel} {:.3}\numserve_{name}_ms_p50{sel} {:.3}\numserve_{name}_ms_p95{sel} {:.3}\numserve_{name}_ms_p99{sel} {:.3}\numserve_{name}_ms_max{sel} {:.3}\n",
                 h.count(),
+                h.sum_ms(),
                 h.mean_ms(),
                 h.quantile_ms(0.5),
                 h.quantile_ms(0.95),
@@ -338,5 +433,93 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.mean_ms(), 0.0);
         assert_eq!(h.quantile_ms(0.99), 0.0);
+    }
+
+    #[test]
+    fn merge_sum_averages_ratio_gauges() {
+        // Regression: the pool's aggregate /metrics used to SUM
+        // kv_page_utilization across replicas, rendering > 1.0.
+        let mut a = MetricsRegistry::new();
+        a.set_gauge("kv_page_utilization", 0.8);
+        a.set_gauge("active_requests", 2.0);
+        let mut b = MetricsRegistry::new();
+        b.set_gauge("kv_page_utilization", 0.4);
+        b.set_gauge("active_requests", 3.0);
+        let mut agg = MetricsRegistry::new();
+        agg.merge_sum(&a);
+        agg.merge_sum(&b);
+        let u = agg.gauge("kv_page_utilization").unwrap();
+        assert!((u - 0.6).abs() < 1e-9, "averaged, got {u}");
+        assert!(u <= 1.0);
+        // Absolute gauges still sum.
+        assert_eq!(agg.gauge("active_requests"), Some(5.0));
+        let text = agg.render_prometheus();
+        assert!(text.contains("umserve_kv_page_utilization 0.6"));
+        // A zero-utilization replica still counts in the average.
+        let mut c = MetricsRegistry::new();
+        c.set_gauge("kv_page_utilization", 0.0);
+        agg.merge_sum(&c);
+        let u3 = agg.gauge("kv_page_utilization").unwrap();
+        assert!((u3 - 0.4).abs() < 1e-9, "3-way average, got {u3}");
+    }
+
+    #[test]
+    fn ratio_gauge_merge_is_associative() {
+        let mk = |v: f64| {
+            let mut m = MetricsRegistry::new();
+            m.set_gauge("kv_page_utilization", v);
+            m
+        };
+        // (a + b) + c  vs  a + (b + c)
+        let mut left = MetricsRegistry::new();
+        left.merge_sum(&mk(0.9));
+        left.merge_sum(&mk(0.3));
+        left.merge_sum(&mk(0.3));
+        let mut bc = mk(0.3);
+        bc.merge_sum(&mk(0.3));
+        let mut right = mk(0.9);
+        right.merge_sum(&bc);
+        let (l, r) = (
+            left.gauge("kv_page_utilization").unwrap(),
+            right.gauge("kv_page_utilization").unwrap(),
+        );
+        assert!((l - 0.5).abs() < 1e-9 && (r - 0.5).abs() < 1e-9, "{l} vs {r}");
+        // A direct set after merging resets to one replica's truth.
+        left.set_gauge("kv_page_utilization", 0.7);
+        assert_eq!(left.gauge("kv_page_utilization"), Some(0.7));
+    }
+
+    #[test]
+    fn unlabeled_histogram_renders_p99_and_sum() {
+        // Regression: labeled histograms emitted _p99 but unlabeled
+        // ones did not, and neither emitted _sum.
+        let mut m = MetricsRegistry::new();
+        m.observe_ms("ttft", 10.0);
+        m.observe_ms("ttft", 30.0);
+        m.observe_ms_labeled("queue_wait_class", "class", "batch", 4.0);
+        let text = m.render_prometheus();
+        assert!(text.contains("umserve_ttft_ms_p99 "));
+        assert!(text.contains("umserve_ttft_ms_sum 40.000"));
+        assert!(text.contains("umserve_queue_wait_class_ms_sum{class=\"batch\"} 4.000"));
+        assert_eq!(m.histogram("ttft").unwrap().sum_ms(), 40.0);
+    }
+
+    #[test]
+    fn labeled_counters_render_and_merge() {
+        let mut m = MetricsRegistry::new();
+        m.inc_labeled("dispatches_total", "grid", "decode_paged_b16", 3);
+        m.inc_labeled("dispatches_total", "grid", "copy_page", 1);
+        assert_eq!(m.labeled_counter("dispatches_total", "decode_paged_b16"), 3);
+        assert_eq!(m.labeled_counter("dispatches_total", "nope"), 0);
+        let mut other = MetricsRegistry::new();
+        other.inc_labeled("dispatches_total", "grid", "decode_paged_b16", 2);
+        m.merge_sum(&other);
+        assert_eq!(m.labeled_counter("dispatches_total", "decode_paged_b16"), 5);
+        let entries = m.labeled_counter_entries("dispatches_total");
+        assert_eq!(entries.len(), 2);
+        let text = m.render_prometheus();
+        assert!(text.contains("umserve_dispatches_total{grid=\"decode_paged_b16\"} 5"));
+        assert!(text.contains("umserve_dispatches_total{grid=\"copy_page\"} 1"));
+        assert_eq!(text.matches("# TYPE umserve_dispatches_total counter").count(), 1);
     }
 }

@@ -10,3 +10,4 @@ pub mod http;
 pub mod json;
 pub mod lru;
 pub mod metrics;
+pub mod trace;

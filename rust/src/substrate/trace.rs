@@ -1,0 +1,403 @@
+//! Request-lifecycle tracing: a per-request span recorder whose events
+//! cover every scheduler transition (enqueue, stage/park, vision
+//! encodes, prefill chunks, spec rounds, batched decode summaries,
+//! eviction, resume, migration hops, finish), aggregated into a bounded
+//! ring-buffer **flight recorder** once the request completes.
+//!
+//! Timestamps are milliseconds since a process-wide epoch (the first
+//! trace observation), so events recorded on different engine threads —
+//! including the two halves of a migrated request's timeline — order
+//! correctly against each other.  `Instant` is monotonic within a
+//! process, which is exactly the scope a pool of in-process replicas
+//! needs.
+//!
+//! Tracing is on by default and must never change generated output:
+//! recording is append-to-a-preallocated-buffer only (no I/O, no
+//! locks), and the scheduler's hook helper no-ops when disabled.
+
+use std::collections::VecDeque;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::substrate::json::Json;
+
+/// Per-request event buffer capacity.  A long request overflows
+/// gracefully: further events are counted in `dropped`, never
+/// reallocated (decode ticks are batched into per-N summaries exactly
+/// so steady-state decode cannot exhaust the buffer).
+pub const EVENT_CAPACITY: usize = 256;
+
+/// Decode ticks folded into one summary event.
+pub const DECODE_SUMMARY_TICKS: u64 = 32;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Milliseconds since the process trace epoch (first call wins the
+/// epoch; all threads share it).
+pub fn trace_now_ms() -> f64 {
+    let e = *EPOCH.get_or_init(Instant::now);
+    Instant::now().duration_since(e).as_secs_f64() * 1e3
+}
+
+/// One timestamped lifecycle transition.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Span start, ms since the process trace epoch.
+    pub at_ms: f64,
+    /// Span duration (0.0 for instantaneous transitions).
+    pub dur_ms: f64,
+    /// Transition kind: `enqueue`, `stage`, `park`, `admit`,
+    /// `first_token`, `vision`, `prefill_chunk`, `spec_round`,
+    /// `decode`, `evict`, `resume`, `migrate_out`, `migrate_in`,
+    /// `finish`, `error`.
+    pub kind: &'static str,
+    /// Kind-specific qualifier (park reason, finish reason, …).
+    pub label: &'static str,
+    /// Engine replica index that recorded the event.
+    pub engine: usize,
+    /// Kind-specific count (chunk tokens, drafted, decode ticks…).
+    pub n: u64,
+    /// Second kind-specific count (spec accepted tokens).
+    pub m: u64,
+}
+
+impl TraceEvent {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at_ms", Json::num(self.at_ms)),
+            ("dur_ms", Json::num(self.dur_ms)),
+            ("kind", Json::str(self.kind)),
+            ("label", Json::str(self.label)),
+            ("engine", Json::num(self.engine as f64)),
+            ("n", Json::num(self.n as f64)),
+            ("m", Json::num(self.m as f64)),
+        ])
+    }
+}
+
+/// The span recorder for one request.  Preallocated at first event;
+/// cheap enough to keep for every in-flight request with tracing on.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub id: u64,
+    pub events: Vec<TraceEvent>,
+    /// Events discarded after `events` filled to capacity.
+    pub dropped: u64,
+    /// Batched-decode accumulator: start timestamp of the open run.
+    decode_start_ms: f64,
+    /// Ticks folded into the open run so far.
+    decode_ticks: u64,
+    decode_engine: usize,
+}
+
+impl RequestTrace {
+    pub fn new(id: u64) -> Self {
+        RequestTrace {
+            id,
+            events: Vec::with_capacity(EVENT_CAPACITY),
+            dropped: 0,
+            decode_start_ms: 0.0,
+            decode_ticks: 0,
+            decode_engine: 0,
+        }
+    }
+
+    fn append(&mut self, ev: TraceEvent) {
+        if self.events.len() < EVENT_CAPACITY {
+            self.events.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Record an instantaneous transition at "now".
+    pub fn push(&mut self, kind: &'static str, label: &'static str, engine: usize, n: u64, m: u64) {
+        self.flush_decode();
+        let at_ms = trace_now_ms();
+        self.append(TraceEvent { at_ms, dur_ms: 0.0, kind, label, engine, n, m });
+    }
+
+    /// Record a span that started `dur_ms` ago and just ended.
+    pub fn push_span(
+        &mut self,
+        kind: &'static str,
+        label: &'static str,
+        engine: usize,
+        dur_ms: f64,
+        n: u64,
+        m: u64,
+    ) {
+        self.flush_decode();
+        let at_ms = (trace_now_ms() - dur_ms).max(0.0);
+        self.append(TraceEvent { at_ms, dur_ms, kind, label, engine, n, m });
+    }
+
+    /// Account one batched decode tick.  Ticks accumulate into one
+    /// `decode` summary event per [`DECODE_SUMMARY_TICKS`] run; any
+    /// other event (or an engine change after migration) flushes the
+    /// open run first so ordering stays exact.
+    pub fn decode_tick(&mut self, engine: usize) {
+        if self.decode_ticks > 0 && self.decode_engine != engine {
+            self.flush_decode();
+        }
+        if self.decode_ticks == 0 {
+            self.decode_start_ms = trace_now_ms();
+            self.decode_engine = engine;
+        }
+        self.decode_ticks += 1;
+        if self.decode_ticks >= DECODE_SUMMARY_TICKS {
+            self.flush_decode();
+        }
+    }
+
+    /// Emit the open batched-decode summary, if any.
+    pub fn flush_decode(&mut self) {
+        if self.decode_ticks == 0 {
+            return;
+        }
+        let at_ms = self.decode_start_ms;
+        let dur_ms = (trace_now_ms() - at_ms).max(0.0);
+        let (n, engine) = (self.decode_ticks, self.decode_engine);
+        self.decode_ticks = 0;
+        self.append(TraceEvent { at_ms, dur_ms, kind: "decode", label: "", engine, n, m: 0 });
+    }
+
+    /// Clone with the pending decode run flushed — the view handed out
+    /// while the request is still in flight.
+    pub fn snapshot(&self) -> RequestTrace {
+        let mut t = self.clone();
+        t.flush_decode();
+        t
+    }
+
+    /// Fold several per-engine copies of the same request's trace into
+    /// one timeline ordered by timestamp (the pool-level view of a
+    /// migrated request).  Events are interleaved stably by `at_ms`.
+    pub fn merge(mut parts: Vec<RequestTrace>) -> Option<RequestTrace> {
+        let first = parts.pop()?;
+        let mut out = first.snapshot();
+        for p in parts {
+            let p = p.snapshot();
+            out.dropped += p.dropped;
+            out.events.extend(p.events);
+        }
+        out.events
+            .sort_by(|a, b| a.at_ms.partial_cmp(&b.at_ms).unwrap_or(std::cmp::Ordering::Equal));
+        Some(out)
+    }
+
+    /// JSON timeline (`GET /v1/traces/{id}`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("events", Json::Arr(self.events.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+}
+
+/// Chrome trace-event JSON (`?format=chrome`), loadable in
+/// `about://tracing` / Perfetto: spans become `ph:"X"` duration events
+/// and instantaneous transitions `ph:"i"` instants, with the engine
+/// replica as `pid` and the request id as `tid` — one row per request,
+/// grouped by replica.  Timestamps are microseconds per the format.
+pub fn to_chrome_json(traces: &[RequestTrace]) -> Json {
+    let mut events = Vec::new();
+    for t in traces {
+        for e in &t.events {
+            let name = if e.label.is_empty() {
+                e.kind.to_string()
+            } else {
+                format!("{}:{}", e.kind, e.label)
+            };
+            let args = Json::obj(vec![
+                ("n", Json::num(e.n as f64)),
+                ("m", Json::num(e.m as f64)),
+                ("request", Json::num(t.id as f64)),
+            ]);
+            let mut fields = vec![
+                ("name", Json::str(name)),
+                ("cat", Json::str(e.kind)),
+                ("ts", Json::num(e.at_ms * 1e3)),
+                ("pid", Json::num(e.engine as f64)),
+                ("tid", Json::num(t.id as f64)),
+                ("args", args),
+            ];
+            if e.dur_ms > 0.0 {
+                fields.push(("ph", Json::str("X")));
+                fields.push(("dur", Json::num(e.dur_ms * 1e3)));
+            } else {
+                fields.push(("ph", Json::str("i")));
+                fields.push(("s", Json::str("t")));
+            }
+            events.push(Json::obj(fields));
+        }
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+/// Bounded ring buffer of completed request traces — the scheduler's
+/// flight recorder.  Push beyond capacity evicts the oldest trace.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    buf: VecDeque<RequestTrace>,
+    cap: usize,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        FlightRecorder { buf: VecDeque::with_capacity(cap), cap }
+    }
+
+    pub fn push(&mut self, mut t: RequestTrace) {
+        t.flush_decode();
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn find(&self, id: u64) -> Option<&RequestTrace> {
+        // Newest first: a retried id (never minted twice in practice —
+        // the pool shares one counter) would resolve to its latest run.
+        self.buf.iter().rev().find(|t| t.id == id)
+    }
+
+    /// The most recent `n` completed traces, oldest first.
+    pub fn last(&self, n: usize) -> Vec<RequestTrace> {
+        let skip = self.buf.len().saturating_sub(n);
+        self.buf.iter().skip(skip).cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_is_monotonic_across_calls() {
+        let a = trace_now_ms();
+        let b = trace_now_ms();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn events_append_in_order_and_overflow_counts() {
+        let mut t = RequestTrace::new(7);
+        t.push("enqueue", "", 0, 0, 0);
+        t.push_span("prefill_chunk", "", 0, 1.0, 32, 0);
+        t.push("finish", "stop", 0, 5, 0);
+        assert_eq!(t.events.len(), 3);
+        assert_eq!(t.events[0].kind, "enqueue");
+        assert_eq!(t.events[2].label, "stop");
+        assert!(t.events.windows(2).all(|w| w[0].at_ms <= w[1].at_ms));
+        for _ in 0..(EVENT_CAPACITY * 2) {
+            t.push("spec_round", "", 0, 3, 1);
+        }
+        assert_eq!(t.events.len(), EVENT_CAPACITY);
+        assert!(t.dropped > 0);
+    }
+
+    #[test]
+    fn decode_ticks_batch_into_summaries() {
+        let mut t = RequestTrace::new(1);
+        for _ in 0..DECODE_SUMMARY_TICKS {
+            t.decode_tick(0);
+        }
+        assert_eq!(t.events.len(), 1);
+        assert_eq!(t.events[0].kind, "decode");
+        assert_eq!(t.events[0].n, DECODE_SUMMARY_TICKS);
+        // A partial run flushes when any other event lands.
+        t.decode_tick(0);
+        t.decode_tick(0);
+        t.push("evict", "", 0, 0, 0);
+        assert_eq!(t.events.len(), 3);
+        assert_eq!(t.events[1].kind, "decode");
+        assert_eq!(t.events[1].n, 2);
+        assert_eq!(t.events[2].kind, "evict");
+    }
+
+    #[test]
+    fn decode_run_splits_on_engine_change() {
+        let mut t = RequestTrace::new(1);
+        t.decode_tick(0);
+        t.decode_tick(0);
+        t.decode_tick(1);
+        t.flush_decode();
+        assert_eq!(t.events.len(), 2);
+        assert_eq!((t.events[0].engine, t.events[0].n), (0, 2));
+        assert_eq!((t.events[1].engine, t.events[1].n), (1, 1));
+    }
+
+    #[test]
+    fn merge_orders_across_engines() {
+        let mut a = RequestTrace::new(9);
+        a.push("enqueue", "", 0, 0, 0);
+        a.push("migrate_out", "", 0, 0, 0);
+        let mut b = RequestTrace::new(9);
+        b.push("migrate_in", "", 1, 0, 0);
+        b.push("finish", "stop", 1, 4, 0);
+        let m = RequestTrace::merge(vec![a, b]).unwrap();
+        assert_eq!(m.events.len(), 4);
+        assert!(m.events.windows(2).all(|w| w[0].at_ms <= w[1].at_ms));
+        let kinds: Vec<&str> = m.events.iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, ["enqueue", "migrate_out", "migrate_in", "finish"]);
+        assert!(RequestTrace::merge(vec![]).is_none());
+    }
+
+    #[test]
+    fn flight_recorder_ring_bound() {
+        let mut fr = FlightRecorder::new(3);
+        for id in 0..10u64 {
+            fr.push(RequestTrace::new(id));
+        }
+        assert_eq!(fr.len(), 3);
+        assert!(fr.find(6).is_none(), "evicted by the ring bound");
+        assert!(fr.find(9).is_some());
+        let last = fr.last(2);
+        assert_eq!(last.len(), 2);
+        assert_eq!((last[0].id, last[1].id), (8, 9));
+        assert_eq!(fr.last(100).len(), 3);
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let mut t = RequestTrace::new(3);
+        t.push("enqueue", "", 0, 0, 0);
+        t.push_span("prefill_chunk", "", 1, 2.0, 32, 0);
+        t.push("finish", "stop", 1, 0, 0);
+        let j = to_chrome_json(&[t]);
+        let evs = j.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(evs.len(), 3);
+        // The span renders as a duration event, instants as "i".
+        let phs: Vec<&str> =
+            evs.iter().map(|e| e.get("ph").and_then(|p| p.as_str()).unwrap()).collect();
+        assert_eq!(phs, ["i", "X", "i"]);
+        let span = &evs[1];
+        assert!(span.get("dur").and_then(|d| d.as_f64()).unwrap() > 0.0);
+        assert_eq!(span.get("pid").and_then(|p| p.as_f64()).unwrap(), 1.0);
+        assert_eq!(span.get("tid").and_then(|p| p.as_f64()).unwrap(), 3.0);
+        assert_eq!(
+            span.get("name").and_then(|n| n.as_str()).unwrap(),
+            "prefill_chunk"
+        );
+        assert_eq!(
+            evs[2].get("name").and_then(|n| n.as_str()).unwrap(),
+            "finish:stop"
+        );
+    }
+}

@@ -282,6 +282,77 @@ fn context_overflow_is_a_clean_400() {
 }
 
 #[test]
+fn health_readiness_json_shape() {
+    let srv = TestServer::start("qwen3-0.6b");
+    let (s, b) = srv.get("/health");
+    assert_eq!(s, 200, "{b}");
+    let v = parse(&b).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok");
+    assert!(v.get("queued").unwrap().as_usize().is_some());
+    assert!(v.get("active").unwrap().as_usize().is_some());
+    let engines = v.get("engines").unwrap().as_arr().unwrap();
+    assert_eq!(engines.len(), 1, "single-engine server reports one replica");
+    let e = &engines[0];
+    assert_eq!(e.get("alive").unwrap().as_bool(), Some(true));
+    assert!(e.get("capacity").unwrap().as_usize().unwrap() > 0);
+    // A live replica answers the stats round-trip, so KV headroom is in.
+    assert!(e.get("kv_pages_free").unwrap().as_usize().is_some(), "{b}");
+    assert!(e.get("kv_page_utilization").unwrap().as_f64().is_some(), "{b}");
+}
+
+#[test]
+fn trace_endpoints_roundtrip() {
+    let srv = TestServer::start("qwen3-0.6b");
+    let (s, b) = srv.post(
+        "/v1/completions",
+        r#"{"prompt":"trace me please","max_tokens":4}"#,
+    );
+    assert_eq!(s, 200, "{b}");
+
+    // The flight recorder holds the finished request.
+    let (s, dump) = srv.get("/debug/traces?last=8");
+    assert_eq!(s, 200, "{dump}");
+    let v = parse(&dump).unwrap();
+    assert!(v.get("count").unwrap().as_usize().unwrap() >= 1, "{dump}");
+    let traces = v.get("traces").unwrap().as_arr().unwrap();
+    let id = traces[0].get("id").unwrap().as_usize().unwrap();
+    let kinds: Vec<String> = traces[0]
+        .get("events")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|e| e.get("kind").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert!(kinds.first().map(String::as_str) == Some("enqueue"), "{kinds:?}");
+    assert!(kinds.last().map(String::as_str) == Some("finish"), "{kinds:?}");
+
+    // Per-request timeline, JSON and Chrome trace-event forms.
+    let (s, one) = srv.get(&format!("/v1/traces/{id}"));
+    assert_eq!(s, 200, "{one}");
+    let t = parse(&one).unwrap();
+    assert_eq!(t.get("id").unwrap().as_usize().unwrap(), id);
+    assert!(!t.get("events").unwrap().as_arr().unwrap().is_empty());
+
+    let (s, chrome) = srv.get(&format!("/v1/traces/{id}?format=chrome"));
+    assert_eq!(s, 200, "{chrome}");
+    let c = parse(&chrome).unwrap();
+    let evs = c.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!evs.is_empty());
+    assert!(evs.iter().all(|e| e.get("ph").is_some() && e.get("ts").is_some()), "{chrome}");
+
+    let (s, chrome_dump) = srv.get("/debug/traces?last=4&format=chrome");
+    assert_eq!(s, 200, "{chrome_dump}");
+    assert!(parse(&chrome_dump).unwrap().get("traceEvents").is_some());
+
+    // Misses fail cleanly: unknown id -> 404, non-integer id -> 400.
+    let (s, _) = srv.get("/v1/traces/999999999");
+    assert_eq!(s, 404);
+    let (s, _) = srv.get("/v1/traces/not-a-number");
+    assert_eq!(s, 400);
+}
+
+#[test]
 fn health_models_metrics() {
     let srv = TestServer::start("qwen3-0.6b");
     let (s, b) = srv.get("/health");

@@ -1,0 +1,205 @@
+//! Timing-attribution tests: `Timing` phase fields must be populated
+//! and internally consistent — ttft covers the request's own prefill
+//! compute, total covers everything, the compute phases (vision +
+//! prefill) never sum past total wall time — on fresh text, multimodal,
+//! evicted+resumed and migrated requests.  Over REAL artifacts
+//! (qwen3-0.6b / qwen3-vl-4b sims).  Requires `make artifacts`.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use umserve::bench_harness::synth_prompt;
+use umserve::cluster::{EnginePool, PoolConfig, RoutePolicy};
+use umserve::coordinator::scheduler::{MigrationUnit, Scheduler, SchedulerHandle};
+use umserve::coordinator::{EngineConfig, Event, GenRequest, Priority, PromptInput, Timing};
+use umserve::engine::sampler::SamplingParams;
+use umserve::multimodal::image::{generate_image, ImageSource};
+
+fn cfg(model: &str) -> EngineConfig {
+    EngineConfig {
+        model: model.into(),
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+        warmup: false,
+        ..Default::default()
+    }
+}
+
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Shared sanity bundle: every completed request must satisfy these
+/// regardless of how it travelled through the pipeline.
+fn assert_consistent(t: &Timing, what: &str) {
+    assert!(t.ttft_ms > 0.0, "{what}: ttft must be populated");
+    assert!(t.total_ms >= t.ttft_ms, "{what}: total {} < ttft {}", t.total_ms, t.ttft_ms);
+    assert!(t.queue_ms >= 0.0 && t.staged_ms >= 0.0, "{what}: negative queue/staged time");
+    // Vision and prefill are disjoint compute spans on the one engine
+    // thread — their sum cannot exceed total wall (small float slack).
+    assert!(
+        t.total_ms + 0.5 >= t.vision_ms + t.prefill_ms,
+        "{what}: compute phases ({} + {}) exceed total wall {}",
+        t.vision_ms,
+        t.prefill_ms,
+        t.total_ms
+    );
+}
+
+fn drain_timing(rx: &Receiver<Event>) -> Timing {
+    loop {
+        match rx.recv_timeout(TIMEOUT).expect("request timed out") {
+            Event::Done { timing, .. } => return timing,
+            Event::Error { message, .. } => panic!("request failed: {message}"),
+            _ => {}
+        }
+    }
+}
+
+fn run_one(model: &str, prompt: PromptInput, n_new: usize) -> Timing {
+    let mut s = Scheduler::new(cfg(model)).expect("scheduler");
+    let (tx, rx) = channel();
+    s.submit(GenRequest {
+        id: 1,
+        prompt,
+        params: SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) },
+        priority: Priority::Normal,
+        events: tx,
+        enqueued_at: Instant::now(),
+    });
+    s.run_until_idle();
+    drain_timing(&rx)
+}
+
+/// Fresh text request through staged chunked prefill.
+#[test]
+fn text_request_attributes_prefill_and_ttft() {
+    let t = run_one("qwen3-0.6b", PromptInput::Tokens(synth_prompt(7, 40, 2048)), 16);
+    assert_consistent(&t, "text");
+    assert!(t.prefill_ms > 0.0, "staged prefill must attribute chunk compute");
+    assert!(t.staged_ms > 0.0, "staged admission must attribute staging time");
+    assert_eq!(t.evictions, 0);
+    assert_eq!((t.vision_total, t.vision_ms), (0, 0.0), "text request saw a vision phase");
+    // A fresh request's own prefill compute happens strictly between
+    // enqueue and first token.
+    assert!(t.ttft_ms + 0.01 >= t.prefill_ms, "ttft {} < prefill {}", t.ttft_ms, t.prefill_ms);
+}
+
+/// Fresh multimodal request: cold encode + chunked embed prefill.
+#[test]
+fn mm_request_attributes_vision_phase() {
+    let img = ImageSource::Bytes(generate_image(11, 224).encode_raw());
+    let prompt = PromptInput::Multimodal { images: vec![img], text: "describe this".into() };
+    let t = run_one("qwen3-vl-4b", prompt, 8);
+    assert_consistent(&t, "mm");
+    assert_eq!((t.vision_total, t.vision_cached), (1, 0), "one cold image");
+    assert!(t.vision_ms > 0.0, "a cold encode must attribute vision compute");
+    assert!(t.prefill_ms > 0.0, "the embed prefill must attribute chunk compute");
+    assert!(t.ttft_ms + 0.01 >= t.vision_ms, "encoding precedes the first token");
+}
+
+/// Preemption path: the evicted+resumed sequence reports its eviction
+/// count and stays internally consistent (catch-up prefill lands after
+/// the first token, so it is bounded by total, not ttft).
+#[test]
+fn evicted_resumed_request_counts_evictions() {
+    let n_fill = 16; // qwen3-0.6b decode buckets end at 16
+    let h = Scheduler::spawn(cfg("qwen3-0.6b")).expect("spawn");
+    let mut rxs: Vec<Receiver<Event>> = (0..n_fill)
+        .map(|i| {
+            submit(
+                &h,
+                PromptInput::Tokens(synth_prompt(100 + i as u64, 8, 2048)),
+                48,
+                Priority::Batch,
+            )
+        })
+        .collect();
+    wait_for(&h, "flood to fill every decode slot", |e| {
+        e.load().active.load(Ordering::Relaxed) == n_fill
+    });
+    rxs.push(submit(
+        &h,
+        PromptInput::Tokens(synth_prompt(900, 8, 2048)),
+        48,
+        Priority::Interactive,
+    ));
+    let timings: Vec<Timing> = rxs.iter().map(drain_timing).collect();
+    h.shutdown();
+
+    let evicted: Vec<&Timing> = timings.iter().filter(|t| t.evictions >= 1).collect();
+    assert_eq!(evicted.len(), 1, "interactive arrival under full slots evicts exactly one");
+    for (i, t) in timings.iter().enumerate() {
+        assert_consistent(t, &format!("request {i}"));
+        assert!(t.prefill_ms > 0.0, "request {i}: prefill unattributed");
+    }
+}
+
+/// Migration path: a sequence checkpointed on engine 0 and finished on
+/// engine 1 still reports one consistent end-to-end Timing (the
+/// enqueue instant travels with the unit).
+#[test]
+fn migrated_request_timing_spans_the_hop() {
+    let n_fill = 16;
+    let pc = PoolConfig {
+        engines: 2,
+        route: RoutePolicy::RoundRobin,
+        migrate: false,
+        ..Default::default()
+    };
+    let mut pool = EnginePool::spawn(cfg("qwen3-0.6b"), pc).expect("pool");
+    let src = &pool.engines()[0];
+    let dst = &pool.engines()[1];
+    let mut rxs: Vec<Receiver<Event>> = (0..n_fill)
+        .map(|i| {
+            submit(
+                src,
+                PromptInput::Tokens(synth_prompt(100 + i as u64, 8, 2048)),
+                48,
+                Priority::Batch,
+            )
+        })
+        .collect();
+    wait_for(src, "flood to fill every decode slot", |e| {
+        e.load().active.load(Ordering::Relaxed) == n_fill
+    });
+    rxs.push(submit(
+        src,
+        PromptInput::Tokens(synth_prompt(900, 8, 2048)),
+        48,
+        Priority::Interactive,
+    ));
+    wait_for(src, "an eviction under preemption", |e| {
+        e.load().evicted.load(Ordering::Relaxed) >= 1
+            && e.load().queued.load(Ordering::Relaxed) == 0
+    });
+    let unit = src.shed().expect("shed").expect("expected a migratable unit");
+    assert!(matches!(unit, MigrationUnit::Decoding(_)));
+    assert!(dst.accept(unit).is_ok());
+    let timings: Vec<Timing> = rxs.iter().map(drain_timing).collect();
+
+    let migrated: Vec<&Timing> = timings.iter().filter(|t| t.evictions >= 1).collect();
+    assert_eq!(migrated.len(), 1, "the shed unit is the one evicted sequence");
+    let t = migrated[0];
+    assert_consistent(t, "migrated");
+    assert!(t.prefill_ms > 0.0, "migrated: catch-up prefill must attribute compute");
+    pool.shutdown();
+}
+
+fn submit(
+    engine: &SchedulerHandle,
+    prompt: PromptInput,
+    n_new: usize,
+    priority: Priority,
+) -> Receiver<Event> {
+    let (tx, rx) = channel();
+    let params = SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) };
+    engine.generate_with(prompt, params, priority, tx).expect("submit failed");
+    rx
+}
+
+fn wait_for(engine: &SchedulerHandle, what: &str, pred: impl Fn(&SchedulerHandle) -> bool) {
+    let t0 = Instant::now();
+    while !pred(engine) {
+        assert!(t0.elapsed() < TIMEOUT, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}

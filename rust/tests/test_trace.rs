@@ -1,0 +1,292 @@
+//! Integration tests for request-lifecycle tracing: tracing must never
+//! change greedy output (the span recorder is pure host-side
+//! bookkeeping), an evicted+resumed request yields one ordered
+//! timeline, a migrated request's trace spans both replicas through the
+//! pool's merge, and the flight recorder honours its ring bound — all
+//! over REAL artifacts (qwen3-0.6b sim).  Requires `make artifacts`.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use umserve::bench_harness::synth_prompt;
+use umserve::cluster::{EnginePool, PoolConfig, RoutePolicy};
+use umserve::coordinator::scheduler::{MigrationUnit, Scheduler, SchedulerHandle};
+use umserve::coordinator::{EngineConfig, Event, Priority, PromptInput, TraceConfig};
+use umserve::engine::sampler::SamplingParams;
+use umserve::substrate::trace::RequestTrace;
+
+fn cfg(trace_on: bool, buffer: usize) -> EngineConfig {
+    EngineConfig {
+        model: "qwen3-0.6b".into(),
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+        warmup: false,
+        trace: TraceConfig { enabled: trace_on, buffer },
+        ..Default::default()
+    }
+}
+
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn submit(
+    engine: &SchedulerHandle,
+    prompt: PromptInput,
+    n_new: usize,
+    priority: Priority,
+) -> (u64, Receiver<Event>) {
+    let (tx, rx) = channel();
+    let params = SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) };
+    let id = engine.generate_with(prompt, params, priority, tx).expect("submit failed");
+    (id, rx)
+}
+
+fn drain(rx: &Receiver<Event>) -> Vec<i32> {
+    let mut toks = Vec::new();
+    loop {
+        let ev = rx.recv_timeout(TIMEOUT).expect("request timed out");
+        match ev {
+            Event::Token { token, .. } if token >= 0 => toks.push(token),
+            Event::Done { .. } => return toks,
+            Event::Error { message, .. } => panic!("request failed: {message}"),
+            _ => {}
+        }
+    }
+}
+
+fn wait_for(engine: &SchedulerHandle, what: &str, pred: impl Fn(&SchedulerHandle) -> bool) {
+    let t0 = Instant::now();
+    while !pred(engine) {
+        assert!(t0.elapsed() < TIMEOUT, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Index of the first event of `kind`, or panic with the kinds seen.
+fn pos(t: &RequestTrace, kind: &str) -> usize {
+    t.events.iter().position(|e| e.kind == kind).unwrap_or_else(|| {
+        panic!(
+            "missing {kind} in trace {}: {:?}",
+            t.id,
+            t.events.iter().map(|e| e.kind).collect::<Vec<_>>()
+        )
+    })
+}
+
+/// Fill every decode slot with batch work, then land an interactive
+/// arrival (evicts one batch decoder under preemption).  Returns the
+/// request ids and streams, submission order.
+fn eviction_workload(h: &SchedulerHandle) -> (Vec<u64>, Vec<Vec<i32>>) {
+    let n_fill = 16; // qwen3-0.6b decode buckets end at 16
+    let gen = 48;
+    let mut subs: Vec<(u64, Receiver<Event>)> = (0..n_fill)
+        .map(|i| {
+            submit(
+                h,
+                PromptInput::Tokens(synth_prompt(100 + i as u64, 8, 2048)),
+                gen,
+                Priority::Batch,
+            )
+        })
+        .collect();
+    wait_for(h, "flood to fill every decode slot", |e| {
+        e.load().active.load(Ordering::Relaxed) == n_fill
+    });
+    subs.push(submit(
+        h,
+        PromptInput::Tokens(synth_prompt(900, 8, 2048)),
+        gen,
+        Priority::Interactive,
+    ));
+    let ids = subs.iter().map(|(id, _)| *id).collect();
+    let streams = subs.iter().map(|(_, rx)| drain(rx)).collect();
+    (ids, streams)
+}
+
+/// The byte-identity contract: the eviction workload — admission,
+/// staged prefill, preemption, evict/resume, speculation — produces
+/// identical greedy streams with tracing on and off.
+#[test]
+fn tracing_does_not_change_greedy_output() {
+    let h_on = Scheduler::spawn(cfg(true, 256)).expect("spawn traced");
+    let (_, with_trace) = eviction_workload(&h_on);
+    h_on.shutdown();
+
+    let h_off = Scheduler::spawn(cfg(false, 256)).expect("spawn untraced");
+    let (_, without_trace) = eviction_workload(&h_off);
+    h_off.shutdown();
+
+    assert_eq!(with_trace, without_trace, "tracing changed a greedy token stream");
+}
+
+/// An evicted+resumed request yields one complete timeline: enqueue ->
+/// admit -> first_token -> evict -> resume -> finish, in order, with
+/// timestamps sorted and decode ticks summarised in between.
+#[test]
+fn evicted_request_timeline_is_complete_and_ordered() {
+    let h = Scheduler::spawn(cfg(true, 256)).expect("spawn");
+    let (ids, _) = eviction_workload(&h);
+
+    // Exactly one batch decoder was evicted; find its trace.
+    let traces: Vec<RequestTrace> = ids
+        .iter()
+        .filter_map(|&id| h.trace(id).expect("trace query").filter(|t| t.id == id))
+        .collect();
+    assert_eq!(traces.len(), ids.len(), "every finished request must have a trace");
+    let evicted: Vec<&RequestTrace> = traces
+        .iter()
+        .filter(|t| t.events.iter().any(|e| e.kind == "evict"))
+        .collect();
+    assert_eq!(evicted.len(), 1, "interactive arrival under full slots evicts exactly one");
+    let t = evicted[0];
+
+    let order = [
+        pos(t, "enqueue"),
+        pos(t, "admit"),
+        pos(t, "first_token"),
+        pos(t, "evict"),
+        pos(t, "resume"),
+        pos(t, "finish"),
+    ];
+    assert!(order.windows(2).all(|w| w[0] < w[1]), "lifecycle out of order: {order:?}");
+    assert!(
+        t.events.windows(2).all(|w| w[0].at_ms <= w[1].at_ms),
+        "timeline timestamps must be sorted"
+    );
+    assert!(
+        t.events.iter().any(|e| e.kind == "decode" && e.n > 0),
+        "a decoding request must record batched decode summaries"
+    );
+    assert!(
+        t.events.iter().any(|e| e.kind == "prefill_chunk" && e.n > 0),
+        "staged admission must record prefill chunk spans"
+    );
+    // The finish event carries the emitted-token count.
+    let fin = &t.events[pos(t, "finish")];
+    assert_eq!(fin.n, 48, "finish event must carry the emitted count");
+
+    // The flight recorder serves all finished requests too.
+    let dump = h.traces_last(64).expect("dump");
+    assert_eq!(dump.len(), ids.len());
+    h.shutdown();
+}
+
+/// A migrated request's trace rides the MigrationUnit: the pool merge
+/// yields ONE timeline spanning both replicas, with the source-side
+/// events tagged engine 0 and the target-side events engine 1.
+#[test]
+fn migrated_request_has_one_cross_replica_timeline() {
+    let n_fill = 16;
+    let gen = 48;
+    let pc = PoolConfig {
+        engines: 2,
+        route: RoutePolicy::RoundRobin,
+        migrate: false, // shed/accept driven by hand
+        ..Default::default()
+    };
+    let mut pool = EnginePool::spawn(cfg(true, 256), pc).expect("pool");
+    let src = &pool.engines()[0];
+    let dst = &pool.engines()[1];
+
+    let mut subs: Vec<(u64, Receiver<Event>)> = (0..n_fill)
+        .map(|i| {
+            submit(
+                src,
+                PromptInput::Tokens(synth_prompt(100 + i as u64, 8, 2048)),
+                gen,
+                Priority::Batch,
+            )
+        })
+        .collect();
+    wait_for(src, "flood to fill every decode slot", |e| {
+        e.load().active.load(Ordering::Relaxed) == n_fill
+    });
+    subs.push(submit(
+        src,
+        PromptInput::Tokens(synth_prompt(900, 8, 2048)),
+        gen,
+        Priority::Interactive,
+    ));
+    wait_for(src, "an eviction under preemption", |e| {
+        e.load().evicted.load(Ordering::Relaxed) >= 1
+            && e.load().queued.load(Ordering::Relaxed) == 0
+    });
+
+    let unit = src.shed().expect("shed").expect("expected a migratable unit");
+    let mid = match &unit {
+        MigrationUnit::Decoding(d) => d.id,
+        _ => panic!("with empty intake/staging the checkpointed sequence must shed"),
+    };
+    assert!(dst.accept(unit).is_ok(), "target engine refused the unit");
+    for (_, rx) in &subs {
+        let _ = drain(rx);
+    }
+
+    let t = pool
+        .handle()
+        .trace(mid)
+        .expect("pool trace query")
+        .expect("migrated request must have a merged trace");
+    assert_eq!(t.id, mid);
+    let order = [
+        pos(&t, "enqueue"),
+        pos(&t, "admit"),
+        pos(&t, "evict"),
+        pos(&t, "migrate_out"),
+        pos(&t, "migrate_in"),
+        pos(&t, "resume"),
+        pos(&t, "finish"),
+    ];
+    assert!(order.windows(2).all(|w| w[0] < w[1]), "migration lifecycle out of order: {order:?}");
+    assert!(t.events.windows(2).all(|w| w[0].at_ms <= w[1].at_ms));
+    assert_eq!(t.events[pos(&t, "migrate_out")].engine, 0, "shed happens on the source");
+    assert_eq!(t.events[pos(&t, "migrate_in")].engine, 1, "adoption happens on the target");
+    assert_eq!(t.events[pos(&t, "finish")].engine, 1, "the target finishes the request");
+    // Decode summaries exist on both sides of the hop.
+    let decode_engines: Vec<usize> =
+        t.events.iter().filter(|e| e.kind == "decode").map(|e| e.engine).collect();
+    assert!(
+        decode_engines.contains(&0) && decode_engines.contains(&1),
+        "decode summaries must appear on both replicas: {decode_engines:?}"
+    );
+    pool.shutdown();
+}
+
+/// `--trace-buffer N` bounds the flight recorder: old traces fall off
+/// the ring and stop resolving by id.
+#[test]
+fn flight_recorder_honours_ring_bound() {
+    let h = Scheduler::spawn(cfg(true, 2)).expect("spawn");
+    let mut ids = Vec::new();
+    for i in 0..4u64 {
+        let (id, rx) = submit(
+            &h,
+            PromptInput::Tokens(synth_prompt(500 + i, 8, 2048)),
+            4,
+            Priority::Normal,
+        );
+        let _ = drain(&rx);
+        ids.push(id);
+    }
+    let dump = h.traces_last(16).expect("dump");
+    assert_eq!(dump.len(), 2, "ring bound of 2 must hold");
+    assert_eq!(
+        dump.iter().map(|t| t.id).collect::<Vec<_>>(),
+        vec![ids[2], ids[3]],
+        "the two newest traces survive, oldest first"
+    );
+    assert!(h.trace(ids[0]).expect("query").is_none(), "evicted from the ring");
+    assert!(h.trace(ids[3]).expect("query").is_some());
+    h.shutdown();
+}
+
+/// `--trace off` records nothing: no per-request buffers, an empty
+/// flight recorder, and id lookups miss.
+#[test]
+fn trace_off_records_nothing() {
+    let h = Scheduler::spawn(cfg(false, 256)).expect("spawn");
+    let (id, rx) = submit(&h, PromptInput::Tokens(synth_prompt(1, 8, 2048)), 4, Priority::Normal);
+    let _ = drain(&rx);
+    assert!(h.trace(id).expect("query").is_none());
+    assert!(h.traces_last(16).expect("dump").is_empty());
+    h.shutdown();
+}
