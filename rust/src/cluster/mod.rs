@@ -207,6 +207,19 @@ impl EnginePool {
             e.shutdown();
         }
     }
+
+    /// Graceful drain: stop the rebalancer, then ask every replica to
+    /// finish its in-flight work (bounded by the engine-side drain
+    /// deadline) before exiting.  Joined.
+    pub fn shutdown_drain(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.rebalancer.take() {
+            let _ = j.join();
+        }
+        for e in self.engines.iter() {
+            e.shutdown_drain();
+        }
+    }
 }
 
 impl Drop for EnginePool {
@@ -215,12 +228,27 @@ impl Drop for EnginePool {
     }
 }
 
-/// Cross-engine rebalancer: when the busiest replica's backlog passes
-/// `threshold` and another replica has an idle slot with an empty
-/// queue, move one unit of waiting work.  Units are shed cheapest-
-/// first (raw intake, then unstarted staged jobs, then checkpointed
-/// evictees — see `Scheduler::shed_one`), so steady state migrates
-/// requests that lose nothing by moving.
+/// A replica is routable while its thread runs AND it has not cleared
+/// its published alive flag (a dying replica clears the flag before
+/// its thread exits, so the flag usually leads the thread probe).
+fn replica_alive(e: &SchedulerHandle) -> bool {
+    e.load().alive.load(Ordering::Relaxed) && e.is_alive()
+}
+
+/// Cross-engine rebalancer + replica supervisor: when the busiest
+/// replica's backlog passes `threshold` and another replica has an
+/// idle slot with an empty queue, move one unit of waiting work.
+/// Units are shed cheapest-first (raw intake, then unstarted staged
+/// jobs, then checkpointed evictees — see `Scheduler::shed_one`), so
+/// steady state migrates requests that lose nothing by moving.
+///
+/// Supervision rides the same tick: each pass health-checks every
+/// replica, and on a death transition drains the dead replica's
+/// orphan depot onto surviving replicas (alive-aware routing in
+/// `PoolHandle` stops NEW placements independently).  Because the
+/// supervisor lives here, it runs only with `migrate` on and more
+/// than one replica — exactly the configurations where failover has
+/// somewhere to fail over to.
 fn rebalance_loop(
     engines: &[SchedulerHandle],
     router: &RouterState,
@@ -228,11 +256,33 @@ fn rebalance_loop(
     threshold: usize,
     interval: Duration,
 ) {
+    let mut was_alive = vec![true; engines.len()];
     while !stop.load(Ordering::Relaxed) {
         std::thread::sleep(interval);
+        // Supervision pass: detect death transitions, redistribute the
+        // dead replica's checkpointed work.
+        for (i, e) in engines.iter().enumerate() {
+            let alive = replica_alive(e);
+            if was_alive[i] && !alive {
+                was_alive[i] = false;
+                router
+                    .metrics
+                    .lock()
+                    .expect("router metrics lock")
+                    .inc("replica_deaths", 1);
+                let orphans: Vec<MigrationUnit> = match e.load().orphans.lock() {
+                    Ok(mut depot) => std::mem::take(&mut *depot),
+                    Err(_) => Vec::new(),
+                };
+                for unit in orphans {
+                    redistribute_orphan(engines, router, i, unit);
+                }
+            }
+        }
         let Some((src, depth)) = engines
             .iter()
             .enumerate()
+            .filter(|&(i, _)| was_alive[i])
             .map(|(i, e)| (i, e.load().backlog()))
             .max_by_key(|&(_, d)| d)
         else {
@@ -244,7 +294,7 @@ fn rebalance_loop(
         let Some(dst) = engines
             .iter()
             .enumerate()
-            .filter(|&(i, e)| i != src && e.load().has_headroom())
+            .filter(|&(i, e)| i != src && was_alive[i] && e.load().has_headroom())
             .min_by_key(|&(_, e)| e.load().total())
             .map(|(i, _)| i)
         else {
@@ -259,20 +309,52 @@ fn rebalance_loop(
                 // The destination died between headroom check and
                 // accept: hand the unit straight back to its source —
                 // it owns the client's event channel and must not be
-                // dropped.  If the source is gone too the pool is
-                // shutting down; fail the request visibly.
+                // dropped.  If the source is gone too, any survivor
+                // will do; failing the request visibly is the last
+                // resort.
                 Err(unit) => {
                     if let Err(u) = engines[src].accept(unit) {
-                        fail_unit(u);
-                        return;
+                        redistribute_orphan(engines, router, src, u);
                     }
                 }
             },
             Ok(None) => {}
-            // A closed channel means the pool is shutting down.
-            Err(_) => return,
+            // The source's channel closed under us (it died between
+            // the health check and the shed): the next supervision
+            // pass will pick the death up.
+            Err(_) => continue,
         }
     }
+}
+
+/// Place one orphaned migration unit on a surviving replica, least
+/// loaded first; a unit no survivor accepts is failed visibly on its
+/// own event channel (never silently dropped).
+fn redistribute_orphan(
+    engines: &[SchedulerHandle],
+    router: &RouterState,
+    dead: usize,
+    unit: MigrationUnit,
+) {
+    let mut order: Vec<usize> = (0..engines.len())
+        .filter(|&j| j != dead && replica_alive(&engines[j]))
+        .collect();
+    order.sort_by_key(|&j| engines[j].load().total());
+    let mut unit = unit;
+    for j in order {
+        match engines[j].accept(unit) {
+            Ok(()) => {
+                router
+                    .metrics
+                    .lock()
+                    .expect("router metrics lock")
+                    .inc("replica_orphans_redistributed", 1);
+                return;
+            }
+            Err(u) => unit = u,
+        }
+    }
+    fail_unit(unit);
 }
 
 /// Last resort for a migration unit no engine would take: surface an
@@ -413,7 +495,54 @@ impl PoolHandle {
         events: Sender<Event>,
     ) -> Result<u64> {
         let idx = self.select(&prompt);
+        // Same optimistic bump as `select` does for `queued`, per
+        // class: the admission caps read these, and a burst must not
+        // slip past the gate before any engine thread publishes.
+        self.engines[idx].load().queued_by_class[priority.rank()]
+            .fetch_add(1, Ordering::Relaxed);
         self.engines[idx].generate_with(prompt, params, priority, events)
+    }
+
+    /// Broadcast a cancel to every replica: ids are pool-unique and
+    /// unknown ids are a no-op, so the router does not need to track
+    /// which replica (or migration target) currently holds the
+    /// request.
+    pub fn cancel(&self, id: u64) {
+        for e in self.engines.iter() {
+            e.cancel(id);
+        }
+    }
+
+    /// Record one shed (429) decision in the router registry:
+    /// `requests_shed_total{class=…}`.
+    pub fn note_shed(&self, class: Priority) {
+        if let Ok(mut m) = self.router.metrics.lock() {
+            m.inc_labeled("requests_shed_total", "class", class.as_str(), 1);
+        }
+    }
+
+    /// Pool-wide queue depth at-or-above a class rank: the cumulative
+    /// count the admission caps compare against (rank 2 counts
+    /// everything queued, so batch saturates — and sheds — first).
+    pub fn queued_up_to_rank(&self, rank: usize) -> usize {
+        self.engines
+            .iter()
+            .map(|e| {
+                e.load().queued_by_class[..=rank.min(2)]
+                    .iter()
+                    .map(|c| c.load(Ordering::Relaxed))
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// Requests completed across the pool since start (the server's
+    /// Retry-After estimate derives recent throughput from deltas).
+    pub fn completed_total(&self) -> u64 {
+        self.engines
+            .iter()
+            .map(|e| e.load().completed.load(Ordering::Relaxed))
+            .sum()
     }
 
     /// Pick a replica for `prompt` per the routing policy.
@@ -434,12 +563,32 @@ impl PoolHandle {
             return 0;
         }
         match self.router.policy {
-            RoutePolicy::RoundRobin => self.router.rr.fetch_add(1, Ordering::Relaxed) % n,
+            RoutePolicy::RoundRobin => {
+                // Advance past dead replicas (bounded: n tries, then
+                // take what we got — an all-dead pool has no good
+                // answer and the send will surface the error).
+                let mut idx = self.router.rr.fetch_add(1, Ordering::Relaxed) % n;
+                for _ in 0..n {
+                    if replica_alive(&self.engines[idx]) {
+                        break;
+                    }
+                    idx = self.router.rr.fetch_add(1, Ordering::Relaxed) % n;
+                }
+                idx
+            }
             RoutePolicy::LeastLoaded => self.least_loaded(),
             RoutePolicy::CacheAffinity => match self.affinity_key_cached(prompt) {
                 Some(key) => {
                     let mut map = self.router.affinity.lock().expect("affinity lock");
                     if let Some(&idx) = map.get(&key) {
+                        if !replica_alive(&self.engines[idx]) {
+                            // Sticky target died: re-pin to a survivor
+                            // so the key's future requests follow it.
+                            let alt = self.least_loaded();
+                            map.insert(key, alt, 1);
+                            drop(map);
+                            return alt;
+                        }
                         drop(map);
                         self.router
                             .metrics
@@ -468,6 +617,7 @@ impl PoolHandle {
         self.engines
             .iter()
             .enumerate()
+            .filter(|(_, e)| replica_alive(e))
             .min_by_key(|(_, e)| e.load().total())
             .map(|(i, _)| i)
             .unwrap_or(0)
@@ -535,7 +685,15 @@ impl PoolHandle {
     pub fn stats(&self) -> Result<PoolStatsSnapshot> {
         let mut engines = Vec::with_capacity(self.engines.len());
         for e in self.engines.iter() {
-            engines.push(e.stats()?);
+            // A dead replica cannot answer; the aggregate view must
+            // keep working through replica failure (its counters drop
+            // out of the aggregation until the process restarts).
+            if let Ok(s) = e.stats() {
+                engines.push(s);
+            }
+        }
+        if engines.is_empty() {
+            return Err(anyhow!("no live replica answered stats"));
         }
         let router = self
             .router
@@ -552,6 +710,15 @@ impl PoolHandle {
     pub fn shutdown(&self) {
         for e in self.engines.iter() {
             e.shutdown();
+        }
+    }
+
+    /// Graceful drain of every replica (joined).  Prefer
+    /// [`EnginePool::shutdown_drain`] when the pool object is still
+    /// owned — it also stops the rebalancer.
+    pub fn shutdown_drain(&self) {
+        for e in self.engines.iter() {
+            e.shutdown_drain();
         }
     }
 }

@@ -10,10 +10,12 @@
 pub mod scheduler;
 
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::engine::sampler::SamplingParams;
 use crate::multimodal::ImageSource;
+use crate::substrate::faults::FaultPlan;
 
 /// Scheduling class of a request.  Lower rank = scheduled first: the
 /// admission queue orders staged prefills by (class, arrival), a
@@ -93,6 +95,10 @@ pub enum FinishReason {
     Length,
     /// Hit the per-sequence KV position limit (s_max).
     KvFull,
+    /// Cancelled by the client (disconnect, explicit cancel) or by a
+    /// deadline.  Terminal like the others: usage/timing cover the
+    /// partial generation.
+    Cancelled,
 }
 
 impl FinishReason {
@@ -101,6 +107,7 @@ impl FinishReason {
             FinishReason::Stop => "stop",
             FinishReason::Length => "length",
             FinishReason::KvFull => "length",
+            FinishReason::Cancelled => "cancelled",
         }
     }
 }
@@ -191,6 +198,12 @@ pub struct SchedConfig {
     /// batch job behind a steady interactive flood is admitted within
     /// `2 * aging_ticks` ticks.  0 disables aging.
     pub aging_ticks: u64,
+    /// Server-side default deadline applied to requests that don't
+    /// carry their own `timeout_ms`: a request older than this (from
+    /// enqueue, across every lifecycle stage — queueing, staging,
+    /// eviction parks, decode) is cancelled with a `cancelled` finish.
+    /// 0 disables the default deadline.
+    pub default_timeout_ms: u64,
 }
 
 impl Default for SchedConfig {
@@ -202,6 +215,7 @@ impl Default for SchedConfig {
             preemption: true,
             default_priority: Priority::Normal,
             aging_ticks: 64,
+            default_timeout_ms: 0,
         }
     }
 }
@@ -359,6 +373,10 @@ pub struct EngineConfig {
     pub kv: KvConfig,
     pub spec: SpecConfig,
     pub trace: TraceConfig,
+    /// Deterministic fault-injection schedule (chaos tests/benches;
+    /// hidden `--fault-plan` CLI).  Shared across replicas so ordinal
+    /// faults fire exactly once pool-wide.  None in production.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for EngineConfig {
@@ -372,6 +390,7 @@ impl Default for EngineConfig {
             kv: KvConfig::default(),
             spec: SpecConfig::default(),
             trace: TraceConfig::default(),
+            faults: None,
         }
     }
 }

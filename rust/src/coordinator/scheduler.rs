@@ -67,9 +67,9 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
@@ -84,6 +84,7 @@ use crate::engine::{PagePoolSnapshot, TextEngine};
 use crate::multimodal::image::DecodedImage;
 use crate::multimodal::vision::{patchify, snap_resolution, temporal_pool};
 use crate::runtime::{ArtifactStore, ModelRuntime, PageSet};
+use crate::substrate::faults::FaultPlan;
 use crate::substrate::hash::ContentHash;
 use crate::substrate::metrics::MetricsRegistry;
 use crate::substrate::trace::{FlightRecorder, RequestTrace};
@@ -109,13 +110,22 @@ pub enum Command {
     Trace(u64, Sender<Option<RequestTrace>>),
     /// Dump the most recent N completed traces from the flight recorder.
     TraceDump(usize, Sender<Vec<RequestTrace>>),
-    Shutdown,
+    /// Cancel one request, wherever it is in its lifecycle (client
+    /// disconnect, explicit abort).  Unknown ids are a no-op — the
+    /// request may have finished, or live on another pool replica (the
+    /// router broadcasts cancels).
+    Cancel(u64),
+    /// Stop serving.  With `drain` the engine stops admitting, finishes
+    /// (or deadline-caps) everything in flight, then exits; without it
+    /// the thread exits now and every held request gets a terminal
+    /// `Event::Error` — clients never hang on a silently dropped
+    /// channel.
+    Shutdown { drain: bool },
 }
 
 /// Lock-free load summary a scheduler publishes every tick; the
 /// cluster router reads it for least-loaded placement and shed
 /// decisions without a Stats round-trip through the engine thread.
-#[derive(Debug, Default)]
 pub struct EngineLoad {
     /// Requests not yet holding a decode slot: raw intake + staged
     /// prefills + mm requests waiting on vision encodes.
@@ -126,6 +136,49 @@ pub struct EngineLoad {
     pub evicted: AtomicUsize,
     /// Decode-slot capacity (stored once at engine start).
     pub capacity: AtomicUsize,
+    /// `queued` split by scheduling class (indexed by
+    /// [`Priority::rank`]) — the admission-cap signal the server's
+    /// load-shedding gate reads.
+    pub queued_by_class: [AtomicUsize; 3],
+    /// Requests completed over the engine's lifetime (the server
+    /// derives recent throughput — and Retry-After — from deltas).
+    pub completed: AtomicU64,
+    /// Cleared when the engine thread exits (controlled death or
+    /// drain); the router stops placing work here.  The supervisor
+    /// combines this with the thread-liveness probe so real panics are
+    /// detected too.
+    pub alive: AtomicBool,
+    /// Work a dying replica checkpointed on its way out; the pool
+    /// supervisor drains this onto surviving replicas.
+    pub orphans: Mutex<Vec<MigrationUnit>>,
+}
+
+impl Default for EngineLoad {
+    fn default() -> Self {
+        EngineLoad {
+            queued: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            evicted: AtomicUsize::new(0),
+            capacity: AtomicUsize::new(0),
+            queued_by_class: Default::default(),
+            completed: AtomicU64::new(0),
+            alive: AtomicBool::new(true),
+            orphans: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl std::fmt::Debug for EngineLoad {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EngineLoad")
+            .field("queued", &self.queued)
+            .field("active", &self.active)
+            .field("evicted", &self.evicted)
+            .field("capacity", &self.capacity)
+            .field("completed", &self.completed)
+            .field("alive", &self.alive)
+            .finish_non_exhaustive()
+    }
 }
 
 impl EngineLoad {
@@ -244,6 +297,10 @@ pub struct StatsSnapshot {
     pub text_cache_pinned_pages: usize,
     /// Pool pages pinned by mm-KV-cache checkpoints.
     pub mm_cache_pinned_pages: usize,
+    /// Non-panicking page-arena invariant sweep (refcount/free-list
+    /// consistency), run at snapshot time.  The chaos tests assert this
+    /// stays true through faults, cancellations and quarantines.
+    pub kv_invariants_ok: bool,
 }
 
 struct ActiveReq {
@@ -535,7 +592,22 @@ pub struct Scheduler {
     recorder: FlightRecorder,
     /// Pool replica index stamped on every span (0 single-engine).
     engine_index: usize,
+    /// Dispatch-failure strike counts for sequences under suspicion.
+    /// A successful dispatch containing a suspect exonerates it; a
+    /// suspect whose batch keeps failing accumulates strikes and is
+    /// failed alone at [`QUARANTINE_STRIKES`].
+    suspects: HashMap<u64, u32>,
+    /// Graceful-drain mode: stop admitting, finish what's in flight,
+    /// exit when idle (or when `drain_deadline` passes).
+    draining: bool,
+    drain_deadline: Option<Instant>,
+    /// Seeded fault-injection plan (`--fault-plan`, chaos tests).
+    faults: Option<Arc<FaultPlan>>,
 }
+
+/// Failed dispatches as prime suspect before a sequence is failed
+/// outright instead of re-quarantined.
+const QUARANTINE_STRIKES: u32 = 2;
 
 impl Scheduler {
     /// Build in the current thread (PJRT objects are thread-bound).
@@ -584,7 +656,11 @@ impl Scheduler {
         );
         // Cache entries are charged by the pool pages they pin.
         let cache_page = rt.info.kv_page_size;
-        let engine = TextEngine::new_paged_capped(rt, cfg.kv.pool_page_cap)?;
+        let mut engine = TextEngine::new_paged_capped(rt, cfg.kv.pool_page_cap)?;
+        if let Some(f) = &cfg.faults {
+            engine.set_fault_plan(f.clone());
+        }
+        let faults = cfg.faults.clone();
         let mut s = Scheduler {
             engine,
             tokenizer,
@@ -609,6 +685,10 @@ impl Scheduler {
             traces: HashMap::new(),
             recorder: FlightRecorder::new(cfg.trace.buffer),
             engine_index: 0,
+            suspects: HashMap::new(),
+            draining: false,
+            drain_deadline: None,
+            faults,
         };
         s.mm_cache.enable_emb = cfg.kv.mm_emb_cache_bytes > 0;
         s.mm_cache.enable_kv = cfg.kv.mm_kv_cache_bytes > 0;
@@ -683,19 +763,35 @@ impl Scheduler {
 
     // ------------------------------------------------------------ loop
 
-    /// Serve until Shutdown.
+    /// Serve until Shutdown.  Every exit path runs [`Self::abort_all`]:
+    /// whatever the engine still holds gets a terminal event before the
+    /// thread (and every per-request channel) is dropped.
     pub fn run(&mut self, rx: Receiver<Command>) {
-        loop {
+        'serve: loop {
+            // Injected replica death: checkpoint what can move, error
+            // the rest, park the orphans for the pool supervisor.
+            if let Some(f) = self.faults.clone() {
+                if f.replica_dies(self.engine_index, self.tick_count) {
+                    self.die(&rx);
+                    return;
+                }
+            }
+            if self.draining
+                && (self.is_idle()
+                    || self.drain_deadline.is_some_and(|d| Instant::now() >= d))
+            {
+                break 'serve;
+            }
             // Blocking wait only when idle; otherwise drain non-blocking.
             if self.is_idle() {
                 match rx.recv_timeout(Duration::from_millis(200)) {
                     Ok(c) => {
                         if self.handle_command(c) {
-                            return;
+                            break 'serve;
                         }
                     }
                     Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
-                    Err(_) => return,
+                    Err(_) => break 'serve,
                 }
             }
             // Drain EVERY waiting command: generation requests land in
@@ -708,7 +804,7 @@ impl Scheduler {
                 match rx.try_recv() {
                     Ok(c) => {
                         if self.handle_command(c) {
-                            return;
+                            break 'serve;
                         }
                     }
                     Err(_) => break,
@@ -717,6 +813,8 @@ impl Scheduler {
             self.admit_from_intake();
             self.tick();
         }
+        self.abort_all("shutting down");
+        self.load.alive.store(false, Ordering::Relaxed);
     }
 
     fn is_idle(&self) -> bool {
@@ -732,10 +830,21 @@ impl Scheduler {
     fn handle_command(&mut self, c: Command) -> bool {
         match c {
             Command::Gen(r) => {
+                if self.draining {
+                    // Refusal, not silence: a late arrival during drain
+                    // gets a terminal error instead of a dropped channel.
+                    self.metrics.inc("requests_failed", 1);
+                    let _ = r.events.send(Event::Error {
+                        id: r.id,
+                        message: "shutting down".into(),
+                    });
+                    return false;
+                }
                 self.trace_ev(r.id, "enqueue", "", 0, 0);
                 self.intake.push_back(r);
                 self.publish_load();
             }
+            Command::Cancel(id) => self.cancel_request(id, "cancel"),
             Command::Stats(tx) => {
                 let _ = tx.send(self.snapshot());
             }
@@ -759,7 +868,11 @@ impl Scheduler {
                 let skip = all.len().saturating_sub(n);
                 let _ = tx.send(all.split_off(skip));
             }
-            Command::Shutdown => return true,
+            Command::Shutdown { drain: false } => return true,
+            Command::Shutdown { drain: true } => {
+                self.draining = true;
+                self.drain_deadline = Some(Instant::now() + Duration::from_secs(30));
+            }
         }
         false
     }
@@ -949,6 +1062,7 @@ impl Scheduler {
             kv_pool: self.engine.page_pool(),
             text_cache_pinned_pages: self.text_cache.pinned_pages(),
             mm_cache_pinned_pages: self.mm_cache.pinned_pages(),
+            kv_invariants_ok: self.engine.page_arena().borrow().invariants_ok(),
         }
     }
 
@@ -958,6 +1072,7 @@ impl Scheduler {
     /// decode step.
     pub fn tick(&mut self) {
         self.tick_count += 1;
+        self.enforce_deadlines();
         self.try_resume_evicted();
         self.advance_visions();
         self.advance_prefills();
@@ -989,6 +1104,27 @@ impl Scheduler {
             .store(self.intake.len() + self.staged_requests(), Ordering::Relaxed);
         self.load.active.store(self.active.len(), Ordering::Relaxed);
         self.load.evicted.store(self.evicted.len(), Ordering::Relaxed);
+        // Class split of `queued` for the admission caps: raw intake,
+        // staged prefills (+ coalesced followers), and parked mm
+        // pendings (overlap pendings ride their linked job).
+        let mut by_class = [0usize; 3];
+        for r in &self.intake {
+            by_class[r.priority.rank()] += 1;
+        }
+        for j in &self.pending {
+            by_class[j.priority.rank()] += 1;
+            for f in &j.followers {
+                by_class[f.priority.rank()] += 1;
+            }
+        }
+        for p in &self.mm_waiting {
+            if p.job_id.is_none() {
+                by_class[p.priority.rank()] += 1;
+            }
+        }
+        for (i, n) in by_class.iter().enumerate() {
+            self.load.queued_by_class[i].store(*n, Ordering::Relaxed);
+        }
     }
 
     // -------------------------------------------------------- tracing
@@ -1588,11 +1724,19 @@ impl Scheduler {
     /// allow.  Evicted sequences age like staged jobs, so a batch
     /// evictee eventually outranks a steady interactive arrival stream.
     fn try_resume_evicted(&mut self) {
+        // Quarantined sequences (dispatch-failure suspects) re-admit at
+        // most one per tick: each rejoins an already-proven batch, so
+        // the first failure after a rejoin incriminates exactly that
+        // member instead of smearing strikes across innocents.
+        let mut suspect_resumed = false;
         while !self.evicted.is_empty() && self.free_slots() > 0 {
             let now = self.tick_count;
             let aging = self.cfg.sched.aging_ticks;
             let psched = self.cfg.sched.priority_sched;
-            let idx = (0..self.evicted.len())
+            let Some(idx) = (0..self.evicted.len())
+                .filter(|&i| {
+                    !(suspect_resumed && self.suspects.contains_key(&self.evicted[i].id))
+                })
                 .min_by_key(|&i| {
                     let e = &self.evicted[i];
                     (
@@ -1601,7 +1745,9 @@ impl Scheduler {
                         e.id,
                     )
                 })
-                .unwrap();
+            else {
+                return;
+            };
             let cand_rank = {
                 let e = &self.evicted[idx];
                 effective_rank(e.req.priority, e.evict_tick, now, aging, psched)
@@ -1628,6 +1774,9 @@ impl Scheduler {
             }
             let e = self.evicted.swap_remove(idx);
             let id = e.id;
+            if self.suspects.contains_key(&id) {
+                suspect_resumed = true;
+            }
             let events = e.req.events.clone();
             if let Err(err) = self.resume_evicted(e) {
                 self.metrics.inc("requests_failed", 1);
@@ -3191,9 +3340,13 @@ impl Scheduler {
                     Ok(Some(r)) => r,
                     Ok(None) => continue, // no bucket fit / pool pressure: decode normally
                     Err(e) => {
-                        let a = self.active.remove(&id).unwrap();
+                        let mut a = self.active.remove(&id).unwrap();
                         let _ = self.engine.remove(id, false);
-                        self.trace_retire(id, "error", "spec", 0);
+                        a.timing.total_ms = ms_since(a.enqueued_at, Instant::now());
+                        self.metrics.observe_ms("request_total", a.timing.total_ms);
+                        self.metrics.inc("requests_failed", 1);
+                        self.suspects.remove(&id);
+                        self.trace_retire(id, "error", "spec", a.emitted as u64);
                         let _ = a.events.send(Event::Error { id, message: format!("{e:#}") });
                         continue;
                     }
@@ -3280,16 +3433,30 @@ impl Scheduler {
         }
         let results = match self.engine.step(&next) {
             Ok(r) => r,
-            Err(e) => {
-                // Fatal engine error: fail all active requests.
-                let failed: Vec<(u64, ActiveReq)> = self.active.drain().collect();
-                for (id, a) in failed {
-                    self.trace_retire(id, "error", "decode", 0);
-                    let _ = a.events.send(Event::Error { id, message: format!("{e:#}") });
+            Err(_) => {
+                // Containment, not collapse: one immediate re-dispatch
+                // absorbs transient faults; a second failure quarantines
+                // a single suspect instead of failing the whole batch.
+                self.metrics.inc("dispatch_retries", 1);
+                match self.engine.step(&next) {
+                    Ok(r) => {
+                        self.metrics.inc("dispatch_retry_successes", 1);
+                        r
+                    }
+                    Err(e2) => {
+                        let batch_ids: Vec<u64> = next.keys().copied().collect();
+                        self.contain_dispatch_failure(&batch_ids, &format!("{e2:#}"));
+                        return;
+                    }
                 }
-                return;
             }
         };
+        // A successful dispatch exonerates every participant.
+        if !self.suspects.is_empty() {
+            for id in next.keys() {
+                self.suspects.remove(id);
+            }
+        }
         self.last_decode = Some(Instant::now());
         self.metrics.observe_ms("decode_step", ms_since(t0, Instant::now()));
         if self.cfg.trace.enabled {
@@ -3405,6 +3572,8 @@ impl Scheduler {
         self.trace_retire(id, "finish", reason.as_str(), a.emitted as u64);
         self.metrics.observe_ms("request_total", a.timing.total_ms);
         self.metrics.inc("requests_completed", 1);
+        self.suspects.remove(&id);
+        self.load.completed.fetch_add(1, Ordering::Relaxed);
         // Flush any pending UTF-8 bytes.
         let tail = a.decoder.flush();
         if !tail.is_empty() {
@@ -3421,6 +3590,457 @@ impl Scheduler {
             },
             timing: a.timing.clone(),
         });
+    }
+
+    // -------------------------------------------- failure containment
+
+    /// A batch dispatch failed twice.  Instead of failing every
+    /// sequence in it, quarantine: pick the prime suspect, checkpoint
+    /// it out of the batch (dropping its possibly-corrupted KV — the
+    /// resume path re-prefills from the token view), and let the rest
+    /// proceed.  Strikes accumulate per sequence; a suspect whose
+    /// batches keep failing is eventually failed alone, and a
+    /// successful dispatch exonerates every participant (see
+    /// `step_once`).
+    fn contain_dispatch_failure(&mut self, batch: &[u64], msg: &str) {
+        // A prior suspect in the batch is the prime one: the batch it
+        // rejoined had already proven itself without it (quarantined
+        // sequences re-admit one per tick — `try_resume_evicted`).
+        if let Some(&id) = batch
+            .iter()
+            .filter(|&&id| self.suspects.contains_key(&id))
+            .max_by_key(|&&id| (self.suspects[&id], id))
+        {
+            let strikes = self.suspects[&id];
+            if strikes >= QUARANTINE_STRIKES {
+                self.fail_one(id, msg);
+                return;
+            }
+            self.suspects.insert(id, strikes + 1);
+            self.metrics.inc("quarantines", 1);
+            if !self.quarantine_evict(id) {
+                self.fail_one(id, msg);
+            }
+            return;
+        }
+        // No prior suspicion anywhere in the batch: quarantine every
+        // member and re-admit them one per tick — the first failure
+        // after a member rejoins incriminates exactly that member.
+        self.metrics.inc("quarantines", 1);
+        for &id in batch {
+            self.suspects.insert(id, 1);
+            if !self.quarantine_evict(id) {
+                self.fail_one(id, msg);
+            }
+        }
+    }
+
+    /// Checkpoint a dispatch-failure suspect out of its decode slot.
+    /// Unlike `evict_one_below` the device KV is NOT trusted (it is the
+    /// prime corruption candidate) — it is dropped, and the resume path
+    /// rebuilds from the token view (text) or the retained vision rows
+    /// (mm).  Returns false when the sequence cannot be rebuilt.
+    fn quarantine_evict(&mut self, id: u64) -> bool {
+        let needs_rows = matches!(
+            self.active.get(&id).and_then(|a| a.mm.as_ref()),
+            Some(m) if m.vis_rows.is_none()
+        );
+        if needs_rows && !self.try_recompose_active(id) {
+            return false;
+        }
+        if self.active.get(&id).is_some_and(|a| a.mm.is_some())
+            && !self.engine.rt.has_chunk_prefill_embeds()
+        {
+            return false;
+        }
+        let Some(mut a) = self.active.remove(&id) else { return false };
+        let _ = self.engine.remove(id, false);
+        a.timing.evictions += 1;
+        self.metrics.inc("evictions", 1);
+        self.trace_ev(id, "quarantine", "", a.emitted as u64, 0);
+        self.evicted
+            .push(EvictedSeq { id, req: a, evict_tick: self.tick_count });
+        self.metrics
+            .set_gauge("evicted_waiting", self.evicted.len() as f64);
+        self.metrics
+            .set_gauge("active_requests", self.active.len() as f64);
+        true
+    }
+
+    /// Fail exactly one active sequence with a terminal error,
+    /// reporting its partial timing and emitted-token count.
+    fn fail_one(&mut self, id: u64, msg: &str) {
+        self.suspects.remove(&id);
+        let Some(mut a) = self.active.remove(&id) else { return };
+        let _ = self.engine.remove(id, false);
+        a.timing.total_ms = ms_since(a.enqueued_at, Instant::now());
+        self.metrics.observe_ms("request_total", a.timing.total_ms);
+        self.metrics.inc("requests_failed", 1);
+        self.metrics.inc("quarantine_failures", 1);
+        self.trace_retire(id, "error", "decode", a.emitted as u64);
+        let _ = a.events.send(Event::Error { id, message: msg.into() });
+        self.metrics
+            .set_gauge("active_requests", self.active.len() as f64);
+    }
+
+    // ------------------------------------------------- cancellation
+
+    /// Terminal bookkeeping shared by every cancellation stage: stamp
+    /// total time, count, retire the trace, deliver the one terminal
+    /// `Done { finish: Cancelled }` covering the partial generation.
+    #[allow(clippy::too_many_arguments)]
+    fn send_cancelled(
+        &mut self,
+        id: u64,
+        cause: &'static str,
+        stage: &'static str,
+        events: &Sender<Event>,
+        prompt_tokens: usize,
+        emitted: usize,
+        mut timing: Timing,
+        enqueued_at: Instant,
+        spec: (usize, usize),
+    ) {
+        timing.total_ms = ms_since(enqueued_at, Instant::now());
+        self.suspects.remove(&id);
+        self.metrics.inc("requests_cancelled", 1);
+        if cause == "deadline" {
+            self.metrics.inc("deadline_cancels", 1);
+        }
+        self.trace_retire(id, "cancelled", stage, emitted as u64);
+        let _ = events.send(Event::Done {
+            id,
+            finish: FinishReason::Cancelled,
+            usage: Usage {
+                prompt_tokens,
+                completion_tokens: emitted,
+                draft_tokens_proposed: spec.0,
+                draft_tokens_accepted: spec.1,
+            },
+            timing,
+        });
+    }
+
+    /// Cancel one request at WHATEVER lifecycle stage it occupies:
+    /// intake, staged prefill (primary or coalesced follower), parked
+    /// on vision encodes, evicted, or actively decoding.  Page pins
+    /// release with the dropped state; a cancelled coalesced primary
+    /// promotes its oldest follower so the shared KV build is not
+    /// wasted.  Unknown ids are a no-op.
+    pub fn cancel_request(&mut self, id: u64, cause: &'static str) {
+        // Raw intake: not yet tokenized, nothing to release.
+        if let Some(pos) = self.intake.iter().position(|r| r.id == id) {
+            let r = self.intake.remove(pos).expect("position valid");
+            self.send_cancelled(
+                id,
+                cause,
+                "intake",
+                &r.events,
+                0,
+                0,
+                Timing::default(),
+                r.enqueued_at,
+                (0, 0),
+            );
+            self.publish_load();
+            return;
+        }
+        // Staged prefill primary.
+        if let Some(pos) = self.pending.iter().position(|j| j.id == id) {
+            if !self.pending[pos].followers.is_empty() {
+                // Promote the oldest follower: the shared KV build
+                // continues under its identity instead of being thrown
+                // away with the cancelled primary.
+                let (old_events, old_timing, old_enq, prompt) = {
+                    let job = &mut self.pending[pos];
+                    let f = job.followers.remove(0);
+                    let old = (
+                        job.events.clone(),
+                        std::mem::take(&mut job.timing),
+                        job.enqueued_at,
+                        job.tokens.len(),
+                    );
+                    job.id = f.id;
+                    job.events = f.events;
+                    job.params = f.params;
+                    job.priority = f.priority;
+                    job.timing = f.timing;
+                    job.enqueued_at = f.enqueued_at;
+                    // Keep the coalesce-time class bump from any
+                    // better-class follower still riding along.
+                    for g in &job.followers {
+                        if g.priority.rank() < job.priority.rank() {
+                            job.priority = g.priority;
+                        }
+                    }
+                    old
+                };
+                let new_id = self.pending[pos].id;
+                let new_events = self.pending[pos].events.clone();
+                // Re-link the overlap pending (if any) to the promoted
+                // identity so late vision encodes keep feeding the job.
+                for p in &mut self.mm_waiting {
+                    if p.job_id == Some(id) {
+                        p.id = new_id;
+                        p.job_id = Some(new_id);
+                        p.events = new_events.clone();
+                    }
+                }
+                self.metrics.inc("cancel_promotions", 1);
+                self.send_cancelled(
+                    id, cause, "staged", &old_events, prompt, 0, old_timing, old_enq, (0, 0),
+                );
+            } else {
+                let job = self.pending.remove(pos).expect("position valid");
+                if job.feed_open {
+                    // Unlink the overlap pending and prune vision jobs
+                    // only this request was waiting on.
+                    self.drop_overlap_pending(id);
+                }
+                self.send_cancelled(
+                    id,
+                    cause,
+                    "staged",
+                    &job.events,
+                    job.tokens.len(),
+                    0,
+                    job.timing.clone(),
+                    job.enqueued_at,
+                    (0, 0),
+                );
+                // `job` (and its PageSet) drops here — pages release.
+            }
+            self.metrics
+                .set_gauge("prefill_queue_depth", self.staged_requests() as f64);
+            self.publish_load();
+            return;
+        }
+        // Coalesced follower of a staged job.
+        for j in 0..self.pending.len() {
+            if let Some(fpos) = self.pending[j].followers.iter().position(|f| f.id == id) {
+                let f = self.pending[j].followers.remove(fpos);
+                let prompt = self.pending[j].tokens.len();
+                self.send_cancelled(
+                    id, cause, "staged", &f.events, prompt, 0, f.timing, f.enqueued_at, (0, 0),
+                );
+                self.publish_load();
+                return;
+            }
+        }
+        // Parked multimodal pending (vision encodes still in flight).
+        if let Some(pos) = self
+            .mm_waiting
+            .iter()
+            .position(|p| p.id == id && p.job_id.is_none())
+        {
+            let p = self.mm_waiting.remove(pos);
+            let waiting = &self.mm_waiting;
+            self.vis_pending.retain(|j| {
+                waiting
+                    .iter()
+                    .any(|q| q.hashes.contains(&j.hash) && !q.resolved.contains_key(&j.hash))
+            });
+            self.metrics
+                .set_gauge("vision_queue_depth", self.vis_pending.len() as f64);
+            self.send_cancelled(
+                id,
+                cause,
+                "vision",
+                &p.events,
+                p.text_tokens.len(),
+                0,
+                p.timing.clone(),
+                p.enqueued_at,
+                (0, 0),
+            );
+            self.publish_load();
+            return;
+        }
+        // Evicted (checkpointed out of its decode slot).
+        if let Some(pos) = self.evicted.iter().position(|e| e.id == id) {
+            let e = self.evicted.remove(pos);
+            self.metrics
+                .set_gauge("evicted_waiting", self.evicted.len() as f64);
+            let spec = (e.req.spec_proposed, e.req.spec_accepted);
+            self.send_cancelled(
+                id,
+                cause,
+                "evicted",
+                &e.req.events,
+                e.req.prompt_len,
+                e.req.emitted,
+                e.req.timing.clone(),
+                e.req.enqueued_at,
+                spec,
+            );
+            self.publish_load();
+            return;
+        }
+        // Active decode slot.
+        if let Some(mut a) = self.active.remove(&id) {
+            let _ = self.engine.remove(id, false);
+            let tail = a.decoder.flush();
+            if !tail.is_empty() {
+                let _ = a.events.send(Event::Token { id, token: -1, text: tail });
+            }
+            self.metrics
+                .set_gauge("active_requests", self.active.len() as f64);
+            let spec = (a.spec_proposed, a.spec_accepted);
+            self.send_cancelled(
+                id,
+                cause,
+                "decode",
+                &a.events,
+                a.prompt_len,
+                a.emitted,
+                a.timing.clone(),
+                a.enqueued_at,
+                spec,
+            );
+            self.publish_load();
+        }
+        // Unknown id: already finished, or it lives on another pool
+        // replica (the router broadcasts cancels to every engine).
+    }
+
+    /// Cancel every request held longer than its deadline — the
+    /// per-request `timeout_ms`, falling back to the server default
+    /// (0 = none).  Runs once per tick; applies at EVERY stage, so a
+    /// request cannot dodge its deadline by being parked or evicted.
+    fn enforce_deadlines(&mut self) {
+        let default = self.cfg.sched.default_timeout_ms;
+        let deadline_of = move |p: &SamplingParams| -> Option<u64> {
+            p.timeout_ms.or((default > 0).then_some(default))
+        };
+        let now = Instant::now();
+        let over =
+            |enq: Instant, ms: u64| now.duration_since(enq).as_millis() as u64 >= ms;
+        let mut expired: Vec<u64> = Vec::new();
+        for r in &self.intake {
+            if deadline_of(&r.params).is_some_and(|ms| over(r.enqueued_at, ms)) {
+                expired.push(r.id);
+            }
+        }
+        for j in &self.pending {
+            if deadline_of(&j.params).is_some_and(|ms| over(j.enqueued_at, ms)) {
+                expired.push(j.id);
+            }
+            for f in &j.followers {
+                if deadline_of(&f.params).is_some_and(|ms| over(f.enqueued_at, ms)) {
+                    expired.push(f.id);
+                }
+            }
+        }
+        for p in &self.mm_waiting {
+            if p.job_id.is_none()
+                && deadline_of(&p.params).is_some_and(|ms| over(p.enqueued_at, ms))
+            {
+                expired.push(p.id);
+            }
+        }
+        for e in &self.evicted {
+            if deadline_of(&e.req.params).is_some_and(|ms| over(e.req.enqueued_at, ms)) {
+                expired.push(e.id);
+            }
+        }
+        for (&id, a) in &self.active {
+            if deadline_of(&a.params).is_some_and(|ms| over(a.enqueued_at, ms)) {
+                expired.push(id);
+            }
+        }
+        for id in expired {
+            self.cancel_request(id, "deadline");
+        }
+    }
+
+    // ---------------------------------------------- shutdown / death
+
+    /// Deliver a terminal `Event::Error` to every request the engine
+    /// still holds, at any stage.  Run on every exit from the serve
+    /// loop so no client ever hangs on a silently dropped channel.
+    fn abort_all(&mut self, msg: &str) {
+        let intake: Vec<GenRequest> = self.intake.drain(..).collect();
+        for r in intake {
+            self.metrics.inc("requests_failed", 1);
+            self.trace_retire(r.id, "error", "shutdown", 0);
+            let _ = r.events.send(Event::Error { id: r.id, message: msg.into() });
+        }
+        let pending: Vec<PrefillJob> = self.pending.drain(..).collect();
+        let err = anyhow!("{msg}");
+        for job in pending {
+            self.fail_followers(&job, &err);
+            self.metrics.inc("requests_failed", 1);
+            self.trace_retire(job.id, "error", "shutdown", 0);
+            let _ = job
+                .events
+                .send(Event::Error { id: job.id, message: msg.into() });
+        }
+        let parked: Vec<MmPending> = self.mm_waiting.drain(..).collect();
+        for p in parked {
+            // Overlap pendings already reported through their job.
+            if p.job_id.is_none() {
+                self.metrics.inc("requests_failed", 1);
+                self.trace_retire(p.id, "error", "shutdown", 0);
+                let _ = p.events.send(Event::Error { id: p.id, message: msg.into() });
+            }
+        }
+        self.vis_pending.clear();
+        let evicted: Vec<EvictedSeq> = std::mem::take(&mut self.evicted);
+        for e in evicted {
+            self.metrics.inc("requests_failed", 1);
+            self.trace_retire(e.id, "error", "shutdown", e.req.emitted as u64);
+            let _ = e
+                .req
+                .events
+                .send(Event::Error { id: e.id, message: msg.into() });
+        }
+        let active: Vec<(u64, ActiveReq)> = self.active.drain().collect();
+        for (id, a) in active {
+            self.metrics.inc("requests_failed", 1);
+            self.trace_retire(id, "error", "shutdown", a.emitted as u64);
+            let _ = a.events.send(Event::Error { id, message: msg.into() });
+        }
+        self.suspects.clear();
+        self.publish_load();
+    }
+
+    /// Injected replica death: checkpoint every migratable unit into
+    /// the orphan depot (the pool supervisor redistributes them to
+    /// surviving replicas), error what cannot move, drain the command
+    /// channel so in-flight sends are not lost, then clear the alive
+    /// flag and let the thread exit.
+    fn die(&mut self, rx: &Receiver<Command>) {
+        let mut orphans: Vec<MigrationUnit> = Vec::new();
+        while let Some(u) = self.shed_one() {
+            orphans.push(u);
+        }
+        while let Ok(c) = rx.try_recv() {
+            match c {
+                Command::Gen(r) => orphans.push(MigrationUnit::Fresh(r, None)),
+                Command::Accept(u) => orphans.push(*u),
+                Command::Cancel(id) => self.cancel_request(id, "cancel"),
+                Command::Stats(tx) => {
+                    let _ = tx.send(self.snapshot());
+                }
+                Command::Shed(tx) => {
+                    let _ = tx.send(None);
+                }
+                Command::Trace(_, tx) => {
+                    let _ = tx.send(None);
+                }
+                Command::TraceDump(_, tx) => {
+                    let _ = tx.send(Vec::new());
+                }
+                Command::Shutdown { .. } => {}
+            }
+        }
+        // What shed_one refused to move (open-feed jobs, active
+        // decodes, mm without retained rows) dies with the replica.
+        self.abort_all("replica died (injected fault)");
+        if let Ok(mut depot) = self.load.orphans.lock() {
+            depot.extend(orphans);
+        }
+        self.load.alive.store(false, Ordering::Relaxed);
     }
 }
 
@@ -3615,8 +4235,25 @@ impl SchedulerHandle {
         }
     }
 
+    /// Cancel one request wherever it is in its lifecycle.  Unknown ids
+    /// are a no-op, so the pool router can broadcast a cancel to every
+    /// replica without tracking placement.
+    pub fn cancel(&self, id: u64) {
+        let _ = self.tx.send(Command::Cancel(id));
+    }
+
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Command::Shutdown);
+        self.shutdown_mode(false)
+    }
+
+    /// Graceful drain: stop admitting, let in-flight work finish
+    /// (bounded by the engine's drain deadline), then exit.
+    pub fn shutdown_drain(&self) {
+        self.shutdown_mode(true)
+    }
+
+    fn shutdown_mode(&self, drain: bool) {
+        let _ = self.tx.send(Command::Shutdown { drain });
         if let Some(j) = &self.join {
             if let Ok(mut g) = j.lock() {
                 if let Some(h) = g.take() {

@@ -51,12 +51,14 @@ pub mod tokenizer;
 
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 use xla::PjRtBuffer;
 
 use crate::cache::CachedKv;
 use crate::runtime::{paged, ModelRuntime, PageArena, PageArenaStats, PageSet, SharedPageArena};
+use crate::substrate::faults::FaultPlan;
 
 /// Per-sequence engine state.
 #[derive(Debug, Clone)]
@@ -249,6 +251,8 @@ pub struct TextEngine {
     spec_scratch: Option<PageSet>,
     slots: Vec<Option<u64>>,
     seqs: HashMap<u64, SeqState>,
+    /// Fault-injection schedule (chaos tests only; None in production).
+    fault_plan: Option<Arc<FaultPlan>>,
     pub stats: EngineStats,
 }
 
@@ -296,8 +300,17 @@ impl TextEngine {
             spec_scratch: None,
             slots: vec![None; bucket],
             seqs: HashMap::new(),
+            fault_plan: None,
             stats: EngineStats::default(),
         })
+    }
+
+    /// Install a deterministic fault-injection schedule (chaos tests):
+    /// scheduled decode dispatches fail with an injected error, and the
+    /// page arena reports scheduled allocation ordinals as exhaustion.
+    pub fn set_fault_plan(&mut self, plan: Arc<FaultPlan>) {
+        self.arena.borrow_mut().set_fault_plan(plan.clone());
+        self.fault_plan = Some(plan);
     }
 
     /// The pool's page allocator (shared with cache checkpoints).
@@ -437,6 +450,12 @@ impl TextEngine {
         let v = self.rt.info.vocab;
         if self.seqs.is_empty() {
             return Ok(StepLogits::empty(v));
+        }
+        if let Some(f) = &self.fault_plan {
+            let ids: Vec<u64> = self.seqs.keys().copied().collect();
+            if let Some(reason) = f.fail_dispatch(&ids) {
+                bail!("{reason}");
+            }
         }
         let s_max = self.rt.info.s_max;
         let page = self.rt.info.kv_page_size;

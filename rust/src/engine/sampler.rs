@@ -18,6 +18,12 @@ pub struct SamplingParams {
     /// engine config, `Some(false)` opts this request out, `Some(true)`
     /// requests it (still subject to greedy-only eligibility).
     pub speculation: Option<bool>,
+    /// Per-request deadline from enqueue, in milliseconds (OpenAI-side
+    /// `"timeout_ms"`).  The scheduler cancels the request — at any
+    /// lifecycle stage — once it has been held longer than this.
+    /// `None` inherits the server's default deadline (which may be
+    /// "none").
+    pub timeout_ms: Option<u64>,
 }
 
 impl Default for SamplingParams {
@@ -30,6 +36,7 @@ impl Default for SamplingParams {
             seed: 0,
             stop_on_eos: true,
             speculation: None,
+            timeout_ms: None,
         }
     }
 }

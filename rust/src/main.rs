@@ -34,6 +34,8 @@ USAGE:
                 [--spec on|off] [--spec-draft-len 7] [--spec-ngram-min 2]
                 [--engines 1] [--route rr|load|affinity] [--migrate on|off]
                 [--trace on|off] [--trace-buffer 256]
+                [--max-queue-interactive 1024] [--max-queue-normal 1024]
+                [--max-queue-batch 1024] [--default-timeout-ms 0]
   umserve run   --model NAME --prompt TEXT [--max-tokens 64] [--temperature 0]
                 [--top-k 0] [--top-p 1.0] [--image PATH ...via --image=path]
   umserve info  [--artifacts artifacts]
@@ -114,6 +116,27 @@ CLUSTER:
   checkpoint format; migrated sequences rebuild their KV on the target
   and continue with byte-identical greedy output.
 
+OVERLOAD / FAILURE:
+  Admission is bounded per class: --max-queue-interactive / -normal /
+  -batch cap the queued work counted at each class's rank or better
+  (batch counts everything queued, so it saturates and sheds first;
+  0 = unlimited).  Work over the cap is rejected at the HTTP surface
+  with 429 plus a Retry-After estimate from the live backlog and
+  recent completion throughput; sheds surface as
+  umserve_requests_shed_total{class=...} and GET /health reports
+  \"shedding\" while any cap is saturated.  Requests may carry a
+  top-level \"timeout_ms\" deadline (--default-timeout-ms applies one
+  to requests that don't, 0 = none); an expired request retires with
+  finish_reason \"cancelled\" wherever it is in its lifecycle, as does
+  a streaming request whose client disconnects.  A failed decode
+  dispatch is retried once; if the retry also fails the scheduler
+  quarantines the suspect sequences (KV dropped, re-prefilled from
+  tokens) instead of failing the whole batch, and only a sequence
+  that keeps failing is errored alone.  SIGINT drains gracefully:
+  stop accepting, finish in-flight work (30 s bound), exit.
+  --fault-plan SPEC (testing only) injects deterministic faults,
+  e.g. \"seed=42,poison=3,dispatch@8,die:1@40\".
+
 OBSERVABILITY:
   With --trace on (the default) every request records a lifecycle
   timeline — enqueue, admit/park, vision encodes, prefill chunks,
@@ -180,6 +203,7 @@ fn engine_config(args: &argparse::Args) -> anyhow::Result<EngineConfig> {
             preemption: args.on_off("preemption", true)?,
             default_priority,
             aging_ticks: args.usize("aging-ticks", 64)? as u64,
+            default_timeout_ms: args.usize("default-timeout-ms", 0)? as u64,
         },
         vision: VisionConfig {
             stage: args.on_off("vision-stage", true)?,
@@ -215,7 +239,26 @@ fn engine_config(args: &argparse::Args) -> anyhow::Result<EngineConfig> {
             enabled: args.on_off("trace", true)?,
             buffer: args.usize("trace-buffer", 256)?,
         },
+        faults: match args.opt_str("fault-plan") {
+            // Deterministic fault injection for chaos testing; not a
+            // production knob, so it stays out of the flag synopsis.
+            Some(spec) => Some(Arc::new(umserve::substrate::faults::FaultPlan::parse(&spec)?)),
+            None => None,
+        },
     })
+}
+
+/// Ctrl-C flips this from the signal handler; a watcher thread turns
+/// it into the HTTP server's shutdown flag so the accept loop exits
+/// and the pool can drain.
+static SIGINT_FLAG: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_sigint(_sig: i32) {
+    SIGINT_FLAG.store(true, std::sync::atomic::Ordering::Relaxed);
+}
+
+extern "C" {
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
 }
 
 fn serve(args: &argparse::Args) -> anyhow::Result<()> {
@@ -228,20 +271,45 @@ fn serve(args: &argparse::Args) -> anyhow::Result<()> {
         ..Default::default()
     };
     let port = args.usize("port", 8000)?;
+    let opts = umserve::server::ServeOptions {
+        queue_caps: [
+            args.usize("max-queue-interactive", 1024)?,
+            args.usize("max-queue-normal", 1024)?,
+            args.usize("max-queue-batch", 1024)?,
+        ],
+        default_timeout_ms: cfg.sched.default_timeout_ms,
+    };
     let model = cfg.model.clone();
     let default_priority = cfg.sched.default_priority;
     let n = pool_cfg.engines;
     eprintln!("loading model {model} ({n} engine{}) ...", if n == 1 { "" } else { "s" });
     // The pool owns the replica threads and the rebalancer; keep it
     // alive for the lifetime of the server loop.
-    let pool = EnginePool::spawn(cfg, pool_cfg)?;
+    let mut pool = EnginePool::spawn(cfg, pool_cfg)?;
     let handle = pool.handle();
     let listener = TcpListener::bind(("127.0.0.1", port as u16))?;
     eprintln!("umserve listening on http://127.0.0.1:{port} (model {model})");
     eprintln!("  POST /v1/chat/completions | POST /v1/completions | GET /v1/models | GET /metrics");
     eprintln!("  GET /health | GET /v1/traces/{{id}} | GET /debug/traces?last=N  [?format=chrome]");
     let shutdown = Arc::new(AtomicBool::new(false));
-    umserve::server::serve(listener, handle, model, default_priority, shutdown)
+    // Graceful drain on Ctrl-C: handler sets SIGINT_FLAG, the watcher
+    // flips the HTTP shutdown flag so the accept loop exits, then the
+    // pool drains in-flight work (bounded by the engine-side drain
+    // deadline) before the process exits.
+    unsafe { signal(2 /* SIGINT */, on_sigint) };
+    {
+        let sd = shutdown.clone();
+        std::thread::spawn(move || {
+            while !SIGINT_FLAG.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            sd.store(true, std::sync::atomic::Ordering::Relaxed);
+        });
+    }
+    let res = umserve::server::serve(listener, handle, model, default_priority, opts, shutdown);
+    eprintln!("shutting down: draining in-flight requests ...");
+    pool.shutdown_drain();
+    res
 }
 
 fn run(args: &argparse::Args) -> anyhow::Result<()> {
@@ -258,6 +326,7 @@ fn run(args: &argparse::Args) -> anyhow::Result<()> {
         seed: args.usize("seed", 0)? as u64,
         stop_on_eos: true,
         speculation: None,
+        timeout_ms: None,
     };
     let prompt = match args.opt_str("image") {
         Some(path) => PromptInput::Multimodal {

@@ -27,6 +27,9 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::substrate::faults::FaultPlan;
 
 /// Cumulative allocator counters (exposed via /metrics and the paged-KV
 /// ablation).
@@ -55,6 +58,8 @@ pub struct PageArena {
     refcounts: Vec<u32>,
     free: Vec<u32>,
     stats: PageArenaStats,
+    /// Fault-injection schedule (chaos tests only; None in production).
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl PageArena {
@@ -77,7 +82,14 @@ impl PageArena {
             refcounts: vec![0; total_pages],
             free,
             stats: PageArenaStats::default(),
+            faults: None,
         }
+    }
+
+    /// Install a fault-injection schedule; scheduled alloc ordinals
+    /// report pool exhaustion exactly as if the budget ran out.
+    pub fn set_fault_plan(&mut self, plan: Arc<FaultPlan>) {
+        self.faults = Some(plan);
     }
 
     pub fn total_pages(&self) -> usize {
@@ -117,6 +129,12 @@ impl PageArena {
     /// exhausted — callers surface that as admission backpressure, not
     /// a crash.
     pub fn alloc(&mut self) -> Option<u32> {
+        if let Some(f) = &self.faults {
+            if f.fail_alloc() {
+                self.stats.alloc_failures += 1;
+                return None;
+            }
+        }
         match self.free.pop() {
             Some(p) => {
                 debug_assert_eq!(self.refcounts[p as usize], 0);
@@ -170,6 +188,23 @@ impl PageArena {
             assert_eq!(self.refcounts[p as usize], 0, "free page {p} has owners");
             assert!(p as usize <= self.capacity && p != 0);
         }
+    }
+
+    /// Non-panicking form of [`check_invariants`](Self::check_invariants)
+    /// for cross-thread surfaces (stats snapshots): the chaos tests read
+    /// this from outside the engine thread, where a panic would abort
+    /// the process instead of failing the test.
+    pub fn invariants_ok(&self) -> bool {
+        if self.refcounts[0] != 0 {
+            return false;
+        }
+        let owned = self.refcounts.iter().filter(|&&rc| rc > 0).count();
+        if owned + self.free.len() != self.capacity {
+            return false;
+        }
+        self.free
+            .iter()
+            .all(|&p| self.refcounts[p as usize] == 0 && p as usize <= self.capacity && p != 0)
     }
 }
 

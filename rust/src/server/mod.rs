@@ -18,18 +18,39 @@
 //! The HTTP substrate is in-tree (`substrate::http`); handlers translate
 //! wire JSON <-> `coordinator` requests and bridge the scheduler's event
 //! channel onto SSE chunks.
+//!
+//! Admission is bounded: once a class's queue cap is reached the server
+//! sheds new work with `429` + `Retry-After` instead of queueing it
+//! (see [`ServeOptions`]); lower classes shed first.
 
 pub mod openai;
 
 use std::net::TcpListener;
 use std::sync::atomic::AtomicBool;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::cluster::PoolHandle;
 use crate::coordinator::Priority;
 use crate::substrate::http;
+
+/// Admission-control knobs for [`serve`].  The defaults (all zero)
+/// disable both mechanisms, matching the pre-overload-protection
+/// behaviour; `umserve serve` wires its `--max-queue-*` /
+/// `--default-timeout-ms` flags here.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeOptions {
+    /// Per-class admission caps indexed by `Priority::rank()`
+    /// (interactive, normal, batch).  A class is shed with 429 once the
+    /// queued work at its rank *or better* reaches its cap, so batch
+    /// sheds first under pressure.  0 = unlimited.
+    pub queue_caps: [usize; 3],
+    /// Server-side deadline applied to requests that carry no
+    /// `timeout_ms` field, in milliseconds.  0 = none.
+    pub default_timeout_ms: u64,
+}
 
 /// Serve forever (until `shutdown` flips).  `handle` routes requests
 /// across the pool's engine replicas (`EnginePool::handle`; a bare
@@ -41,9 +62,17 @@ pub fn serve(
     handle: PoolHandle,
     model_name: String,
     default_priority: Priority,
+    opts: ServeOptions,
     shutdown: Arc<AtomicBool>,
 ) -> Result<()> {
-    let state = Arc::new(openai::ServerState { handle, model_name, default_priority });
+    let state = Arc::new(openai::ServerState {
+        handle,
+        model_name,
+        default_priority,
+        queue_caps: opts.queue_caps,
+        default_timeout_ms: opts.default_timeout_ms,
+        shed_window: Mutex::new((Instant::now(), 0)),
+    });
     let h = Arc::new(move |req: http::Request, rw: &mut http::ResponseWriter<'_>| {
         openai::route(&state, req, rw);
     });

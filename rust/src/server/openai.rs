@@ -2,7 +2,8 @@
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
-use std::time::{SystemTime, UNIX_EPOCH};
+use std::sync::Mutex;
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 use crate::cluster::PoolHandle;
 use crate::coordinator::{Event, Priority, PromptInput};
@@ -20,6 +21,15 @@ pub struct ServerState {
     pub model_name: String,
     /// Class for requests without an explicit `priority` field.
     pub default_priority: Priority,
+    /// Per-class admission caps indexed by `Priority::rank()`; 0 =
+    /// unlimited.  Checked against the *cumulative* queue depth at the
+    /// class's rank or better, so batch saturates (and sheds) first.
+    pub queue_caps: [usize; 3],
+    /// Deadline for requests without a `timeout_ms` field (0 = none).
+    pub default_timeout_ms: u64,
+    /// Throughput window for `Retry-After`: (window start, pool
+    /// completed-counter at window start).
+    pub shed_window: Mutex<(Instant, u64)>,
 }
 
 pub fn route(state: &ServerState, req: Request, rw: &mut ResponseWriter<'_>) {
@@ -111,7 +121,31 @@ fn parse_params(body: &Json) -> SamplingParams {
         seed: body.get("seed").and_then(|j| j.as_i64()).unwrap_or(0) as u64,
         stop_on_eos: true,
         speculation: None,
+        timeout_ms: body.get("timeout_ms").and_then(|j| j.as_usize()).map(|v| v as u64),
     }
+}
+
+/// Advisory `Retry-After` seconds for a 429: current pool backlog over
+/// recent completion throughput (sampled from the pool's completed
+/// counter across a rolling window), clamped to [1, 30].
+fn retry_after_secs(state: &ServerState) -> u64 {
+    let backlog = state.handle.queued_up_to_rank(2);
+    let done = state.handle.completed_total();
+    let mut w = state.shed_window.lock().unwrap();
+    let dt = w.0.elapsed().as_secs_f64();
+    let rate = if dt > 0.0 { done.saturating_sub(w.1) as f64 / dt } else { 0.0 };
+    if dt >= 5.0 {
+        *w = (Instant::now(), done);
+    }
+    ((backlog as f64 / rate.max(1.0)).ceil() as u64).clamp(1, 30)
+}
+
+/// True when `class` is over its admission cap: the queued work at its
+/// rank *or better* has reached the cap, so new arrivals would only
+/// deepen an already-saturated backlog.
+fn over_cap(state: &ServerState, class: Priority) -> bool {
+    let cap = state.queue_caps[class.rank()];
+    cap > 0 && state.handle.queued_up_to_rank(class.rank()) >= cap
 }
 
 /// messages: [{role, content: str | [{type:"text"|"image_url", ...}]}]
@@ -207,12 +241,36 @@ fn completions(state: &ServerState, req: &Request, rw: &mut ResponseWriter<'_>) 
 fn run_request(
     state: &ServerState,
     prompt: PromptInput,
-    params: SamplingParams,
+    mut params: SamplingParams,
     priority: Priority,
     stream: bool,
     chat: bool,
     rw: &mut ResponseWriter<'_>,
 ) -> HandlerResult {
+    // Bounded admission: shed before the request touches any queue so
+    // an overloaded server stays responsive to the work it has already
+    // accepted.  Batch counts all queued work and therefore sheds
+    // first; interactive only counts its own class.
+    if over_cap(state, priority) {
+        state.handle.note_shed(priority);
+        let secs = retry_after_secs(state);
+        let body = err_body(
+            "overloaded",
+            &format!("'{}' queue is full; retry after the indicated delay", priority.as_str()),
+        );
+        return rw
+            .send_with_headers(
+                429,
+                "application/json",
+                &[("retry-after", secs.to_string())],
+                body.to_string().as_bytes(),
+            )
+            .map_err(|e| (500u16, e.to_string()));
+    }
+    // Server-side default deadline for requests that didn't set one.
+    params.timeout_ms = params
+        .timeout_ms
+        .or((state.default_timeout_ms > 0).then_some(state.default_timeout_ms));
     let (tx, rx) = channel();
     let id = state
         .handle
@@ -235,7 +293,13 @@ fn run_request(
                         Json::str(text)
                     };
                     let chunk = stream_chunk(&oid, &state.model_name, chat, delta, None);
-                    let _ = rw.sse_event(&chunk.to_string());
+                    if rw.sse_event(&chunk.to_string()).is_err() {
+                        // The socket write failed: the client is gone.
+                        // Cancel server-side so the scheduler stops
+                        // decoding and releases the request's pages.
+                        state.handle.cancel(id);
+                        break;
+                    }
                 }
                 Event::Done { finish, usage, .. } => {
                     let chunk = stream_chunk(
@@ -384,7 +448,8 @@ fn models(state: &ServerState, rw: &mut ResponseWriter<'_>) -> HandlerResult {
 
 /// Readiness probe: per-replica liveness (the engine thread can die on
 /// a panic), queue/slot pressure from the lock-free load summaries,
-/// and KV pool headroom.  All replicas alive -> 200; any dead -> 503
+/// and KV pool headroom.  All replicas alive -> 200 (`"ok"`, or
+/// `"shedding"` when any admission cap is saturated); any dead -> 503
 /// so load balancers stop routing here.
 fn health(state: &ServerState, rw: &mut ResponseWriter<'_>) -> HandlerResult {
     let mut replicas = Vec::new();
@@ -420,9 +485,22 @@ fn health(state: &ServerState, rw: &mut ResponseWriter<'_>) -> HandlerResult {
         }
         replicas.push(Json::obj(fields));
     }
-    let status = if all_alive { "ok" } else { "degraded" };
+    // `shedding` is a load state, not a failure: the server is healthy
+    // (200) but at least one class is over its admission cap, so load
+    // balancers may prefer other replicas without draining this one.
+    let shedding = [Priority::Interactive, Priority::Normal, Priority::Batch]
+        .iter()
+        .any(|&c| over_cap(state, c));
+    let status = if !all_alive {
+        "degraded"
+    } else if shedding {
+        "shedding"
+    } else {
+        "ok"
+    };
     let body = Json::obj(vec![
         ("status", Json::str(status)),
+        ("shedding", Json::Bool(shedding)),
         ("queued", Json::num(queued as f64)),
         ("active", Json::num(active as f64)),
         ("engines", Json::Arr(replicas)),
@@ -599,6 +677,9 @@ mod tests {
         let p2 = parse_params(&parse("{}").unwrap());
         assert_eq!(p2.max_tokens, 64);
         assert_eq!(p2.temperature, 0.0);
+        assert_eq!(p2.timeout_ms, None);
+        let p3 = parse_params(&parse(r#"{"timeout_ms": 2500}"#).unwrap());
+        assert_eq!(p3.timeout_ms, Some(2500));
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Deterministic fault injection for chaos tests and benches.
+//!
+//! A [`FaultPlan`] is a fixed, seed-stamped schedule of injected
+//! failures, parsed from a compact spec string (the hidden
+//! `--fault-plan` CLI flag, or built directly in tests):
+//!
+//! ```text
+//! seed=42,poison=5,dispatch@8,alloc@3,die:1@40
+//! ```
+//!
+//! * `poison=<id>` — every batched decode dispatch whose batch contains
+//!   request `<id>` fails, persistently.  This drives the containment
+//!   path end to end: bounded retry cannot recover it, quarantine
+//!   evicts suspects until the poisoned sequence is isolated, and it
+//!   alone is errored while innocent batchmates resume untouched.
+//! * `dispatch@<n>` — the `<n>`-th decode dispatch (1-based, counted
+//!   over the plan's lifetime) fails once.  The scheduler's single
+//!   re-dispatch recovers it with no client-visible effect.
+//! * `alloc@<n>` — the `<n>`-th KV page allocation reports exhaustion
+//!   (returns no page), exercising the allocator-pressure paths.
+//! * `die:<idx>@<t>` — engine replica `<idx>` performs a controlled
+//!   thread death at scheduler tick `<t>`: sheddable work is orphaned
+//!   for the pool supervisor to redistribute, the rest is errored.
+//! * `seed=<s>` — names the run (the plan itself is fully
+//!   deterministic; the seed is attribution for logs and artifacts).
+//!
+//! The plan is shared across threads behind an `Arc`; the ordinal
+//! counters are atomics so concurrent consumers (engine dispatch, page
+//! allocator) each consume ordinals exactly once.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, Result};
+
+/// A deterministic schedule of injected failures (see module docs).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Run attribution only — the plan is deterministic regardless.
+    pub seed: u64,
+    /// Request ids whose decode batches fail persistently.
+    poison: Vec<u64>,
+    /// 1-based dispatch ordinals that fail once.
+    dispatch_at: Vec<u64>,
+    /// 1-based page-allocation ordinals that report exhaustion.
+    alloc_at: Vec<u64>,
+    /// (engine index, tick) controlled replica deaths.
+    die: Vec<(usize, u64)>,
+    dispatches: AtomicU64,
+    allocs: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse the spec-string form (`seed=…,poison=…,dispatch@…,
+    /// alloc@…,die:IDX@TICK`, comma-separated, any subset).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            if let Some(v) = part.strip_prefix("seed=") {
+                plan.seed = v.parse().map_err(|_| anyhow!("bad fault seed '{v}'"))?;
+            } else if let Some(v) = part.strip_prefix("poison=") {
+                plan.poison
+                    .push(v.parse().map_err(|_| anyhow!("bad poison id '{v}'"))?);
+            } else if let Some(v) = part.strip_prefix("dispatch@") {
+                plan.dispatch_at
+                    .push(v.parse().map_err(|_| anyhow!("bad dispatch ordinal '{v}'"))?);
+            } else if let Some(v) = part.strip_prefix("alloc@") {
+                plan.alloc_at
+                    .push(v.parse().map_err(|_| anyhow!("bad alloc ordinal '{v}'"))?);
+            } else if let Some(v) = part.strip_prefix("die:") {
+                let (idx, tick) = v
+                    .split_once('@')
+                    .ok_or_else(|| anyhow!("bad die spec '{part}' (want die:IDX@TICK)"))?;
+                plan.die.push((
+                    idx.parse().map_err(|_| anyhow!("bad die engine '{idx}'"))?,
+                    tick.parse().map_err(|_| anyhow!("bad die tick '{tick}'"))?,
+                ));
+            } else {
+                return Err(anyhow!(
+                    "unknown fault spec '{part}' \
+                     (want seed=N, poison=ID, dispatch@N, alloc@N, die:IDX@TICK)"
+                ));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Called once per batched decode dispatch with the batch's request
+    /// ids.  Returns the injected failure message when this dispatch
+    /// must fail: persistently for batches containing a poisoned id,
+    /// once for a scheduled ordinal.
+    pub fn fail_dispatch(&self, batch: &[u64]) -> Option<String> {
+        let n = self.dispatches.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(&id) = batch.iter().find(|id| self.poison.contains(id)) {
+            return Some(format!("injected fault: batch contains poisoned request {id}"));
+        }
+        if self.dispatch_at.contains(&n) {
+            return Some(format!("injected fault: dispatch #{n}"));
+        }
+        None
+    }
+
+    /// Called once per page allocation; true when this ordinal is
+    /// scheduled to report pool exhaustion.
+    pub fn fail_alloc(&self) -> bool {
+        let n = self.allocs.fetch_add(1, Ordering::Relaxed) + 1;
+        self.alloc_at.contains(&n)
+    }
+
+    /// True once replica `engine` has reached (or passed) a scheduled
+    /// death tick.  `>=` so a tick spent blocked on the command channel
+    /// cannot skip over the scheduled instant.
+    pub fn replica_dies(&self, engine: usize, tick: u64) -> bool {
+        self.die.iter().any(|&(e, t)| e == engine && tick >= t)
+    }
+
+    /// Whether the plan schedules any fault at all (used to skip the
+    /// per-dispatch check entirely on the hot path when empty).
+    pub fn is_empty(&self) -> bool {
+        self.poison.is_empty()
+            && self.dispatch_at.is_empty()
+            && self.alloc_at.is_empty()
+            && self.die.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let p = FaultPlan::parse("seed=42,poison=5,dispatch@8,alloc@3,die:1@40").unwrap();
+        assert_eq!(p.seed, 42);
+        assert!(!p.is_empty());
+        assert!(p.replica_dies(1, 40));
+        assert!(p.replica_dies(1, 41), "death sticks past the scheduled tick");
+        assert!(!p.replica_dies(1, 39));
+        assert!(!p.replica_dies(0, 100));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(FaultPlan::parse("explode").is_err());
+        assert!(FaultPlan::parse("die:0").is_err());
+        assert!(FaultPlan::parse("dispatch@x").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn dispatch_ordinal_fires_once() {
+        let p = FaultPlan::parse("dispatch@2").unwrap();
+        assert!(p.fail_dispatch(&[1]).is_none());
+        assert!(p.fail_dispatch(&[1]).is_some());
+        assert!(p.fail_dispatch(&[1]).is_none(), "one-shot ordinal");
+    }
+
+    #[test]
+    fn poison_is_persistent_and_batch_scoped() {
+        let p = FaultPlan::parse("poison=7").unwrap();
+        for _ in 0..3 {
+            assert!(p.fail_dispatch(&[3, 7, 9]).is_some());
+        }
+        assert!(p.fail_dispatch(&[3, 9]).is_none(), "batches without the id succeed");
+    }
+
+    #[test]
+    fn alloc_ordinal_fires_once() {
+        let p = FaultPlan::parse("alloc@1").unwrap();
+        assert!(p.fail_alloc());
+        assert!(!p.fail_alloc());
+    }
+}

@@ -152,6 +152,33 @@ impl<'a> ResponseWriter<'a> {
         self.send(status, "application/json", body.to_string().as_bytes())
     }
 
+    /// [`Self::send`] with extra response headers (e.g. the
+    /// `retry-after` a 429 carries).  Header names/values are written
+    /// verbatim; callers pass lower-cased names like the fixed set.
+    pub fn send_with_headers(
+        &mut self,
+        status: u16,
+        content_type: &str,
+        extra: &[(&str, String)],
+        body: &[u8],
+    ) -> std::io::Result<()> {
+        self.started = true;
+        write!(
+            self.stream,
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: keep-alive\r\n",
+            status,
+            reason(status),
+            content_type,
+            body.len()
+        )?;
+        for (k, v) in extra {
+            write!(self.stream, "{k}: {v}\r\n")?;
+        }
+        write!(self.stream, "\r\n")?;
+        self.stream.write_all(body)?;
+        self.stream.flush()
+    }
+
     /// Begin a chunked `text/event-stream` response (SSE).
     pub fn start_sse(&mut self) -> std::io::Result<()> {
         self.started = true;

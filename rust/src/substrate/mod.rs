@@ -5,6 +5,7 @@
 
 pub mod argparse;
 pub mod base64;
+pub mod faults;
 pub mod hash;
 pub mod http;
 pub mod json;

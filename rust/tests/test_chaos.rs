@@ -1,0 +1,324 @@
+//! Chaos tests: request cancellation at every lifecycle stage, seeded
+//! dispatch-fault containment, and replica-death supervision — over
+//! REAL artifacts (qwen3-0.6b / qwen3-vl-4b sims).  Requires
+//! `make artifacts`.
+//!
+//! The invariants under test:
+//! * every request reaches EXACTLY one terminal event, no matter where
+//!   in its lifecycle a cancel / deadline / fault / death lands;
+//! * cancellation releases everything (zero KV pages leaked, page-pool
+//!   invariants hold);
+//! * a poisoned sequence is quarantined and errored ALONE — every
+//!   other request's greedy stream is byte-identical to a fault-free
+//!   run of the same workload;
+//! * a dead replica's queued work is redistributed and completes on
+//!   the survivors.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use umserve::bench_harness::synth_prompt;
+use umserve::cluster::{EnginePool, PoolConfig, RoutePolicy};
+use umserve::coordinator::scheduler::{Scheduler, SchedulerHandle};
+use umserve::coordinator::{EngineConfig, Event, Priority, PromptInput};
+use umserve::engine::sampler::SamplingParams;
+use umserve::multimodal::image::{generate_image, ImageSource};
+use umserve::substrate::faults::FaultPlan;
+
+/// Caches fully disabled: finished/cancelled requests must leave the
+/// page pool EMPTY, so leak assertions are exact (with caches on,
+/// checkpointed prefixes legitimately pin pages after retirement).
+fn cfg(model: &str) -> EngineConfig {
+    let mut c = EngineConfig {
+        model: model.into(),
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+        warmup: false,
+        ..Default::default()
+    };
+    c.kv.text_cache_bytes = 0;
+    c.kv.mm_emb_cache_bytes = 0;
+    c.kv.mm_kv_cache_bytes = 0;
+    c.kv.cache_finished = false;
+    // Fault injection hooks the regular decode dispatch; keep every
+    // sequence on that path so the poison plan is deterministic.
+    c.spec.enabled = false;
+    c
+}
+
+/// Generous per-step bound: cold engines compile XLA executables on
+/// their first requests.
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn long(n_new: usize) -> SamplingParams {
+    SamplingParams { stop_on_eos: false, ..SamplingParams::greedy(n_new) }
+}
+
+fn submit(
+    engine: &SchedulerHandle,
+    prompt: PromptInput,
+    params: SamplingParams,
+    priority: Priority,
+) -> (u64, Receiver<Event>) {
+    let (tx, rx) = channel();
+    let id = engine.generate_with(prompt, params, priority, tx).expect("submit failed");
+    (id, rx)
+}
+
+/// Drain a request's stream until the scheduler drops its sender (the
+/// channel closing proves no event can arrive after the ones counted).
+/// Returns (tokens, terminal finish reasons, error messages).
+fn collect(rx: &Receiver<Event>) -> (Vec<i32>, Vec<String>, Vec<String>) {
+    let (mut toks, mut finishes, mut errors) = (Vec::new(), Vec::new(), Vec::new());
+    let t0 = Instant::now();
+    loop {
+        match rx.recv_timeout(Duration::from_millis(250)) {
+            Ok(Event::Token { token, .. }) if token >= 0 => toks.push(token),
+            Ok(Event::Token { .. }) => {} // decoder tail flush
+            Ok(Event::Done { finish, .. }) => finishes.push(finish.as_str().to_string()),
+            Ok(Event::Error { message, .. }) => errors.push(message),
+            Err(RecvTimeoutError::Disconnected) => return (toks, finishes, errors),
+            Err(RecvTimeoutError::Timeout) => {
+                assert!(t0.elapsed() < TIMEOUT, "stream never reached a terminal event");
+            }
+        }
+    }
+}
+
+/// Exactly one terminal event, and it is a cancelled Done.
+fn assert_cancelled(rx: &Receiver<Event>, what: &str) {
+    let (_, finishes, errors) = collect(rx);
+    assert!(errors.is_empty(), "{what}: cancelled request errored: {errors:?}");
+    assert_eq!(finishes, vec!["cancelled".to_string()], "{what}: want one cancelled Done");
+}
+
+fn wait_for(engine: &SchedulerHandle, what: &str, pred: impl Fn(&SchedulerHandle) -> bool) {
+    let t0 = Instant::now();
+    while !pred(engine) {
+        assert!(t0.elapsed() < TIMEOUT, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// End-state leak check: caches are off, everything has retired, so the
+/// page pool must be EMPTY and its invariants must hold.
+fn assert_no_leaks(engine: &SchedulerHandle, what: &str) {
+    let s = engine.stats().expect("stats");
+    assert_eq!(s.kv_pool.allocated_pages, 0, "{what}: leaked KV pages");
+    assert!(s.kv_invariants_ok, "{what}: page-pool invariants violated");
+}
+
+/// Cancels landing at every lifecycle stage of a text request — fresh
+/// in intake, under a deadline, mid-decode, and parked in the evicted
+/// queue — each produce exactly one cancelled Done, the uninvolved
+/// interactive request completes normally, and nothing leaks.
+#[test]
+fn cancellation_is_correct_at_every_text_stage() {
+    let h = Scheduler::spawn(cfg("qwen3-0.6b")).expect("scheduler");
+
+    // (a) Cancelled straight after submission: the command lands while
+    // the request is still in intake or staged prefill.
+    let (id_a, rx_a) =
+        submit(&h, PromptInput::Tokens(synth_prompt(1, 200, 2048)), long(256), Priority::Batch);
+    h.cancel(id_a);
+
+    // (b) Deadline: a 1 ms budget expires long before 256 tokens.
+    let params = SamplingParams { timeout_ms: Some(1), ..long(256) };
+    let (_, rx_b) =
+        submit(&h, PromptInput::Tokens(synth_prompt(2, 64, 2048)), params, Priority::Batch);
+
+    // (c)+(d) Mid-decode and evicted: fill every decode lane with
+    // batch work, evict one with an interactive arrival, then cancel
+    // the whole batch cohort — one cancel lands on the evicted parkee,
+    // the rest on live decoders.
+    let n_fill = 16; // qwen3-0.6b decode buckets end at 16
+    let batch: Vec<(u64, Receiver<Event>)> = (0..n_fill)
+        .map(|i| {
+            submit(
+                &h,
+                PromptInput::Tokens(synth_prompt(100 + i as u64, 8, 2048)),
+                long(256),
+                Priority::Batch,
+            )
+        })
+        .collect();
+    wait_for(&h, "flood to fill every decode slot", |e| {
+        e.load().active.load(Ordering::Relaxed) == n_fill
+    });
+    let (_, rx_int) = submit(
+        &h,
+        PromptInput::Tokens(synth_prompt(900, 8, 2048)),
+        long(16),
+        Priority::Interactive,
+    );
+    wait_for(&h, "an eviction under preemption", |e| {
+        e.load().evicted.load(Ordering::Relaxed) >= 1
+    });
+    for (id, _) in &batch {
+        h.cancel(*id);
+    }
+
+    assert_cancelled(&rx_a, "intake cancel");
+    assert_cancelled(&rx_b, "deadline cancel");
+    for (i, (_, rx)) in batch.iter().enumerate() {
+        assert_cancelled(rx, &format!("batch cancel #{i}"));
+    }
+    // The bystander completes normally despite 18 cancellations around it.
+    let (toks, finishes, errors) = collect(&rx_int);
+    assert!(errors.is_empty(), "interactive bystander errored: {errors:?}");
+    assert_eq!(finishes.len(), 1, "want exactly one terminal event");
+    assert_eq!(finishes[0], "length");
+    assert_eq!(toks.len(), 16);
+
+    let s = h.stats().expect("stats");
+    assert_eq!(s.metrics.counter("requests_cancelled"), 18);
+    assert!(s.metrics.counter("deadline_cancels") >= 1);
+    assert_no_leaks(&h, "after text-stage cancels");
+    h.shutdown();
+}
+
+/// A multimodal request cancelled while parked on its vision job: the
+/// orphaned encode is pruned, a later mm request still completes, and
+/// no pages leak.
+#[test]
+fn cancellation_prunes_parked_vision_work() {
+    let h = Scheduler::spawn(cfg("qwen3-vl-4b")).expect("scheduler");
+
+    let mk = |seed: u64, text: &str| PromptInput::Multimodal {
+        images: vec![ImageSource::Bytes(generate_image(seed, 224).encode_raw())],
+        text: text.into(),
+    };
+    // The cold encoder takes whole ticks, so this cancel lands while
+    // the request is parked waiting on its vision job.
+    let (id, rx) = submit(&h, mk(31, "describe the scene"), long(32), Priority::Normal);
+    h.cancel(id);
+    assert_cancelled(&rx, "vision-stage cancel");
+
+    // A different image afterwards must be unaffected by the pruned job.
+    let (_, rx2) = submit(&h, mk(32, "and this one"), long(8), Priority::Normal);
+    let (toks, finishes, errors) = collect(&rx2);
+    assert!(errors.is_empty(), "follow-up mm request errored: {errors:?}");
+    assert_eq!(finishes, vec!["length".to_string()]);
+    assert_eq!(toks.len(), 8);
+
+    let s = h.stats().expect("stats");
+    assert_eq!(s.vision_queued, 0, "orphaned vision work left behind");
+    assert_no_leaks(&h, "after mm cancel");
+    h.shutdown();
+}
+
+/// Seeded dispatch faults: a plan that fails every decode dispatch
+/// containing request id 3 (plus its one retry).  The scheduler must
+/// converge to quarantining and erroring ONLY id 3, with every other
+/// request's stream byte-identical to a fault-free run.
+#[test]
+fn poisoned_sequence_errors_alone_and_byte_identical_otherwise() {
+    let n_req = 6u64;
+    let run = |faults: Option<Arc<FaultPlan>>| {
+        let mut c = cfg("qwen3-0.6b");
+        c.faults = faults;
+        let h = Scheduler::spawn(c).expect("scheduler");
+        // ids are assigned sequentially from 1, so the poisoned request
+        // is known before the run starts.
+        let rxs: Vec<(u64, Receiver<Event>)> = (0..n_req)
+            .map(|i| {
+                let p = PromptInput::Tokens(synth_prompt(700 + i, 8, 2048));
+                submit(&h, p, long(48), Priority::Normal)
+            })
+            .collect();
+        let out: Vec<(u64, Vec<i32>, Vec<String>, Vec<String>)> = rxs
+            .iter()
+            .map(|(id, rx)| {
+                let (t, f, e) = collect(rx);
+                (*id, t, f, e)
+            })
+            .collect();
+        (h, out)
+    };
+
+    let (hb, baseline) = run(None);
+    for (id, _, finishes, errors) in &baseline {
+        assert!(errors.is_empty(), "baseline request {id} errored: {errors:?}");
+        assert_eq!(finishes.len(), 1, "baseline request {id}: want one terminal event");
+    }
+    hb.shutdown();
+
+    let plan = FaultPlan::parse("seed=42,poison=3").expect("fault plan");
+    let (h, faulted) = run(Some(Arc::new(plan)));
+    for ((id, toks, finishes, errors), (bid, btoks, ..)) in faulted.iter().zip(&baseline) {
+        assert_eq!(id, bid);
+        if *id == 3 {
+            assert_eq!(errors.len(), 1, "poisoned request must error exactly once");
+            assert!(finishes.is_empty(), "poisoned request must not also complete");
+        } else {
+            assert!(errors.is_empty(), "innocent request {id} errored: {errors:?}");
+            assert_eq!(finishes.len(), 1, "innocent request {id}: want one terminal event");
+            assert_eq!(toks, btoks, "fault containment changed request {id}'s stream");
+        }
+    }
+    let s = h.stats().expect("stats");
+    assert!(s.metrics.counter("dispatch_retries") >= 1, "the failed dispatch was never retried");
+    assert!(s.metrics.counter("quarantines") >= 1, "no quarantine round happened");
+    assert_eq!(s.metrics.counter("quarantine_failures"), 1, "exactly one sequence must fail");
+    assert_no_leaks(&h, "after fault containment");
+    h.shutdown();
+}
+
+/// An injected replica death mid-decode: the supervisor detects it,
+/// stops routing there, redistributes the dead replica's work to the
+/// survivor, and every request still reaches exactly one terminal
+/// event with a non-empty stream.
+#[test]
+fn dead_replicas_work_completes_on_survivors() {
+    let mut c = cfg("qwen3-0.6b");
+    // Engine 0 dies at tick 40 — mid-decode for the 96-token requests
+    // round-robined onto it below.
+    c.faults = Some(Arc::new(FaultPlan::parse("die:0@40").expect("fault plan")));
+    let pc = PoolConfig {
+        engines: 2,
+        route: RoutePolicy::RoundRobin,
+        migrate: true,
+        ..Default::default()
+    };
+    let mut pool = EnginePool::spawn(c, pc).expect("pool");
+    let h = pool.handle();
+    let rxs: Vec<Receiver<Event>> = (0..8u64)
+        .map(|i| {
+            let (tx, rx) = channel();
+            h.generate_with(
+                PromptInput::Tokens(synth_prompt(500 + i, 8, 2048)),
+                long(96),
+                Priority::Normal,
+                tx,
+            )
+            .expect("submit");
+            rx
+        })
+        .collect();
+
+    for (i, rx) in rxs.iter().enumerate() {
+        let (toks, finishes, errors) = collect(rx);
+        assert!(errors.is_empty(), "request {i} errored instead of migrating: {errors:?}");
+        assert_eq!(finishes.len(), 1, "request {i}: want exactly one terminal event");
+        assert!(!toks.is_empty(), "request {i} completed with no tokens");
+    }
+
+    assert!(
+        !pool.engines()[0].load().alive.load(Ordering::Relaxed),
+        "the fault plan must have killed engine 0"
+    );
+    let stats = h.stats().expect("stats must survive a dead replica");
+    assert_eq!(stats.router.counter("replica_deaths"), 1);
+    assert!(
+        stats.router.counter("replica_orphans_redistributed") > 0,
+        "the dead replica's work was never redistributed"
+    );
+    let survivor = pool.engines()[1].stats().expect("survivor stats");
+    assert!(
+        survivor.metrics.counter("migrations_in") > 0,
+        "the survivor never received a migrated unit"
+    );
+    assert_no_leaks(&pool.engines()[1], "survivor after redistribution");
+    pool.shutdown();
+}

@@ -273,6 +273,7 @@ fn sampling_params_respected() {
         seed: 7,
         stop_on_eos: true,
         speculation: None,
+        timeout_ms: None,
     };
     let (t1, _, _, _) = run_one(&mut s, PromptInput::Tokens(vec![1, 2, 3]), p.clone());
     let (t2, _, _, _) = run_one(&mut s, PromptInput::Tokens(vec![1, 2, 3]), p);

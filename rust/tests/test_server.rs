@@ -40,6 +40,7 @@ impl TestServer {
                     h.into(),
                     model,
                     umserve::coordinator::Priority::Normal,
+                    umserve::server::ServeOptions::default(),
                     sd,
                 );
             });
